@@ -1,0 +1,62 @@
+//! Quickstart: accelerate the paper's corner-Harris binary in ~30 lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the whole Courier flow: trace the unmodified binary (Steps 1-3),
+//! lower to IR (Step 4), build the mixed SW/HW pipeline (Step 8), deploy
+//! (Step 9), and verify the accelerated output matches the original.
+
+use std::sync::Arc;
+
+use courier::app::{corner_harris_demo, Interpreter, RegistryDispatch};
+use courier::config::Config;
+use courier::hwdb::HwDatabase;
+use courier::image::synth;
+use courier::ir::Ir;
+use courier::offload::Deployment;
+use courier::runtime::Runtime;
+use courier::swlib::Registry;
+use courier::trace::{trace_program, CallGraph};
+
+fn main() -> anyhow::Result<()> {
+    let (h, w) = (240, 320);
+    let program = corner_harris_demo(h, w);
+    let cfg = Config::default();
+
+    // Steps 1-3: run the binary under the tracer.
+    let warmup: Vec<_> = (0..3).map(|s| vec![synth::noise_rgb(h, w, s)]).collect();
+    let trace = trace_program(&program, &warmup)?;
+    println!("traced {} calls over {} frames", trace.events.len(), trace.frames());
+
+    // Steps 4-6: call graph -> IR.
+    let graph = CallGraph::from_trace(&trace);
+    for (sym, share) in graph.time_shares() {
+        println!("  {sym:<24} {:>5.1}% of frame time", share * 100.0);
+    }
+    let ir = Ir::from_graph(&graph)?;
+
+    // Step 8: database lookup + balanced pipeline.
+    let db = HwDatabase::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    let built = Arc::new(courier::pipeline::build(&ir, &db, &rt, &Registry::standard(), &cfg)?);
+    let (hw, sw) = built.plan.placement_counts();
+    println!("\nbuilt {}-stage pipeline: {hw} hardware module(s), {sw} software function(s)",
+        built.plan.stages.len());
+    print!("{}", courier::report::render_plan(&built.plan));
+
+    // Step 9: deploy and stream 8 frames.
+    let dep = Deployment::new(program.clone(), Arc::new(RegistryDispatch::standard()), built);
+    let frames: Vec<_> = (0..8).map(|s| synth::noise_rgb(h, w, 100 + s)).collect();
+    let (outputs, _) = dep.run_stream(frames.clone())?;
+
+    // Verify against the unmodified binary.
+    let original = Interpreter::new(program, Arc::new(RegistryDispatch::standard()));
+    let want = original.run(&[frames[0].clone()])?.remove(0);
+    let diff = outputs[0].max_abs_diff(&want);
+    println!("\naccelerated output matches original: max |diff| = {diff:.4}");
+    assert!(outputs[0].quantized_close(&want, 1.0, 1e-3), "outputs diverged!");
+    println!("quickstart OK");
+    Ok(())
+}

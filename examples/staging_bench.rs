@@ -1,0 +1,22 @@
+// quick micro-measure of staging strategies
+use courier::image::synth;
+fn main() {
+    let m = synth::noise_rgb(1080, 1920, 1);
+    let n = 50;
+    // old path: vec1 + reshape
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let dims: Vec<i64> = m.shape().iter().map(|&d| d as i64).collect();
+        let l = xla::Literal::vec1(m.as_slice()).reshape(&dims).unwrap();
+        std::hint::black_box(l);
+    }
+    let old = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+    // new path: single copy
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let l = courier::runtime::mat_to_literal(&m).unwrap();
+        std::hint::black_box(l);
+    }
+    let new = t0.elapsed().as_secs_f64() * 1e3 / n as f64;
+    println!("vec1+reshape {old:.3} ms vs single-copy {new:.3} ms ({:.1}% faster)", (old/new - 1.0)*100.0);
+}

@@ -1,0 +1,175 @@
+"""AOT compiler: lower every catalog module to an HLO-text artifact.
+
+This is the paper's "synthesis" step (Fig. 3): each hardware-database module
+is lowered from JAX (L2) + Pallas (L1) to **HLO text** and written to
+``artifacts/``, together with ``manifest.json`` — the hardware module
+database the rust Backend searches by library symbol.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run once at build time: ``make artifacts``.  Python never runs on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+import jax
+
+from . import model as model_lib
+
+# The paper's Vivado synthesis clocked the modules at ~157-161 MHz; we keep
+# the same fabric clock for the Table II latency analogue.
+FABRIC_CLOCK_MHZ = 157.0
+
+DEFAULT_IMAGE_SIZES = "48x64,240x320,480x640,1080x1920"
+DEFAULT_GEMM_SIZES = "128x128x128,256x256x256"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def analytic_cost(mod: model_lib.ModuleDef, size) -> dict:
+    """Cheap analytic flops/bytes estimates per module kind.
+
+    These drive the Table II 'synthesis estimate' before anything is
+    executed, the same role Vivado's latency report played for the paper's
+    Pipeline Generator.  The rust hlo::CostModel recomputes exact counts
+    from the artifact itself; both are recorded for cross-checking.
+    """
+    if mod.kind == "gemm":
+        m, n, k = size
+        flops = 2.0 * m * n * k
+        bytes_ = 4.0 * (m * k + k * n + m * n)
+        return {"flops": flops, "bytes": bytes_}
+    h, w = size
+    px = float(h * w)
+    per_px = {
+        "hls_cvt_color": (5, 4),
+        "hls_sobel": (11, 2),
+        "hls_gaussian_blur": (17, 2),
+        "hls_box_filter": (10, 2),
+        "hls_corner_harris": (2 * 11 + 3 + 3 * 9 + 6, 2),
+        "hls_convert_scale_abs": (3, 2),
+        "hls_threshold": (1, 2),
+        "hls_cvt_harris_fused": (5 + 2 * 11 + 3 + 3 * 9 + 6, 5),
+        "hls_normalize": (4, 4),
+    }
+    f, b = per_px.get(mod.name, (5, 2))
+    return {"flops": f * px, "bytes": 4.0 * b * px}
+
+
+def latency_estimate_cycles(cost: dict) -> int:
+    """Fabric-cycle latency analogue: streaming modules are ~1 px/clk in the
+    paper (II-rate 1), bounded below by byte traffic at 4 B/clk."""
+    return int(math.ceil(max(cost["flops"] / 8.0, cost["bytes"] / 4.0)))
+
+
+def parse_sizes(spec: str, dims: int):
+    out = []
+    for tok in spec.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        parts = tuple(int(p) for p in tok.split("x"))
+        if len(parts) != dims:
+            raise ValueError(f"size {tok!r}: expected {dims} dims")
+        out.append(parts)
+    return out
+
+
+def build(out_dir: Path, image_sizes, gemm_sizes, verbose: bool = True) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "generated_by": "courier python/compile/aot.py",
+        "fabric_clock_mhz": FABRIC_CLOCK_MHZ,
+        "interchange": "hlo-text",
+        "modules": [],
+    }
+    for mod in model_lib.MODULES:
+        sizes = gemm_sizes if mod.kind == "gemm" else image_sizes
+        variants = []
+        for size in sizes:
+            args = model_lib.example_args(mod, size)
+            lowered = jax.jit(mod.fn).lower(*args)
+            text = to_hlo_text(lowered)
+            size_key = "x".join(str(s) for s in size)
+            fname = f"{mod.name}__{size_key}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            cost = analytic_cost(mod, size)
+            variants.append(
+                {
+                    "size": list(size),
+                    "inputs": [
+                        {"shape": list(shape), "dtype": dtype}
+                        for shape, dtype in mod.input_shapes(size)
+                    ],
+                    "outputs": [
+                        {
+                            "shape": list(out.shape),
+                            "dtype": "f32",
+                        }
+                        for out in jax.tree.leaves(lowered.out_info)
+                    ],
+                    "artifact": fname,
+                    "est_flops": cost["flops"],
+                    "est_bytes": cost["bytes"],
+                    "est_latency_cycles": latency_estimate_cycles(cost),
+                    "hlo_chars": len(text),
+                }
+            )
+            if verbose:
+                print(f"  {fname}: {len(text)} chars, "
+                      f"~{cost['flops']/1e6:.1f} MFLOP", file=sys.stderr)
+        manifest["modules"].append(
+            {
+                "name": mod.name,
+                "library_symbol": mod.library_symbol,
+                "enabled": mod.enabled,
+                "kind": mod.kind,
+                "params": mod.params,
+                "description": mod.description,
+                "variants": variants,
+            }
+        )
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if verbose:
+        n = sum(len(m["variants"]) for m in manifest["modules"])
+        print(f"wrote {n} artifacts + manifest.json to {out_dir}", file=sys.stderr)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--image-sizes", default=DEFAULT_IMAGE_SIZES,
+                    help="comma list of HxW image sizes to compile")
+    ap.add_argument("--gemm-sizes", default=DEFAULT_GEMM_SIZES,
+                    help="comma list of MxNxK gemm sizes to compile")
+    args = ap.parse_args()
+    build(
+        Path(args.out),
+        parse_sizes(args.image_sizes, 2),
+        parse_sizes(args.gemm_sizes, 3),
+    )
+
+
+if __name__ == "__main__":
+    main()

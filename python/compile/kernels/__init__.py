@@ -1,0 +1,37 @@
+"""L1 Pallas kernel library for Courier-RS.
+
+One Pallas kernel per "hardware module" of the paper's HLS database, plus a
+pure-jnp oracle (`ref`) each kernel is verified against.  Everything is
+lowered with ``interpret=True`` so the AOT artifacts run on the CPU PJRT
+client (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import common, ref
+from .elementwise import convert_scale_abs, cvt_color, threshold
+from .extra import laplacian, median3x3, scharr
+from .gemm import axpy, gemm
+from .harris import HARRIS_K, corner_harris, cvt_harris_fused
+from .reduce import normalize
+from .stencil import box_filter, dilate, erode, gaussian_blur, sobel
+
+__all__ = [
+    "HARRIS_K",
+    "axpy",
+    "box_filter",
+    "common",
+    "convert_scale_abs",
+    "corner_harris",
+    "cvt_color",
+    "cvt_harris_fused",
+    "dilate",
+    "erode",
+    "gaussian_blur",
+    "gemm",
+    "laplacian",
+    "median3x3",
+    "normalize",
+    "ref",
+    "scharr",
+    "sobel",
+    "threshold",
+]

@@ -1,0 +1,112 @@
+"""Shared helpers for the Pallas kernel library (L1).
+
+All kernels follow the same conventions:
+
+* dtype is float32 end-to-end (the rust side stages ``Mat`` buffers as f32
+  literals; u8 images are converted at the boundary, mirroring the paper's
+  bit-depth handling in the AXI port generation step).
+* images are ``(H, W)`` single-channel or ``(H, W, 3)`` RGB, row-major.
+* stencil kernels receive an **edge-padded** input (padding applied at L2 by
+  ``model.py``) and compute a valid convolution, so the output is exactly
+  ``(H, W)`` — this mirrors OpenCV's replicated-border behaviour and keeps
+  every BlockSpec shape static.
+* the grid runs over output *row blocks*; the padded input is mapped as a
+  single full block and row-sliced with ``pl.ds`` inside the kernel. On a
+  real TPU the same schedule becomes an HBM->VMEM double-buffered copy; under
+  ``interpret=True`` it lowers to plain HLO the CPU PJRT client can run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate row-block heights, largest first.  1080 = 8*135, 480 = 32*15 ...
+_ROW_BLOCK_CANDIDATES = (128, 120, 90, 64, 60, 45, 32, 27, 24, 16, 12, 8, 6, 4, 3, 2, 1)
+
+# Target VMEM budget per block on the TPU mental model (bytes).  Used only to
+# pick row-block heights; interpret-mode correctness does not depend on it.
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def pick_row_block(h: int, w: int, planes: int = 2) -> int:
+    """Pick the largest candidate row-block height that divides ``h`` and
+    keeps ``planes`` live row-planes of width ``w`` under the VMEM budget."""
+    for rb in _ROW_BLOCK_CANDIDATES:
+        if h % rb != 0:
+            continue
+        if rb * w * 4 * planes <= VMEM_BUDGET:
+            return rb
+    return 1
+
+
+def full_spec(shape):
+    """BlockSpec mapping the whole array as one block (grid-invariant)."""
+    zeros = (0,) * len(shape)
+    return pl.BlockSpec(shape, lambda *_: zeros)
+
+
+def row_block_spec(rb: int, shape):
+    """BlockSpec tiling dim0 into ``rb``-row blocks, other dims whole."""
+    block = (rb,) + tuple(shape[1:])
+    ndim = len(shape)
+
+    def index_map(i):
+        return (i,) + (0,) * (ndim - 1)
+
+    return pl.BlockSpec(block, index_map)
+
+
+def edge_pad2d(x: jnp.ndarray, pad: int) -> jnp.ndarray:
+    """Replicate-pad the two leading (spatial) dims by ``pad``."""
+    cfg = [(pad, pad), (pad, pad)] + [(0, 0)] * (x.ndim - 2)
+    return jnp.pad(x, cfg, mode="edge")
+
+
+def shifted(block: jnp.ndarray, dy: int, dx: int, h: int, w: int) -> jnp.ndarray:
+    """A ``(h, w)`` window of ``block`` offset by ``(dy, dx)`` — the shifted
+    views a 3x3 (or 5x5) stencil sums over."""
+    return jax.lax.dynamic_slice(block, (dy, dx), (h, w))
+
+
+def conv3x3(block: jnp.ndarray, taps, h: int, w: int) -> jnp.ndarray:
+    """Valid 3x3 convolution of ``block`` (shape >= (h+2, w+2)) expressed as
+    nine shifted adds — the VPU-friendly form of a small stencil."""
+    acc = None
+    for dy in range(3):
+        for dx in range(3):
+            t = taps[dy][dx]
+            if t == 0:
+                continue
+            term = shifted(block, dy, dx, h, w)
+            term = term if t == 1 else term * t
+            acc = term if acc is None else acc + term
+    assert acc is not None, "all-zero stencil"
+    return acc
+
+
+SOBEL_DX = ((-1, 0, 1), (-2, 0, 2), (-1, 0, 1))
+SOBEL_DY = ((-1, -2, -1), (0, 0, 0), (1, 2, 1))
+GAUSS3 = (
+    (1.0 / 16, 2.0 / 16, 1.0 / 16),
+    (2.0 / 16, 4.0 / 16, 2.0 / 16),
+    (1.0 / 16, 2.0 / 16, 1.0 / 16),
+)
+BOX3 = ((1.0, 1.0, 1.0),) * 3  # unnormalized, OpenCV cornerHarris-style
+BOX3_NORM = ((1.0 / 9,) * 3,) * 3
+
+# RGB -> luma weights (ITU-R BT.601, what cv::cvtColor RGB2GRAY uses).
+LUMA_R, LUMA_G, LUMA_B = 0.299, 0.587, 0.114
+
+
+def interpret_call(kernel, **kwargs):
+    """``pl.pallas_call`` pinned to interpret mode (CPU PJRT target)."""
+    return pl.pallas_call(kernel, interpret=True, **kwargs)
+
+
+def jit_wrap(fn):
+    """jit a module entrypoint once; AOT lowering reuses the same wrapper."""
+    return jax.jit(functools.partial(fn))

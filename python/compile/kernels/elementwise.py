@@ -1,0 +1,85 @@
+"""Elementwise Pallas kernels: color conversion, scale-abs, threshold.
+
+These are the streaming per-pixel modules of the hardware library — on a
+real TPU each row block is an HBM->VMEM stream through the VPU, the direct
+analogue of the paper's per-pixel HLS video functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import LUMA_B, LUMA_G, LUMA_R
+
+
+def _cvt_color_kernel(x_ref, o_ref):
+    blk = x_ref[...]
+    o_ref[...] = LUMA_R * blk[:, :, 0] + LUMA_G * blk[:, :, 1] + LUMA_B * blk[:, :, 2]
+
+
+def cvt_color(img: jnp.ndarray) -> jnp.ndarray:
+    """RGB (H, W, 3) f32 -> grayscale (H, W) f32 (BT.601 luma).
+
+    Pallas analogue of ``hls::CvtColor`` / ``cv::cvtColor(RGB2GRAY)``.
+    """
+    h, w, c = img.shape
+    assert c == 3, f"cvt_color expects 3 channels, got {c}"
+    rb = common.pick_row_block(h, w, planes=4)
+    return common.interpret_call(
+        _cvt_color_kernel,
+        grid=(h // rb,),
+        in_specs=[common.row_block_spec(rb, (h, w, 3))],
+        out_specs=common.row_block_spec(rb, (h, w)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(img)
+
+
+def _convert_scale_abs_kernel(alpha, beta, x_ref, o_ref):
+    blk = x_ref[...]
+    # round-to-nearest-even = OpenCV's saturate_cast<uchar> rounding; the
+    # quantization matters (it keeps the function from being a float
+    # identity after normalize()).
+    o_ref[...] = jnp.minimum(jnp.round(jnp.abs(alpha * blk + beta)), 255.0)
+
+
+def convert_scale_abs(img: jnp.ndarray, alpha: float = 1.0, beta: float = 0.0) -> jnp.ndarray:
+    """``saturate_cast_u8(|alpha * x + beta|)`` kept in f32 (rounded).
+
+    Pallas analogue of ``hls::ConvertScaleAbs`` / ``cv::convertScaleAbs``.
+    """
+    h, w = img.shape
+    rb = common.pick_row_block(h, w, planes=2)
+
+    def kernel(x_ref, o_ref):
+        _convert_scale_abs_kernel(alpha, beta, x_ref, o_ref)
+
+    return common.interpret_call(
+        kernel,
+        grid=(h // rb,),
+        in_specs=[common.row_block_spec(rb, (h, w))],
+        out_specs=common.row_block_spec(rb, (h, w)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(img)
+
+
+def threshold(img: jnp.ndarray, thresh: float = 127.0, maxval: float = 255.0) -> jnp.ndarray:
+    """Binary threshold: ``x > thresh ? maxval : 0``.
+
+    Pallas analogue of ``hls::Threshold`` / ``cv::threshold(THRESH_BINARY)``.
+    """
+    h, w = img.shape
+    rb = common.pick_row_block(h, w, planes=2)
+
+    def kernel(x_ref, o_ref):
+        blk = x_ref[...]
+        o_ref[...] = jnp.where(blk > thresh, maxval, 0.0)
+
+    return common.interpret_call(
+        kernel,
+        grid=(h // rb,),
+        in_specs=[common.row_block_spec(rb, (h, w))],
+        out_specs=common.row_block_spec(rb, (h, w)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(img)

@@ -1,0 +1,99 @@
+"""Additional 3x3 stencil kernels: Laplacian, Scharr, median.
+
+Added to demonstrate the paper's claim that "it is easy to support another
+libraries": one Pallas kernel + one oracle entry + one swlib port + one
+catalog row is a complete new hardware module.
+
+The median kernel is the interesting one: a 9-element sorting network
+(min/max exchanges), the classic FPGA-friendly formulation — branch-free,
+so it vectorizes on the VPU exactly like it pipelines in LUTs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+LAPLACIAN = ((0.0, 1.0, 0.0), (1.0, -4.0, 1.0), (0.0, 1.0, 0.0))
+SCHARR_DX = ((-3.0, 0.0, 3.0), (-10.0, 0.0, 10.0), (-3.0, 0.0, 3.0))
+
+
+def laplacian(padded: jnp.ndarray) -> jnp.ndarray:
+    """3x3 Laplacian of an edge-padded image — ``cv::Laplacian``."""
+    return _conv(padded, LAPLACIAN)
+
+
+def scharr(padded: jnp.ndarray) -> jnp.ndarray:
+    """3x3 Scharr d/dx of an edge-padded image — ``cv::Scharr``."""
+    return _conv(padded, SCHARR_DX)
+
+
+def _conv(padded: jnp.ndarray, taps) -> jnp.ndarray:
+    hp, wp = padded.shape
+    h, w = hp - 2, wp - 2
+    rb = common.pick_row_block(h, w, planes=3)
+
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        blk = x_ref[pl.ds(i * rb, rb + 2), :]
+        o_ref[...] = common.conv3x3(blk, taps, rb, w)
+
+    return common.interpret_call(
+        kernel,
+        grid=(h // rb,),
+        in_specs=[common.full_spec(padded.shape)],
+        out_specs=common.row_block_spec(rb, (h, w)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(padded)
+
+
+def median3x3(padded: jnp.ndarray) -> jnp.ndarray:
+    """3x3 median of an edge-padded image — ``cv::medianBlur(3)``.
+
+    Branch-free 19-exchange median network over the nine shifted window
+    planes (Paeth's network), fully vectorized across the row block.
+    """
+    hp, wp = padded.shape
+    h, w = hp - 2, wp - 2
+    rb = common.pick_row_block(h, w, planes=12)
+
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        blk = x_ref[pl.ds(i * rb, rb + 2), :]
+        v = [common.shifted(blk, dy, dx, rb, w) for dy in range(3) for dx in range(3)]
+
+        def sort2(a, b):
+            return jnp.minimum(a, b), jnp.maximum(a, b)
+
+        # Paeth's 19-exchange median-of-9 network
+        v[1], v[2] = sort2(v[1], v[2])
+        v[4], v[5] = sort2(v[4], v[5])
+        v[7], v[8] = sort2(v[7], v[8])
+        v[0], v[1] = sort2(v[0], v[1])
+        v[3], v[4] = sort2(v[3], v[4])
+        v[6], v[7] = sort2(v[6], v[7])
+        v[1], v[2] = sort2(v[1], v[2])
+        v[4], v[5] = sort2(v[4], v[5])
+        v[7], v[8] = sort2(v[7], v[8])
+        v[0], v[3] = sort2(v[0], v[3])
+        v[5], v[8] = sort2(v[5], v[8])
+        v[4], v[7] = sort2(v[4], v[7])
+        v[3], v[6] = sort2(v[3], v[6])
+        v[1], v[4] = sort2(v[1], v[4])
+        v[2], v[5] = sort2(v[2], v[5])
+        v[4], v[7] = sort2(v[4], v[7])
+        v[4], v[2] = sort2(v[4], v[2])
+        v[6], v[4] = sort2(v[6], v[4])
+        v[4], v[2] = sort2(v[4], v[2])
+        o_ref[...] = v[4]
+
+    return common.interpret_call(
+        kernel,
+        grid=(h // rb,),
+        in_specs=[common.full_spec(padded.shape)],
+        out_specs=common.row_block_spec(rb, (h, w)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(padded)

@@ -1,0 +1,68 @@
+"""Tiled matmul Pallas kernel — the BLAS half of the module database.
+
+The paper's Courier supports BLAS alongside OpenCV; ``sgemm`` is the
+representative member.  The kernel is the canonical MXU schedule: 128x128
+tiles streamed over the K dimension with the accumulator resident in VMEM.
+Under interpret mode it lowers to plain HLO dots per tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _pick_tile(dim: int, target: int = 128) -> int:
+    for t in (target, 64, 32, 16, 8, 4, 2, 1):
+        if dim % t == 0:
+            return t
+    return 1
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with MXU-style (bm, bn, bk) tiling — ``blas::sgemm``."""
+    m, ka = a.shape
+    kb, n = b.shape
+    assert ka == kb, f"inner dims mismatch: {ka} vs {kb}"
+    bm, bn, bk = _pick_tile(m), _pick_tile(n), _pick_tile(ka)
+    return common.interpret_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn, ka // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+    )(a, b)
+
+
+def axpy(alpha: float, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """y <- alpha * x + y over 1-D vectors — ``blas::saxpy``."""
+    (n,) = x.shape
+    blk = _pick_tile(n, 4096)
+
+    def kernel(x_ref, y_ref, o_ref):
+        o_ref[...] = alpha * x_ref[...] + y_ref[...]
+
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    return common.interpret_call(
+        kernel,
+        grid=(n // blk,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+    )(x, y)

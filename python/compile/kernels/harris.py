@@ -1,0 +1,100 @@
+"""Harris-Stephens corner response as a single fused Pallas kernel.
+
+This is the hot-spot module of the paper's case study (65% of the original
+binary's runtime).  The whole chain
+
+    Sobel dx / Sobel dy -> dx^2, dy^2, dx*dy -> 3x3 window sums ->
+    R = det(M) - k * trace(M)^2
+
+runs inside **one** kernel per row block: five intermediate planes stay in
+VMEM and never round-trip through HBM — the TPU re-expression of the
+``#pragma HLS dataflow`` fusion the paper applies inside each HLS module.
+
+Input is edge-padded by 2 at L2 (1 for the Sobel halo + 1 for the window
+sum), so the kernel computes a valid result of exactly (H, W).
+
+``cvt_harris_fused`` additionally folds the RGB->gray conversion into the
+same kernel — the "single hardware module for cvtColor+cornerHarris" the
+paper's Pipeline Generator first attempted (and found too slow to use; see
+the fusion ablation bench).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+HARRIS_K = 0.04
+
+
+def _harris_core(blk, rb, w, k):
+    """(rb+4, w+4) gray block -> (rb, w) Harris response."""
+    # Valid Sobel over the (rb+2, w+2) intermediate region.
+    dx = common.conv3x3(blk, common.SOBEL_DX, rb + 2, w + 2)
+    dy = common.conv3x3(blk, common.SOBEL_DY, rb + 2, w + 2)
+    # Structure-tensor products (VPU elementwise; planes live in VMEM).
+    dxx, dyy, dxy = dx * dx, dy * dy, dx * dy
+    # Unnormalized 3x3 window sums (OpenCV boxFilter(normalize=false)).
+    sxx = common.conv3x3(dxx, common.BOX3, rb, w)
+    syy = common.conv3x3(dyy, common.BOX3, rb, w)
+    sxy = common.conv3x3(dxy, common.BOX3, rb, w)
+    trace = sxx + syy
+    return (sxx * syy - sxy * sxy) - k * trace * trace
+
+
+def corner_harris(padded: jnp.ndarray, k: float = HARRIS_K) -> jnp.ndarray:
+    """Harris response of an edge-padded (H+4, W+4) gray image -> (H, W).
+
+    Pallas analogue of ``hls::CornerHarris`` / ``cv::cornerHarris``
+    (blockSize=3, ksize=3).
+    """
+    hp, wp = padded.shape
+    h, w = hp - 4, wp - 4
+    # 7 live planes: input slab + dx + dy + 3 products (+ output).
+    rb = common.pick_row_block(h, w, planes=8)
+
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        blk = x_ref[pl.ds(i * rb, rb + 4), :]
+        o_ref[...] = _harris_core(blk, rb, w, k)
+
+    return common.interpret_call(
+        kernel,
+        grid=(h // rb,),
+        in_specs=[common.full_spec(padded.shape)],
+        out_specs=common.row_block_spec(rb, (h, w)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(padded)
+
+
+def cvt_harris_fused(padded_rgb: jnp.ndarray, k: float = HARRIS_K) -> jnp.ndarray:
+    """RGB->gray + Harris response fused into one kernel.
+
+    Input is an edge-padded (H+4, W+4, 3) RGB image; output is (H, W).
+    This reproduces the paper's single-module fusion attempt.
+    """
+    hp, wp, c = padded_rgb.shape
+    assert c == 3
+    h, w = hp - 4, wp - 4
+    rb = common.pick_row_block(h, w, planes=12)
+
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        rgb = x_ref[pl.ds(i * rb, rb + 4), :, :]
+        gray = (
+            common.LUMA_R * rgb[:, :, 0]
+            + common.LUMA_G * rgb[:, :, 1]
+            + common.LUMA_B * rgb[:, :, 2]
+        )
+        o_ref[...] = _harris_core(gray, rb, w, k)
+
+    return common.interpret_call(
+        kernel,
+        grid=(h // rb,),
+        in_specs=[common.full_spec(padded_rgb.shape)],
+        out_specs=common.row_block_spec(rb, (h, w)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(padded_rgb)

@@ -1,0 +1,71 @@
+"""Reduction Pallas kernels: min-max normalize.
+
+``cv::normalize(NORM_MINMAX)`` needs a global min/max, which a streaming
+per-pixel HLS module cannot produce in one pass — this is exactly why the
+paper's hardware database has no normalize module and the function stays on
+the CPU (Table I).  We implement it anyway as a two-phase kernel pair
+(per-block min/max reduction, then an elementwise rescale) so the module
+exists for the 'what if normalize had a module' ablation; the manifest marks
+it ``enabled: false`` by default to mirror the paper's database.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _minmax_phase(img: jnp.ndarray) -> jnp.ndarray:
+    """Per-row-block (min, max) pairs: (H, W) -> (nblocks, 2)."""
+    h, w = img.shape
+    rb = common.pick_row_block(h, w, planes=2)
+    nblocks = h // rb
+
+    def kernel(x_ref, o_ref):
+        blk = x_ref[...]
+        o_ref[0, 0] = jnp.min(blk)
+        o_ref[0, 1] = jnp.max(blk)
+
+    return common.interpret_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[common.row_block_spec(rb, (h, w))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, 2), jnp.float32),
+    )(img)
+
+
+def _rescale_phase(img: jnp.ndarray, mnmx: jnp.ndarray, alpha: float, beta: float) -> jnp.ndarray:
+    """Elementwise rescale with the global (min, max) scalar pair."""
+    h, w = img.shape
+    rb = common.pick_row_block(h, w, planes=2)
+
+    def kernel(x_ref, m_ref, o_ref):
+        mn = m_ref[0, 0]
+        mx = m_ref[0, 1]
+        scale = (beta - alpha) / jnp.maximum(mx - mn, 1e-12)
+        o_ref[...] = (x_ref[...] - mn) * scale + alpha
+
+    return common.interpret_call(
+        kernel,
+        grid=(h // rb,),
+        in_specs=[
+            common.row_block_spec(rb, (h, w)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=common.row_block_spec(rb, (h, w)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(img, mnmx)
+
+
+def normalize(img: jnp.ndarray, alpha: float = 0.0, beta: float = 255.0) -> jnp.ndarray:
+    """Min-max normalize to [alpha, beta] — ``cv::normalize(NORM_MINMAX)``.
+
+    Two pallas phases joined by a tiny (nblocks, 2) -> (1, 2) jnp reduction.
+    """
+    per_block = _minmax_phase(img)
+    mnmx = jnp.stack([jnp.min(per_block[:, 0]), jnp.max(per_block[:, 1])]).reshape(1, 2)
+    return _rescale_phase(img, mnmx, alpha, beta)

@@ -1,0 +1,156 @@
+"""Pure-jnp oracle for every Pallas kernel (the correctness contract).
+
+Each function here is the *specification*: plain jax.numpy with no pallas,
+no blocking, no grids.  ``python/tests`` asserts kernel == ref to 1e-5, and
+the rust ``swlib`` CPU implementations follow the same definitions so the
+SW and HW paths of a mixed pipeline are numerically interchangeable.
+
+All stencil refs take the **unpadded** image and apply replicate ('edge')
+padding themselves, matching OpenCV's BORDER_REPLICATE semantics and the
+L2 ``model.py`` wrappers.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import BOX3, BOX3_NORM, GAUSS3, LUMA_B, LUMA_G, LUMA_R, SOBEL_DX, SOBEL_DY
+
+HARRIS_K = 0.04
+
+
+def _pad(img: jnp.ndarray, p: int) -> jnp.ndarray:
+    return jnp.pad(img, ((p, p), (p, p)), mode="edge")
+
+
+def _conv3x3(padded: jnp.ndarray, taps) -> jnp.ndarray:
+    h, w = padded.shape[0] - 2, padded.shape[1] - 2
+    acc = jnp.zeros((h, w), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            t = float(taps[dy][dx])
+            if t == 0.0:
+                continue
+            acc = acc + t * padded[dy : dy + h, dx : dx + w]
+    return acc
+
+
+def cvt_color(img: jnp.ndarray) -> jnp.ndarray:
+    """RGB (H, W, 3) -> gray (H, W), BT.601 luma."""
+    return LUMA_R * img[:, :, 0] + LUMA_G * img[:, :, 1] + LUMA_B * img[:, :, 2]
+
+
+def sobel(img: jnp.ndarray, dx: int = 1, dy: int = 0) -> jnp.ndarray:
+    """3x3 Sobel derivative with replicate border."""
+    taps = SOBEL_DX if dx == 1 else SOBEL_DY
+    return _conv3x3(_pad(img, 1), taps)
+
+
+def gaussian_blur(img: jnp.ndarray) -> jnp.ndarray:
+    """3x3 Gaussian with replicate border."""
+    return _conv3x3(_pad(img, 1), GAUSS3)
+
+
+def box_filter(img: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:
+    """3x3 box filter (mean or sum) with replicate border."""
+    return _conv3x3(_pad(img, 1), BOX3_NORM if normalize else BOX3)
+
+
+def erode(img: jnp.ndarray) -> jnp.ndarray:
+    """3x3 window minimum with replicate border."""
+    p = _pad(img, 1)
+    h, w = img.shape
+    out = p[0:h, 0:w]
+    for dy in range(3):
+        for dx in range(3):
+            out = jnp.minimum(out, p[dy : dy + h, dx : dx + w])
+    return out
+
+
+def dilate(img: jnp.ndarray) -> jnp.ndarray:
+    """3x3 window maximum with replicate border."""
+    p = _pad(img, 1)
+    h, w = img.shape
+    out = p[0:h, 0:w]
+    for dy in range(3):
+        for dx in range(3):
+            out = jnp.maximum(out, p[dy : dy + h, dx : dx + w])
+    return out
+
+
+def corner_harris(img: jnp.ndarray, k: float = HARRIS_K) -> jnp.ndarray:
+    """Harris-Stephens response (blockSize=3, ksize=3), replicate border.
+
+    Matches the fused kernel: pad by 2, valid Sobel to (H+2, W+2), products,
+    unnormalized 3x3 window sums to (H, W), R = det - k * trace^2.
+    """
+    p2 = _pad(img, 2)
+    dx = _conv3x3(p2, SOBEL_DX)
+    dy = _conv3x3(p2, SOBEL_DY)
+    sxx = _conv3x3(dx * dx, BOX3)
+    syy = _conv3x3(dy * dy, BOX3)
+    sxy = _conv3x3(dx * dy, BOX3)
+    trace = sxx + syy
+    return (sxx * syy - sxy * sxy) - k * trace * trace
+
+
+def cvt_harris_fused(img: jnp.ndarray, k: float = HARRIS_K) -> jnp.ndarray:
+    """RGB -> gray -> Harris, the fused-module spec."""
+    return corner_harris(cvt_color(img), k)
+
+
+def normalize(img: jnp.ndarray, alpha: float = 0.0, beta: float = 255.0) -> jnp.ndarray:
+    """Min-max normalize to [alpha, beta] (cv::NORM_MINMAX)."""
+    mn, mx = jnp.min(img), jnp.max(img)
+    scale = (beta - alpha) / jnp.maximum(mx - mn, 1e-12)
+    return (img - mn) * scale + alpha
+
+
+def convert_scale_abs(img: jnp.ndarray, alpha: float = 1.0, beta: float = 0.0) -> jnp.ndarray:
+    """saturate_cast_u8(|alpha * x + beta|) kept in f32 (ties-to-even)."""
+    return jnp.minimum(jnp.round(jnp.abs(alpha * img + beta)), 255.0)
+
+
+def threshold(img: jnp.ndarray, thresh: float = 127.0, maxval: float = 255.0) -> jnp.ndarray:
+    """Binary threshold."""
+    return jnp.where(img > thresh, maxval, 0.0)
+
+
+def laplacian(img: jnp.ndarray) -> jnp.ndarray:
+    """3x3 Laplacian with replicate border."""
+    taps = ((0.0, 1.0, 0.0), (1.0, -4.0, 1.0), (0.0, 1.0, 0.0))
+    return _conv3x3(_pad(img, 1), taps)
+
+
+def scharr(img: jnp.ndarray) -> jnp.ndarray:
+    """3x3 Scharr d/dx with replicate border."""
+    taps = ((-3.0, 0.0, 3.0), (-10.0, 0.0, 10.0), (-3.0, 0.0, 3.0))
+    return _conv3x3(_pad(img, 1), taps)
+
+
+def median3x3(img: jnp.ndarray) -> jnp.ndarray:
+    """3x3 median with replicate border."""
+    p = _pad(img, 1)
+    h, w = img.shape
+    planes = jnp.stack(
+        [p[dy : dy + h, dx : dx + w] for dy in range(3) for dx in range(3)], axis=0
+    )
+    return jnp.median(planes, axis=0)
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def axpy(alpha: float, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """alpha * x + y."""
+    return alpha * x + y
+
+
+def random_image(h: int, w: int, c: int = 1, seed: int = 0) -> np.ndarray:
+    """Deterministic synthetic test image in [0, 255], f32."""
+    rng = np.random.default_rng(seed)
+    shape = (h, w) if c == 1 else (h, w, c)
+    return (rng.random(shape) * 255.0).astype(np.float32)

@@ -1,0 +1,228 @@
+"""L2: the hardware-module catalog as JAX compute graphs.
+
+Each entry in ``MODULES`` is one module of the paper's hardware database
+(the Xilinx HLS video library analogue).  The module function is plain JAX:
+it applies the replicate padding the stencil kernels need (the paper's AXI
+line-buffer boundary handling) and calls the L1 Pallas kernel(s), so the
+whole module lowers into a single HLO artifact that the rust runtime loads
+as one "placed hardware module".
+
+All module entrypoints take and return **unpadded** tensors — the rust side
+never knows about halos; padding is part of the module, exactly like the
+``AXIvideo2Mat``/``Mat2AXIvideo`` adapters were part of each HLS module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+from .kernels import common, elementwise, extra, harris, stencil
+from .kernels.gemm import gemm as _gemm_kernel
+from .kernels.reduce import normalize as _normalize_kernel
+
+# ---------------------------------------------------------------------------
+# module entrypoints (unpadded in -> unpadded out)
+# ---------------------------------------------------------------------------
+
+
+def cvt_color(img):
+    """RGB (H, W, 3) -> gray (H, W)."""
+    return elementwise.cvt_color(img)
+
+
+def sobel_dx(img):
+    """3x3 Sobel d/dx with replicate border."""
+    return stencil.sobel(common.edge_pad2d(img, 1), dx=1, dy=0)
+
+
+def sobel_dy(img):
+    """3x3 Sobel d/dy with replicate border."""
+    return stencil.sobel(common.edge_pad2d(img, 1), dx=0, dy=1)
+
+
+def gaussian_blur(img):
+    """3x3 Gaussian with replicate border."""
+    return stencil.gaussian_blur(common.edge_pad2d(img, 1))
+
+
+def box_filter(img):
+    """Normalized 3x3 box filter with replicate border."""
+    return stencil.box_filter(common.edge_pad2d(img, 1), normalize=True)
+
+
+def erode(img):
+    """3x3 erosion with replicate border."""
+    return stencil.erode(common.edge_pad2d(img, 1))
+
+
+def dilate(img):
+    """3x3 dilation with replicate border."""
+    return stencil.dilate(common.edge_pad2d(img, 1))
+
+
+def laplacian(img):
+    """3x3 Laplacian with replicate border."""
+    return extra.laplacian(common.edge_pad2d(img, 1))
+
+
+def scharr(img):
+    """3x3 Scharr d/dx with replicate border."""
+    return extra.scharr(common.edge_pad2d(img, 1))
+
+
+def median_blur(img):
+    """3x3 median with replicate border."""
+    return extra.median3x3(common.edge_pad2d(img, 1))
+
+
+def corner_harris(img):
+    """Harris-Stephens response, blockSize=3 / ksize=3 / k=0.04."""
+    return harris.corner_harris(common.edge_pad2d(img, 2), k=harris.HARRIS_K)
+
+
+def cvt_harris_fused(img):
+    """RGB -> gray -> Harris fused into one module (the paper's attempt)."""
+    return harris.cvt_harris_fused(common.edge_pad2d(img, 2), k=harris.HARRIS_K)
+
+
+def normalize(img):
+    """Min-max normalize to [0, 255]."""
+    return _normalize_kernel(img, 0.0, 255.0)
+
+
+def convert_scale_abs(img):
+    """saturate_u8(|x|) in f32 (alpha=1, beta=0 — the demo's arguments)."""
+    return elementwise.convert_scale_abs(img, 1.0, 0.0)
+
+
+def threshold(img):
+    """Binary threshold at 127 -> {0, 255}."""
+    return elementwise.threshold(img, 127.0, 255.0)
+
+
+def sgemm(a, b):
+    """C = A @ B (f32)."""
+    return _gemm_kernel(a, b)
+
+
+# ---------------------------------------------------------------------------
+# catalog
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleDef:
+    """One hardware-database module.
+
+    ``shape_fn`` maps a size key (H, W) — or (M, N, K) for BLAS — to the
+    list of input ShapeDtypeStructs the module is AOT-compiled for.
+    """
+
+    name: str
+    library_symbol: str
+    fn: Callable
+    kind: str  # 'image1' | 'image3' | 'gemm'
+    enabled: bool = True
+    params: dict = dataclasses.field(default_factory=dict)
+    description: str = ""
+
+    def input_shapes(self, size: Sequence[int]):
+        if self.kind == "image1":
+            h, w = size
+            return [((h, w), "f32")]
+        if self.kind == "image3":
+            h, w = size
+            return [((h, w, 3), "f32")]
+        if self.kind == "gemm":
+            m, n, k = size
+            return [((m, k), "f32"), ((k, n), "f32")]
+        raise ValueError(f"unknown kind {self.kind}")
+
+
+MODULES: list[ModuleDef] = [
+    ModuleDef(
+        "hls_cvt_color", "cv::cvtColor", cvt_color, "image3",
+        description="RGB->gray (BT.601), hls::CvtColor analogue",
+    ),
+    ModuleDef(
+        "hls_sobel", "cv::Sobel", sobel_dx, "image1",
+        params={"dx": 1, "dy": 0, "ksize": 3},
+        description="3x3 Sobel d/dx, hls::Sobel analogue",
+    ),
+    ModuleDef(
+        "hls_gaussian_blur", "cv::GaussianBlur", gaussian_blur, "image1",
+        params={"ksize": 3},
+        description="3x3 Gaussian, hls::GaussianBlur analogue",
+    ),
+    ModuleDef(
+        "hls_box_filter", "cv::boxFilter", box_filter, "image1",
+        params={"ksize": 3, "normalize": True},
+        description="3x3 box mean, hls::BoxFilter analogue",
+    ),
+    ModuleDef(
+        "hls_laplacian", "cv::Laplacian", laplacian, "image1",
+        params={"ksize": 3},
+        description="3x3 Laplacian, hls::Laplacian analogue",
+    ),
+    ModuleDef(
+        "hls_scharr", "cv::Scharr", scharr, "image1",
+        params={"dx": 1, "dy": 0},
+        description="3x3 Scharr d/dx, hls::Scharr analogue",
+    ),
+    ModuleDef(
+        "hls_median_blur", "cv::medianBlur", median_blur, "image1",
+        params={"ksize": 3},
+        description="3x3 median (sorting network), hls::Median analogue",
+    ),
+    ModuleDef(
+        "hls_corner_harris", "cv::cornerHarris", corner_harris, "image1",
+        params={"blockSize": 3, "ksize": 3, "k": harris.HARRIS_K},
+        description="fused Harris response, hls::CornerHarris analogue",
+    ),
+    ModuleDef(
+        "hls_convert_scale_abs", "cv::convertScaleAbs", convert_scale_abs, "image1",
+        params={"alpha": 1.0, "beta": 0.0},
+        description="saturating |ax+b|, hls::ConvertScaleAbs analogue",
+    ),
+    ModuleDef(
+        "hls_threshold", "cv::threshold", threshold, "image1",
+        params={"thresh": 127.0, "maxval": 255.0},
+        description="binary threshold, hls::Threshold analogue",
+    ),
+    ModuleDef(
+        "hls_cvt_harris_fused", "cv::cvtColor+cv::cornerHarris", cvt_harris_fused, "image3",
+        enabled=False,  # the paper generated it, measured it, and rejected it
+        params={"k": harris.HARRIS_K},
+        description="single-module cvtColor+cornerHarris fusion (ablation A)",
+    ),
+    ModuleDef(
+        "hls_normalize", "cv::normalize", normalize, "image1",
+        enabled=False,  # absent from the paper's database -> CPU fallback
+        params={"alpha": 0.0, "beta": 255.0, "norm": "minmax"},
+        description="two-phase min-max normalize (DB-miss ablation)",
+    ),
+    ModuleDef(
+        "hls_gemm", "blas::sgemm", sgemm, "gemm",
+        description="tiled f32 matmul, BLAS sgemm analogue",
+    ),
+]
+
+
+def module_by_name(name: str) -> ModuleDef:
+    for m in MODULES:
+        if m.name == name:
+            return m
+    raise KeyError(name)
+
+
+def example_args(mod: ModuleDef, size: Sequence[int]):
+    """Concrete example ShapeDtypeStructs for AOT lowering."""
+    import jax
+
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for shape, _ in mod.input_shapes(size)
+    ]

@@ -1,0 +1,256 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including odd, prime, and degenerate sizes) and
+content seeds; assert_allclose at 1e-4 absolute over [0,255]-range images.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+ATOL = 1e-3  # [0,255]-scale images; harris responses reach ~1e8
+RTOL = 1e-4
+
+dims = st.integers(min_value=1, max_value=40)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+HYP = settings(max_examples=20, deadline=None)
+
+
+def _img(h, w, c, seed):
+    return ref.random_image(h, w, c, seed)
+
+
+def _check(got, want):
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=RTOL,
+        atol=ATOL * max(1.0, float(np.max(np.abs(np.asarray(want))))),
+    )
+
+
+class TestCvtColor:
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_matches_ref(self, h, w, seed):
+        img = _img(h, w, 3, seed)
+        _check(model.cvt_color(img), ref.cvt_color(img))
+
+    def test_known_value(self):
+        img = np.zeros((2, 2, 3), np.float32)
+        img[..., 0] = 100.0  # pure red
+        out = np.asarray(model.cvt_color(img))
+        np.testing.assert_allclose(out, 29.9, rtol=1e-5)
+
+    def test_gray_passthrough_weights_sum_to_one(self):
+        img = np.full((4, 4, 3), 200.0, np.float32)
+        _check(model.cvt_color(img), np.full((4, 4), 200.0, np.float32))
+
+
+class TestStencils:
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_sobel_dx(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.sobel_dx(img), ref.sobel(img, 1, 0))
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_sobel_dy(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.sobel_dy(img), ref.sobel(img, 0, 1))
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_gaussian(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.gaussian_blur(img), ref.gaussian_blur(img))
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_box(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.box_filter(img), ref.box_filter(img, normalize=True))
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_laplacian(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.laplacian(img), ref.laplacian(img))
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_scharr(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.scharr(img), ref.scharr(img))
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_median(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.median_blur(img), ref.median3x3(img))
+
+    def test_median_kills_hot_pixel(self):
+        img = np.full((7, 7), 10.0, np.float32)
+        img[3, 3] = 255.0
+        out = np.asarray(model.median_blur(img))
+        np.testing.assert_allclose(out, 10.0)
+
+    def test_laplacian_flat_zero(self):
+        img = np.full((6, 6), 33.0, np.float32)
+        out = np.asarray(model.laplacian(img))
+        np.testing.assert_allclose(out, 0.0, atol=1e-4)
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_erode(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.erode(img), ref.erode(img))
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_dilate(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.dilate(img), ref.dilate(img))
+
+    def test_sobel_constant_image_is_zero(self):
+        img = np.full((8, 8), 42.0, np.float32)
+        out = np.asarray(model.sobel_dx(img))
+        np.testing.assert_allclose(out, 0.0, atol=1e-4)
+
+    def test_gaussian_preserves_constant(self):
+        img = np.full((8, 8), 42.0, np.float32)
+        _check(model.gaussian_blur(img), img)
+
+    def test_erode_le_dilate(self):
+        img = _img(16, 16, 1, 7)
+        er = np.asarray(model.erode(img))
+        di = np.asarray(model.dilate(img))
+        assert np.all(er <= di + 1e-6)
+
+
+class TestHarris:
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_matches_ref(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.corner_harris(img), ref.corner_harris(img))
+
+    @HYP
+    @given(h=st.integers(4, 24), w=st.integers(4, 24), seed=seeds)
+    def test_fused_matches_ref(self, h, w, seed):
+        img = _img(h, w, 3, seed)
+        _check(model.cvt_harris_fused(img), ref.cvt_harris_fused(img))
+
+    def test_fused_equals_composition(self):
+        img = _img(12, 17, 3, 3)
+        fused = np.asarray(model.cvt_harris_fused(img))
+        composed = np.asarray(model.corner_harris(np.asarray(model.cvt_color(img))))
+        np.testing.assert_allclose(fused, composed, rtol=1e-4,
+                                   atol=1e-3 * max(1.0, np.abs(composed).max()))
+
+    def test_flat_image_zero_response(self):
+        img = np.full((10, 10), 128.0, np.float32)
+        out = np.asarray(model.corner_harris(img))
+        np.testing.assert_allclose(out, 0.0, atol=1e-2)
+
+    def test_corner_fires_at_corner(self):
+        # A bright quadrant: the strongest |response| must be near (8, 8).
+        img = np.zeros((16, 16), np.float32)
+        img[8:, 8:] = 255.0
+        out = np.abs(np.asarray(model.corner_harris(img)))
+        yx = np.unravel_index(np.argmax(out), out.shape)
+        assert abs(yx[0] - 8) <= 2 and abs(yx[1] - 8) <= 2
+
+
+class TestPointwise:
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_normalize(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.normalize(img), ref.normalize(img))
+
+    def test_normalize_range(self):
+        img = _img(16, 16, 1, 5) - 128.0
+        out = np.asarray(model.normalize(img))
+        assert out.min() >= -1e-3 and out.max() <= 255.0 + 1e-3
+        np.testing.assert_allclose(out.min(), 0.0, atol=1e-3)
+        np.testing.assert_allclose(out.max(), 255.0, atol=1e-3)
+
+    def test_normalize_constant_input_no_nan(self):
+        img = np.full((8, 8), 7.0, np.float32)
+        out = np.asarray(model.normalize(img))
+        assert np.all(np.isfinite(out))
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_convert_scale_abs(self, h, w, seed):
+        img = _img(h, w, 1, seed) - 128.0
+        _check(model.convert_scale_abs(img), ref.convert_scale_abs(img))
+
+    def test_convert_scale_abs_saturates(self):
+        img = np.array([[300.0, -400.0]], np.float32)
+        out = np.asarray(model.convert_scale_abs(img))
+        np.testing.assert_allclose(out, [[255.0, 255.0]])
+
+    @HYP
+    @given(h=dims, w=dims, seed=seeds)
+    def test_threshold(self, h, w, seed):
+        img = _img(h, w, 1, seed)
+        _check(model.threshold(img), ref.threshold(img))
+
+    def test_threshold_binary_output(self):
+        img = _img(9, 13, 1, 11)
+        out = np.asarray(model.threshold(img))
+        assert set(np.unique(out)).issubset({0.0, 255.0})
+
+
+class TestBlas:
+    @HYP
+    @given(
+        m=st.integers(1, 48), n=st.integers(1, 48), k=st.integers(1, 48),
+        seed=seeds,
+    )
+    def test_gemm(self, m, n, k, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.standard_normal((m, k), np.float32)
+        b = rng.standard_normal((k, n), np.float32)
+        got = np.asarray(model.sgemm(a, b))
+        want = np.asarray(ref.gemm(a, b))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * k)
+
+    def test_gemm_identity(self):
+        a = np.random.default_rng(0).standard_normal((16, 16)).astype(np.float32)
+        eye = np.eye(16, dtype=np.float32)
+        np.testing.assert_allclose(np.asarray(model.sgemm(a, eye)), a, rtol=1e-5)
+
+    @HYP
+    @given(n=st.integers(1, 4096), seed=seeds)
+    def test_axpy(self, n, seed):
+        from compile.kernels import axpy
+
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal(n).astype(np.float32)
+        y = rng.standard_normal(n).astype(np.float32)
+        got = np.asarray(axpy(2.5, x, y))
+        np.testing.assert_allclose(got, 2.5 * x + y, rtol=1e-5, atol=1e-5)
+
+
+class TestBlockPicker:
+    @pytest.mark.parametrize("h", [1, 2, 3, 17, 48, 64, 240, 480, 1080])
+    def test_divides(self, h):
+        from compile.kernels.common import pick_row_block
+
+        rb = pick_row_block(h, 1920)
+        assert h % rb == 0
+        assert rb >= 1
+
+    def test_vmem_budget_respected(self):
+        from compile.kernels.common import VMEM_BUDGET, pick_row_block
+
+        rb = pick_row_block(1080, 1920, planes=8)
+        assert rb * 1920 * 4 * 8 <= VMEM_BUDGET

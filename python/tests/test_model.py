@@ -1,0 +1,78 @@
+"""L2 module-catalog tests: shapes, composition, catalog consistency."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_catalog_names_unique():
+    names = [m.name for m in model.MODULES]
+    assert len(names) == len(set(names))
+    symbols = [m.library_symbol for m in model.MODULES]
+    assert len(symbols) == len(set(symbols))
+
+
+def test_catalog_kinds_valid():
+    for m in model.MODULES:
+        assert m.kind in ("image1", "image3", "gemm"), m.name
+
+
+def test_module_by_name():
+    assert model.module_by_name("hls_corner_harris").library_symbol == "cv::cornerHarris"
+    with pytest.raises(KeyError):
+        model.module_by_name("hls_nope")
+
+
+@pytest.mark.parametrize("mod", [m for m in model.MODULES if m.kind == "image1"])
+def test_image1_modules_preserve_shape(mod):
+    img = ref.random_image(10, 14, 1, 1)
+    out = np.asarray(mod.fn(img))
+    assert out.shape == (10, 14), mod.name
+    assert out.dtype == np.float32
+
+
+@pytest.mark.parametrize("mod", [m for m in model.MODULES if m.kind == "image3"])
+def test_image3_modules_collapse_channels(mod):
+    img = ref.random_image(10, 14, 3, 1)
+    out = np.asarray(mod.fn(img))
+    assert out.shape == (10, 14), mod.name
+
+
+def test_gemm_module_shapes():
+    mod = model.module_by_name("hls_gemm")
+    a = ref.random_image(8, 6, 1, 1)
+    b = ref.random_image(6, 10, 1, 2)
+    out = np.asarray(mod.fn(a, b))
+    assert out.shape == (8, 10)
+
+
+def test_input_shapes_per_kind():
+    img1 = model.module_by_name("hls_threshold")
+    assert img1.input_shapes((4, 5)) == [((4, 5), "f32")]
+    img3 = model.module_by_name("hls_cvt_color")
+    assert img3.input_shapes((4, 5)) == [((4, 5, 3), "f32")]
+    gemm = model.module_by_name("hls_gemm")
+    assert gemm.input_shapes((2, 3, 4)) == [((2, 4), "f32"), ((4, 3), "f32")]
+
+
+def test_case_study_composition_matches_oracle():
+    """The whole cornerHarris_Demo chain through the L2 modules equals the
+    composed oracle (the property the deployed pipeline relies on)."""
+    img = ref.random_image(12, 16, 3, 5)
+    gray = model.cvt_color(img)
+    resp = model.corner_harris(np.asarray(gray))
+    norm = model.normalize(np.asarray(resp))
+    out = model.convert_scale_abs(np.asarray(norm))
+
+    want = ref.convert_scale_abs(ref.normalize(ref.corner_harris(ref.cvt_color(img))))
+    got = np.asarray(out)
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-4, atol=1.001)
+
+
+def test_disabled_modules_flagged():
+    disabled = {m.name for m in model.MODULES if not m.enabled}
+    assert disabled == {"hls_cvt_harris_fused", "hls_normalize"}

@@ -1,0 +1,113 @@
+//! **Ablation A** — the paper's fusion decision: "Pipeline Generator first
+//! tried to make cvtColor and cornerHarris into [a] single hardware
+//! module. Although generated module was too slow to use."
+//!
+//! Compares the fused `hls_cvt_harris_fused` module against the two-stage
+//! split (`hls_cvt_color` + `hls_corner_harris`) in both single-module
+//! latency and pipelined throughput terms.
+//! `cargo bench --bench ablation_fusion`
+
+mod common;
+
+use std::time::Duration;
+
+use courier::config::Config;
+use courier::hwdb::HwDatabase;
+use courier::image::synth;
+use courier::ir::Ir;
+use courier::runtime::Runtime;
+use courier::swlib::Registry;
+use courier::util::bench::{section, Bench};
+
+fn main() {
+    let (h, w) = (240, 320);
+    section(&format!("ABLATION A — fused cvtColor+cornerHarris vs split @ {h}x{w}"));
+
+    let dir = common::artifacts_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let bench = Bench::with_budget(Duration::from_secs(8));
+    let rgb = synth::noise_rgb(h, w, 3);
+
+    // raw module invocations
+    let fused_hit = db
+        .lookup_any("cv::cvtColor+cv::cornerHarris", &[&[h, w, 3][..]])
+        .expect("fused module in DB (disabled)");
+    let fused = rt.load_hlo_text(&fused_hit.artifact_path(&db)).unwrap();
+    let cvt = rt
+        .load_hlo_text(
+            &db.lookup("cv::cvtColor", &[&[h, w, 3][..]])
+                .unwrap()
+                .artifact_path(&db),
+        )
+        .unwrap();
+    let harris = rt
+        .load_hlo_text(
+            &db.lookup("cv::cornerHarris", &[&[h, w][..]])
+                .unwrap()
+                .artifact_path(&db),
+        )
+        .unwrap();
+
+    let m_fused = bench.run("fused module  (1 invocation)", || fused.run(&[&rgb]).unwrap());
+    let gray = cvt.run(&[&rgb]).unwrap();
+    let m_cvt = bench.run("split: cvtColor", || cvt.run(&[&rgb]).unwrap());
+    let m_harris = bench.run("split: cornerHarris", || harris.run(&[&gray]).unwrap());
+
+    println!("\nsingle-frame latency: fused {:.2} ms vs split-sum {:.2} ms",
+        m_fused.mean_ms(), m_cvt.mean_ms() + m_harris.mean_ms());
+
+    // pipelined view: the split occupies two stages, so its *throughput*
+    // cost is max(cvt, harris), while the fused module is one stage of the
+    // full fused time — the paper's reason to reject it.
+    let split_bottleneck = m_cvt.mean_ms().max(m_harris.mean_ms());
+    println!(
+        "pipelined frame interval contribution: fused {:.2} ms vs split {:.2} ms",
+        m_fused.mean_ms(),
+        split_bottleneck
+    );
+    if m_fused.mean_ms() > split_bottleneck {
+        println!("=> split wins in steady state — matches the paper's 'too slow to use' rejection");
+    } else {
+        println!("=> fused wins on this fabric — the decision flips (estimator must catch this)");
+    }
+
+    // end-to-end: build both variants of the whole demo and stream frames
+    section("end-to-end: full demo with fused vs split placement");
+    let program = courier::app::corner_harris_demo(h, w);
+    let frames = common::frame_stream(h, w, 12);
+
+    let cfg_split = Config { artifacts_dir: dir.clone(), ..Default::default() };
+    let (_, built_split) = common::build(&program, &cfg_split);
+
+    let cfg_fused = Config {
+        artifacts_dir: dir.clone(),
+        include_disabled_modules: true,
+        ..Default::default()
+    };
+    let ir = common::ir_for(&program, 2);
+    let mut ir_fused: Ir = ir.clone();
+    ir_fused.fuse(0, 1).unwrap();
+    let built_fused = courier::pipeline::build(
+        &ir_fused,
+        &db,
+        &rt,
+        &Registry::standard(),
+        &cfg_fused,
+    )
+    .unwrap();
+
+    let m_split = bench.run("stream 12 frames, split plan", || {
+        built_split.run(frames.clone()).unwrap()
+    });
+    let m_fusedp = bench.run("stream 12 frames, fused plan", || {
+        built_fused.run(frames.clone()).unwrap()
+    });
+    println!(
+        "\nper-frame: split {:.2} ms vs fused {:.2} ms  ({} vs {} stages)",
+        m_split.mean_ms() / 12.0,
+        m_fusedp.mean_ms() / 12.0,
+        built_split.plan.stages.len(),
+        built_fused.plan.stages.len()
+    );
+}

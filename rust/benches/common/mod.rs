@@ -1,0 +1,68 @@
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+//! Shared bench plumbing: artifact discovery, workload builders.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use courier::app::Program;
+use courier::config::Config;
+use courier::hwdb::HwDatabase;
+use courier::image::{synth, Mat};
+use courier::ir::Ir;
+use courier::pipeline::BuiltPipeline;
+use courier::runtime::Runtime;
+use courier::swlib::Registry;
+use courier::trace::{trace_program, CallGraph};
+
+pub fn artifacts_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "benches need `make artifacts` first"
+    );
+    dir
+}
+
+/// Trace a program on synthetic frames and lower to IR.
+pub fn ir_for(program: &Program, trace_frames: usize) -> Ir {
+    let inputs: Vec<Vec<Mat>> = (0..trace_frames)
+        .map(|s| {
+            program
+                .inputs
+                .iter()
+                .map(|(_, shape)| match shape.len() {
+                    3 => synth::noise_rgb(shape[0], shape[1], s as u64),
+                    _ => synth::noise_gray(shape[0], shape[1], s as u64),
+                })
+                .collect()
+        })
+        .collect();
+    let trace = trace_program(program, &inputs).expect("trace");
+    Ir::from_graph(&CallGraph::from_trace(&trace)).expect("ir")
+}
+
+/// Build the pipeline for a program under a config.
+pub fn build(program: &Program, cfg: &Config) -> (Ir, Arc<BuiltPipeline>) {
+    let ir = ir_for(program, cfg.trace_frames.max(1));
+    let db = HwDatabase::load(&cfg.artifacts_dir).expect("db");
+    let rt = Runtime::cpu().expect("runtime");
+    let built =
+        courier::pipeline::build(&ir, &db, &rt, &Registry::standard(), cfg).expect("build");
+    (ir, Arc::new(built))
+}
+
+/// Corner-rich frame stream (checkerboard + noise), like the case study.
+pub fn frame_stream(h: usize, w: usize, n: usize) -> Vec<Mat> {
+    (0..n)
+        .map(|i| {
+            let mut base = synth::checkerboard(h, w, 24.min(h / 4).max(2));
+            let noise = synth::noise_rgb(h, w, 77 + i as u64);
+            let (b, s) = (base.as_mut_slice(), noise.as_slice());
+            for j in 0..b.len() {
+                b[j] = 0.8 * b[j] + 0.2 * s[j];
+            }
+            base
+        })
+        .collect()
+}

@@ -1,0 +1,72 @@
+//! **Fig. 4**: the function call graph with input/output data — node
+//! weights (time / bytes), chronological order, and the off-loaded flow.
+//! Also benches the Frontend itself (tracing + graph reconstruction cost).
+//! `cargo bench --bench fig4_call_graph`
+
+mod common;
+
+use std::time::Duration;
+
+use courier::app::corner_harris_demo;
+use courier::image::synth;
+use courier::ir::{to_dot, Ir};
+use courier::trace::{trace_program, CallGraph, Profile};
+use courier::util::bench::{section, Bench};
+
+fn main() {
+    let (h, w) = (480, 640);
+    section(&format!("FIG. 4 reproduction — call graph of cornerHarris_Demo @ {h}x{w}"));
+
+    let program = corner_harris_demo(h, w);
+    let frames: Vec<_> = (0..3).map(|s| vec![synth::noise_rgb(h, w, s)]).collect();
+    let trace = trace_program(&program, &frames).unwrap();
+    let graph = CallGraph::from_trace(&trace);
+    let profile = Profile::from_trace(&trace);
+
+    println!("\nchronological node table (rect = function, ellipse = data):");
+    for f in &graph.funcs {
+        println!("  [func] step {} {:<24} {:>8.2} ms x{} calls", f.step, f.symbol,
+            f.mean_ns as f64 / 1e6, f.calls);
+    }
+    for d in &graph.data {
+        println!(
+            "  (data) {:?} {} B   producer {:?} -> consumers {:?}",
+            d.shape, d.bytes, d.producer, d.consumers
+        );
+    }
+
+    println!("\ntime shares (paper: cornerHarris 65%, convertScaleAbs 15%):");
+    for (sym, share) in graph.time_shares() {
+        println!("  {sym:<24} {:>5.1}%", share * 100.0);
+    }
+
+    // DOT export
+    let ir = Ir::from_graph(&graph).unwrap();
+    let dot = to_dot(&ir);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target/fig4.dot");
+    std::fs::write(&out, &dot).unwrap();
+    println!("\nwrote {} ({} bytes) — render with `dot -Tpng`", out.display(), dot.len());
+
+    // Frontend cost: how expensive is the tracing machinery itself?
+    let bench = Bench::with_budget(Duration::from_secs(6));
+    section("Frontend overhead (tracing + reconstruction)");
+    let plain = bench.run("binary WITHOUT tracer (1 frame)", || {
+        let interp = courier::app::Interpreter::new(
+            program.clone(),
+            std::sync::Arc::new(courier::app::RegistryDispatch::standard()),
+        );
+        interp.run(&[synth::noise_rgb(h, w, 9)]).unwrap()
+    });
+    let traced = bench.run("binary WITH tracer (1 frame)", || {
+        trace_program(&program, &[vec![synth::noise_rgb(h, w, 9)]]).unwrap()
+    });
+    let graphb = bench.run("graph reconstruction (3-frame trace)", || {
+        CallGraph::from_trace(&trace)
+    });
+    println!(
+        "\ntracer overhead: {:.1}% of frame time; reconstruction {:.3} ms",
+        (traced.mean_ns as f64 / plain.mean_ns as f64 - 1.0) * 100.0,
+        graphb.mean_ns as f64 / 1e6
+    );
+    println!("profile rows: {}", profile.functions.len());
+}

@@ -1,0 +1,60 @@
+//! **Table III**: per-module resource utilization (BRAM / DSP48E / FF /
+//! LUT) from the HLO cost model — the Vivado-report analogue — including
+//! the per-module totals row.  `cargo bench --bench table3_resources [-- HxW]`
+
+mod common;
+
+use courier::hwdb::HwDatabase;
+use courier::report::render_table3;
+use courier::util::bench::section;
+
+fn main() {
+    let size = std::env::args().nth(1).unwrap_or_else(|| "1080x1920".into());
+    let (h, w): (usize, usize) = size
+        .split_once('x')
+        .map(|(a, b)| (a.parse().unwrap(), b.parse().unwrap()))
+        .unwrap_or((1080, 1920));
+    section(&format!("TABLE III reproduction — resource utilization @ {h}x{w}"));
+
+    let db = HwDatabase::load(&common::artifacts_dir()).unwrap();
+
+    // the paper's table covers the three case-study modules; we print those
+    // first, then the full library for completeness
+    let case_study = ["cv::cvtColor", "cv::cornerHarris", "cv::convertScaleAbs"];
+    let mut reports = Vec::new();
+    for sym in case_study {
+        let shapes: Vec<Vec<usize>> = vec![vec![h, w, 3], vec![h, w]];
+        let hit = shapes
+            .iter()
+            .find_map(|s| db.lookup(sym, &[s.as_slice()]))
+            .expect("case-study module present");
+        reports.push(db.synth_report(&hit).unwrap());
+    }
+    print!("{}", render_table3(&reports));
+    println!("paper totals: 89 BRAM (31%) / 25 DSP (10%) / 18804 FF (16%) / 25351 LUT (46%)");
+    println!("shape check: cornerHarris dominates the compute axes (DSP/FF/LUT).");
+    println!("note: the BRAM axis ranks by VMEM working set; our budgeter gives plane-heavy");
+    println!("kernels SMALLER row blocks, so harris can sit below cvt there — a real");
+    println!("TPU-vs-FPGA scheduling difference, documented in EXPERIMENTS.md.\n");
+
+    // sanity: ordering matches the paper on the compute axes
+    let get = |name: &str| reports.iter().find(|r| r.module.contains(name)).unwrap();
+    let harris = get("corner_harris");
+    let cvt = get("cvt_color");
+    let csa = get("convert_scale_abs");
+    assert!(harris.resources.lut > cvt.resources.lut, "harris must lead LUT");
+    assert!(harris.resources.lut > csa.resources.lut);
+    assert!(harris.resources.dsp >= cvt.resources.dsp);
+    assert!(harris.resources.ff > csa.resources.ff);
+    println!("ordering assertions hold (harris > cvt, csa on DSP/FF/LUT).\n");
+
+    section("full module library");
+    let mut all = Vec::new();
+    for sym in db.enabled_symbols() {
+        let shapes: Vec<Vec<usize>> = vec![vec![h, w, 3], vec![h, w]];
+        if let Some(hit) = shapes.iter().find_map(|s| db.lookup(sym, &[s.as_slice()])) {
+            all.push(db.synth_report(&hit).unwrap());
+        }
+    }
+    print!("{}", render_table3(&all));
+}

@@ -1,0 +1,77 @@
+//! The "target binary" substrate.
+//!
+//! Courier-FPGA traces *unmodified ELF binaries* whose interesting work is
+//! a sequence of shared-library calls.  We cannot inject into real ELF
+//! processes here, so the substrate is a minimal program format
+//! (`.courier` text) plus an interpreter whose **symbol dispatch is
+//! indirect** — the same property DLL injection exploits.  Everything the
+//! paper's Frontend/Off-loader observes or patches (dynamic symbol
+//! resolution, call order, argument data) exists in this substrate with
+//! the same contract.
+//!
+//! A program:
+//!
+//! ```text
+//! # cornerHarris_Demo — the paper's case-study flow
+//! program cornerHarris_Demo
+//! input frame 1080x1920x3
+//! call gray = cv::cvtColor(frame)
+//! call resp = cv::cornerHarris(gray)
+//! call norm = cv::normalize(resp)
+//! call out  = cv::convertScaleAbs(norm)
+//! output out
+//! ```
+
+mod interp;
+mod parser;
+mod program;
+
+pub use interp::{CallSite, Dispatch, Interpreter, RegistryDispatch};
+pub use parser::{load_program, parse_program};
+pub use program::{CallStep, Program};
+
+/// The paper's case-study binary (Table I): cvtColor → cornerHarris →
+/// normalize → convertScaleAbs over an RGB frame.
+pub fn corner_harris_demo(h: usize, w: usize) -> Program {
+    parse_program(&format!(
+        "program cornerHarris_Demo\n\
+         input frame {h}x{w}x3\n\
+         call gray = cv::cvtColor(frame)\n\
+         call resp = cv::cornerHarris(gray)\n\
+         call norm = cv::normalize(resp)\n\
+         call out = cv::convertScaleAbs(norm)\n\
+         output out\n"
+    ))
+    .expect("builtin program is valid")
+}
+
+/// An edge-detection flow exercising Sobel + threshold + morphology — the
+/// second demo binary (gaussian → sobel → convertScaleAbs → threshold →
+/// dilate).
+pub fn edge_demo(h: usize, w: usize) -> Program {
+    parse_program(&format!(
+        "program edge_demo\n\
+         input frame {h}x{w}x3\n\
+         call gray = cv::cvtColor(frame)\n\
+         call smooth = cv::GaussianBlur(gray)\n\
+         call gx = cv::Sobel(smooth)\n\
+         call mag = cv::convertScaleAbs(gx)\n\
+         call bin = cv::threshold(mag)\n\
+         call thick = cv::dilate(bin)\n\
+         output thick\n"
+    ))
+    .expect("builtin program is valid")
+}
+
+/// A BLAS chain (matmul -> matmul) for the library-breadth tests.
+pub fn gemm_chain_demo(n: usize) -> Program {
+    parse_program(&format!(
+        "program gemm_chain\n\
+         input a {n}x{n}\n\
+         input b {n}x{n}\n\
+         call c = blas::sgemm(a, b)\n\
+         call d = blas::sgemm(c, b)\n\
+         output d\n"
+    ))
+    .expect("builtin program is valid")
+}

@@ -1,0 +1,158 @@
+//! `.courier` text parser.
+
+use crate::{CourierError, Result};
+
+use super::program::{CallStep, Program};
+
+/// Parse a `.courier` program (see module docs for the grammar).
+pub fn parse_program(text: &str) -> Result<Program> {
+    let mut name = None;
+    let mut inputs = Vec::new();
+    let mut steps = Vec::new();
+    let mut outputs = Vec::new();
+
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (kw, rest) = line.split_once(char::is_whitespace).unwrap_or((line, ""));
+        let rest = rest.trim();
+        match kw {
+            "program" => {
+                if rest.is_empty() {
+                    return err(lineno, "program needs a name");
+                }
+                name = Some(rest.to_string());
+            }
+            "input" => {
+                let mut parts = rest.split_whitespace();
+                let (Some(bname), Some(dims)) = (parts.next(), parts.next()) else {
+                    return err(lineno, "input needs: <name> <HxW[xC]>");
+                };
+                let shape: std::result::Result<Vec<usize>, _> =
+                    dims.split('x').map(str::parse).collect();
+                match shape {
+                    Ok(s) if !s.is_empty() && s.len() <= 3 => {
+                        inputs.push((bname.to_string(), s))
+                    }
+                    _ => return err(lineno, &format!("bad shape {dims:?}")),
+                }
+            }
+            "call" => {
+                let Some((dst, call)) = rest.split_once('=') else {
+                    return err(lineno, "call needs: <dst> = <symbol>(<args>)");
+                };
+                let dst = dst.trim();
+                let call = call.trim();
+                let Some(open) = call.find('(') else {
+                    return err(lineno, "missing '(' in call");
+                };
+                if !call.ends_with(')') {
+                    return err(lineno, "missing ')' in call");
+                }
+                let symbol = call[..open].trim();
+                let arglist = &call[open + 1..call.len() - 1];
+                let args: Vec<String> = arglist
+                    .split(',')
+                    .map(|a| a.trim().to_string())
+                    .filter(|a| !a.is_empty())
+                    .collect();
+                if dst.is_empty() || symbol.is_empty() || args.is_empty() {
+                    return err(lineno, "call needs a destination, symbol and >=1 arg");
+                }
+                steps.push(CallStep {
+                    dst: dst.to_string(),
+                    symbol: symbol.to_string(),
+                    args,
+                });
+            }
+            "output" => {
+                if rest.is_empty() {
+                    return err(lineno, "output needs a buffer name");
+                }
+                outputs.push(rest.to_string());
+            }
+            other => return err(lineno, &format!("unknown keyword {other:?}")),
+        }
+    }
+
+    let program = Program {
+        name: name.ok_or_else(|| CourierError::Parse {
+            line: 0,
+            msg: "missing 'program' line".into(),
+        })?,
+        inputs,
+        steps,
+        outputs,
+    };
+    program
+        .validate()
+        .map_err(|msg| CourierError::Parse { line: 0, msg })?;
+    Ok(program)
+}
+
+/// Load a program from a `.courier` file.
+pub fn load_program(path: &std::path::Path) -> Result<Program> {
+    parse_program(&std::fs::read_to_string(path)?)
+}
+
+fn err<T>(line: usize, msg: &str) -> Result<T> {
+    Err(CourierError::Parse { line, msg: msg.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_case_study() {
+        let p = parse_program(
+            "program demo\n\
+             input frame 48x64x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call resp = cv::cornerHarris(gray)\n\
+             output resp\n",
+        )
+        .unwrap();
+        assert_eq!(p.name, "demo");
+        assert_eq!(p.inputs, vec![("frame".to_string(), vec![48, 64, 3])]);
+        assert_eq!(p.steps.len(), 2);
+        assert_eq!(p.outputs, vec!["resp"]);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let p = parse_program(
+            "# header\nprogram p\n\n input a 2x2 # trailing\ncall b = f(a)\noutput b\n",
+        )
+        .unwrap();
+        assert_eq!(p.steps[0].symbol, "f");
+    }
+
+    #[test]
+    fn multi_arg_calls() {
+        let p = parse_program(
+            "program p\ninput a 2x2\ninput b 2x2\ncall c = blas::sgemm(a, b)\noutput c\n",
+        )
+        .unwrap();
+        assert_eq!(p.steps[0].args, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let e = parse_program("program p\ninput a 2x2\nbogus line here\n").unwrap_err();
+        match e {
+            CourierError::Parse { line, .. } => assert_eq!(line, 3),
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_semantic_errors() {
+        assert!(parse_program("program p\ncall b = f(ghost)\noutput b\n").is_err());
+        assert!(parse_program("input a 2x2\noutput a\n").is_err()); // no program line
+        assert!(parse_program("program p\ninput a 2x2x2x2\noutput a\n").is_err());
+    }
+}

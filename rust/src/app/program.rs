@@ -1,0 +1,138 @@
+//! Program representation: declared inputs, a call sequence, outputs.
+
+/// One library call: `dst = symbol(arg0, arg1, ...)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CallStep {
+    /// Destination buffer name.
+    pub dst: String,
+    /// Library symbol, e.g. `cv::cvtColor`.
+    pub symbol: String,
+    /// Argument buffer names.
+    pub args: Vec<String>,
+}
+
+/// A parsed `.courier` program — the stand-in for the traced ELF binary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Program {
+    /// Program name (`program` line).
+    pub name: String,
+    /// Input buffers: (name, shape).
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Sequential call list (the binary runs these one by one — the
+    /// pipeline the Backend builds is *not* in the source).
+    pub steps: Vec<CallStep>,
+    /// Output buffer names.
+    pub outputs: Vec<String>,
+}
+
+impl Program {
+    /// Render back to `.courier` text (inverse of `parse_program`).
+    pub fn to_text(&self) -> String {
+        let mut s = format!("program {}\n", self.name);
+        for (name, shape) in &self.inputs {
+            let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+            s.push_str(&format!("input {} {}\n", name, dims.join("x")));
+        }
+        for step in &self.steps {
+            s.push_str(&format!(
+                "call {} = {}({})\n",
+                step.dst,
+                step.symbol,
+                step.args.join(", ")
+            ));
+        }
+        for out in &self.outputs {
+            s.push_str(&format!("output {out}\n"));
+        }
+        s
+    }
+
+    /// All symbols called, in order (with duplicates).
+    pub fn symbols(&self) -> Vec<&str> {
+        self.steps.iter().map(|s| s.symbol.as_str()).collect()
+    }
+
+    /// Static validation: every referenced buffer is defined before use,
+    /// destinations are unique, outputs exist.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut defined: std::collections::HashSet<&str> =
+            self.inputs.iter().map(|(n, _)| n.as_str()).collect();
+        if defined.len() != self.inputs.len() {
+            return Err("duplicate input names".into());
+        }
+        for step in &self.steps {
+            for arg in &step.args {
+                if !defined.contains(arg.as_str()) {
+                    return Err(format!("step '{}': undefined buffer '{arg}'", step.dst));
+                }
+            }
+            if !defined.insert(&step.dst) {
+                return Err(format!("buffer '{}' assigned twice", step.dst));
+            }
+        }
+        for out in &self.outputs {
+            if !defined.contains(out.as_str()) {
+                return Err(format!("output '{out}' never produced"));
+            }
+        }
+        if self.outputs.is_empty() {
+            return Err("program has no outputs".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Program {
+        Program {
+            name: "t".into(),
+            inputs: vec![("a".into(), vec![2, 2])],
+            steps: vec![CallStep {
+                dst: "b".into(),
+                symbol: "cv::normalize".into(),
+                args: vec!["a".into()],
+            }],
+            outputs: vec!["b".into()],
+        }
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(tiny().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_undefined_arg() {
+        let mut p = tiny();
+        p.steps[0].args[0] = "nope".into();
+        assert!(p.validate().unwrap_err().contains("undefined buffer"));
+    }
+
+    #[test]
+    fn validate_catches_double_assign() {
+        let mut p = tiny();
+        p.steps.push(CallStep {
+            dst: "b".into(),
+            symbol: "cv::normalize".into(),
+            args: vec!["a".into()],
+        });
+        assert!(p.validate().unwrap_err().contains("assigned twice"));
+    }
+
+    #[test]
+    fn validate_catches_missing_output() {
+        let mut p = tiny();
+        p.outputs[0] = "ghost".into();
+        assert!(p.validate().unwrap_err().contains("never produced"));
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let p = tiny();
+        let parsed = super::super::parse_program(&p.to_text()).unwrap();
+        assert_eq!(p, parsed);
+    }
+}

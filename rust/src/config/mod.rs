@@ -1,0 +1,205 @@
+//! Configuration: the launcher's TOML file + programmatic defaults.
+//!
+//! Mirrors the knobs the paper exposes implicitly: thread count (the Zynq
+//! has 2 logical threads), the partition policy, token pool depth, and
+//! where the artifact database lives.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::tomlmini::TomlDoc;
+use crate::{CourierError, Result};
+
+/// Partition policy selector (ablation B compares them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionPolicy {
+    /// The paper's heuristic: divide total time by (threads + 1) and cut
+    /// at the closest running sub-totals.
+    #[default]
+    Paper,
+    /// Dynamic-programming optimal contiguous partition (min bottleneck).
+    Optimal,
+    /// One stage per function.
+    PerFunction,
+    /// Single stage (no pipelining — the original binary's behaviour).
+    Single,
+}
+
+impl PartitionPolicy {
+    /// Parse from the config/CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "paper" => Ok(Self::Paper),
+            "optimal" => Ok(Self::Optimal),
+            "per_function" => Ok(Self::PerFunction),
+            "single" => Ok(Self::Single),
+            other => Err(CourierError::Config(format!("unknown policy {other:?}"))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Paper => "paper",
+            Self::Optimal => "optimal",
+            Self::PerFunction => "per_function",
+            Self::Single => "single",
+        }
+    }
+}
+
+/// Courier configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Worker threads available to the pipeline (paper: 2).
+    pub threads: usize,
+    /// Token-pool depth (in-flight frames); double buffering needs >= 2.
+    pub tokens: usize,
+    /// Partition policy.
+    pub policy: PartitionPolicy,
+    /// Artifact/database directory.
+    pub artifacts_dir: PathBuf,
+    /// Frames to trace before building (profile stability).
+    pub trace_frames: usize,
+    /// Force every function onto the CPU (diagnostics).
+    pub cpu_only: bool,
+    /// Also consider disabled DB modules (ablations).
+    pub include_disabled_modules: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            threads: 2,
+            tokens: 4,
+            policy: PartitionPolicy::Paper,
+            artifacts_dir: PathBuf::from("artifacts"),
+            trace_frames: 3,
+            cpu_only: false,
+            include_disabled_modules: false,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file (flat `key = value` form; unknown keys are
+    /// rejected so typos fail loudly).
+    pub fn from_toml_file(path: &Path) -> Result<Self> {
+        let doc = TomlDoc::parse(&std::fs::read_to_string(path)?)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Build from a parsed document.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        const KNOWN: &[&str] = &[
+            "threads",
+            "tokens",
+            "policy",
+            "artifacts_dir",
+            "trace_frames",
+            "cpu_only",
+            "include_disabled_modules",
+        ];
+        for k in doc.keys() {
+            if !KNOWN.contains(&k) {
+                return Err(CourierError::Config(format!("unknown config key {k:?}")));
+            }
+        }
+        let mut cfg = Config::default();
+        if let Some(v) = doc.get_usize("threads") {
+            cfg.threads = v;
+        }
+        if let Some(v) = doc.get_usize("tokens") {
+            cfg.tokens = v;
+        }
+        if let Some(v) = doc.get_str("policy") {
+            cfg.policy = PartitionPolicy::parse(v)?;
+        }
+        if let Some(v) = doc.get_str("artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get_usize("trace_frames") {
+            cfg.trace_frames = v;
+        }
+        if let Some(v) = doc.get_bool("cpu_only") {
+            cfg.cpu_only = v;
+        }
+        if let Some(v) = doc.get_bool("include_disabled_modules") {
+            cfg.include_disabled_modules = v;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to TOML.
+    pub fn to_toml(&self) -> String {
+        format!(
+            "threads = {}\ntokens = {}\npolicy = \"{}\"\nartifacts_dir = \"{}\"\n\
+             trace_frames = {}\ncpu_only = {}\ninclude_disabled_modules = {}\n",
+            self.threads,
+            self.tokens,
+            self.policy.as_str(),
+            self.artifacts_dir.display(),
+            self.trace_frames,
+            self.cpu_only,
+            self.include_disabled_modules,
+        )
+    }
+
+    /// Stage-count target of the paper's policy: threads + 1.
+    pub fn target_stages(&self) -> usize {
+        self.threads + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn defaults_match_paper_platform() {
+        let c = Config::default();
+        assert_eq!(c.threads, 2); // dual-core Cortex-A9
+        assert_eq!(c.target_stages(), 3);
+        assert_eq!(c.policy, PartitionPolicy::Paper);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = Config { threads: 4, tokens: 8, policy: PartitionPolicy::Optimal, ..Default::default() };
+        let doc = TomlDoc::parse(&c.to_toml()).unwrap();
+        let back = Config::from_doc(&doc).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let doc = TomlDoc::parse("threads = 8").unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.threads, 8);
+        assert_eq!(c.tokens, 4);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = TomlDoc::parse("treads = 8").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn policy_strings() {
+        assert_eq!(PartitionPolicy::parse("optimal").unwrap(), PartitionPolicy::Optimal);
+        assert!(PartitionPolicy::parse("bogus").is_err());
+        assert_eq!(PartitionPolicy::PerFunction.as_str(), "per_function");
+    }
+
+    #[test]
+    fn file_loading() {
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("courier.toml");
+        std::fs::write(&p, "threads = 3\npolicy = \"optimal\"\n").unwrap();
+        let c = Config::from_toml_file(&p).unwrap();
+        assert_eq!(c.threads, 3);
+        assert_eq!(c.policy, PartitionPolicy::Optimal);
+        assert!(Config::from_toml_file(Path::new("/nope.toml")).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Crate-wide error type.
+
+/// Unified error for all Courier subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum CourierError {
+    /// Filesystem / IO failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON (manifest, IR, trace) parse/shape failure.
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// Config parse failure.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// PJRT / XLA failure (compile, execute, literal staging).
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// `.courier` program parse failure.
+    #[error("program parse error at line {line}: {msg}")]
+    Parse {
+        /// 1-based source line.
+        line: usize,
+        /// Human-readable description.
+        msg: String,
+    },
+
+    /// Unknown library symbol encountered by the interpreter or tracer.
+    #[error("unknown function symbol: {0}")]
+    UnknownSymbol(String),
+
+    /// Buffer referenced before being produced.
+    #[error("undefined buffer: {0}")]
+    UndefinedBuffer(String),
+
+    /// Shape/arity mismatch between a call and its callee.
+    #[error("shape mismatch in {context}: expected {expected}, got {got}")]
+    ShapeMismatch {
+        /// What was being invoked.
+        context: String,
+        /// Expected shape/arity description.
+        expected: String,
+        /// Observed shape/arity description.
+        got: String,
+    },
+
+    /// Hardware-module database miss or malformed entry.
+    #[error("hardware database: {0}")]
+    HwDb(String),
+
+    /// Pipeline construction/execution failure.
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+
+    /// HLO text parse failure.
+    #[error("hlo parse error: {0}")]
+    HloParse(String),
+
+    /// Anything else.
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for CourierError {
+    fn from(e: xla::Error) -> Self {
+        CourierError::Xla(e.to_string())
+    }
+}
+
+impl From<String> for CourierError {
+    fn from(s: String) -> Self {
+        CourierError::Other(s)
+    }
+}
+
+impl From<&str> for CourierError {
+    fn from(s: &str) -> Self {
+        CourierError::Other(s.to_string())
+    }
+}

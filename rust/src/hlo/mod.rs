@@ -1,0 +1,23 @@
+//! HLO-text analysis: a lightweight parser + cost/resource model.
+//!
+//! This plays the role of the paper's *logic synthesis tool*: before
+//! anything executes, the Backend needs per-module latency and resource
+//! estimates to drive partitioning (Table II) and report utilization
+//! (Table III).  The paper gets them from Vivado's synthesis report; we
+//! derive them from the AOT artifact's HLO text.
+//!
+//! The resource mapping (see DESIGN.md §Hardware-Adaptation):
+//! * **BRAM**   ≈ ⌈largest live tensor bytes / 18 KiB⌉ (the block RAM a
+//!   streaming line buffer would occupy),
+//! * **DSP48E** ≈ weighted count of multiplier-class instructions,
+//! * **FF**     ≈ 32 × instruction count (pipeline registers),
+//! * **LUT**    ≈ complexity-weighted instruction count.
+//!
+//! Absolute values are synthetic; the *relative ordering between modules*
+//! is what Table III's reproduction checks.
+
+mod cost;
+mod parser;
+
+pub use cost::{cycles_to_ms, latency_cycles, ResourceEstimate, BRAM_BYTES};
+pub use parser::{parse_hlo_text, HloComputation, HloInstruction, HloModule};

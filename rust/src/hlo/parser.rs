@@ -1,0 +1,305 @@
+//! Minimal HLO-text parser: computations, instructions, result shapes.
+//!
+//! Parses the subset of HLO text that `jax.jit(...).lower()` +
+//! `XlaComputation::as_hlo_text()` emits — enough for instruction-mix and
+//! buffer-size analysis.  This is *not* a full verifier; the authoritative
+//! parse happens inside XLA when the runtime compiles the artifact.
+
+use crate::{CourierError, Result};
+
+/// One parsed instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HloInstruction {
+    /// Result name (without `%`).
+    pub name: String,
+    /// Opcode, e.g. `add`, `dynamic-slice`, `dot`.
+    pub opcode: String,
+    /// Result element type, e.g. `f32` (empty for tuples).
+    pub dtype: String,
+    /// Result dimensions (empty for scalars/tuples).
+    pub dims: Vec<usize>,
+    /// Whether this is the computation ROOT.
+    pub is_root: bool,
+}
+
+impl HloInstruction {
+    /// Elements in the result (1 for scalar, 0 for tuple).
+    pub fn elements(&self) -> usize {
+        if self.dtype.is_empty() {
+            return 0;
+        }
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    /// Result payload bytes.
+    pub fn bytes(&self) -> usize {
+        self.elements() * dtype_bytes(&self.dtype)
+    }
+}
+
+/// A named computation (ENTRY or helper region).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HloComputation {
+    /// Computation name.
+    pub name: String,
+    /// Whether this is the ENTRY computation.
+    pub is_entry: bool,
+    /// Instructions in order.
+    pub instructions: Vec<HloInstruction>,
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HloModule {
+    /// Module name from the header line.
+    pub name: String,
+    /// All computations.
+    pub computations: Vec<HloComputation>,
+}
+
+impl HloModule {
+    /// The ENTRY computation.
+    pub fn entry(&self) -> Option<&HloComputation> {
+        self.computations.iter().find(|c| c.is_entry)
+    }
+
+    /// Total instruction count across computations.
+    pub fn instruction_count(&self) -> usize {
+        self.computations.iter().map(|c| c.instructions.len()).sum()
+    }
+
+    /// Count of instructions with a given opcode.
+    pub fn opcode_count(&self, opcode: &str) -> usize {
+        self.computations
+            .iter()
+            .flat_map(|c| &c.instructions)
+            .filter(|i| i.opcode == opcode)
+            .count()
+    }
+}
+
+/// Bytes per element for an HLO primitive type.
+pub fn dtype_bytes(dtype: &str) -> usize {
+    match dtype {
+        "pred" | "s8" | "u8" => 1,
+        "bf16" | "f16" | "s16" | "u16" => 2,
+        "f32" | "s32" | "u32" => 4,
+        "f64" | "s64" | "u64" | "c64" => 8,
+        _ => 4,
+    }
+}
+
+/// Parse HLO text into an [`HloModule`].
+pub fn parse_hlo_text(text: &str) -> Result<HloModule> {
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| CourierError::HloParse("empty input".into()))?;
+    if !header.starts_with("HloModule") {
+        return Err(CourierError::HloParse(format!(
+            "expected 'HloModule' header, got {:?}",
+            header.chars().take(40).collect::<String>()
+        )));
+    }
+    let name = header
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or("unnamed")
+        .trim_end_matches(',')
+        .to_string();
+
+    let mut computations = Vec::new();
+    let mut current: Option<HloComputation> = None;
+    for line in lines {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if trimmed == "}" {
+            if let Some(c) = current.take() {
+                computations.push(c);
+            }
+            continue;
+        }
+        if trimmed.ends_with('{') {
+            // "name {", "ENTRY name {", possibly with attributes
+            let is_entry = trimmed.starts_with("ENTRY");
+            let sig = trimmed.trim_start_matches("ENTRY").trim();
+            let cname = sig
+                .split(|c: char| c.is_whitespace() || c == '(' || c == '{')
+                .find(|t| !t.is_empty())
+                .unwrap_or("anon")
+                .trim_start_matches('%')
+                .to_string();
+            current = Some(HloComputation {
+                name: cname,
+                is_entry,
+                instructions: Vec::new(),
+            });
+            continue;
+        }
+        if let Some(comp) = current.as_mut() {
+            if let Some(instr) = parse_instruction(trimmed) {
+                comp.instructions.push(instr);
+            }
+        }
+    }
+    if computations.is_empty() {
+        return Err(CourierError::HloParse("no computations found".into()));
+    }
+    Ok(HloModule { name, computations })
+}
+
+/// Parse one instruction line: `[ROOT] name = type opcode(...)...`.
+fn parse_instruction(line: &str) -> Option<HloInstruction> {
+    let (is_root, rest) = match line.strip_prefix("ROOT ") {
+        Some(r) => (true, r),
+        None => (false, line),
+    };
+    let (lhs, rhs) = rest.split_once(" = ")?;
+    let name = lhs.trim().trim_start_matches('%').to_string();
+    let rhs = rhs.trim();
+    // rhs: "<type> <opcode>(args)..." where <type> may be a tuple "(..)"
+    let (dtype, dims, after_type) = if rhs.starts_with('(') {
+        // tuple type: skip to matching ')'
+        let close = matching_paren(rhs)?;
+        (String::new(), Vec::new(), rhs[close + 1..].trim_start())
+    } else {
+        let space = rhs.find(' ')?;
+        let (ty, after) = rhs.split_at(space);
+        let (dtype, dims) = parse_type(ty);
+        (dtype, dims, after.trim_start())
+    };
+    let opcode = after_type
+        .split('(')
+        .next()?
+        .trim()
+        .to_string();
+    if opcode.is_empty() {
+        return None;
+    }
+    Some(HloInstruction { name, opcode, dtype, dims, is_root })
+}
+
+/// Parse `f32[24,64,3]{2,1,0}` -> ("f32", [24, 64, 3]).
+fn parse_type(ty: &str) -> (String, Vec<usize>) {
+    let (dtype, rest) = match ty.find('[') {
+        Some(i) => (ty[..i].to_string(), &ty[i + 1..]),
+        None => return (ty.to_string(), Vec::new()),
+    };
+    let dims_str = rest.split(']').next().unwrap_or("");
+    let dims = dims_str
+        .split(',')
+        .filter_map(|d| d.trim().parse().ok())
+        .collect();
+    (dtype, dims)
+}
+
+fn matching_paren(s: &str) -> Option<usize> {
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+HloModule jit_f, entry_computation_layout={(f32[4,4]{1,0})->(f32[4,4]{1,0})}
+
+helper.1 {
+  Arg_0.1 = f32[4,4]{1,0} parameter(0)
+  ROOT multiply.1 = f32[4,4]{1,0} multiply(Arg_0.1, Arg_0.1)
+}
+
+ENTRY main.2 {
+  p0.1 = f32[4,4]{1,0} parameter(0)
+  tup.1 = (s32[], f32[4,4]{1,0}) tuple(p0.1, p0.1)
+  call.1 = f32[4,4]{1,0} call(p0.1), to_apply=helper.1
+  ROOT t.1 = (f32[4,4]{1,0}) tuple(call.1)
+}
+";
+
+    #[test]
+    fn parses_module_and_computations() {
+        let m = parse_hlo_text(SAMPLE).unwrap();
+        assert_eq!(m.name, "jit_f");
+        assert_eq!(m.computations.len(), 2);
+        assert_eq!(m.entry().unwrap().name, "main.2");
+        assert_eq!(m.instruction_count(), 6);
+    }
+
+    #[test]
+    fn parses_shapes_and_roots() {
+        let m = parse_hlo_text(SAMPLE).unwrap();
+        let mul = &m.computations[0].instructions[1];
+        assert_eq!(mul.opcode, "multiply");
+        assert!(mul.is_root);
+        assert_eq!(mul.dims, vec![4, 4]);
+        assert_eq!(mul.elements(), 16);
+        assert_eq!(mul.bytes(), 64);
+    }
+
+    #[test]
+    fn tuple_results_have_zero_bytes() {
+        let m = parse_hlo_text(SAMPLE).unwrap();
+        let tup = &m.entry().unwrap().instructions[1];
+        assert_eq!(tup.opcode, "tuple");
+        assert_eq!(tup.bytes(), 0);
+    }
+
+    #[test]
+    fn opcode_count_works() {
+        let m = parse_hlo_text(SAMPLE).unwrap();
+        assert_eq!(m.opcode_count("parameter"), 2);
+        assert_eq!(m.opcode_count("multiply"), 1);
+        assert_eq!(m.opcode_count("nonexistent"), 0);
+    }
+
+    #[test]
+    fn rejects_non_hlo() {
+        assert!(parse_hlo_text("").is_err());
+        assert!(parse_hlo_text("not hlo at all").is_err());
+    }
+
+    #[test]
+    fn parses_real_artifacts_when_present() {
+        // smoke over the real artifact dir if it exists (built by `make
+        // artifacts`); skip silently otherwise so unit tests stay hermetic.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.exists() {
+            return;
+        }
+        let mut parsed = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.extension().and_then(|e| e.to_str()) == Some("txt") {
+                let m = parse_hlo_text(&std::fs::read_to_string(&p).unwrap()).unwrap();
+                assert!(m.entry().is_some(), "{p:?} lacks ENTRY");
+                assert!(m.instruction_count() > 3, "{p:?} suspiciously small");
+                parsed += 1;
+            }
+        }
+        assert!(parsed == 0 || parsed >= 10);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(dtype_bytes("f32"), 4);
+        assert_eq!(dtype_bytes("pred"), 1);
+        assert_eq!(dtype_bytes("bf16"), 2);
+        assert_eq!(dtype_bytes("s64"), 8);
+    }
+}

@@ -1,0 +1,208 @@
+//! Manifest schema (mirror of what `python/compile/aot.py` writes).
+
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// Shape + dtype of one module port.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorDesc {
+    /// Tensor shape.
+    pub shape: Vec<usize>,
+    /// Element type (always `f32` today).
+    pub dtype: String,
+}
+
+impl TensorDesc {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            shape: v.req("shape")?.as_usize_vec()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled size variant of a module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    /// Size key, e.g. `[48, 64]` or `[128, 128, 128]`.
+    pub size: Vec<usize>,
+    /// Input ports.
+    pub inputs: Vec<TensorDesc>,
+    /// Output ports.
+    pub outputs: Vec<TensorDesc>,
+    /// Artifact filename relative to the database dir.
+    pub artifact: String,
+    /// Analytic flop estimate (aot.py).
+    pub est_flops: f64,
+    /// Analytic byte-traffic estimate (aot.py).
+    pub est_bytes: f64,
+    /// Analytic latency estimate in fabric cycles (aot.py).
+    pub est_latency_cycles: u64,
+    /// Size of the HLO text, chars.
+    pub hlo_chars: usize,
+}
+
+impl Variant {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            size: v.req("size")?.as_usize_vec()?,
+            inputs: v
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorDesc::from_json)
+                .collect::<Result<_>>()?,
+            outputs: v
+                .req("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorDesc::from_json)
+                .collect::<Result<_>>()?,
+            artifact: v.req("artifact")?.as_str()?.to_string(),
+            est_flops: v.req("est_flops")?.as_f64()?,
+            est_bytes: v.req("est_bytes")?.as_f64()?,
+            est_latency_cycles: v.req("est_latency_cycles")?.as_u64()?,
+            hlo_chars: v.get("hlo_chars").map(Json::as_usize).transpose()?.unwrap_or(0),
+        })
+    }
+}
+
+/// One hardware module (all size variants).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModuleEntry {
+    /// Module name, e.g. `hls_corner_harris`.
+    pub name: String,
+    /// The library symbol it accelerates, e.g. `cv::cornerHarris`.
+    pub library_symbol: String,
+    /// Whether the Backend's default lookup may use it.
+    pub enabled: bool,
+    /// Module kind: `image1`, `image3` or `gemm`.
+    pub kind: String,
+    /// Human description.
+    pub description: String,
+    /// Compiled variants.
+    pub variants: Vec<Variant>,
+}
+
+impl ModuleEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            library_symbol: v.req("library_symbol")?.as_str()?.to_string(),
+            enabled: v.req("enabled")?.as_bool()?,
+            kind: v.req("kind")?.as_str()?.to_string(),
+            description: v
+                .get("description")
+                .map(Json::as_str)
+                .transpose()?
+                .unwrap_or("")
+                .to_string(),
+            variants: v
+                .req("variants")?
+                .as_arr()?
+                .iter()
+                .map(Variant::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// The whole database manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Schema version (1).
+    pub version: u32,
+    /// Producer tag.
+    pub generated_by: String,
+    /// Fabric clock for latency estimates, MHz.
+    pub fabric_clock_mhz: f64,
+    /// Interchange format tag (`hlo-text`).
+    pub interchange: String,
+    /// Modules.
+    pub modules: Vec<ModuleEntry>,
+}
+
+impl Manifest {
+    /// Parse a manifest JSON document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        Ok(Self {
+            version: v.req("version")?.as_u64()? as u32,
+            generated_by: v
+                .get("generated_by")
+                .map(Json::as_str)
+                .transpose()?
+                .unwrap_or("")
+                .to_string(),
+            fabric_clock_mhz: v.req("fabric_clock_mhz")?.as_f64()?,
+            interchange: v
+                .get("interchange")
+                .map(Json::as_str)
+                .transpose()?
+                .unwrap_or("")
+                .to_string(),
+            modules: v
+                .req("modules")?
+                .as_arr()?
+                .iter()
+                .map(ModuleEntry::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"{
+        "version": 1,
+        "fabric_clock_mhz": 157.0,
+        "modules": [{
+            "name": "hls_x",
+            "library_symbol": "cv::x",
+            "enabled": true,
+            "kind": "image1",
+            "variants": [{
+                "size": [8, 8],
+                "inputs": [{"shape": [8, 8], "dtype": "f32"}],
+                "outputs": [{"shape": [8, 8], "dtype": "f32"}],
+                "artifact": "hls_x__8x8.hlo.txt",
+                "est_flops": 64.0,
+                "est_bytes": 512.0,
+                "est_latency_cycles": 128
+            }]
+        }]
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINIMAL).unwrap();
+        assert_eq!(m.modules.len(), 1);
+        assert_eq!(m.modules[0].variants[0].inputs[0].shape, vec![8, 8]);
+        assert_eq!(m.modules[0].variants[0].est_latency_cycles, 128);
+        // defaults tolerated
+        assert_eq!(m.interchange, "");
+        assert_eq!(m.modules[0].variants[0].hlo_chars, 0);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{\"version\": 1}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !p.exists() {
+            return;
+        }
+        let m = Manifest::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        assert!(m.modules.len() >= 8);
+        assert!((m.fabric_clock_mhz - 157.0).abs() < 1e-9);
+        let harris = m.modules.iter().find(|x| x.name == "hls_corner_harris").unwrap();
+        assert!(harris.enabled);
+        assert!(!harris.variants.is_empty());
+    }
+}

@@ -1,0 +1,203 @@
+//! The hardware module database (paper: the Xilinx HLS video library +
+//! the per-function lookup the Backend performs in Fig. 3).
+//!
+//! The database *is* `artifacts/manifest.json` + the `*.hlo.txt` artifacts
+//! written by `python/compile/aot.py`.  Lookup is by **library symbol**
+//! (e.g. `cv::cornerHarris` → `hls_corner_harris`) and input shapes; a
+//! miss means the function stays on the CPU — exactly the paper's
+//! database-hit/miss placement rule.
+
+mod manifest;
+mod synth;
+
+pub use manifest::{Manifest, ModuleEntry, TensorDesc, Variant};
+pub use synth::{synth_report, SynthReport};
+
+use std::path::{Path, PathBuf};
+
+use crate::{CourierError, Result};
+
+/// A loaded hardware-module database.
+#[derive(Debug, Clone)]
+pub struct HwDatabase {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+/// A successful lookup: module + size variant.
+#[derive(Debug, Clone)]
+pub struct Hit<'a> {
+    /// The module entry.
+    pub module: &'a ModuleEntry,
+    /// The matching size variant.
+    pub variant: &'a Variant,
+}
+
+impl Hit<'_> {
+    /// Absolute path of the artifact to load.
+    pub fn artifact_path(&self, db: &HwDatabase) -> PathBuf {
+        db.dir.join(&self.variant.artifact)
+    }
+}
+
+impl HwDatabase {
+    /// Load the database from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            CourierError::HwDb(format!(
+                "cannot read {} ({e}); run `make artifacts`",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        if manifest.version != 1 {
+            return Err(CourierError::HwDb(format!(
+                "unsupported manifest version {}",
+                manifest.version
+            )));
+        }
+        Ok(Self { dir: dir.to_path_buf(), manifest })
+    }
+
+    /// Artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The raw manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Fabric clock used for latency estimates, MHz.
+    pub fn fabric_clock_mhz(&self) -> f64 {
+        self.manifest.fabric_clock_mhz
+    }
+
+    /// Look up an **enabled** module for `symbol` whose variant matches
+    /// `input_shapes` exactly.  `None` == database miss == CPU fallback.
+    pub fn lookup(&self, symbol: &str, input_shapes: &[&[usize]]) -> Option<Hit<'_>> {
+        self.lookup_impl(symbol, input_shapes, false)
+    }
+
+    /// Like [`Self::lookup`] but also matches disabled modules (used by the
+    /// ablation benches to force e.g. the fused cvt+harris module).
+    pub fn lookup_any(&self, symbol: &str, input_shapes: &[&[usize]]) -> Option<Hit<'_>> {
+        self.lookup_impl(symbol, input_shapes, true)
+    }
+
+    fn lookup_impl(
+        &self,
+        symbol: &str,
+        input_shapes: &[&[usize]],
+        include_disabled: bool,
+    ) -> Option<Hit<'_>> {
+        let module = self
+            .manifest
+            .modules
+            .iter()
+            .find(|m| m.library_symbol == symbol && (include_disabled || m.enabled))?;
+        let variant = module.variants.iter().find(|v| {
+            v.inputs.len() == input_shapes.len()
+                && v.inputs
+                    .iter()
+                    .zip(input_shapes)
+                    .all(|(d, s)| d.shape.as_slice() == *s)
+        })?;
+        Some(Hit { module, variant })
+    }
+
+    /// Module entry by module name.
+    pub fn module_by_name(&self, name: &str) -> Option<&ModuleEntry> {
+        self.manifest.modules.iter().find(|m| m.name == name)
+    }
+
+    /// All enabled library symbols (what "exists in the database").
+    pub fn enabled_symbols(&self) -> Vec<&str> {
+        self.manifest
+            .modules
+            .iter()
+            .filter(|m| m.enabled)
+            .map(|m| m.library_symbol.as_str())
+            .collect()
+    }
+
+    /// Synthesis report for one hit (Table II/III row).
+    pub fn synth_report(&self, hit: &Hit<'_>) -> Result<SynthReport> {
+        synth::synth_report(self, hit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db() -> Option<HwDatabase> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| HwDatabase::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn lookup_hits_for_case_study_functions() {
+        let Some(db) = db() else { return };
+        for (sym, shape) in [
+            ("cv::cvtColor", vec![48usize, 64, 3]),
+            ("cv::cornerHarris", vec![48, 64]),
+            ("cv::convertScaleAbs", vec![48, 64]),
+        ] {
+            let hit = db.lookup(sym, &[&shape]);
+            assert!(hit.is_some(), "{sym} should hit");
+            assert!(hit.unwrap().artifact_path(&db).exists());
+        }
+    }
+
+    #[test]
+    fn normalize_misses_like_the_paper() {
+        let Some(db) = db() else { return };
+        // cv::normalize exists only as a disabled module -> lookup misses,
+        // lookup_any hits (the what-if ablation)
+        let shape = vec![48usize, 64];
+        assert!(db.lookup("cv::normalize", &[&shape]).is_none());
+        assert!(db.lookup_any("cv::normalize", &[&shape]).is_some());
+    }
+
+    #[test]
+    fn wrong_shape_misses() {
+        let Some(db) = db() else { return };
+        let shape = vec![47usize, 63];
+        assert!(db.lookup("cv::cornerHarris", &[&shape]).is_none());
+    }
+
+    #[test]
+    fn unknown_symbol_misses() {
+        let Some(db) = db() else { return };
+        let shape = vec![48usize, 64];
+        assert!(db.lookup("cv::doesNotExist", &[&shape]).is_none());
+    }
+
+    #[test]
+    fn gemm_two_input_lookup() {
+        let Some(db) = db() else { return };
+        let a = vec![128usize, 128];
+        let b = vec![128usize, 128];
+        let hit = db.lookup("blas::sgemm", &[&a, &b]).unwrap();
+        assert_eq!(hit.module.name, "hls_gemm");
+    }
+
+    #[test]
+    fn enabled_symbols_exclude_disabled() {
+        let Some(db) = db() else { return };
+        let syms = db.enabled_symbols();
+        assert!(syms.contains(&"cv::cornerHarris"));
+        assert!(!syms.contains(&"cv::normalize"));
+    }
+
+    #[test]
+    fn load_missing_dir_is_a_clear_error() {
+        let err = HwDatabase::load(Path::new("/no/such/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

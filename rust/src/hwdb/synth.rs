@@ -1,0 +1,110 @@
+//! Synthesis reports — the Vivado-report analogue backing Tables II & III.
+
+use crate::hlo::{self, ResourceEstimate};
+use crate::Result;
+
+use super::{Hit, HwDatabase};
+
+/// A synthesized-module report: Table II row + Table III row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthReport {
+    /// Module name.
+    pub module: String,
+    /// Variant size key.
+    pub size: Vec<usize>,
+    /// Fabric clock, MHz (Table II "Freq.").
+    pub freq_mhz: f64,
+    /// Estimated latency in fabric cycles (Table II "Latency \[clk\]").
+    pub latency_cycles: u64,
+    /// Estimated processing time, ms (Table II "Proc. time").
+    pub proc_time_ms: f64,
+    /// Resource estimate (Table III row).
+    pub resources: ResourceEstimate,
+    /// Input staging traffic, bytes (the AXIvideo2Mat side).
+    pub input_bytes: usize,
+    /// Output staging traffic, bytes (the Mat2AXIvideo side).
+    pub output_bytes: usize,
+}
+
+/// Build the report for a database hit by parsing its artifact.
+pub fn synth_report(db: &HwDatabase, hit: &Hit<'_>) -> Result<SynthReport> {
+    let path = hit.artifact_path(db);
+    let text = std::fs::read_to_string(&path)?;
+    let module = hlo::parse_hlo_text(&text)?;
+    let resources = ResourceEstimate::from_module(&module);
+    let v = hit.variant;
+    let input_bytes: usize = v
+        .inputs
+        .iter()
+        .map(|t| t.shape.iter().product::<usize>() * 4)
+        .sum();
+    let output_bytes: usize = v
+        .outputs
+        .iter()
+        .map(|t| t.shape.iter().product::<usize>() * 4)
+        .sum();
+    let clock = db.fabric_clock_mhz();
+    Ok(SynthReport {
+        module: hit.module.name.clone(),
+        size: v.size.clone(),
+        freq_mhz: clock,
+        latency_cycles: v.est_latency_cycles,
+        proc_time_ms: super::synth::cycles_to_ms(v.est_latency_cycles, clock),
+        resources,
+        input_bytes,
+        output_bytes,
+    })
+}
+
+pub(crate) fn cycles_to_ms(cycles: u64, clock_mhz: f64) -> f64 {
+    cycles as f64 / (clock_mhz * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn db() -> Option<HwDatabase> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json")
+            .exists()
+            .then(|| HwDatabase::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn harris_report_dominates_cheap_modules() {
+        let Some(db) = db() else { return };
+        let shape = vec![1080usize, 1920];
+        let rgb = vec![1080usize, 1920, 3];
+        let harris = db
+            .synth_report(&db.lookup("cv::cornerHarris", &[&shape]).unwrap())
+            .unwrap();
+        let cvt = db
+            .synth_report(&db.lookup("cv::cvtColor", &[&rgb]).unwrap())
+            .unwrap();
+        let csa = db
+            .synth_report(&db.lookup("cv::convertScaleAbs", &[&shape]).unwrap())
+            .unwrap();
+        // Table II/III shape: harris is the heaviest in cycles + resources
+        assert!(harris.latency_cycles > csa.latency_cycles);
+        assert!(harris.resources.dsp > csa.resources.dsp);
+        assert!(harris.resources.lut > csa.resources.lut);
+        // everyone runs at the same fabric clock
+        assert_eq!(harris.freq_mhz, cvt.freq_mhz);
+        // proc time consistent with cycles/clock
+        let expect_ms = harris.latency_cycles as f64 / (157.0 * 1e3);
+        assert!((harris.proc_time_ms - expect_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn staging_traffic_matches_ports() {
+        let Some(db) = db() else { return };
+        let rgb = vec![48usize, 64, 3];
+        let r = db
+            .synth_report(&db.lookup("cv::cvtColor", &[&rgb]).unwrap())
+            .unwrap();
+        assert_eq!(r.input_bytes, 48 * 64 * 3 * 4);
+        assert_eq!(r.output_bytes, 48 * 64 * 4);
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal image file I/O: binary PPM (P6) and PGM (P5).
+//!
+//! Netpbm keeps the repo dependency-free while still exercising real image
+//! files in the examples (the paper's case study reads a PNG; PPM carries
+//! the same 8-bit RGB payload).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use crate::{CourierError, Result};
+
+use super::Mat;
+
+/// Read a binary PPM (P6, RGB) or PGM (P5, gray) into a `Mat` of f32 in
+/// [0, 255]: `(H, W, 3)` for P6, `(H, W)` for P5.
+pub fn read_netpbm(path: &Path) -> Result<Mat> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let magic = read_token(&mut r)?;
+    let channels = match magic.as_str() {
+        "P6" => 3,
+        "P5" => 1,
+        other => {
+            return Err(CourierError::Other(format!(
+                "unsupported netpbm magic {other:?} in {}",
+                path.display()
+            )))
+        }
+    };
+    let w: usize = parse_tok(&read_token(&mut r)?, path)?;
+    let h: usize = parse_tok(&read_token(&mut r)?, path)?;
+    let maxval: usize = parse_tok(&read_token(&mut r)?, path)?;
+    if maxval != 255 {
+        return Err(CourierError::Other(format!(
+            "only maxval 255 supported, got {maxval}"
+        )));
+    }
+    let mut buf = vec![0u8; h * w * channels];
+    r.read_exact(&mut buf)?;
+    let data: Vec<f32> = buf.iter().map(|&b| b as f32).collect();
+    let shape = if channels == 3 { vec![h, w, 3] } else { vec![h, w] };
+    Mat::new(shape, data)
+}
+
+/// Write a `Mat` as binary PPM/PGM; values are clamped to [0, 255] and
+/// rounded (the u8 saturation the paper's bit-depth extraction handles).
+pub fn write_netpbm(path: &Path, m: &Mat) -> Result<()> {
+    let (h, w, c) = (m.height(), m.width(), m.channels());
+    let magic = match c {
+        3 => "P6",
+        1 => "P5",
+        other => {
+            return Err(CourierError::Other(format!(
+                "cannot write {other}-channel image as netpbm"
+            )))
+        }
+    };
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "{magic}\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = m
+        .as_slice()
+        .iter()
+        .map(|&v| v.clamp(0.0, 255.0).round() as u8)
+        .collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+fn read_token<R: BufRead>(r: &mut R) -> Result<String> {
+    // Skips whitespace and '#' comment lines, netpbm style.
+    let mut tok = String::new();
+    loop {
+        let mut byte = [0u8; 1];
+        if r.read(&mut byte)? == 0 {
+            if tok.is_empty() {
+                return Err(CourierError::Other("unexpected EOF in netpbm header".into()));
+            }
+            return Ok(tok);
+        }
+        let ch = byte[0] as char;
+        if ch == '#' {
+            let mut line = String::new();
+            r.read_line(&mut line)?;
+            continue;
+        }
+        if ch.is_ascii_whitespace() {
+            if tok.is_empty() {
+                continue;
+            }
+            return Ok(tok);
+        }
+        tok.push(ch);
+    }
+}
+
+fn parse_tok(tok: &str, path: &Path) -> Result<usize> {
+    tok.parse().map_err(|_| {
+        CourierError::Other(format!("bad netpbm header token {tok:?} in {}", path.display()))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn ppm_roundtrip() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.path().join("x.ppm");
+        let m = Mat::new(vec![2, 3, 3], (0..18).map(|i| i as f32).collect()).unwrap();
+        write_netpbm(&p, &m).unwrap();
+        let back = read_netpbm(&p).unwrap();
+        assert_eq!(back.shape(), &[2, 3, 3]);
+        assert!(back.allclose(&m, 0.0, 0.5));
+    }
+
+    #[test]
+    fn pgm_roundtrip_with_clamping() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.path().join("x.pgm");
+        let m = Mat::new(vec![1, 4], vec![-3.0, 0.4, 254.6, 400.0]).unwrap();
+        write_netpbm(&p, &m).unwrap();
+        let back = read_netpbm(&p).unwrap();
+        assert_eq!(back.as_slice(), &[0.0, 0.0, 255.0, 255.0]);
+    }
+
+    #[test]
+    fn header_comments_are_skipped() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.path().join("c.pgm");
+        std::fs::write(&p, b"P5\n# a comment\n2 1\n255\n\x01\x02").unwrap();
+        let m = read_netpbm(&p).unwrap();
+        assert_eq!(m.shape(), &[1, 2]);
+        assert_eq!(m.as_slice(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = TempDir::new("io").unwrap();
+        let p = dir.path().join("bad.ppm");
+        std::fs::write(&p, b"P3\n1 1\n255\n0 0 0\n").unwrap();
+        assert!(read_netpbm(&p).is_err());
+    }
+}

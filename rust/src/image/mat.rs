@@ -1,0 +1,333 @@
+//! The `Mat` tensor: row-major `f32`, rank 1–3.
+
+use crate::{CourierError, Result};
+
+/// A dense row-major `f32` tensor of rank 1, 2 or 3.
+///
+/// Rank conventions match the Python side: `(H, W)` single-channel image,
+/// `(H, W, C)` multi-channel image, `(N,)` vector, `(M, K)` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// Build from shape + data; checks element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(CourierError::ShapeMismatch {
+                context: "Mat::new".into(),
+                expected: format!("{n} elements for shape {shape:?}"),
+                got: format!("{} elements", data.len()),
+            });
+        }
+        if shape.is_empty() || shape.len() > 3 {
+            return Err(CourierError::ShapeMismatch {
+                context: "Mat::new".into(),
+                expected: "rank 1..=3".into(),
+                got: format!("rank {}", shape.len()),
+            });
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Filled with a constant.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True iff zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes of payload (f32).
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Image height (dim 0).
+    pub fn height(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Image width (dim 1; 1 for vectors).
+    pub fn width(&self) -> usize {
+        *self.shape.get(1).unwrap_or(&1)
+    }
+
+    /// Channel count (dim 2; 1 if absent).
+    pub fn channels(&self) -> usize {
+        *self.shape.get(2).unwrap_or(&1)
+    }
+
+    /// Raw data slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Raw mutable data slice.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw data vec.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D accessor (single-channel).
+    #[inline]
+    pub fn at2(&self, y: usize, x: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[y * self.shape[1] + x]
+    }
+
+    /// 3-D accessor.
+    #[inline]
+    pub fn at3(&self, y: usize, x: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[(y * self.shape[1] + x) * self.shape[2] + c]
+    }
+
+    /// 2-D mutable accessor.
+    #[inline]
+    pub fn set2(&mut self, y: usize, x: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[y * self.shape[1] + x] = v;
+    }
+
+    /// Clamped 2-D read — replicate ("edge") border semantics, matching the
+    /// Python oracle and the AOT kernels.
+    #[inline]
+    pub fn at2_clamped(&self, y: isize, x: isize) -> f32 {
+        let h = self.shape[0] as isize;
+        let w = self.shape[1] as isize;
+        let yy = y.clamp(0, h - 1) as usize;
+        let xx = x.clamp(0, w - 1) as usize;
+        self.at2(yy, xx)
+    }
+
+    /// Minimum element (NaN-free data assumed); 0.0 for empty.
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    /// Maximum element.
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Max |a - b| between two same-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!(self.shape, other.shape, "max_abs_diff shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Equality for *quantized* outputs (u8-valued data kept in f32).
+    ///
+    /// Ulp-level float differences between two numerically equivalent
+    /// implementations (XLA fabric vs CPU library) are amplified to a full
+    /// quantum by rounding, and to a full dynamic range by thresholding.
+    /// The right contract is therefore: almost every pixel within
+    /// `quantum`, and at most `max_frac` of pixels differing beyond it
+    /// (ties that rounded differently or flipped across a threshold).
+    pub fn quantized_close(&self, other: &Mat, quantum: f32, max_frac: f64) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        let bad = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .filter(|(a, b)| (**a - **b).abs() > quantum + 1e-4)
+            .count();
+        bad as f64 <= max_frac * self.data.len() as f64
+    }
+
+    /// Approximate equality with combined absolute/relative tolerance.
+    pub fn allclose(&self, other: &Mat, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// Content fingerprint (FNV-1a over the raw f32 bit patterns).
+///
+/// The tracer uses these hashes to recover producer→consumer edges between
+/// library calls — the "causal function call including input-output data"
+/// inference of the paper's Frontend (Step 3).
+pub fn content_hash(m: &Mat) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for d in m.shape() {
+        h ^= *d as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    for v in m.as_slice() {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Maximum elements the sampled fingerprint touches.
+const HASH_SAMPLES: usize = 4096;
+
+/// Sampled content fingerprint: FNV-1a over shape + length + a strided
+/// subset of at most `HASH_SAMPLES` (4096) elements.
+///
+/// Hashing every pixel of a frame makes the tracer cost ~20% of the traced
+/// call (EXPERIMENTS.md §Perf); identity tracking only needs "same buffer
+/// ⇒ same hash, different buffer ⇒ almost surely different", which the
+/// strided sample gives at O(1) cost.  Equal buffers always hash equal.
+pub fn sampled_hash(m: &Mat) -> u64 {
+    let data = m.as_slice();
+    if data.len() <= HASH_SAMPLES {
+        return content_hash(m);
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for d in m.shape() {
+        h ^= *d as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h ^= data.len() as u64;
+    h = h.wrapping_mul(0x100_0000_01b3);
+    let stride = data.len() / HASH_SAMPLES;
+    let mut i = 0;
+    while i < data.len() {
+        h ^= data[i].to_bits() as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+        i += stride;
+    }
+    // always include the final element (catches tail-only edits)
+    h ^= data[data.len() - 1].to_bits() as u64;
+    h.wrapping_mul(0x100_0000_01b3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Mat::new(vec![2, 2], vec![0.0; 4]).is_ok());
+        assert!(Mat::new(vec![2, 2], vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn new_rejects_rank_0_and_4() {
+        assert!(Mat::new(vec![], vec![]).is_err());
+        assert!(Mat::new(vec![1, 1, 1, 1], vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn accessors_roundtrip() {
+        let mut m = Mat::zeros(&[3, 4]);
+        m.set2(1, 2, 7.5);
+        assert_eq!(m.at2(1, 2), 7.5);
+        assert_eq!(m.height(), 3);
+        assert_eq!(m.width(), 4);
+        assert_eq!(m.channels(), 1);
+        assert_eq!(m.byte_len(), 48);
+    }
+
+    #[test]
+    fn clamped_border_replicates() {
+        let m = Mat::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(m.at2_clamped(-1, -1), 1.0);
+        assert_eq!(m.at2_clamped(-5, 1), 2.0);
+        assert_eq!(m.at2_clamped(5, 5), 4.0);
+        assert_eq!(m.at2_clamped(1, -3), 3.0);
+    }
+
+    #[test]
+    fn min_max_diff() {
+        let a = Mat::new(vec![2, 2], vec![1.0, -2.0, 3.0, 4.0]).unwrap();
+        let b = Mat::new(vec![2, 2], vec![1.0, -2.0, 3.5, 4.0]).unwrap();
+        assert_eq!(a.min(), -2.0);
+        assert_eq!(a.max(), 4.0);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+        assert!(a.allclose(&b, 0.0, 0.6));
+        assert!(!a.allclose(&b, 0.0, 0.4));
+    }
+
+    #[test]
+    fn hash_is_content_sensitive() {
+        let a = Mat::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut b = a.clone();
+        assert_eq!(content_hash(&a), content_hash(&b));
+        b.set2(0, 0, 1.0001);
+        assert_ne!(content_hash(&a), content_hash(&b));
+        // shape-sensitivity: same data, different shape
+        let c = Mat::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_ne!(content_hash(&a), content_hash(&c));
+    }
+
+    #[test]
+    fn sampled_hash_tracks_identity() {
+        // small tensors: identical to the full hash
+        let a = Mat::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(sampled_hash(&a), content_hash(&a));
+        // large tensors: equal data -> equal hash, edits anywhere the
+        // stride samples (incl. first/last) -> different hash
+        let big = crate::image::synth::noise_gray(128, 128, 1);
+        let same = big.clone();
+        assert_eq!(sampled_hash(&big), sampled_hash(&same));
+        let mut head = big.clone();
+        head.set2(0, 0, -1.0);
+        assert_ne!(sampled_hash(&big), sampled_hash(&head));
+        let mut tail = big.clone();
+        tail.set2(127, 127, -1.0);
+        assert_ne!(sampled_hash(&big), sampled_hash(&tail));
+        // different shape, same data layout
+        let flat = Mat::new(vec![128 * 128], big.as_slice().to_vec()).unwrap();
+        assert_ne!(sampled_hash(&big), sampled_hash(&flat));
+    }
+
+    #[test]
+    fn quantized_close_tolerates_isolated_ties() {
+        let a = Mat::full(&[10, 10], 100.0);
+        let mut b = a.clone();
+        b.set2(3, 3, 101.0); // one rounding tie: within quantum
+        assert!(a.quantized_close(&b, 1.0, 0.0));
+        b.set2(3, 3, 255.0); // one threshold flip: needs the fraction
+        assert!(!a.quantized_close(&b, 1.0, 0.0));
+        assert!(a.quantized_close(&b, 1.0, 0.05));
+        assert!(!a.quantized_close(&Mat::zeros(&[4]), 1.0, 1.0));
+    }
+
+    #[test]
+    fn allclose_shape_mismatch_is_false() {
+        let a = Mat::zeros(&[2, 2]);
+        let b = Mat::zeros(&[4]);
+        assert!(!a.allclose(&b, 0.1, 0.1));
+    }
+}

@@ -1,0 +1,13 @@
+//! Image substrate: the `Mat` tensor, file I/O and synthetic generators.
+//!
+//! `Mat` stands in for `cv::Mat` — the value type that flows through the
+//! traced binary, the software function library and the accelerator
+//! staging layer.  Data is always row-major `f32`; u8 images are widened at
+//! the boundary, mirroring the bit-depth handling the paper performs when
+//! generating AXI ports.
+
+mod mat;
+pub mod io;
+pub mod synth;
+
+pub use mat::{content_hash, sampled_hash, Mat};

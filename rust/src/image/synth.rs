@@ -1,0 +1,104 @@
+//! Synthetic image generators — the workload source for tests, examples
+//! and benches (we have no camera or PNG corpus; the paper's case study
+//! input is a single 1920x1080 frame, which `checkerboard` and
+//! `noise_rgb` reproduce in spirit: dense gradients + strong corners).
+
+use crate::util::rng::Rng;
+
+use super::Mat;
+
+/// Uniform-noise RGB image in [0, 255], deterministic in `seed`.
+pub fn noise_rgb(h: usize, w: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..h * w * 3).map(|_| rng.next_f32() * 255.0).collect();
+    Mat::new(vec![h, w, 3], data).expect("shape/data consistent by construction")
+}
+
+/// Uniform-noise grayscale image in [0, 255].
+pub fn noise_gray(h: usize, w: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..h * w).map(|_| rng.next_f32() * 255.0).collect();
+    Mat::new(vec![h, w], data).expect("shape/data consistent by construction")
+}
+
+/// RGB checkerboard with `cell`-pixel squares — a corner-rich test pattern
+/// for the Harris pipeline (every cell junction is a corner).
+pub fn checkerboard(h: usize, w: usize, cell: usize) -> Mat {
+    let cell = cell.max(1);
+    let mut m = Mat::zeros(&[h, w, 3]);
+    {
+        let data = m.as_mut_slice();
+        for y in 0..h {
+            for x in 0..w {
+                let on = ((y / cell) + (x / cell)) % 2 == 0;
+                let v = if on { 230.0 } else { 25.0 };
+                let base = (y * w + x) * 3;
+                data[base] = v;
+                data[base + 1] = v * 0.9;
+                data[base + 2] = v * 0.8;
+            }
+        }
+    }
+    m
+}
+
+/// Smooth radial gradient (few corners — the negative control for Harris).
+pub fn radial_gradient(h: usize, w: usize) -> Mat {
+    let mut m = Mat::zeros(&[h, w]);
+    let (cy, cx) = (h as f32 / 2.0, w as f32 / 2.0);
+    let norm = (cy * cy + cx * cx).sqrt();
+    {
+        let data = m.as_mut_slice();
+        for y in 0..h {
+            for x in 0..w {
+                let d = ((y as f32 - cy).powi(2) + (x as f32 - cx).powi(2)).sqrt();
+                data[y * w + x] = 255.0 * (1.0 - d / norm);
+            }
+        }
+    }
+    m
+}
+
+/// Deterministic random matrix for BLAS workloads, values in [-1, 1].
+pub fn random_matrix(m: usize, n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..m * n).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    Mat::new(vec![m, n], data).expect("shape/data consistent by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_is_deterministic_per_seed() {
+        let a = noise_rgb(4, 5, 7);
+        let b = noise_rgb(4, 5, 7);
+        let c = noise_rgb(4, 5, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn noise_in_range() {
+        let a = noise_gray(16, 16, 1);
+        assert!(a.min() >= 0.0 && a.max() <= 255.0);
+    }
+
+    #[test]
+    fn checkerboard_has_two_levels() {
+        let m = checkerboard(8, 8, 2);
+        assert_eq!(m.shape(), &[8, 8, 3]);
+        assert_eq!(m.at3(0, 0, 0), 230.0);
+        assert_eq!(m.at3(0, 2, 0), 25.0);
+        assert_eq!(m.at3(2, 0, 0), 25.0);
+        assert_eq!(m.at3(2, 2, 0), 230.0);
+    }
+
+    #[test]
+    fn gradient_is_smooth_and_peaked_at_center() {
+        let m = radial_gradient(9, 9);
+        assert!(m.at2(4, 4) > m.at2(0, 0));
+        assert!(m.max() <= 255.0);
+    }
+}

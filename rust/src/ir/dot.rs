@@ -1,0 +1,86 @@
+//! Graphviz DOT export — the Fig. 4 rendering: rectangle function nodes
+//! sized by processing time, ellipse data nodes sized by payload, aligned
+//! chronologically.
+
+use super::Ir;
+
+/// Render the IR as a DOT digraph.
+pub fn to_dot(ir: &Ir) -> String {
+    let max_ns = ir.funcs.iter().map(|f| f.mean_ns).max().unwrap_or(1).max(1);
+    let max_bytes = ir.data.iter().map(|d| d.bytes).max().unwrap_or(1).max(1);
+    let mut s = String::new();
+    s.push_str(&format!("digraph \"{}\" {{\n", ir.program));
+    s.push_str("  rankdir=TB;\n  node [fontname=\"Helvetica\"];\n");
+    for f in &ir.funcs {
+        // node area tracks time share, like the paper's figure
+        let scale = 0.6 + 2.0 * (f.mean_ns as f64 / max_ns as f64);
+        s.push_str(&format!(
+            "  f{} [shape=box, label=\"{}\\n{:.2} ms\", width={:.2}, height={:.2}, fixedsize=false];\n",
+            f.step,
+            f.symbol,
+            f.mean_ns as f64 / 1e6,
+            scale,
+            scale * 0.45,
+        ));
+    }
+    for d in &ir.data {
+        let scale = 0.5 + 1.5 * (d.bytes as f64 / max_bytes as f64);
+        let dims: Vec<String> = d.shape.iter().map(|x| x.to_string()).collect();
+        s.push_str(&format!(
+            "  d{} [shape=ellipse, label=\"{} x 32bit\\n{} B\", width={:.2}];\n",
+            d.id,
+            dims.join(" x "),
+            d.bytes,
+            scale,
+        ));
+        if let Some(p) = d.producer {
+            if let Some(f) = ir.funcs.get(p) {
+                s.push_str(&format!("  f{} -> d{};\n", f.step, d.id));
+            }
+        }
+        for c in &d.consumers {
+            if let Some(f) = ir.funcs.get(*c) {
+                s.push_str(&format!("  d{} -> f{};\n", d.id, f.step));
+            }
+        }
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::demo_ir;
+    use super::*;
+
+    #[test]
+    fn dot_contains_all_nodes_and_edges() {
+        let ir = demo_ir();
+        let dot = to_dot(&ir);
+        assert!(dot.starts_with("digraph"));
+        for f in &ir.funcs {
+            assert!(dot.contains(&format!("f{} [shape=box", f.step)), "{dot}");
+            assert!(dot.contains(&f.symbol));
+        }
+        // 5 data nodes for a 4-func chain (input + 3 intermediates + output)
+        assert_eq!(ir.data.len(), 5);
+        assert_eq!(dot.matches("shape=ellipse").count(), 5);
+        assert!(dot.contains("->"));
+        assert!(dot.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn bigger_time_means_bigger_node() {
+        let mut ir = demo_ir();
+        ir.funcs[1].mean_ns = 100 * ir.funcs[0].mean_ns.max(1);
+        let dot = to_dot(&ir);
+        // the harris node should carry a larger width than cvtColor's
+        let w_of = |step: usize| -> f64 {
+            let tag = format!("f{step} [shape=box");
+            let line = dot.lines().find(|l| l.contains(&tag)).unwrap();
+            let w = line.split("width=").nth(1).unwrap();
+            w.split(',').next().unwrap().parse().unwrap()
+        };
+        assert!(w_of(1) > w_of(0));
+    }
+}

@@ -1,0 +1,175 @@
+//! User edits over the IR (paper Step 7): designate placements, fuse
+//! adjacent functions into one candidate hardware module, drop functions.
+
+use super::{Ir, Placement};
+
+/// Why an edit was rejected.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum EditError {
+    /// No IR node covers the given step.
+    #[error("no IR function covers step {0}")]
+    NoSuchStep(usize),
+    /// Fusion range must be >= 2 contiguous nodes.
+    #[error("fusion needs at least two contiguous functions")]
+    BadFusionRange,
+    /// Cannot drop every function.
+    #[error("cannot drop the last remaining function")]
+    WouldEmpty,
+}
+
+impl Ir {
+    /// Force the placement of the node covering `step`.
+    pub fn designate(&mut self, step: usize, placement: Placement) -> Result<(), EditError> {
+        let f = self
+            .funcs
+            .iter_mut()
+            .find(|f| f.covers.contains(&step))
+            .ok_or(EditError::NoSuchStep(step))?;
+        f.placement = placement;
+        Ok(())
+    }
+
+    /// Fuse the contiguous IR nodes covering `first_step..=last_step` into
+    /// a single node whose symbol is the `+`-joined member list.  The
+    /// Backend then looks the fused symbol up in the hardware database as
+    /// one module (e.g. `cv::cvtColor+cv::cornerHarris`).
+    pub fn fuse(&mut self, first_step: usize, last_step: usize) -> Result<(), EditError> {
+        let lo = self
+            .funcs
+            .iter()
+            .position(|f| f.covers.contains(&first_step))
+            .ok_or(EditError::NoSuchStep(first_step))?;
+        let hi = self
+            .funcs
+            .iter()
+            .position(|f| f.covers.contains(&last_step))
+            .ok_or(EditError::NoSuchStep(last_step))?;
+        if hi <= lo {
+            return Err(EditError::BadFusionRange);
+        }
+        let members: Vec<_> = self.funcs.drain(lo..=hi).collect();
+        let fused = super::IrFunc {
+            step: members[0].step,
+            symbol: members
+                .iter()
+                .map(|m| m.symbol.as_str())
+                .collect::<Vec<_>>()
+                .join("+"),
+            covers: members.iter().flat_map(|m| m.covers.clone()).collect(),
+            mean_ns: members.iter().map(|m| m.mean_ns).sum(),
+            placement: members
+                .iter()
+                .map(|m| m.placement)
+                .find(|p| *p != Placement::Auto)
+                .unwrap_or(Placement::Auto),
+        };
+        self.funcs.insert(lo, fused);
+        Ok(())
+    }
+
+    /// Undo a fusion: split a fused node back into per-step nodes with the
+    /// member symbols (times are split evenly — the trace no longer has
+    /// per-member numbers once fused).
+    pub fn unfuse(&mut self, step: usize) -> Result<(), EditError> {
+        let pos = self
+            .funcs
+            .iter()
+            .position(|f| f.covers.contains(&step))
+            .ok_or(EditError::NoSuchStep(step))?;
+        let node = self.funcs.remove(pos);
+        let symbols: Vec<&str> = node.symbol.split('+').collect();
+        if symbols.len() != node.covers.len() {
+            // not a fusion (or unsplittable) — restore and treat as no-op
+            self.funcs.insert(pos, node);
+            return Ok(());
+        }
+        let share = node.mean_ns / node.covers.len() as u64;
+        for (i, (sym, st)) in symbols.iter().zip(&node.covers).enumerate() {
+            self.funcs.insert(
+                pos + i,
+                super::IrFunc {
+                    step: *st,
+                    symbol: sym.to_string(),
+                    covers: vec![*st],
+                    mean_ns: share,
+                    placement: node.placement,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// Remove the node covering `step` from the flow (the user decided the
+    /// call is dead in the deployed pipeline, e.g. a debug visualization).
+    pub fn drop_func(&mut self, step: usize) -> Result<(), EditError> {
+        if self.funcs.len() <= 1 {
+            return Err(EditError::WouldEmpty);
+        }
+        let pos = self
+            .funcs
+            .iter()
+            .position(|f| f.covers.contains(&step))
+            .ok_or(EditError::NoSuchStep(step))?;
+        self.funcs.remove(pos);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::demo_ir;
+    use super::*;
+
+    #[test]
+    fn designate_sets_placement() {
+        let mut ir = demo_ir();
+        ir.designate(2, Placement::Cpu).unwrap();
+        assert_eq!(ir.func_covering(2).unwrap().placement, Placement::Cpu);
+        assert_eq!(ir.designate(42, Placement::Hw), Err(EditError::NoSuchStep(42)));
+    }
+
+    #[test]
+    fn fuse_concatenates_and_sums() {
+        let mut ir = demo_ir();
+        let t0 = ir.funcs[0].mean_ns + ir.funcs[1].mean_ns;
+        ir.fuse(0, 1).unwrap();
+        assert_eq!(ir.funcs.len(), 3);
+        assert_eq!(ir.funcs[0].symbol, "cv::cvtColor+cv::cornerHarris");
+        assert_eq!(ir.funcs[0].covers, vec![0, 1]);
+        assert_eq!(ir.funcs[0].mean_ns, t0);
+    }
+
+    #[test]
+    fn fuse_rejects_degenerate_range() {
+        let mut ir = demo_ir();
+        assert_eq!(ir.fuse(1, 1), Err(EditError::BadFusionRange));
+        assert_eq!(ir.fuse(3, 0), Err(EditError::BadFusionRange));
+    }
+
+    #[test]
+    fn unfuse_restores_members() {
+        let mut ir = demo_ir();
+        ir.fuse(0, 1).unwrap();
+        ir.unfuse(0).unwrap();
+        assert_eq!(ir.funcs.len(), 4);
+        assert_eq!(ir.funcs[0].symbol, "cv::cvtColor");
+        assert_eq!(ir.funcs[1].symbol, "cv::cornerHarris");
+    }
+
+    #[test]
+    fn drop_removes_node() {
+        let mut ir = demo_ir();
+        ir.drop_func(2).unwrap();
+        assert_eq!(ir.funcs.len(), 3);
+        assert!(ir.func_covering(2).is_none());
+    }
+
+    #[test]
+    fn drop_refuses_to_empty() {
+        let mut ir = demo_ir();
+        for s in [0, 1, 2] {
+            ir.drop_func(s).unwrap();
+        }
+        assert_eq!(ir.drop_func(3), Err(EditError::WouldEmpty));
+    }
+}

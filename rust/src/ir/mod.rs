@@ -1,0 +1,249 @@
+//! Courier IR (paper Steps 4–7): the editable intermediate representation
+//! between the Frontend's call graph and the Backend's pipeline builder.
+//!
+//! Users inspect the graph (DOT export = Fig. 4), force placements
+//! (`designate`), fuse adjacent functions into a single candidate hardware
+//! module (the paper's cvtColor+cornerHarris attempt), or drop functions
+//! entirely — all without touching the target binary.
+
+mod dot;
+mod edit;
+
+pub use dot::to_dot;
+pub use edit::EditError;
+
+use crate::trace::{CallGraph, DataNode};
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// User placement directive for one IR function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Backend decides: hardware if the database has the module, else CPU.
+    #[default]
+    Auto,
+    /// Pin to CPU software function even if a hardware module exists.
+    Cpu,
+    /// Require the hardware module; building fails if the DB lacks it.
+    Hw,
+}
+
+impl Placement {
+    fn as_str(&self) -> &'static str {
+        match self {
+            Placement::Auto => "auto",
+            Placement::Cpu => "cpu",
+            Placement::Hw => "hw",
+        }
+    }
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Placement::Auto),
+            "cpu" => Ok(Placement::Cpu),
+            "hw" => Ok(Placement::Hw),
+            other => Err(crate::CourierError::Json(format!("bad placement {other:?}"))),
+        }
+    }
+}
+
+/// One function in the IR (one call site, possibly a fusion of several).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IrFunc {
+    /// Original call-site step index (first of the fused range).
+    pub step: usize,
+    /// Library symbol; fused nodes use `a+b` concatenation.
+    pub symbol: String,
+    /// Steps this node covers in the original binary (1 unless fused).
+    pub covers: Vec<usize>,
+    /// Mean observed duration, ns (summed when fused).
+    pub mean_ns: u64,
+    /// Placement directive.
+    pub placement: Placement,
+}
+
+/// The editable IR: function chain + data descriptors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ir {
+    /// Traced binary name.
+    pub program: String,
+    /// Frames the trace aggregated.
+    pub frames: usize,
+    /// Function chain in execution order.
+    pub funcs: Vec<IrFunc>,
+    /// Data nodes carried over from the call graph (for Fig. 4 export and
+    /// communication-cost estimates).
+    pub data: Vec<DataNode>,
+}
+
+impl Ir {
+    /// Lower a reconstructed call graph into the IR (Step 4).
+    ///
+    /// Only linear chains are supported — the paper defers branching
+    /// dataflow to future work; we fail loudly instead of mis-pipelining.
+    pub fn from_graph(graph: &CallGraph) -> Result<Self> {
+        if !graph.is_linear_chain() {
+            return Err(crate::CourierError::Other(format!(
+                "program {}: traced dataflow is not a linear chain; \
+                 Courier's Pipeline Generator handles linear flows only",
+                graph.program
+            )));
+        }
+        Ok(Ir {
+            program: graph.program.clone(),
+            frames: graph.frames,
+            funcs: graph
+                .funcs
+                .iter()
+                .map(|f| IrFunc {
+                    step: f.step,
+                    symbol: f.symbol.clone(),
+                    covers: vec![f.step],
+                    mean_ns: f.mean_ns,
+                    placement: Placement::Auto,
+                })
+                .collect(),
+            data: graph.data.clone(),
+        })
+    }
+
+    /// Total mean frame time, ns.
+    pub fn frame_ns(&self) -> u64 {
+        self.funcs.iter().map(|f| f.mean_ns).sum()
+    }
+
+    /// Find the IR node covering an original step.
+    pub fn func_covering(&self, step: usize) -> Option<&IrFunc> {
+        self.funcs.iter().find(|f| f.covers.contains(&step))
+    }
+
+    /// Serialize (the artifact `courier graph --ir` writes for Step 6).
+    pub fn to_json(&self) -> Result<String> {
+        let funcs = self
+            .funcs
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("step", Json::Num(f.step as f64)),
+                    ("symbol", Json::Str(f.symbol.clone())),
+                    ("covers", Json::from_usizes(&f.covers)),
+                    ("mean_ns", Json::Num(f.mean_ns as f64)),
+                    ("placement", Json::Str(f.placement.as_str().into())),
+                ])
+            })
+            .collect();
+        let data = self
+            .data
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("id", Json::Num(d.id as f64)),
+                    ("shape", Json::from_usizes(&d.shape)),
+                    ("bytes", Json::Num(d.bytes as f64)),
+                    (
+                        "producer",
+                        match d.producer {
+                            Some(p) => Json::Num(p as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("consumers", Json::from_usizes(&d.consumers)),
+                ])
+            })
+            .collect();
+        Ok(Json::obj(vec![
+            ("program", Json::Str(self.program.clone())),
+            ("frames", Json::Num(self.frames as f64)),
+            ("funcs", Json::Arr(funcs)),
+            ("data", Json::Arr(data)),
+        ])
+        .to_string_pretty())
+    }
+
+    /// Deserialize an IR a user edited offline (Step 7).
+    pub fn from_json(s: &str) -> Result<Self> {
+        let v = json::parse(s)?;
+        let funcs = v
+            .req("funcs")?
+            .as_arr()?
+            .iter()
+            .map(|f| {
+                Ok(IrFunc {
+                    step: f.req("step")?.as_usize()?,
+                    symbol: f.req("symbol")?.as_str()?.to_string(),
+                    covers: f.req("covers")?.as_usize_vec()?,
+                    mean_ns: f.req("mean_ns")?.as_u64()?,
+                    placement: Placement::from_str(f.req("placement")?.as_str()?)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let data = v
+            .req("data")?
+            .as_arr()?
+            .iter()
+            .map(|d| {
+                Ok(DataNode {
+                    id: d.req("id")?.as_usize()?,
+                    shape: d.req("shape")?.as_usize_vec()?,
+                    bytes: d.req("bytes")?.as_usize()?,
+                    producer: match d.req("producer")? {
+                        Json::Null => None,
+                        other => Some(other.as_usize()?),
+                    },
+                    consumers: d.req("consumers")?.as_usize_vec()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(Ir {
+            program: v.req("program")?.as_str()?.to_string(),
+            frames: v.req("frames")?.as_usize()?,
+            funcs,
+            data,
+        })
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::app::corner_harris_demo;
+    use crate::image::synth;
+    use crate::trace::trace_program;
+
+    pub(crate) fn demo_ir() -> Ir {
+        let prog = corner_harris_demo(8, 10);
+        let t = trace_program(&prog, &[vec![synth::noise_rgb(8, 10, 0)]]).unwrap();
+        Ir::from_graph(&CallGraph::from_trace(&t)).unwrap()
+    }
+
+    #[test]
+    fn lowers_linear_graph() {
+        let ir = demo_ir();
+        assert_eq!(ir.funcs.len(), 4);
+        assert_eq!(ir.funcs[1].symbol, "cv::cornerHarris");
+        assert_eq!(ir.funcs[1].covers, vec![1]);
+        assert!(ir.frame_ns() > 0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut ir = demo_ir();
+        ir.designate(2, Placement::Cpu).unwrap();
+        let s = ir.to_json().unwrap();
+        assert_eq!(Ir::from_json(&s).unwrap(), ir);
+    }
+
+    #[test]
+    fn func_covering_finds_nodes() {
+        let ir = demo_ir();
+        assert_eq!(ir.func_covering(2).unwrap().symbol, "cv::normalize");
+        assert!(ir.func_covering(9).is_none());
+    }
+
+    #[test]
+    fn bad_placement_string_rejected() {
+        let ir = demo_ir();
+        let s = ir.to_json().unwrap().replace("\"auto\"", "\"fpga!\"");
+        assert!(Ir::from_json(&s).is_err());
+    }
+}

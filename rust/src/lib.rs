@@ -1,0 +1,45 @@
+//! # Courier-RS
+//!
+//! A reproduction of **Courier-FPGA** — *"An Automatic Mixed Software
+//! Hardware Pipeline Builder for CPU-FPGA Platforms"* (Miyajima, Thomas,
+//! Amano; CS.DC 2014) — rebuilt as a three-layer Rust + JAX/Pallas + PJRT
+//! stack.
+//!
+//! The library accelerates an unmodified "target binary" (a `.courier`
+//! program executed by [`app::Interpreter`]) without source changes:
+//!
+//! 1. **Frontend** ([`trace`]) — dynamically traces library calls and
+//!    reconstructs the function call graph including input/output data.
+//! 2. **Courier IR** ([`ir`]) — an editable dataflow representation of the
+//!    traced flow (graph export, off-load designation, fusion edits).
+//! 3. **Backend** ([`hwdb`], [`pipeline`], [`offload`]) — looks up each
+//!    function in a database of pre-built accelerator modules (AOT-compiled
+//!    XLA executables standing in for FPGA bitstreams), partitions the flow
+//!    into a balanced mixed SW/HW pipeline, generates a token-based pipeline
+//!    control program, and splices it into the running binary by patching
+//!    the interpreter's symbol dispatch table (the paper's DLL injection).
+//!
+//! The accelerator substrate is [`runtime`]: HLO-text artifacts produced by
+//! `python/compile/aot.py` (JAX + Pallas kernels) compiled and executed via
+//! the PJRT CPU client. Python never runs on the request path.
+
+pub mod app;
+pub mod config;
+pub mod hlo;
+pub mod hwdb;
+pub mod image;
+pub mod ir;
+pub mod metrics;
+pub mod offload;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod swlib;
+pub mod trace;
+pub mod util;
+
+mod errors;
+pub use errors::CourierError;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, CourierError>;

@@ -1,0 +1,413 @@
+//! `courier` — the CLI launcher (work-steps 1–9 as subcommands).
+//!
+//! ```text
+//! courier trace   --program <spec> [--frames 3] [--out trace.json]
+//! courier graph   --trace trace.json [--dot graph.dot] [--ir ir.json]
+//! courier plan    --ir ir.json
+//! courier build   --ir ir.json [--emit control.prog]
+//! courier run     --program <spec> [--frames 8]          # original
+//! courier deploy  --program <spec> [--frames 8]          # accelerated
+//! courier synth   [--size 1080x1920]                      # tables II/III
+//! ```
+//!
+//! Global flags: `--config courier.toml --artifacts DIR --threads N
+//! --tokens N --policy paper|optimal|per_function|single`.
+//!
+//! `--program` accepts a `.courier` file path or a builtin demo:
+//! `corner_harris[:HxW]`, `edge[:HxW]`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use courier::app::{self, Program, RegistryDispatch};
+use courier::config::{Config, PartitionPolicy};
+use courier::hwdb::HwDatabase;
+use courier::image::{synth, Mat};
+use courier::ir::Ir;
+use courier::offload::Deployment;
+use courier::report;
+use courier::runtime::Runtime;
+use courier::swlib::Registry;
+use courier::trace::{trace_program, CallGraph, Trace};
+
+const USAGE: &str = "\
+courier — automatic mixed SW/HW pipeline builder (Courier-FPGA reproduction)
+
+USAGE: courier [GLOBAL FLAGS] <COMMAND> [FLAGS]
+
+COMMANDS:
+  trace   --program <spec> [--frames N] [--out FILE]   Steps 1-3: trace the binary
+  graph   --trace FILE [--dot FILE] [--ir FILE]        Steps 4-6: call graph + IR
+  edit    --ir FILE [--fuse A:B] [--pin STEP=cpu|hw|auto] [--drop STEP]
+                                                       Step 7: edit the IR in place
+  plan    --ir FILE                                    Step 8 (dry): stage plan
+  build   --ir FILE [--emit FILE]                      Step 8: build pipeline
+  run     --program <spec> [--frames N]                run the original binary
+  deploy  --program <spec> [--frames N]                Step 9: accelerated run
+  synth   [--size HxW]                                 Tables II & III
+
+GLOBAL FLAGS:
+  --config FILE       courier.toml
+  --artifacts DIR     module database dir (default: artifacts)
+  --threads N         worker threads (default: 2)
+  --tokens N          token pool depth (default: 4)
+  --policy P          paper|optimal|per_function|single
+
+PROGRAM SPECS: a .courier file path, corner_harris[:HxW], edge[:HxW]
+";
+
+/// Parsed command line: subcommand + flag map.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut argv = std::env::args().skip(1);
+    let mut cmd = None;
+    let mut flags = HashMap::new();
+    while let Some(a) = argv.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = argv.next().ok_or_else(|| format!("flag --{name} needs a value"))?;
+            flags.insert(name.to_string(), val);
+        } else if cmd.is_none() {
+            cmd = Some(a);
+        } else {
+            return Err(format!("unexpected argument {a:?}"));
+        }
+    }
+    Ok(Args { cmd: cmd.unwrap_or_else(|| "help".into()), flags })
+}
+
+impl Args {
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(String::as_str)
+    }
+
+    fn get_usize(&self, k: &str, default: usize) -> Result<usize, String> {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{k} must be an integer")),
+        }
+    }
+
+    fn require(&self, k: &str) -> Result<&str, String> {
+        self.get(k).ok_or_else(|| format!("missing required flag --{k}"))
+    }
+}
+
+fn main() {
+    match real_main() {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("courier: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = parse_args().map_err(anyhow::Error::msg)?;
+    if args.cmd == "help" || args.cmd == "--help" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cfg = load_config(&args)?;
+    match args.cmd.as_str() {
+        "trace" => cmd_trace(&args),
+        "graph" => cmd_graph(&args),
+        "edit" => cmd_edit(&args),
+        "plan" => cmd_plan(&args, &cfg),
+        "build" => cmd_build(&args, &cfg),
+        "run" => cmd_run(&args),
+        "deploy" => cmd_deploy(&args, &cfg),
+        "synth" => cmd_synth(&args, &cfg),
+        other => {
+            anyhow::bail!("unknown command {other:?}\n\n{USAGE}");
+        }
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::from_toml_file(std::path::Path::new(p))?,
+        None => Config::default(),
+    };
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(d);
+    }
+    if args.get("threads").is_some() {
+        cfg.threads = args.get_usize("threads", cfg.threads).map_err(anyhow::Error::msg)?;
+    }
+    if args.get("tokens").is_some() {
+        cfg.tokens = args.get_usize("tokens", cfg.tokens).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(p) = args.get("policy") {
+        cfg.policy = PartitionPolicy::parse(p)?;
+    }
+    Ok(cfg)
+}
+
+/// Resolve `--program`: builtin demo names or a `.courier` path.
+fn load_program(spec: &str) -> anyhow::Result<Program> {
+    let (name, size) = match spec.split_once(':') {
+        Some((n, s)) => (n, Some(s)),
+        None => (spec, None),
+    };
+    let parse_size = |default: (usize, usize)| -> anyhow::Result<(usize, usize)> {
+        match size {
+            None => Ok(default),
+            Some(s) => {
+                let (h, w) = s
+                    .split_once('x')
+                    .ok_or_else(|| anyhow::anyhow!("size must be HxW"))?;
+                Ok((h.parse()?, w.parse()?))
+            }
+        }
+    };
+    match name {
+        "corner_harris" => {
+            let (h, w) = parse_size((240, 320))?;
+            Ok(app::corner_harris_demo(h, w))
+        }
+        "edge" => {
+            let (h, w) = parse_size((240, 320))?;
+            Ok(app::edge_demo(h, w))
+        }
+        path => Ok(app::parse_program(&std::fs::read_to_string(path)?)?),
+    }
+}
+
+/// Synthetic input frames matching the program's declared inputs.
+fn synth_frames(program: &Program, n: usize) -> Vec<Vec<Mat>> {
+    (0..n)
+        .map(|i| {
+            program
+                .inputs
+                .iter()
+                .map(|(_, shape)| match shape.len() {
+                    3 => synth::noise_rgb(shape[0], shape[1], i as u64),
+                    2 => synth::noise_gray(shape[0], shape[1], i as u64),
+                    _ => Mat::full(shape, i as f32),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let prog = load_program(args.require("program").map_err(anyhow::Error::msg)?)?;
+    let frames = args.get_usize("frames", 3).map_err(anyhow::Error::msg)?;
+    let out = PathBuf::from(args.get("out").unwrap_or("trace.json"));
+    let inputs = synth_frames(&prog, frames);
+    let trace = trace_program(&prog, &inputs)?;
+    std::fs::write(&out, trace.to_json()?)?;
+    println!(
+        "traced {} events over {} frames -> {}",
+        trace.events.len(),
+        trace.frames(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_graph(args: &Args) -> anyhow::Result<()> {
+    let t = Trace::from_json(&std::fs::read_to_string(
+        args.require("trace").map_err(anyhow::Error::msg)?,
+    )?)?;
+    let graph = CallGraph::from_trace(&t);
+    let ir_val = Ir::from_graph(&graph)?;
+    println!(
+        "{} functions, {} data nodes, frame {:.2} ms",
+        graph.funcs.len(),
+        graph.data.len(),
+        ir_val.frame_ns() as f64 / 1e6
+    );
+    for (sym, share) in graph.time_shares() {
+        println!("  {sym:<24} {:.1}%", share * 100.0);
+    }
+    if let Some(p) = args.get("dot") {
+        std::fs::write(p, courier::ir::to_dot(&ir_val))?;
+        println!("wrote Fig.4 DOT -> {p}");
+    }
+    if let Some(p) = args.get("ir") {
+        std::fs::write(p, ir_val.to_json()?)?;
+        println!("wrote IR -> {p}");
+    }
+    Ok(())
+}
+
+fn cmd_edit(args: &Args) -> anyhow::Result<()> {
+    let path = args.require("ir").map_err(anyhow::Error::msg)?;
+    let mut ir = Ir::from_json(&std::fs::read_to_string(path)?)?;
+    if let Some(spec) = args.get("fuse") {
+        let (a, b) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("--fuse needs FIRST:LAST steps"))?;
+        ir.fuse(a.parse()?, b.parse()?)
+            .map_err(|e| anyhow::anyhow!("fuse: {e}"))?;
+        println!("fused steps {a}..={b} -> {}", ir.func_covering(a.parse()?).unwrap().symbol);
+    }
+    if let Some(spec) = args.get("pin") {
+        let (step, place) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--pin needs STEP=cpu|hw|auto"))?;
+        let placement = match place {
+            "cpu" => courier::ir::Placement::Cpu,
+            "hw" => courier::ir::Placement::Hw,
+            "auto" => courier::ir::Placement::Auto,
+            other => anyhow::bail!("unknown placement {other:?}"),
+        };
+        ir.designate(step.parse()?, placement)
+            .map_err(|e| anyhow::anyhow!("pin: {e}"))?;
+        println!("pinned step {step} -> {place}");
+    }
+    if let Some(step) = args.get("drop") {
+        ir.drop_func(step.parse()?)
+            .map_err(|e| anyhow::anyhow!("drop: {e}"))?;
+        println!("dropped step {step}");
+    }
+    std::fs::write(path, ir.to_json()?)?;
+    println!("wrote {path} ({} functions)", ir.funcs.len());
+    Ok(())
+}
+
+fn cmd_plan(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let ir = Ir::from_json(&std::fs::read_to_string(
+        args.require("ir").map_err(anyhow::Error::msg)?,
+    )?)?;
+    let db = HwDatabase::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    let built = courier::pipeline::build(&ir, &db, &rt, &Registry::standard(), cfg)?;
+    print!("{}", report::render_plan(&built.plan));
+    Ok(())
+}
+
+fn cmd_build(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let ir = Ir::from_json(&std::fs::read_to_string(
+        args.require("ir").map_err(anyhow::Error::msg)?,
+    )?)?;
+    let db = HwDatabase::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    let built = courier::pipeline::build(&ir, &db, &rt, &Registry::standard(), cfg)?;
+    print!("{}", report::render_plan(&built.plan));
+    if let Some(p) = args.get("emit") {
+        std::fs::write(p, &built.control_program)?;
+        println!("wrote control program -> {p}");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let prog = load_program(args.require("program").map_err(anyhow::Error::msg)?)?;
+    let frames = args.get_usize("frames", 8).map_err(anyhow::Error::msg)?;
+    let inputs = synth_frames(&prog, frames);
+    let interp =
+        courier::app::Interpreter::new(prog.clone(), Arc::new(RegistryDispatch::standard()));
+    let t0 = std::time::Instant::now();
+    interp.run_stream(&inputs)?;
+    let dt = t0.elapsed();
+    println!(
+        "original binary {}: {} frames in {:.1} ms ({:.2} ms/frame)",
+        prog.name,
+        frames,
+        dt.as_secs_f64() * 1e3,
+        dt.as_secs_f64() * 1e3 / frames as f64
+    );
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let prog = load_program(args.require("program").map_err(anyhow::Error::msg)?)?;
+    let frames = args.get_usize("frames", 8).map_err(anyhow::Error::msg)?;
+
+    // Steps 1-4: trace + graph + IR
+    let inputs = synth_frames(&prog, cfg.trace_frames.max(1));
+    let trace = trace_program(&prog, &inputs)?;
+    let graph = CallGraph::from_trace(&trace);
+    let ir = Ir::from_graph(&graph)?;
+
+    // Step 8: build
+    let db = HwDatabase::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    let built = Arc::new(courier::pipeline::build(
+        &ir,
+        &db,
+        &rt,
+        &Registry::standard(),
+        cfg,
+    )?);
+    print!("{}", report::render_plan(&built.plan));
+
+    // Step 9: deploy + measure
+    let dep = Deployment::new(prog.clone(), Arc::new(RegistryDispatch::standard()), built.clone());
+    let stream: Vec<Mat> = synth_frames(&prog, frames)
+        .into_iter()
+        .map(|mut v| v.remove(0))
+        .collect();
+    let interp =
+        courier::app::Interpreter::new(prog.clone(), Arc::new(RegistryDispatch::standard()));
+    let t0 = std::time::Instant::now();
+    for f in &stream {
+        interp.run(std::slice::from_ref(f))?;
+    }
+    let orig_ms = t0.elapsed().as_secs_f64() * 1e3 / frames as f64;
+
+    let t0 = std::time::Instant::now();
+    let (_, stats) = dep.run_stream(stream)?;
+    let courier_ms = t0.elapsed().as_secs_f64() * 1e3 / frames as f64;
+    println!(
+        "deployed: {courier_ms:.2} ms/frame vs original {orig_ms:.2} ms/frame -> x{:.2}",
+        orig_ms / courier_ms
+    );
+    if let Some(st) = stats {
+        for i in 0..built.plan.stages.len() {
+            println!("  stage#{i} occupancy {:.0}%", st.stage_occupancy(i) * 100.0);
+        }
+    }
+
+    // Table I against the traced per-function originals
+    let rows: Vec<report::Table1Row> = ir
+        .funcs
+        .iter()
+        .zip(built.plan.stages.iter().flat_map(|s| &s.tasks))
+        .map(|(f, t)| report::Table1Row {
+            symbol: f.symbol.clone(),
+            original_ms: f.mean_ns as f64 / 1e6,
+            courier_ms: t.est_ns as f64 / 1e6,
+            running_on: match t.kind {
+                courier::pipeline::TaskKind::Sw => "CPU".into(),
+                courier::pipeline::TaskKind::Hw { .. } => "FPGA".into(),
+            },
+        })
+        .collect();
+    print!(
+        "{}",
+        report::render_table1(&rows, ir.frame_ns() as f64 / 1e6, courier_ms)
+    );
+    Ok(())
+}
+
+fn cmd_synth(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let size = args.get("size").unwrap_or("1080x1920");
+    let (h, w) = size
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("--size must be HxW"))?;
+    let (h, w): (usize, usize) = (h.parse()?, w.parse()?);
+    let db = HwDatabase::load(&cfg.artifacts_dir)?;
+    let mut reports = Vec::new();
+    for sym in db.enabled_symbols() {
+        let shapes: Vec<Vec<usize>> = vec![vec![h, w, 3], vec![h, w]];
+        for s in &shapes {
+            if let Some(hit) = db.lookup(sym, &[s.as_slice()]) {
+                reports.push(db.synth_report(&hit)?);
+                break;
+            }
+        }
+    }
+    print!("{}", report::render_table2(&reports));
+    println!();
+    print!("{}", report::render_table3(&reports));
+    Ok(())
+}

@@ -1,0 +1,193 @@
+//! Runtime metrics: timers, counters, latency histograms, throughput.
+//!
+//! The pipeline runtime feeds these; `report` renders them.  Everything is
+//! lock-cheap (atomics + a mutexed histogram) so instrumentation does not
+//! perturb the hot loop it measures.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency recorder with percentile queries (exact, stores all samples —
+/// fine for the ≤ tens of thousands of frames our benches push).
+#[derive(Debug, Default)]
+pub struct Latency {
+    samples_ns: Mutex<Vec<u64>>,
+}
+
+impl Latency {
+    /// Record one sample.
+    pub fn record(&self, d: Duration) {
+        self.samples_ns
+            .lock()
+            .expect("latency lock")
+            .push(d.as_nanos() as u64);
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples_ns.lock().expect("latency lock").len()
+    }
+
+    /// Mean in ns (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        let s = self.samples_ns.lock().expect("latency lock");
+        if s.is_empty() {
+            return 0;
+        }
+        s.iter().sum::<u64>() / s.len() as u64
+    }
+
+    /// Percentile (0.0..=1.0) in ns (0 when empty).
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        let mut s = self.samples_ns.lock().expect("latency lock").clone();
+        if s.is_empty() {
+            return 0;
+        }
+        s.sort_unstable();
+        let idx = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        s[idx]
+    }
+
+    /// Max in ns.
+    pub fn max_ns(&self) -> u64 {
+        self.samples_ns
+            .lock()
+            .expect("latency lock")
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Throughput gauge: items over a wall-clock window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    items: Counter,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    /// Start the window now.
+    pub fn new() -> Self {
+        Self { start: Instant::now(), items: Counter::default() }
+    }
+
+    /// Record `n` completed items.
+    pub fn add(&self, n: u64) {
+        self.items.add(n);
+    }
+
+    /// Items per second since construction.
+    pub fn per_sec(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.items.get() as f64 / secs
+    }
+
+    /// Total items.
+    pub fn total(&self) -> u64 {
+        self.items.get()
+    }
+}
+
+/// Per-stage pipeline metrics bundle.
+#[derive(Debug, Default)]
+pub struct StageMetrics {
+    /// Items processed by the stage.
+    pub processed: Counter,
+    /// Stage service time.
+    pub service: Latency,
+    /// Time tokens spent waiting for the stage (backpressure signal).
+    pub wait: Latency,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let l = Latency::default();
+        for ms in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 10] {
+            l.record(Duration::from_millis(ms));
+        }
+        assert_eq!(l.count(), 10);
+        assert!(l.mean_ns() > 5_000_000 && l.mean_ns() < 6_000_000);
+        assert_eq!(l.percentile_ns(0.0), 1_000_000);
+        assert_eq!(l.percentile_ns(1.0), 10_000_000);
+        let p50 = l.percentile_ns(0.5);
+        assert!((5_000_000..=6_000_000).contains(&p50));
+        assert_eq!(l.max_ns(), 10_000_000);
+    }
+
+    #[test]
+    fn latency_empty_is_zero() {
+        let l = Latency::default();
+        assert_eq!(l.mean_ns(), 0);
+        assert_eq!(l.percentile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn time_records() {
+        let l = Latency::default();
+        let v = l.time(|| 42);
+        assert_eq!(v, 42);
+        assert_eq!(l.count(), 1);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let t = Throughput::new();
+        t.add(10);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(t.total(), 10);
+        assert!(t.per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Deployed run: the end-to-end accelerated binary.
+//!
+//! Bundles program + hook table + pipeline.  `run_frame` is the hooked
+//! per-call path (blocking); `run_stream` is the deployed streaming mode
+//! where successive frames overlap inside the token pipeline — the
+//! configuration the paper's Table I measures.
+
+use std::sync::Arc;
+
+use crate::app::{Dispatch, Interpreter, Program};
+use crate::image::Mat;
+use crate::pipeline::{BuiltPipeline, PipelineStats};
+use crate::Result;
+
+use super::hook::{HookTable, Path, Switcher};
+
+/// A deployed, accelerated binary.
+pub struct Deployment {
+    program: Program,
+    pipeline: Arc<BuiltPipeline>,
+    switcher: Arc<Switcher>,
+    hooked: Interpreter,
+}
+
+impl Deployment {
+    /// Hook the whole traced region of `program` (all call sites the
+    /// pipeline covers) and deploy.
+    pub fn new(
+        program: Program,
+        base: Arc<dyn Dispatch>,
+        pipeline: Arc<BuiltPipeline>,
+    ) -> Self {
+        let steps: Vec<usize> = pipeline
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().flat_map(|t| t.covers.clone()))
+            .collect();
+        let switcher = Switcher::new(Path::Offloaded);
+        let hooks = HookTable::new(base, pipeline.clone(), &steps, switcher.clone());
+        let hooked = Interpreter::new(program.clone(), hooks);
+        Self { program, pipeline, switcher, hooked }
+    }
+
+    /// The switcher (flip back to the original path at run time).
+    pub fn switcher(&self) -> &Arc<Switcher> {
+        &self.switcher
+    }
+
+    /// The underlying plan/pipeline.
+    pub fn pipeline(&self) -> &Arc<BuiltPipeline> {
+        &self.pipeline
+    }
+
+    /// Per-call hooked execution (blocking; no cross-frame overlap).
+    pub fn run_frame(&self, inputs: &[Mat]) -> Result<Vec<Mat>> {
+        self.hooked.run(inputs)
+    }
+
+    /// Deployed streaming run: all frames flow through the token pipeline
+    /// with cross-frame overlap.  Only valid when the pipeline covers the
+    /// whole program (the usual case for the traced demos); falls back to
+    /// per-frame hooked execution otherwise.
+    pub fn run_stream(&self, frames: Vec<Mat>) -> Result<(Vec<Mat>, Option<PipelineStats>)> {
+        let covered: usize = self
+            .pipeline
+            .plan
+            .stages
+            .iter()
+            .map(|s| s.tasks.iter().map(|t| t.covers.len()).sum::<usize>())
+            .sum();
+        let whole_program =
+            covered == self.program.steps.len() && self.program.inputs.len() == 1;
+        if whole_program && self.switcher.path() == Path::Offloaded {
+            let (out, stats) = self.pipeline.run(frames)?;
+            return Ok((out, Some(stats)));
+        }
+        let mut outs = Vec::with_capacity(frames.len());
+        for f in frames {
+            outs.push(self.run_frame(&[f])?.remove(0));
+        }
+        Ok((outs, None))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{corner_harris_demo, RegistryDispatch};
+    use crate::config::Config;
+    use crate::hwdb::HwDatabase;
+    use crate::image::synth;
+    use crate::ir::Ir;
+    use crate::runtime::Runtime;
+    use crate::swlib::Registry;
+    use crate::trace::{trace_program, CallGraph};
+
+    fn deployment(h: usize, w: usize) -> Option<Deployment> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let prog = corner_harris_demo(h, w);
+        let t = trace_program(&prog, &[vec![synth::noise_rgb(h, w, 0)]]).unwrap();
+        let ir = Ir::from_graph(&CallGraph::from_trace(&t)).unwrap();
+        let db = HwDatabase::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = Config { artifacts_dir: dir, ..Default::default() };
+        let built =
+            Arc::new(crate::pipeline::build(&ir, &db, &rt, &Registry::standard(), &cfg).unwrap());
+        Some(Deployment::new(prog, Arc::new(RegistryDispatch::standard()), built))
+    }
+
+    #[test]
+    fn stream_uses_token_pipeline_and_matches_original() {
+        let Some(dep) = deployment(48, 64) else { return };
+        let frames: Vec<Mat> = (0..5).map(|s| synth::noise_rgb(48, 64, s)).collect();
+        let (outs, stats) = dep.run_stream(frames.clone()).unwrap();
+        assert!(stats.is_some(), "whole-program deployment must stream");
+        assert_eq!(outs.len(), 5);
+
+        let original = Interpreter::new(
+            corner_harris_demo(48, 64),
+            Arc::new(RegistryDispatch::standard()),
+        );
+        for (i, f) in frames.into_iter().enumerate() {
+            let want = original.run(&[f]).unwrap().remove(0);
+            assert!(outs[i].quantized_close(&want, 1.0, 1e-3), "frame {i}");
+        }
+    }
+
+    #[test]
+    fn switcher_back_to_original_disables_streaming() {
+        let Some(dep) = deployment(48, 64) else { return };
+        dep.switcher().set(Path::Original);
+        let frames: Vec<Mat> = (0..2).map(|s| synth::noise_rgb(48, 64, s)).collect();
+        let (outs, stats) = dep.run_stream(frames).unwrap();
+        assert!(stats.is_none());
+        assert_eq!(outs.len(), 2);
+    }
+}

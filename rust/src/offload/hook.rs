@@ -1,0 +1,185 @@
+//! Hook table + switcher: the injected wrapper.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::app::{CallSite, Dispatch};
+use crate::image::Mat;
+use crate::pipeline::BuiltPipeline;
+use crate::Result;
+
+/// Which path the switcher routes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// Original library functions (RTLD_NEXT).
+    Original,
+    /// The built pipeline.
+    Offloaded,
+}
+
+/// Run-time toggle between the two resident paths.
+#[derive(Debug)]
+pub struct Switcher {
+    offloaded: AtomicBool,
+}
+
+impl Switcher {
+    /// Start on the given path.
+    pub fn new(path: Path) -> Arc<Self> {
+        Arc::new(Self { offloaded: AtomicBool::new(path == Path::Offloaded) })
+    }
+
+    /// Current path.
+    pub fn path(&self) -> Path {
+        if self.offloaded.load(Ordering::Acquire) {
+            Path::Offloaded
+        } else {
+            Path::Original
+        }
+    }
+
+    /// Flip to a path.
+    pub fn set(&self, path: Path) {
+        self.offloaded.store(path == Path::Offloaded, Ordering::Release);
+    }
+}
+
+enum Hook {
+    /// Head of the replaced region: run the pipeline, return its output.
+    PipelineEntry,
+    /// Interior of the region: forward the (already final) data unchanged.
+    PassThrough,
+}
+
+/// The injected wrapper: wraps the base dispatch and re-routes the hooked
+/// call sites.
+pub struct HookTable {
+    base: Arc<dyn Dispatch>,
+    pipeline: Arc<BuiltPipeline>,
+    switcher: Arc<Switcher>,
+    hooks: HashMap<usize, Hook>,
+}
+
+impl HookTable {
+    /// Hook the contiguous call-site region `steps` (in program order),
+    /// replacing it with `pipeline`.
+    pub fn new(
+        base: Arc<dyn Dispatch>,
+        pipeline: Arc<BuiltPipeline>,
+        steps: &[usize],
+        switcher: Arc<Switcher>,
+    ) -> Arc<Self> {
+        let mut hooks = HashMap::new();
+        for (i, &s) in steps.iter().enumerate() {
+            hooks.insert(s, if i == 0 { Hook::PipelineEntry } else { Hook::PassThrough });
+        }
+        Arc::new(Self { base, pipeline, switcher, hooks })
+    }
+
+    /// Call sites currently hooked.
+    pub fn hooked_steps(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.hooks.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The original resolution (`dlsym(RTLD_NEXT, ...)`).
+    pub fn original(&self) -> &Arc<dyn Dispatch> {
+        &self.base
+    }
+}
+
+impl Dispatch for HookTable {
+    fn call(&self, site: CallSite<'_>, args: &[&Mat]) -> Result<Mat> {
+        if self.switcher.path() == Path::Original {
+            return self.base.call(site, args);
+        }
+        match self.hooks.get(&site.step) {
+            Some(Hook::PipelineEntry) => self.pipeline.process_one(args[0].clone()),
+            Some(Hook::PassThrough) => Ok(args[0].clone()),
+            None => self.base.call(site, args),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{corner_harris_demo, Interpreter, RegistryDispatch};
+    use crate::config::Config;
+    use crate::hwdb::HwDatabase;
+    use crate::image::synth;
+    use crate::ir::Ir;
+    use crate::runtime::Runtime;
+    use crate::swlib::Registry;
+    use crate::trace::{trace_program, CallGraph};
+
+    fn built(h: usize, w: usize) -> Option<Arc<BuiltPipeline>> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let prog = corner_harris_demo(h, w);
+        let t = trace_program(&prog, &[vec![synth::noise_rgb(h, w, 0)]]).unwrap();
+        let ir = Ir::from_graph(&CallGraph::from_trace(&t)).unwrap();
+        let db = HwDatabase::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let cfg = Config { artifacts_dir: dir, ..Default::default() };
+        Some(Arc::new(
+            crate::pipeline::build(&ir, &db, &rt, &Registry::standard(), &cfg).unwrap(),
+        ))
+    }
+
+    #[test]
+    fn hooked_binary_matches_original() {
+        let Some(pipeline) = built(48, 64) else { return };
+        let base: Arc<dyn Dispatch> = Arc::new(RegistryDispatch::standard());
+        let switcher = Switcher::new(Path::Offloaded);
+        let hooks = HookTable::new(base.clone(), pipeline, &[0, 1, 2, 3], switcher.clone());
+        assert_eq!(hooks.hooked_steps(), vec![0, 1, 2, 3]);
+
+        let prog = corner_harris_demo(48, 64);
+        let frame = synth::checkerboard(48, 64, 8);
+        let hooked = Interpreter::new(prog.clone(), hooks.clone());
+        let original = Interpreter::new(prog, base);
+        let got = hooked.run(&[frame.clone()]).unwrap().remove(0);
+        let want = original.run(&[frame]).unwrap().remove(0);
+        assert!(got.quantized_close(&want, 1.0, 1e-3), "max diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn switcher_flips_paths_live() {
+        let Some(pipeline) = built(48, 64) else { return };
+        let base: Arc<dyn Dispatch> = Arc::new(RegistryDispatch::standard());
+        let switcher = Switcher::new(Path::Original);
+        let hooks = HookTable::new(base, pipeline, &[0, 1, 2, 3], switcher.clone());
+        let prog = corner_harris_demo(48, 64);
+        let interp = Interpreter::new(prog, hooks);
+        let frame = synth::noise_rgb(48, 64, 5);
+
+        assert_eq!(switcher.path(), Path::Original);
+        let a = interp.run(&[frame.clone()]).unwrap().remove(0);
+        switcher.set(Path::Offloaded);
+        let b = interp.run(&[frame]).unwrap().remove(0);
+        // both paths agree (patch -> unpatch identity)
+        assert!(a.quantized_close(&b, 1.0, 1e-3));
+    }
+
+    #[test]
+    fn unhooked_sites_fall_through() {
+        let Some(pipeline) = built(48, 64) else { return };
+        let base: Arc<dyn Dispatch> = Arc::new(RegistryDispatch::standard());
+        let switcher = Switcher::new(Path::Offloaded);
+        // hook only steps 1..3 (head = cornerHarris): cvtColor still runs
+        // through the original library
+        let hooks = HookTable::new(base, pipeline, &[1, 2, 3], switcher);
+        // the pipeline built above expects the *rgb frame* though; so this
+        // partial-hook pipeline is semantically wrong for real use — we
+        // only assert the dispatch plumbing here.
+        let site_head = crate::app::CallSite { step: 0, symbol: "cv::cvtColor" };
+        let img = synth::noise_rgb(48, 64, 1);
+        let out = hooks.call(site_head, &[&img]).unwrap();
+        assert_eq!(out.shape(), &[48, 64]); // original cvtColor ran
+    }
+}

@@ -1,0 +1,29 @@
+//! Function Off-loader (paper Step 9): splice the generated pipeline into
+//! the running binary.
+//!
+//! The paper uses DLL injection: a wrapper shared object rebinds the
+//! target's library symbols, keeps the originals reachable via
+//! `dlsym(RTLD_NEXT, ...)`, and an *Off-loader Switcher* selects between
+//! the original path and the off-loaded one at run time.  Our substrate's
+//! dynamic-linker boundary is the interpreter's [`crate::app::Dispatch`]; the
+//! [`HookTable`] is the injected wrapper:
+//!
+//! * the **head** call site of the replaced region runs the whole built
+//!   pipeline (blocking, single-token) and returns the region's final
+//!   output;
+//! * the remaining call sites of the region become **pass-throughs** that
+//!   forward the data unchanged (the original flow before and after the
+//!   region is untouched);
+//! * the [`Switcher`] flips between `Original` and `Offloaded` without
+//!   re-linking — both paths stay resident, as in the paper.
+//!
+//! Blocking per-call replacement cannot overlap *across* frames (the
+//! binary hands us one frame at a time); the [`Deployment`] runner is the
+//! deployed-run mode: it feeds whole frame streams through the token
+//! pipeline, which is where the paper's ×15 comes from.
+
+mod deploy;
+mod hook;
+
+pub use deploy::Deployment;
+pub use hook::{HookTable, Path as OffloadPath, Switcher};

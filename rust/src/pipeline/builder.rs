@@ -1,0 +1,408 @@
+//! The Pipeline Generator: IR + database + config → a runnable mixed
+//! software/hardware pipeline (paper Fig. 3, Step 8).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::hwdb::HwDatabase;
+use crate::image::Mat;
+use crate::ir::{Ir, Placement};
+use crate::runtime::{Executable, Runtime};
+use crate::swlib::Registry;
+use crate::{CourierError, Result};
+
+use super::partition::partition;
+use super::plan::{StagePlan, StageSpec, TaskKind, TaskSpec};
+use super::tbb::{FilterMode, PipelineStats, StageFilter, TokenPipeline};
+
+/// Cost of staging one byte across the accelerator boundary, ns (the AXI
+/// DMA analogue folded into hardware-task estimates).
+const STAGING_NS_PER_BYTE: f64 = 1.0;
+
+/// A generated pipeline: declarative plan + live runtime + the rendered
+/// control program.
+pub struct BuiltPipeline {
+    /// The declarative plan (for reports and codegen).
+    pub plan: StagePlan,
+    /// The live token pipeline.
+    pub pipeline: TokenPipeline,
+    /// The generated control-program listing (paper's Jinja2 output).
+    pub control_program: String,
+}
+
+impl BuiltPipeline {
+    /// Run a frame stream with cross-frame overlap (deployed streaming).
+    pub fn run(&self, frames: Vec<Mat>) -> Result<(Vec<Mat>, PipelineStats)> {
+        self.pipeline.run(frames)
+    }
+
+    /// Blocking single-frame path (the off-load wrapper's synchronous
+    /// contract).
+    pub fn process_one(&self, frame: Mat) -> Result<Mat> {
+        self.pipeline.process_one(frame)
+    }
+}
+
+/// One placed task inside a stage filter.
+enum BoundTask {
+    Sw(crate::swlib::FuncEntry),
+    Hw(Arc<Executable>),
+}
+
+/// Stage filter executing its tasks back to back.
+struct BuiltStage {
+    label: String,
+    mode: FilterMode,
+    tasks: Vec<BoundTask>,
+}
+
+impl StageFilter for BuiltStage {
+    fn mode(&self) -> FilterMode {
+        self.mode
+    }
+
+    fn apply(&self, input: Mat) -> Result<Mat> {
+        let mut cur = input;
+        for t in &self.tasks {
+            cur = match t {
+                BoundTask::Sw(entry) => (entry.f)(&[&cur])?,
+                // move the frame into the fabric request: no memcpy
+                BoundTask::Hw(exe) => exe.run_owned(vec![cur])?,
+            };
+        }
+        Ok(cur)
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Resolve placements, balance stages, load artifacts, assemble the
+/// pipeline.
+pub fn build(
+    ir: &Ir,
+    db: &HwDatabase,
+    rt: &Runtime,
+    registry: &Registry,
+    cfg: &Config,
+) -> Result<BuiltPipeline> {
+    // -- input shape per IR function (linear chains only) ------------------
+    let input_shapes = chain_input_shapes(ir)?;
+
+    // -- placement + per-task estimates ------------------------------------
+    let mut tasks: Vec<TaskSpec> = Vec::with_capacity(ir.funcs.len());
+    for (i, f) in ir.funcs.iter().enumerate() {
+        let shape = &input_shapes[i];
+        let hit = if cfg.cpu_only || f.placement == Placement::Cpu {
+            None
+        } else if cfg.include_disabled_modules {
+            db.lookup_any(&f.symbol, &[shape.as_slice()])
+        } else {
+            db.lookup(&f.symbol, &[shape.as_slice()])
+        };
+        match (hit, f.placement) {
+            (Some(hit), _) => {
+                let cycles = hit.variant.est_latency_cycles;
+                let ms = cycles as f64 / (db.fabric_clock_mhz() * 1e3);
+                let staging_bytes: usize = hit
+                    .variant
+                    .inputs
+                    .iter()
+                    .chain(&hit.variant.outputs)
+                    .map(|t| t.shape.iter().product::<usize>() * 4)
+                    .sum();
+                let est_ns = (ms * 1e6 + staging_bytes as f64 * STAGING_NS_PER_BYTE) as u64;
+                tasks.push(TaskSpec {
+                    covers: f.covers.clone(),
+                    symbol: f.symbol.clone(),
+                    kind: TaskKind::Hw {
+                        module: hit.module.name.clone(),
+                        artifact: hit.variant.artifact.clone(),
+                    },
+                    est_ns,
+                });
+            }
+            (None, Placement::Hw) => {
+                return Err(CourierError::HwDb(format!(
+                    "function {} pinned to hardware but no enabled module matches shape {shape:?}",
+                    f.symbol
+                )));
+            }
+            (None, _) => {
+                if !registry.contains(&f.symbol) {
+                    return Err(CourierError::UnknownSymbol(format!(
+                        "{} has neither a hardware module nor a CPU implementation",
+                        f.symbol
+                    )));
+                }
+                tasks.push(TaskSpec {
+                    covers: f.covers.clone(),
+                    symbol: f.symbol.clone(),
+                    kind: TaskKind::Sw,
+                    est_ns: f.mean_ns,
+                });
+            }
+        }
+    }
+
+    // -- balance ------------------------------------------------------------
+    let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
+    let groups = partition(&times, cfg.threads, cfg.policy);
+    let n_stages = groups.len();
+    let stages: Vec<StageSpec> = groups
+        .iter()
+        .enumerate()
+        .map(|(idx, r)| StageSpec {
+            index: idx,
+            tasks: tasks[r.clone()].to_vec(),
+            serial: idx == 0 || idx == n_stages - 1,
+        })
+        .collect();
+    let plan = StagePlan {
+        program: ir.program.clone(),
+        threads: cfg.threads,
+        tokens: cfg.tokens,
+        stages,
+    };
+
+    instantiate(&plan, db.dir(), rt, registry, cfg)
+}
+
+/// Instantiate a (possibly hand-edited) plan into a live pipeline.
+pub fn instantiate(
+    plan: &StagePlan,
+    artifact_dir: &Path,
+    rt: &Runtime,
+    registry: &Registry,
+    cfg: &Config,
+) -> Result<BuiltPipeline> {
+    // load each artifact once ("place the module on the fabric")
+    let mut loaded: HashMap<&str, Arc<Executable>> = HashMap::new();
+    for stage in &plan.stages {
+        for task in &stage.tasks {
+            if let TaskKind::Hw { artifact, .. } = &task.kind {
+                if !loaded.contains_key(artifact.as_str()) {
+                    let exe = rt.load_hlo_text(&artifact_dir.join(artifact))?;
+                    loaded.insert(artifact, Arc::new(exe));
+                }
+            }
+        }
+    }
+
+    let mut filters: Vec<Box<dyn StageFilter>> = Vec::with_capacity(plan.stages.len());
+    for stage in &plan.stages {
+        let mut bound = Vec::with_capacity(stage.tasks.len());
+        for task in &stage.tasks {
+            match &task.kind {
+                TaskKind::Sw => bound.push(BoundTask::Sw(registry.resolve(&task.symbol)?.clone())),
+                TaskKind::Hw { artifact, .. } => {
+                    bound.push(BoundTask::Hw(loaded[artifact.as_str()].clone()))
+                }
+            }
+        }
+        let label = stage
+            .tasks
+            .iter()
+            .map(|t| t.symbol.as_str())
+            .collect::<Vec<_>>()
+            .join(" ; ");
+        filters.push(Box::new(BuiltStage {
+            label,
+            mode: if stage.serial {
+                FilterMode::SerialInOrder
+            } else {
+                FilterMode::Parallel
+            },
+            tasks: bound,
+        }));
+    }
+
+    let pipeline = TokenPipeline::new(filters, cfg.threads, cfg.tokens)?;
+    let control_program = super::codegen::render_control_program(plan);
+    Ok(BuiltPipeline { plan: plan.clone(), pipeline, control_program })
+}
+
+/// For a linear chain, the input shape each IR function consumes.
+fn chain_input_shapes(ir: &Ir) -> Result<Vec<Vec<usize>>> {
+    let mut shapes = Vec::with_capacity(ir.funcs.len());
+    for f in &ir.funcs {
+        let first_step = *f.covers.first().ok_or_else(|| {
+            CourierError::Other(format!("IR function {} covers nothing", f.symbol))
+        })?;
+        let shape = ir
+            .data
+            .iter()
+            .find(|d| d.consumers.contains(&first_step))
+            .map(|d| d.shape.clone())
+            .ok_or_else(|| {
+                CourierError::Other(format!(
+                    "no data node feeds {} (step {first_step}); non-linear flow?",
+                    f.symbol
+                ))
+            })?;
+        shapes.push(shape);
+    }
+    Ok(shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::corner_harris_demo;
+    use crate::image::synth;
+    use crate::trace::{trace_program, CallGraph};
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn demo_ir(h: usize, w: usize) -> Ir {
+        let prog = corner_harris_demo(h, w);
+        let t = trace_program(&prog, &[vec![synth::noise_rgb(h, w, 0)]]).unwrap();
+        Ir::from_graph(&CallGraph::from_trace(&t)).unwrap()
+    }
+
+    #[test]
+    fn builds_the_case_study_pipeline() {
+        let Some(dir) = artifacts_dir() else { return };
+        let db = HwDatabase::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let registry = Registry::standard();
+        let cfg = Config { artifacts_dir: dir, ..Default::default() };
+        let ir = demo_ir(48, 64);
+        let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+
+        // paper placement: 3 hw (cvt, harris, csa) + 1 sw (normalize)
+        assert_eq!(built.plan.placement_counts(), (3, 1));
+        // head/tail serial, middles parallel
+        let n = built.plan.stages.len();
+        assert!(built.plan.stages[0].serial);
+        assert!(built.plan.stages[n - 1].serial);
+
+        // deployed output must match the original binary numerically
+        let frame = synth::checkerboard(48, 64, 8);
+        let got = built.process_one(frame.clone()).unwrap();
+        let interp = crate::app::Interpreter::new(
+            corner_harris_demo(48, 64),
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        let want = interp.run(&[frame]).unwrap().remove(0);
+        assert!(
+            got.quantized_close(&want, 1.0, 1e-3),
+            "pipeline diverges from binary: max diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn streaming_run_matches_blocking() {
+        let Some(dir) = artifacts_dir() else { return };
+        let db = HwDatabase::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let registry = Registry::standard();
+        let cfg = Config { artifacts_dir: dir, ..Default::default() };
+        let built = build(&demo_ir(48, 64), &db, &rt, &registry, &cfg).unwrap();
+        let frames: Vec<Mat> = (0..6).map(|s| synth::noise_rgb(48, 64, s)).collect();
+        let (stream_out, stats) = built.run(frames.clone()).unwrap();
+        assert_eq!(stream_out.len(), 6);
+        assert_eq!(stats.frames, 6);
+        for (i, f) in frames.into_iter().enumerate() {
+            let single = built.process_one(f).unwrap();
+            assert!(single.quantized_close(&stream_out[i], 1.0, 1e-3), "frame {i} mismatch");
+        }
+    }
+
+    #[test]
+    fn cpu_only_places_everything_on_sw() {
+        let Some(dir) = artifacts_dir() else { return };
+        let db = HwDatabase::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let registry = Registry::standard();
+        let cfg = Config { artifacts_dir: dir, cpu_only: true, ..Default::default() };
+        let built = build(&demo_ir(48, 64), &db, &rt, &registry, &cfg).unwrap();
+        assert_eq!(built.plan.placement_counts().0, 0);
+    }
+
+    #[test]
+    fn hw_pin_without_module_fails() {
+        let Some(dir) = artifacts_dir() else { return };
+        let db = HwDatabase::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let registry = Registry::standard();
+        let cfg = Config { artifacts_dir: dir, ..Default::default() };
+        let mut ir = demo_ir(48, 64);
+        ir.designate(2, Placement::Hw).unwrap(); // normalize: DB-disabled
+        let err = match build(&ir, &db, &rt, &registry, &cfg) {
+            Err(e) => e,
+            Ok(_) => panic!("hw-pinned normalize must fail to build"),
+        };
+        assert!(err.to_string().contains("pinned to hardware"));
+    }
+
+    #[test]
+    fn include_disabled_enables_normalize_module() {
+        let Some(dir) = artifacts_dir() else { return };
+        let db = HwDatabase::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let registry = Registry::standard();
+        let cfg = Config {
+            artifacts_dir: dir,
+            include_disabled_modules: true,
+            ..Default::default()
+        };
+        let built = build(&demo_ir(48, 64), &db, &rt, &registry, &cfg).unwrap();
+        assert_eq!(built.plan.placement_counts(), (4, 0));
+    }
+
+    #[test]
+    fn fused_ir_uses_fused_module() {
+        let Some(dir) = artifacts_dir() else { return };
+        let db = HwDatabase::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let registry = Registry::standard();
+        let cfg = Config {
+            artifacts_dir: dir,
+            include_disabled_modules: true,
+            ..Default::default()
+        };
+        let mut ir = demo_ir(48, 64);
+        ir.fuse(0, 1).unwrap();
+        let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+        let modules: Vec<String> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| &s.tasks)
+            .filter_map(|t| match &t.kind {
+                TaskKind::Hw { module, .. } => Some(module.clone()),
+                TaskKind::Sw => None,
+            })
+            .collect();
+        assert!(modules.contains(&"hls_cvt_harris_fused".to_string()), "{modules:?}");
+        // and it still computes the right thing
+        let frame = synth::checkerboard(48, 64, 8);
+        let got = built.process_one(frame.clone()).unwrap();
+        let interp = crate::app::Interpreter::new(
+            corner_harris_demo(48, 64),
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        let want = interp.run(&[frame]).unwrap().remove(0);
+        assert!(got.quantized_close(&want, 1.0, 1e-3));
+    }
+
+    #[test]
+    fn control_program_is_rendered() {
+        let Some(dir) = artifacts_dir() else { return };
+        let db = HwDatabase::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let registry = Registry::standard();
+        let cfg = Config { artifacts_dir: dir, ..Default::default() };
+        let built = build(&demo_ir(48, 64), &db, &rt, &registry, &cfg).unwrap();
+        assert!(built.control_program.contains("serial_in_order"));
+        assert!(built.control_program.contains("hls_corner_harris"));
+    }
+}

@@ -1,0 +1,28 @@
+//! The Pipeline Generator — the paper's core contribution (Sect. III).
+//!
+//! Given the edited IR, the hardware database and a config, the builder
+//! 1. resolves each function's **placement** (DB hit → hardware module,
+//!    miss → CPU software function),
+//! 2. **partitions** the flow into balanced stages using the paper's
+//!    policy ("divide total processing time by threads+1 and cut at the
+//!    closest sub-totals"),
+//! 3. instantiates a **token-based pipeline runtime** (the
+//!    `tbb::pipeline` analogue: `serial_in_order` head/tail filters,
+//!    `parallel` middle filters, a bounded token pool for double
+//!    buffering), and
+//! 4. emits the **control program source** as a build artifact (the
+//!    paper's Jinja2 code-generation step).
+
+mod builder;
+mod codegen;
+mod partition;
+mod plan;
+mod sim;
+mod tbb;
+
+pub use builder::{build, instantiate, BuiltPipeline};
+pub use codegen::render_control_program;
+pub use partition::{bottleneck, optimal, paper_policy, partition, Partition};
+pub use plan::{StagePlan, StageSpec, TaskKind, TaskSpec};
+pub use sim::{paper_table1_plan, simulate, SimResult};
+pub use tbb::{FilterMode, FnFilter, PipelineStats, StageFilter, StageSpan, TokenPipeline};

@@ -1,0 +1,283 @@
+//! Stage partitioning policies.
+//!
+//! All policies produce contiguous, order-preserving, non-empty groups
+//! covering every function exactly once (property-checked invariants).
+
+use crate::config::PartitionPolicy;
+
+/// A partition: contiguous index ranges `[start, end)` over the task list.
+pub type Partition = Vec<std::ops::Range<usize>>;
+
+/// Partition `times` (per-function estimated ns) for `threads` workers
+/// under `policy`.
+pub fn partition(times: &[u64], threads: usize, policy: PartitionPolicy) -> Partition {
+    if times.is_empty() {
+        return Vec::new();
+    }
+    match policy {
+        PartitionPolicy::Paper => paper_policy(times, threads),
+        PartitionPolicy::Optimal => optimal(times, threads + 1),
+        PartitionPolicy::PerFunction => (0..times.len()).map(|i| i..i + 1).collect(),
+        PartitionPolicy::Single => vec![0..times.len()],
+    }
+}
+
+/// The paper's heuristic (Sect. III-B-3):
+///
+/// > "Pipeline Generator divides total processing time by the number of
+/// > thread plus one and searches the closest sub-total of processing
+/// > time of functions."
+///
+/// Cut boundaries are placed where the running prefix sum is closest to
+/// `k * total / (threads + 1)` for `k = 1 .. threads`.
+pub fn paper_policy(times: &[u64], threads: usize) -> Partition {
+    let n = times.len();
+    let stages = (threads + 1).min(n).max(1);
+    if stages <= 1 {
+        return vec![0..n];
+    }
+    let total: u64 = times.iter().sum();
+    let target = total as f64 / stages as f64;
+
+    // prefix[i] = sum(times[..i])
+    let mut prefix = Vec::with_capacity(n + 1);
+    let mut acc = 0u64;
+    prefix.push(0u64);
+    for &t in times {
+        acc += t;
+        prefix.push(acc);
+    }
+
+    // For each interior boundary k, pick the cut index whose prefix sum is
+    // closest to k*target; cuts must stay strictly increasing so every
+    // stage is non-empty.
+    let mut cuts = Vec::with_capacity(stages - 1);
+    let mut lo = 1usize; // minimum cut position (after at least one func)
+    for k in 1..stages {
+        let goal = target * k as f64;
+        let hi = n - (stages - k); // leave room for remaining stages
+        let mut best = lo;
+        let mut best_d = f64::INFINITY;
+        for cut in lo..=hi {
+            let d = (prefix[cut] as f64 - goal).abs();
+            if d < best_d {
+                best_d = d;
+                best = cut;
+            }
+        }
+        cuts.push(best);
+        lo = best + 1;
+    }
+
+    let mut out = Vec::with_capacity(stages);
+    let mut start = 0usize;
+    for cut in cuts {
+        out.push(start..cut);
+        start = cut;
+    }
+    out.push(start..n);
+    out
+}
+
+/// DP-optimal contiguous partition into at most `stages` groups,
+/// minimizing the bottleneck (max group sum) — the yardstick the paper's
+/// heuristic is benchmarked against in ablation B.
+pub fn optimal(times: &[u64], stages: usize) -> Partition {
+    let n = times.len();
+    let stages = stages.min(n).max(1);
+    let mut prefix = vec![0u64; n + 1];
+    for i in 0..n {
+        prefix[i + 1] = prefix[i] + times[i];
+    }
+    let sum = |a: usize, b: usize| prefix[b] - prefix[a]; // [a, b)
+
+    // dp[s][i] = min over j of max(dp[s-1][j], sum(j..i)) for first i funcs
+    // in s stages.
+    let mut dp = vec![vec![u64::MAX; n + 1]; stages + 1];
+    let mut cut = vec![vec![0usize; n + 1]; stages + 1];
+    dp[0][0] = 0;
+    for s in 1..=stages {
+        for i in s..=n {
+            for j in (s - 1)..i {
+                if dp[s - 1][j] == u64::MAX {
+                    continue;
+                }
+                let cost = dp[s - 1][j].max(sum(j, i));
+                if cost < dp[s][i] {
+                    dp[s][i] = cost;
+                    cut[s][i] = j;
+                }
+            }
+        }
+    }
+    // best stage count ≤ stages (more stages never hurts bottleneck, but
+    // pick the smallest achieving the best cost to avoid empty-ish stages)
+    let mut best_s = 1;
+    for s in 1..=stages {
+        if dp[s][n] < dp[best_s][n] {
+            best_s = s;
+        }
+    }
+    let mut bounds = vec![n];
+    let mut s = best_s;
+    let mut i = n;
+    while s > 0 {
+        i = cut[s][i];
+        bounds.push(i);
+        s -= 1;
+    }
+    bounds.reverse();
+    bounds.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+/// Bottleneck (max stage sum) of a partition — the pipeline's steady-state
+/// frame interval.
+pub fn bottleneck(times: &[u64], p: &Partition) -> u64 {
+    p.iter()
+        .map(|r| times[r.clone()].iter().sum::<u64>())
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_invariants(times: &[u64], p: &Partition) {
+        assert!(!p.is_empty());
+        assert_eq!(p[0].start, 0);
+        assert_eq!(p.last().unwrap().end, times.len());
+        for w in p.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "not contiguous: {p:?}");
+        }
+        for r in p {
+            assert!(r.start < r.end, "empty stage: {p:?}");
+        }
+    }
+
+    #[test]
+    fn paper_policy_case_study_shape() {
+        // Table I original times (ms -> us to keep integers):
+        // cvtColor 46.3, cornerHarris 999.0, normalize 108.0, csa 217.8
+        let times = [46_300u64, 999_000, 108_000, 217_800];
+        let p = paper_policy(&times, 2);
+        check_invariants(&times, &p);
+        // threads + 1 = 3 stages; harris dominates so it must sit alone
+        assert_eq!(p.len(), 3);
+        let harris_stage = p.iter().find(|r| r.contains(&1)).unwrap();
+        assert_eq!(harris_stage.clone().count(), 1, "{p:?}");
+    }
+
+    #[test]
+    fn paper_policy_post_offload_times() {
+        // Courier column of Table I: hw 39.8, hw 13.6, sw 80.2, hw 13.2
+        let times = [39_800u64, 13_600, 80_200, 13_200];
+        let p = paper_policy(&times, 2);
+        check_invariants(&times, &p);
+        assert_eq!(p.len(), 3);
+        // normalize (index 2, the most expensive) should not share with
+        // everything else
+        assert!(bottleneck(&times, &p) < times.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn single_and_per_function() {
+        let times = [5u64, 6, 7];
+        assert_eq!(partition(&times, 2, crate::config::PartitionPolicy::Single), vec![0..3]);
+        assert_eq!(
+            partition(&times, 2, crate::config::PartitionPolicy::PerFunction),
+            vec![0..1, 1..2, 2..3]
+        );
+    }
+
+    #[test]
+    fn optimal_beats_or_ties_everything() {
+        let times = [10u64, 90, 40, 40, 20];
+        let opt = optimal(&times, 3);
+        check_invariants(&times, &opt);
+        let paper = paper_policy(&times, 2);
+        assert!(bottleneck(&times, &opt) <= bottleneck(&times, &paper));
+        // contiguous 3-stage optimum: {10,90} {40,40} {20} -> 100
+        assert_eq!(bottleneck(&times, &opt), 100);
+    }
+
+    #[test]
+    fn more_stages_than_functions_degrades_gracefully() {
+        let times = [3u64, 4];
+        let p = paper_policy(&times, 7);
+        check_invariants(&times, &p);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(partition(&[], 2, crate::config::PartitionPolicy::Paper).is_empty());
+    }
+
+    use crate::util::testing::{forall, vec_u64};
+
+    #[test]
+    fn prop_paper_invariants() {
+        forall(
+            200,
+            |rng| (vec_u64(rng, 40, 1_000_000), rng.below(8)),
+            |(times, threads)| {
+                let p = paper_policy(times, *threads);
+                check_invariants(times, &p);
+                p.len() <= threads + 1
+            },
+        );
+    }
+
+    #[test]
+    fn prop_optimal_invariants() {
+        forall(
+            100,
+            |rng| (vec_u64(rng, 24, 1_000_000), 1 + rng.below(7)),
+            |(times, stages)| {
+                let p = optimal(times, *stages);
+                check_invariants(times, &p);
+                p.len() <= *stages
+            },
+        );
+    }
+
+    #[test]
+    fn prop_optimal_is_lower_bound() {
+        forall(
+            200,
+            |rng| (vec_u64(rng, 20, 100_000), rng.below(6)),
+            |(times, threads)| {
+                let paper = paper_policy(times, *threads);
+                let opt = optimal(times, threads + 1);
+                let max_single = *times.iter().max().unwrap();
+                bottleneck(times, &opt) <= bottleneck(times, &paper)
+                    && bottleneck(times, &opt) >= max_single
+            },
+        );
+    }
+
+    #[test]
+    fn prop_all_policies_cover() {
+        forall(
+            150,
+            |rng| (vec_u64(rng, 16, 1000), rng.below(5)),
+            |(times, threads)| {
+                for policy in [
+                    crate::config::PartitionPolicy::Paper,
+                    crate::config::PartitionPolicy::Optimal,
+                    crate::config::PartitionPolicy::PerFunction,
+                    crate::config::PartitionPolicy::Single,
+                ] {
+                    let p = partition(times, *threads, policy);
+                    check_invariants(times, &p);
+                    let covered: usize = p.iter().map(|r| r.clone().count()).sum();
+                    if covered != times.len() {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}

@@ -1,0 +1,287 @@
+//! Stage plans: the declarative output of the Pipeline Generator before
+//! any thread or executable is created (what `codegen` renders and
+//! `builder` instantiates).
+
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// Where one task runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskKind {
+    /// CPU software function resolved through the registry (DB miss or
+    /// user-pinned CPU).
+    Sw,
+    /// Hardware module: artifact loaded on the fabric.
+    Hw {
+        /// Module name in the database (e.g. `hls_corner_harris`).
+        module: String,
+        /// Artifact filename.
+        artifact: String,
+    },
+}
+
+/// One task: a library function placed on CPU or fabric.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskSpec {
+    /// Original call-site step(s) this task covers.
+    pub covers: Vec<usize>,
+    /// Library symbol.
+    pub symbol: String,
+    /// Placement.
+    pub kind: TaskKind,
+    /// Estimated per-frame time, ns (traced for SW, synthesis estimate for
+    /// HW) — the number the partition policy consumed.
+    pub est_ns: u64,
+}
+
+/// One pipeline stage: consecutive tasks executed by one filter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSpec {
+    /// Stage index.
+    pub index: usize,
+    /// Tasks in order.
+    pub tasks: Vec<TaskSpec>,
+    /// `serial_in_order` (head/tail) or `parallel` (middle) — the paper's
+    /// TBB filter modes.
+    pub serial: bool,
+}
+
+impl StageSpec {
+    /// Estimated stage service time, ns.
+    pub fn est_ns(&self) -> u64 {
+        self.tasks.iter().map(|t| t.est_ns).sum()
+    }
+
+    /// True iff any task runs on the fabric.
+    pub fn has_hw(&self) -> bool {
+        self.tasks.iter().any(|t| matches!(t.kind, TaskKind::Hw { .. }))
+    }
+}
+
+/// The full plan for one program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StagePlan {
+    /// Program name.
+    pub program: String,
+    /// Worker threads the plan was balanced for.
+    pub threads: usize,
+    /// Token-pool depth.
+    pub tokens: usize,
+    /// Stages in order.
+    pub stages: Vec<StageSpec>,
+}
+
+impl StagePlan {
+    /// Estimated steady-state frame interval = bottleneck stage, ns.
+    pub fn bottleneck_ns(&self) -> u64 {
+        self.stages.iter().map(StageSpec::est_ns).max().unwrap_or(0)
+    }
+
+    /// Estimated single-frame latency = sum of stages, ns.
+    pub fn latency_ns(&self) -> u64 {
+        self.stages.iter().map(StageSpec::est_ns).sum()
+    }
+
+    /// Estimated pipelined speed-up over the sequential original.
+    pub fn est_speedup(&self, original_frame_ns: u64) -> f64 {
+        let b = self.bottleneck_ns();
+        if b == 0 {
+            return 1.0;
+        }
+        original_frame_ns as f64 / b as f64
+    }
+
+    /// Count of (hw, sw) tasks.
+    pub fn placement_counts(&self) -> (usize, usize) {
+        let mut hw = 0;
+        let mut sw = 0;
+        for s in &self.stages {
+            for t in &s.tasks {
+                match t.kind {
+                    TaskKind::Hw { .. } => hw += 1,
+                    TaskKind::Sw => sw += 1,
+                }
+            }
+        }
+        (hw, sw)
+    }
+
+    /// Serialize for `courier plan`.
+    pub fn to_json(&self) -> String {
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                let tasks = s
+                    .tasks
+                    .iter()
+                    .map(|t| {
+                        let kind = match &t.kind {
+                            TaskKind::Sw => Json::obj(vec![("type", Json::Str("sw".into()))]),
+                            TaskKind::Hw { module, artifact } => Json::obj(vec![
+                                ("type", Json::Str("hw".into())),
+                                ("module", Json::Str(module.clone())),
+                                ("artifact", Json::Str(artifact.clone())),
+                            ]),
+                        };
+                        Json::obj(vec![
+                            ("covers", Json::from_usizes(&t.covers)),
+                            ("symbol", Json::Str(t.symbol.clone())),
+                            ("kind", kind),
+                            ("est_ns", Json::Num(t.est_ns as f64)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("index", Json::Num(s.index as f64)),
+                    ("serial", Json::Bool(s.serial)),
+                    ("tasks", Json::Arr(tasks)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("program", Json::Str(self.program.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("stages", Json::Arr(stages)),
+        ])
+        .to_string_pretty()
+    }
+
+    /// Parse a plan back (hand-edited plans for `courier build --plan`).
+    pub fn from_json(s: &str) -> Result<Self> {
+        let v = json::parse(s)?;
+        let stages = v
+            .req("stages")?
+            .as_arr()?
+            .iter()
+            .map(|sv| {
+                let tasks = sv
+                    .req("tasks")?
+                    .as_arr()?
+                    .iter()
+                    .map(|tv| {
+                        let kv = tv.req("kind")?;
+                        let kind = match kv.req("type")?.as_str()? {
+                            "sw" => TaskKind::Sw,
+                            "hw" => TaskKind::Hw {
+                                module: kv.req("module")?.as_str()?.to_string(),
+                                artifact: kv.req("artifact")?.as_str()?.to_string(),
+                            },
+                            other => {
+                                return Err(crate::CourierError::Json(format!(
+                                    "bad task kind {other:?}"
+                                )))
+                            }
+                        };
+                        Ok(TaskSpec {
+                            covers: tv.req("covers")?.as_usize_vec()?,
+                            symbol: tv.req("symbol")?.as_str()?.to_string(),
+                            kind,
+                            est_ns: tv.req("est_ns")?.as_u64()?,
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                Ok(StageSpec {
+                    index: sv.req("index")?.as_usize()?,
+                    serial: sv.req("serial")?.as_bool()?,
+                    tasks,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(StagePlan {
+            program: v.req("program")?.as_str()?.to_string(),
+            threads: v.req("threads")?.as_usize()?,
+            tokens: v.req("tokens")?.as_usize()?,
+            stages,
+        })
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn demo_plan() -> StagePlan {
+        StagePlan {
+            program: "cornerHarris_Demo".into(),
+            threads: 2,
+            tokens: 4,
+            stages: vec![
+                StageSpec {
+                    index: 0,
+                    serial: true,
+                    tasks: vec![TaskSpec {
+                        covers: vec![0],
+                        symbol: "cv::cvtColor".into(),
+                        kind: TaskKind::Hw {
+                            module: "hls_cvt_color".into(),
+                            artifact: "hls_cvt_color__48x64.hlo.txt".into(),
+                        },
+                        est_ns: 39_800_000,
+                    }],
+                },
+                StageSpec {
+                    index: 1,
+                    serial: false,
+                    tasks: vec![TaskSpec {
+                        covers: vec![1],
+                        symbol: "cv::cornerHarris".into(),
+                        kind: TaskKind::Hw {
+                            module: "hls_corner_harris".into(),
+                            artifact: "hls_corner_harris__48x64.hlo.txt".into(),
+                        },
+                        est_ns: 13_600_000,
+                    }],
+                },
+                StageSpec {
+                    index: 2,
+                    serial: true,
+                    tasks: vec![
+                        TaskSpec {
+                            covers: vec![2],
+                            symbol: "cv::normalize".into(),
+                            kind: TaskKind::Sw,
+                            est_ns: 80_200_000,
+                        },
+                        TaskSpec {
+                            covers: vec![3],
+                            symbol: "cv::convertScaleAbs".into(),
+                            kind: TaskKind::Hw {
+                                module: "hls_convert_scale_abs".into(),
+                                artifact: "hls_convert_scale_abs__48x64.hlo.txt".into(),
+                            },
+                            est_ns: 13_200_000,
+                        },
+                    ],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn plan_metrics() {
+        let p = demo_plan();
+        assert_eq!(p.bottleneck_ns(), 93_400_000);
+        assert_eq!(p.latency_ns(), 146_800_000);
+        assert_eq!(p.placement_counts(), (3, 1));
+        let su = p.est_speedup(1_371_100_000);
+        assert!(su > 14.0 && su < 15.0, "{su}");
+    }
+
+    #[test]
+    fn stage_flags() {
+        let p = demo_plan();
+        assert!(p.stages[0].has_hw());
+        assert!(p.stages[2].has_hw());
+        assert!(p.stages[0].serial && !p.stages[1].serial && p.stages[2].serial);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = demo_plan();
+        let s = p.to_json();
+        let back = StagePlan::from_json(&s).unwrap();
+        assert_eq!(back, p);
+    }
+}

@@ -1,0 +1,558 @@
+//! Token-based pipeline runtime — the `tbb::pipeline` analogue.
+//!
+//! Semantics reproduced from the paper (Sect. III-B-3):
+//! * a bounded **token pool** limits in-flight frames (double buffering:
+//!   `tokens >= 2` lets stage *k* take frame *n+1* while stage *k+1* still
+//!   chews on frame *n*);
+//! * **`serial_in_order`** filters (head and tail) process one token at a
+//!   time in arrival order;
+//! * **`parallel`** filters (middle) may process any ready token on any
+//!   idle worker — "stages which run in parallel can be dynamically
+//!   changed since an idle thread is randomly chosen";
+//! * unlike a rigid hardware pipeline, a stage may start its next token
+//!   before the downstream stage finished the previous one — the
+//!   stall-reduction property ablation C measures.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::image::Mat;
+use crate::{CourierError, Result};
+
+/// Filter scheduling mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FilterMode {
+    /// One token at a time, in input order (paper: first + last stages).
+    SerialInOrder,
+    /// Any ready token on any idle worker (paper: middle stages).
+    Parallel,
+}
+
+/// One pipeline stage body.
+pub trait StageFilter: Send + Sync {
+    /// Scheduling mode.
+    fn mode(&self) -> FilterMode;
+    /// Process one token.
+    fn apply(&self, input: Mat) -> Result<Mat>;
+    /// Stage label for stats/rendering.
+    fn name(&self) -> String {
+        "stage".into()
+    }
+}
+
+/// A closure-backed filter (tests, benches, quick assemblies).
+pub struct FnFilter<F: Fn(Mat) -> Result<Mat> + Send + Sync> {
+    /// Scheduling mode.
+    pub mode: FilterMode,
+    /// Stage label.
+    pub label: String,
+    /// Body.
+    pub f: F,
+}
+
+impl<F: Fn(Mat) -> Result<Mat> + Send + Sync> StageFilter for FnFilter<F> {
+    fn mode(&self) -> FilterMode {
+        self.mode
+    }
+    fn apply(&self, input: Mat) -> Result<Mat> {
+        (self.f)(input)
+    }
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// One busy interval of one stage on one token (Fig. 2's timeline).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageSpan {
+    /// Stage index.
+    pub stage: usize,
+    /// Token sequence number.
+    pub token: u64,
+    /// Busy-interval start, ns since pipeline start.
+    pub start_ns: u64,
+    /// Busy-interval end, ns since pipeline start.
+    pub end_ns: u64,
+}
+
+/// Post-run statistics.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineStats {
+    /// Per-(stage, token) busy intervals, unordered.
+    pub spans: Vec<StageSpan>,
+    /// Tokens fully processed.
+    pub frames: u64,
+    /// Wall-clock of the whole run, ns.
+    pub wall_ns: u64,
+}
+
+impl PipelineStats {
+    /// Busy time of one stage, ns.
+    pub fn stage_busy_ns(&self, stage: usize) -> u64 {
+        self.spans
+            .iter()
+            .filter(|s| s.stage == stage)
+            .map(|s| s.end_ns - s.start_ns)
+            .sum()
+    }
+
+    /// Occupancy of one stage in [0, 1].
+    pub fn stage_occupancy(&self, stage: usize) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.stage_busy_ns(stage) as f64 / self.wall_ns as f64
+    }
+
+    /// Steady-state frame interval estimate: wall / frames, ns.
+    pub fn frame_interval_ns(&self) -> u64 {
+        if self.frames == 0 {
+            return 0;
+        }
+        self.wall_ns / self.frames
+    }
+
+    /// Maximum number of tokens simultaneously in flight (from spans).
+    pub fn peak_concurrency(&self) -> usize {
+        let mut edges: Vec<(u64, i64)> = Vec::with_capacity(self.spans.len() * 2);
+        for s in &self.spans {
+            edges.push((s.start_ns, 1));
+            edges.push((s.end_ns, -1));
+        }
+        edges.sort_unstable();
+        let mut cur = 0i64;
+        let mut peak = 0i64;
+        for (_, d) in edges {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        peak.max(0) as usize
+    }
+}
+
+struct Shared {
+    /// Per-stage input queues keyed by token seq.
+    queues: Vec<Mutex<BTreeMap<u64, Mat>>>,
+    /// Next token a serial stage must take.
+    next_seq: Vec<AtomicU64>,
+    /// Serial stage currently busy?
+    busy: Vec<AtomicBool>,
+    /// Tokens injected but not yet emitted.
+    in_flight: AtomicUsize,
+    /// Completed outputs keyed by seq.
+    outputs: Mutex<BTreeMap<u64, Mat>>,
+    /// First error (poisons the run).
+    error: Mutex<Option<CourierError>>,
+    /// Recorded spans.
+    spans: Mutex<Vec<StageSpan>>,
+    /// All inputs injected?
+    input_done: AtomicBool,
+}
+
+impl Shared {
+    fn poisoned(&self) -> bool {
+        self.error.lock().expect("error lock").is_some()
+    }
+}
+
+/// The pipeline: filters + worker/token configuration.
+pub struct TokenPipeline {
+    filters: Vec<Box<dyn StageFilter>>,
+    threads: usize,
+    tokens: usize,
+}
+
+impl TokenPipeline {
+    /// Assemble a pipeline.  `threads >= 1`, `tokens >= 1`.
+    pub fn new(filters: Vec<Box<dyn StageFilter>>, threads: usize, tokens: usize) -> Result<Self> {
+        if filters.is_empty() {
+            return Err(CourierError::Pipeline("pipeline needs >= 1 stage".into()));
+        }
+        Ok(Self {
+            filters,
+            threads: threads.max(1),
+            tokens: tokens.max(1),
+        })
+    }
+
+    /// Stage count.
+    pub fn stage_count(&self) -> usize {
+        self.filters.len()
+    }
+
+    /// Process one frame synchronously through all stages on the calling
+    /// thread (the blocking single-call path of the off-load wrapper).
+    pub fn process_one(&self, input: Mat) -> Result<Mat> {
+        let mut cur = input;
+        for f in &self.filters {
+            cur = f.apply(cur)?;
+        }
+        Ok(cur)
+    }
+
+    /// Run a batch of frames through the pipeline, returning outputs in
+    /// input order plus run statistics.
+    pub fn run(&self, inputs: Vec<Mat>) -> Result<(Vec<Mat>, PipelineStats)> {
+        let n_stages = self.filters.len();
+        let shared = Shared {
+            queues: (0..n_stages).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            next_seq: (0..n_stages).map(|_| AtomicU64::new(0)).collect(),
+            busy: (0..n_stages).map(|_| AtomicBool::new(false)).collect(),
+            in_flight: AtomicUsize::new(0),
+            outputs: Mutex::new(BTreeMap::new()),
+            error: Mutex::new(None),
+            spans: Mutex::new(Vec::new()),
+            input_done: AtomicBool::new(false),
+        };
+        let total = inputs.len() as u64;
+        let feed: Mutex<std::vec::IntoIter<Mat>> = Mutex::new(inputs.into_iter());
+        let next_inject = AtomicU64::new(0);
+        let epoch = Instant::now();
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads {
+                scope.spawn(|| self.worker(&shared, &feed, &next_inject, total, epoch));
+            }
+        });
+
+        if let Some(err) = shared.error.lock().expect("error lock").take() {
+            return Err(err);
+        }
+        let outputs: Vec<Mat> = std::mem::take(&mut *shared.outputs.lock().expect("outputs lock"))
+            .into_values()
+            .collect();
+        let stats = PipelineStats {
+            spans: std::mem::take(&mut *shared.spans.lock().expect("spans lock")),
+            frames: outputs.len() as u64,
+            wall_ns: epoch.elapsed().as_nanos() as u64,
+        };
+        Ok((outputs, stats))
+    }
+
+    fn worker(
+        &self,
+        shared: &Shared,
+        feed: &Mutex<std::vec::IntoIter<Mat>>,
+        next_inject: &AtomicU64,
+        total: u64,
+        epoch: Instant,
+    ) {
+        let n_stages = self.filters.len();
+        let mut idle_spins = 0u32;
+        loop {
+            if shared.poisoned() {
+                return;
+            }
+            // Finished? all inputs injected and nothing in flight.
+            if shared.input_done.load(Ordering::Acquire)
+                && shared.in_flight.load(Ordering::Acquire) == 0
+            {
+                return;
+            }
+
+            // 1) drain-first: scan stages from the tail for runnable work.
+            let mut did_work = false;
+            for stage in (0..n_stages).rev() {
+                if let Some((seq, mat)) = self.try_take(shared, stage) {
+                    self.execute(shared, stage, seq, mat, epoch);
+                    did_work = true;
+                    break;
+                }
+            }
+            if did_work {
+                idle_spins = 0;
+                continue;
+            }
+
+            // 2) inject a new token if the pool allows.
+            if shared.in_flight.load(Ordering::Acquire) < self.tokens
+                && !shared.input_done.load(Ordering::Acquire)
+            {
+                let mut it = feed.lock().expect("feed lock");
+                if let Some(mat) = it.next() {
+                    let seq = next_inject.fetch_add(1, Ordering::AcqRel);
+                    shared.in_flight.fetch_add(1, Ordering::AcqRel);
+                    drop(it);
+                    shared.queues[0].lock().expect("queue lock").insert(seq, mat);
+                    if seq + 1 == total {
+                        shared.input_done.store(true, Ordering::Release);
+                    }
+                    idle_spins = 0;
+                    continue;
+                } else {
+                    shared.input_done.store(true, Ordering::Release);
+                }
+            }
+
+            // 3) idle: yield, escalating to a short sleep.
+            idle_spins += 1;
+            if idle_spins < 64 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+        }
+    }
+
+    /// Try to claim one runnable token for `stage`.
+    fn try_take(&self, shared: &Shared, stage: usize) -> Option<(u64, Mat)> {
+        let mode = self.filters[stage].mode();
+        let mut q = shared.queues[stage].lock().expect("queue lock");
+        match mode {
+            FilterMode::Parallel => {
+                let (&seq, _) = q.iter().next()?;
+                let mat = q.remove(&seq).expect("key just observed");
+                Some((seq, mat))
+            }
+            FilterMode::SerialInOrder => {
+                let want = shared.next_seq[stage].load(Ordering::Acquire);
+                if !q.contains_key(&want) {
+                    return None;
+                }
+                // one-at-a-time: claim the busy flag
+                if shared.busy[stage]
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_err()
+                {
+                    return None;
+                }
+                let mat = q.remove(&want).expect("key just observed");
+                Some((want, mat))
+            }
+        }
+    }
+
+    fn execute(&self, shared: &Shared, stage: usize, seq: u64, mat: Mat, epoch: Instant) {
+        let start_ns = epoch.elapsed().as_nanos() as u64;
+        let result = self.filters[stage].apply(mat);
+        let end_ns = epoch.elapsed().as_nanos() as u64;
+        shared
+            .spans
+            .lock()
+            .expect("spans lock")
+            .push(StageSpan { stage, token: seq, start_ns, end_ns });
+
+        if self.filters[stage].mode() == FilterMode::SerialInOrder {
+            shared.next_seq[stage].fetch_add(1, Ordering::AcqRel);
+            shared.busy[stage].store(false, Ordering::Release);
+        }
+
+        match result {
+            Ok(out) => {
+                if stage + 1 < self.filters.len() {
+                    shared.queues[stage + 1]
+                        .lock()
+                        .expect("queue lock")
+                        .insert(seq, out);
+                } else {
+                    shared.outputs.lock().expect("outputs lock").insert(seq, out);
+                    shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+            Err(e) => {
+                let mut slot = shared.error.lock().expect("error lock");
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
+                shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn add_filter(mode: FilterMode, delta: f32) -> Box<dyn StageFilter> {
+        Box::new(FnFilter {
+            mode,
+            label: format!("add{delta}"),
+            f: move |mut m: Mat| {
+                for v in m.as_mut_slice() {
+                    *v += delta;
+                }
+                Ok(m)
+            },
+        })
+    }
+
+    fn inputs(n: usize) -> Vec<Mat> {
+        (0..n).map(|i| Mat::full(&[4, 4], i as f32)).collect()
+    }
+
+    #[test]
+    fn outputs_in_input_order() {
+        let pipe = TokenPipeline::new(
+            vec![
+                add_filter(FilterMode::SerialInOrder, 1.0),
+                add_filter(FilterMode::Parallel, 10.0),
+                add_filter(FilterMode::SerialInOrder, 100.0),
+            ],
+            4,
+            8,
+        )
+        .unwrap();
+        let (out, stats) = pipe.run(inputs(32)).unwrap();
+        assert_eq!(out.len(), 32);
+        for (i, m) in out.iter().enumerate() {
+            assert_eq!(m.at2(0, 0), i as f32 + 111.0, "frame {i} out of order");
+        }
+        assert_eq!(stats.frames, 32);
+        assert_eq!(stats.spans.len(), 32 * 3);
+    }
+
+    #[test]
+    fn process_one_matches_run() {
+        let mk = || {
+            TokenPipeline::new(
+                vec![
+                    add_filter(FilterMode::SerialInOrder, 2.0),
+                    add_filter(FilterMode::Parallel, 3.0),
+                ],
+                2,
+                2,
+            )
+            .unwrap()
+        };
+        let single = mk().process_one(Mat::full(&[2, 2], 1.0)).unwrap();
+        let (batch, _) = mk().run(vec![Mat::full(&[2, 2], 1.0)]).unwrap();
+        assert_eq!(single, batch[0]);
+    }
+
+    #[test]
+    fn token_pool_bounds_in_flight() {
+        // a slow middle stage with tokens=2: peak concurrency never
+        // exceeds the pool depth
+        let slow = Box::new(FnFilter {
+            mode: FilterMode::Parallel,
+            label: "slow".into(),
+            f: |m: Mat| {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                Ok(m)
+            },
+        });
+        let pipe = TokenPipeline::new(
+            vec![add_filter(FilterMode::SerialInOrder, 0.0), slow, add_filter(FilterMode::SerialInOrder, 0.0)],
+            4,
+            2,
+        )
+        .unwrap();
+        let (_, stats) = pipe.run(inputs(12)).unwrap();
+        assert!(stats.peak_concurrency() <= 2, "peak {}", stats.peak_concurrency());
+    }
+
+    #[test]
+    fn serial_stage_never_overlaps_itself() {
+        let pipe = TokenPipeline::new(
+            vec![
+                Box::new(FnFilter {
+                    mode: FilterMode::SerialInOrder,
+                    label: "head".into(),
+                    f: |m: Mat| {
+                        std::thread::sleep(std::time::Duration::from_micros(500));
+                        Ok(m)
+                    },
+                }),
+                add_filter(FilterMode::Parallel, 1.0),
+            ],
+            4,
+            8,
+        )
+        .unwrap();
+        let (_, stats) = pipe.run(inputs(16)).unwrap();
+        let mut head: Vec<_> = stats.spans.iter().filter(|s| s.stage == 0).collect();
+        head.sort_by_key(|s| s.start_ns);
+        for w in head.windows(2) {
+            assert!(w[0].end_ns <= w[1].start_ns, "serial stage overlapped: {w:?}");
+        }
+        // and in token order
+        for w in head.windows(2) {
+            assert!(w[0].token < w[1].token);
+        }
+    }
+
+    #[test]
+    fn parallel_stage_does_overlap() {
+        // with 4 workers and a sleepy parallel stage, some overlap must
+        // occur (this is the paper's stall-reduction property)
+        let pipe = TokenPipeline::new(
+            vec![
+                add_filter(FilterMode::SerialInOrder, 0.0),
+                Box::new(FnFilter {
+                    mode: FilterMode::Parallel,
+                    label: "work".into(),
+                    f: |m: Mat| {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        Ok(m)
+                    },
+                }),
+                add_filter(FilterMode::SerialInOrder, 0.0),
+            ],
+            4,
+            8,
+        )
+        .unwrap();
+        let (_, stats) = pipe.run(inputs(12)).unwrap();
+        let mids: Vec<_> = stats.spans.iter().filter(|s| s.stage == 1).collect();
+        let overlapping = mids.iter().any(|a| {
+            mids.iter()
+                .any(|b| a.token != b.token && a.start_ns < b.end_ns && b.start_ns < a.end_ns)
+        });
+        assert!(overlapping, "parallel stage never overlapped");
+    }
+
+    #[test]
+    fn error_poisons_the_run() {
+        let counter = std::sync::Arc::new(AtomicUsize::new(0));
+        let c2 = counter.clone();
+        let failing = Box::new(FnFilter {
+            mode: FilterMode::Parallel,
+            label: "boom".into(),
+            f: move |m: Mat| {
+                if c2.fetch_add(1, Ordering::SeqCst) == 3 {
+                    Err(CourierError::Pipeline("boom".into()))
+                } else {
+                    Ok(m)
+                }
+            },
+        });
+        let pipe = TokenPipeline::new(vec![failing], 2, 4).unwrap();
+        let err = pipe.run(inputs(16)).unwrap_err();
+        assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let pipe =
+            TokenPipeline::new(vec![add_filter(FilterMode::SerialInOrder, 1.0)], 2, 2).unwrap();
+        let (out, stats) = pipe.run(vec![]).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(stats.frames, 0);
+    }
+
+    #[test]
+    fn zero_stage_pipeline_rejected() {
+        assert!(TokenPipeline::new(vec![], 2, 2).is_err());
+    }
+
+    #[test]
+    fn single_thread_still_completes() {
+        let pipe = TokenPipeline::new(
+            vec![
+                add_filter(FilterMode::SerialInOrder, 1.0),
+                add_filter(FilterMode::Parallel, 1.0),
+                add_filter(FilterMode::SerialInOrder, 1.0),
+            ],
+            1,
+            4,
+        )
+        .unwrap();
+        let (out, _) = pipe.run(inputs(8)).unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(out[7].at2(0, 0), 10.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Report rendering: the paper's tables as plain-text output.
+//!
+//! Each renderer takes measured/estimated numbers and prints rows shaped
+//! exactly like the paper's Table I (processing-time comparison), Table II
+//! (module synthesis) and Table III (resource utilization) so the benches
+//! and EXPERIMENTS.md can be diffed against the publication.
+
+use crate::hwdb::SynthReport;
+use crate::pipeline::StagePlan;
+
+/// One Table I row: per-function original vs accelerated time.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    /// Library symbol (short name is derived).
+    pub symbol: String,
+    /// Original (traced) per-frame time, ms.
+    pub original_ms: f64,
+    /// Accelerated per-frame time, ms.
+    pub courier_ms: f64,
+    /// Placement string ("FPGA"/"CPU").
+    pub running_on: String,
+}
+
+/// Render Table I ("Processing time comparison \[ms\]").
+pub fn render_table1(rows: &[Table1Row], original_total_ms: f64, courier_total_ms: f64) -> String {
+    let mut s = String::new();
+    s.push_str("TABLE I: Processing time comparison ([ms])\n");
+    s.push_str(&format!(
+        "{:<22} {:>16} {:>14} {:>12}\n",
+        "", "Original Binary", "Courier", "Running on"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<22} {:>16.1} {:>14.1} {:>12}\n",
+            short(&r.symbol),
+            r.original_ms,
+            r.courier_ms,
+            r.running_on
+        ));
+    }
+    s.push_str(&format!(
+        "{:<22} {:>16.1} {:>14.1} {:>12}\n",
+        "Total", original_total_ms, courier_total_ms, "CPU&FPGA"
+    ));
+    let speedup = if courier_total_ms > 0.0 { original_total_ms / courier_total_ms } else { 0.0 };
+    s.push_str(&format!("{:<22} {:>16} {:>14} {:>12}\n", "Speed-up", "x1.00", format!("x{speedup:.2}"), "-"));
+    s
+}
+
+/// Render Table II ("Evaluation: Synthesis of individual module").
+pub fn render_table2(reports: &[SynthReport]) -> String {
+    let mut s = String::new();
+    s.push_str("TABLE II: Evaluation: Synthesis of individual module\n");
+    s.push_str(&format!(
+        "{:<28} {:>11} {:>14} {:>16}\n",
+        "Module", "Freq. [MHz]", "Latency [clk]", "Proc. time [ms]"
+    ));
+    for r in reports {
+        s.push_str(&format!(
+            "{:<28} {:>11.1} {:>14} {:>16.1}\n",
+            r.module, r.freq_mhz, r.latency_cycles, r.proc_time_ms
+        ));
+    }
+    s
+}
+
+/// Render Table III ("Resource utilization of modules").
+pub fn render_table3(reports: &[SynthReport]) -> String {
+    let mut s = String::new();
+    s.push_str("TABLE III: Evaluation: Resource utilization of modules\n");
+    s.push_str(&format!(
+        "{:<28} {:>12} {:>12} {:>12} {:>12}\n",
+        "Module", "BRAM", "DSP48E", "FF", "LUT"
+    ));
+    let mut total: Option<crate::hlo::ResourceEstimate> = None;
+    for r in reports {
+        let (b, d, f, l) = r.resources.utilization_pct();
+        s.push_str(&format!(
+            "{:<28} {:>7}({b:.0}%) {:>7}({d:.0}%) {:>7}({f:.0}%) {:>7}({l:.0}%)\n",
+            r.module, r.resources.bram, r.resources.dsp, r.resources.ff, r.resources.lut
+        ));
+        total = Some(match total {
+            None => r.resources,
+            Some(t) => t.add(&r.resources),
+        });
+    }
+    if let Some(t) = total {
+        let (b, d, f, l) = t.utilization_pct();
+        s.push_str(&format!(
+            "{:<28} {:>7}({b:.0}%) {:>7}({d:.0}%) {:>7}({f:.0}%) {:>7}({l:.0}%)\n",
+            "Total", t.bram, t.dsp, t.ff, t.lut
+        ));
+    }
+    s
+}
+
+/// Render a plan summary (stages, placements, estimates).
+pub fn render_plan(plan: &StagePlan) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Pipeline plan for {} ({} stages, {} threads, {} tokens)\n",
+        plan.program,
+        plan.stages.len(),
+        plan.threads,
+        plan.tokens
+    ));
+    for st in &plan.stages {
+        let mode = if st.serial { "serial_in_order" } else { "parallel" };
+        let tasks: Vec<String> = st
+            .tasks
+            .iter()
+            .map(|t| {
+                let tag = match &t.kind {
+                    crate::pipeline::TaskKind::Sw => "CPU",
+                    crate::pipeline::TaskKind::Hw { .. } => "FPGA",
+                };
+                format!("{} [{tag}]", short(&t.symbol))
+            })
+            .collect();
+        s.push_str(&format!(
+            "  stage#{} ({mode}, est {:.2} ms): {}\n",
+            st.index,
+            st.est_ns() as f64 / 1e6,
+            tasks.join(" -> ")
+        ));
+    }
+    s.push_str(&format!(
+        "  est bottleneck {:.2} ms, est latency {:.2} ms\n",
+        plan.bottleneck_ns() as f64 / 1e6,
+        plan.latency_ns() as f64 / 1e6
+    ));
+    s
+}
+
+/// `cv::cornerHarris` -> `cornerHarris`.
+fn short(symbol: &str) -> String {
+    symbol.rsplit("::").next().unwrap_or(symbol).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_layout() {
+        let rows = vec![
+            Table1Row { symbol: "cv::cvtColor".into(), original_ms: 46.3, courier_ms: 39.8, running_on: "FPGA".into() },
+            Table1Row { symbol: "cv::cornerHarris".into(), original_ms: 999.0, courier_ms: 13.6, running_on: "FPGA".into() },
+            Table1Row { symbol: "cv::normalize".into(), original_ms: 108.0, courier_ms: 80.2, running_on: "CPU".into() },
+            Table1Row { symbol: "cv::convertScaleAbs".into(), original_ms: 217.8, courier_ms: 13.2, running_on: "FPGA".into() },
+        ];
+        let t = render_table1(&rows, 1371.1, 83.8);
+        assert!(t.contains("cornerHarris"));
+        assert!(t.contains("x16.36") || t.contains("x16.3"), "{t}");
+        assert!(t.contains("999.0"));
+        assert!(t.contains("CPU&FPGA"));
+    }
+
+    #[test]
+    fn short_names() {
+        assert_eq!(short("cv::cornerHarris"), "cornerHarris");
+        assert_eq!(short("plain"), "plain");
+    }
+}

@@ -1,0 +1,230 @@
+//! PJRT-backed hardware modules + `Mat` ⇄ `Literal` staging.
+//!
+//! The `xla` crate's PJRT handles are `!Send`/`!Sync` (Rc-based), so each
+//! loaded module is **owned by a dedicated fabric thread** that creates
+//! its own PJRT client, compiles the artifact, and serves invocation
+//! requests over a channel.  This matches the hardware it stands in for:
+//! a placed FPGA module is a physical resource that processes one request
+//! at a time, driven through a DMA queue — concurrency comes from having
+//! *several modules placed at once*, exactly like the paper's fabric.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::image::Mat;
+use crate::{CourierError, Result};
+
+/// The accelerator fabric: loads artifacts as live modules.
+pub struct Runtime {
+    platform: String,
+    compile_ns: AtomicU64,
+}
+
+impl Runtime {
+    /// Connect to the CPU PJRT plugin (validates the fabric is reachable).
+    pub fn cpu() -> Result<Self> {
+        // Probe once on this thread; per-module clients are created on
+        // their own fabric threads.
+        let probe = xla::PjRtClient::cpu()?;
+        let platform = probe.platform_name();
+        drop(probe);
+        Ok(Self { platform, compile_ns: AtomicU64::new(0) })
+    }
+
+    /// Backend platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.platform.clone()
+    }
+
+    /// Load an HLO-text artifact and place it as a live module.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let exe = Executable::load(path)?;
+        self.compile_ns.fetch_add(exe.compile_ns, Ordering::Relaxed);
+        Ok(exe)
+    }
+
+    /// Total time spent compiling ("synthesizing + placing") artifacts, ns.
+    pub fn total_compile_ns(&self) -> u64 {
+        self.compile_ns.load(Ordering::Relaxed)
+    }
+}
+
+type Request = (Vec<Mat>, mpsc::Sender<Result<Mat>>);
+
+/// Count ENTRY parameters from the artifact text (cheap re-scan; the xla
+/// crate does not expose the program shape of a loaded proto).
+fn count_parameters(path: &Path) -> Result<usize> {
+    let text = std::fs::read_to_string(path)?;
+    let module = crate::hlo::parse_hlo_text(&text)?;
+    let entry = module
+        .entry()
+        .ok_or_else(|| CourierError::HloParse("artifact has no ENTRY".into()))?;
+    Ok(entry
+        .instructions
+        .iter()
+        .filter(|i| i.opcode == "parameter")
+        .count())
+}
+
+/// A compiled, placed hardware module (channel-fed; `Send + Sync`).
+#[derive(Debug)]
+pub struct Executable {
+    /// Artifact stem, e.g. `hls_cvt_color__48x64`.
+    pub name: String,
+    /// Time this module took to compile, ns.
+    pub compile_ns: u64,
+    arity: usize,
+    tx: mpsc::Sender<Request>,
+}
+
+impl Executable {
+    /// Load + compile an artifact on a fresh fabric thread.
+    pub fn load(path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Err(CourierError::Io(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("artifact {} not found (run `make artifacts`)", path.display()),
+            )));
+        }
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let arity = count_parameters(path)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<u64, String>>();
+        let thread_path = path.to_path_buf();
+        let thread_name = format!("fabric-{name}");
+        std::thread::Builder::new()
+            .name(thread_name)
+            .spawn(move || fabric_thread(thread_path, rx, ready_tx))
+            .map_err(CourierError::Io)?;
+        let compile_ns = ready_rx
+            .recv()
+            .map_err(|_| CourierError::Xla("fabric thread died during compile".into()))?
+            .map_err(CourierError::Xla)?;
+        Ok(Self { name, compile_ns, arity, tx })
+    }
+
+    /// Number of input buffers the module expects.
+    pub fn arity(&self) -> usize {
+        self.arity
+    }
+
+    /// Synchronous invocation: stage inputs, execute, fetch the result.
+    ///
+    /// The staging copies model the AXI DMA transfers (`AXIvideo2Mat` /
+    /// `Mat2AXIvideo`) and are charged to the module's time, as in the
+    /// paper's Table II measurements.
+    pub fn run(&self, inputs: &[&Mat]) -> Result<Mat> {
+        self.run_owned(inputs.iter().map(|m| (*m).clone()).collect())
+    }
+
+    /// Like [`Self::run`] but takes ownership — the pipeline hot path uses
+    /// this to avoid a frame-sized memcpy per hardware task (§Perf L3#3).
+    pub fn run_owned(&self, inputs: Vec<Mat>) -> Result<Mat> {
+        self.check_arity(inputs.len())?;
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send((inputs, rtx))
+            .map_err(|_| CourierError::Xla(format!("fabric thread for {} is gone", self.name)))?;
+        rrx.recv()
+            .map_err(|_| CourierError::Xla(format!("fabric thread for {} dropped reply", self.name)))?
+    }
+
+    /// `XTask_Start()`: asynchronous invocation with owned inputs; poll or
+    /// wait on the returned handle.
+    pub fn start(&self, inputs: Vec<Mat>) -> Result<super::HwTaskHandle> {
+        self.check_arity(inputs.len())?;
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send((inputs, rtx))
+            .map_err(|_| CourierError::Xla(format!("fabric thread for {} is gone", self.name)))?;
+        Ok(super::HwTaskHandle::new(rrx))
+    }
+
+    fn check_arity(&self, got: usize) -> Result<()> {
+        if got != self.arity {
+            return Err(CourierError::ShapeMismatch {
+                context: format!("executable {}", self.name),
+                expected: format!("{} inputs", self.arity),
+                got: format!("{got} inputs"),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The fabric thread: owns client + executable, serves requests until the
+/// module is dropped (all senders gone).
+fn fabric_thread(
+    path: std::path::PathBuf,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<std::result::Result<u64, String>>,
+) {
+    let t0 = Instant::now();
+    let compiled: std::result::Result<_, String> = (|| {
+        let client = xla::PjRtClient::cpu().map_err(|e| e.to_string())?;
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(|e| e.to_string())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| e.to_string())?;
+        Ok((client, exe))
+    })();
+    let (client, exe) = match compiled {
+        Ok(pair) => {
+            let _ = ready.send(Ok(t0.elapsed().as_nanos() as u64));
+            pair
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _keep_alive = client;
+    while let Ok((inputs, reply)) = rx.recv() {
+        let result = execute(&exe, &inputs);
+        let _ = reply.send(result);
+    }
+}
+
+fn execute(exe: &xla::PjRtLoadedExecutable, inputs: &[Mat]) -> Result<Mat> {
+    let literals: Vec<xla::Literal> =
+        inputs.iter().map(mat_to_literal).collect::<Result<_>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?;
+    let out = result
+        .first()
+        .and_then(|r| r.first())
+        .ok_or_else(|| CourierError::Xla("execute returned no buffers".into()))?
+        .to_literal_sync()?;
+    // aot.py lowers with return_tuple=True -> 1-tuple
+    let inner = out.to_tuple1()?;
+    literal_to_mat(&inner)
+}
+
+/// Stage a `Mat` into an `xla::Literal` (host->device copy analogue).
+///
+/// Single copy: the f32 payload is handed to XLA as raw bytes with the
+/// final shape.  (The obvious `vec1(..).reshape(..)` staging copies twice
+/// — measured 45% slower on frame-sized buffers; see EXPERIMENTS.md §Perf.)
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    let data = m.as_slice();
+    // Safety: f32 -> u8 reinterpretation of an initialized, aligned slice.
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        m.shape(),
+        bytes,
+    )?)
+}
+
+/// Fetch a `Literal` back into a `Mat` (device->host copy analogue).
+pub fn literal_to_mat(lit: &xla::Literal) -> Result<Mat> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Mat::new(dims, data)
+}

@@ -1,0 +1,59 @@
+//! Asynchronous hardware-task handle: the `XTask_Start()` /
+//! `XTask_IsDone()` driver contract from the paper's generated code.
+//!
+//! `Executable::start` enqueues the invocation on the module's fabric
+//! thread and returns immediately; the owning pipeline task then polls
+//! `is_done` or blocks on `wait` — a DMA kick + doorbell poll.
+
+use std::cell::RefCell;
+use std::sync::mpsc;
+
+use crate::image::Mat;
+use crate::{CourierError, Result};
+
+/// An in-flight hardware task.
+///
+/// Not `Sync`: exactly one pipeline task owns the handle, like the paper's
+/// per-stage driver handle.
+pub struct HwTaskHandle {
+    rx: mpsc::Receiver<Result<Mat>>,
+    /// Result captured by a successful `is_done` poll, awaiting `wait`.
+    polled: RefCell<Option<Result<Mat>>>,
+}
+
+impl HwTaskHandle {
+    /// Wrap the fabric thread's reply channel.
+    pub(crate) fn new(rx: mpsc::Receiver<Result<Mat>>) -> Self {
+        Self { rx, polled: RefCell::new(None) }
+    }
+
+    /// `XTask_IsDone()`: non-blocking completion poll.
+    pub fn is_done(&self) -> bool {
+        if self.polled.borrow().is_some() {
+            return true;
+        }
+        match self.rx.try_recv() {
+            Ok(msg) => {
+                *self.polled.borrow_mut() = Some(msg);
+                true
+            }
+            Err(mpsc::TryRecvError::Empty) => false,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                *self.polled.borrow_mut() = Some(Err(CourierError::Pipeline(
+                    "hardware task thread vanished".into(),
+                )));
+                true
+            }
+        }
+    }
+
+    /// Block until the module finishes and take the result.
+    pub fn wait(self) -> Result<Mat> {
+        if let Some(msg) = self.polled.borrow_mut().take() {
+            return msg;
+        }
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(CourierError::Pipeline("hardware task thread vanished".into()))
+        })
+    }
+}

@@ -1,0 +1,163 @@
+//! Accelerator runtime: load + execute AOT HLO artifacts via PJRT.
+//!
+//! This is the "FPGA fabric" of the reproduction.  An [`Executable`] is a
+//! *placed hardware module*: compiled once (the synthesis + place&route
+//! analogue happens at load), then invoked many times with the
+//! `start`/`is_done` contract the paper's generated drivers expose
+//! (`XTask0_Start()` / `XTask0_IsDone()`).
+//!
+//! Python is never involved here — artifacts were produced offline by
+//! `make artifacts`.
+
+mod client;
+mod handle;
+
+pub use client::{literal_to_mat, mat_to_literal, Executable, Runtime};
+pub use handle::HwTaskHandle;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::{synth, Mat};
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_execute_cvt_color_artifact() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(&dir.join("hls_cvt_color__48x64.hlo.txt"))
+            .unwrap();
+        let img = synth::noise_rgb(48, 64, 0);
+        let out = exe.run(&[&img]).unwrap();
+        assert_eq!(out.shape(), &[48, 64]);
+        // must match the CPU library numerically (shared oracle)
+        let want = crate::swlib::imgproc::cvt_color(&img).unwrap();
+        assert!(out.allclose(&want, 1e-4, 1e-2), "max diff {}", out.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn harris_artifact_matches_swlib() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(&dir.join("hls_corner_harris__48x64.hlo.txt"))
+            .unwrap();
+        let img = synth::noise_gray(48, 64, 3);
+        let out = exe.run(&[&img]).unwrap();
+        let want = crate::swlib::imgproc::corner_harris(&img, 0.04).unwrap();
+        let scale = want.max().abs().max(want.min().abs()).max(1.0);
+        assert!(
+            out.allclose(&want, 1e-3, 1e-3 * scale),
+            "max diff {} vs scale {scale}",
+            out.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn gemm_artifact_two_inputs() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(&dir.join("hls_gemm__128x128x128.hlo.txt"))
+            .unwrap();
+        let a = synth::random_matrix(128, 128, 1);
+        let b = synth::random_matrix(128, 128, 2);
+        let out = exe.run(&[&a, &b]).unwrap();
+        let want = crate::swlib::blas::sgemm(&a, &b).unwrap();
+        assert!(out.allclose(&want, 1e-3, 1e-3), "max diff {}", out.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text(std::path::Path::new("/nonexistent.hlo.txt")).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_is_an_error() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(&dir.join("hls_cvt_color__48x64.hlo.txt"))
+            .unwrap();
+        let img = synth::noise_rgb(48, 64, 0);
+        assert!(exe.run(&[&img, &img]).is_err());
+        assert!(exe.run(&[]).is_err());
+    }
+
+    #[test]
+    fn async_start_poll_done() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(&dir.join("hls_convert_scale_abs__48x64.hlo.txt"))
+            .unwrap();
+        let img = synth::noise_gray(48, 64, 9);
+        let handle = exe.start(vec![img.clone()]).unwrap();
+        // poll until done, then take the result (XTask_IsDone loop)
+        while !handle.is_done() {
+            std::thread::yield_now();
+        }
+        let out = handle.wait().unwrap();
+        let want = crate::swlib::imgproc::convert_scale_abs(&img, 1.0, 0.0).unwrap();
+        assert!(out.allclose(&want, 1e-4, 1e-2));
+    }
+
+    #[test]
+    fn executable_is_send_sync_and_shareable() {
+        let Some(dir) = artifacts_dir() else { return };
+        fn assert_send_sync<T: Send + Sync>(_: &T) {}
+        let rt = Runtime::cpu().unwrap();
+        let exe = std::sync::Arc::new(
+            rt.load_hlo_text(&dir.join("hls_threshold__48x64.hlo.txt")).unwrap(),
+        );
+        assert_send_sync(&exe);
+        // concurrent invocations from many threads serialize on the module
+        let outs: Vec<Mat> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4u64)
+                .map(|i| {
+                    let exe = exe.clone();
+                    s.spawn(move || {
+                        let img = synth::noise_gray(48, 64, i);
+                        exe.run(&[&img]).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(outs.len(), 4);
+    }
+
+    #[test]
+    fn executable_is_reusable_and_deterministic() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt
+            .load_hlo_text(&dir.join("hls_threshold__48x64.hlo.txt"))
+            .unwrap();
+        let img = synth::noise_gray(48, 64, 4);
+        let a = exe.run(&[&img]).unwrap();
+        let b = exe.run(&[&img]).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mat_literal_roundtrip_shapes() {
+        let rt = Runtime::cpu().unwrap();
+        // staging helpers are exercised indirectly via run(); check the
+        // public conversion here for all ranks
+        for shape in [vec![6usize], vec![3, 4], vec![2, 3, 3]] {
+            let m = Mat::new(shape.clone(), (0..shape.iter().product()).map(|i| i as f32).collect()).unwrap();
+            let lit = client::mat_to_literal(&m).unwrap();
+            let back = client::literal_to_mat(&lit).unwrap();
+            assert_eq!(back, m);
+        }
+        drop(rt);
+    }
+}

@@ -1,0 +1,120 @@
+//! CPU BLAS subset (the second library family Courier supports).
+
+use crate::image::Mat;
+use crate::{CourierError, Result};
+
+/// C = A @ B over f32 matrices — `blas::sgemm` (no transposes, alpha=1).
+pub fn sgemm(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.shape().len() != 2 || b.shape().len() != 2 {
+        return Err(CourierError::ShapeMismatch {
+            context: "sgemm".into(),
+            expected: "two rank-2 matrices".into(),
+            got: format!("{:?} x {:?}", a.shape(), b.shape()),
+        });
+    }
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    if k != kb {
+        return Err(CourierError::ShapeMismatch {
+            context: "sgemm".into(),
+            expected: format!("inner dim {k}"),
+            got: format!("inner dim {kb}"),
+        });
+    }
+    let mut out = Mat::zeros(&[m, n]);
+    let (pa, pb) = (a.as_slice(), b.as_slice());
+    let pc = out.as_mut_slice();
+    // i-k-j loop order: unit-stride inner loop over both B and C rows.
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = pa[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &pb[kk * n..kk * n + n];
+            let crow = &mut pc[i * n..i * n + n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// y <- alpha * x + y over rank-1 vectors — `blas::saxpy`.
+pub fn saxpy(alpha: f32, x: &Mat, y: &Mat) -> Result<Mat> {
+    if x.shape() != y.shape() || x.shape().len() != 1 {
+        return Err(CourierError::ShapeMismatch {
+            context: "saxpy".into(),
+            expected: "two equal rank-1 vectors".into(),
+            got: format!("{:?} vs {:?}", x.shape(), y.shape()),
+        });
+    }
+    let mut out = y.clone();
+    for (o, xv) in out.as_mut_slice().iter_mut().zip(x.as_slice()) {
+        *o += alpha * xv;
+    }
+    Ok(out)
+}
+
+/// dot(x, y) returned as a 1-element vector — `blas::sdot`.
+pub fn sdot(x: &Mat, y: &Mat) -> Result<Mat> {
+    if x.shape() != y.shape() || x.shape().len() != 1 {
+        return Err(CourierError::ShapeMismatch {
+            context: "sdot".into(),
+            expected: "two equal rank-1 vectors".into(),
+            got: format!("{:?} vs {:?}", x.shape(), y.shape()),
+        });
+    }
+    let s: f32 = x.as_slice().iter().zip(y.as_slice()).map(|(a, b)| a * b).sum();
+    Mat::new(vec![1], vec![s])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+
+    #[test]
+    fn sgemm_identity() {
+        let a = synth::random_matrix(5, 5, 1);
+        let mut eye = Mat::zeros(&[5, 5]);
+        for i in 0..5 {
+            eye.set2(i, i, 1.0);
+        }
+        let c = sgemm(&a, &eye).unwrap();
+        assert!(c.max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn sgemm_known_product() {
+        let a = Mat::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Mat::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let c = sgemm(&a, &b).unwrap();
+        assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn sgemm_rejects_mismatch() {
+        let a = Mat::zeros(&[2, 3]);
+        let b = Mat::zeros(&[2, 3]);
+        assert!(sgemm(&a, &b).is_err());
+    }
+
+    #[test]
+    fn saxpy_and_sdot() {
+        let x = Mat::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let y = Mat::new(vec![3], vec![10.0, 20.0, 30.0]).unwrap();
+        let r = saxpy(2.0, &x, &y).unwrap();
+        assert_eq!(r.as_slice(), &[12.0, 24.0, 36.0]);
+        let d = sdot(&x, &y).unwrap();
+        assert_eq!(d.as_slice(), &[140.0]);
+    }
+
+    #[test]
+    fn vector_ops_reject_rank2() {
+        let x = Mat::zeros(&[2, 2]);
+        assert!(saxpy(1.0, &x, &x).is_err());
+        assert!(sdot(&x, &x).is_err());
+    }
+}

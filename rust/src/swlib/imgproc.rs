@@ -1,0 +1,470 @@
+//! CPU image-processing functions (ports of `ref.py`, replicate borders).
+
+use crate::image::Mat;
+use crate::{CourierError, Result};
+
+/// BT.601 luma weights (match `kernels/common.py`).
+pub const LUMA_R: f32 = 0.299;
+pub const LUMA_G: f32 = 0.587;
+pub const LUMA_B: f32 = 0.114;
+
+/// Harris k constant (matches `kernels/harris.py`).
+pub const HARRIS_K: f32 = 0.04;
+
+const SOBEL_DX: [[f32; 3]; 3] = [[-1.0, 0.0, 1.0], [-2.0, 0.0, 2.0], [-1.0, 0.0, 1.0]];
+const SOBEL_DY: [[f32; 3]; 3] = [[-1.0, -2.0, -1.0], [0.0, 0.0, 0.0], [1.0, 2.0, 1.0]];
+const GAUSS3: [[f32; 3]; 3] = [
+    [1.0 / 16.0, 2.0 / 16.0, 1.0 / 16.0],
+    [2.0 / 16.0, 4.0 / 16.0, 2.0 / 16.0],
+    [1.0 / 16.0, 2.0 / 16.0, 1.0 / 16.0],
+];
+
+fn expect_gray(m: &Mat, context: &str) -> Result<()> {
+    if m.shape().len() != 2 {
+        return Err(CourierError::ShapeMismatch {
+            context: context.into(),
+            expected: "(H, W) single-channel".into(),
+            got: format!("{:?}", m.shape()),
+        });
+    }
+    Ok(())
+}
+
+/// RGB (H, W, 3) -> gray (H, W), BT.601 — `cv::cvtColor(RGB2GRAY)`.
+pub fn cvt_color(img: &Mat) -> Result<Mat> {
+    if img.shape().len() != 3 || img.channels() != 3 {
+        return Err(CourierError::ShapeMismatch {
+            context: "cvt_color".into(),
+            expected: "(H, W, 3)".into(),
+            got: format!("{:?}", img.shape()),
+        });
+    }
+    let (h, w) = (img.height(), img.width());
+    let src = img.as_slice();
+    let mut out = Mat::zeros(&[h, w]);
+    let dst = out.as_mut_slice();
+    for i in 0..h * w {
+        let base = i * 3;
+        dst[i] = LUMA_R * src[base] + LUMA_G * src[base + 1] + LUMA_B * src[base + 2];
+    }
+    Ok(out)
+}
+
+/// Valid 3x3 convolution with replicate border.
+fn conv3x3(img: &Mat, taps: &[[f32; 3]; 3]) -> Mat {
+    let (h, w) = (img.height(), img.width());
+    let mut out = Mat::zeros(&[h, w]);
+    let dst = out.as_mut_slice();
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0.0f32;
+            for (dy, row) in taps.iter().enumerate() {
+                for (dx, &t) in row.iter().enumerate() {
+                    if t == 0.0 {
+                        continue;
+                    }
+                    acc += t * img.at2_clamped(y as isize + dy as isize - 1, x as isize + dx as isize - 1);
+                }
+            }
+            dst[y * w + x] = acc;
+        }
+    }
+    out
+}
+
+/// 3x3 Sobel derivative — `cv::Sobel` (ksize 3). Exactly one of dx/dy = 1.
+pub fn sobel(img: &Mat, dx: u8, dy: u8) -> Result<Mat> {
+    expect_gray(img, "sobel")?;
+    match (dx, dy) {
+        (1, 0) => Ok(conv3x3(img, &SOBEL_DX)),
+        (0, 1) => Ok(conv3x3(img, &SOBEL_DY)),
+        _ => Err(CourierError::Other("sobel: exactly one of dx/dy must be 1".into())),
+    }
+}
+
+/// 3x3 Gaussian — `cv::GaussianBlur(3x3)`.
+pub fn gaussian_blur(img: &Mat) -> Result<Mat> {
+    expect_gray(img, "gaussian_blur")?;
+    Ok(conv3x3(img, &GAUSS3))
+}
+
+/// 3x3 box filter — `cv::boxFilter` (mean when `normalize`).
+pub fn box_filter(img: &Mat, normalize: bool) -> Result<Mat> {
+    expect_gray(img, "box_filter")?;
+    let t = if normalize { 1.0 / 9.0 } else { 1.0 };
+    Ok(conv3x3(img, &[[t; 3]; 3]))
+}
+
+const LAPLACIAN: [[f32; 3]; 3] = [[0.0, 1.0, 0.0], [1.0, -4.0, 1.0], [0.0, 1.0, 0.0]];
+const SCHARR_DX: [[f32; 3]; 3] = [[-3.0, 0.0, 3.0], [-10.0, 0.0, 10.0], [-3.0, 0.0, 3.0]];
+
+/// 3x3 Laplacian — `cv::Laplacian` (ksize 3, no scaling).
+pub fn laplacian(img: &Mat) -> Result<Mat> {
+    expect_gray(img, "laplacian")?;
+    Ok(conv3x3(img, &LAPLACIAN))
+}
+
+/// 3x3 Scharr d/dx — `cv::Scharr`.
+pub fn scharr(img: &Mat) -> Result<Mat> {
+    expect_gray(img, "scharr")?;
+    Ok(conv3x3(img, &SCHARR_DX))
+}
+
+/// 3x3 median — `cv::medianBlur(3)` (replicate border).
+pub fn median_blur(img: &Mat) -> Result<Mat> {
+    expect_gray(img, "median_blur")?;
+    let (h, w) = (img.height(), img.width());
+    let mut out = Mat::zeros(&[h, w]);
+    let dst = out.as_mut_slice();
+    let mut window = [0.0f32; 9];
+    for y in 0..h {
+        for x in 0..w {
+            let mut k = 0;
+            for dy in -1isize..=1 {
+                for dx in -1isize..=1 {
+                    window[k] = img.at2_clamped(y as isize + dy, x as isize + dx);
+                    k += 1;
+                }
+            }
+            // partial selection sort to the middle element
+            for i in 0..=4 {
+                let mut min_i = i;
+                for j in i + 1..9 {
+                    if window[j] < window[min_i] {
+                        min_i = j;
+                    }
+                }
+                window.swap(i, min_i);
+            }
+            dst[y * w + x] = window[4];
+        }
+    }
+    Ok(out)
+}
+
+/// 3x3 erosion (window min) — `cv::erode`.
+pub fn erode(img: &Mat) -> Result<Mat> {
+    expect_gray(img, "erode")?;
+    Ok(morph(img, f32::min))
+}
+
+/// 3x3 dilation (window max) — `cv::dilate`.
+pub fn dilate(img: &Mat) -> Result<Mat> {
+    expect_gray(img, "dilate")?;
+    Ok(morph(img, f32::max))
+}
+
+fn morph(img: &Mat, op: fn(f32, f32) -> f32) -> Mat {
+    let (h, w) = (img.height(), img.width());
+    let mut out = Mat::zeros(&[h, w]);
+    let dst = out.as_mut_slice();
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = img.at2_clamped(y as isize - 1, x as isize - 1);
+            for dy in 0..3isize {
+                for dx in 0..3isize {
+                    acc = op(acc, img.at2_clamped(y as isize + dy - 1, x as isize + dx - 1));
+                }
+            }
+            dst[y * w + x] = acc;
+        }
+    }
+    out
+}
+
+/// Harris-Stephens corner response — `cv::cornerHarris(blockSize=3, ksize=3)`.
+///
+/// Matches the fused Pallas kernel exactly: the *image* is edge-padded by
+/// 2, Sobel is a valid conv to (H+2, W+2), products, then a valid
+/// unnormalized 3x3 window sum back to (H, W), `R = det(M) - k*trace(M)^2`.
+/// (Padding the image once and convolving valid is NOT the same at the
+/// borders as clamp-indexing each convolution — e.g. the replicated row's
+/// Sobel dy is zero.)
+pub fn corner_harris(img: &Mat, k: f32) -> Result<Mat> {
+    expect_gray(img, "corner_harris")?;
+    let (h, w) = (img.height(), img.width());
+    let padded = edge_pad2(img, 2); // (h+4, w+4)
+    let dx = conv3x3_valid(&padded, &SOBEL_DX); // (h+2, w+2)
+    let dy = conv3x3_valid(&padded, &SOBEL_DY);
+    let n = dx.len();
+    let mut dxx = Mat::zeros(&[h + 2, w + 2]);
+    let mut dyy = Mat::zeros(&[h + 2, w + 2]);
+    let mut dxy = Mat::zeros(&[h + 2, w + 2]);
+    {
+        let (xs, ys) = (dx.as_slice(), dy.as_slice());
+        let (pxx, pyy, pxy) = (dxx.as_mut_slice(), dyy.as_mut_slice(), dxy.as_mut_slice());
+        for i in 0..n {
+            pxx[i] = xs[i] * xs[i];
+            pyy[i] = ys[i] * ys[i];
+            pxy[i] = xs[i] * ys[i];
+        }
+    }
+    let box3 = [[1.0f32; 3]; 3];
+    let sxx = conv3x3_valid(&dxx, &box3); // (h, w)
+    let syy = conv3x3_valid(&dyy, &box3);
+    let sxy = conv3x3_valid(&dxy, &box3);
+    let mut out = Mat::zeros(&[h, w]);
+    {
+        let (a, b, c) = (sxx.as_slice(), syy.as_slice(), sxy.as_slice());
+        let dst = out.as_mut_slice();
+        for i in 0..h * w {
+            let tr = a[i] + b[i];
+            dst[i] = (a[i] * b[i] - c[i] * c[i]) - k * tr * tr;
+        }
+    }
+    Ok(out)
+}
+
+/// Replicate-pad by `p` pixels on each spatial side.
+fn edge_pad2(img: &Mat, p: usize) -> Mat {
+    let (h, w) = (img.height(), img.width());
+    let mut out = Mat::zeros(&[h + 2 * p, w + 2 * p]);
+    let dst = out.as_mut_slice();
+    let wp = w + 2 * p;
+    for y in 0..h + 2 * p {
+        for x in 0..wp {
+            dst[y * wp + x] =
+                img.at2_clamped(y as isize - p as isize, x as isize - p as isize);
+        }
+    }
+    out
+}
+
+/// Valid 3x3 convolution: (H, W) -> (H-2, W-2).
+fn conv3x3_valid(img: &Mat, taps: &[[f32; 3]; 3]) -> Mat {
+    let (h, w) = (img.height() - 2, img.width() - 2);
+    let src = img.as_slice();
+    let ws = img.width();
+    let mut out = Mat::zeros(&[h, w]);
+    let dst = out.as_mut_slice();
+    for y in 0..h {
+        for x in 0..w {
+            let mut acc = 0.0f32;
+            for (dy, row) in taps.iter().enumerate() {
+                for (dx, &t) in row.iter().enumerate() {
+                    if t == 0.0 {
+                        continue;
+                    }
+                    acc += t * src[(y + dy) * ws + (x + dx)];
+                }
+            }
+            dst[y * w + x] = acc;
+        }
+    }
+    out
+}
+
+/// Min-max normalize to `[alpha, beta]` — `cv::normalize(NORM_MINMAX)`.
+pub fn normalize(img: &Mat, alpha: f32, beta: f32) -> Result<Mat> {
+    expect_gray(img, "normalize")?;
+    let (mn, mx) = (img.min(), img.max());
+    let scale = (beta - alpha) / (mx - mn).max(1e-12);
+    let mut out = img.clone();
+    for v in out.as_mut_slice() {
+        *v = (*v - mn) * scale + alpha;
+    }
+    Ok(out)
+}
+
+/// `saturate_cast<uchar>(|alpha * x + beta|)` kept in f32 —
+/// `cv::convertScaleAbs`.  OpenCV's saturate_cast rounds half-to-even,
+/// and the rounding is semantically important: it makes the function a
+/// genuine u8 quantization rather than a float identity.
+pub fn convert_scale_abs(img: &Mat, alpha: f32, beta: f32) -> Result<Mat> {
+    expect_gray(img, "convert_scale_abs")?;
+    let mut out = img.clone();
+    for v in out.as_mut_slice() {
+        *v = round_half_even((alpha * *v + beta).abs()).min(255.0);
+    }
+    Ok(out)
+}
+
+/// Round to nearest, ties to even (matches `jnp.round` / IEEE-754
+/// roundTiesToEven, which the Pallas kernel lowers to).
+fn round_half_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 && r % 2.0 != 0.0 {
+        r - (r - x).signum()
+    } else {
+        r
+    }
+}
+
+/// Binary threshold — `cv::threshold(THRESH_BINARY)`.
+pub fn threshold(img: &Mat, thresh: f32, maxval: f32) -> Result<Mat> {
+    expect_gray(img, "threshold")?;
+    let mut out = img.clone();
+    for v in out.as_mut_slice() {
+        *v = if *v > thresh { maxval } else { 0.0 };
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+
+    #[test]
+    fn cvt_color_known_value() {
+        let mut img = Mat::zeros(&[1, 1, 3]);
+        img.as_mut_slice().copy_from_slice(&[100.0, 0.0, 0.0]);
+        let g = cvt_color(&img).unwrap();
+        assert!((g.at2(0, 0) - 29.9).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cvt_color_rejects_gray_input() {
+        assert!(cvt_color(&Mat::zeros(&[4, 4])).is_err());
+    }
+
+    #[test]
+    fn sobel_constant_is_zero() {
+        let img = Mat::full(&[6, 7], 42.0);
+        let g = sobel(&img, 1, 0).unwrap();
+        assert_eq!(g.max_abs_diff(&Mat::zeros(&[6, 7])), 0.0);
+    }
+
+    #[test]
+    fn sobel_rejects_bad_derivative_order() {
+        let img = Mat::zeros(&[4, 4]);
+        assert!(sobel(&img, 1, 1).is_err());
+        assert!(sobel(&img, 0, 0).is_err());
+    }
+
+    #[test]
+    fn sobel_detects_vertical_edge() {
+        // columns 0..2 dark, 2.. bright: dx response peaks at the edge.
+        let mut img = Mat::zeros(&[5, 6]);
+        for y in 0..5 {
+            for x in 2..6 {
+                img.set2(y, x, 200.0);
+            }
+        }
+        let g = sobel(&img, 1, 0).unwrap();
+        assert!(g.at2(2, 2) > 0.0);
+        assert_eq!(g.at2(2, 4), 0.0); // interior of the flat region
+    }
+
+    #[test]
+    fn gaussian_preserves_constant() {
+        let img = Mat::full(&[5, 5], 10.0);
+        let g = gaussian_blur(&img).unwrap();
+        assert!(g.max_abs_diff(&img) < 1e-4);
+    }
+
+    #[test]
+    fn box_mean_of_constant() {
+        let img = Mat::full(&[4, 4], 9.0);
+        let g = box_filter(&img, true).unwrap();
+        assert!(g.max_abs_diff(&img) < 1e-4);
+        let s = box_filter(&img, false).unwrap();
+        assert!((s.at2(1, 1) - 81.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn erode_le_input_le_dilate() {
+        let img = synth::noise_gray(12, 9, 3);
+        let er = erode(&img).unwrap();
+        let di = dilate(&img).unwrap();
+        for y in 0..12 {
+            for x in 0..9 {
+                assert!(er.at2(y, x) <= img.at2(y, x));
+                assert!(di.at2(y, x) >= img.at2(y, x));
+            }
+        }
+    }
+
+    #[test]
+    fn harris_flat_is_zero_and_corner_fires() {
+        let flat = Mat::full(&[8, 8], 100.0);
+        let r = corner_harris(&flat, HARRIS_K).unwrap();
+        assert!(r.max_abs_diff(&Mat::zeros(&[8, 8])) < 1e-2);
+
+        let mut quad = Mat::zeros(&[16, 16]);
+        for y in 8..16 {
+            for x in 8..16 {
+                quad.set2(y, x, 255.0);
+            }
+        }
+        let r = corner_harris(&quad, HARRIS_K).unwrap();
+        // strongest |response| near (8, 8)
+        let mut best = (0usize, 0usize, 0.0f32);
+        for y in 0..16 {
+            for x in 0..16 {
+                let v = r.at2(y, x).abs();
+                if v > best.2 {
+                    best = (y, x, v);
+                }
+            }
+        }
+        assert!(best.0.abs_diff(8) <= 2 && best.1.abs_diff(8) <= 2, "peak at {best:?}");
+    }
+
+    #[test]
+    fn laplacian_flat_is_zero() {
+        let img = Mat::full(&[6, 6], 50.0);
+        let l = laplacian(&img).unwrap();
+        assert!(l.max_abs_diff(&Mat::zeros(&[6, 6])) < 1e-4);
+    }
+
+    #[test]
+    fn scharr_vertical_edge_responds() {
+        let mut img = Mat::zeros(&[5, 6]);
+        for y in 0..5 {
+            for x in 3..6 {
+                img.set2(y, x, 100.0);
+            }
+        }
+        let s = scharr(&img).unwrap();
+        assert!(s.at2(2, 2) > 0.0); // left of the edge sees +dx
+        assert_eq!(s.at2(2, 0), 0.0); // flat region
+    }
+
+    #[test]
+    fn median_removes_salt_noise() {
+        let mut img = Mat::full(&[5, 5], 10.0);
+        img.set2(2, 2, 255.0); // single hot pixel
+        let m = median_blur(&img).unwrap();
+        assert_eq!(m.at2(2, 2), 10.0);
+        // median of a constant neighborhood stays constant
+        assert_eq!(m.at2(0, 0), 10.0);
+    }
+
+    #[test]
+    fn median_of_sorted_values() {
+        // 3x3 with distinct values: center output is the true median
+        let img = Mat::new(vec![3, 3], vec![9.0, 1.0, 8.0, 2.0, 7.0, 3.0, 6.0, 4.0, 5.0]).unwrap();
+        let m = median_blur(&img).unwrap();
+        assert_eq!(m.at2(1, 1), 5.0);
+    }
+
+    #[test]
+    fn normalize_hits_bounds() {
+        let img = synth::noise_gray(10, 10, 5);
+        let n = normalize(&img, 0.0, 255.0).unwrap();
+        assert!((n.min() - 0.0).abs() < 1e-3);
+        assert!((n.max() - 255.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn normalize_constant_input_is_finite() {
+        let img = Mat::full(&[3, 3], 7.0);
+        let n = normalize(&img, 0.0, 255.0).unwrap();
+        assert!(n.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn convert_scale_abs_saturates() {
+        let img = Mat::new(vec![1, 3], vec![-300.0, -10.0, 400.0]).unwrap();
+        let c = convert_scale_abs(&img, 1.0, 0.0).unwrap();
+        assert_eq!(c.as_slice(), &[255.0, 10.0, 255.0]);
+    }
+
+    #[test]
+    fn threshold_binary() {
+        let img = Mat::new(vec![1, 3], vec![10.0, 127.0, 128.0]).unwrap();
+        let t = threshold(&img, 127.0, 255.0).unwrap();
+        assert_eq!(t.as_slice(), &[0.0, 0.0, 255.0]);
+    }
+}

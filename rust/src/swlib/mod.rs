@@ -1,0 +1,19 @@
+//! The software function library (the "OpenCV + BLAS" the target binary
+//! links against).
+//!
+//! Every function here is a faithful Rust port of the pure-jnp oracle in
+//! `python/compile/kernels/ref.py`, so CPU (software task) and accelerator
+//! (hardware module) paths of a mixed pipeline are numerically
+//! interchangeable — the property the Function Off-loader depends on when
+//! it swaps implementations under a running binary.
+//!
+//! The [`Registry`] is the dynamic-linking substrate: the app interpreter
+//! resolves call symbols (`cv::cvtColor`, `blas::sgemm`, ...) through it,
+//! and the off-loader patches resolutions the same way DLL injection
+//! rebinds `dlsym` lookups in the paper.
+
+pub mod blas;
+pub mod imgproc;
+mod registry;
+
+pub use registry::{FuncEntry, Registry, SwFn};

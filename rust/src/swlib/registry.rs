@@ -1,0 +1,177 @@
+//! Symbol registry — the dynamic-linker substrate.
+//!
+//! The interpreter resolves every call through a [`Registry`]; the
+//! Function Off-loader later *re-binds* symbols in a separate hook table
+//! (see `offload::HookTable`), so the registry itself always answers with
+//! the original library function — the paper's `dlsym(RTLD_NEXT, ...)`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::image::Mat;
+use crate::{CourierError, Result};
+
+use super::{blas, imgproc};
+
+/// A library function: a boxed pure function over `Mat` arguments.
+pub type SwFn = Arc<dyn Fn(&[&Mat]) -> Result<Mat> + Send + Sync>;
+
+/// One resolvable library symbol.
+#[derive(Clone)]
+pub struct FuncEntry {
+    /// Fully qualified symbol, e.g. `cv::cornerHarris`.
+    pub symbol: String,
+    /// Number of `Mat` arguments.
+    pub arity: usize,
+    /// The callable.
+    pub f: SwFn,
+}
+
+impl std::fmt::Debug for FuncEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FuncEntry")
+            .field("symbol", &self.symbol)
+            .field("arity", &self.arity)
+            .finish()
+    }
+}
+
+/// The function library a target binary links against.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    map: BTreeMap<String, FuncEntry>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The standard library: every OpenCV/BLAS function the case-study
+    /// binaries call, with the demo parameters baked in (blockSize=3,
+    /// ksize=3, k=0.04 for Harris; alpha=1, beta=0 for convertScaleAbs;
+    /// ... — identical to the AOT module catalog in `python/compile`).
+    pub fn standard() -> Self {
+        let mut r = Self::new();
+        r.register("cv::cvtColor", 1, Arc::new(|a: &[&Mat]| imgproc::cvt_color(a[0])));
+        r.register("cv::Sobel", 1, Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 1, 0)));
+        r.register("cv::SobelY", 1, Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 0, 1)));
+        r.register("cv::GaussianBlur", 1, Arc::new(|a: &[&Mat]| imgproc::gaussian_blur(a[0])));
+        r.register("cv::boxFilter", 1, Arc::new(|a: &[&Mat]| imgproc::box_filter(a[0], true)));
+        r.register("cv::erode", 1, Arc::new(|a: &[&Mat]| imgproc::erode(a[0])));
+        r.register("cv::dilate", 1, Arc::new(|a: &[&Mat]| imgproc::dilate(a[0])));
+        r.register("cv::Laplacian", 1, Arc::new(|a: &[&Mat]| imgproc::laplacian(a[0])));
+        r.register("cv::Scharr", 1, Arc::new(|a: &[&Mat]| imgproc::scharr(a[0])));
+        r.register("cv::medianBlur", 1, Arc::new(|a: &[&Mat]| imgproc::median_blur(a[0])));
+        r.register(
+            "cv::cornerHarris",
+            1,
+            Arc::new(|a: &[&Mat]| imgproc::corner_harris(a[0], imgproc::HARRIS_K)),
+        );
+        r.register(
+            "cv::normalize",
+            1,
+            Arc::new(|a: &[&Mat]| imgproc::normalize(a[0], 0.0, 255.0)),
+        );
+        r.register(
+            "cv::convertScaleAbs",
+            1,
+            Arc::new(|a: &[&Mat]| imgproc::convert_scale_abs(a[0], 1.0, 0.0)),
+        );
+        r.register(
+            "cv::threshold",
+            1,
+            Arc::new(|a: &[&Mat]| imgproc::threshold(a[0], 127.0, 255.0)),
+        );
+        r.register("blas::sgemm", 2, Arc::new(|a: &[&Mat]| blas::sgemm(a[0], a[1])));
+        r.register("blas::saxpy", 2, Arc::new(|a: &[&Mat]| blas::saxpy(1.0, a[0], a[1])));
+        r.register("blas::sdot", 2, Arc::new(|a: &[&Mat]| blas::sdot(a[0], a[1])));
+        r
+    }
+
+    /// Register (or replace) a symbol.
+    pub fn register(&mut self, symbol: &str, arity: usize, f: SwFn) {
+        self.map.insert(
+            symbol.to_string(),
+            FuncEntry { symbol: symbol.to_string(), arity, f },
+        );
+    }
+
+    /// Resolve a symbol (the `dlsym` analogue).
+    pub fn resolve(&self, symbol: &str) -> Result<&FuncEntry> {
+        self.map
+            .get(symbol)
+            .ok_or_else(|| CourierError::UnknownSymbol(symbol.to_string()))
+    }
+
+    /// True iff the symbol is linkable.
+    pub fn contains(&self, symbol: &str) -> bool {
+        self.map.contains_key(symbol)
+    }
+
+    /// All registered symbols, sorted.
+    pub fn symbols(&self) -> Vec<&str> {
+        self.map.keys().map(String::as_str).collect()
+    }
+
+    /// Invoke a symbol directly (resolve + arity check + call).
+    pub fn call(&self, symbol: &str, args: &[&Mat]) -> Result<Mat> {
+        let entry = self.resolve(symbol)?;
+        if args.len() != entry.arity {
+            return Err(CourierError::ShapeMismatch {
+                context: symbol.to_string(),
+                expected: format!("{} args", entry.arity),
+                got: format!("{} args", args.len()),
+            });
+        }
+        (entry.f)(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth;
+
+    #[test]
+    fn standard_has_the_case_study_functions() {
+        let r = Registry::standard();
+        for sym in ["cv::cvtColor", "cv::cornerHarris", "cv::normalize", "cv::convertScaleAbs"] {
+            assert!(r.contains(sym), "{sym} missing");
+        }
+    }
+
+    #[test]
+    fn resolve_unknown_fails() {
+        let r = Registry::standard();
+        assert!(matches!(
+            r.resolve("cv::doesNotExist"),
+            Err(CourierError::UnknownSymbol(_))
+        ));
+    }
+
+    #[test]
+    fn call_checks_arity() {
+        let r = Registry::standard();
+        let img = synth::noise_gray(4, 4, 0);
+        let err = r.call("blas::sgemm", &[&img]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn call_dispatches() {
+        let r = Registry::standard();
+        let img = synth::noise_rgb(4, 4, 0);
+        let gray = r.call("cv::cvtColor", &[&img]).unwrap();
+        assert_eq!(gray.shape(), &[4, 4]);
+    }
+
+    #[test]
+    fn register_replaces() {
+        let mut r = Registry::standard();
+        r.register("cv::cvtColor", 1, Arc::new(|_: &[&Mat]| Ok(Mat::full(&[1, 1], 9.0))));
+        let out = r.call("cv::cvtColor", &[&Mat::zeros(&[2, 2])]).unwrap();
+        assert_eq!(out.as_slice(), &[9.0]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Raw trace records.
+
+use crate::image::{sampled_hash, Mat};
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// Shape + size + content hash of one buffer as observed at a call site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DataDesc {
+    /// Tensor shape.
+    pub shape: Vec<usize>,
+    /// Payload bytes (f32).
+    pub bytes: usize,
+    /// FNV-1a content fingerprint — the causality key.
+    pub hash: u64,
+}
+
+impl DataDesc {
+    /// Describe a tensor.
+    pub fn of(m: &Mat) -> Self {
+        Self {
+            shape: m.shape().to_vec(),
+            bytes: m.byte_len(),
+            hash: sampled_hash(m),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shape", Json::from_usizes(&self.shape)),
+            ("bytes", Json::Num(self.bytes as f64)),
+            // u64 hashes exceed f64's exact range: store as hex string
+            ("hash", Json::Str(format!("{:016x}", self.hash))),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            shape: v.req("shape")?.as_usize_vec()?,
+            bytes: v.req("bytes")?.as_usize()?,
+            hash: u64::from_str_radix(v.req("hash")?.as_str()?, 16)
+                .map_err(|e| crate::CourierError::Json(format!("bad hash: {e}")))?,
+        })
+    }
+}
+
+/// One observed library call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CallEvent {
+    /// Global sequence number (chronological).
+    pub seq: usize,
+    /// Call-site step index within the binary.
+    pub step: usize,
+    /// Library symbol.
+    pub symbol: String,
+    /// Start timestamp, ns since tracer epoch.
+    pub start_ns: u64,
+    /// End timestamp, ns since tracer epoch.
+    pub end_ns: u64,
+    /// Input buffer descriptors.
+    pub inputs: Vec<DataDesc>,
+    /// Output buffer descriptor.
+    pub output: DataDesc,
+}
+
+impl CallEvent {
+    /// Wall-clock duration of the call in ns.
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns - self.start_ns
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("step", Json::Num(self.step as f64)),
+            ("symbol", Json::Str(self.symbol.clone())),
+            ("start_ns", Json::Num(self.start_ns as f64)),
+            ("end_ns", Json::Num(self.end_ns as f64)),
+            ("inputs", Json::Arr(self.inputs.iter().map(DataDesc::to_json).collect())),
+            ("output", self.output.to_json()),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            seq: v.req("seq")?.as_usize()?,
+            step: v.req("step")?.as_usize()?,
+            symbol: v.req("symbol")?.as_str()?.to_string(),
+            start_ns: v.req("start_ns")?.as_u64()?,
+            end_ns: v.req("end_ns")?.as_u64()?,
+            inputs: v
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(DataDesc::from_json)
+                .collect::<Result<_>>()?,
+            output: DataDesc::from_json(v.req("output")?)?,
+        })
+    }
+}
+
+/// A full recording: the Frontend's Step-2 output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    /// Name of the traced binary.
+    pub program: String,
+    /// Chronological events (possibly spanning several frames).
+    pub events: Vec<CallEvent>,
+}
+
+impl Trace {
+    /// Number of frames observed, inferred from call-site repetition: the
+    /// trace has one frame per repetition of the smallest step index.
+    pub fn frames(&self) -> usize {
+        if self.events.is_empty() {
+            return 0;
+        }
+        let first = self.events.iter().map(|e| e.step).min().expect("non-empty");
+        self.events.iter().filter(|e| e.step == first).count()
+    }
+
+    /// Total traced time across all events, ns.
+    pub fn total_ns(&self) -> u64 {
+        self.events.iter().map(CallEvent::duration_ns).sum()
+    }
+
+    /// Serialize to JSON (the on-disk trace the `courier trace` CLI emits).
+    pub fn to_json(&self) -> Result<String> {
+        Ok(Json::obj(vec![
+            ("program", Json::Str(self.program.clone())),
+            ("events", Json::Arr(self.events.iter().map(CallEvent::to_json).collect())),
+        ])
+        .to_string_pretty())
+    }
+
+    /// Parse back from JSON.
+    pub fn from_json(s: &str) -> Result<Self> {
+        let v = json::parse(s)?;
+        Ok(Self {
+            program: v.req("program")?.as_str()?.to_string(),
+            events: v
+                .req("events")?
+                .as_arr()?
+                .iter()
+                .map(CallEvent::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq: usize, step: usize, sym: &str) -> CallEvent {
+        CallEvent {
+            seq,
+            step,
+            symbol: sym.into(),
+            start_ns: seq as u64 * 10,
+            end_ns: seq as u64 * 10 + 5,
+            inputs: vec![DataDesc { shape: vec![2, 2], bytes: 16, hash: 0xdead_beef_dead_beef }],
+            output: DataDesc { shape: vec![1], bytes: 4, hash: seq as u64 },
+        }
+    }
+
+    #[test]
+    fn frames_counts_step_repetition() {
+        let t = Trace {
+            program: "p".into(),
+            events: vec![ev(0, 0, "a"), ev(1, 1, "b"), ev(2, 0, "a"), ev(3, 1, "b")],
+        };
+        assert_eq!(t.frames(), 2);
+        assert_eq!(t.total_ns(), 20);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = Trace { program: "p".into(), events: vec![] };
+        assert_eq!(t.frames(), 0);
+        assert_eq!(t.total_ns(), 0);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_u64_hashes() {
+        let t = Trace { program: "p".into(), events: vec![ev(0, 0, "cv::x")] };
+        let s = t.to_json().unwrap();
+        let back = Trace::from_json(&s).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.events[0].inputs[0].hash, 0xdead_beef_dead_beef);
+    }
+}

@@ -1,0 +1,241 @@
+//! Call-graph reconstruction from raw events (paper Step 3).
+//!
+//! Uses only what a binary-level tracer can see: symbols, timestamps and
+//! buffer content hashes.  Two calls are causally linked iff an output
+//! hash reappears as an input hash later in the same frame — the "looks
+//! for the causal function call including input-output data" heuristic.
+
+use std::collections::HashMap;
+
+use super::event::{DataDesc, Trace};
+
+/// A logical function node (one per call site, aggregated over frames).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuncNode {
+    /// Node id == position in `CallGraph::funcs`.
+    pub id: usize,
+    /// Call-site step index (chronological rank of first observation).
+    pub step: usize,
+    /// Library symbol.
+    pub symbol: String,
+    /// Observations (== frames traced).
+    pub calls: usize,
+    /// Mean duration over observations, ns.
+    pub mean_ns: u64,
+    /// Total duration over observations, ns.
+    pub total_ns: u64,
+}
+
+/// A logical data node: a buffer flowing between two call sites.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataNode {
+    /// Node id == position in `CallGraph::data`.
+    pub id: usize,
+    /// Shape observed (stable across frames for a fixed-size binary).
+    pub shape: Vec<usize>,
+    /// Payload bytes.
+    pub bytes: usize,
+    /// Producing function node, if any (None == external input).
+    pub producer: Option<usize>,
+    /// Consuming function nodes (arg position ignored).
+    pub consumers: Vec<usize>,
+}
+
+/// The reconstructed function call graph including input-output data —
+/// the Frontend's deliverable (rendered as Fig. 4 by `ir::to_dot`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CallGraph {
+    /// Traced binary name.
+    pub program: String,
+    /// Frames aggregated.
+    pub frames: usize,
+    /// Function nodes in chronological (step) order.
+    pub funcs: Vec<FuncNode>,
+    /// Data nodes.
+    pub data: Vec<DataNode>,
+}
+
+impl CallGraph {
+    /// Reconstruct the graph from a trace.
+    pub fn from_trace(trace: &Trace) -> Self {
+        // Aggregate function stats per call site (step index).
+        let mut by_step: HashMap<usize, FuncNode> = HashMap::new();
+        for e in &trace.events {
+            let node = by_step.entry(e.step).or_insert_with(|| FuncNode {
+                id: 0,
+                step: e.step,
+                symbol: e.symbol.clone(),
+                calls: 0,
+                mean_ns: 0,
+                total_ns: 0,
+            });
+            node.calls += 1;
+            node.total_ns += e.duration_ns();
+        }
+        let mut funcs: Vec<FuncNode> = by_step.into_values().collect();
+        funcs.sort_by_key(|f| f.step);
+        for (i, f) in funcs.iter_mut().enumerate() {
+            f.id = i;
+            f.mean_ns = f.total_ns / f.calls.max(1) as u64;
+        }
+        let step_to_id: HashMap<usize, usize> =
+            funcs.iter().map(|f| (f.step, f.id)).collect();
+
+        // Causality: hash -> producing call site, then match consumer
+        // input hashes.  Logical data edges are keyed by
+        // (producer site or None, consumer site, arg shape) and
+        // deduplicated across frames.
+        let mut producer_of_hash: HashMap<u64, usize> = HashMap::new();
+        #[allow(clippy::type_complexity)]
+        let mut edges: HashMap<(Option<usize>, usize), (DataDesc, Vec<usize>)> = HashMap::new();
+        let mut edge_order: Vec<(Option<usize>, usize)> = Vec::new();
+        for e in &trace.events {
+            let consumer = step_to_id[&e.step];
+            for input in &e.inputs {
+                let producer = producer_of_hash.get(&input.hash).copied();
+                let key_site = producer.map(|p| funcs[p].step);
+                let key = (key_site, e.step);
+                let entry = edges.entry(key).or_insert_with(|| {
+                    edge_order.push(key);
+                    (input.clone(), Vec::new())
+                });
+                if !entry.1.contains(&consumer) {
+                    entry.1.push(consumer);
+                }
+            }
+            producer_of_hash.insert(e.output.hash, step_to_id[&e.step]);
+        }
+
+        // Terminal outputs: hashes produced but never consumed.
+        let consumed: std::collections::HashSet<u64> = trace
+            .events
+            .iter()
+            .flat_map(|e| e.inputs.iter().map(|d| d.hash))
+            .collect();
+        let mut terminal: Vec<(usize, DataDesc)> = Vec::new();
+        let mut seen_terminal: std::collections::HashSet<usize> = Default::default();
+        for e in &trace.events {
+            if !consumed.contains(&e.output.hash) {
+                let fid = step_to_id[&e.step];
+                if seen_terminal.insert(fid) {
+                    terminal.push((fid, e.output.clone()));
+                }
+            }
+        }
+
+        let mut data = Vec::new();
+        for key in &edge_order {
+            let (desc, consumers) = &edges[key];
+            let producer = key.0.map(|s| step_to_id[&s]);
+            data.push(DataNode {
+                id: data.len(),
+                shape: desc.shape.clone(),
+                bytes: desc.bytes,
+                producer,
+                consumers: consumers.clone(),
+            });
+        }
+        for (fid, desc) in terminal {
+            data.push(DataNode {
+                id: data.len(),
+                shape: desc.shape.clone(),
+                bytes: desc.bytes,
+                producer: Some(fid),
+                consumers: vec![],
+            });
+        }
+
+        CallGraph {
+            program: trace.program.clone(),
+            frames: trace.frames(),
+            funcs,
+            data,
+        }
+    }
+
+    /// Is the traced flow a simple linear chain (each producer feeds
+    /// exactly the next step)?  Linear chains are what the Pipeline
+    /// Generator currently handles (the paper defers branches/loops to
+    /// future work).
+    pub fn is_linear_chain(&self) -> bool {
+        for d in &self.data {
+            if d.consumers.len() > 1 {
+                return false;
+            }
+            if let (Some(p), Some(&c)) = (d.producer, d.consumers.first()) {
+                if c != p + 1 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Share of total time spent in each function (the "cornerHarris is
+    /// 65% of the whole" observation).
+    pub fn time_shares(&self) -> Vec<(String, f64)> {
+        let total: u64 = self.funcs.iter().map(|f| f.total_ns).sum();
+        self.funcs
+            .iter()
+            .map(|f| (f.symbol.clone(), f.total_ns as f64 / total.max(1) as f64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::corner_harris_demo;
+    use crate::image::synth;
+    use crate::trace::trace_program;
+
+    fn graph_for(h: usize, w: usize, frames: usize) -> CallGraph {
+        let prog = corner_harris_demo(h, w);
+        let inputs: Vec<Vec<crate::image::Mat>> =
+            (0..frames).map(|s| vec![synth::noise_rgb(h, w, s as u64)]).collect();
+        let t = trace_program(&prog, &inputs).unwrap();
+        CallGraph::from_trace(&t)
+    }
+
+    #[test]
+    fn reconstructs_four_node_chain() {
+        let g = graph_for(8, 10, 1);
+        assert_eq!(g.funcs.len(), 4);
+        assert_eq!(
+            g.funcs.iter().map(|f| f.symbol.as_str()).collect::<Vec<_>>(),
+            vec!["cv::cvtColor", "cv::cornerHarris", "cv::normalize", "cv::convertScaleAbs"]
+        );
+        assert!(g.is_linear_chain(), "{g:?}");
+    }
+
+    #[test]
+    fn aggregates_over_frames() {
+        let g = graph_for(8, 10, 3);
+        assert_eq!(g.frames, 3);
+        for f in &g.funcs {
+            assert_eq!(f.calls, 3);
+            assert!(f.total_ns >= f.mean_ns);
+        }
+    }
+
+    #[test]
+    fn data_nodes_have_external_input_and_terminal_output() {
+        let g = graph_for(8, 10, 1);
+        // frame (external, no producer) feeds cvtColor
+        let external: Vec<_> = g.data.iter().filter(|d| d.producer.is_none()).collect();
+        assert_eq!(external.len(), 1);
+        assert_eq!(external[0].consumers, vec![0]);
+        assert_eq!(external[0].shape, vec![8, 10, 3]);
+        // terminal node produced by the last func, unconsumed
+        let terminal: Vec<_> = g.data.iter().filter(|d| d.consumers.is_empty()).collect();
+        assert_eq!(terminal.len(), 1);
+        assert_eq!(terminal[0].producer, Some(3));
+    }
+
+    #[test]
+    fn time_shares_sum_to_one() {
+        let g = graph_for(16, 16, 2);
+        let total: f64 = g.time_shares().iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,164 @@
+//! Frontend: dynamic analysis of the running binary (paper Steps 1–3).
+//!
+//! The [`Tracer`] is an interposing [`Dispatch`] — the `LD_PRELOAD` shim.
+//! It forwards every call to the real library while recording a
+//! [`CallEvent`]: symbol, wall-clock start/end, and a content hash of each
+//! input/output buffer.  From those events alone (no program source), the
+//! graph builder reconstructs the *causal function call graph including
+//! input-output data*: two calls are connected iff one's output hash
+//! equals the other's input hash.
+
+mod event;
+mod graph;
+mod profile;
+
+pub use event::{CallEvent, DataDesc, Trace};
+pub use graph::{CallGraph, DataNode, FuncNode};
+pub use profile::{FunctionProfile, Profile};
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::app::{CallSite, Dispatch};
+use crate::image::{sampled_hash, Mat};
+use crate::Result;
+
+/// Interposing dispatch that records every library call.
+pub struct Tracer {
+    inner: Arc<dyn Dispatch>,
+    epoch: Instant,
+    events: Mutex<Vec<CallEvent>>,
+}
+
+impl Tracer {
+    /// Wrap an existing dispatch (usually `RegistryDispatch`).
+    pub fn new(inner: Arc<dyn Dispatch>) -> Arc<Self> {
+        Arc::new(Self {
+            inner,
+            epoch: Instant::now(),
+            events: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Number of recorded events so far.
+    pub fn event_count(&self) -> usize {
+        self.events.lock().expect("tracer lock").len()
+    }
+
+    /// Snapshot the recorded trace.
+    pub fn trace(&self, program_name: &str) -> Trace {
+        Trace {
+            program: program_name.to_string(),
+            events: self.events.lock().expect("tracer lock").clone(),
+        }
+    }
+
+    /// Clear recorded events (e.g. to skip a warm-up frame, like the paper
+    /// ignoring the one-time `imread`).
+    pub fn reset(&self) {
+        self.events.lock().expect("tracer lock").clear();
+    }
+}
+
+impl Dispatch for Tracer {
+    fn call(&self, site: CallSite<'_>, args: &[&Mat]) -> Result<Mat> {
+        let inputs: Vec<DataDesc> = args.iter().map(|m| DataDesc::of(m)).collect();
+        let start = self.epoch.elapsed().as_nanos() as u64;
+        let out = self.inner.call(site, args)?;
+        let end = self.epoch.elapsed().as_nanos() as u64;
+        let event = CallEvent {
+            seq: 0, // fixed up under the lock below
+            step: site.step,
+            symbol: site.symbol.to_string(),
+            start_ns: start,
+            end_ns: end,
+            inputs,
+            output: DataDesc::of(&out),
+        };
+        let mut events = self.events.lock().expect("tracer lock");
+        let mut event = event;
+        event.seq = events.len();
+        events.push(event);
+        Ok(out)
+    }
+}
+
+/// Convenience: run `frames` through `program` under a tracer over the
+/// standard library and return the trace (Steps 1–2 in one call).
+pub fn trace_program(
+    program: &crate::app::Program,
+    frames: &[Vec<Mat>],
+) -> Result<Trace> {
+    let tracer = Tracer::new(Arc::new(crate::app::RegistryDispatch::standard()));
+    let interp = crate::app::Interpreter::new(program.clone(), tracer.clone());
+    for frame in frames {
+        interp.run(frame)?;
+    }
+    Ok(tracer.trace(&program.name))
+}
+
+/// Hash helper re-exported for tests.
+pub fn hash_of(m: &Mat) -> u64 {
+    sampled_hash(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::{corner_harris_demo, Interpreter, RegistryDispatch};
+    use crate::image::synth;
+
+    #[test]
+    fn tracer_records_all_calls_in_order() {
+        let prog = corner_harris_demo(8, 10);
+        let tracer = Tracer::new(Arc::new(RegistryDispatch::standard()));
+        let interp = Interpreter::new(prog, tracer.clone());
+        interp.run(&[synth::noise_rgb(8, 10, 0)]).unwrap();
+        let t = tracer.trace("cornerHarris_Demo");
+        assert_eq!(t.events.len(), 4);
+        let syms: Vec<&str> = t.events.iter().map(|e| e.symbol.as_str()).collect();
+        assert_eq!(
+            syms,
+            vec!["cv::cvtColor", "cv::cornerHarris", "cv::normalize", "cv::convertScaleAbs"]
+        );
+        // timestamps are monotone and inclusive
+        for w in t.events.windows(2) {
+            assert!(w[0].end_ns <= w[1].start_ns);
+        }
+        for e in &t.events {
+            assert!(e.start_ns <= e.end_ns);
+        }
+    }
+
+    #[test]
+    fn hashes_link_producer_to_consumer() {
+        let prog = corner_harris_demo(8, 10);
+        let tracer = Tracer::new(Arc::new(RegistryDispatch::standard()));
+        let interp = Interpreter::new(prog, tracer.clone());
+        interp.run(&[synth::noise_rgb(8, 10, 1)]).unwrap();
+        let t = tracer.trace("x");
+        // cvtColor's output is cornerHarris's input
+        assert_eq!(t.events[0].output.hash, t.events[1].inputs[0].hash);
+        assert_eq!(t.events[1].output.hash, t.events[2].inputs[0].hash);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let prog = corner_harris_demo(8, 10);
+        let tracer = Tracer::new(Arc::new(RegistryDispatch::standard()));
+        let interp = Interpreter::new(prog, tracer.clone());
+        interp.run(&[synth::noise_rgb(8, 10, 0)]).unwrap();
+        assert_eq!(tracer.event_count(), 4);
+        tracer.reset();
+        assert_eq!(tracer.event_count(), 0);
+    }
+
+    #[test]
+    fn trace_program_helper_multi_frame() {
+        let prog = corner_harris_demo(8, 10);
+        let frames: Vec<Vec<Mat>> = (0..3).map(|s| vec![synth::noise_rgb(8, 10, s)]).collect();
+        let t = trace_program(&prog, &frames).unwrap();
+        assert_eq!(t.events.len(), 12);
+        assert_eq!(t.frames(), 3);
+    }
+}

@@ -1,0 +1,146 @@
+//! Per-function runtime profile — the numbers the Pipeline Generator's
+//! partition policy consumes ("processing time of software functions can
+//! be obtained in the analyzed data from the Frontend").
+
+use super::event::Trace;
+use super::graph::CallGraph;
+
+/// Aggregated statistics for one call site.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FunctionProfile {
+    /// Call-site step index.
+    pub step: usize,
+    /// Library symbol.
+    pub symbol: String,
+    /// Observations.
+    pub calls: usize,
+    /// Mean duration, ns.
+    pub mean_ns: u64,
+    /// Min duration, ns.
+    pub min_ns: u64,
+    /// Max duration, ns.
+    pub max_ns: u64,
+    /// Mean input payload, bytes.
+    pub input_bytes: usize,
+    /// Mean output payload, bytes.
+    pub output_bytes: usize,
+}
+
+/// Profile of a whole traced binary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Profile {
+    /// Traced binary name.
+    pub program: String,
+    /// Frames observed.
+    pub frames: usize,
+    /// Per-call-site stats in step order.
+    pub functions: Vec<FunctionProfile>,
+}
+
+impl Profile {
+    /// Build from a raw trace.
+    pub fn from_trace(trace: &Trace) -> Self {
+        use std::collections::BTreeMap;
+        let mut agg: BTreeMap<usize, FunctionProfile> = BTreeMap::new();
+        let mut counts: BTreeMap<usize, (u64, usize, usize)> = BTreeMap::new();
+        for e in &trace.events {
+            let p = agg.entry(e.step).or_insert_with(|| FunctionProfile {
+                step: e.step,
+                symbol: e.symbol.clone(),
+                calls: 0,
+                mean_ns: 0,
+                min_ns: u64::MAX,
+                max_ns: 0,
+                input_bytes: 0,
+                output_bytes: 0,
+            });
+            let d = e.duration_ns();
+            p.calls += 1;
+            p.min_ns = p.min_ns.min(d);
+            p.max_ns = p.max_ns.max(d);
+            let c = counts.entry(e.step).or_insert((0, 0, 0));
+            c.0 += d;
+            c.1 += e.inputs.iter().map(|i| i.bytes).sum::<usize>();
+            c.2 += e.output.bytes;
+        }
+        for (step, p) in agg.iter_mut() {
+            let (total, ib, ob) = counts[step];
+            p.mean_ns = total / p.calls.max(1) as u64;
+            p.input_bytes = ib / p.calls.max(1);
+            p.output_bytes = ob / p.calls.max(1);
+        }
+        Profile {
+            program: trace.program.clone(),
+            frames: trace.frames(),
+            functions: agg.into_values().collect(),
+        }
+    }
+
+    /// Build from an already-reconstructed graph (mean times only).
+    pub fn from_graph(graph: &CallGraph) -> Self {
+        Profile {
+            program: graph.program.clone(),
+            frames: graph.frames,
+            functions: graph
+                .funcs
+                .iter()
+                .map(|f| FunctionProfile {
+                    step: f.step,
+                    symbol: f.symbol.clone(),
+                    calls: f.calls,
+                    mean_ns: f.mean_ns,
+                    min_ns: f.mean_ns,
+                    max_ns: f.mean_ns,
+                    input_bytes: 0,
+                    output_bytes: 0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Total mean frame time, ns (sum over call sites).
+    pub fn frame_ns(&self) -> u64 {
+        self.functions.iter().map(|f| f.mean_ns).sum()
+    }
+
+    /// Mean time of one symbol, if present.
+    pub fn mean_ns_of(&self, symbol: &str) -> Option<u64> {
+        self.functions.iter().find(|f| f.symbol == symbol).map(|f| f.mean_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::corner_harris_demo;
+    use crate::image::synth;
+    use crate::trace::trace_program;
+
+    #[test]
+    fn profile_aggregates_frames() {
+        let prog = corner_harris_demo(16, 16);
+        let frames: Vec<_> = (0..4).map(|s| vec![synth::noise_rgb(16, 16, s)]).collect();
+        let t = trace_program(&prog, &frames).unwrap();
+        let p = Profile::from_trace(&t);
+        assert_eq!(p.frames, 4);
+        assert_eq!(p.functions.len(), 4);
+        for f in &p.functions {
+            assert_eq!(f.calls, 4);
+            assert!(f.min_ns <= f.mean_ns && f.mean_ns <= f.max_ns);
+        }
+        assert!(p.frame_ns() > 0);
+        assert!(p.mean_ns_of("cv::cornerHarris").is_some());
+        assert!(p.mean_ns_of("cv::nope").is_none());
+    }
+
+    #[test]
+    fn io_bytes_recorded() {
+        let prog = corner_harris_demo(8, 8);
+        let t = trace_program(&prog, &[vec![synth::noise_rgb(8, 8, 0)]]).unwrap();
+        let p = Profile::from_trace(&t);
+        // cvtColor: input (8,8,3) f32 = 768 B, output (8,8) f32 = 256 B
+        let f = &p.functions[0];
+        assert_eq!(f.input_bytes, 768);
+        assert_eq!(f.output_bytes, 256);
+    }
+}

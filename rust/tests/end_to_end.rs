@@ -1,0 +1,314 @@
+//! Integration: the full Courier flow over real AOT artifacts + PJRT.
+//!
+//! Every test here requires `make artifacts` to have run; they fail loudly
+//! (rather than skip) because the integration suite *is* the proof that
+//! the three layers compose.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use courier::app::{corner_harris_demo, edge_demo, Interpreter, RegistryDispatch};
+use courier::config::{Config, PartitionPolicy};
+use courier::hwdb::HwDatabase;
+use courier::image::{synth, Mat};
+use courier::ir::Ir;
+use courier::offload::{Deployment, OffloadPath};
+use courier::pipeline::TaskKind;
+use courier::runtime::Runtime;
+use courier::swlib::Registry;
+use courier::trace::{trace_program, CallGraph};
+
+fn artifacts_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.json").exists(),
+        "integration tests need `make artifacts` (no manifest in {dir:?})"
+    );
+    dir
+}
+
+fn build_for(
+    program: &courier::app::Program,
+    cfg: &Config,
+) -> (Ir, Arc<courier::pipeline::BuiltPipeline>) {
+    let inputs: Vec<Vec<Mat>> = (0..2)
+        .map(|s| {
+            program
+                .inputs
+                .iter()
+                .map(|(_, shape)| match shape.len() {
+                    3 => synth::noise_rgb(shape[0], shape[1], s),
+                    _ => synth::noise_gray(shape[0], shape[1], s),
+                })
+                .collect()
+        })
+        .collect();
+    let trace = trace_program(program, &inputs).unwrap();
+    let ir = Ir::from_graph(&CallGraph::from_trace(&trace)).unwrap();
+    let db = HwDatabase::load(&cfg.artifacts_dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let built = courier::pipeline::build(&ir, &db, &rt, &Registry::standard(), cfg).unwrap();
+    (ir, Arc::new(built))
+}
+
+#[test]
+fn corner_harris_all_steps_compose() {
+    let cfg = Config { artifacts_dir: artifacts_dir(), ..Default::default() };
+    let program = corner_harris_demo(48, 64);
+    let (ir, built) = build_for(&program, &cfg);
+
+    // paper placement: 3 FPGA + 1 CPU
+    assert_eq!(built.plan.placement_counts(), (3, 1));
+    // normalize is the CPU task
+    let sw_syms: Vec<&str> = built
+        .plan
+        .stages
+        .iter()
+        .flat_map(|s| &s.tasks)
+        .filter(|t| matches!(t.kind, TaskKind::Sw))
+        .map(|t| t.symbol.as_str())
+        .collect();
+    assert_eq!(sw_syms, vec!["cv::normalize"]);
+
+    // deploy, stream, verify each frame against the unhooked binary
+    let dep = Deployment::new(program.clone(), Arc::new(RegistryDispatch::standard()), built);
+    let frames: Vec<Mat> = (0..6).map(|s| synth::noise_rgb(48, 64, 100 + s)).collect();
+    let (outs, stats) = dep.run_stream(frames.clone()).unwrap();
+    let stats = stats.expect("whole-program deployment must stream");
+    assert_eq!(stats.frames, 6);
+    let original = Interpreter::new(program, Arc::new(RegistryDispatch::standard()));
+    for (i, f) in frames.into_iter().enumerate() {
+        let want = original.run(&[f]).unwrap().remove(0);
+        assert!(
+            outs[i].quantized_close(&want, 1.0, 1e-3),
+            "frame {i}: max diff {}",
+            outs[i].max_abs_diff(&want)
+        );
+    }
+    assert_eq!(ir.funcs.len(), 4);
+}
+
+#[test]
+fn edge_demo_db_miss_falls_back_to_cpu() {
+    let cfg = Config { artifacts_dir: artifacts_dir(), ..Default::default() };
+    let program = edge_demo(48, 64);
+    let (_, built) = build_for(&program, &cfg);
+    // dilate has no enabled module -> CPU
+    let dilate = built
+        .plan
+        .stages
+        .iter()
+        .flat_map(|s| &s.tasks)
+        .find(|t| t.symbol == "cv::dilate")
+        .expect("dilate task present");
+    assert!(matches!(dilate.kind, TaskKind::Sw));
+    // the five with modules are FPGA
+    assert_eq!(built.plan.placement_counts().0, 5);
+
+    // functional equivalence end-to-end
+    let dep = Deployment::new(program.clone(), Arc::new(RegistryDispatch::standard()), built);
+    let frame = synth::checkerboard(48, 64, 8);
+    let got = dep.run_frame(&[frame.clone()]).unwrap().remove(0);
+    let original = Interpreter::new(program, Arc::new(RegistryDispatch::standard()));
+    let want = original.run(&[frame]).unwrap().remove(0);
+    assert!(got.quantized_close(&want, 1.0, 2e-3)); // threshold flips possible
+}
+
+#[test]
+fn every_enabled_module_matches_its_cpu_twin() {
+    // The fundamental correctness contract of the mixed pipeline: for
+    // every enabled image module and every compiled size, the artifact and
+    // the swlib implementation agree.
+    let dir = artifacts_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let registry = Registry::standard();
+    let mut checked = 0;
+    for m in &db.manifest().modules {
+        if !m.enabled || m.kind == "gemm" {
+            continue;
+        }
+        if !registry.contains(&m.library_symbol) {
+            continue; // fused module: composition is tested elsewhere
+        }
+        // smallest variant keeps the test fast
+        let v = m
+            .variants
+            .iter()
+            .min_by_key(|v| v.size.iter().product::<usize>())
+            .unwrap();
+        let exe = rt.load_hlo_text(&dir.join(&v.artifact)).unwrap();
+        let input = match v.inputs[0].shape.len() {
+            3 => synth::noise_rgb(v.inputs[0].shape[0], v.inputs[0].shape[1], 7),
+            _ => synth::noise_gray(v.inputs[0].shape[0], v.inputs[0].shape[1], 7),
+        };
+        let hw = exe.run(&[&input]).unwrap();
+        let sw = registry.call(&m.library_symbol, &[&input]).unwrap();
+        let scale = sw.max().abs().max(sw.min().abs()).max(1.0);
+        assert!(
+            hw.allclose(&sw, 1e-3, 1e-3 * scale),
+            "{}: hw vs sw max diff {} (scale {scale})",
+            m.name,
+            hw.max_abs_diff(&sw)
+        );
+        checked += 1;
+    }
+    assert!(checked >= 6, "only {checked} modules checked");
+}
+
+#[test]
+fn gemm_module_matches_blas() {
+    let dir = artifacts_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let a = synth::random_matrix(128, 128, 1);
+    let b = synth::random_matrix(128, 128, 2);
+    let hit = db
+        .lookup("blas::sgemm", &[&[128, 128][..], &[128, 128][..]])
+        .expect("gemm module");
+    let exe = rt.load_hlo_text(&hit.artifact_path(&db)).unwrap();
+    let hw = exe.run(&[&a, &b]).unwrap();
+    let sw = courier::swlib::blas::sgemm(&a, &b).unwrap();
+    assert!(hw.allclose(&sw, 1e-3, 1e-2), "max diff {}", hw.max_abs_diff(&sw));
+}
+
+#[test]
+fn missing_artifact_file_fails_cleanly() {
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let err = rt.load_hlo_text(&dir.join("hls_nonexistent__1x1.hlo.txt")).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"));
+}
+
+#[test]
+fn shape_mismatch_fails_cleanly() {
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(&dir.join("hls_threshold__48x64.hlo.txt")).unwrap();
+    // wrong shape: the PJRT layer rejects it (donated error, not UB)
+    let wrong = synth::noise_gray(32, 32, 0);
+    assert!(exe.run(&[&wrong]).is_err());
+}
+
+#[test]
+fn corrupted_artifact_fails_cleanly() {
+    use courier::util::testing::TempDir;
+    let tmp = TempDir::new("corrupt").unwrap();
+    let bad = tmp.path().join("bad.hlo.txt");
+    std::fs::write(&bad, "HloModule broken\n\nENTRY main {\n  this is not hlo\n}\n").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    // compile happens on the fabric thread; the error must surface as a
+    // clean Err, not a crash or hang
+    assert!(rt.load_hlo_text(&bad).is_err());
+
+    let truncated = tmp.path().join("trunc.hlo.txt");
+    let real = std::fs::read_to_string(artifacts_dir().join("hls_threshold__48x64.hlo.txt")).unwrap();
+    std::fs::write(&truncated, &real[..real.len() / 2]).unwrap();
+    assert!(rt.load_hlo_text(&truncated).is_err());
+}
+
+#[test]
+fn corrupted_manifest_fails_cleanly() {
+    use courier::util::testing::TempDir;
+    let tmp = TempDir::new("badmanifest").unwrap();
+    std::fs::write(tmp.path().join("manifest.json"), "{\"version\": 99}").unwrap();
+    let err = HwDatabase::load(tmp.path()).unwrap_err();
+    assert!(err.to_string().contains("json") || err.to_string().contains("version"), "{err}");
+
+    std::fs::write(tmp.path().join("manifest.json"), "not json at all").unwrap();
+    assert!(HwDatabase::load(tmp.path()).is_err());
+}
+
+#[test]
+fn new_library_modules_served_end_to_end() {
+    // the paper claims adding library functions is easy: laplacian, scharr
+    // and medianBlur were added as one catalog row each — trace a program
+    // using them, build, deploy, verify.
+    let prog = courier::app::parse_program(
+        "program extra_demo\n\
+         input frame 48x64x3\n\
+         call gray = cv::cvtColor(frame)\n\
+         call med = cv::medianBlur(gray)\n\
+         call lap = cv::Laplacian(med)\n\
+         call mag = cv::convertScaleAbs(lap)\n\
+         output mag\n",
+    )
+    .unwrap();
+    let cfg = Config { artifacts_dir: artifacts_dir(), ..Default::default() };
+    let (_, built) = build_for(&prog, &cfg);
+    assert_eq!(built.plan.placement_counts().0, 4, "all four on the fabric");
+    let dep = Deployment::new(prog.clone(), Arc::new(RegistryDispatch::standard()), built);
+    let frame = synth::checkerboard(48, 64, 8);
+    let got = dep.run_frame(&[frame.clone()]).unwrap().remove(0);
+    let original = Interpreter::new(prog, Arc::new(RegistryDispatch::standard()));
+    let want = original.run(&[frame]).unwrap().remove(0);
+    assert!(got.quantized_close(&want, 1.0, 1e-3), "max diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn switcher_round_trip_under_load() {
+    let cfg = Config { artifacts_dir: artifacts_dir(), ..Default::default() };
+    let program = corner_harris_demo(48, 64);
+    let (_, built) = build_for(&program, &cfg);
+    let dep = Deployment::new(program, Arc::new(RegistryDispatch::standard()), built);
+    let frame = synth::noise_rgb(48, 64, 3);
+
+    let offloaded = dep.run_frame(std::slice::from_ref(&frame)).unwrap().remove(0);
+    dep.switcher().set(OffloadPath::Original);
+    let original = dep.run_frame(std::slice::from_ref(&frame)).unwrap().remove(0);
+    dep.switcher().set(OffloadPath::Offloaded);
+    let offloaded2 = dep.run_frame(std::slice::from_ref(&frame)).unwrap().remove(0);
+
+    assert!(offloaded.quantized_close(&original, 1.0, 1e-3));
+    assert_eq!(offloaded, offloaded2, "offloaded path must be deterministic");
+}
+
+#[test]
+fn policies_agree_on_results_differ_on_structure() {
+    let program = corner_harris_demo(48, 64);
+    let frame = synth::noise_rgb(48, 64, 11);
+    let mut outs: Vec<Mat> = Vec::new();
+    let mut stage_counts = Vec::new();
+    for policy in [
+        PartitionPolicy::Paper,
+        PartitionPolicy::Optimal,
+        PartitionPolicy::PerFunction,
+        PartitionPolicy::Single,
+    ] {
+        let cfg = Config { artifacts_dir: artifacts_dir(), policy, ..Default::default() };
+        let (_, built) = build_for(&program, &cfg);
+        stage_counts.push(built.plan.stages.len());
+        outs.push(built.process_one(frame.clone()).unwrap());
+    }
+    for pair in outs.windows(2) {
+        assert!(pair[0].quantized_close(&pair[1], 1.0, 1e-3), "policies disagree on data");
+    }
+    assert_eq!(stage_counts[2], 4); // per-function
+    assert_eq!(stage_counts[3], 1); // single
+    assert!(stage_counts[0] <= 3); // paper: threads+1
+}
+
+#[test]
+fn multi_size_variants_all_build() {
+    // the corner-harris demo must build at every compiled image size
+    for (h, w) in [(48, 64), (240, 320)] {
+        let cfg = Config { artifacts_dir: artifacts_dir(), ..Default::default() };
+        let program = corner_harris_demo(h, w);
+        let (_, built) = build_for(&program, &cfg);
+        let out = built.process_one(synth::noise_rgb(h, w, 0)).unwrap();
+        assert_eq!(out.shape(), &[h, w]);
+    }
+}
+
+#[test]
+fn unknown_size_fails_with_db_context() {
+    // 47x63 was never AOT-compiled: lookup misses, so everything lands on
+    // the CPU — the binary still runs (graceful degradation), just without
+    // acceleration.
+    let cfg = Config { artifacts_dir: artifacts_dir(), ..Default::default() };
+    let program = corner_harris_demo(47, 63);
+    let (_, built) = build_for(&program, &cfg);
+    assert_eq!(built.plan.placement_counts().0, 0, "no hw for unknown size");
+    let out = built.process_one(synth::noise_rgb(47, 63, 0)).unwrap();
+    assert_eq!(out.shape(), &[47, 63]);
+}
