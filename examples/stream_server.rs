@@ -1,29 +1,26 @@
-//! Streaming "camera server": continuous deployed operation with live
-//! metrics — the long-running service shape a downstream user would run.
+//! Multi-tenant streaming server: several heterogeneous sessions served
+//! concurrently through `courier::serve` — the long-running service shape
+//! a downstream user would run.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example stream_server [-- seconds]
 //! ```
 //!
-//! A producer thread emits frames at a fixed rate into the deployed
-//! corner-Harris pipeline in windows (batches); the server reports
-//! per-window throughput, p50/p99 window latency, and pipeline occupancy,
-//! then flips the Off-loader Switcher back to the original path mid-run to
-//! demonstrate live fallback (the paper's Step 9 switcher).
+//! Four tenants share one server: corner-Harris at two shapes and the
+//! edge pipeline, plus a *fourth* session that repeats the first spec to
+//! demonstrate the plan cache (its open is warm: no trace, no partition,
+//! no PJRT compile).  Each tenant's client thread streams frames with
+//! backpressure; the scheduler round-robins all sessions over a bounded
+//! worker pool with exclusive per-module fabric slots.  The run ends with
+//! the per-session serving report (throughput, p50/p99, queue, cache).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use courier::app::{corner_harris_demo, RegistryDispatch};
+use courier::app::{corner_harris_demo, edge_demo};
 use courier::config::Config;
-use courier::hwdb::HwDatabase;
 use courier::image::synth;
-use courier::ir::Ir;
-use courier::metrics::{Latency, Throughput};
-use courier::offload::{Deployment, OffloadPath};
-use courier::runtime::Runtime;
-use courier::swlib::Registry;
-use courier::trace::{trace_program, CallGraph};
+use courier::serve::{Server, SessionSpec};
 
 fn main() -> anyhow::Result<()> {
     let secs: u64 = std::env::args()
@@ -31,83 +28,72 @@ fn main() -> anyhow::Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(6);
-    let (h, w) = (240, 320);
-    let window = 8usize;
 
-    // build + deploy
-    let program = corner_harris_demo(h, w);
-    let cfg = Config::default();
-    let inputs: Vec<_> = (0..3).map(|s| vec![synth::noise_rgb(h, w, s)]).collect();
-    let ir = Ir::from_graph(&CallGraph::from_trace(&trace_program(&program, &inputs)?))?;
-    let db = HwDatabase::load(&cfg.artifacts_dir)?;
-    let rt = Runtime::cpu()?;
-    let built = Arc::new(courier::pipeline::build(&ir, &db, &rt, &Registry::standard(), &cfg)?);
-    let dep = Deployment::new(program, Arc::new(RegistryDispatch::standard()), built.clone());
-    println!(
-        "serving corner-Harris {h}x{w}, window {window}, {} stages, ~{secs}s run",
-        built.plan.stages.len()
-    );
+    let mut cfg = Config::default();
+    cfg.serve.workers = 4;
+    cfg.serve.queue_depth = 8;
+    let server = Arc::new(Server::new(cfg)?);
 
-    let throughput = Throughput::new();
-    let window_latency = Latency::default();
-    let t_end = Instant::now() + Duration::from_secs(secs);
-    let mut window_id = 0u64;
-    let mut flipped = false;
+    // heterogeneous tenants; the last repeats the first spec -> warm open
+    let tenants: Vec<(&str, courier::app::Program)> = vec![
+        ("harris-240p", corner_harris_demo(240, 320)),
+        ("harris-small", corner_harris_demo(48, 64)),
+        ("edge-240p", edge_demo(240, 320)),
+        ("harris-240p-b", corner_harris_demo(240, 320)),
+    ];
 
-    while Instant::now() < t_end {
-        // halfway through, flip to the original path and back (live switch)
-        if !flipped && Instant::now() + Duration::from_secs(secs / 2) > t_end {
-            dep.switcher().set(OffloadPath::Original);
-            let frames: Vec<_> = (0..window)
-                .map(|i| synth::noise_rgb(h, w, window_id * 100 + i as u64))
-                .collect();
-            let t0 = Instant::now();
-            let (outs, stats) = dep.run_stream(frames)?;
-            assert_eq!(outs.len(), window);
-            assert!(stats.is_none(), "original path must not stream-pipeline");
-            println!(
-                "  [switcher] original path window: {:>6.1} ms — switching back",
-                t0.elapsed().as_secs_f64() * 1e3
-            );
-            dep.switcher().set(OffloadPath::Offloaded);
-            flipped = true;
-            continue;
-        }
-
-        let frames: Vec<_> = (0..window)
-            .map(|i| synth::noise_rgb(h, w, window_id * 100 + i as u64))
-            .collect();
+    let mut sessions = Vec::new();
+    for (name, prog) in tenants {
         let t0 = Instant::now();
-        let (outs, stats) = dep.run_stream(frames)?;
-        let dt = t0.elapsed();
-        window_latency.record(dt);
-        throughput.add(outs.len() as u64);
-        if window_id % 4 == 0 {
-            let occ: Vec<String> = stats
-                .map(|st| {
-                    (0..built.plan.stages.len())
-                        .map(|i| format!("{:.0}%", st.stage_occupancy(i) * 100.0))
-                        .collect()
-                })
-                .unwrap_or_default();
-            println!(
-                "  window {window_id:>3}: {:>6.1} ms ({:.1} fps cumulative)  occ {}",
-                dt.as_secs_f64() * 1e3,
-                throughput.per_sec(),
-                occ.join("/")
-            );
-        }
-        window_id += 1;
+        let session = server.open(SessionSpec::new(prog).named(name))?;
+        println!(
+            "opened {:<14} {} in {:>8.2} ms  ({} stages)",
+            name,
+            if session.cache_hit() { "warm" } else { "cold" },
+            t0.elapsed().as_secs_f64() * 1e3,
+            session.pipeline().plan.stages.len()
+        );
+        sessions.push(session);
     }
 
-    println!(
-        "\nserved {} frames: {:.1} fps, window p50 {:.1} ms, p99 {:.1} ms, max {:.1} ms",
-        throughput.total(),
-        throughput.per_sec(),
-        window_latency.percentile_ns(0.5) as f64 / 1e6,
-        window_latency.percentile_ns(0.99) as f64 / 1e6,
-        window_latency.max_ns() as f64 / 1e6,
-    );
+    println!("\nserving {} tenants for ~{secs}s ...", sessions.len());
+    let t_end = Instant::now() + Duration::from_secs(secs);
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
+        for session in &sessions {
+            handles.push(scope.spawn(move || -> anyhow::Result<u64> {
+                let (_, shape) = &session.program().inputs[0];
+                let (h, w) = (shape[0], shape[1]);
+                let mut seq = 0u64;
+                while Instant::now() < t_end {
+                    // window of 4 frames in flight, backpressure-submitted
+                    let tickets: Vec<_> = (0..4)
+                        .map(|i| session.submit(synth::noise_rgb(h, w, seq + i)))
+                        .collect::<courier::Result<_>>()?;
+                    for t in tickets {
+                        session.wait(t)?;
+                    }
+                    seq += 4;
+                }
+                Ok(seq)
+            }));
+        }
+        for (session, h) in sessions.iter().zip(handles) {
+            let served = h.join().expect("tenant thread")?;
+            println!(
+                "  {:<14} {:>6} frames, p50 {:>7.1} ms, p99 {:>7.1} ms",
+                session.name(),
+                served,
+                session.stats.p50_ms(),
+                session.stats.p99_ms()
+            );
+        }
+        Ok(())
+    })?;
+
+    println!();
+    print!("{}", server.render_report());
+    server.shutdown();
     println!("stream_server OK");
     Ok(())
 }

@@ -30,6 +30,26 @@ pub use interp::{CallSite, Dispatch, Interpreter, RegistryDispatch};
 pub use parser::{load_program, parse_program};
 pub use program::{CallStep, Program};
 
+/// Synthetic input frames matching `program`'s declared input shapes —
+/// one `Vec<Mat>` per frame, seeded by frame index (shared by the CLI,
+/// the tracer and the serving subsystem).
+pub fn synth_frames(program: &Program, n: usize) -> Vec<Vec<crate::image::Mat>> {
+    use crate::image::{synth, Mat};
+    (0..n)
+        .map(|i| {
+            program
+                .inputs
+                .iter()
+                .map(|(_, shape)| match shape.len() {
+                    3 => synth::noise_rgb(shape[0], shape[1], i as u64),
+                    2 => synth::noise_gray(shape[0], shape[1], i as u64),
+                    _ => Mat::full(shape, i as f32),
+                })
+                .collect()
+        })
+        .collect()
+}
+
 /// The paper's case-study binary (Table I): cvtColor → cornerHarris →
 /// normalize → convertScaleAbs over an RGB frame.
 pub fn corner_harris_demo(h: usize, w: usize) -> Program {

@@ -47,6 +47,24 @@ impl PartitionPolicy {
     }
 }
 
+/// `[serve]` section: knobs for the multi-tenant serving subsystem
+/// ([`crate::serve`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Scheduler worker threads shared by all sessions.
+    pub workers: usize,
+    /// Admission limit: concurrent open sessions.
+    pub max_sessions: usize,
+    /// Per-session ingress queue bound (backpressure depth).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { workers: 4, max_sessions: 8, queue_depth: 16 }
+    }
+}
+
 /// Courier configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -64,6 +82,8 @@ pub struct Config {
     pub cpu_only: bool,
     /// Also consider disabled DB modules (ablations).
     pub include_disabled_modules: bool,
+    /// `[serve]` section (multi-tenant serving).
+    pub serve: ServeConfig,
 }
 
 impl Default for Config {
@@ -76,6 +96,7 @@ impl Default for Config {
             trace_frames: 3,
             cpu_only: false,
             include_disabled_modules: false,
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -98,6 +119,9 @@ impl Config {
             "trace_frames",
             "cpu_only",
             "include_disabled_modules",
+            "serve.workers",
+            "serve.max_sessions",
+            "serve.queue_depth",
         ];
         for k in doc.keys() {
             if !KNOWN.contains(&k) {
@@ -126,6 +150,15 @@ impl Config {
         if let Some(v) = doc.get_bool("include_disabled_modules") {
             cfg.include_disabled_modules = v;
         }
+        if let Some(v) = doc.get_usize("serve.workers") {
+            cfg.serve.workers = v;
+        }
+        if let Some(v) = doc.get_usize("serve.max_sessions") {
+            cfg.serve.max_sessions = v;
+        }
+        if let Some(v) = doc.get_usize("serve.queue_depth") {
+            cfg.serve.queue_depth = v;
+        }
         Ok(cfg)
     }
 
@@ -133,7 +166,8 @@ impl Config {
     pub fn to_toml(&self) -> String {
         format!(
             "threads = {}\ntokens = {}\npolicy = \"{}\"\nartifacts_dir = \"{}\"\n\
-             trace_frames = {}\ncpu_only = {}\ninclude_disabled_modules = {}\n",
+             trace_frames = {}\ncpu_only = {}\ninclude_disabled_modules = {}\n\
+             \n[serve]\nworkers = {}\nmax_sessions = {}\nqueue_depth = {}\n",
             self.threads,
             self.tokens,
             self.policy.as_str(),
@@ -141,6 +175,9 @@ impl Config {
             self.trace_frames,
             self.cpu_only,
             self.include_disabled_modules,
+            self.serve.workers,
+            self.serve.max_sessions,
+            self.serve.queue_depth,
         )
     }
 
@@ -165,10 +202,32 @@ mod tests {
 
     #[test]
     fn toml_roundtrip() {
-        let c = Config { threads: 4, tokens: 8, policy: PartitionPolicy::Optimal, ..Default::default() };
+        let c = Config {
+            threads: 4,
+            tokens: 8,
+            policy: PartitionPolicy::Optimal,
+            serve: ServeConfig { workers: 6, max_sessions: 3, queue_depth: 5 },
+            ..Default::default()
+        };
         let doc = TomlDoc::parse(&c.to_toml()).unwrap();
         let back = Config::from_doc(&doc).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn serve_section_parses() {
+        let doc =
+            TomlDoc::parse("threads = 2\n[serve]\nworkers = 9\nqueue_depth = 2\n").unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.serve.workers, 9);
+        assert_eq!(c.serve.queue_depth, 2);
+        assert_eq!(c.serve.max_sessions, ServeConfig::default().max_sessions);
+    }
+
+    #[test]
+    fn unknown_serve_key_rejected() {
+        let doc = TomlDoc::parse("[serve]\nworkerz = 9\n").unwrap();
+        assert!(Config::from_doc(&doc).is_err());
     }
 
     #[test]

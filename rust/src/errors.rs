@@ -55,6 +55,10 @@ pub enum CourierError {
     #[error("pipeline error: {0}")]
     Pipeline(String),
 
+    /// Serving subsystem failure (admission, backpressure, closed session).
+    #[error("serve error: {0}")]
+    Serve(String),
+
     /// HLO text parse failure.
     #[error("hlo parse error: {0}")]
     HloParse(String),

@@ -22,6 +22,15 @@
 //! The accelerator substrate is [`runtime`]: HLO-text artifacts produced by
 //! `python/compile/aot.py` (JAX + Pallas kernels) compiled and executed via
 //! the PJRT CPU client. Python never runs on the request path.
+//!
+//! On top of the one-shot deploy flow sits [`serve`], the multi-tenant
+//! serving subsystem: long-running sessions keyed by `(program, frame
+//! shape, partition policy)`, a plan cache that memoizes the whole
+//! trace→IR→partition→build chain across tenants, a fair scheduler that
+//! multiplexes sessions onto a bounded worker pool and exclusive
+//! per-module fabric slots, and bounded ingress queues for backpressure.
+//! `courier serve` is the CLI entry point; `docs/serving.md` walks through
+//! the architecture.
 
 pub mod app;
 pub mod config;
@@ -34,6 +43,7 @@ pub mod offload;
 pub mod pipeline;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod swlib;
 pub mod trace;
 pub mod util;

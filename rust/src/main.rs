@@ -7,11 +7,14 @@
 //! courier build   --ir ir.json [--emit control.prog]
 //! courier run     --program <spec> [--frames 8]          # original
 //! courier deploy  --program <spec> [--frames 8]          # accelerated
+//! courier serve   --programs <spec,...> [--sessions N] [--frames M]
 //! courier synth   [--size 1080x1920]                      # tables II/III
 //! ```
 //!
 //! Global flags: `--config courier.toml --artifacts DIR --threads N
-//! --tokens N --policy paper|optimal|per_function|single`.
+//! --tokens N --policy paper|optimal|per_function|single`.  Flags accept
+//! both `--flag value` and `--flag=value`; unknown flags print the usage
+//! and exit 2.
 //!
 //! `--program` accepts a `.courier` file path or a builtin demo:
 //! `corner_harris[:HxW]`, `edge[:HxW]`.
@@ -20,14 +23,15 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use courier::app::{self, Program, RegistryDispatch};
+use courier::app::{self, synth_frames, Program, RegistryDispatch};
 use courier::config::{Config, PartitionPolicy};
 use courier::hwdb::HwDatabase;
-use courier::image::{synth, Mat};
+use courier::image::Mat;
 use courier::ir::Ir;
 use courier::offload::Deployment;
 use courier::report;
 use courier::runtime::Runtime;
+use courier::serve::{Server, SessionSpec};
 use courier::swlib::Registry;
 use courier::trace::{trace_program, CallGraph, Trace};
 
@@ -45,6 +49,9 @@ COMMANDS:
   build   --ir FILE [--emit FILE]                      Step 8: build pipeline
   run     --program <spec> [--frames N]                run the original binary
   deploy  --program <spec> [--frames N]                Step 9: accelerated run
+  serve   --programs <spec,...> [--sessions N] [--frames M]
+                                                       multi-tenant serving
+                                                       (see docs/serving.md)
   synth   [--size HxW]                                 Tables II & III
 
 GLOBAL FLAGS:
@@ -54,8 +61,23 @@ GLOBAL FLAGS:
   --tokens N          token pool depth (default: 4)
   --policy P          paper|optimal|per_function|single
 
+Flags take `--flag value` or `--flag=value`; unknown flags exit 2.
+
 PROGRAM SPECS: a .courier file path, corner_harris[:HxW], edge[:HxW]
 ";
+
+/// Every flag any subcommand understands — unknown flags are a usage
+/// error (exit 2) instead of being silently swallowed into the flag map.
+const KNOWN_FLAGS: &[&str] = &[
+    // global
+    "config", "artifacts", "threads", "tokens", "policy",
+    // trace / run / deploy / serve
+    "program", "programs", "frames", "sessions", "out",
+    // graph / edit / plan / build
+    "trace", "dot", "ir", "fuse", "pin", "drop", "emit",
+    // synth
+    "size",
+];
 
 /// Parsed command line: subcommand + flag map.
 struct Args {
@@ -68,9 +90,25 @@ fn parse_args() -> Result<Args, String> {
     let mut cmd = None;
     let mut flags = HashMap::new();
     while let Some(a) = argv.next() {
-        if let Some(name) = a.strip_prefix("--") {
-            let val = argv.next().ok_or_else(|| format!("flag --{name} needs a value"))?;
-            flags.insert(name.to_string(), val);
+        if a == "--help" || a == "-h" {
+            print!("{USAGE}");
+            std::process::exit(0);
+        }
+        if let Some(body) = a.strip_prefix("--") {
+            // both `--flag value` and `--flag=value`
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            if !KNOWN_FLAGS.contains(&name.as_str()) {
+                eprintln!("courier: unknown flag --{name}\n\n{USAGE}");
+                std::process::exit(2);
+            }
+            let val = match inline {
+                Some(v) => v,
+                None => argv.next().ok_or_else(|| format!("flag --{name} needs a value"))?,
+            };
+            flags.insert(name, val);
         } else if cmd.is_none() {
             cmd = Some(a);
         } else {
@@ -122,6 +160,7 @@ fn real_main() -> anyhow::Result<()> {
         "build" => cmd_build(&args, &cfg),
         "run" => cmd_run(&args),
         "deploy" => cmd_deploy(&args, &cfg),
+        "serve" => cmd_serve(&args, &cfg),
         "synth" => cmd_synth(&args, &cfg),
         other => {
             anyhow::bail!("unknown command {other:?}\n\n{USAGE}");
@@ -179,22 +218,6 @@ fn load_program(spec: &str) -> anyhow::Result<Program> {
     }
 }
 
-/// Synthetic input frames matching the program's declared inputs.
-fn synth_frames(program: &Program, n: usize) -> Vec<Vec<Mat>> {
-    (0..n)
-        .map(|i| {
-            program
-                .inputs
-                .iter()
-                .map(|(_, shape)| match shape.len() {
-                    3 => synth::noise_rgb(shape[0], shape[1], i as u64),
-                    2 => synth::noise_gray(shape[0], shape[1], i as u64),
-                    _ => Mat::full(shape, i as f32),
-                })
-                .collect()
-        })
-        .collect()
-}
 
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     let prog = load_program(args.require("program").map_err(anyhow::Error::msg)?)?;
@@ -386,6 +409,84 @@ fn cmd_deploy(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         "{}",
         report::render_table1(&rows, ir.frame_ns() as f64 / 1e6, courier_ms)
     );
+    Ok(())
+}
+
+/// `courier serve`: open N sessions round-robining over the program
+/// specs, drive M frames through each from its own client thread, report.
+fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let specs_arg = args
+        .get("programs")
+        .or_else(|| args.get("program"))
+        .ok_or_else(|| anyhow::anyhow!("missing required flag --programs"))?;
+    let specs: Vec<&str> = specs_arg.split(',').filter(|s| !s.is_empty()).collect();
+    if specs.is_empty() {
+        anyhow::bail!("--programs needs at least one spec");
+    }
+    let n_sessions = args.get_usize("sessions", specs.len()).map_err(anyhow::Error::msg)?;
+    let frames = args.get_usize("frames", 16).map_err(anyhow::Error::msg)?;
+
+    let server = Server::new(cfg.clone())?;
+    println!(
+        "serve: {} workers, {} max sessions, queue depth {}",
+        cfg.serve.workers, cfg.serve.max_sessions, cfg.serve.queue_depth
+    );
+
+    let mut sessions = Vec::with_capacity(n_sessions);
+    for i in 0..n_sessions {
+        let prog = load_program(specs[i % specs.len()])?;
+        let session = server.open(SessionSpec::new(prog))?;
+        println!(
+            "  session #{} {} open {} in {:.2} ms",
+            session.id(),
+            session.name(),
+            if session.cache_hit() { "warm (plan cache hit)" } else { "cold (built)" },
+            session.open_ns() as f64 / 1e6
+        );
+        sessions.push(session);
+    }
+
+    // one client thread per session, all submitting with backpressure
+    let errors: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = sessions
+            .iter()
+            .map(|session| {
+                scope.spawn(move || -> Result<(), String> {
+                    // submit the whole stream (blocking submits ride the
+                    // queue's backpressure), then wait for every output
+                    let stream = synth_frames(session.program(), frames);
+                    let tickets: Vec<_> = stream
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, mut inputs)| {
+                            session
+                                .submit(inputs.remove(0))
+                                .map_err(|e| format!("{}: submit {i}: {e}", session.name()))
+                        })
+                        .collect::<Result<_, _>>()?;
+                    for (i, t) in tickets.into_iter().enumerate() {
+                        session
+                            .wait(t)
+                            .map_err(|e| format!("{}: frame {i}: {e}", session.name()))?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .filter_map(|h| h.join().expect("serve client thread").err())
+            .collect()
+    });
+    for e in &errors {
+        eprintln!("courier serve: {e}");
+    }
+
+    print!("{}", server.render_report());
+    server.shutdown();
+    if !errors.is_empty() {
+        anyhow::bail!("{} session(s) failed", errors.len());
+    }
     Ok(())
 }
 

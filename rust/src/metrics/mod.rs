@@ -29,20 +29,80 @@ impl Counter {
     }
 }
 
-/// Latency recorder with percentile queries (exact, stores all samples —
-/// fine for the ≤ tens of thousands of frames our benches push).
+/// An instantaneous level (queue depth, occupancy, active sessions).
+///
+/// Unlike [`Counter`] it can go down; `set` overwrites, `inc`/`dec` adjust
+/// (`dec` saturates at zero rather than wrapping).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Overwrite the level.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Raise the level by 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lower the level by 1, saturating at 0.
+    pub fn dec(&self) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+}
+
+/// Latency recorder with percentile queries.
+///
+/// `default()` stores every sample exactly — fine for the ≤ tens of
+/// thousands of frames the benches push.  Long-running consumers (the
+/// serving subsystem) use [`Latency::windowed`], a fixed-size ring over
+/// the most recent samples, so memory stays bounded over days of
+/// uptime; percentiles then describe the recent window.
 #[derive(Debug, Default)]
 pub struct Latency {
-    samples_ns: Mutex<Vec<u64>>,
+    inner: Mutex<LatencyRing>,
+}
+
+#[derive(Debug, Default)]
+struct LatencyRing {
+    samples_ns: Vec<u64>,
+    /// Ring capacity; 0 = unbounded.
+    cap: usize,
+    /// Overwrite cursor once the ring is full.
+    next: usize,
+    /// Lifetime samples recorded (>= retained).
+    total: u64,
 }
 
 impl Latency {
+    /// A recorder that retains only the most recent `cap` samples.
+    pub fn windowed(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(LatencyRing { cap: cap.max(1), ..Default::default() }),
+        }
+    }
+
     /// Record one sample.
     pub fn record(&self, d: Duration) {
-        self.samples_ns
-            .lock()
-            .expect("latency lock")
-            .push(d.as_nanos() as u64);
+        let ns = d.as_nanos() as u64;
+        let mut r = self.inner.lock().expect("latency lock");
+        r.total += 1;
+        if r.cap == 0 || r.samples_ns.len() < r.cap {
+            r.samples_ns.push(ns);
+        } else {
+            let i = r.next;
+            r.samples_ns[i] = ns;
+            r.next = (i + 1) % r.cap;
+        }
     }
 
     /// Time a closure and record it.
@@ -53,23 +113,28 @@ impl Latency {
         out
     }
 
-    /// Number of samples.
+    /// Number of retained samples (== recorded, unless windowed).
     pub fn count(&self) -> usize {
-        self.samples_ns.lock().expect("latency lock").len()
+        self.inner.lock().expect("latency lock").samples_ns.len()
     }
 
-    /// Mean in ns (0 when empty).
+    /// Lifetime samples recorded, including any the window evicted.
+    pub fn total(&self) -> u64 {
+        self.inner.lock().expect("latency lock").total
+    }
+
+    /// Mean over retained samples, ns (0 when empty).
     pub fn mean_ns(&self) -> u64 {
-        let s = self.samples_ns.lock().expect("latency lock");
-        if s.is_empty() {
+        let r = self.inner.lock().expect("latency lock");
+        if r.samples_ns.is_empty() {
             return 0;
         }
-        s.iter().sum::<u64>() / s.len() as u64
+        r.samples_ns.iter().sum::<u64>() / r.samples_ns.len() as u64
     }
 
-    /// Percentile (0.0..=1.0) in ns (0 when empty).
+    /// Percentile (0.0..=1.0) over retained samples, ns (0 when empty).
     pub fn percentile_ns(&self, q: f64) -> u64 {
-        let mut s = self.samples_ns.lock().expect("latency lock").clone();
+        let mut s = self.inner.lock().expect("latency lock").samples_ns.clone();
         if s.is_empty() {
             return 0;
         }
@@ -78,11 +143,12 @@ impl Latency {
         s[idx]
     }
 
-    /// Max in ns.
+    /// Max over retained samples, ns.
     pub fn max_ns(&self) -> u64 {
-        self.samples_ns
+        self.inner
             .lock()
             .expect("latency lock")
+            .samples_ns
             .iter()
             .copied()
             .max()
@@ -153,6 +219,38 @@ mod tests {
     }
 
     #[test]
+    fn gauge_levels() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        g.inc();
+        assert_eq!(g.get(), 8);
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 6);
+        g.set(0);
+        g.dec(); // saturates, no wrap
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn gauge_is_shared_across_threads() {
+        let g = std::sync::Arc::new(Gauge::default());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let g = g.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        g.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(g.get(), 400);
+    }
+
+    #[test]
     fn latency_percentiles() {
         let l = Latency::default();
         for ms in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 10] {
@@ -164,6 +262,19 @@ mod tests {
         assert_eq!(l.percentile_ns(1.0), 10_000_000);
         let p50 = l.percentile_ns(0.5);
         assert!((5_000_000..=6_000_000).contains(&p50));
+        assert_eq!(l.max_ns(), 10_000_000);
+    }
+
+    #[test]
+    fn windowed_latency_is_bounded() {
+        let l = Latency::windowed(4);
+        for ms in 1u64..=10 {
+            l.record(Duration::from_millis(ms));
+        }
+        assert_eq!(l.count(), 4, "ring retains only the window");
+        assert_eq!(l.total(), 10, "lifetime count keeps going");
+        // retained window is the most recent samples: 7..=10 ms
+        assert_eq!(l.percentile_ns(0.0), 7_000_000);
         assert_eq!(l.max_ns(), 10_000_000);
     }
 

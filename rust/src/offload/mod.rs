@@ -21,6 +21,11 @@
 //! binary hands us one frame at a time); the [`Deployment`] runner is the
 //! deployed-run mode: it feeds whole frame streams through the token
 //! pipeline, which is where the paper's ×15 comes from.
+//!
+//! A [`Deployment`] owns one program and one pipeline for the life of the
+//! process.  The multi-tenant generalization — many concurrent programs
+//! sharing one fabric through cached plans, fair scheduling and bounded
+//! queues — is [`crate::serve`].
 
 mod deploy;
 mod hook;

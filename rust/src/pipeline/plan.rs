@@ -91,6 +91,23 @@ impl StagePlan {
         original_frame_ns as f64 / b as f64
     }
 
+    /// Names of all hardware modules the plan places on the fabric,
+    /// sorted and deduplicated (the scheduler's fabric-slot keys).
+    pub fn hw_modules(&self) -> Vec<String> {
+        let mut mods: Vec<String> = self
+            .stages
+            .iter()
+            .flat_map(|s| &s.tasks)
+            .filter_map(|t| match &t.kind {
+                TaskKind::Hw { module, .. } => Some(module.clone()),
+                TaskKind::Sw => None,
+            })
+            .collect();
+        mods.sort();
+        mods.dedup();
+        mods
+    }
+
     /// Count of (hw, sw) tasks.
     pub fn placement_counts(&self) -> (usize, usize) {
         let mut hw = 0;
@@ -267,6 +284,15 @@ pub(crate) mod tests {
         assert_eq!(p.placement_counts(), (3, 1));
         let su = p.est_speedup(1_371_100_000);
         assert!(su > 14.0 && su < 15.0, "{su}");
+    }
+
+    #[test]
+    fn hw_modules_sorted_unique() {
+        let p = demo_plan();
+        assert_eq!(
+            p.hw_modules(),
+            vec!["hls_convert_scale_abs", "hls_corner_harris", "hls_cvt_color"]
+        );
     }
 
     #[test]

@@ -406,6 +406,68 @@ mod tests {
     }
 
     #[test]
+    fn serial_head_tail_stay_in_order_despite_slow_parallel_middle() {
+        // Ordering invariant: with a deep token pool (tokens > 2) and a
+        // middle `parallel` stage whose per-token time *decreases* with
+        // the sequence number (late tokens overtake early ones inside the
+        // middle), the serial head must still consume tokens 0,1,2,... and
+        // the serial tail must still emit them in arrival order.
+        let jitter = Box::new(FnFilter {
+            mode: FilterMode::Parallel,
+            label: "jitter".into(),
+            f: |m: Mat| {
+                // earlier frames (smaller values) sleep longer -> maximal
+                // out-of-order pressure on the tail
+                let seq = m.at2(0, 0) as u64;
+                std::thread::sleep(std::time::Duration::from_micros(
+                    2_000u64.saturating_sub(seq * 100),
+                ));
+                Ok(m)
+            },
+        });
+        let pipe = TokenPipeline::new(
+            vec![
+                add_filter(FilterMode::SerialInOrder, 0.0),
+                jitter,
+                add_filter(FilterMode::SerialInOrder, 0.5),
+            ],
+            4,
+            6, // tokens > 2: several frames racing through the middle
+        )
+        .unwrap();
+        let (out, stats) = pipe.run(inputs(20)).unwrap();
+
+        // outputs in arrival order
+        assert_eq!(out.len(), 20);
+        for (i, m) in out.iter().enumerate() {
+            assert_eq!(m.at2(0, 0), i as f32 + 0.5, "frame {i} out of order");
+        }
+        // head (stage 0) and tail (stage 2) each processed tokens in
+        // strictly increasing sequence order, without self-overlap
+        for stage in [0usize, 2] {
+            let mut spans: Vec<_> = stats.spans.iter().filter(|s| s.stage == stage).collect();
+            spans.sort_by_key(|s| s.start_ns);
+            assert_eq!(spans.len(), 20);
+            for w in spans.windows(2) {
+                assert!(
+                    w[0].token < w[1].token,
+                    "stage {stage} ran token {} before {}",
+                    w[1].token,
+                    w[0].token
+                );
+                assert!(w[0].end_ns <= w[1].start_ns, "stage {stage} overlapped itself");
+            }
+        }
+        // sanity: the middle really did run tokens concurrently
+        let mids: Vec<_> = stats.spans.iter().filter(|s| s.stage == 1).collect();
+        let overlapped = mids.iter().any(|a| {
+            mids.iter()
+                .any(|b| a.token != b.token && a.start_ns < b.end_ns && b.start_ns < a.end_ns)
+        });
+        assert!(overlapped, "middle stage never overlapped; test lost its pressure");
+    }
+
+    #[test]
     fn process_one_matches_run() {
         let mk = || {
             TokenPipeline::new(

@@ -94,6 +94,69 @@ pub fn render_table3(reports: &[SynthReport]) -> String {
     s
 }
 
+/// One per-session row of the serving report.
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    /// Session label, e.g. `#0 cornerHarris_Demo`.
+    pub session: String,
+    /// Plan-cache key description, e.g. `cornerHarris_Demo/paper`.
+    pub program: String,
+    /// Frames completed.
+    pub completed: u64,
+    /// Frames whose execution failed.
+    pub failed: u64,
+    /// Frames rejected at the ingress queue.
+    pub rejected: u64,
+    /// p50 submit→complete latency, ms.
+    pub p50_ms: f64,
+    /// p99 submit→complete latency, ms.
+    pub p99_ms: f64,
+    /// Ingress queue depth at render time.
+    pub queue_depth: u64,
+    /// Whether the session opened warm from the plan cache.
+    pub warm_open: bool,
+    /// Session-open wall clock, ms.
+    pub open_ms: f64,
+}
+
+/// Render the multi-tenant serving report (`courier serve` output).
+pub fn render_serve(
+    rows: &[ServeRow],
+    cache_hit_rate: f64,
+    cached_plans: usize,
+    fps: f64,
+) -> String {
+    let mut s = String::new();
+    s.push_str("SERVE: per-session report\n");
+    s.push_str(&format!(
+        "{:<26} {:<28} {:>7} {:>6} {:>6} {:>9} {:>9} {:>6} {:>5} {:>10}\n",
+        "Session", "Plan", "done", "fail", "rej", "p50 [ms]", "p99 [ms]", "queue", "open",
+        "open [ms]"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<26} {:<28} {:>7} {:>6} {:>6} {:>9.2} {:>9.2} {:>6} {:>5} {:>10.2}\n",
+            r.session,
+            r.program,
+            r.completed,
+            r.failed,
+            r.rejected,
+            r.p50_ms,
+            r.p99_ms,
+            r.queue_depth,
+            if r.warm_open { "warm" } else { "cold" },
+            r.open_ms,
+        ));
+    }
+    s.push_str(&format!(
+        "plan cache: {} plans, {:.0}% hit rate; {:.1} frames/s served\n",
+        cached_plans,
+        cache_hit_rate * 100.0,
+        fps
+    ));
+    s
+}
+
 /// Render a plan summary (stages, placements, estimates).
 pub fn render_plan(plan: &StagePlan) -> String {
     let mut s = String::new();
@@ -154,6 +217,43 @@ mod tests {
         assert!(t.contains("x16.36") || t.contains("x16.3"), "{t}");
         assert!(t.contains("999.0"));
         assert!(t.contains("CPU&FPGA"));
+    }
+
+    #[test]
+    fn serve_report_layout() {
+        let rows = vec![
+            ServeRow {
+                session: "#0 cornerHarris_Demo".into(),
+                program: "cornerHarris_Demo/paper".into(),
+                completed: 120,
+                failed: 0,
+                rejected: 7,
+                p50_ms: 12.5,
+                p99_ms: 31.0,
+                queue_depth: 3,
+                warm_open: false,
+                open_ms: 812.4,
+            },
+            ServeRow {
+                session: "#1 edge_demo".into(),
+                program: "edge_demo/paper".into(),
+                completed: 60,
+                failed: 1,
+                rejected: 0,
+                p50_ms: 8.0,
+                p99_ms: 19.9,
+                queue_depth: 0,
+                warm_open: true,
+                open_ms: 0.3,
+            },
+        ];
+        let t = render_serve(&rows, 0.5, 2, 42.0);
+        assert!(t.contains("SERVE"));
+        assert!(t.contains("cornerHarris_Demo/paper"));
+        assert!(t.contains("cold"));
+        assert!(t.contains("warm"));
+        assert!(t.contains("50% hit rate"), "{t}");
+        assert!(t.contains("42.0 frames/s"), "{t}");
     }
 
     #[test]

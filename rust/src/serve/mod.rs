@@ -1,0 +1,250 @@
+//! `courier::serve` — the multi-tenant pipeline serving subsystem.
+//!
+//! The paper's endgame (Step 9) is a *deployed, continuously running*
+//! accelerated binary; this module turns the repo's one-shot deploy flow
+//! into a long-running service:
+//!
+//! * clients open **sessions** keyed by `(program, frame shape, partition
+//!   policy)` — see [`SessionSpec`] and [`PlanKey`];
+//! * a **plan cache** ([`PlanCache`]) memoizes the expensive trace → IR →
+//!   partition → build chain, so the Nth session for the same key reuses
+//!   the compiled [`crate::pipeline::BuiltPipeline`] and its PJRT
+//!   executables (cold vs. warm opens differ by orders of magnitude);
+//! * a **scheduler** ([`Scheduler`]) multiplexes all sessions onto a
+//!   bounded worker pool with round-robin fairness, treating each placed
+//!   hardware module as an exclusive fabric slot (one request per placed
+//!   module — the paper's model, as simulated in `pipeline/sim.rs`);
+//! * bounded per-session **ingress queues** ([`queue::BoundedQueue`])
+//!   provide backpressure (`submit`) and load shedding (`try_submit`);
+//! * per-session and global **stats** ([`SessionStats`], [`ServerStats`])
+//!   report throughput, p50/p99 latency, queue depth and cache hit rate.
+//!
+//! ```no_run
+//! use courier::config::Config;
+//! use courier::serve::{Server, SessionSpec};
+//! use courier::app::corner_harris_demo;
+//! use courier::image::synth;
+//!
+//! let server = Server::new(Config::default()).unwrap();
+//! let session = server.open(SessionSpec::new(corner_harris_demo(240, 320))).unwrap();
+//! let ticket = session.submit(synth::noise_rgb(240, 320, 0)).unwrap();
+//! let out = session.wait(ticket).unwrap();
+//! # drop(out);
+//! ```
+//!
+//! See `docs/serving.md` for the architecture walk-through and the
+//! `courier serve` CLI entry point.
+
+mod plan_cache;
+pub mod queue;
+mod scheduler;
+mod session;
+mod stats;
+
+pub use plan_cache::{PlanCache, PlanKey};
+pub use scheduler::Scheduler;
+pub use session::{Session, SessionSpec, Ticket};
+pub use stats::{ServerStats, SessionStats};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::hwdb::HwDatabase;
+use crate::ir::Ir;
+use crate::report;
+use crate::runtime::Runtime;
+use crate::swlib::Registry;
+use crate::trace::{trace_program, CallGraph};
+use crate::{CourierError, Result};
+
+/// The long-running, multi-tenant pipeline server.
+pub struct Server {
+    cfg: Config,
+    db: HwDatabase,
+    rt: Runtime,
+    registry: Registry,
+    cache: PlanCache,
+    scheduler: Scheduler,
+    stats: Arc<ServerStats>,
+    sessions: Mutex<Vec<Arc<Session>>>,
+    next_id: AtomicU64,
+    shut_down: AtomicBool,
+}
+
+impl Server {
+    /// Bring the server up: load the hardware database, connect to the
+    /// fabric, start the scheduler's worker pool.  No pipeline is built
+    /// yet — builds happen lazily at first session-open per key.
+    pub fn new(cfg: Config) -> Result<Self> {
+        let db = HwDatabase::load(&cfg.artifacts_dir)?;
+        let rt = Runtime::cpu()?;
+        let stats = Arc::new(ServerStats::default());
+        let scheduler = Scheduler::start(cfg.serve.workers, stats.clone());
+        Ok(Self {
+            cfg,
+            db,
+            rt,
+            registry: Registry::standard(),
+            cache: PlanCache::new(),
+            scheduler,
+            stats,
+            sessions: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+            shut_down: AtomicBool::new(false),
+        })
+    }
+
+    /// Open a session: admission control, plan-cache lookup (building on
+    /// a miss), queue + scheduler registration.
+    pub fn open(&self, spec: SessionSpec) -> Result<Arc<Session>> {
+        if self.shut_down.load(Ordering::Acquire) {
+            return Err(CourierError::Serve("server is shut down".into()));
+        }
+        if self.active_sessions() >= self.cfg.serve.max_sessions {
+            self.stats.sessions_rejected.inc();
+            return Err(CourierError::Serve(format!(
+                "admission: session limit {} reached",
+                self.cfg.serve.max_sessions
+            )));
+        }
+        spec.program
+            .validate()
+            .map_err(|e| CourierError::Serve(format!("program {}: {e}", spec.program.name)))?;
+
+        let mut eff_cfg = self.cfg.clone();
+        if let Some(policy) = spec.policy {
+            eff_cfg.policy = policy;
+        }
+        let key = PlanKey::new(&spec.program, &eff_cfg);
+
+        let t0 = Instant::now();
+        let (pipeline, hit) = self.cache.get_or_build(&key, || {
+            let inputs = crate::app::synth_frames(&spec.program, eff_cfg.trace_frames.max(1));
+            let trace = trace_program(&spec.program, &inputs)?;
+            let ir = Ir::from_graph(&CallGraph::from_trace(&trace))?;
+            let built =
+                crate::pipeline::build(&ir, &self.db, &self.rt, &self.registry, &eff_cfg)?;
+            Ok(Arc::new(built))
+        })?;
+        let open_ns = t0.elapsed().as_nanos() as u64;
+
+        let id = self.next_id.fetch_add(1, Ordering::AcqRel);
+        let session = Arc::new(Session::new(
+            id,
+            spec.name,
+            key,
+            spec.program,
+            pipeline,
+            self.cfg.serve.queue_depth,
+            hit,
+            open_ns,
+        ));
+        {
+            // authoritative admission check, atomic with registration (the
+            // pre-build check above only avoids wasted builds; the plan we
+            // just built stays cached either way).  Scheduler registration
+            // and stats stay inside the lock so a concurrent shutdown —
+            // which takes this lock to collect sessions — either sees the
+            // fully registered session and tears it down, or completes
+            // first and the shut_down flag stops us here.
+            let mut sessions = self.sessions.lock().expect("server sessions lock");
+            if self.shut_down.load(Ordering::Acquire) {
+                return Err(CourierError::Serve("server is shut down".into()));
+            }
+            if sessions.len() >= self.cfg.serve.max_sessions {
+                self.stats.sessions_rejected.inc();
+                return Err(CourierError::Serve(format!(
+                    "admission: session limit {} reached",
+                    self.cfg.serve.max_sessions
+                )));
+            }
+            sessions.push(session.clone());
+            self.scheduler.register(session.clone());
+            self.stats.record_open(t0.elapsed());
+        }
+        Ok(session)
+    }
+
+    /// Close a session: refuse new frames, cancel its queued frames,
+    /// remove it from scheduling.  The cached plan stays warm for the
+    /// next tenant with the same key.
+    pub fn close(&self, session: &Arc<Session>) {
+        session.close();
+        self.scheduler.deregister(session.id());
+        let mut sessions = self.sessions.lock().expect("server sessions lock");
+        let before = sessions.len();
+        sessions.retain(|s| s.id() != session.id());
+        if sessions.len() < before {
+            self.stats.active_sessions.dec();
+        }
+    }
+
+    /// Currently open sessions.
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.lock().expect("server sessions lock").len()
+    }
+
+    /// Server-wide metrics.
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.stats
+    }
+
+    /// The plan cache (hit/miss counters, build-time histogram).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// The server's base configuration.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Render the serving report (per-session rows + cache/throughput
+    /// summary) for the CLI and the stream-server example.
+    pub fn render_report(&self) -> String {
+        let sessions = self.sessions.lock().expect("server sessions lock").clone();
+        let rows: Vec<report::ServeRow> = sessions
+            .iter()
+            .map(|s| report::ServeRow {
+                session: format!("#{} {}", s.id(), s.name()),
+                program: s.key().describe(),
+                completed: s.stats.completed.get(),
+                failed: s.stats.failed.get(),
+                rejected: s.stats.rejected.get(),
+                p50_ms: s.stats.p50_ms(),
+                p99_ms: s.stats.p99_ms(),
+                queue_depth: s.stats.queue_depth.get(),
+                warm_open: s.cache_hit(),
+                open_ms: s.open_ns() as f64 / 1e6,
+            })
+            .collect();
+        report::render_serve(
+            &rows,
+            self.cache.hit_rate(),
+            self.cache.len(),
+            self.stats.frames.per_sec(),
+        )
+    }
+
+    /// Graceful shutdown: close every session (cancelling queued frames),
+    /// then stop and join the worker pool.
+    pub fn shutdown(&self) {
+        self.shut_down.store(true, Ordering::Release);
+        let sessions: Vec<Arc<Session>> =
+            std::mem::take(&mut *self.sessions.lock().expect("server sessions lock"));
+        for s in &sessions {
+            s.close();
+            self.scheduler.deregister(s.id());
+            self.stats.active_sessions.dec();
+        }
+        self.scheduler.shutdown();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,287 @@
+//! Plan cache: memoizes the expensive trace → IR → partition → build
+//! chain (including PJRT artifact compilation) so the Nth session opened
+//! for the same key reuses the compiled [`BuiltPipeline`] instead of
+//! rebuilding it.
+//!
+//! The cache key is everything the build chain consumes: the full program
+//! text (which embeds the frame shape in its `input` declarations), the
+//! partition policy, and the pipeline-shape knobs.  Builds are
+//! **single-flight**: two concurrent opens for the same key build once —
+//! the second blocks on the per-key slot and comes back a hit.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::app::Program;
+use crate::config::Config;
+use crate::metrics::{Counter, Latency};
+use crate::pipeline::BuiltPipeline;
+use crate::Result;
+
+/// Everything that determines a built pipeline.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Program name (display only — the text below is authoritative).
+    program_name: String,
+    /// Input-shape signature, e.g. `240x320x3` (display only).
+    input_sig: String,
+    /// Canonical `.courier` text: call chain + input shapes.
+    program_text: String,
+    /// Partition policy name.
+    policy: &'static str,
+    /// Worker threads the plan is balanced for.
+    threads: usize,
+    /// Token-pool depth.
+    tokens: usize,
+    /// Placement overrides that change the build result.
+    cpu_only: bool,
+    include_disabled_modules: bool,
+}
+
+impl PlanKey {
+    /// Derive the key for building `program` under `cfg`.
+    pub fn new(program: &Program, cfg: &Config) -> Self {
+        let input_sig = program
+            .inputs
+            .iter()
+            .map(|(_, shape)| {
+                shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        Self {
+            program_name: program.name.clone(),
+            input_sig,
+            program_text: program.to_text(),
+            policy: cfg.policy.as_str(),
+            threads: cfg.threads,
+            tokens: cfg.tokens,
+            cpu_only: cfg.cpu_only,
+            include_disabled_modules: cfg.include_disabled_modules,
+        }
+    }
+
+    /// Short human label distinguishing plans that differ by shape as
+    /// well as policy, e.g. `cornerHarris_Demo@240x320x3/paper`.
+    pub fn describe(&self) -> String {
+        format!("{}@{}/{}", self.program_name, self.input_sig, self.policy)
+    }
+}
+
+type Slot = Arc<Mutex<Option<Arc<BuiltPipeline>>>>;
+
+/// The memo table plus its observability counters.
+#[derive(Default)]
+pub struct PlanCache {
+    entries: Mutex<HashMap<PlanKey, Slot>>,
+    /// Session-opens served from the cache.
+    pub hits: Counter,
+    /// Session-opens that had to build.
+    pub misses: Counter,
+    /// Time spent inside cold builds.
+    pub build_time: Latency,
+}
+
+impl PlanCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct keys with a completed build.  Non-blocking: a key whose
+    /// build is still in flight (slot locked by the builder) is not a
+    /// completed plan, so `try_lock` misses count as absent instead of
+    /// parking a reporting thread behind a seconds-long cold build.
+    pub fn len(&self) -> usize {
+        self.entries
+            .lock()
+            .expect("plan cache lock")
+            .values()
+            .filter(|slot| slot.try_lock().map(|s| s.is_some()).unwrap_or(false))
+            .count()
+    }
+
+    /// True when no build has completed yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hits / (hits + misses); 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.get() as f64;
+        let m = self.misses.get() as f64;
+        if h + m == 0.0 {
+            return 0.0;
+        }
+        h / (h + m)
+    }
+
+    /// Fetch the pipeline for `key`, building it with `build` on a miss.
+    /// Returns `(pipeline, was_hit)`.
+    ///
+    /// Concurrent same-key callers serialize on the key's slot (single
+    /// flight); different keys build in parallel.  A failed build leaves
+    /// the slot empty so the next open retries.
+    pub fn get_or_build(
+        &self,
+        key: &PlanKey,
+        build: impl FnOnce() -> Result<Arc<BuiltPipeline>>,
+    ) -> Result<(Arc<BuiltPipeline>, bool)> {
+        let slot: Slot = {
+            let mut map = self.entries.lock().expect("plan cache lock");
+            map.entry(key.clone()).or_default().clone()
+        };
+        let mut filled = slot.lock().expect("plan cache slot");
+        if let Some(p) = filled.as_ref() {
+            self.hits.inc();
+            return Ok((p.clone(), true));
+        }
+        self.misses.inc();
+        let t0 = Instant::now();
+        let built = build()?;
+        self.build_time.record(t0.elapsed());
+        *filled = Some(built.clone());
+        Ok((built, false))
+    }
+
+    /// Drop one key (e.g. after a hardware-database reload).
+    pub fn invalidate(&self, key: &PlanKey) {
+        self.entries.lock().expect("plan cache lock").remove(key);
+    }
+
+    /// Drop everything (counters keep their history).
+    pub fn clear(&self) {
+        self.entries.lock().expect("plan cache lock").clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::parse_program;
+    use crate::image::Mat;
+    use crate::pipeline::{FilterMode, FnFilter, StageFilter, StagePlan, TokenPipeline};
+
+    fn key(name: &str) -> PlanKey {
+        let prog = parse_program(&format!(
+            "program {name}\ninput a 4x4\ncall b = cv::normalize(a)\noutput b\n"
+        ))
+        .unwrap();
+        PlanKey::new(&prog, &Config::default())
+    }
+
+    fn tiny_pipeline() -> Arc<BuiltPipeline> {
+        let plan =
+            StagePlan { program: "t".into(), threads: 1, tokens: 1, stages: vec![] };
+        let id: Box<dyn StageFilter> = Box::new(FnFilter {
+            mode: FilterMode::SerialInOrder,
+            label: "id".into(),
+            f: |m: Mat| Ok(m),
+        });
+        let pipeline = TokenPipeline::new(vec![id], 1, 1).unwrap();
+        Arc::new(BuiltPipeline { plan, pipeline, control_program: String::new() })
+    }
+
+    #[test]
+    fn second_lookup_is_a_hit() {
+        let cache = PlanCache::new();
+        let k = key("p");
+        let (a, hit_a) = cache.get_or_build(&k, || Ok(tiny_pipeline())).unwrap();
+        let (b, hit_b) = cache
+            .get_or_build(&k, || panic!("second open must not rebuild"))
+            .unwrap();
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b), "must reuse the same built pipeline");
+        assert_eq!((cache.misses.get(), cache.hits.get()), (1, 1));
+        assert_eq!(cache.len(), 1);
+        assert!(cache.hit_rate() > 0.49 && cache.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn different_keys_build_separately() {
+        let cache = PlanCache::new();
+        cache.get_or_build(&key("p"), || Ok(tiny_pipeline())).unwrap();
+        cache.get_or_build(&key("q"), || Ok(tiny_pipeline())).unwrap();
+        assert_eq!(cache.misses.get(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn key_distinguishes_shape_policy_and_knobs() {
+        let text = |shape: &str| {
+            format!("program p\ninput a {shape}\ncall b = cv::normalize(a)\noutput b\n")
+        };
+        let prog_s = parse_program(&text("4x4")).unwrap();
+        let prog_l = parse_program(&text("8x8")).unwrap();
+        let cfg = Config::default();
+        assert_ne!(PlanKey::new(&prog_s, &cfg), PlanKey::new(&prog_l, &cfg), "shape");
+        let mut cfg2 = cfg.clone();
+        cfg2.policy = crate::config::PartitionPolicy::Optimal;
+        assert_ne!(PlanKey::new(&prog_s, &cfg), PlanKey::new(&prog_s, &cfg2), "policy");
+        let mut cfg3 = cfg.clone();
+        cfg3.cpu_only = true;
+        assert_ne!(PlanKey::new(&prog_s, &cfg), PlanKey::new(&prog_s, &cfg3), "cpu_only");
+        assert_eq!(PlanKey::new(&prog_s, &cfg), PlanKey::new(&prog_s, &cfg.clone()), "stable");
+    }
+
+    #[test]
+    fn describe_distinguishes_shape_and_policy() {
+        let prog = parse_program(
+            "program p\ninput a 240x320x3\ncall b = cv::cvtColor(a)\noutput b\n",
+        )
+        .unwrap();
+        let k = PlanKey::new(&prog, &Config::default());
+        assert_eq!(k.describe(), "p@240x320x3/paper");
+    }
+
+    #[test]
+    fn failed_build_is_retried() {
+        let cache = PlanCache::new();
+        let k = key("p");
+        let err = cache
+            .get_or_build(&k, || Err(crate::CourierError::Serve("boom".into())))
+            .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        assert_eq!(cache.len(), 0, "failed build must not be cached");
+        let (_, hit) = cache.get_or_build(&k, || Ok(tiny_pipeline())).unwrap();
+        assert!(!hit, "retry is a miss, not a hit");
+        assert_eq!(cache.misses.get(), 2);
+    }
+
+    #[test]
+    fn invalidate_forces_rebuild() {
+        let cache = PlanCache::new();
+        let k = key("p");
+        cache.get_or_build(&k, || Ok(tiny_pipeline())).unwrap();
+        cache.invalidate(&k);
+        let (_, hit) = cache.get_or_build(&k, || Ok(tiny_pipeline())).unwrap();
+        assert!(!hit);
+    }
+
+    #[test]
+    fn concurrent_same_key_builds_once() {
+        let cache = Arc::new(PlanCache::new());
+        let k = key("p");
+        let builds = Arc::new(crate::metrics::Counter::default());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let cache = cache.clone();
+                let k = k.clone();
+                let builds = builds.clone();
+                s.spawn(move || {
+                    cache
+                        .get_or_build(&k, || {
+                            builds.inc();
+                            // widen the race window
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            Ok(tiny_pipeline())
+                        })
+                        .unwrap();
+                });
+            }
+        });
+        assert_eq!(builds.get(), 1, "single-flight: exactly one build");
+        assert_eq!(cache.hits.get(), 7);
+    }
+}

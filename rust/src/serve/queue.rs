@@ -1,0 +1,209 @@
+//! Bounded ingress queue: the per-session admission/backpressure primitive.
+//!
+//! Semantics:
+//! * `try_push` never blocks — a full queue **rejects** the item (admission
+//!   control; the caller decides whether to drop, retry, or shed load);
+//! * `push_blocking` waits for space — **backpressure** (the producer is
+//!   slowed to the session's service rate instead of growing an unbounded
+//!   backlog);
+//! * `close` wakes all blocked producers and refuses new items, but
+//!   already-queued items keep draining so in-flight work finishes.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a push did not enqueue.  Carries the rejected item back so the
+/// caller does not lose the frame.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue at capacity (only from `try_push`).
+    Full(T),
+    /// Queue closed; no new work accepted.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// Recover the rejected item.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(v) | PushError::Closed(v) => v,
+        }
+    }
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC queue (mutex + condvar; depths are small — tens of
+/// frames — so a lock-free ring buys nothing here).
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    space: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create a queue holding at most `capacity` items (min 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::with_capacity(capacity), closed: false }),
+            space: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Maximum depth.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current depth.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue lock").items.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True once `close` has been called.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue lock").closed
+    }
+
+    /// Non-blocking enqueue; rejects when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        inner.items.push_back(item);
+        Ok(())
+    }
+
+    /// Blocking enqueue: waits until space frees up (backpressure) or the
+    /// queue closes.
+    pub fn push_blocking(&self, item: T) -> Result<(), PushError<T>> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        loop {
+            if inner.closed {
+                return Err(PushError::Closed(item));
+            }
+            if inner.items.len() < self.capacity {
+                inner.items.push_back(item);
+                return Ok(());
+            }
+            inner = self.space.wait(inner).expect("queue lock");
+        }
+    }
+
+    /// Non-blocking dequeue (consumers poll; the scheduler's worker loop
+    /// round-robins across many queues, so it never parks on one).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        let item = inner.items.pop_front();
+        if item.is_some() {
+            // a slot freed: wake one blocked producer
+            self.space.notify_one();
+        }
+        item
+    }
+
+    /// Refuse new items and wake all blocked producers.  Queued items keep
+    /// draining via `try_pop`; call `drain` to cancel them instead.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().expect("queue lock");
+        inner.closed = true;
+        self.space.notify_all();
+    }
+
+    /// Remove and return everything still queued (used on session close to
+    /// cancel work that will never run).
+    pub fn drain(&self) -> Vec<T> {
+        let mut inner = self.inner.lock().expect("queue lock");
+        let out = inner.items.drain(..).collect();
+        self.space.notify_all();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn zero_capacity_clamped_to_one() {
+        let q = BoundedQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+        q.try_push(7).unwrap();
+        assert!(matches!(q.try_push(8), Err(PushError::Full(8))));
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push_blocking(2));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.len(), 1, "producer must be blocked");
+        assert_eq!(q.try_pop(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.try_pop(), Some(2));
+    }
+
+    #[test]
+    fn close_rejects_and_wakes_blocked_producer() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push_blocking(2));
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert!(matches!(h.join().unwrap(), Err(PushError::Closed(2))));
+        assert!(matches!(q.try_push(3), Err(PushError::Closed(3))));
+        // queued item still drains
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn drain_cancels_queued_items() {
+        let q = BoundedQueue::new(4);
+        for i in 0..3 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.drain(), vec![0, 1, 2]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn push_error_returns_item() {
+        let q: BoundedQueue<String> = BoundedQueue::new(1);
+        q.try_push("a".into()).unwrap();
+        let err = q.try_push("lost?".to_string()).unwrap_err();
+        assert_eq!(err.into_inner(), "lost?");
+    }
+}

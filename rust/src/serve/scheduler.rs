@@ -1,0 +1,221 @@
+//! Scheduler: multiplexes many sessions onto a bounded worker pool and
+//! exclusive per-module fabric slots.
+//!
+//! Fairness is round-robin: each worker scans the session list starting
+//! from a rotating cursor and takes **one** job per scan, so a saturated
+//! session cannot starve its neighbours — the next scan starts one
+//! session further along.  Hardware modules are exclusive resources
+//! (one request per placed module, mirroring `pipeline/sim.rs`): before a
+//! frame runs, the worker locks the fabric slot of every module its
+//! pipeline places, in sorted order so overlapping sessions cannot
+//! deadlock.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::CourierError;
+
+use super::session::{Job, Session};
+use super::stats::ServerStats;
+
+/// Exclusive fabric slots, one per placed hardware module name.
+#[derive(Default)]
+pub(crate) struct FabricSlots {
+    slots: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+}
+
+impl FabricSlots {
+    /// The slot mutexes for `modules` (pre-sorted, deduplicated — see
+    /// [`crate::pipeline::StagePlan::hw_modules`]).  Same name → same
+    /// mutex, across all sessions.
+    pub(crate) fn slots_for(&self, modules: &[String]) -> Vec<Arc<Mutex<()>>> {
+        let mut map = self.slots.lock().expect("fabric slots lock");
+        modules
+            .iter()
+            .map(|m| map.entry(m.clone()).or_default().clone())
+            .collect()
+    }
+}
+
+struct SchedShared {
+    sessions: Mutex<Vec<Arc<Session>>>,
+    cursor: AtomicUsize,
+    shutdown: AtomicBool,
+    fabric: FabricSlots,
+    stats: Arc<ServerStats>,
+}
+
+/// The worker pool.
+pub struct Scheduler {
+    shared: Arc<SchedShared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    /// Spawn `workers` threads (min 1) draining registered sessions.
+    pub fn start(workers: usize, stats: Arc<ServerStats>) -> Self {
+        let shared = Arc::new(SchedShared {
+            sessions: Mutex::new(Vec::new()),
+            cursor: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            fabric: FabricSlots::default(),
+            stats,
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Self { shared, workers: Mutex::new(handles) }
+    }
+
+    /// Add a session to the round-robin rotation.
+    pub fn register(&self, session: Arc<Session>) {
+        self.shared.sessions.lock().expect("scheduler sessions lock").push(session);
+    }
+
+    /// Remove a session from the rotation (its in-flight frame, if any,
+    /// still completes on the worker that holds it).
+    pub fn deregister(&self, id: u64) {
+        self.shared
+            .sessions
+            .lock()
+            .expect("scheduler sessions lock")
+            .retain(|s| s.id() != id);
+    }
+
+    /// Sessions currently in rotation.
+    pub fn session_count(&self) -> usize {
+        self.shared.sessions.lock().expect("scheduler sessions lock").len()
+    }
+
+    /// Stop accepting work and join all workers.  Queued jobs that no
+    /// worker claimed are left to the sessions' `close` cancellation.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.workers.lock().expect("scheduler workers lock"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: &SchedShared) {
+    let mut idle_spins = 0u32;
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // claim one job under the registry lock (queue pops are cheap and
+        // non-blocking), starting one session further along each scan;
+        // only the claimed session's Arc is cloned
+        let claimed: Option<(Arc<Session>, Job)> = {
+            let sessions = shared.sessions.lock().expect("scheduler sessions lock");
+            if sessions.is_empty() {
+                None
+            } else {
+                let n = sessions.len();
+                let start = shared.cursor.fetch_add(1, Ordering::Relaxed) % n;
+                (0..n).find_map(|i| {
+                    let session = &sessions[(start + i) % n];
+                    session.take_job().map(|job| (session.clone(), job))
+                })
+            }
+        };
+        match claimed {
+            Some((session, job)) => {
+                idle_spins = 0;
+                run_job(shared, &session, job);
+            }
+            None => {
+                // idle: yield briefly, then back off to a sleep that caps
+                // at 1 ms — an idle server polls ~1k times/s per worker
+                // instead of busy-spinning (a serving process can sit
+                // idle for hours, unlike the token pipeline's bounded run)
+                idle_spins += 1;
+                if idle_spins < 16 {
+                    std::thread::yield_now();
+                } else {
+                    let us = 100 * u64::from((idle_spins - 15).min(10));
+                    std::thread::sleep(std::time::Duration::from_micros(us));
+                }
+            }
+        }
+    }
+}
+
+fn run_job(shared: &SchedShared, session: &Session, job: Job) {
+    // exclusive fabric: hold every placed module's slot for the frame
+    let slots = shared.fabric.slots_for(session.hw_modules());
+    let _guards: Vec<_> = slots.iter().map(|s| s.lock().expect("fabric slot")).collect();
+    let t0 = Instant::now();
+    let Job { seq, frame, submitted } = job;
+    // contain stage panics: the ticket must always complete (or the
+    // client waits forever), the worker must survive, and the slot
+    // guards above must be dropped cleanly instead of being poisoned
+    let result = catch_unwind(AssertUnwindSafe(|| session.pipeline().process_one(frame)))
+        .unwrap_or_else(|panic| {
+            Err(CourierError::Serve(format!(
+                "worker panicked while serving frame {seq}: {}",
+                panic_message(panic.as_ref())
+            )))
+        });
+    session.stats.service.record(t0.elapsed());
+    if result.is_ok() {
+        shared.stats.frames.add(1);
+    }
+    session.complete(seq, submitted, result);
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> &str {
+    panic
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| panic.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fabric_slots_are_shared_by_name() {
+        let fabric = FabricSlots::default();
+        let a = fabric.slots_for(&["m1".into(), "m2".into()]);
+        let b = fabric.slots_for(&["m2".into()]);
+        assert_eq!(a.len(), 2);
+        assert!(Arc::ptr_eq(&a[1], &b[0]), "same module -> same slot");
+        assert!(!Arc::ptr_eq(&a[0], &b[0]), "different modules -> different slots");
+    }
+
+    #[test]
+    fn empty_module_list_locks_nothing() {
+        let fabric = FabricSlots::default();
+        assert!(fabric.slots_for(&[]).is_empty());
+    }
+
+    #[test]
+    fn shutdown_joins_idle_workers() {
+        let sched = Scheduler::start(3, Arc::new(ServerStats::default()));
+        assert_eq!(sched.session_count(), 0);
+        sched.shutdown();
+        // second shutdown is a no-op
+        sched.shutdown();
+    }
+}

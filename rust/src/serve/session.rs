@@ -1,0 +1,272 @@
+//! Sessions: one tenant's stream into the server.
+//!
+//! A session binds a cached [`BuiltPipeline`] to a bounded ingress queue
+//! and a completion table.  Clients `submit` frames (blocking — the
+//! paper-style backpressure path) or `try_submit` (rejecting — load
+//! shedding) and `wait` on the returned [`Ticket`]; the scheduler's
+//! workers drain the queue and deliver results.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::app::Program;
+use crate::image::Mat;
+use crate::pipeline::BuiltPipeline;
+use crate::{CourierError, Result};
+
+use super::plan_cache::PlanKey;
+use super::queue::{BoundedQueue, PushError};
+use super::stats::SessionStats;
+
+/// A claim on one submitted frame's output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    pub(crate) seq: u64,
+}
+
+/// What a client asks the server to serve.
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    /// Tenant label (defaults to the program name).
+    pub name: String,
+    /// The program to accelerate.
+    pub program: Program,
+    /// Partition-policy override (defaults to the server config's policy).
+    pub policy: Option<crate::config::PartitionPolicy>,
+}
+
+impl SessionSpec {
+    /// Spec with defaults: named after the program, server policy.
+    pub fn new(program: Program) -> Self {
+        Self { name: program.name.clone(), program, policy: None }
+    }
+
+    /// Override the tenant label.
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    /// Override the partition policy.
+    pub fn with_policy(mut self, policy: crate::config::PartitionPolicy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+}
+
+/// One frame waiting for a worker.
+pub(crate) struct Job {
+    pub(crate) seq: u64,
+    pub(crate) frame: Mat,
+    pub(crate) submitted: Instant,
+}
+
+/// An open session.
+pub struct Session {
+    id: u64,
+    name: String,
+    key: PlanKey,
+    program: Program,
+    pipeline: Arc<BuiltPipeline>,
+    /// Fabric-slot keys (sorted module names) this session's frames lock.
+    hw_modules: Vec<String>,
+    queue: BoundedQueue<Job>,
+    done: Mutex<HashMap<u64, Result<Mat>>>,
+    done_cv: Condvar,
+    next_seq: AtomicU64,
+    closed: AtomicBool,
+    cache_hit: bool,
+    open_ns: u64,
+    /// Per-session metrics.
+    pub stats: SessionStats,
+}
+
+impl Session {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        id: u64,
+        name: String,
+        key: PlanKey,
+        program: Program,
+        pipeline: Arc<BuiltPipeline>,
+        queue_depth: usize,
+        cache_hit: bool,
+        open_ns: u64,
+    ) -> Self {
+        let hw_modules = pipeline.plan.hw_modules();
+        Self {
+            id,
+            name,
+            key,
+            program,
+            pipeline,
+            hw_modules,
+            queue: BoundedQueue::new(queue_depth),
+            done: Mutex::new(HashMap::new()),
+            done_cv: Condvar::new(),
+            next_seq: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            cache_hit,
+            open_ns,
+            stats: SessionStats::default(),
+        }
+    }
+
+    /// Server-assigned session id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Tenant label.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The plan-cache key this session was served under.
+    pub fn key(&self) -> &PlanKey {
+        &self.key
+    }
+
+    /// The program being served.
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    /// The (shared) built pipeline.
+    pub fn pipeline(&self) -> &Arc<BuiltPipeline> {
+        &self.pipeline
+    }
+
+    /// Whether open was served warm from the plan cache.
+    pub fn cache_hit(&self) -> bool {
+        self.cache_hit
+    }
+
+    /// Wall-clock the open took, ns (cold opens dwarf warm ones).
+    pub fn open_ns(&self) -> u64 {
+        self.open_ns
+    }
+
+    /// Frames currently queued (not yet picked up by a worker).
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True once closed: no new frames are accepted.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Blocking submit: waits for queue space (backpressure), then
+    /// enqueues.  Errors only when the session is closed.
+    pub fn submit(&self, frame: Mat) -> Result<Ticket> {
+        self.enqueue(frame, true)
+    }
+
+    /// Non-blocking submit: a full queue rejects the frame immediately
+    /// (counted in `stats.rejected`) instead of slowing the producer.
+    pub fn try_submit(&self, frame: Mat) -> Result<Ticket> {
+        self.enqueue(frame, false)
+    }
+
+    fn enqueue(&self, frame: Mat, blocking: bool) -> Result<Ticket> {
+        if self.is_closed() {
+            return Err(CourierError::Serve(format!("session {} is closed", self.name)));
+        }
+        let seq = self.next_seq.fetch_add(1, Ordering::AcqRel);
+        let job = Job { seq, frame, submitted: Instant::now() };
+        let pushed = if blocking { self.queue.push_blocking(job) } else { self.queue.try_push(job) };
+        match pushed {
+            Ok(()) => {
+                self.stats.submitted.inc();
+                self.stats.queue_depth.set(self.queue.len() as u64);
+                Ok(Ticket { seq })
+            }
+            Err(PushError::Full(_)) => {
+                self.stats.rejected.inc();
+                Err(CourierError::Serve(format!(
+                    "backpressure: session {} ingress queue full ({} frames)",
+                    self.name,
+                    self.queue.capacity()
+                )))
+            }
+            Err(PushError::Closed(_)) => {
+                Err(CourierError::Serve(format!("session {} is closed", self.name)))
+            }
+        }
+    }
+
+    /// Block until the ticket's frame is done and take its output.
+    pub fn wait(&self, ticket: Ticket) -> Result<Mat> {
+        let mut done = self.done.lock().expect("session done lock");
+        loop {
+            if let Some(result) = done.remove(&ticket.seq) {
+                return result;
+            }
+            let (guard, _) = self
+                .done_cv
+                .wait_timeout(done, Duration::from_millis(50))
+                .expect("session done lock");
+            done = guard;
+        }
+    }
+
+    /// Convenience round trip: submit a whole window with backpressure,
+    /// wait for every output, return them in submit order.
+    pub fn run_window(&self, frames: Vec<Mat>) -> Result<Vec<Mat>> {
+        let tickets: Vec<Ticket> =
+            frames.into_iter().map(|f| self.submit(f)).collect::<Result<_>>()?;
+        tickets.into_iter().map(|t| self.wait(t)).collect()
+    }
+
+    // ---- scheduler side -------------------------------------------------
+
+    /// Fabric-slot keys this session's frames must hold.
+    pub(crate) fn hw_modules(&self) -> &[String] {
+        &self.hw_modules
+    }
+
+    /// Claim the next queued job, if any.
+    pub(crate) fn take_job(&self) -> Option<Job> {
+        let job = self.queue.try_pop();
+        self.stats.queue_depth.set(self.queue.len() as u64);
+        job
+    }
+
+    /// Deliver one finished job.
+    pub(crate) fn complete(&self, seq: u64, submitted: Instant, result: Result<Mat>) {
+        self.stats.latency.record(submitted.elapsed());
+        match &result {
+            Ok(_) => self.stats.completed.inc(),
+            Err(_) => self.stats.failed.inc(),
+        }
+        self.done.lock().expect("session done lock").insert(seq, result);
+        self.done_cv.notify_all();
+    }
+
+    /// Close: refuse new frames and cancel everything still queued (each
+    /// cancelled ticket's `wait` returns an error).  Frames already on a
+    /// worker finish normally.
+    pub(crate) fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.queue.close();
+        let orphans = self.queue.drain();
+        if !orphans.is_empty() {
+            let mut done = self.done.lock().expect("session done lock");
+            for job in orphans {
+                self.stats.cancelled.inc();
+                done.insert(
+                    job.seq,
+                    Err(CourierError::Serve(format!(
+                        "session {} closed before frame ran",
+                        self.name
+                    ))),
+                );
+            }
+            self.done_cv.notify_all();
+        }
+        self.stats.queue_depth.set(0);
+    }
+}

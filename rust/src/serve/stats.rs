@@ -1,0 +1,134 @@
+//! Serving metrics: per-session and server-wide bundles built on the
+//! [`crate::metrics`] primitives (counters, gauges, latency histograms,
+//! throughput windows).
+
+use std::time::Duration;
+
+use crate::metrics::{Counter, Gauge, Latency, Throughput};
+
+/// Samples the per-session latency recorders retain (a session can run
+/// for days; percentiles describe the most recent window).
+const LATENCY_WINDOW: usize = 4096;
+
+/// Per-session counters and timings.
+#[derive(Debug)]
+pub struct SessionStats {
+    /// Frames accepted into the ingress queue.
+    pub submitted: Counter,
+    /// Frames fully processed (output delivered).
+    pub completed: Counter,
+    /// Frames whose pipeline execution failed.
+    pub failed: Counter,
+    /// Frames rejected by `try_submit` (queue full / admission).
+    pub rejected: Counter,
+    /// Frames cancelled at session close before running.
+    pub cancelled: Counter,
+    /// Submit → completion latency (queueing + service), recent window.
+    pub latency: Latency,
+    /// Pipeline execution time only, recent window.
+    pub service: Latency,
+    /// Instantaneous ingress-queue depth.
+    pub queue_depth: Gauge,
+}
+
+impl Default for SessionStats {
+    fn default() -> Self {
+        Self {
+            submitted: Counter::default(),
+            completed: Counter::default(),
+            failed: Counter::default(),
+            rejected: Counter::default(),
+            cancelled: Counter::default(),
+            latency: Latency::windowed(LATENCY_WINDOW),
+            service: Latency::windowed(LATENCY_WINDOW),
+            queue_depth: Gauge::default(),
+        }
+    }
+}
+
+impl SessionStats {
+    /// p50 end-to-end latency, ms.
+    pub fn p50_ms(&self) -> f64 {
+        self.latency.percentile_ns(0.5) as f64 / 1e6
+    }
+
+    /// p99 end-to-end latency, ms.
+    pub fn p99_ms(&self) -> f64 {
+        self.latency.percentile_ns(0.99) as f64 / 1e6
+    }
+
+    /// Frames still owed to the client: accepted but not yet completed,
+    /// failed or cancelled.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted
+            .get()
+            .saturating_sub(self.completed.get() + self.failed.get() + self.cancelled.get())
+    }
+}
+
+/// Server-wide counters and timings.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    /// Sessions successfully opened.
+    pub sessions_opened: Counter,
+    /// Sessions refused by admission control.
+    pub sessions_rejected: Counter,
+    /// Currently open sessions.
+    pub active_sessions: Gauge,
+    /// Session-open latency (cold builds and warm cache hits together —
+    /// the cold/warm split is visible in the plan cache's own metrics).
+    pub open_latency: Latency,
+    /// Frames served across all sessions since server start.
+    pub frames: Throughput,
+}
+
+impl ServerStats {
+    /// Record one session-open.
+    pub(crate) fn record_open(&self, took: Duration) {
+        self.sessions_opened.inc();
+        self.active_sessions.inc();
+        self.open_latency.record(took);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_flight_accounting() {
+        let s = SessionStats::default();
+        for _ in 0..5 {
+            s.submitted.inc();
+        }
+        s.completed.add(2);
+        s.failed.inc();
+        s.cancelled.inc();
+        assert_eq!(s.in_flight(), 1);
+        // over-completion saturates instead of wrapping
+        s.completed.add(10);
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn percentile_helpers_in_ms() {
+        let s = SessionStats::default();
+        for ms in [2u64, 4, 6, 8, 10] {
+            s.latency.record(Duration::from_millis(ms));
+        }
+        assert!(s.p50_ms() >= 4.0 && s.p50_ms() <= 8.0, "{}", s.p50_ms());
+        assert!(s.p99_ms() >= 8.0, "{}", s.p99_ms());
+    }
+
+    #[test]
+    fn server_open_accounting() {
+        let s = ServerStats::default();
+        s.record_open(Duration::from_millis(3));
+        s.record_open(Duration::from_millis(5));
+        assert_eq!(s.sessions_opened.get(), 2);
+        assert_eq!(s.active_sessions.get(), 2);
+        assert_eq!(s.open_latency.count(), 2);
+        s.active_sessions.dec();
+        assert_eq!(s.active_sessions.get(), 1);
+    }
+}

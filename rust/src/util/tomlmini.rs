@@ -1,6 +1,7 @@
-//! Minimal TOML subset for `courier.toml`: top-level `key = value` pairs
-//! with string, integer, float and boolean values, `#` comments.  No
-//! tables/arrays — the config is flat by design.
+//! Minimal TOML subset for `courier.toml`: `key = value` pairs with
+//! string, integer, float and boolean values, `#` comments, and one level
+//! of `[table]` headers.  A key inside `[serve]` is addressed as
+//! `serve.key`; no nested tables or arrays — the config stays flat.
 
 use std::collections::BTreeMap;
 
@@ -26,24 +27,33 @@ pub enum TomlValue {
 }
 
 impl TomlDoc {
-    /// Parse a flat TOML document.
+    /// Parse a TOML document (flat keys + one level of `[table]` headers).
     pub fn parse(text: &str) -> Result<Self> {
         let mut values = BTreeMap::new();
+        let mut prefix = String::new();
         for (idx, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
-            if line.starts_with('[') {
-                return Err(CourierError::Config(format!(
-                    "line {}: tables are not supported in courier.toml",
-                    idx + 1
-                )));
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').map(str::trim).ok_or_else(|| {
+                    CourierError::Config(format!("line {}: malformed table header", idx + 1))
+                })?;
+                if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                {
+                    return Err(CourierError::Config(format!(
+                        "line {}: bad table name {name:?}",
+                        idx + 1
+                    )));
+                }
+                prefix = format!("{name}.");
+                continue;
             }
             let (k, v) = line.split_once('=').ok_or_else(|| {
                 CourierError::Config(format!("line {}: expected key = value", idx + 1))
             })?;
-            let key = k.trim().to_string();
+            let key = format!("{prefix}{}", k.trim());
             let val = parse_value(v.trim())
                 .ok_or_else(|| CourierError::Config(format!("line {}: bad value {v:?}", idx + 1)))?;
             values.insert(key, val);
@@ -140,8 +150,20 @@ mod tests {
     }
 
     #[test]
-    fn rejects_tables_and_garbage() {
-        assert!(TomlDoc::parse("[section]\n").is_err());
+    fn table_headers_prefix_keys() {
+        let doc = TomlDoc::parse("threads = 2\n[serve]\nworkers = 4\nmax_sessions = 8\n").unwrap();
+        assert_eq!(doc.get_usize("threads"), Some(2));
+        assert_eq!(doc.get_usize("serve.workers"), Some(4));
+        assert_eq!(doc.get_usize("serve.max_sessions"), Some(8));
+        assert!(!doc.contains("workers"));
+    }
+
+    #[test]
+    fn rejects_bad_tables_and_garbage() {
+        assert!(TomlDoc::parse("[section]\n").is_ok());
+        assert!(TomlDoc::parse("[bad name]\n").is_err());
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("[]\n").is_err());
         assert!(TomlDoc::parse("key value\n").is_err());
         assert!(TomlDoc::parse("key = @@\n").is_err());
     }

@@ -16,6 +16,11 @@ fn courier_bin() -> PathBuf {
 }
 
 fn run(args: &[&str]) -> (String, String, bool) {
+    let (stdout, stderr, code) = run_code(args);
+    (stdout, stderr, code == Some(0))
+}
+
+fn run_code(args: &[&str]) -> (String, String, Option<i32>) {
     let out = Command::new(courier_bin())
         .args(args)
         .current_dir(env!("CARGO_MANIFEST_DIR"))
@@ -24,7 +29,7 @@ fn run(args: &[&str]) -> (String, String, bool) {
     (
         String::from_utf8_lossy(&out.stdout).into_owned(),
         String::from_utf8_lossy(&out.stderr).into_owned(),
-        out.status.success(),
+        out.status.code(),
     )
 }
 
@@ -42,6 +47,37 @@ fn unknown_command_fails() {
     let (_, stderr, ok) = run(&["frobnicate"]);
     assert!(!ok);
     assert!(stderr.contains("unknown command"));
+}
+
+#[test]
+fn unknown_flag_prints_usage_and_exits_2() {
+    let (_, stderr, code) = run_code(&["trace", "--bogus", "x"]);
+    assert_eq!(code, Some(2), "unknown flag must exit 2");
+    assert!(stderr.contains("unknown flag --bogus"), "{stderr}");
+    assert!(stderr.contains("USAGE"), "usage must be printed: {stderr}");
+}
+
+#[test]
+fn equals_form_flags_are_accepted() {
+    let dir = TempDir::new("cli-eq").unwrap();
+    let trace = dir.path().join("t.json");
+    let (stdout, stderr, ok) = run(&[
+        "trace",
+        "--program=corner_harris:48x64",
+        "--frames=2",
+        &format!("--out={}", trace.to_str().unwrap()),
+    ]);
+    assert!(ok, "trace with =-form flags failed: {stderr}");
+    assert!(stdout.contains("traced 8 events over 2 frames"), "{stdout}");
+    assert!(trace.exists());
+}
+
+#[test]
+fn help_flag_prints_usage() {
+    let (stdout, _, code) = run_code(&["--help"]);
+    assert_eq!(code, Some(0));
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("serve"));
 }
 
 #[test]
@@ -110,6 +146,35 @@ fn deploy_reports_table1_and_speedup() {
     assert!(stdout.contains("TABLE I"), "{stdout}");
     assert!(stdout.contains("Speed-up"), "{stdout}");
     assert!(stdout.contains("deployed:"), "{stdout}");
+}
+
+#[test]
+fn serve_reports_warm_second_session() {
+    // two sessions over one spec: the second must be a plan-cache hit.
+    // An empty-but-valid module database keeps this hermetic (pure CPU
+    // placement, no `make artifacts` needed).
+    let dir = TempDir::new("cli-serve").unwrap();
+    std::fs::write(
+        dir.path().join("manifest.json"),
+        r#"{"version": 1, "fabric_clock_mhz": 157.0, "modules": []}"#,
+    )
+    .unwrap();
+    let (stdout, stderr, ok) = run(&[
+        "--artifacts",
+        dir.path().to_str().unwrap(),
+        "serve",
+        "--programs",
+        "corner_harris:48x64",
+        "--sessions",
+        "2",
+        "--frames",
+        "4",
+    ]);
+    assert!(ok, "serve failed: {stderr}");
+    assert!(stdout.contains("cold (built)"), "{stdout}");
+    assert!(stdout.contains("warm (plan cache hit)"), "{stdout}");
+    assert!(stdout.contains("SERVE: per-session report"), "{stdout}");
+    assert!(stdout.contains("50% hit rate"), "{stdout}");
 }
 
 #[test]

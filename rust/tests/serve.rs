@@ -1,0 +1,248 @@
+//! Integration: the `courier::serve` multi-tenant serving subsystem.
+//!
+//! Most tests run hermetically: an empty-but-valid hardware manifest makes
+//! every database lookup miss, so pipelines place everything on the CPU
+//! and no AOT artifact is required.  One test exercises the hardware path
+//! and is gated on `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use courier::app::{corner_harris_demo, Interpreter, RegistryDispatch};
+use courier::config::Config;
+use courier::image::{synth, Mat};
+use courier::serve::{Server, SessionSpec};
+use courier::util::testing::TempDir;
+
+/// A valid artifact dir whose database has no modules (CPU-only serving).
+fn empty_db(tmp: &TempDir) -> PathBuf {
+    std::fs::write(
+        tmp.path().join("manifest.json"),
+        r#"{"version": 1, "fabric_clock_mhz": 157.0, "modules": []}"#,
+    )
+    .unwrap();
+    tmp.path().to_path_buf()
+}
+
+fn serve_config(artifacts_dir: PathBuf) -> Config {
+    let mut cfg = Config { artifacts_dir, ..Default::default() };
+    cfg.serve.workers = 2;
+    cfg.serve.queue_depth = 4;
+    cfg
+}
+
+#[test]
+fn second_open_with_identical_key_is_served_from_the_plan_cache() {
+    let tmp = TempDir::new("serve-cache").unwrap();
+    let server = Server::new(serve_config(empty_db(&tmp))).unwrap();
+
+    let cold = server.open(SessionSpec::new(corner_harris_demo(64, 80))).unwrap();
+    assert!(!cold.cache_hit(), "first open must build");
+    assert_eq!(server.cache().misses.get(), 1);
+    assert_eq!(server.cache().hits.get(), 0);
+
+    let warm = server.open(SessionSpec::new(corner_harris_demo(64, 80))).unwrap();
+    assert!(warm.cache_hit(), "identical key must hit the cache");
+    assert_eq!(server.cache().misses.get(), 1, "no rebuild on the second open");
+    assert_eq!(server.cache().hits.get(), 1);
+    assert!(
+        Arc::ptr_eq(cold.pipeline(), warm.pipeline()),
+        "both sessions must share one built pipeline"
+    );
+    assert!(
+        warm.open_ns() < cold.open_ns(),
+        "warm open ({} ns) must be faster than cold open ({} ns)",
+        warm.open_ns(),
+        cold.open_ns()
+    );
+
+    // a *different* key (other shape) is a fresh build
+    let other = server.open(SessionSpec::new(corner_harris_demo(32, 40))).unwrap();
+    assert!(!other.cache_hit());
+    assert_eq!(server.cache().misses.get(), 2);
+    assert_eq!(server.cache().len(), 2);
+
+    // and the served outputs match the original binary
+    let frame = synth::noise_rgb(64, 80, 7);
+    let got = warm.run_window(vec![frame.clone()]).unwrap().remove(0);
+    let original =
+        Interpreter::new(corner_harris_demo(64, 80), Arc::new(RegistryDispatch::standard()));
+    let want = original.run(&[frame]).unwrap().remove(0);
+    assert!(got.quantized_close(&want, 1.0, 1e-3), "served output diverges from binary");
+
+    server.shutdown();
+}
+
+#[test]
+fn saturating_one_session_does_not_stall_another() {
+    let tmp = TempDir::new("serve-isolation").unwrap();
+    let mut cfg = serve_config(empty_db(&tmp));
+    cfg.serve.queue_depth = 2; // tiny ingress bound: saturation is easy
+    let server = Server::new(cfg).unwrap();
+
+    // tenant A: heavy frames, hammered without backpressure (try_submit)
+    let heavy = server
+        .open(SessionSpec::new(corner_harris_demo(160, 200)).named("heavy"))
+        .unwrap();
+    // tenant B: light frames, polite blocking submits
+    let light = server
+        .open(SessionSpec::new(corner_harris_demo(32, 40)).named("light"))
+        .unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let outputs: Vec<Mat> = std::thread::scope(|scope| {
+        let saturator = {
+            let heavy = heavy.clone();
+            let stop = stop.clone();
+            scope.spawn(move || {
+                let mut tickets = Vec::new();
+                let mut seq = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    match heavy.try_submit(synth::noise_rgb(160, 200, seq)) {
+                        Ok(t) => tickets.push(t),
+                        Err(_) => std::thread::yield_now(), // rejected: queue full
+                    }
+                    seq += 1;
+                }
+                tickets
+            })
+        };
+
+        // tenant B streams 8 frames while A is saturated
+        let outs: Vec<Mat> = (0..8)
+            .map(|i| {
+                let t = light.submit(synth::noise_rgb(32, 40, i)).unwrap();
+                light.wait(t).unwrap()
+            })
+            .collect();
+
+        stop.store(true, Ordering::Release);
+        // A's accepted frames still complete (no lost work)
+        for t in saturator.join().expect("saturator thread") {
+            heavy.wait(t).unwrap();
+        }
+        outs
+    });
+
+    assert_eq!(outputs.len(), 8, "light tenant finished under saturation");
+    assert_eq!(light.stats.completed.get(), 8);
+    assert_eq!(light.stats.rejected.get(), 0, "light tenant was never shed");
+    assert!(
+        heavy.stats.rejected.get() > 0,
+        "bounded queue must have rejected some of the saturating load"
+    );
+    assert!(heavy.stats.completed.get() > 0, "heavy tenant made progress too");
+
+    // light outputs are correct despite the contention
+    let original =
+        Interpreter::new(corner_harris_demo(32, 40), Arc::new(RegistryDispatch::standard()));
+    for (i, out) in outputs.iter().enumerate() {
+        let want = original.run(&[synth::noise_rgb(32, 40, i as u64)]).unwrap().remove(0);
+        assert!(out.quantized_close(&want, 1.0, 1e-3), "light frame {i} corrupted");
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn admission_control_caps_open_sessions() {
+    let tmp = TempDir::new("serve-admission").unwrap();
+    let mut cfg = serve_config(empty_db(&tmp));
+    cfg.serve.max_sessions = 1;
+    let server = Server::new(cfg).unwrap();
+
+    let first = server.open(SessionSpec::new(corner_harris_demo(32, 40))).unwrap();
+    let err = match server.open(SessionSpec::new(corner_harris_demo(48, 64))) {
+        Err(e) => e,
+        Ok(_) => panic!("second session must be refused"),
+    };
+    assert!(err.to_string().contains("admission"), "{err}");
+    assert_eq!(server.stats().sessions_rejected.get(), 1);
+    assert_eq!(server.active_sessions(), 1);
+
+    // closing frees the slot
+    server.close(&first);
+    assert_eq!(server.active_sessions(), 0);
+    let again = server.open(SessionSpec::new(corner_harris_demo(48, 64))).unwrap();
+    assert!(!again.is_closed());
+
+    // the closed session refuses new frames
+    let err = first.submit(synth::noise_rgb(32, 40, 0)).unwrap_err();
+    assert!(err.to_string().contains("closed"), "{err}");
+
+    server.shutdown();
+}
+
+#[test]
+fn close_cancels_queued_frames_but_not_finished_ones() {
+    let tmp = TempDir::new("serve-close").unwrap();
+    let mut cfg = serve_config(empty_db(&tmp));
+    cfg.serve.workers = 1;
+    cfg.serve.queue_depth = 16;
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(corner_harris_demo(120, 160))).unwrap();
+
+    // first frame completes; the rest are likely still queued at close
+    let done = session.submit(synth::noise_rgb(120, 160, 0)).unwrap();
+    let out = session.wait(done).unwrap();
+    assert_eq!(out.shape(), &[120, 160]);
+
+    let pending: Vec<_> = (1..10)
+        .map(|i| session.submit(synth::noise_rgb(120, 160, i)).unwrap())
+        .collect();
+    server.close(&session);
+    let mut cancelled = 0;
+    for t in pending {
+        if session.wait(t).is_err() {
+            cancelled += 1;
+        }
+    }
+    assert_eq!(
+        cancelled,
+        session.stats.cancelled.get(),
+        "every cancelled frame surfaced as a wait error"
+    );
+    assert!(session.stats.completed.get() >= 1);
+
+    server.shutdown();
+}
+
+#[test]
+fn hardware_sessions_share_cached_pjrt_executables() {
+    // the real-artifact variant of the cache test (skips without
+    // `make artifacts`, like the runtime unit tests)
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let server = Server::new(serve_config(dir)).unwrap();
+    let a = server.open(SessionSpec::new(corner_harris_demo(48, 64))).unwrap();
+    assert!(
+        !a.pipeline().plan.hw_modules().is_empty(),
+        "case-study pipeline must place hardware modules"
+    );
+    let b = server.open(SessionSpec::new(corner_harris_demo(48, 64))).unwrap();
+    assert!(b.cache_hit());
+    assert!(Arc::ptr_eq(a.pipeline(), b.pipeline()));
+    assert!(b.open_ns() < a.open_ns(), "warm {} vs cold {}", b.open_ns(), a.open_ns());
+
+    // both tenants stream concurrently and agree with the original binary
+    let frames: Vec<Mat> = (0..4).map(|s| synth::noise_rgb(48, 64, 50 + s)).collect();
+    let (out_a, out_b) = std::thread::scope(|scope| {
+        let fa = frames.clone();
+        let fb = frames.clone();
+        let ha = scope.spawn(move || a.run_window(fa).unwrap());
+        let hb = scope.spawn(move || b.run_window(fb).unwrap());
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    let original =
+        Interpreter::new(corner_harris_demo(48, 64), Arc::new(RegistryDispatch::standard()));
+    for (i, f) in frames.into_iter().enumerate() {
+        let want = original.run(&[f]).unwrap().remove(0);
+        assert!(out_a[i].quantized_close(&want, 1.0, 1e-3), "tenant a frame {i}");
+        assert!(out_b[i].quantized_close(&want, 1.0, 1e-3), "tenant b frame {i}");
+    }
+
+    server.shutdown();
+}
