@@ -65,6 +65,39 @@ impl Default for ServeConfig {
     }
 }
 
+/// `[tune]` section: knobs for the measurement-driven autotuner
+/// ([`crate::tune`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TuneConfig {
+    /// Search budget: maximum candidate plans the simulator scores.
+    pub budget: usize,
+    /// Frames per simulator evaluation (longer streams smooth fill/drain
+    /// effects out of the makespan).
+    pub sim_frames: usize,
+    /// Frames per *measured* run (calibration and top-K validation).
+    pub measure_frames: usize,
+    /// Candidates validated by a real measured run before promotion.
+    pub top_k: usize,
+    /// Token-pool search ceiling.
+    pub max_tokens: usize,
+    /// Calibrated cost database manifest to load/merge/save
+    /// (`hwdb`-style JSON); empty = in-memory only.
+    pub cost_db: Option<PathBuf>,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        Self {
+            budget: 48,
+            sim_frames: 32,
+            measure_frames: 8,
+            top_k: 2,
+            max_tokens: 16,
+            cost_db: None,
+        }
+    }
+}
+
 /// Courier configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -84,6 +117,8 @@ pub struct Config {
     pub include_disabled_modules: bool,
     /// `[serve]` section (multi-tenant serving).
     pub serve: ServeConfig,
+    /// `[tune]` section (measurement-driven autotuning).
+    pub tune: TuneConfig,
 }
 
 impl Default for Config {
@@ -97,6 +132,7 @@ impl Default for Config {
             cpu_only: false,
             include_disabled_modules: false,
             serve: ServeConfig::default(),
+            tune: TuneConfig::default(),
         }
     }
 }
@@ -122,6 +158,12 @@ impl Config {
             "serve.workers",
             "serve.max_sessions",
             "serve.queue_depth",
+            "tune.budget",
+            "tune.sim_frames",
+            "tune.measure_frames",
+            "tune.top_k",
+            "tune.max_tokens",
+            "tune.cost_db",
         ];
         for k in doc.keys() {
             if !KNOWN.contains(&k) {
@@ -159,15 +201,35 @@ impl Config {
         if let Some(v) = doc.get_usize("serve.queue_depth") {
             cfg.serve.queue_depth = v;
         }
+        if let Some(v) = doc.get_usize("tune.budget") {
+            cfg.tune.budget = v;
+        }
+        if let Some(v) = doc.get_usize("tune.sim_frames") {
+            cfg.tune.sim_frames = v;
+        }
+        if let Some(v) = doc.get_usize("tune.measure_frames") {
+            cfg.tune.measure_frames = v;
+        }
+        if let Some(v) = doc.get_usize("tune.top_k") {
+            cfg.tune.top_k = v;
+        }
+        if let Some(v) = doc.get_usize("tune.max_tokens") {
+            cfg.tune.max_tokens = v;
+        }
+        if let Some(v) = doc.get_str("tune.cost_db") {
+            cfg.tune.cost_db = (!v.is_empty()).then(|| PathBuf::from(v));
+        }
         Ok(cfg)
     }
 
     /// Serialize to TOML.
     pub fn to_toml(&self) -> String {
-        format!(
+        let mut s = format!(
             "threads = {}\ntokens = {}\npolicy = \"{}\"\nartifacts_dir = \"{}\"\n\
              trace_frames = {}\ncpu_only = {}\ninclude_disabled_modules = {}\n\
-             \n[serve]\nworkers = {}\nmax_sessions = {}\nqueue_depth = {}\n",
+             \n[serve]\nworkers = {}\nmax_sessions = {}\nqueue_depth = {}\n\
+             \n[tune]\nbudget = {}\nsim_frames = {}\nmeasure_frames = {}\n\
+             top_k = {}\nmax_tokens = {}\n",
             self.threads,
             self.tokens,
             self.policy.as_str(),
@@ -178,7 +240,16 @@ impl Config {
             self.serve.workers,
             self.serve.max_sessions,
             self.serve.queue_depth,
-        )
+            self.tune.budget,
+            self.tune.sim_frames,
+            self.tune.measure_frames,
+            self.tune.top_k,
+            self.tune.max_tokens,
+        );
+        if let Some(p) = &self.tune.cost_db {
+            s.push_str(&format!("cost_db = \"{}\"\n", p.display()));
+        }
+        s
     }
 
     /// Stage-count target of the paper's policy: threads + 1.
@@ -222,6 +293,36 @@ mod tests {
         assert_eq!(c.serve.workers, 9);
         assert_eq!(c.serve.queue_depth, 2);
         assert_eq!(c.serve.max_sessions, ServeConfig::default().max_sessions);
+    }
+
+    #[test]
+    fn tune_section_parses() {
+        let doc = TomlDoc::parse(
+            "[tune]\nbudget = 9\nmeasure_frames = 2\ncost_db = \"tune/costs.json\"\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.tune.budget, 9);
+        assert_eq!(c.tune.measure_frames, 2);
+        assert_eq!(c.tune.cost_db, Some(PathBuf::from("tune/costs.json")));
+        assert_eq!(c.tune.top_k, TuneConfig::default().top_k);
+    }
+
+    #[test]
+    fn tune_roundtrips_through_toml() {
+        let c = Config {
+            tune: TuneConfig {
+                budget: 7,
+                sim_frames: 16,
+                measure_frames: 3,
+                top_k: 1,
+                max_tokens: 8,
+                cost_db: Some(PathBuf::from("x.json")),
+            },
+            ..Default::default()
+        };
+        let doc = TomlDoc::parse(&c.to_toml()).unwrap();
+        assert_eq!(Config::from_doc(&doc).unwrap(), c);
     }
 
     #[test]

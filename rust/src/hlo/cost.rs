@@ -138,6 +138,79 @@ pub fn latency_cycles(flops: f64, bytes: f64) -> u64 {
     (flops / 8.0).max(bytes / 4.0).ceil() as u64
 }
 
+/// Calibration factors are clamped to this band: a single wild
+/// measurement (page fault, cold cache) must not swing an estimate by
+/// more than an order of magnitude in either direction.
+pub const CALIBRATION_FACTOR_BAND: (f64, f64) = (1.0 / 16.0, 16.0);
+
+/// Canonical calibration key for one placed task:
+/// `symbol@HxW[xC]#hw|sw`.
+///
+/// Both the calibrator (`tune::calibrate`) and the pipeline builder derive
+/// keys through this function, so measured corrections land back on the
+/// same tasks they were recorded for.  The placement is part of the key:
+/// a factor measured for the CPU implementation of a symbol says nothing
+/// about the fabric module's estimate (and vice versa) — without the
+/// suffix, calibrating a database-miss CPU run would corrupt the hardware
+/// estimate the moment the module is enabled.
+pub fn task_key(symbol: &str, input_shape: &[usize], hw: bool) -> String {
+    let dims: Vec<String> = input_shape.iter().map(|d| d.to_string()).collect();
+    format!("{symbol}@{}#{}", dims.join("x"), if hw { "hw" } else { "sw" })
+}
+
+/// A measurement-calibrated correction layer over the static cost model.
+///
+/// The analytic numbers above (and the traced SW means) are *estimates*;
+/// `courier tune` replays real frames through a built pipeline and records
+/// how far reality diverged per task.  The divergence is kept as a
+/// multiplicative factor (`measured / predicted`) keyed by [`task_key`];
+/// the pipeline builder applies it to every task estimate before the
+/// partition policy balances stages, closing the loop the paper leaves
+/// open (its module costs are predefined).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostCalibration {
+    factors: std::collections::BTreeMap<String, f64>,
+}
+
+impl CostCalibration {
+    /// Empty calibration (every estimate passes through unchanged).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install the factor for one task key (clamped to the band).
+    pub fn set_factor(&mut self, key: &str, factor: f64) {
+        let (lo, hi) = CALIBRATION_FACTOR_BAND;
+        let f = if factor.is_finite() && factor > 0.0 { factor.clamp(lo, hi) } else { 1.0 };
+        self.factors.insert(key.to_string(), f);
+    }
+
+    /// The stored factor, if this key was ever measured.
+    pub fn factor(&self, key: &str) -> Option<f64> {
+        self.factors.get(key).copied()
+    }
+
+    /// Apply the calibration to one estimate; unknown keys pass through.
+    /// Estimates never calibrate to zero (a zero-cost task would let the
+    /// partitioner produce degenerate cuts).
+    pub fn apply_ns(&self, key: &str, est_ns: u64) -> u64 {
+        match self.factor(key) {
+            None => est_ns,
+            Some(f) => ((est_ns as f64 * f) as u64).max(1),
+        }
+    }
+
+    /// Number of calibrated keys.
+    pub fn len(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// True when nothing has been measured yet.
+    pub fn is_empty(&self) -> bool {
+        self.factors.is_empty()
+    }
+}
+
 /// Cycles + clock -> milliseconds (Table II's "Proc. time" column).
 pub fn cycles_to_ms(cycles: u64, clock_mhz: f64) -> f64 {
     cycles as f64 / (clock_mhz * 1e3)
@@ -205,6 +278,34 @@ mod tests {
         assert!(harris > csa);
         let ms = cycles_to_ms(harris, 157.0);
         assert!(ms > 1.0 && ms < 1000.0, "{ms}");
+    }
+
+    #[test]
+    fn calibration_applies_clamped_factors() {
+        let mut cal = CostCalibration::new();
+        assert!(cal.is_empty());
+        cal.set_factor("cv::x@8x8", 2.0);
+        cal.set_factor("cv::wild@8x8", 1e9); // clamped to the band
+        cal.set_factor("cv::bad@8x8", f64::NAN); // ignored -> identity
+        assert_eq!(cal.apply_ns("cv::x@8x8", 1000), 2000);
+        assert_eq!(cal.apply_ns("cv::wild@8x8", 1000), 16_000);
+        assert_eq!(cal.apply_ns("cv::bad@8x8", 1000), 1000);
+        assert_eq!(cal.apply_ns("cv::unknown@8x8", 777), 777);
+        assert_eq!(cal.len(), 3);
+        // never calibrates to zero
+        cal.set_factor("cv::tiny@1x1", 1.0 / 16.0);
+        assert_eq!(cal.apply_ns("cv::tiny@1x1", 1), 1);
+    }
+
+    #[test]
+    fn task_keys_embed_shape_and_placement() {
+        assert_eq!(task_key("cv::cvtColor", &[240, 320, 3], true), "cv::cvtColor@240x320x3#hw");
+        assert_eq!(task_key("cv::cornerHarris", &[48, 64], false), "cv::cornerHarris@48x64#sw");
+        // the same symbol/shape calibrates independently per placement
+        assert_ne!(
+            task_key("cv::Sobel", &[16, 16], true),
+            task_key("cv::Sobel", &[16, 16], false)
+        );
     }
 
     #[test]

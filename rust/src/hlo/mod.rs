@@ -19,5 +19,8 @@
 mod cost;
 mod parser;
 
-pub use cost::{cycles_to_ms, latency_cycles, ResourceEstimate, BRAM_BYTES};
+pub use cost::{
+    cycles_to_ms, latency_cycles, task_key, CostCalibration, ResourceEstimate, BRAM_BYTES,
+    CALIBRATION_FACTOR_BAND,
+};
 pub use parser::{parse_hlo_text, HloComputation, HloInstruction, HloModule};

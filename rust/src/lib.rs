@@ -31,6 +31,16 @@
 //! per-module fabric slots, and bounded ingress queues for backpressure.
 //! `courier serve` is the CLI entry point; `docs/serving.md` walks through
 //! the architecture.
+//!
+//! [`tune`] closes the cost-model loop the paper leaves open: instead of
+//! trusting predefined module costs forever, `courier tune` *calibrates*
+//! the model by replaying real frames through the built pipeline
+//! (recording per-task corrections into a persistent cost database),
+//! *searches* the configuration space — partition boundaries, token
+//! counts, queue depth, software-stage fusion — with a budget-bounded
+//! hill-climb scored by the simulator, and *promotes* the measured winner
+//! into the serving plan cache without invalidating in-flight sessions.
+//! See `docs/tuning.md`.
 
 pub mod app;
 pub mod config;
@@ -46,6 +56,7 @@ pub mod runtime;
 pub mod serve;
 pub mod swlib;
 pub mod trace;
+pub mod tune;
 pub mod util;
 
 mod errors;

@@ -8,6 +8,7 @@
 //! courier run     --program <spec> [--frames 8]          # original
 //! courier deploy  --program <spec> [--frames 8]          # accelerated
 //! courier serve   --programs <spec,...> [--sessions N] [--frames M]
+//! courier tune    --program <spec> [--budget N] [--cost-db FILE]
 //! courier synth   [--size 1080x1920]                      # tables II/III
 //! ```
 //!
@@ -52,6 +53,9 @@ COMMANDS:
   serve   --programs <spec,...> [--sessions N] [--frames M]
                                                        multi-tenant serving
                                                        (see docs/serving.md)
+  tune    --program <spec> [--budget N] [--frames M] [--cost-db FILE]
+                                                       calibrate + search +
+                                                       report (docs/tuning.md)
   synth   [--size HxW]                                 Tables II & III
 
 GLOBAL FLAGS:
@@ -73,6 +77,8 @@ const KNOWN_FLAGS: &[&str] = &[
     "config", "artifacts", "threads", "tokens", "policy",
     // trace / run / deploy / serve
     "program", "programs", "frames", "sessions", "out",
+    // tune
+    "budget", "cost-db",
     // graph / edit / plan / build
     "trace", "dot", "ir", "fuse", "pin", "drop", "emit",
     // synth
@@ -161,6 +167,7 @@ fn real_main() -> anyhow::Result<()> {
         "run" => cmd_run(&args),
         "deploy" => cmd_deploy(&args, &cfg),
         "serve" => cmd_serve(&args, &cfg),
+        "tune" => cmd_tune(&args, &cfg),
         "synth" => cmd_synth(&args, &cfg),
         other => {
             anyhow::bail!("unknown command {other:?}\n\n{USAGE}");
@@ -486,6 +493,54 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     server.shutdown();
     if !errors.is_empty() {
         anyhow::bail!("{} session(s) failed", errors.len());
+    }
+    Ok(())
+}
+
+/// `courier tune`: calibrate the cost model on real frames, search the
+/// configuration space, validate the top-K by measurement, print the
+/// TUNE report, and persist the calibrated cost database.
+fn cmd_tune(args: &Args, cfg: &Config) -> anyhow::Result<()> {
+    let prog = load_program(args.require("program").map_err(anyhow::Error::msg)?)?;
+    let mut cfg = cfg.clone();
+    cfg.tune.budget = args.get_usize("budget", cfg.tune.budget).map_err(anyhow::Error::msg)?;
+    cfg.tune.measure_frames =
+        args.get_usize("frames", cfg.tune.measure_frames).map_err(anyhow::Error::msg)?;
+    if let Some(p) = args.get("cost-db") {
+        cfg.tune.cost_db = Some(PathBuf::from(p));
+    }
+
+    let db = HwDatabase::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    let registry = Registry::standard();
+    let tuner = courier::tune::Tuner::new(&db, &rt, &registry, &cfg);
+    let cost_db = match &cfg.tune.cost_db {
+        Some(p) => courier::tune::CalibratedCostDb::load_or_default(p)?,
+        None => courier::tune::CalibratedCostDb::new(),
+    };
+    let outcome = tuner.tune_with_db(&prog, cost_db)?;
+
+    print!("{}", report::render_tune(&outcome.report));
+    print!("{}", report::render_plan(&outcome.winner.plan));
+    println!(
+        "recommended: tokens = {}, serve.queue_depth = {}",
+        outcome.winner.plan.tokens, outcome.queue_depth
+    );
+    if let Some(p) = &cfg.tune.cost_db {
+        outcome.cost_db.save(p)?;
+        println!(
+            "cost db: {} calibrated tasks -> {}",
+            outcome.cost_db.len(),
+            p.display()
+        );
+    }
+    if !outcome.improved {
+        // the seed may genuinely be best, or a sim-better candidate may
+        // have been vetoed by its measured run — don't claim optimality
+        println!(
+            "no candidate beat the seed after measured validation; nothing to promote \
+             (larger --budget or --frames may separate close candidates)"
+        );
     }
     Ok(())
 }

@@ -206,6 +206,28 @@ pub struct StageMetrics {
     pub wait: Latency,
 }
 
+/// Autotuner metrics bundle ([`crate::tune`] fills it, the TUNE report
+/// renders it).
+#[derive(Debug, Default)]
+pub struct TunerMetrics {
+    /// Candidate plans scored by the simulator.
+    pub candidates: Counter,
+    /// Candidates scored worse than (or equal to) the incumbent.
+    pub rejected: Counter,
+    /// Hill-climb moves accepted (incumbent replaced).
+    pub accepted: Counter,
+    /// Real measured validation runs executed.
+    pub measured_runs: Counter,
+    /// Per-task calibration samples recorded into the cost database.
+    /// (Promotions are counted by the serving plan cache itself —
+    /// [`crate::serve::PlanCache`]'s `promotions` counter.)
+    pub calibration_samples: Counter,
+    /// Time spent inside simulator evaluations.
+    pub sim_time: Latency,
+    /// Time spent inside measured runs (calibration + validation).
+    pub measure_time: Latency,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

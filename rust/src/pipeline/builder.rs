@@ -6,6 +6,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::config::Config;
+use crate::hlo::CostCalibration;
 use crate::hwdb::HwDatabase;
 use crate::image::Mat;
 use crate::ir::{Ir, Placement};
@@ -89,6 +90,35 @@ pub fn build(
     registry: &Registry,
     cfg: &Config,
 ) -> Result<BuiltPipeline> {
+    build_calibrated(ir, db, rt, registry, cfg, None)
+}
+
+/// [`build`] with a measured-cost correction layer: every task estimate is
+/// passed through `cal` (keyed by [`crate::hlo::task_key`]) before the
+/// partition policy balances stages, so a calibrated cost database moves
+/// the stage boundaries, not just the report numbers.
+pub fn build_calibrated(
+    ir: &Ir,
+    db: &HwDatabase,
+    rt: &Runtime,
+    registry: &Registry,
+    cfg: &Config,
+    cal: Option<&CostCalibration>,
+) -> Result<BuiltPipeline> {
+    let plan = plan_pipeline(ir, db, registry, cfg, cal)?;
+    instantiate(&plan, db.dir(), rt, registry)
+}
+
+/// The declarative half of [`build`]: placement + estimates + balancing,
+/// with no runtime, artifact loading or thread creation.  The tuner's
+/// search loop and `courier plan` both stop here.
+pub fn plan_pipeline(
+    ir: &Ir,
+    db: &HwDatabase,
+    registry: &Registry,
+    cfg: &Config,
+    cal: Option<&CostCalibration>,
+) -> Result<StagePlan> {
     // -- input shape per IR function (linear chains only) ------------------
     let input_shapes = chain_input_shapes(ir)?;
 
@@ -148,6 +178,13 @@ pub fn build(
         }
     }
 
+    // -- calibrate ----------------------------------------------------------
+    if let Some(cal) = cal {
+        for (task, shape) in tasks.iter_mut().zip(&input_shapes) {
+            task.est_ns = cal.apply_ns(&task.calibration_key(shape), task.est_ns);
+        }
+    }
+
     // -- balance ------------------------------------------------------------
     let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
     let groups = partition(&times, cfg.threads, cfg.policy);
@@ -161,23 +198,22 @@ pub fn build(
             serial: idx == 0 || idx == n_stages - 1,
         })
         .collect();
-    let plan = StagePlan {
+    Ok(StagePlan {
         program: ir.program.clone(),
         threads: cfg.threads,
         tokens: cfg.tokens,
         stages,
-    };
-
-    instantiate(&plan, db.dir(), rt, registry, cfg)
+    })
 }
 
-/// Instantiate a (possibly hand-edited) plan into a live pipeline.
+/// Instantiate a (possibly hand-edited or tuner-produced) plan into a
+/// live pipeline.  The plan's own `threads`/`tokens` fields configure the
+/// token runtime.
 pub fn instantiate(
     plan: &StagePlan,
     artifact_dir: &Path,
     rt: &Runtime,
     registry: &Registry,
-    cfg: &Config,
 ) -> Result<BuiltPipeline> {
     // load each artifact once ("place the module on the fabric")
     let mut loaded: HashMap<&str, Arc<Executable>> = HashMap::new();
@@ -220,13 +256,18 @@ pub fn instantiate(
         }));
     }
 
-    let pipeline = TokenPipeline::new(filters, cfg.threads, cfg.tokens)?;
+    // the plan is authoritative for its own shape knobs: a hand-edited or
+    // tuner-produced plan with different thread/token counts than the
+    // config must come up exactly as written
+    let pipeline = TokenPipeline::new(filters, plan.threads.max(1), plan.tokens.max(1))?;
     let control_program = super::codegen::render_control_program(plan);
     Ok(BuiltPipeline { plan: plan.clone(), pipeline, control_program })
 }
 
-/// For a linear chain, the input shape each IR function consumes.
-fn chain_input_shapes(ir: &Ir) -> Result<Vec<Vec<usize>>> {
+/// For a linear chain, the input shape each IR function consumes (public:
+/// the tuner derives calibration keys from the same shapes the builder
+/// placed with).
+pub fn chain_input_shapes(ir: &Ir) -> Result<Vec<Vec<usize>>> {
     let mut shapes = Vec::with_capacity(ir.funcs.len());
     for f in &ir.funcs {
         let first_step = *f.covers.first().ok_or_else(|| {

@@ -20,7 +20,9 @@ mod plan;
 mod sim;
 mod tbb;
 
-pub use builder::{build, instantiate, BuiltPipeline};
+pub use builder::{
+    build, build_calibrated, chain_input_shapes, instantiate, plan_pipeline, BuiltPipeline,
+};
 pub use codegen::render_control_program;
 pub use partition::{bottleneck, optimal, paper_policy, partition, Partition};
 pub use plan::{StagePlan, StageSpec, TaskKind, TaskSpec};

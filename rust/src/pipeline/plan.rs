@@ -34,6 +34,20 @@ pub struct TaskSpec {
     pub est_ns: u64,
 }
 
+impl TaskSpec {
+    /// Calibration key for this task over its input shape (placement is
+    /// part of the key — see [`crate::hlo::task_key`]).  The builder, the
+    /// calibrator and the tuner all derive keys through here so measured
+    /// corrections land back on the tasks they were recorded for.
+    pub fn calibration_key(&self, input_shape: &[usize]) -> String {
+        crate::hlo::task_key(
+            &self.symbol,
+            input_shape,
+            matches!(self.kind, TaskKind::Hw { .. }),
+        )
+    }
+}
+
 /// One pipeline stage: consecutive tasks executed by one filter.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StageSpec {

@@ -86,6 +86,16 @@ pub struct PipelineStats {
     pub frames: u64,
     /// Wall-clock of the whole run, ns.
     pub wall_ns: u64,
+    /// High-water mark of the token pool's reservation counter
+    /// (injection to emission).  This is the pool's own accounting, not
+    /// derived from spans, so an overshoot is visible even for frames
+    /// still queued ahead of their first stage.  Near stream end a
+    /// racing worker's reservation that finds the feed empty can be
+    /// counted into another worker's mark before being released, so the
+    /// value may exceed the true frame overlap by up to `threads - 1` —
+    /// it never exceeds the pool bound, which is the invariant it
+    /// exists to check.
+    pub peak_in_flight: usize,
 }
 
 impl PipelineStats {
@@ -141,6 +151,8 @@ struct Shared {
     busy: Vec<AtomicBool>,
     /// Tokens injected but not yet emitted.
     in_flight: AtomicUsize,
+    /// High-water mark of `in_flight`.
+    peak_in_flight: AtomicUsize,
     /// Completed outputs keyed by seq.
     outputs: Mutex<BTreeMap<u64, Mat>>,
     /// First error (poisons the run).
@@ -201,6 +213,7 @@ impl TokenPipeline {
             next_seq: (0..n_stages).map(|_| AtomicU64::new(0)).collect(),
             busy: (0..n_stages).map(|_| AtomicBool::new(false)).collect(),
             in_flight: AtomicUsize::new(0),
+            peak_in_flight: AtomicUsize::new(0),
             outputs: Mutex::new(BTreeMap::new()),
             error: Mutex::new(None),
             spans: Mutex::new(Vec::new()),
@@ -227,6 +240,7 @@ impl TokenPipeline {
             spans: std::mem::take(&mut *shared.spans.lock().expect("spans lock")),
             frames: outputs.len() as u64,
             wall_ns: epoch.elapsed().as_nanos() as u64,
+            peak_in_flight: shared.peak_in_flight.load(Ordering::Acquire),
         };
         Ok((outputs, stats))
     }
@@ -266,23 +280,36 @@ impl TokenPipeline {
                 continue;
             }
 
-            // 2) inject a new token if the pool allows.
-            if shared.in_flight.load(Ordering::Acquire) < self.tokens
-                && !shared.input_done.load(Ordering::Acquire)
-            {
-                let mut it = feed.lock().expect("feed lock");
-                if let Some(mat) = it.next() {
-                    let seq = next_inject.fetch_add(1, Ordering::AcqRel);
-                    shared.in_flight.fetch_add(1, Ordering::AcqRel);
-                    drop(it);
-                    shared.queues[0].lock().expect("queue lock").insert(seq, mat);
-                    if seq + 1 == total {
+            // 2) inject a new token if the pool allows.  The pool slot is
+            // reserved with a CAS *before* pulling from the feed: a plain
+            // load-check-increment would let several workers pass the
+            // check at `tokens - 1` simultaneously and overshoot the pool
+            // (the 10k-frame stress test flushes exactly that race out).
+            if !shared.input_done.load(Ordering::Acquire) {
+                if let Ok(prev) = shared.in_flight.fetch_update(
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                    |v| (v < self.tokens).then_some(v + 1),
+                ) {
+                    let mut it = feed.lock().expect("feed lock");
+                    if let Some(mat) = it.next() {
+                        // record the high-water mark only for a real
+                        // injection — a reservation released on feed
+                        // exhaustion never carried a frame
+                        shared.peak_in_flight.fetch_max(prev + 1, Ordering::AcqRel);
+                        let seq = next_inject.fetch_add(1, Ordering::AcqRel);
+                        drop(it);
+                        shared.queues[0].lock().expect("queue lock").insert(seq, mat);
+                        if seq + 1 == total {
+                            shared.input_done.store(true, Ordering::Release);
+                        }
+                        idle_spins = 0;
+                        continue;
+                    } else {
+                        // feed exhausted: release the reserved (unused) slot
+                        shared.in_flight.fetch_sub(1, Ordering::AcqRel);
                         shared.input_done.store(true, Ordering::Release);
                     }
-                    idle_spins = 0;
-                    continue;
-                } else {
-                    shared.input_done.store(true, Ordering::Release);
                 }
             }
 

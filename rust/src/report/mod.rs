@@ -157,6 +157,79 @@ pub fn render_serve(
     s
 }
 
+/// One candidate row of the TUNE report.
+#[derive(Debug, Clone)]
+pub struct TuneRow {
+    /// Candidate label, e.g. `policy=optimal tokens=8`.
+    pub desc: String,
+    /// Simulated makespan over the scoring stream, ms.
+    pub sim_makespan_ms: f64,
+    /// Simulated steady-state frame interval, ms.
+    pub sim_interval_ms: f64,
+    /// Token-pool depth of the candidate.
+    pub tokens: usize,
+    /// Recommended ingress queue depth.
+    pub queue_depth: usize,
+    /// `seed` / `winner` / `rejected` (+ `validated` when measured).
+    pub verdict: String,
+}
+
+/// The whole TUNE report (`courier tune` output).
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    /// Program tuned.
+    pub program: String,
+    /// Search budget (simulator evaluations allowed).
+    pub budget: usize,
+    /// Candidates actually evaluated.
+    pub evaluated: usize,
+    /// Tasks with a calibration record after this run.
+    pub calibration_entries: usize,
+    /// Measured/predicted factor of the calibration pass.
+    pub calibration_factor: f64,
+    /// Untuned plan's simulated makespan, ms.
+    pub seed_ms: f64,
+    /// Winning plan's simulated makespan, ms.
+    pub winner_ms: f64,
+    /// Candidate rows in evaluation order.
+    pub rows: Vec<TuneRow>,
+    /// Measured validation runs: (candidate desc, measured ms/frame).
+    pub measured: Vec<(String, f64)>,
+}
+
+/// Render the TUNE report.
+pub fn render_tune(r: &TuneReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "TUNE: {} — {} candidates evaluated (budget {})\n",
+        r.program, r.evaluated, r.budget
+    ));
+    s.push_str(&format!(
+        "calibration: {} tasks, measured/predicted x{:.2}\n",
+        r.calibration_entries, r.calibration_factor
+    ));
+    s.push_str(&format!(
+        "{:<34} {:>14} {:>14} {:>7} {:>6}  {}\n",
+        "Candidate", "makespan [ms]", "interval [ms]", "tokens", "queue", "verdict"
+    ));
+    for row in &r.rows {
+        s.push_str(&format!(
+            "{:<34} {:>14.2} {:>14.2} {:>7} {:>6}  {}\n",
+            row.desc, row.sim_makespan_ms, row.sim_interval_ms, row.tokens, row.queue_depth,
+            row.verdict
+        ));
+    }
+    for (desc, ms) in &r.measured {
+        s.push_str(&format!("measured {desc}: {ms:.2} ms/frame\n"));
+    }
+    let gain = if r.winner_ms > 0.0 { r.seed_ms / r.winner_ms } else { 1.0 };
+    s.push_str(&format!(
+        "winner: simulated makespan {:.2} ms vs seed {:.2} ms (x{:.2})\n",
+        r.winner_ms, r.seed_ms, gain
+    ));
+    s
+}
+
 /// Render a plan summary (stages, placements, estimates).
 pub fn render_plan(plan: &StagePlan) -> String {
     let mut s = String::new();
@@ -254,6 +327,53 @@ mod tests {
         assert!(t.contains("warm"));
         assert!(t.contains("50% hit rate"), "{t}");
         assert!(t.contains("42.0 frames/s"), "{t}");
+    }
+
+    #[test]
+    fn tune_report_layout() {
+        let r = TuneReport {
+            program: "cornerHarris_Demo".into(),
+            budget: 48,
+            evaluated: 12,
+            calibration_entries: 4,
+            calibration_factor: 1.7,
+            seed_ms: 120.0,
+            winner_ms: 80.0,
+            rows: vec![
+                TuneRow {
+                    desc: "seed policy=paper tokens=4 stages=3".into(),
+                    sim_makespan_ms: 120.0,
+                    sim_interval_ms: 3.7,
+                    tokens: 4,
+                    queue_depth: 4,
+                    verdict: "seed".into(),
+                },
+                TuneRow {
+                    desc: "policy=optimal tokens=8".into(),
+                    sim_makespan_ms: 80.0,
+                    sim_interval_ms: 2.5,
+                    tokens: 8,
+                    queue_depth: 8,
+                    verdict: "winner validated".into(),
+                },
+                TuneRow {
+                    desc: "queue_depth=32".into(),
+                    sim_makespan_ms: 80.0,
+                    sim_interval_ms: 2.5,
+                    tokens: 8,
+                    queue_depth: 32,
+                    verdict: "rejected".into(),
+                },
+            ],
+            measured: vec![("policy=optimal tokens=8".into(), 2.61)],
+        };
+        let t = render_tune(&r);
+        assert!(t.contains("TUNE: cornerHarris_Demo"));
+        assert!(t.contains("rejected"));
+        assert!(t.contains("winner validated"));
+        assert!(t.contains("x1.50"), "{t}");
+        assert!(t.contains("measured policy=optimal tokens=8: 2.61 ms/frame"));
+        assert!(t.contains("x1.70"), "{t}");
     }
 
     #[test]

@@ -17,7 +17,10 @@
 //! * bounded per-session **ingress queues** ([`queue::BoundedQueue`])
 //!   provide backpressure (`submit`) and load shedding (`try_submit`);
 //! * per-session and global **stats** ([`SessionStats`], [`ServerStats`])
-//!   report throughput, p50/p99 latency, queue depth and cache hit rate.
+//!   report throughput, p50/p99 latency, queue depth and cache hit rate;
+//! * a **re-tune path** ([`Server::retune`] → [`PlanCache::promote`])
+//!   upgrades a session key to an autotuned plan ([`crate::tune`])
+//!   without invalidating in-flight sessions.
 //!
 //! ```no_run
 //! use courier::config::Config;
@@ -71,6 +74,19 @@ pub struct Server {
     sessions: Mutex<Vec<Arc<Session>>>,
     next_id: AtomicU64,
     shut_down: AtomicBool,
+    /// Re-tune state: the plan last promoted per key (held weakly) and
+    /// its measured ms/frame, so a later, worse tune cannot downgrade a
+    /// promotion that is still being served.  The weak handle ties the
+    /// guard to the promoted plan's identity — once the cache no longer
+    /// holds that exact plan (invalidate, clear, a newer promotion), the
+    /// measurement stops vetoing anything.  The mutex also serializes
+    /// retunes: the persisted cost database is read-modify-written per
+    /// retune, and concurrent retunes would otherwise drop each other's
+    /// calibration samples (last-writer-wins).
+    #[allow(clippy::type_complexity)]
+    tuned_ms: Mutex<
+        std::collections::HashMap<PlanKey, (std::sync::Weak<crate::pipeline::BuiltPipeline>, f64)>,
+    >,
 }
 
 impl Server {
@@ -93,6 +109,7 @@ impl Server {
             sessions: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(0),
             shut_down: AtomicBool::new(false),
+            tuned_ms: Mutex::new(std::collections::HashMap::new()),
         })
     }
 
@@ -124,8 +141,23 @@ impl Server {
             let inputs = crate::app::synth_frames(&spec.program, eff_cfg.trace_frames.max(1));
             let trace = trace_program(&spec.program, &inputs)?;
             let ir = Ir::from_graph(&CallGraph::from_trace(&trace))?;
-            let built =
-                crate::pipeline::build(&ir, &self.db, &self.rt, &self.registry, &eff_cfg)?;
+            // cold builds consume the persisted calibrated cost database
+            // (when configured): measured corrections from earlier tune
+            // runs move the partition cuts of every plan built here
+            let cal = match &eff_cfg.tune.cost_db {
+                Some(p) => {
+                    Some(crate::tune::CalibratedCostDb::load_or_default(p)?.calibration())
+                }
+                None => None,
+            };
+            let built = crate::pipeline::build_calibrated(
+                &ir,
+                &self.db,
+                &self.rt,
+                &self.registry,
+                &eff_cfg,
+                cal.as_ref(),
+            )?;
             Ok(Arc::new(built))
         })?;
         let open_ns = t0.elapsed().as_nanos() as u64;
@@ -165,6 +197,64 @@ impl Server {
             self.stats.record_open(t0.elapsed());
         }
         Ok(session)
+    }
+
+    /// Re-tune one session key: run the autotuner over `spec`'s program
+    /// and, **when the tuner found an improvement**, promote the winning
+    /// plan into the plan cache.  Two guards prevent downgrades: a tune
+    /// that could not beat its seed promotes nothing, and a winner whose
+    /// measured run does not beat the measurement of the plan previously
+    /// promoted for this key leaves that promotion in place.
+    ///
+    /// In-flight sessions keep their current pipeline (their `Arc` is
+    /// untouched); every open *after* a promotion — the next cold open
+    /// for the key included — is served the tuned plan as a warm hit.
+    /// Returns the tune outcome so callers can render the TUNE report.
+    pub fn retune(&self, spec: &SessionSpec) -> Result<crate::tune::TuneOutcome> {
+        if self.shut_down.load(Ordering::Acquire) {
+            return Err(CourierError::Serve("server is shut down".into()));
+        }
+        let mut eff_cfg = self.cfg.clone();
+        if let Some(policy) = spec.policy {
+            eff_cfg.policy = policy;
+        }
+        let key = PlanKey::new(&spec.program, &eff_cfg);
+
+        // hold the tune lock across load -> tune -> save: the cost-db
+        // file is read-modify-written, and two concurrent retunes would
+        // otherwise each persist only their own samples (lost update).
+        // Cross-*process* writers (a parallel `courier tune`) are not
+        // covered — point them at separate manifests.
+        let mut tuned = self.tuned_ms.lock().expect("server tune lock");
+        let tuner = crate::tune::Tuner::new(&self.db, &self.rt, &self.registry, &eff_cfg);
+        let cost_db = match &eff_cfg.tune.cost_db {
+            Some(p) => crate::tune::CalibratedCostDb::load_or_default(p)?,
+            None => crate::tune::CalibratedCostDb::new(),
+        };
+        let outcome = tuner.tune_with_db(&spec.program, cost_db)?;
+        // the prior measurement vetoes only while the plan it measured is
+        // still the one the cache serves — after invalidate/clear (and
+        // any cold rebuild since), the guard is defunct and must not
+        // block legitimate promotions forever
+        let prior_ms = tuned.get(&key).and_then(|(promoted, ms)| {
+            match (promoted.upgrade(), self.cache.peek(&key)) {
+                (Some(p), Some(cur)) if Arc::ptr_eq(&p, &cur) => Some(*ms),
+                _ => None,
+            }
+        });
+        if prior_ms.is_none() {
+            tuned.remove(&key);
+        }
+        let beats_prior = prior_ms.is_none_or(|prior| outcome.winner_measured_ms < prior);
+        if outcome.improved && beats_prior {
+            // PlanCache::promotions is the authoritative promotion counter
+            self.cache.promote(&key, outcome.winner.clone());
+            tuned.insert(key, (Arc::downgrade(&outcome.winner), outcome.winner_measured_ms));
+        }
+        if let Some(p) = &eff_cfg.tune.cost_db {
+            outcome.cost_db.save(p)?;
+        }
+        Ok(outcome)
     }
 
     /// Close a session: refuse new frames, cancel its queued frames,

@@ -79,6 +79,8 @@ pub struct PlanCache {
     pub hits: Counter,
     /// Session-opens that had to build.
     pub misses: Counter,
+    /// Tuned plans promoted over a cached (or absent) entry.
+    pub promotions: Counter,
     /// Time spent inside cold builds.
     pub build_time: Latency,
 }
@@ -105,6 +107,17 @@ impl PlanCache {
     /// True when no build has completed yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// The cached plan for `key`, if any.  Blocking on the slot lock is
+    /// deliberate: a `try_lock` would spuriously report the key absent
+    /// while a concurrent warm open briefly holds the slot, and if a
+    /// cold build is in flight the caller gets the finished plan — warm
+    /// opens hold the lock for an `Arc` clone only.
+    pub fn peek(&self, key: &PlanKey) -> Option<Arc<BuiltPipeline>> {
+        let slot = self.entries.lock().expect("plan cache lock").get(key).cloned()?;
+        let guard = slot.lock().expect("plan cache slot");
+        guard.clone()
     }
 
     /// Hits / (hits + misses); 0 before any lookup.
@@ -143,6 +156,24 @@ impl PlanCache {
         self.build_time.record(t0.elapsed());
         *filled = Some(built.clone());
         Ok((built, false))
+    }
+
+    /// The re-tune path: install `pipeline` as the cached plan for `key`,
+    /// replacing whatever was there.
+    ///
+    /// Unlike [`Self::invalidate`], this never forces a rebuild and never
+    /// disturbs running tenants: sessions already holding the old
+    /// `Arc<BuiltPipeline>` keep serving on it untouched, while every
+    /// open after the promotion is served the tuned plan (as a cache
+    /// hit).  Single-flight still holds — a build in flight for the key
+    /// finishes into the slot, but the promotion that arrives later wins.
+    pub fn promote(&self, key: &PlanKey, pipeline: Arc<BuiltPipeline>) {
+        let slot: Slot = {
+            let mut map = self.entries.lock().expect("plan cache lock");
+            map.entry(key.clone()).or_default().clone()
+        };
+        *slot.lock().expect("plan cache slot") = Some(pipeline);
+        self.promotions.inc();
     }
 
     /// Drop one key (e.g. after a hardware-database reload).
@@ -247,6 +278,50 @@ mod tests {
         let (_, hit) = cache.get_or_build(&k, || Ok(tiny_pipeline())).unwrap();
         assert!(!hit, "retry is a miss, not a hit");
         assert_eq!(cache.misses.get(), 2);
+    }
+
+    #[test]
+    fn promote_replaces_without_a_rebuild() {
+        let cache = PlanCache::new();
+        let k = key("p");
+        let (old, _) = cache.get_or_build(&k, || Ok(tiny_pipeline())).unwrap();
+        let tuned = tiny_pipeline();
+        cache.promote(&k, tuned.clone());
+        assert_eq!(cache.promotions.get(), 1);
+        let (got, hit) = cache
+            .get_or_build(&k, || panic!("promotion must not trigger a rebuild"))
+            .unwrap();
+        assert!(hit, "post-promotion open is a warm hit");
+        assert!(Arc::ptr_eq(&got, &tuned), "open must see the tuned plan");
+        assert!(!Arc::ptr_eq(&got, &old), "old plan replaced in the cache");
+        // the old Arc stays alive for in-flight sessions that hold it
+        assert!(Arc::strong_count(&old) >= 1);
+    }
+
+    #[test]
+    fn peek_tracks_the_cached_plan_and_invalidation() {
+        let cache = PlanCache::new();
+        let k = key("p");
+        assert!(cache.peek(&k).is_none());
+        let (built, _) = cache.get_or_build(&k, || Ok(tiny_pipeline())).unwrap();
+        assert!(Arc::ptr_eq(&cache.peek(&k).unwrap(), &built));
+        let tuned = tiny_pipeline();
+        cache.promote(&k, tuned.clone());
+        assert!(Arc::ptr_eq(&cache.peek(&k).unwrap(), &tuned));
+        cache.invalidate(&k);
+        assert!(cache.peek(&k).is_none(), "invalidate must be visible to peek");
+    }
+
+    #[test]
+    fn promote_into_empty_cache_prefills_the_key() {
+        let cache = PlanCache::new();
+        let k = key("p");
+        cache.promote(&k, tiny_pipeline());
+        let (_, hit) = cache
+            .get_or_build(&k, || panic!("prefilled key must not build"))
+            .unwrap();
+        assert!(hit);
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

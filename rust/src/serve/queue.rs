@@ -6,8 +6,10 @@
 //! * `push_blocking` waits for space — **backpressure** (the producer is
 //!   slowed to the session's service rate instead of growing an unbounded
 //!   backlog);
-//! * `close` wakes all blocked producers and refuses new items, but
-//!   already-queued items keep draining so in-flight work finishes.
+//! * `close_and_cancel` refuses new items, wakes all blocked producers,
+//!   and hands everything still queued back to the closer — close and
+//!   cancellation are one atomic step, so which items were cancelled
+//!   never depends on consumer timing.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -116,18 +118,22 @@ impl<T> BoundedQueue<T> {
         item
     }
 
-    /// Refuse new items and wake all blocked producers.  Queued items keep
-    /// draining via `try_pop`; call `drain` to cancel them instead.
-    pub fn close(&self) {
+    /// Close **and** cancel in one lock acquisition: refuse new items,
+    /// wake all blocked producers, and return everything still queued.
+    ///
+    /// A separate close-then-drain pair would leave a window in which a
+    /// consumer can race the two calls and pop an item that the closer
+    /// intended to cancel — whether a given item is "cancelled" or
+    /// "completed" would then depend on worker timing.  (This type
+    /// deliberately offers no standalone `drain`: the one-lock variant is
+    /// the only cancellation primitive, so that race cannot be
+    /// reintroduced.)  The cancellation set is deterministic: exactly the
+    /// items queued at the instant of closing come back, and a consumer
+    /// either popped an item strictly before the close or finds the
+    /// queue empty after it.
+    pub fn close_and_cancel(&self) -> Vec<T> {
         let mut inner = self.inner.lock().expect("queue lock");
         inner.closed = true;
-        self.space.notify_all();
-    }
-
-    /// Remove and return everything still queued (used on session close to
-    /// cancel work that will never run).
-    pub fn drain(&self) -> Vec<T> {
-        let mut inner = self.inner.lock().expect("queue lock");
         let out = inner.items.drain(..).collect();
         self.space.notify_all();
         out
@@ -181,22 +187,12 @@ mod tests {
         let q2 = q.clone();
         let h = std::thread::spawn(move || q2.push_blocking(2));
         std::thread::sleep(Duration::from_millis(10));
-        q.close();
+        let cancelled = q.close_and_cancel();
         assert!(matches!(h.join().unwrap(), Err(PushError::Closed(2))));
         assert!(matches!(q.try_push(3), Err(PushError::Closed(3))));
-        // queued item still drains
-        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(cancelled, vec![1], "queued item comes back to the closer");
+        assert_eq!(q.try_pop(), None);
         assert!(q.is_closed());
-    }
-
-    #[test]
-    fn drain_cancels_queued_items() {
-        let q = BoundedQueue::new(4);
-        for i in 0..3 {
-            q.try_push(i).unwrap();
-        }
-        assert_eq!(q.drain(), vec![0, 1, 2]);
-        assert!(q.is_empty());
     }
 
     #[test]
@@ -205,5 +201,138 @@ mod tests {
         q.try_push("a".into()).unwrap();
         let err = q.try_push("lost?".to_string()).unwrap_err();
         assert_eq!(err.into_inner(), "lost?");
+    }
+
+    #[test]
+    fn close_and_cancel_is_atomic() {
+        let q = BoundedQueue::new(4);
+        for i in 0..3 {
+            q.try_push(i).unwrap();
+        }
+        let cancelled = q.close_and_cancel();
+        assert_eq!(cancelled, vec![0, 1, 2]);
+        assert!(q.is_closed());
+        assert!(q.is_empty());
+        assert!(matches!(q.try_push(9), Err(PushError::Closed(9))));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    /// Loom-style interleaving check for the close vs blocked-submit
+    /// race: every spawn/join permutation of {producer blocked in
+    /// `push_blocking`, closer, popper} must terminate, and a producer
+    /// that observes the close must get `Closed` — never hang, never
+    /// enqueue after close.  The schedule knob staggers thread starts so
+    /// every arrival order of the three operations is exercised; each
+    /// permutation is driven to completion by `join`, so a missed wakeup
+    /// would deadlock the test rather than pass silently.
+    #[test]
+    fn close_submit_pop_interleavings_all_terminate() {
+        // orderings: which of closer/popper runs first, and whether the
+        // producer blocks before or after them (6 permutations)
+        for schedule in 0..6u8 {
+            let q = Arc::new(BoundedQueue::new(1));
+            q.try_push(0).unwrap(); // full: push_blocking must park
+            let gate = Arc::new(std::sync::Barrier::new(3));
+
+            let producer = {
+                let q = q.clone();
+                let gate = gate.clone();
+                std::thread::spawn(move || {
+                    gate.wait();
+                    if schedule % 2 == 0 {
+                        std::thread::yield_now();
+                    }
+                    q.push_blocking(1)
+                })
+            };
+            let closer = {
+                let q = q.clone();
+                let gate = gate.clone();
+                std::thread::spawn(move || {
+                    gate.wait();
+                    for _ in 0..(schedule % 3) {
+                        std::thread::yield_now();
+                    }
+                    q.close_and_cancel()
+                })
+            };
+            let popper = {
+                let q = q.clone();
+                let gate = gate.clone();
+                std::thread::spawn(move || {
+                    gate.wait();
+                    for _ in 0..((schedule / 3) % 2) {
+                        std::thread::yield_now();
+                    }
+                    q.try_pop()
+                })
+            };
+
+            // every thread must terminate under every interleaving —
+            // a lost wakeup in close vs push_blocking would hang here
+            let pushed = producer.join().expect("producer thread");
+            let cancelled = closer.join().expect("closer thread");
+            let popped = popper.join().expect("popper thread");
+
+            // conservation: item 0 was either popped before the close or
+            // cancelled by it — never both, never lost
+            let zero_seen =
+                popped == Some(0) || cancelled.contains(&0);
+            assert!(zero_seen, "schedule {schedule}: item 0 lost");
+            assert!(
+                !(popped == Some(0) && cancelled.contains(&0)),
+                "schedule {schedule}: item 0 duplicated"
+            );
+            // item 1: either it squeezed in before the close (and was
+            // popped or cancelled or still queued), or the producer got
+            // a deterministic Closed
+            match pushed {
+                Ok(()) => {
+                    let in_queue = q.try_pop() == Some(1);
+                    assert!(
+                        in_queue || popped == Some(1) || cancelled.contains(&1),
+                        "schedule {schedule}: accepted item 1 lost"
+                    );
+                }
+                Err(PushError::Closed(v)) => assert_eq!(v, 1),
+                Err(PushError::Full(_)) => {
+                    panic!("schedule {schedule}: blocking push must never report Full")
+                }
+            }
+            // post-close: the queue refuses deterministically
+            assert!(matches!(q.try_push(7), Err(PushError::Closed(7))));
+        }
+    }
+
+    /// The original two-step close-then-drain left the cancellation set
+    /// timing-dependent; close_and_cancel pins it: a pop strictly after
+    /// the close never observes an item the closer cancelled.
+    #[test]
+    fn pop_after_close_and_cancel_sees_nothing() {
+        for _ in 0..64 {
+            let q = Arc::new(BoundedQueue::new(8));
+            for i in 0..5 {
+                q.try_push(i).unwrap();
+            }
+            let popper = {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut popped = Vec::new();
+                    while let Some(v) = q.try_pop() {
+                        popped.push(v);
+                    }
+                    popped
+                })
+            };
+            let cancelled = q.close_and_cancel();
+            let mut popped = popper.join().expect("popper thread");
+            // keep draining after the close from this thread too
+            while let Some(v) = q.try_pop() {
+                popped.push(v);
+            }
+            let mut all: Vec<i32> = popped.iter().chain(cancelled.iter()).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![0, 1, 2, 3, 4], "items lost or duplicated");
+        }
     }
 }

@@ -249,10 +249,15 @@ impl Session {
     /// Close: refuse new frames and cancel everything still queued (each
     /// cancelled ticket's `wait` returns an error).  Frames already on a
     /// worker finish normally.
+    ///
+    /// Close and cancel happen under one queue lock acquisition
+    /// ([`BoundedQueue::close_and_cancel`]): the set of cancelled frames
+    /// is exactly what was queued at the close — a worker can no longer
+    /// race a separate close/drain pair and complete a frame the close
+    /// already decided to cancel.
     pub(crate) fn close(&self) {
         self.closed.store(true, Ordering::Release);
-        self.queue.close();
-        let orphans = self.queue.drain();
+        let orphans = self.queue.close_and_cancel();
         if !orphans.is_empty() {
             let mut done = self.done.lock().expect("session done lock");
             for job in orphans {

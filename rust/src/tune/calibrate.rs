@@ -1,0 +1,216 @@
+//! Calibration: replay real frames through a built pipeline, compare the
+//! measured per-stage latencies against the simulator's prediction, and
+//! record per-task corrections into the [`CalibratedCostDb`].
+//!
+//! Stage-level measurements are attributed to tasks proportionally to
+//! their static estimates (the runtime's [`PipelineStats`] spans are
+//! per-stage, not per-task: a stage executes its tasks back to back in
+//! one filter body).
+
+use crate::image::Mat;
+use crate::ir::Ir;
+use crate::metrics::TunerMetrics;
+use crate::pipeline::{chain_input_shapes, simulate, BuiltPipeline, PipelineStats};
+use crate::{CourierError, Result};
+
+use super::cost_db::CalibratedCostDb;
+
+/// One stage's predicted-vs-measured comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageCalibration {
+    /// Stage index.
+    pub stage: usize,
+    /// Static estimate (sum of task estimates), ns/frame.
+    pub est_ns: u64,
+    /// Simulator's per-frame busy time, ns/frame.
+    pub sim_ns: u64,
+    /// Measured per-frame busy time, ns/frame.
+    pub measured_ns: u64,
+}
+
+/// The deliverable of one calibration pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationRun {
+    /// Program the pipeline was built for.
+    pub program: String,
+    /// Frames replayed.
+    pub frames: u64,
+    /// Measured wall clock of the whole replay, ns.
+    pub wall_ns: u64,
+    /// Per-stage comparison rows.
+    pub stages: Vec<StageCalibration>,
+}
+
+impl CalibrationRun {
+    /// Measured per-frame wall clock, ms.
+    pub fn wall_ms_per_frame(&self) -> f64 {
+        if self.frames == 0 {
+            return 0.0;
+        }
+        self.wall_ns as f64 / self.frames as f64 / 1e6
+    }
+
+    /// Ratio of total measured to total predicted stage time (how far the
+    /// whole static model is off for this program).
+    pub fn overall_factor(&self) -> f64 {
+        let est: u64 = self.stages.iter().map(|s| s.est_ns).sum();
+        let measured: u64 = self.stages.iter().map(|s| s.measured_ns).sum();
+        if est == 0 {
+            return 1.0;
+        }
+        measured as f64 / est as f64
+    }
+}
+
+/// Replay `frames` through `built`, fold per-task measurements into `db`,
+/// and return the per-stage comparison.
+///
+/// `ir` must be the IR the pipeline was built from — calibration keys are
+/// derived from the same per-task input shapes the builder placed with.
+/// `static_ns` must be the **uncalibrated** per-task estimates in flat
+/// task order (the plan's own estimates may already carry calibration;
+/// recorded factors anchor to the static model — see
+/// [`CalibratedCostDb::record`]).
+pub fn calibrate(
+    built: &BuiltPipeline,
+    ir: &Ir,
+    frames: Vec<Mat>,
+    static_ns: &[u64],
+    db: &mut CalibratedCostDb,
+    metrics: &TunerMetrics,
+) -> Result<CalibrationRun> {
+    if frames.is_empty() {
+        return Err(CourierError::Other("calibration needs at least one frame".into()));
+    }
+    let n_frames = frames.len() as u64;
+    let shapes = chain_input_shapes(ir)?;
+    let flat_tasks: Vec<_> = built.plan.stages.iter().flat_map(|s| &s.tasks).collect();
+    if flat_tasks.len() != shapes.len() || flat_tasks.len() != static_ns.len() {
+        return Err(CourierError::Other(format!(
+            "calibration: plan has {} tasks, IR has {} functions, {} static estimates",
+            flat_tasks.len(),
+            shapes.len(),
+            static_ns.len()
+        )));
+    }
+
+    let t0 = std::time::Instant::now();
+    let (_, stats): (_, PipelineStats) = built.run(frames)?;
+    metrics.measure_time.record(t0.elapsed());
+    metrics.measured_runs.inc();
+
+    let sim = metrics.sim_time.time(|| {
+        simulate(&built.plan, n_frames, built.plan.threads.max(1), built.plan.tokens.max(1))
+    });
+
+    let mut rows = Vec::with_capacity(built.plan.stages.len());
+    let mut task_idx = 0usize;
+    for (si, stage) in built.plan.stages.iter().enumerate() {
+        // the plan's own estimates may be calibrated (a seeded tune
+        // builds the pipeline through the calibration layer) — report
+        // rows compare measurement against the *static* model, so the
+        // overall factor keeps meaning measured/static
+        let est_ns = stage.est_ns();
+        let static_est_ns: u64 =
+            static_ns[task_idx..task_idx + stage.tasks.len()].iter().sum();
+        let measured_ns = stats.stage_busy_ns(si) / n_frames;
+        let sim_ns = sim.stage_busy_ns[si] / n_frames;
+        rows.push(StageCalibration { stage: si, est_ns: static_est_ns, sim_ns, measured_ns });
+
+        // attribute the stage measurement to its tasks proportionally
+        for task in &stage.tasks {
+            let task_measured = if est_ns == 0 {
+                measured_ns / stage.tasks.len().max(1) as u64
+            } else {
+                (measured_ns as u128 * task.est_ns as u128 / est_ns as u128) as u64
+            };
+            let key = task.calibration_key(&shapes[task_idx]);
+            db.record(&key, &task.symbol, static_ns[task_idx], task_measured.max(1));
+            metrics.calibration_samples.inc();
+            task_idx += 1;
+        }
+    }
+
+    Ok(CalibrationRun {
+        program: built.plan.program.clone(),
+        frames: n_frames,
+        wall_ns: stats.wall_ns,
+        stages: rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::corner_harris_demo;
+    use crate::config::Config;
+    use crate::hwdb::HwDatabase;
+    use crate::image::synth;
+    use crate::runtime::Runtime;
+    use crate::swlib::Registry;
+    use crate::trace::{trace_program, CallGraph};
+    use crate::util::testing::TempDir;
+
+    fn hermetic_build(h: usize, w: usize) -> (BuiltPipeline, Ir, TempDir) {
+        let tmp = crate::util::testing::empty_hwdb_dir("calibrate").unwrap();
+        let db = HwDatabase::load(tmp.path()).unwrap();
+        let prog = corner_harris_demo(h, w);
+        let trace = trace_program(&prog, &[vec![synth::noise_rgb(h, w, 0)]]).unwrap();
+        let ir = Ir::from_graph(&CallGraph::from_trace(&trace)).unwrap();
+        let cfg = Config { artifacts_dir: tmp.path().to_path_buf(), ..Default::default() };
+        let built = crate::pipeline::build(
+            &ir,
+            &db,
+            &Runtime::cpu().unwrap(),
+            &Registry::standard(),
+            &cfg,
+        )
+        .unwrap();
+        (built, ir, tmp)
+    }
+
+    fn static_ests(built: &BuiltPipeline) -> Vec<u64> {
+        // the hermetic build is uncalibrated, so its plan estimates ARE
+        // the static estimates
+        built.plan.stages.iter().flat_map(|s| &s.tasks).map(|t| t.est_ns).collect()
+    }
+
+    #[test]
+    fn calibration_records_every_task() {
+        let (built, ir, _tmp) = hermetic_build(24, 32);
+        let mut db = CalibratedCostDb::new();
+        let metrics = TunerMetrics::default();
+        let frames: Vec<Mat> = (0..4).map(|s| synth::noise_rgb(24, 32, s)).collect();
+        let run = calibrate(&built, &ir, frames, &static_ests(&built), &mut db, &metrics).unwrap();
+
+        assert_eq!(run.frames, 4);
+        assert_eq!(run.stages.len(), built.plan.stages.len());
+        assert_eq!(db.len(), ir.funcs.len(), "one record per task");
+        assert_eq!(metrics.calibration_samples.get(), ir.funcs.len() as u64);
+        assert_eq!(metrics.measured_runs.get(), 1);
+        assert!(run.overall_factor() > 0.0);
+        // keys embed the per-task input shape and placement (CPU here)
+        assert!(db.get("cv::cvtColor@24x32x3#sw").is_some());
+        assert!(db.get("cv::cornerHarris@24x32#sw").is_some());
+    }
+
+    #[test]
+    fn calibration_rejects_empty_stream() {
+        let (built, ir, _tmp) = hermetic_build(16, 16);
+        let mut db = CalibratedCostDb::new();
+        let ests = static_ests(&built);
+        assert!(
+            calibrate(&built, &ir, vec![], &ests, &mut db, &TunerMetrics::default()).is_err()
+        );
+    }
+
+    #[test]
+    fn calibration_rejects_mismatched_static_estimates() {
+        let (built, ir, _tmp) = hermetic_build(16, 16);
+        let mut db = CalibratedCostDb::new();
+        let frames: Vec<Mat> = vec![synth::noise_rgb(16, 16, 0)];
+        assert!(
+            calibrate(&built, &ir, frames, &[1, 2], &mut db, &TunerMetrics::default()).is_err()
+        );
+    }
+}

@@ -1,0 +1,279 @@
+//! The calibrated cost database: measured per-task latencies, persisted
+//! as an `hwdb`-style JSON manifest.
+//!
+//! The hardware database records what the synthesis model *predicts*;
+//! this database records what replaying real frames *measured*, keyed by
+//! [`crate::hlo::task_key`] (`symbol@HxW[xC]#hw|sw` — placement-scoped,
+//! so CPU measurements never land on fabric estimates).  The ratio
+//! between the two is the calibration factor fed back into the builder
+//! through [`crate::hlo::CostCalibration`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::hlo::CostCalibration;
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// Schema version written by [`CalibratedCostDb::to_json`].
+pub const COST_DB_VERSION: u32 = 1;
+
+/// One task's calibration record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostRecord {
+    /// Library symbol (redundant with the key prefix; kept for reports).
+    pub symbol: String,
+    /// The static estimate at the most recent recording, ns.
+    pub predicted_ns: u64,
+    /// Running mean of measured per-frame latency, ns.
+    pub measured_ns: u64,
+    /// Measurements folded into the mean.
+    pub samples: u64,
+}
+
+impl CostRecord {
+    /// `measured / predicted` — how far reality diverged from the model.
+    pub fn factor(&self) -> f64 {
+        if self.predicted_ns == 0 {
+            return 1.0;
+        }
+        self.measured_ns as f64 / self.predicted_ns as f64
+    }
+}
+
+/// The persistent calibration store (BTreeMap: serialization and report
+/// ordering stay deterministic).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibratedCostDb {
+    records: BTreeMap<String, CostRecord>,
+}
+
+impl CalibratedCostDb {
+    /// Empty database.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one measurement into the record for `key` (running mean over
+    /// `samples`).  `predicted_ns` must be the **static** (uncalibrated)
+    /// estimate — the factor is `measured / static`, which is what the
+    /// builder multiplies static estimates by; feeding an
+    /// already-calibrated value in would make the factor self-referential
+    /// and oscillate the applied correction.
+    ///
+    /// A *substantially* changed static prediction (e.g. the hardware
+    /// database was re-synthesized with different cycle estimates)
+    /// restarts the record: the old measurements calibrated a baseline
+    /// that no longer exists, and keeping their mean would skew the new
+    /// estimate by the old model's error forever.  The drift band
+    /// (±1/3) matters because software predictions are *traced means*
+    /// that jitter a few percent between runs — exact-equality would
+    /// restart every SW record on every tune and samples would never
+    /// accumulate.
+    pub fn record(&mut self, key: &str, symbol: &str, predicted_ns: u64, measured_ns: u64) {
+        match self.records.get_mut(key) {
+            Some(r)
+                if {
+                    let drift =
+                        predicted_ns.max(1) as f64 / r.predicted_ns.max(1) as f64;
+                    (0.75..=4.0 / 3.0).contains(&drift)
+                } =>
+            {
+                let total = r.measured_ns as u128 * r.samples as u128 + measured_ns as u128;
+                r.samples += 1;
+                r.measured_ns = (total / r.samples as u128) as u64;
+            }
+            Some(r) => {
+                *r = CostRecord {
+                    symbol: symbol.to_string(),
+                    predicted_ns,
+                    measured_ns,
+                    samples: 1,
+                };
+            }
+            None => {
+                self.records.insert(
+                    key.to_string(),
+                    CostRecord {
+                        symbol: symbol.to_string(),
+                        predicted_ns,
+                        measured_ns,
+                        samples: 1,
+                    },
+                );
+            }
+        }
+    }
+
+    /// The record for one key.
+    pub fn get(&self, key: &str) -> Option<&CostRecord> {
+        self.records.get(key)
+    }
+
+    /// All records in key order.
+    pub fn records(&self) -> impl Iterator<Item = (&str, &CostRecord)> {
+        self.records.iter().map(|(k, r)| (k.as_str(), r))
+    }
+
+    /// Number of calibrated tasks.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when nothing has been measured.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Lower into the correction layer the pipeline builder consumes.
+    pub fn calibration(&self) -> CostCalibration {
+        let mut cal = CostCalibration::new();
+        for (key, r) in &self.records {
+            cal.set_factor(key, r.factor());
+        }
+        cal
+    }
+
+    /// Serialize as an `hwdb`-style manifest.
+    pub fn to_json(&self) -> String {
+        let records = self
+            .records
+            .iter()
+            .map(|(key, r)| {
+                Json::obj(vec![
+                    ("key", Json::Str(key.clone())),
+                    ("symbol", Json::Str(r.symbol.clone())),
+                    ("predicted_ns", Json::Num(r.predicted_ns as f64)),
+                    ("measured_ns", Json::Num(r.measured_ns as f64)),
+                    ("samples", Json::Num(r.samples as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(COST_DB_VERSION as f64)),
+            ("generated_by", Json::Str("courier tune".into())),
+            ("records", Json::Arr(records)),
+        ])
+        .to_string_pretty()
+    }
+
+    /// Parse a manifest produced by [`Self::to_json`].
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let version = v.req("version")?.as_u64()? as u32;
+        if version != COST_DB_VERSION {
+            return Err(crate::CourierError::Json(format!(
+                "unsupported cost-db version {version}"
+            )));
+        }
+        let mut db = Self::new();
+        for r in v.req("records")?.as_arr()? {
+            let key = r.req("key")?.as_str()?.to_string();
+            db.records.insert(
+                key,
+                CostRecord {
+                    symbol: r.req("symbol")?.as_str()?.to_string(),
+                    predicted_ns: r.req("predicted_ns")?.as_u64()?,
+                    measured_ns: r.req("measured_ns")?.as_u64()?,
+                    samples: r.req("samples")?.as_u64()?.max(1),
+                },
+            );
+        }
+        Ok(db)
+    }
+
+    /// Write the manifest to disk atomically (temp file + rename): a
+    /// concurrent reader — e.g. a cold `Server::open` loading the same
+    /// manifest while a retune saves — sees either the old or the new
+    /// file, never a torn write.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load a manifest from disk; a missing file is an empty database
+    /// (first tune run on a fresh checkout).
+    pub fn load_or_default(path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Ok(Self::new());
+        }
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::TempDir;
+
+    #[test]
+    fn record_keeps_a_running_mean() {
+        let mut db = CalibratedCostDb::new();
+        db.record("cv::x@8x8", "cv::x", 100, 200);
+        db.record("cv::x@8x8", "cv::x", 100, 400);
+        let r = db.get("cv::x@8x8").unwrap();
+        assert_eq!(r.samples, 2);
+        assert_eq!(r.measured_ns, 300);
+        assert!((r.factor() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn changed_static_prediction_restarts_the_record() {
+        let mut db = CalibratedCostDb::new();
+        db.record("cv::x@8x8", "cv::x", 100, 400);
+        db.record("cv::x@8x8", "cv::x", 100, 400); // factor 4.0, 2 samples
+        // hwdb re-synthesized: the static estimate doubled
+        db.record("cv::x@8x8", "cv::x", 200, 400);
+        let r = db.get("cv::x@8x8").unwrap();
+        assert_eq!(r.samples, 1, "stale measurements must not survive a model change");
+        assert_eq!(r.predicted_ns, 200);
+        assert!((r.factor() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traced_mean_jitter_does_not_restart_the_record() {
+        // SW predictions are traced means that wobble a few percent
+        // between runs — that must accumulate, not restart
+        let mut db = CalibratedCostDb::new();
+        db.record("cv::x@8x8", "cv::x", 100_000, 400_000);
+        db.record("cv::x@8x8", "cv::x", 103_217, 400_000);
+        db.record("cv::x@8x8", "cv::x", 96_900, 400_000);
+        let r = db.get("cv::x@8x8").unwrap();
+        assert_eq!(r.samples, 3, "in-band jitter must accumulate samples");
+        assert_eq!(r.predicted_ns, 100_000, "the anchor prediction stays put");
+    }
+
+    #[test]
+    fn calibration_carries_factors() {
+        let mut db = CalibratedCostDb::new();
+        db.record("cv::x@8x8", "cv::x", 100, 250);
+        let cal = db.calibration();
+        assert_eq!(cal.apply_ns("cv::x@8x8", 1000), 2500);
+        assert_eq!(cal.apply_ns("cv::other@8x8", 1000), 1000);
+    }
+
+    #[test]
+    fn json_roundtrip_and_persistence() {
+        let mut db = CalibratedCostDb::new();
+        db.record("cv::a@4x4", "cv::a", 10, 20);
+        db.record("cv::b@4x4x3", "cv::b", 30, 15);
+        let back = CalibratedCostDb::parse(&db.to_json()).unwrap();
+        assert_eq!(back, db);
+
+        let tmp = TempDir::new("costdb").unwrap();
+        let p = tmp.path().join("costs.json");
+        db.save(&p).unwrap();
+        assert_eq!(CalibratedCostDb::load_or_default(&p).unwrap(), db);
+        // missing file -> empty db, not an error
+        let fresh = CalibratedCostDb::load_or_default(&tmp.path().join("nope.json")).unwrap();
+        assert!(fresh.is_empty());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let text = r#"{"version": 99, "records": []}"#;
+        assert!(CalibratedCostDb::parse(text).is_err());
+    }
+}

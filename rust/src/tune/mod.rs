@@ -1,0 +1,394 @@
+//! `courier::tune` — the measurement-driven pipeline autotuner.
+//!
+//! The paper's Pipeline Generator balances stages from *predefined*
+//! module costs; this subsystem closes the loop in three steps:
+//!
+//! 1. **calibrate** ([`calibrate::calibrate`]) — replay real frames
+//!    through the untuned pipeline, compare measured per-stage latencies
+//!    against the static model and the discrete-event simulator, and
+//!    record per-task corrections into a persistent
+//!    [`CalibratedCostDb`] (an `hwdb`-style JSON manifest) that feeds
+//!    back into the builder through [`crate::hlo::CostCalibration`];
+//! 2. **search** ([`search::search`]) — a budget-bounded hill-climb over
+//!    partition boundaries, token counts, queue depths and
+//!    software-stage fusion, scored by [`crate::pipeline::simulate`]
+//!    over the calibrated task times, with the top-K candidates
+//!    validated by real measured runs;
+//! 3. **promote** — the winning plan is instantiated and can be handed
+//!    to [`crate::serve::PlanCache::promote`], upgrading a serving key
+//!    to the tuned plan without invalidating in-flight sessions.
+//!
+//! `courier tune --program <spec> --budget <n>` is the CLI entry point;
+//! `docs/tuning.md` walks through the flow.
+
+mod calibrate;
+mod cost_db;
+mod search;
+
+pub use calibrate::{calibrate, CalibrationRun, StageCalibration};
+pub use cost_db::{CalibratedCostDb, CostRecord, COST_DB_VERSION};
+pub use search::{search, Candidate, SearchOutcome};
+
+use std::sync::Arc;
+
+use crate::app::{synth_frames, Program};
+use crate::config::Config;
+use crate::hwdb::HwDatabase;
+use crate::image::Mat;
+use crate::ir::Ir;
+use crate::metrics::TunerMetrics;
+use crate::pipeline::{instantiate, BuiltPipeline};
+use crate::report::{TuneReport, TuneRow};
+use crate::runtime::Runtime;
+use crate::swlib::Registry;
+use crate::trace::{trace_program, CallGraph};
+use crate::{CourierError, Result};
+
+/// The tuner: borrows the same backend pieces the serving subsystem owns.
+pub struct Tuner<'a> {
+    db: &'a HwDatabase,
+    rt: &'a Runtime,
+    registry: &'a Registry,
+    cfg: &'a Config,
+    /// Counters and timings for this tuner's lifetime.
+    pub metrics: TunerMetrics,
+}
+
+/// Everything one `tune` run produced.
+pub struct TuneOutcome {
+    /// The rendered-ready report data.
+    pub report: TuneReport,
+    /// The instantiated winning pipeline (ready to serve or promote).
+    pub winner: Arc<BuiltPipeline>,
+    /// The winner's measured wall clock, ms/frame (the seed's
+    /// calibration measurement when the seed won or the gate demoted).
+    pub winner_measured_ms: f64,
+    /// Recommended per-session ingress queue depth for the winner.
+    pub queue_depth: usize,
+    /// The cost database after this run's calibration samples.
+    pub cost_db: CalibratedCostDb,
+    /// The calibration pass over the untuned pipeline.
+    pub calibration: CalibrationRun,
+    /// True when the winner strictly beat the seed's score.
+    pub improved: bool,
+}
+
+impl<'a> Tuner<'a> {
+    /// A tuner over the given backend.
+    pub fn new(
+        db: &'a HwDatabase,
+        rt: &'a Runtime,
+        registry: &'a Registry,
+        cfg: &'a Config,
+    ) -> Self {
+        Self { db, rt, registry, cfg, metrics: TunerMetrics::default() }
+    }
+
+    /// Calibrate → search → validate for `program`, starting from a fresh
+    /// cost database.
+    pub fn tune(&self, program: &Program) -> Result<TuneOutcome> {
+        self.tune_with_db(program, CalibratedCostDb::new())
+    }
+
+    /// [`Self::tune`] seeded with an existing cost database (persisted
+    /// calibrations from earlier runs keep sharpening the model).
+    pub fn tune_with_db(
+        &self,
+        program: &Program,
+        mut cost_db: CalibratedCostDb,
+    ) -> Result<TuneOutcome> {
+        program
+            .validate()
+            .map_err(|e| CourierError::Other(format!("program {}: {e}", program.name)))?;
+
+        // -- trace -> IR -> seed build (exactly what serve would build
+        //    today: cold opens consume the same cost database, so the
+        //    baseline the tuner must beat is the *calibrated* build) -----
+        let inputs = synth_frames(program, self.cfg.trace_frames.max(1));
+        let trace = trace_program(program, &inputs)?;
+        let ir = Ir::from_graph(&CallGraph::from_trace(&trace))?;
+        let pre_cal = (!cost_db.is_empty()).then(|| cost_db.calibration());
+        let built_seed = Arc::new(crate::pipeline::build_calibrated(
+            &ir,
+            self.db,
+            self.rt,
+            self.registry,
+            self.cfg,
+            pre_cal.as_ref(),
+        )?);
+
+        // static estimates in flat task order (cut-independent): the cost
+        // database anchors factors to these, never to calibrated values
+        let static_ns: Vec<u64> =
+            crate::pipeline::plan_pipeline(&ir, self.db, self.registry, self.cfg, None)?
+                .stages
+                .iter()
+                .flat_map(|s| &s.tasks)
+                .map(|t| t.est_ns)
+                .collect();
+
+        // -- calibrate on real frames --------------------------------------
+        // Warm-up first: the process's very first pipeline run pays
+        // one-time costs (page faults, thread spin-up, cold caches) that
+        // would inflate the seed's measurement relative to the candidates
+        // measured later — and thereby bias the promotion gate.
+        let _ = built_seed.run(self.measure_stream(program))?;
+        let calibration = calibrate(
+            &built_seed,
+            &ir,
+            self.measure_stream(program),
+            &static_ns,
+            &mut cost_db,
+            &self.metrics,
+        )?;
+
+        // -- re-price the seed plan: same cuts, freshest calibrated costs.
+        // plan_pipeline applies the calibration to *static* estimates
+        // (matching CalibratedCostDb::record, which pins the
+        // first-recorded prediction), and the flattened task list is
+        // cut-independent — so its calibrated estimates transplant onto
+        // the seed's own cuts.  (Deliberately NOT the replanned cuts:
+        // the point here is the seed *structure* priced at calibrated
+        // costs.)
+        let cal = cost_db.calibration();
+        let tasks: Vec<_> =
+            crate::pipeline::plan_pipeline(&ir, self.db, self.registry, self.cfg, Some(&cal))?
+                .stages
+                .into_iter()
+                .flat_map(|s| s.tasks)
+                .collect();
+        let mut seed_plan = built_seed.plan.clone();
+        let mut task_idx = 0usize;
+        for stage in &mut seed_plan.stages {
+            for task in &mut stage.tasks {
+                task.est_ns = tasks[task_idx].est_ns;
+                task_idx += 1;
+            }
+        }
+
+        // -- search ---------------------------------------------------------
+        let outcome = search(&seed_plan, &tasks, self.cfg, &self.metrics);
+
+        // -- validate the top-K by measured runs ----------------------------
+        // Validation runs are timed directly and NOT folded into the cost
+        // database: candidate tasks carry already-calibrated estimates, so
+        // recording against them would overwrite `predicted_ns` with the
+        // calibrated value and collapse every stored factor toward 1.0 —
+        // the persisted corrections would silently evaporate.
+        // Queue-depth ladder entries (penalty > 0) reuse the incumbent's
+        // plan byte-for-byte — measuring one would burn a top-K slot on a
+        // run that teaches nothing, so only penalty-free candidates rank.
+        // (Those are all distinct plans already: the search's seen-set
+        // scores each (cuts, tokens) configuration at most once.)
+        let mut ranked: Vec<usize> = (0..outcome.candidates.len())
+            .filter(|&i| outcome.candidates[i].penalty_ns == 0)
+            .collect();
+        ranked.sort_by_key(|&i| outcome.candidates[i].score());
+        ranked.truncate(self.cfg.tune.top_k.max(1));
+        let seed_measured_ms = calibration.wall_ms_per_frame();
+        let mut measured: Vec<(String, f64)> = Vec::new();
+        let mut validated: Vec<(usize, f64, Option<Arc<BuiltPipeline>>)> = Vec::new();
+        for &i in &ranked {
+            let cand = &outcome.candidates[i];
+            if i == outcome.seed {
+                // the calibration pass already measured the seed structure
+                measured.push((cand.desc.clone(), seed_measured_ms));
+                validated.push((i, seed_measured_ms, None));
+                continue;
+            }
+            let built =
+                Arc::new(instantiate(&cand.plan, self.db.dir(), self.rt, self.registry)?);
+            let ms = self.measured_run(&built, program)?;
+            measured.push((cand.desc.clone(), ms));
+            validated.push((i, ms, Some(built)));
+        }
+
+        // -- pick the winner: sim ranks, measurement vetoes ------------------
+        // Walk the validated candidates in score order and take the first
+        // whose score beats the seed's AND whose measured run is not
+        // clearly slower than the seed's (10% band absorbs scheduler
+        // noise).  A vetoed sim-winner therefore falls back to the next
+        // *validated* runner-up, not straight to the seed.  Score order is
+        // makespan-first, so any selected winner's simulated makespan is
+        // <= the seed's by construction; with no eligible candidate the
+        // seed itself wins.
+        let mut winner_idx = outcome.seed;
+        let mut winner_built: Option<Arc<BuiltPipeline>> = None;
+        let mut winner_sel_ms = seed_measured_ms;
+        for (i, ms, built) in &validated {
+            if *i == outcome.seed {
+                continue;
+            }
+            let c = &outcome.candidates[*i];
+            if c.score() < outcome.seed().score() && *ms <= seed_measured_ms * 1.10 {
+                winner_idx = *i;
+                winner_built = built.clone();
+                winner_sel_ms = *ms;
+                break;
+            }
+        }
+
+        // -- assemble -------------------------------------------------------
+        let winner_cand = &outcome.candidates[winner_idx];
+        let winner = match winner_built {
+            Some(b) => b,
+            // the seed won: reuse the pipeline that is already
+            // instantiated and calibration-validated — its plan differs
+            // from winner_cand.plan only in the est_ns display values,
+            // not in cuts or tokens
+            None if winner_idx == outcome.seed => built_seed.clone(),
+            // the selection loop only picks the seed (above) or a
+            // validated candidate, and every validated non-seed entry
+            // carries its instantiated pipeline
+            None => unreachable!("non-seed winner must come from a validated candidate"),
+        };
+        let improved = winner_idx != outcome.seed;
+
+        let rows = outcome
+            .candidates
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let mut verdict = if i == winner_idx && i == outcome.seed {
+                    "seed winner".to_string()
+                } else if i == winner_idx {
+                    "winner".to_string()
+                } else if i == outcome.seed {
+                    "seed".to_string()
+                } else {
+                    "rejected".to_string()
+                };
+                if validated.iter().any(|(j, _, _)| *j == i) {
+                    verdict.push_str(" validated");
+                }
+                TuneRow {
+                    desc: c.desc.clone(),
+                    sim_makespan_ms: c.sim.makespan_ns as f64 / 1e6,
+                    sim_interval_ms: c.sim.frame_interval_ns as f64 / 1e6,
+                    tokens: c.plan.tokens,
+                    queue_depth: c.queue_depth,
+                    verdict,
+                }
+            })
+            .collect();
+
+        let report = TuneReport {
+            program: program.name.clone(),
+            budget: self.cfg.tune.budget,
+            // simulator evaluations only: queue-depth ladder rows reuse
+            // the incumbent's sim and are budget-exempt, so this number
+            // never exceeds the stated budget
+            evaluated: outcome.candidates.iter().filter(|c| c.penalty_ns == 0).count(),
+            calibration_entries: cost_db.len(),
+            calibration_factor: calibration.overall_factor(),
+            seed_ms: outcome.seed().sim.makespan_ns as f64 / 1e6,
+            winner_ms: winner_cand.sim.makespan_ns as f64 / 1e6,
+            rows,
+            measured,
+        };
+        let queue_depth = winner_cand.queue_depth;
+        let winner_measured_ms = winner_sel_ms;
+
+        Ok(TuneOutcome {
+            report,
+            winner,
+            winner_measured_ms,
+            queue_depth,
+            cost_db,
+            calibration,
+            improved,
+        })
+    }
+
+    /// A measurement stream for `program` (single-input linear chains).
+    fn measure_stream(&self, program: &Program) -> Vec<Mat> {
+        synth_frames(program, self.cfg.tune.measure_frames.max(1))
+            .into_iter()
+            .map(|mut v| v.remove(0))
+            .collect()
+    }
+
+    /// Time one real run of `built`, ms/frame (validation only — nothing
+    /// is recorded into the cost database; see the comment at the
+    /// validation loop).
+    fn measured_run(&self, built: &BuiltPipeline, program: &Program) -> Result<f64> {
+        let frames = self.measure_stream(program);
+        let n = frames.len().max(1) as u64;
+        let t0 = std::time::Instant::now();
+        let (_, stats) = built.run(frames)?;
+        self.metrics.measure_time.record(t0.elapsed());
+        self.metrics.measured_runs.inc();
+        Ok(stats.wall_ns as f64 / n as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::corner_harris_demo;
+    use crate::util::testing::TempDir;
+
+    fn hermetic() -> (TempDir, Config) {
+        let tmp = crate::util::testing::empty_hwdb_dir("tune").unwrap();
+        let mut cfg = Config { artifacts_dir: tmp.path().to_path_buf(), ..Default::default() };
+        cfg.tune.budget = 24;
+        cfg.tune.sim_frames = 16;
+        cfg.tune.measure_frames = 2;
+        (tmp, cfg)
+    }
+
+    #[test]
+    fn tune_produces_report_and_never_regresses() {
+        let (_tmp, cfg) = hermetic();
+        let db = HwDatabase::load(&cfg.artifacts_dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let registry = Registry::standard();
+        let tuner = Tuner::new(&db, &rt, &registry, &cfg);
+        let out = tuner.tune(&corner_harris_demo(24, 32)).unwrap();
+
+        assert!(out.report.evaluated > 1, "search must explore candidates");
+        assert!(out.report.evaluated <= cfg.tune.budget, "reported evals must respect budget");
+        assert!(
+            out.report.winner_ms <= out.report.seed_ms,
+            "winner {} ms worse than seed {} ms",
+            out.report.winner_ms,
+            out.report.seed_ms
+        );
+        assert!(
+            out.report.rows.iter().any(|r| r.verdict.starts_with("rejected")),
+            "at least one candidate must be rejected"
+        );
+        assert!(!out.cost_db.is_empty(), "calibration must record tasks");
+        assert!(!out.report.measured.is_empty(), "top-K must be measured");
+        // metrics count every candidate (including budget-exempt ladder
+        // rows); the report counts simulator evaluations only
+        assert!(tuner.metrics.candidates.get() >= out.report.evaluated as u64);
+
+        // the winner serves frames correctly
+        let frame = crate::image::synth::noise_rgb(24, 32, 3);
+        let got = out.winner.process_one(frame.clone()).unwrap();
+        let interp = crate::app::Interpreter::new(
+            corner_harris_demo(24, 32),
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        let want = interp.run(&[frame]).unwrap().remove(0);
+        assert!(got.quantized_close(&want, 1.0, 1e-3), "tuned pipeline diverges");
+    }
+
+    #[test]
+    fn tune_with_existing_db_accumulates_samples() {
+        let (_tmp, cfg) = hermetic();
+        let db = HwDatabase::load(&cfg.artifacts_dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let registry = Registry::standard();
+        let tuner = Tuner::new(&db, &rt, &registry, &cfg);
+        let prog = corner_harris_demo(16, 16);
+        let first = tuner.tune(&prog).unwrap();
+        let second = tuner.tune_with_db(&prog, first.cost_db.clone()).unwrap();
+        let key = "cv::cornerHarris@16x16#sw";
+        assert!(
+            second.cost_db.get(key).unwrap().samples > first.cost_db.get(key).unwrap().samples,
+            "samples must accumulate across runs"
+        );
+    }
+}

@@ -30,6 +30,19 @@ pub fn vec_u64(rng: &mut Rng, max_len: usize, max_val: u64) -> Vec<u64> {
     (0..len).map(|_| 1 + rng.next_u64() % (max_val - 1)).collect()
 }
 
+/// A fresh [`TempDir`] holding an empty-but-valid hardware-database
+/// manifest: every lookup misses, so pipelines place everything on the
+/// CPU and no AOT artifact is required — the standard hermetic-test
+/// setup (shared here so a manifest schema change edits one place).
+pub fn empty_hwdb_dir(tag: &str) -> std::io::Result<TempDir> {
+    let dir = TempDir::new(tag)?;
+    std::fs::write(
+        dir.path().join("manifest.json"),
+        r#"{"version": 1, "fabric_clock_mhz": 157.0, "modules": []}"#,
+    )?;
+    Ok(dir)
+}
+
 /// A self-deleting temporary directory (tempfile analogue).
 pub struct TempDir {
     path: std::path::PathBuf,

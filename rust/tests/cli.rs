@@ -3,7 +3,7 @@
 use std::path::PathBuf;
 use std::process::Command;
 
-use courier::util::testing::TempDir;
+use courier::util::testing::{empty_hwdb_dir, TempDir};
 
 fn courier_bin() -> PathBuf {
     // target/<profile>/courier next to the test executable
@@ -37,7 +37,7 @@ fn run_code(args: &[&str]) -> (String, String, Option<i32>) {
 fn help_lists_commands() {
     let (stdout, _, ok) = run(&["help"]);
     assert!(ok);
-    for cmd in ["trace", "graph", "plan", "build", "run", "deploy", "synth"] {
+    for cmd in ["trace", "graph", "plan", "build", "run", "deploy", "serve", "tune", "synth"] {
         assert!(stdout.contains(cmd), "help missing {cmd}");
     }
 }
@@ -153,12 +153,7 @@ fn serve_reports_warm_second_session() {
     // two sessions over one spec: the second must be a plan-cache hit.
     // An empty-but-valid module database keeps this hermetic (pure CPU
     // placement, no `make artifacts` needed).
-    let dir = TempDir::new("cli-serve").unwrap();
-    std::fs::write(
-        dir.path().join("manifest.json"),
-        r#"{"version": 1, "fabric_clock_mhz": 157.0, "modules": []}"#,
-    )
-    .unwrap();
+    let dir = empty_hwdb_dir("cli-serve").unwrap();
     let (stdout, stderr, ok) = run(&[
         "--artifacts",
         dir.path().to_str().unwrap(),
@@ -175,6 +170,38 @@ fn serve_reports_warm_second_session() {
     assert!(stdout.contains("warm (plan cache hit)"), "{stdout}");
     assert!(stdout.contains("SERVE: per-session report"), "{stdout}");
     assert!(stdout.contains("50% hit rate"), "{stdout}");
+}
+
+#[test]
+fn tune_emits_report_with_rejections_and_persists_cost_db() {
+    // the corner-Harris example spec through the autotuner: the TUNE
+    // report must show at least one rejected candidate and a winner, and
+    // the calibrated cost database must land on disk.  Hermetic: empty
+    // module database -> CPU-only placement.
+    let dir = empty_hwdb_dir("cli-tune").unwrap();
+    let cost_db = dir.path().join("costs.json");
+    let (stdout, stderr, ok) = run(&[
+        "--artifacts",
+        dir.path().to_str().unwrap(),
+        "tune",
+        "--program",
+        "corner_harris:48x64",
+        "--budget",
+        "16",
+        "--frames",
+        "2",
+        "--cost-db",
+        cost_db.to_str().unwrap(),
+    ]);
+    assert!(ok, "tune failed: {stderr}");
+    assert!(stdout.contains("TUNE: cornerHarris_Demo"), "{stdout}");
+    assert!(stdout.contains("rejected"), "report must show a rejected candidate: {stdout}");
+    assert!(stdout.contains("winner"), "{stdout}");
+    assert!(stdout.contains("calibration:"), "{stdout}");
+    assert!(stdout.contains("recommended: tokens ="), "{stdout}");
+    assert!(cost_db.exists(), "cost db must be persisted");
+    let text = std::fs::read_to_string(&cost_db).unwrap();
+    assert!(text.contains("cv::cornerHarris@48x64#sw"), "{text}");
 }
 
 #[test]

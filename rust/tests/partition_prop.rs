@@ -1,0 +1,261 @@
+//! Property suite for the planner/partitioner: for randomized linear call
+//! graphs, every produced plan
+//!
+//! 1. is a contiguous, order-preserving partition covering every IR
+//!    function exactly once,
+//! 2. places hardware tasks only on modules that exist (and are enabled)
+//!    in the hardware-database manifest with a matching shape variant,
+//! 3. keeps the paper's filter modes: serial head/tail, parallel middles.
+//!
+//! Randomness comes from the crate's tiny seeded PRNG (`util::rng::Rng`)
+//! through the `forall` helper — no new dependencies, reproducible seeds.
+
+use std::path::PathBuf;
+
+use courier::config::{Config, PartitionPolicy};
+use courier::hwdb::HwDatabase;
+use courier::ir::{Ir, IrFunc, Placement};
+use courier::pipeline::{plan_pipeline, TaskKind};
+use courier::swlib::Registry;
+use courier::trace::DataNode;
+use courier::util::rng::Rng;
+use courier::util::testing::{forall, TempDir};
+
+/// Symbols the random chains draw from.  All exist in the standard CPU
+/// registry; the manifest below gives a hardware module to some of them
+/// (one enabled per shape, one disabled) so random chains mix placements.
+const POOL: &[&str] = &[
+    "cv::cvtColor",
+    "cv::Sobel",
+    "cv::GaussianBlur",
+    "cv::dilate",
+    "cv::erode",
+    "cv::normalize",
+    "cv::medianBlur",
+];
+
+/// Shapes the random chains draw from (the manifest only covers some).
+const SHAPES: &[&[usize]] = &[&[16, 16], &[32, 32], &[16, 16, 3], &[8, 24]];
+
+fn manifest_dir() -> (TempDir, PathBuf) {
+    let tmp = TempDir::new("partition-prop").unwrap();
+    let manifest = r#"{
+        "version": 1,
+        "fabric_clock_mhz": 157.0,
+        "modules": [
+            {
+                "name": "hls_sobel",
+                "library_symbol": "cv::Sobel",
+                "enabled": true,
+                "kind": "image1",
+                "variants": [{
+                    "size": [16, 16],
+                    "inputs": [{"shape": [16, 16], "dtype": "f32"}],
+                    "outputs": [{"shape": [16, 16], "dtype": "f32"}],
+                    "artifact": "hls_sobel__16x16.hlo.txt",
+                    "est_flops": 4096.0,
+                    "est_bytes": 2048.0,
+                    "est_latency_cycles": 512
+                }]
+            },
+            {
+                "name": "hls_dilate",
+                "library_symbol": "cv::dilate",
+                "enabled": true,
+                "kind": "image1",
+                "variants": [{
+                    "size": [32, 32],
+                    "inputs": [{"shape": [32, 32], "dtype": "f32"}],
+                    "outputs": [{"shape": [32, 32], "dtype": "f32"}],
+                    "artifact": "hls_dilate__32x32.hlo.txt",
+                    "est_flops": 16384.0,
+                    "est_bytes": 8192.0,
+                    "est_latency_cycles": 2048
+                }]
+            },
+            {
+                "name": "hls_normalize",
+                "library_symbol": "cv::normalize",
+                "enabled": false,
+                "kind": "image1",
+                "variants": [{
+                    "size": [16, 16],
+                    "inputs": [{"shape": [16, 16], "dtype": "f32"}],
+                    "outputs": [{"shape": [16, 16], "dtype": "f32"}],
+                    "artifact": "hls_normalize__16x16.hlo.txt",
+                    "est_flops": 1024.0,
+                    "est_bytes": 2048.0,
+                    "est_latency_cycles": 256
+                }]
+            }
+        ]
+    }"#;
+    std::fs::write(tmp.path().join("manifest.json"), manifest).unwrap();
+    let dir = tmp.path().to_path_buf();
+    (tmp, dir)
+}
+
+/// A randomized linear call graph: chain length, symbols, per-function
+/// input shapes and traced times all drawn from the seeded PRNG.
+fn random_ir(rng: &mut Rng) -> Ir {
+    let n = 1 + rng.below(8);
+    let funcs: Vec<IrFunc> = (0..n)
+        .map(|i| IrFunc {
+            step: i,
+            symbol: POOL[rng.below(POOL.len())].to_string(),
+            covers: vec![i],
+            mean_ns: rng.range_u64(1, 5_000_000),
+            placement: Placement::Auto,
+        })
+        .collect();
+    let data: Vec<DataNode> = (0..n)
+        .map(|i| {
+            let shape = SHAPES[rng.below(SHAPES.len())].to_vec();
+            let bytes = shape.iter().product::<usize>() * 4;
+            DataNode {
+                id: i,
+                shape,
+                bytes,
+                producer: if i == 0 { None } else { Some(i - 1) },
+                consumers: vec![i],
+            }
+        })
+        .collect();
+    Ir { program: "prop".into(), frames: 1, funcs, data }
+}
+
+fn random_cfg(rng: &mut Rng, artifacts_dir: PathBuf) -> Config {
+    let policy = [
+        PartitionPolicy::Paper,
+        PartitionPolicy::Optimal,
+        PartitionPolicy::PerFunction,
+        PartitionPolicy::Single,
+    ][rng.below(4)];
+    Config {
+        artifacts_dir,
+        threads: 1 + rng.below(6),
+        tokens: 1 + rng.below(8),
+        policy,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn plans_partition_contiguously_and_cover_every_function_once() {
+    let (_tmp, dir) = manifest_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let registry = Registry::standard();
+    forall(
+        200,
+        |rng| (random_ir(rng), random_cfg(rng, dir.clone())),
+        |(ir, cfg)| {
+            let plan = plan_pipeline(ir, &db, &registry, cfg, None).expect("plannable chain");
+            // contiguous cover: concatenated task covers == 0..n exactly
+            let covered: Vec<usize> = plan
+                .stages
+                .iter()
+                .flat_map(|s| &s.tasks)
+                .flat_map(|t| t.covers.iter().copied())
+                .collect();
+            let expect: Vec<usize> = (0..ir.funcs.len()).collect();
+            if covered != expect {
+                return false;
+            }
+            // no empty stages, indices sequential
+            plan.stages
+                .iter()
+                .enumerate()
+                .all(|(i, s)| !s.tasks.is_empty() && s.index == i)
+        },
+    );
+}
+
+#[test]
+fn hardware_stages_only_use_enabled_manifest_modules() {
+    let (_tmp, dir) = manifest_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let registry = Registry::standard();
+    forall(
+        200,
+        |rng| (random_ir(rng), random_cfg(rng, dir.clone())),
+        |(ir, cfg)| {
+            let plan = plan_pipeline(ir, &db, &registry, cfg, None).expect("plannable chain");
+            let shapes: Vec<Vec<usize>> =
+                ir.data.iter().map(|d| d.shape.clone()).collect();
+            let mut task_idx = 0usize;
+            for stage in &plan.stages {
+                for task in &stage.tasks {
+                    if let TaskKind::Hw { module, .. } = &task.kind {
+                        // the placed module must exist, be enabled, match
+                        // the symbol, and carry a variant for this shape
+                        let entry = match db.module_by_name(module) {
+                            Some(e) => e,
+                            None => return false,
+                        };
+                        if !entry.enabled || entry.library_symbol != task.symbol {
+                            return false;
+                        }
+                        let shape = &shapes[task_idx];
+                        if db.lookup(&task.symbol, &[shape.as_slice()]).is_none() {
+                            return false;
+                        }
+                    }
+                    task_idx += 1;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn serial_head_tail_parallel_middles_and_hw_placement_happens() {
+    let (_tmp, dir) = manifest_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let registry = Registry::standard();
+    let mut saw_hw = false;
+    let mut saw_multi_stage = false;
+    forall(
+        200,
+        |rng| (random_ir(rng), random_cfg(rng, dir.clone())),
+        |(ir, cfg)| {
+            let plan = plan_pipeline(ir, &db, &registry, cfg, None).expect("plannable chain");
+            let n = plan.stages.len();
+            saw_hw |= plan.placement_counts().0 > 0;
+            saw_multi_stage |= n > 2;
+            if !plan.stages[0].serial || !plan.stages[n - 1].serial {
+                return false;
+            }
+            n < 2 || plan.stages[1..n - 1].iter().all(|s| !s.serial)
+        },
+    );
+    // the generators must actually exercise both interesting regimes
+    assert!(saw_hw, "random chains never hit the hardware database");
+    assert!(saw_multi_stage, "random chains never produced a multi-stage plan");
+}
+
+#[test]
+fn calibration_moves_boundaries_but_preserves_invariants() {
+    // a calibration layer that inflates one symbol must never break the
+    // partition invariants, only move the cuts
+    let (_tmp, dir) = manifest_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let registry = Registry::standard();
+    forall(
+        100,
+        |rng| (random_ir(rng), random_cfg(rng, dir.clone()), rng.below(POOL.len())),
+        |(ir, cfg, hot)| {
+            let mut cal = courier::hlo::CostCalibration::new();
+            for d in &ir.data {
+                for hw in [false, true] {
+                    cal.set_factor(&courier::hlo::task_key(POOL[*hot], &d.shape, hw), 8.0);
+                }
+            }
+            let plan =
+                plan_pipeline(ir, &db, &registry, cfg, Some(&cal)).expect("plannable chain");
+            let covered: usize =
+                plan.stages.iter().map(|s| s.tasks.len()).sum();
+            covered == ir.funcs.len() && plan.stages.iter().all(|s| !s.tasks.is_empty())
+        },
+    );
+}

@@ -13,15 +13,11 @@ use courier::app::{corner_harris_demo, Interpreter, RegistryDispatch};
 use courier::config::Config;
 use courier::image::{synth, Mat};
 use courier::serve::{Server, SessionSpec};
-use courier::util::testing::TempDir;
+use courier::util::testing::{empty_hwdb_dir, TempDir};
 
-/// A valid artifact dir whose database has no modules (CPU-only serving).
+/// A valid artifact dir whose database has no modules (CPU-only serving)
+/// — written by the shared `empty_hwdb_dir` helper at TempDir creation.
 fn empty_db(tmp: &TempDir) -> PathBuf {
-    std::fs::write(
-        tmp.path().join("manifest.json"),
-        r#"{"version": 1, "fabric_clock_mhz": 157.0, "modules": []}"#,
-    )
-    .unwrap();
     tmp.path().to_path_buf()
 }
 
@@ -34,7 +30,7 @@ fn serve_config(artifacts_dir: PathBuf) -> Config {
 
 #[test]
 fn second_open_with_identical_key_is_served_from_the_plan_cache() {
-    let tmp = TempDir::new("serve-cache").unwrap();
+    let tmp = empty_hwdb_dir("serve-cache").unwrap();
     let server = Server::new(serve_config(empty_db(&tmp))).unwrap();
 
     let cold = server.open(SessionSpec::new(corner_harris_demo(64, 80))).unwrap();
@@ -76,7 +72,7 @@ fn second_open_with_identical_key_is_served_from_the_plan_cache() {
 
 #[test]
 fn saturating_one_session_does_not_stall_another() {
-    let tmp = TempDir::new("serve-isolation").unwrap();
+    let tmp = empty_hwdb_dir("serve-isolation").unwrap();
     let mut cfg = serve_config(empty_db(&tmp));
     cfg.serve.queue_depth = 2; // tiny ingress bound: saturation is easy
     let server = Server::new(cfg).unwrap();
@@ -147,7 +143,7 @@ fn saturating_one_session_does_not_stall_another() {
 
 #[test]
 fn admission_control_caps_open_sessions() {
-    let tmp = TempDir::new("serve-admission").unwrap();
+    let tmp = empty_hwdb_dir("serve-admission").unwrap();
     let mut cfg = serve_config(empty_db(&tmp));
     cfg.serve.max_sessions = 1;
     let server = Server::new(cfg).unwrap();
@@ -176,7 +172,7 @@ fn admission_control_caps_open_sessions() {
 
 #[test]
 fn close_cancels_queued_frames_but_not_finished_ones() {
-    let tmp = TempDir::new("serve-close").unwrap();
+    let tmp = empty_hwdb_dir("serve-close").unwrap();
     let mut cfg = serve_config(empty_db(&tmp));
     cfg.serve.workers = 1;
     cfg.serve.queue_depth = 16;

@@ -1,0 +1,152 @@
+//! Stress: the token-pipeline runtime under adversarial per-stage jitter.
+//!
+//! Each middle stage sleeps a pseudo-random (seeded, per-token,
+//! per-stage) duration, maximizing reordering pressure on the serial
+//! head/tail and contention on the token pool.  Asserted invariants:
+//!
+//! 1. **ordering** — outputs come back in input order and every serial
+//!    stage processes tokens in strictly increasing sequence without
+//!    overlapping itself;
+//! 2. **no deadlock** — the run completes (a hang fails the test by
+//!    never returning);
+//! 3. **bounded in-flight tokens** — at no instant do more than `tokens`
+//!    frames have overlapping lifetimes (this is the invariant the
+//!    historical injection race violated: the pool-slot check and the
+//!    increment were not atomic, so racing workers could overshoot the
+//!    token pool by up to `threads - 1`).
+//!
+//! All randomness is seeded (`util::rng::Rng`); no wall-clock assertions.
+
+use courier::image::Mat;
+use courier::pipeline::{FilterMode, FnFilter, PipelineStats, StageFilter, TokenPipeline};
+use courier::util::rng::Rng;
+
+/// Deterministic per-(token, stage) jitter in [0, max_us).
+fn jitter_us(seed: u64, token: u64, stage: u64, max_us: u64) -> u64 {
+    Rng::new(seed ^ (token << 8) ^ stage).next_u64() % max_us
+}
+
+fn jitter_filter(mode: FilterMode, stage: u64, seed: u64, max_us: u64, delta: f32) -> Box<dyn StageFilter> {
+    Box::new(FnFilter {
+        mode,
+        label: format!("jitter{stage}"),
+        f: move |mut m: Mat| {
+            let token = m.at2(0, 0).floor() as u64;
+            let us = jitter_us(seed, token, stage, max_us);
+            if us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(us));
+            }
+            for v in m.as_mut_slice() {
+                *v += delta;
+            }
+            Ok(m)
+        },
+    })
+}
+
+/// Token lifetimes from spans: [first span start, last span end] per
+/// token, swept for the maximum simultaneous overlap.
+fn peak_tokens_in_flight(stats: &PipelineStats) -> usize {
+    use std::collections::HashMap;
+    let mut lifetime: HashMap<u64, (u64, u64)> = HashMap::new();
+    for s in &stats.spans {
+        let e = lifetime.entry(s.token).or_insert((s.start_ns, s.end_ns));
+        e.0 = e.0.min(s.start_ns);
+        e.1 = e.1.max(s.end_ns);
+    }
+    let mut edges: Vec<(u64, i64)> = Vec::with_capacity(lifetime.len() * 2);
+    for (_, (a, b)) in lifetime {
+        edges.push((a, 1));
+        edges.push((b, -1));
+    }
+    edges.sort_unstable();
+    let (mut cur, mut peak) = (0i64, 0i64);
+    for (_, d) in edges {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    peak.max(0) as usize
+}
+
+fn run_stress(frames: usize, threads: usize, tokens: usize, seed: u64, max_us: u64) {
+    let pipe = TokenPipeline::new(
+        vec![
+            jitter_filter(FilterMode::SerialInOrder, 0, seed, max_us / 4, 0.125),
+            jitter_filter(FilterMode::Parallel, 1, seed, max_us, 0.125),
+            jitter_filter(FilterMode::Parallel, 2, seed.rotate_left(17), max_us, 0.125),
+            jitter_filter(FilterMode::SerialInOrder, 3, seed, max_us / 4, 0.125),
+        ],
+        threads,
+        tokens,
+    )
+    .unwrap();
+    let inputs: Vec<Mat> = (0..frames).map(|i| Mat::full(&[1, 1], i as f32)).collect();
+
+    // 2) completing at all is the no-deadlock assertion
+    let (out, stats) = pipe.run(inputs).unwrap();
+
+    // 1a) outputs in input order with the right values
+    assert_eq!(out.len(), frames);
+    for (i, m) in out.iter().enumerate() {
+        assert_eq!(m.at2(0, 0), i as f32 + 0.5, "frame {i} out of order or corrupted");
+    }
+    assert_eq!(stats.frames, frames as u64);
+    assert_eq!(stats.spans.len(), frames * 4, "every token must traverse every stage once");
+
+    // 1b) serial stages: strictly increasing token order, no self-overlap
+    for stage in [0usize, 3] {
+        let mut spans: Vec<_> = stats.spans.iter().filter(|s| s.stage == stage).collect();
+        spans.sort_by_key(|s| s.start_ns);
+        assert_eq!(spans.len(), frames);
+        for w in spans.windows(2) {
+            assert!(
+                w[0].token < w[1].token,
+                "serial stage {stage} ran token {} before {}",
+                w[1].token,
+                w[0].token
+            );
+            assert!(
+                w[0].end_ns <= w[1].start_ns,
+                "serial stage {stage} overlapped itself: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    // 3) bounded in-flight tokens — primary: the pool's own high-water
+    // mark (covers frames still queued ahead of their first stage, where
+    // the historical overshoot race parked them); secondary: the span
+    // sweep, which must agree as a lower bound
+    assert!(
+        stats.peak_in_flight <= tokens,
+        "token pool violated: {} frames in flight with a pool of {tokens}",
+        stats.peak_in_flight
+    );
+    let span_peak = peak_tokens_in_flight(&stats);
+    assert!(
+        span_peak <= stats.peak_in_flight,
+        "span-derived concurrency {span_peak} exceeds the pool's own accounting {}",
+        stats.peak_in_flight
+    );
+}
+
+#[test]
+fn stress_2k_frames_with_adversarial_jitter() {
+    run_stress(2_000, 4, 3, 0xC0FFEE, 24);
+}
+
+#[test]
+fn stress_tight_pool_and_single_thread_degenerate() {
+    // pool of 1 serializes everything; 1 thread must still complete
+    run_stress(500, 4, 1, 7, 16);
+    run_stress(500, 1, 4, 11, 8);
+}
+
+/// The full 10k-frame sweep (release-mode slow job: `cargo test -q -- --ignored`).
+#[test]
+#[ignore = "slow: 10k frames; run in the CI slow-test job"]
+fn stress_10k_frames_with_adversarial_jitter() {
+    run_stress(10_000, 4, 3, 0xDEADBEEF, 32);
+    run_stress(10_000, 8, 5, 0xFEEDFACE, 16);
+}
