@@ -111,6 +111,7 @@ fn main() {
                 program: "sweep".into(),
                 threads,
                 tokens: (threads * 2).max(2),
+                edges: Vec::new(),
                 stages,
             };
             let r = simulate(&plan, 64, threads, (threads * 2).max(2));

@@ -83,6 +83,42 @@ pub fn edge_demo(h: usize, w: usize) -> Program {
     .expect("builtin program is valid")
 }
 
+/// The Harris-Stephens flow in its natural DAG shape (the paper's own
+/// Fig. 4 is not a chain): gray fans out into the two Sobel gradients,
+/// which fan back in at the corner response — the canonical non-linear
+/// workload for the DAG-aware pipeline path.
+pub fn harris_dag_demo(h: usize, w: usize) -> Program {
+    parse_program(&format!(
+        "program harrisDag_Demo\n\
+         input frame {h}x{w}x3\n\
+         call gray = cv::cvtColor(frame)\n\
+         call ix = cv::Sobel(gray)\n\
+         call iy = cv::SobelY(gray)\n\
+         call resp = cv::harrisResponse(ix, iy)\n\
+         call norm = cv::normalize(resp)\n\
+         call out = cv::convertScaleAbs(norm)\n\
+         output out\n"
+    ))
+    .expect("builtin program is valid")
+}
+
+/// A pure fan-out flow whose *linearized* wiring still type-checks (every
+/// function is unary) but computes the wrong thing: `edge` consumes
+/// `gray`, not `smooth` — the regression fixture for the silent
+/// mis-wiring the DAG-aware builder eliminates.
+pub fn fanout_demo(h: usize, w: usize) -> Program {
+    parse_program(&format!(
+        "program fanout_demo\n\
+         input frame {h}x{w}x3\n\
+         call gray = cv::cvtColor(frame)\n\
+         call smooth = cv::GaussianBlur(gray)\n\
+         call edge = cv::Sobel(gray)\n\
+         call out = cv::convertScaleAbs(edge)\n\
+         output out\n"
+    ))
+    .expect("builtin program is valid")
+}
+
 /// A BLAS chain (matmul -> matmul) for the library-breadth tests.
 pub fn gemm_chain_demo(n: usize) -> Program {
     parse_program(&format!(

@@ -63,6 +63,13 @@ pub enum CourierError {
     #[error("hlo parse error: {0}")]
     HloParse(String),
 
+    /// Dataflow-graph legality violation: a backwards edge across a stage
+    /// cut, a fused region tapped from outside, an unsupported multi-input
+    /// flow — anything that would otherwise mis-wire a non-linear call
+    /// graph into a silently wrong pipeline.
+    #[error("dataflow error: {0}")]
+    Dag(String),
+
     /// Anything else.
     #[error("{0}")]
     Other(String),

@@ -34,12 +34,12 @@ pub fn to_dot(ir: &Ir) -> String {
             scale,
         ));
         if let Some(p) = d.producer {
-            if let Some(f) = ir.funcs.get(p) {
+            if let Some(f) = ir.func_covering(p) {
                 s.push_str(&format!("  f{} -> d{};\n", f.step, d.id));
             }
         }
         for c in &d.consumers {
-            if let Some(f) = ir.funcs.get(*c) {
+            if let Some(f) = ir.func_covering(*c) {
                 s.push_str(&format!("  d{} -> f{};\n", d.id, f.step));
             }
         }

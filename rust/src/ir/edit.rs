@@ -101,6 +101,12 @@ impl Ir {
 
     /// Remove the node covering `step` from the flow (the user decided the
     /// call is dead in the deployed pipeline, e.g. a debug visualization).
+    ///
+    /// The dataflow is rewired around the removed call: edges into it
+    /// disappear, and buffers it produced are re-pointed to its own
+    /// (primary) source, so remaining consumers keep a legal,
+    /// still-topological producer — the DAG-aware builder validates
+    /// every edge endpoint against the remaining functions.
     pub fn drop_func(&mut self, step: usize) -> Result<(), EditError> {
         if self.funcs.len() <= 1 {
             return Err(EditError::WouldEmpty);
@@ -110,7 +116,29 @@ impl Ir {
             .iter()
             .position(|f| f.covers.contains(&step))
             .ok_or(EditError::NoSuchStep(step))?;
-        self.funcs.remove(pos);
+        let node = self.funcs.remove(pos);
+        let covers = node.covers;
+        // the (primary) source that fed the dropped call; None == the
+        // external input
+        let primary = self
+            .data
+            .iter()
+            .find(|d| {
+                d.consumers.iter().any(|c| covers.contains(c))
+                    && !d.producer.is_some_and(|p| covers.contains(&p))
+            })
+            .and_then(|d| d.producer);
+        for d in &mut self.data {
+            // edges into the dropped call disappear
+            d.consumers.retain(|c| !covers.contains(c));
+            // its outputs now appear to come from its own source
+            if d.producer.is_some_and(|p| covers.contains(&p)) {
+                d.producer = primary;
+            }
+        }
+        // prune dead externals (an unconsumed input marker); dead
+        // produced buffers stay as terminal markers for Fig. 4
+        self.data.retain(|d| !d.consumers.is_empty() || d.producer.is_some());
         Ok(())
     }
 }
@@ -162,6 +190,40 @@ mod tests {
         ir.drop_func(2).unwrap();
         assert_eq!(ir.funcs.len(), 3);
         assert!(ir.func_covering(2).is_none());
+    }
+
+    #[test]
+    fn dropped_func_rewires_dataflow_for_the_builder() {
+        // drop normalize (step 2): csa must now read harris's buffer, and
+        // the whole plan path must accept the edited IR
+        let mut ir = demo_ir();
+        ir.drop_func(2).unwrap();
+        let edges = ir.step_edges();
+        assert!(edges.contains(&(Some(1), 3)), "{edges:?}");
+        assert!(edges.iter().all(|(_, c)| *c != 2), "{edges:?}");
+        assert!(ir.is_chain(), "{edges:?}");
+
+        let tmp = crate::util::testing::empty_hwdb_dir("drop-rewire").unwrap();
+        let db = crate::hwdb::HwDatabase::load(tmp.path()).unwrap();
+        let cfg = crate::config::Config {
+            artifacts_dir: tmp.path().to_path_buf(),
+            ..Default::default()
+        };
+        let plan = crate::pipeline::plan_pipeline(
+            &ir,
+            &db,
+            &crate::swlib::Registry::standard(),
+            &cfg,
+            None,
+        )
+        .unwrap();
+        plan.validate_dag().unwrap();
+        assert!(plan.edges.is_empty(), "a chain after the drop stays chain-form");
+
+        // dropping the head re-points its consumer to the external input
+        let mut ir = demo_ir();
+        ir.drop_func(0).unwrap();
+        assert!(ir.step_edges().contains(&(None, 1)), "{:?}", ir.step_edges());
     }
 
     #[test]

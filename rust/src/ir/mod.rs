@@ -79,15 +79,47 @@ pub struct Ir {
 impl Ir {
     /// Lower a reconstructed call graph into the IR (Step 4).
     ///
-    /// Only linear chains are supported — the paper defers branching
-    /// dataflow to future work; we fail loudly instead of mis-pipelining.
+    /// Accepts any acyclic dataflow whose edges point strictly forward in
+    /// call-site order (trace causality guarantees this for honest
+    /// traces); a backwards or self edge is a typed [`CourierError::Dag`]
+    /// instead of a silently mis-pipelined build.
+    ///
+    /// [`CourierError::Dag`]: crate::CourierError::Dag
     pub fn from_graph(graph: &CallGraph) -> Result<Self> {
-        if !graph.is_linear_chain() {
-            return Err(crate::CourierError::Other(format!(
-                "program {}: traced dataflow is not a linear chain; \
-                 Courier's Pipeline Generator handles linear flows only",
-                graph.program
-            )));
+        // Rewrite data-node endpoints from call-graph node ids to call-site
+        // steps, so `data` speaks the same step language as `covers` and
+        // the stage plans downstream.
+        let id_to_step: Vec<usize> = graph.funcs.iter().map(|f| f.step).collect();
+        let map_id = |id: usize| -> Result<usize> {
+            id_to_step.get(id).copied().ok_or_else(|| {
+                crate::CourierError::Dag(format!(
+                    "program {}: data node references unknown function node {id}",
+                    graph.program
+                ))
+            })
+        };
+        let mut data = Vec::with_capacity(graph.data.len());
+        for d in &graph.data {
+            let producer = d.producer.map(map_id).transpose()?;
+            let consumers = d.consumers.iter().map(|&c| map_id(c)).collect::<Result<Vec<_>>>()?;
+            if let Some(p) = producer {
+                for &c in &consumers {
+                    if c <= p {
+                        return Err(crate::CourierError::Dag(format!(
+                            "program {}: dataflow edge step {p} -> step {c} points \
+                             backwards in call order (cycle or cross-frame artifact)",
+                            graph.program
+                        )));
+                    }
+                }
+            }
+            data.push(DataNode {
+                id: d.id,
+                shape: d.shape.clone(),
+                bytes: d.bytes,
+                producer,
+                consumers,
+            });
         }
         Ok(Ir {
             program: graph.program.clone(),
@@ -103,8 +135,71 @@ impl Ir {
                     placement: Placement::Auto,
                 })
                 .collect(),
-            data: graph.data.clone(),
+            data,
         })
+    }
+
+    /// Ordered step-level dependency edges: `(producer step or None for
+    /// the external input, consumer step)`.  Edge order follows the data
+    /// nodes' first-observation order, which per consumer is argument
+    /// order — the wiring contract the builder and `StagePlan::edges`
+    /// preserve.
+    pub fn step_edges(&self) -> Vec<(Option<usize>, usize)> {
+        let mut out = Vec::new();
+        for d in &self.data {
+            for &c in &d.consumers {
+                out.push((d.producer, c));
+            }
+        }
+        out
+    }
+
+    /// The data nodes a step consumes, in argument order.
+    pub fn inputs_of_step(&self, step: usize) -> Vec<&DataNode> {
+        self.data.iter().filter(|d| d.consumers.contains(&step)).collect()
+    }
+
+    /// Is the flow a simple linear chain: the external input feeds only
+    /// the first step, each step feeds exactly the next one, and every
+    /// step reads exactly one buffer?  Linear chains keep the pre-DAG
+    /// plan serialization byte-for-byte.
+    pub fn is_chain(&self) -> bool {
+        let steps: Vec<usize> = self.funcs.iter().flat_map(|f| f.covers.clone()).collect();
+        // a step fed by several data nodes (fan-in, or one buffer wired
+        // into two argument positions after an edit) is not a chain
+        let mut incoming: std::collections::HashMap<usize, usize> = Default::default();
+        for d in &self.data {
+            for &c in &d.consumers {
+                *incoming.entry(c).or_insert(0) += 1;
+            }
+        }
+        if incoming.values().any(|&n| n > 1) {
+            return false;
+        }
+        for d in &self.data {
+            if d.consumers.len() > 1 {
+                return false;
+            }
+            match (d.producer, d.consumers.first()) {
+                (Some(p), Some(&c)) => {
+                    // successive steps in func order, not merely increasing
+                    let pi = steps.iter().position(|&s| s == p);
+                    let ci = steps.iter().position(|&s| s == c);
+                    match (pi, ci) {
+                        (Some(pi), Some(ci)) if ci == pi + 1 => {}
+                        _ => return false,
+                    }
+                }
+                // an external input anywhere but the head is not a chain
+                (None, Some(&c)) => {
+                    if steps.first() != Some(&c) {
+                        return false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        true
     }
 
     /// Total mean frame time, ns.
@@ -223,6 +318,43 @@ pub(crate) mod tests {
         assert_eq!(ir.funcs[1].symbol, "cv::cornerHarris");
         assert_eq!(ir.funcs[1].covers, vec![1]);
         assert!(ir.frame_ns() > 0);
+    }
+
+    #[test]
+    fn lowers_dag_graph_with_ordered_step_edges() {
+        let prog = crate::app::harris_dag_demo(8, 10);
+        let t = trace_program(&prog, &[vec![synth::noise_rgb(8, 10, 0)]]).unwrap();
+        let ir = Ir::from_graph(&CallGraph::from_trace(&t)).unwrap();
+        assert_eq!(ir.funcs.len(), 6);
+        assert!(!ir.is_chain());
+        let edges = ir.step_edges();
+        for e in [(Some(0), 1), (Some(0), 2), (Some(1), 3), (Some(2), 3), (None, 0)] {
+            assert!(edges.contains(&e), "missing edge {e:?} in {edges:?}");
+        }
+        // argument order: into the fan-in step 3, Ix (from 1) precedes Iy
+        let into3: Vec<_> = edges.iter().filter(|(_, c)| *c == 3).collect();
+        assert_eq!(into3, vec![&(Some(1), 3), &(Some(2), 3)]);
+        assert_eq!(ir.inputs_of_step(3).len(), 2);
+    }
+
+    #[test]
+    fn linear_ir_is_chain() {
+        assert!(demo_ir().is_chain());
+    }
+
+    #[test]
+    fn backwards_edge_rejected_as_dag_error() {
+        let prog = corner_harris_demo(8, 10);
+        let t = trace_program(&prog, &[vec![synth::noise_rgb(8, 10, 0)]]).unwrap();
+        let mut graph = CallGraph::from_trace(&t);
+        // corrupt: claim func 3 produced the buffer func 1 consumes
+        for d in &mut graph.data {
+            if d.consumers.contains(&1) {
+                d.producer = Some(3);
+            }
+        }
+        let err = Ir::from_graph(&graph).unwrap_err();
+        assert!(matches!(err, crate::CourierError::Dag(_)), "{err}");
     }
 
     #[test]

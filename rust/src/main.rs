@@ -18,7 +18,7 @@
 //! and exit 2.
 //!
 //! `--program` accepts a `.courier` file path or a builtin demo:
-//! `corner_harris[:HxW]`, `edge[:HxW]`.
+//! `corner_harris[:HxW]`, `edge[:HxW]`, `harris_dag[:HxW]`.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -67,7 +67,8 @@ GLOBAL FLAGS:
 
 Flags take `--flag value` or `--flag=value`; unknown flags exit 2.
 
-PROGRAM SPECS: a .courier file path, corner_harris[:HxW], edge[:HxW]
+PROGRAM SPECS: a .courier file path, corner_harris[:HxW], edge[:HxW],
+               harris_dag[:HxW] (the non-linear Harris flow)
 ";
 
 /// Every flag any subcommand understands — unknown flags are a usage
@@ -221,6 +222,10 @@ fn load_program(spec: &str) -> anyhow::Result<Program> {
             let (h, w) = parse_size((240, 320))?;
             Ok(app::edge_demo(h, w))
         }
+        "harris_dag" => {
+            let (h, w) = parse_size((240, 320))?;
+            Ok(app::harris_dag_demo(h, w))
+        }
         path => Ok(app::parse_program(&std::fs::read_to_string(path)?)?),
     }
 }
@@ -368,6 +373,7 @@ fn cmd_deploy(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         &Registry::standard(),
         cfg,
     )?);
+    built.check_output_matches(&prog)?;
     print!("{}", report::render_plan(&built.plan));
 
     // Step 9: deploy + measure

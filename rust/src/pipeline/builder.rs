@@ -1,5 +1,14 @@
 //! The Pipeline Generator: IR + database + config → a runnable mixed
 //! software/hardware pipeline (paper Fig. 3, Step 8).
+//!
+//! DAG-aware since the convex-cut rework: tokens carry a multi-buffer
+//! [`FrameEnv`] keyed by producing step instead of a single `Mat`, so a
+//! buffer consumed by several calls (the Harris flow's gray image feeding
+//! both Sobel gradients) reaches every consumer instead of being silently
+//! chained through whatever ran in between.  Stages whose tasks form
+//! independent sub-flows execute them as fork-join branches.  Illegal
+//! wirings (backwards edges, tapped fusions, multi-external-input flows)
+//! are typed [`CourierError::Dag`] — never a silently wrong pipeline.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -14,7 +23,7 @@ use crate::runtime::{Executable, Runtime};
 use crate::swlib::Registry;
 use crate::{CourierError, Result};
 
-use super::partition::partition;
+use super::partition::partition_dag;
 use super::plan::{StagePlan, StageSpec, TaskKind, TaskSpec};
 use super::tbb::{FilterMode, PipelineStats, StageFilter, TokenPipeline};
 
@@ -22,28 +31,111 @@ use super::tbb::{FilterMode, PipelineStats, StageFilter, TokenPipeline};
 /// DMA analogue folded into hardware-task estimates).
 const STAGING_NS_PER_BYTE: f64 = 1.0;
 
+/// The multi-buffer token payload of a DAG-wired pipeline: the external
+/// input frame plus every buffer produced so far, keyed by producing
+/// step.  Stages take or clone exactly the buffers their tasks' incoming
+/// edges name, and drop buffers whose last consumer has run.
+pub struct FrameEnv {
+    input: Option<Mat>,
+    bufs: HashMap<usize, Mat>,
+}
+
+impl FrameEnv {
+    /// Wrap one external input frame.
+    pub fn new(input: Mat) -> Self {
+        Self { input: Some(input), bufs: HashMap::new() }
+    }
+
+    /// Extract the terminal output buffer (produced by `step`).
+    pub fn into_output(mut self, step: usize) -> Result<Mat> {
+        self.bufs.remove(&step).ok_or_else(|| {
+            CourierError::Pipeline(format!("pipeline emitted no output for terminal step {step}"))
+        })
+    }
+}
+
 /// A generated pipeline: declarative plan + live runtime + the rendered
 /// control program.
 pub struct BuiltPipeline {
     /// The declarative plan (for reports and codegen).
     pub plan: StagePlan,
-    /// The live token pipeline.
-    pub pipeline: TokenPipeline,
+    /// The live token pipeline over frame environments.
+    pub pipeline: TokenPipeline<FrameEnv>,
     /// The generated control-program listing (paper's Jinja2 output).
     pub control_program: String,
+    /// The step whose output is the pipeline's deliverable.
+    pub terminal_step: usize,
 }
 
 impl BuiltPipeline {
     /// Run a frame stream with cross-frame overlap (deployed streaming).
     pub fn run(&self, frames: Vec<Mat>) -> Result<(Vec<Mat>, PipelineStats)> {
-        self.pipeline.run(frames)
+        let envs: Vec<FrameEnv> = frames.into_iter().map(FrameEnv::new).collect();
+        let (outs, stats) = self.pipeline.run(envs)?;
+        let mats = outs
+            .into_iter()
+            .map(|e| e.into_output(self.terminal_step))
+            .collect::<Result<Vec<Mat>>>()?;
+        Ok((mats, stats))
     }
 
     /// Blocking single-frame path (the off-load wrapper's synchronous
     /// contract).
     pub fn process_one(&self, frame: Mat) -> Result<Mat> {
-        self.pipeline.process_one(frame)
+        self.pipeline.process_one(FrameEnv::new(frame))?.into_output(self.terminal_step)
     }
+
+    /// Verify this pipeline's terminal buffer really is `program`'s
+    /// declared output.  The trace alone cannot distinguish a trailing
+    /// dead branch from the real output (the builder picks the final
+    /// call's buffer), so entry points that hold the source program
+    /// confirm the pick — a mismatch is a typed error instead of a
+    /// silently wrong stream.
+    pub fn check_output_matches(&self, program: &crate::app::Program) -> Result<()> {
+        if program.outputs.len() > 1 {
+            return Err(CourierError::Dag(format!(
+                "program {}: declares {} outputs; the pipeline streams exactly one \
+                 buffer per frame",
+                program.name,
+                program.outputs.len()
+            )));
+        }
+        match declared_output_step(program) {
+            Some(step) if step != self.terminal_step => Err(CourierError::Dag(format!(
+                "program {}: declared output is produced by step {step} but the \
+                 pipeline terminates at step {}; drop the trailing call(s) from \
+                 the IR or make the output the final call",
+                program.name, self.terminal_step
+            ))),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// The call-site step producing `program`'s declared output, if the
+/// output is a call result.
+pub fn declared_output_step(program: &crate::app::Program) -> Option<usize> {
+    let out = program.outputs.last()?;
+    program.steps.iter().position(|s| &s.dst == out)
+}
+
+/// Where one task argument comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Source {
+    /// The external input frame.
+    External,
+    /// The buffer produced by this step.
+    Step(usize),
+}
+
+/// One resolved task argument: its source, and whether this use is the
+/// flow's last (so the buffer may be moved out of the environment instead
+/// of cloned — fork-join stages always clone, their branches share the
+/// environment read-only).
+#[derive(Debug, Clone, Copy)]
+struct ArgRef {
+    source: Source,
+    take: bool,
 }
 
 /// One placed task inside a stage filter.
@@ -52,28 +144,163 @@ enum BoundTask {
     Hw(Arc<Executable>),
 }
 
-/// Stage filter executing its tasks back to back.
+/// A bound task plus its wiring.
+struct BoundTaskSpec {
+    bound: BoundTask,
+    args: Vec<ArgRef>,
+    out_step: usize,
+    symbol: String,
+}
+
+/// Stage filter executing its tasks over the frame environment —
+/// sequentially when the stage is one dependent chain, as fork-join
+/// branches when its tasks form independent sub-flows.
 struct BuiltStage {
     label: String,
     mode: FilterMode,
-    tasks: Vec<BoundTask>,
+    tasks: Vec<BoundTaskSpec>,
+    /// Task-index groups executed as concurrent branches (one group ==
+    /// plain sequential execution).
+    branches: Vec<Vec<usize>>,
+    /// Steps whose buffers die after this stage.
+    drop_after: Vec<usize>,
+    /// Whether the external input dies after this stage.
+    drop_input: bool,
 }
 
-impl StageFilter for BuiltStage {
+impl BuiltStage {
+    /// Fetch one argument inside a fork-join branch: branch-local
+    /// producers first (cloned — a branch may fan out internally), then
+    /// the shared environment read-only.
+    fn fetch_branch(
+        env: &FrameEnv,
+        local: &HashMap<usize, Mat>,
+        arg: &ArgRef,
+        symbol: &str,
+    ) -> Result<Mat> {
+        let missing = |what: String| {
+            CourierError::Pipeline(format!("{symbol}: missing {what} in frame environment"))
+        };
+        match arg.source {
+            Source::External => {
+                env.input.clone().ok_or_else(|| missing("external input".into()))
+            }
+            Source::Step(s) => local
+                .get(&s)
+                .or_else(|| env.bufs.get(&s))
+                .cloned()
+                .ok_or_else(|| missing(format!("buffer of step {s}"))),
+        }
+    }
+
+    /// Execute one bound task over owned arguments.
+    fn exec(task: &BoundTaskSpec, owned: Vec<Mat>) -> Result<Mat> {
+        match &task.bound {
+            BoundTask::Sw(entry) => {
+                let refs: Vec<&Mat> = owned.iter().collect();
+                (entry.f)(&refs)
+            }
+            // move the frames into the fabric request: no memcpy
+            BoundTask::Hw(exe) => exe.run_owned(owned),
+        }
+    }
+
+    /// Run one fork-join branch against the shared environment, returning
+    /// its produced buffers.
+    fn run_branch(&self, env: &FrameEnv, branch: &[usize]) -> Result<Vec<(usize, Mat)>> {
+        let mut local: HashMap<usize, Mat> = HashMap::new();
+        for &ti in branch {
+            let task = &self.tasks[ti];
+            let mut owned = Vec::with_capacity(task.args.len());
+            for arg in &task.args {
+                owned.push(Self::fetch_branch(env, &local, arg, &task.symbol)?);
+            }
+            let out = Self::exec(task, owned)?;
+            local.insert(task.out_step, out);
+        }
+        Ok(local.into_iter().collect())
+    }
+
+    /// Run one task against the mutable environment (sequential path,
+    /// where moves are allowed).
+    fn run_task_seq(&self, env: &mut FrameEnv, task: &BoundTaskSpec) -> Result<()> {
+        let mut owned = Vec::with_capacity(task.args.len());
+        for arg in &task.args {
+            let m = match (arg.source, arg.take) {
+                (Source::External, true) => env
+                    .input
+                    .take()
+                    .ok_or_else(|| CourierError::Pipeline(format!(
+                        "{}: external input already consumed",
+                        task.symbol
+                    )))?,
+                (Source::External, false) => env
+                    .input
+                    .clone()
+                    .ok_or_else(|| CourierError::Pipeline(format!(
+                        "{}: external input already consumed",
+                        task.symbol
+                    )))?,
+                (Source::Step(s), true) => env.bufs.remove(&s).ok_or_else(|| {
+                    CourierError::Pipeline(format!("{}: missing buffer of step {s}", task.symbol))
+                })?,
+                (Source::Step(s), false) => env.bufs.get(&s).cloned().ok_or_else(|| {
+                    CourierError::Pipeline(format!("{}: missing buffer of step {s}", task.symbol))
+                })?,
+            };
+            owned.push(m);
+        }
+        let out = Self::exec(task, owned)?;
+        env.bufs.insert(task.out_step, out);
+        Ok(())
+    }
+}
+
+impl StageFilter<FrameEnv> for BuiltStage {
     fn mode(&self) -> FilterMode {
         self.mode
     }
 
-    fn apply(&self, input: Mat) -> Result<Mat> {
-        let mut cur = input;
-        for t in &self.tasks {
-            cur = match t {
-                BoundTask::Sw(entry) => (entry.f)(&[&cur])?,
-                // move the frame into the fabric request: no memcpy
-                BoundTask::Hw(exe) => exe.run_owned(vec![cur])?,
-            };
+    fn apply(&self, input: FrameEnv) -> Result<FrameEnv> {
+        let mut env = input;
+        if self.branches.len() <= 1 {
+            for task in &self.tasks {
+                self.run_task_seq(&mut env, task)?;
+            }
+        } else {
+            // fork-join: sibling branches read the shared environment
+            // immutably and merge their outputs after the join.  The
+            // first branch runs on the current worker thread; only the
+            // extra branches cost a scoped-thread spawn per token.
+            let (first, rest) =
+                self.branches.split_first().expect("fork-join needs branches");
+            let results: Vec<Result<Vec<(usize, Mat)>>> = std::thread::scope(|scope| {
+                let env_ref = &env;
+                let handles: Vec<_> = rest
+                    .iter()
+                    .map(|branch| scope.spawn(move || self.run_branch(env_ref, branch)))
+                    .collect();
+                let mut out = vec![self.run_branch(env_ref, first)];
+                out.extend(
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("fork-join branch panicked")),
+                );
+                out
+            });
+            for r in results {
+                for (step, mat) in r? {
+                    env.bufs.insert(step, mat);
+                }
+            }
         }
-        Ok(cur)
+        for s in &self.drop_after {
+            env.bufs.remove(s);
+        }
+        if self.drop_input {
+            env.input = None;
+        }
+        Ok(env)
     }
 
     fn name(&self) -> String {
@@ -119,19 +346,54 @@ pub fn plan_pipeline(
     cfg: &Config,
     cal: Option<&CostCalibration>,
 ) -> Result<StagePlan> {
-    // -- input shape per IR function (linear chains only) ------------------
-    let input_shapes = chain_input_shapes(ir)?;
+    // -- dataflow legality --------------------------------------------------
+    let step_edges = ir.step_edges();
+    let func_of_step = |step: usize| ir.funcs.iter().position(|f| f.covers.contains(&step));
+    for (p, c) in &step_edges {
+        if func_of_step(*c).is_none() {
+            return Err(CourierError::Dag(format!(
+                "program {}: step {c} consumes data but no IR function covers it",
+                ir.program
+            )));
+        }
+        if let Some(p) = p {
+            if func_of_step(*p).is_none() {
+                return Err(CourierError::Dag(format!(
+                    "program {}: step {p} produces data but no IR function covers it",
+                    ir.program
+                )));
+            }
+        }
+    }
+    // the pipeline runtime feeds exactly one external frame per token
+    for f in &ir.funcs {
+        let externals = step_edges
+            .iter()
+            .filter(|(p, c)| p.is_none() && f.covers.contains(c))
+            .count();
+        if externals > 1 {
+            return Err(CourierError::Dag(format!(
+                "program {}: {} takes {externals} external inputs; the pipeline \
+                 runtime supports a single external input frame",
+                ir.program, f.symbol
+            )));
+        }
+    }
 
-    // -- placement + per-task estimates ------------------------------------
+    // -- per-function input shapes (argument order) -------------------------
+    let input_shapes = func_input_shapes(ir)?;
+
+    // -- placement + per-task estimates -------------------------------------
     let mut tasks: Vec<TaskSpec> = Vec::with_capacity(ir.funcs.len());
     for (i, f) in ir.funcs.iter().enumerate() {
-        let shape = &input_shapes[i];
+        let shapes = &input_shapes[i];
+        let shape_refs: Vec<&[usize]> = shapes.iter().map(|s| s.as_slice()).collect();
         let hit = if cfg.cpu_only || f.placement == Placement::Cpu {
             None
         } else if cfg.include_disabled_modules {
-            db.lookup_any(&f.symbol, &[shape.as_slice()])
+            db.lookup_any(&f.symbol, &shape_refs)
         } else {
-            db.lookup(&f.symbol, &[shape.as_slice()])
+            db.lookup(&f.symbol, &shape_refs)
         };
         match (hit, f.placement) {
             (Some(hit), _) => {
@@ -157,7 +419,8 @@ pub fn plan_pipeline(
             }
             (None, Placement::Hw) => {
                 return Err(CourierError::HwDb(format!(
-                    "function {} pinned to hardware but no enabled module matches shape {shape:?}",
+                    "function {} pinned to hardware but no enabled module matches \
+                     shapes {shapes:?}",
                     f.symbol
                 )));
             }
@@ -180,14 +443,28 @@ pub fn plan_pipeline(
 
     // -- calibrate ----------------------------------------------------------
     if let Some(cal) = cal {
-        for (task, shape) in tasks.iter_mut().zip(&input_shapes) {
-            task.est_ns = cal.apply_ns(&task.calibration_key(shape), task.est_ns);
+        for (task, shapes) in tasks.iter_mut().zip(&input_shapes) {
+            let primary = shapes.first().map(Vec::as_slice).unwrap_or(&[]);
+            task.est_ns = cal.apply_ns(&task.calibration_key(primary), task.est_ns);
         }
     }
 
-    // -- balance ------------------------------------------------------------
+    // -- balance (DAG mode: cuts along the topological func order, with the
+    //    topological premise and the resulting cuts validated) --------------
     let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
-    let groups = partition(&times, cfg.threads, cfg.policy);
+    let mut func_edges: Vec<(usize, usize)> = Vec::new();
+    for (p, c) in &step_edges {
+        if let Some(p) = p {
+            let (a, b) = (
+                func_of_step(*p).expect("checked above"),
+                func_of_step(*c).expect("checked above"),
+            );
+            if !func_edges.contains(&(a, b)) {
+                func_edges.push((a, b));
+            }
+        }
+    }
+    let groups = partition_dag(&times, &func_edges, cfg.threads, cfg.policy)?;
     let n_stages = groups.len();
     let stages: Vec<StageSpec> = groups
         .iter()
@@ -198,23 +475,32 @@ pub fn plan_pipeline(
             serial: idx == 0 || idx == n_stages - 1,
         })
         .collect();
-    Ok(StagePlan {
+    let plan = StagePlan {
         program: ir.program.clone(),
         threads: cfg.threads,
         tokens: cfg.tokens,
+        // linear chains store no explicit edges: their serialized plans
+        // stay byte-identical to the pre-DAG format
+        edges: if ir.is_chain() { Vec::new() } else { step_edges },
         stages,
-    })
+    };
+    plan.validate_dag()?;
+    Ok(plan)
 }
 
 /// Instantiate a (possibly hand-edited or tuner-produced) plan into a
 /// live pipeline.  The plan's own `threads`/`tokens` fields configure the
-/// token runtime.
+/// token runtime.  The wiring is validated first: an illegal plan is a
+/// typed [`CourierError::Dag`], never a silently mis-wired pipeline.
 pub fn instantiate(
     plan: &StagePlan,
     artifact_dir: &Path,
     rt: &Runtime,
     registry: &Registry,
 ) -> Result<BuiltPipeline> {
+    plan.validate_dag()?;
+    let edges = plan.effective_edges();
+
     // load each artifact once ("place the module on the fabric")
     let mut loaded: HashMap<&str, Arc<Executable>> = HashMap::new();
     for stage in &plan.stages {
@@ -228,23 +514,173 @@ pub fn instantiate(
         }
     }
 
-    let mut filters: Vec<Box<dyn StageFilter>> = Vec::with_capacity(plan.stages.len());
-    for stage in &plan.stages {
-        let mut bound = Vec::with_capacity(stage.tasks.len());
+    // -- wiring -------------------------------------------------------------
+    // flat task list: (stage index, covers, out step)
+    struct FlatTask {
+        stage: usize,
+        first_cover: usize,
+        covers: Vec<usize>,
+        out_step: usize,
+    }
+    let mut flat: Vec<FlatTask> = Vec::new();
+    for (si, stage) in plan.stages.iter().enumerate() {
         for task in &stage.tasks {
-            match &task.kind {
-                TaskKind::Sw => bound.push(BoundTask::Sw(registry.resolve(&task.symbol)?.clone())),
-                TaskKind::Hw { artifact, .. } => {
-                    bound.push(BoundTask::Hw(loaded[artifact.as_str()].clone()))
+            flat.push(FlatTask {
+                stage: si,
+                first_cover: *task.covers.first().ok_or_else(|| {
+                    CourierError::Dag(format!("task {} covers nothing", task.symbol))
+                })?,
+                covers: task.covers.clone(),
+                out_step: *task.covers.last().expect("non-empty covers"),
+            });
+        }
+    }
+
+    // the terminal output: the highest produced step nobody consumes
+    let consumed: std::collections::HashSet<usize> =
+        edges.iter().filter_map(|(p, _)| *p).collect();
+    let terminal_step = flat
+        .iter()
+        .map(|t| t.out_step)
+        .filter(|s| !consumed.contains(s))
+        .max()
+        .ok_or_else(|| {
+            CourierError::Dag(format!("plan {}: no terminal output step", plan.program))
+        })?;
+
+    // per-task incoming args, in edge (== argument) order.  Fused tasks
+    // may only be fed through their first cover — interior covers are
+    // internal to the fused module.
+    let incoming_of = |ft: &FlatTask| -> Result<Vec<Source>> {
+        let mut args = Vec::new();
+        for (p, c) in &edges {
+            if !ft.covers.contains(c) {
+                continue;
+            }
+            match p {
+                None => {
+                    if *c != ft.first_cover {
+                        return Err(CourierError::Dag(format!(
+                            "plan {}: fused task over steps {:?} is fed on interior \
+                             step {c}; only its first step takes outside inputs",
+                            plan.program, ft.covers
+                        )));
+                    }
+                    args.push(Source::External);
+                }
+                Some(p) if ft.covers.contains(p) => {} // internal edge
+                Some(p) => {
+                    if *c != ft.first_cover {
+                        return Err(CourierError::Dag(format!(
+                            "plan {}: fused task over steps {:?} is fed on interior \
+                             step {c}; only its first step takes outside inputs",
+                            plan.program, ft.covers
+                        )));
+                    }
+                    args.push(Source::Step(*p));
                 }
             }
         }
+        if args.is_empty() {
+            return Err(CourierError::Dag(format!(
+                "plan {}: task over steps {:?} has no inputs",
+                plan.program, ft.covers
+            )));
+        }
+        Ok(args)
+    };
+    let all_args: Vec<Vec<Source>> = flat.iter().map(incoming_of).collect::<Result<_>>()?;
+
+    // last use of every source in flat execution order — at *argument
+    // occurrence* granularity, because one buffer may legally be wired
+    // into two argument positions of the same task (only the final
+    // occurrence may move it out of the environment)
+    let mut last_occurrence: HashMap<Source, (usize, usize)> = HashMap::new();
+    let mut last_use_stage: HashMap<Source, usize> = HashMap::new();
+    for (fi, args) in all_args.iter().enumerate() {
+        for (ai, src) in args.iter().enumerate() {
+            last_occurrence.insert(*src, (fi, ai));
+            last_use_stage.insert(*src, flat[fi].stage);
+        }
+    }
+
+    // branch layout per stage (fork-join when a stage holds independent
+    // sub-flows)
+    let stage_branches: Vec<Vec<Vec<usize>>> =
+        plan.stages.iter().map(|s| s.branches(&edges)).collect();
+
+    let mut filters: Vec<Box<dyn StageFilter<FrameEnv>>> = Vec::with_capacity(plan.stages.len());
+    let mut fi = 0usize;
+    for (si, stage) in plan.stages.iter().enumerate() {
+        let fork_join = stage_branches[si].len() > 1;
+        let mut bound_tasks = Vec::with_capacity(stage.tasks.len());
+        for task in &stage.tasks {
+            let bound = match &task.kind {
+                TaskKind::Sw => BoundTask::Sw(registry.resolve(&task.symbol)?.clone()),
+                TaskKind::Hw { artifact, .. } => {
+                    BoundTask::Hw(loaded[artifact.as_str()].clone())
+                }
+            };
+            let args: Vec<ArgRef> = all_args[fi]
+                .iter()
+                .enumerate()
+                .map(|(ai, src)| ArgRef {
+                    source: *src,
+                    // moves are only safe on the sequential path; branch
+                    // threads share the environment read-only
+                    take: !fork_join && last_occurrence.get(src) == Some(&(fi, ai)),
+                })
+                .collect();
+            // arity must match the wiring exactly — a collapsed or
+            // missing edge (e.g. two external inputs deduplicated by the
+            // tracer) would otherwise call the function with the wrong
+            // argument count at runtime
+            if let BoundTask::Sw(entry) = &bound {
+                if entry.arity != args.len() {
+                    return Err(CourierError::Dag(format!(
+                        "plan {}: {} takes {} arguments but the dataflow wires {} \
+                         (multi-external-input flows are unsupported)",
+                        plan.program,
+                        task.symbol,
+                        entry.arity,
+                        args.len()
+                    )));
+                }
+            }
+            bound_tasks.push(BoundTaskSpec {
+                bound,
+                args,
+                out_step: flat[fi].out_step,
+                symbol: task.symbol.clone(),
+            });
+            fi += 1;
+        }
+
+        // buffers that die here: last consumed in this stage, or produced
+        // here and never consumed at all (dead branches) — never the
+        // terminal output
+        let mut drop_after: Vec<usize> = Vec::new();
+        for (src, &ls) in &last_use_stage {
+            if let Source::Step(s) = src {
+                if ls == si && *s != terminal_step {
+                    drop_after.push(*s);
+                }
+            }
+        }
+        for t in &bound_tasks {
+            let s = t.out_step;
+            if s != terminal_step && !consumed.contains(&s) && !drop_after.contains(&s) {
+                drop_after.push(s);
+            }
+        }
+        let drop_input = last_use_stage.get(&Source::External) == Some(&si);
+
         let label = stage
             .tasks
             .iter()
             .map(|t| t.symbol.as_str())
             .collect::<Vec<_>>()
-            .join(" ; ");
+            .join(if fork_join { " || " } else { " ; " });
         filters.push(Box::new(BuiltStage {
             label,
             mode: if stage.serial {
@@ -252,7 +688,10 @@ pub fn instantiate(
             } else {
                 FilterMode::Parallel
             },
-            tasks: bound,
+            tasks: bound_tasks,
+            branches: stage_branches[si].clone(),
+            drop_after,
+            drop_input,
         }));
     }
 
@@ -261,38 +700,54 @@ pub fn instantiate(
     // config must come up exactly as written
     let pipeline = TokenPipeline::new(filters, plan.threads.max(1), plan.tokens.max(1))?;
     let control_program = super::codegen::render_control_program(plan);
-    Ok(BuiltPipeline { plan: plan.clone(), pipeline, control_program })
+    Ok(BuiltPipeline { plan: plan.clone(), pipeline, control_program, terminal_step })
 }
 
-/// For a linear chain, the input shape each IR function consumes (public:
-/// the tuner derives calibration keys from the same shapes the builder
-/// placed with).
-pub fn chain_input_shapes(ir: &Ir) -> Result<Vec<Vec<usize>>> {
+/// Per-IR-function input shapes, in argument order (public: the tuner
+/// derives calibration keys from the same shapes the builder placed
+/// with).  A fused function's inputs are the buffers entering its cover
+/// range from outside.
+pub fn func_input_shapes(ir: &Ir) -> Result<Vec<Vec<Vec<usize>>>> {
     let mut shapes = Vec::with_capacity(ir.funcs.len());
     for f in &ir.funcs {
-        let first_step = *f.covers.first().ok_or_else(|| {
-            CourierError::Other(format!("IR function {} covers nothing", f.symbol))
-        })?;
-        let shape = ir
-            .data
-            .iter()
-            .find(|d| d.consumers.contains(&first_step))
-            .map(|d| d.shape.clone())
-            .ok_or_else(|| {
-                CourierError::Other(format!(
-                    "no data node feeds {} (step {first_step}); non-linear flow?",
-                    f.symbol
-                ))
-            })?;
-        shapes.push(shape);
+        if f.covers.is_empty() {
+            return Err(CourierError::Other(format!("IR function {} covers nothing", f.symbol)));
+        }
+        let mut ins: Vec<Vec<usize>> = Vec::new();
+        for d in &ir.data {
+            let feeds_from_outside = match d.producer {
+                Some(p) => !f.covers.contains(&p),
+                None => true,
+            };
+            if feeds_from_outside && d.consumers.iter().any(|c| f.covers.contains(c)) {
+                ins.push(d.shape.clone());
+            }
+        }
+        if ins.is_empty() {
+            return Err(CourierError::Dag(format!(
+                "no data node feeds {} (steps {:?})",
+                f.symbol, f.covers
+            )));
+        }
+        shapes.push(ins);
     }
     Ok(shapes)
+}
+
+/// The *primary* (first-argument) input shape per IR function — the shape
+/// calibration keys embed, identical to the pre-DAG chain shapes for
+/// linear flows.
+pub fn primary_input_shapes(ir: &Ir) -> Result<Vec<Vec<usize>>> {
+    Ok(func_input_shapes(ir)?
+        .into_iter()
+        .map(|mut v| v.remove(0))
+        .collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::app::corner_harris_demo;
+    use crate::app::{corner_harris_demo, fanout_demo, harris_dag_demo};
     use crate::image::synth;
     use crate::trace::{trace_program, CallGraph};
 
@@ -301,10 +756,19 @@ mod tests {
         dir.join("manifest.json").exists().then_some(dir)
     }
 
-    fn demo_ir(h: usize, w: usize) -> Ir {
-        let prog = corner_harris_demo(h, w);
-        let t = trace_program(&prog, &[vec![synth::noise_rgb(h, w, 0)]]).unwrap();
+    fn ir_of(prog: &crate::app::Program, h: usize, w: usize) -> Ir {
+        let t = trace_program(prog, &[vec![synth::noise_rgb(h, w, 0)]]).unwrap();
         Ir::from_graph(&CallGraph::from_trace(&t)).unwrap()
+    }
+
+    fn demo_ir(h: usize, w: usize) -> Ir {
+        ir_of(&corner_harris_demo(h, w), h, w)
+    }
+
+    fn hermetic() -> (crate::util::testing::TempDir, HwDatabase, Runtime, Registry) {
+        let tmp = crate::util::testing::empty_hwdb_dir("builder-dag").unwrap();
+        let db = HwDatabase::load(tmp.path()).unwrap();
+        (tmp, db, Runtime::cpu().unwrap(), Registry::standard())
     }
 
     #[test]
@@ -445,5 +909,275 @@ mod tests {
         let built = build(&demo_ir(48, 64), &db, &rt, &registry, &cfg).unwrap();
         assert!(built.control_program.contains("serial_in_order"));
         assert!(built.control_program.contains("hls_corner_harris"));
+    }
+
+    // ------------------------------------------------------------------
+    // DAG path (hermetic: empty hardware database, all-CPU placement)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn harris_dag_builds_and_matches_interpreter_bit_exactly() {
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = harris_dag_demo(24, 32);
+        let ir = ir_of(&prog, 24, 32);
+        assert!(!ir.is_chain());
+        let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+        assert!(!built.plan.edges.is_empty(), "DAG plans must carry explicit edges");
+        built.plan.validate_dag().unwrap();
+
+        let interp = crate::app::Interpreter::new(
+            prog,
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        for seed in 0..3u64 {
+            let frame = synth::noise_rgb(24, 32, seed);
+            let got = built.process_one(frame.clone()).unwrap();
+            let want = interp.run(&[frame]).unwrap().remove(0);
+            assert_eq!(got, want, "seed {seed}: all-CPU DAG pipeline must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn harris_dag_streaming_matches_blocking() {
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = harris_dag_demo(16, 20);
+        let built = build(&ir_of(&prog, 16, 20), &db, &rt, &registry, &cfg).unwrap();
+        let frames: Vec<Mat> = (0..8).map(|s| synth::noise_rgb(16, 20, s)).collect();
+        let (outs, stats) = built.run(frames.clone()).unwrap();
+        assert_eq!(outs.len(), 8);
+        assert_eq!(stats.frames, 8);
+        for (i, f) in frames.into_iter().enumerate() {
+            assert_eq!(built.process_one(f).unwrap(), outs[i], "frame {i}");
+        }
+    }
+
+    #[test]
+    fn prefix_linearized_wiring_is_demonstrably_miswired() {
+        // The regression the DAG rework closes: the pre-fix builder
+        // chained every task through its predecessor's single output.  On
+        // fanout_demo (gray feeds both GaussianBlur and Sobel) that
+        // type-checks — every function is unary — but computes
+        // Sobel(Gauss(gray)) instead of Sobel(gray).
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = fanout_demo(24, 32);
+        let built = build(&ir_of(&prog, 24, 32), &db, &rt, &registry, &cfg).unwrap();
+
+        let frame = synth::noise_rgb(24, 32, 5);
+        let interp = crate::app::Interpreter::new(
+            prog,
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+
+        // DAG-aware build: correct
+        let got = built.process_one(frame.clone()).unwrap();
+        assert_eq!(got, want, "DAG-aware wiring must match the binary");
+
+        // pre-fix linearized wiring: demonstrably wrong on the same plan
+        let mut cur = frame;
+        for stage in &built.plan.stages {
+            for task in &stage.tasks {
+                cur = (registry.resolve(&task.symbol).unwrap().f)(&[&cur]).unwrap();
+            }
+        }
+        assert_ne!(cur, want, "the linearized chain silently mis-wires the fan-out");
+    }
+
+    #[test]
+    fn sibling_branches_execute_as_fork_join_stage() {
+        // hand-roll the partition so the two Sobel siblings share one
+        // stage: the instantiated filter must run them as independent
+        // fork-join branches and still produce the interpreter's output
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = harris_dag_demo(16, 16);
+        let built = build(&ir_of(&prog, 16, 16), &db, &rt, &registry, &cfg).unwrap();
+
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        assert_eq!(tasks.len(), 6);
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 4,
+            edges: built.plan.edges.clone(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
+                StageSpec { index: 1, serial: false, tasks: tasks[1..3].to_vec() },
+                StageSpec { index: 2, serial: true, tasks: tasks[3..6].to_vec() },
+            ],
+        };
+        regrouped.validate_dag().unwrap();
+        let edges = regrouped.effective_edges();
+        assert_eq!(
+            regrouped.stages[1].branches(&edges),
+            vec![vec![0], vec![1]],
+            "the sobel siblings are independent branches"
+        );
+        // fork-join stage costs its longest branch, not the branch sum
+        assert!(regrouped.stages[1].fork_join_ns(&edges) <= regrouped.stages[1].est_ns());
+        if regrouped.stages[1].tasks.iter().all(|t| t.est_ns > 0) {
+            assert!(regrouped.stages[1].fork_join_ns(&edges) < regrouped.stages[1].est_ns());
+        }
+
+        let fj = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        let interp = crate::app::Interpreter::new(
+            harris_dag_demo(16, 16),
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        for seed in 0..2u64 {
+            let frame = synth::noise_rgb(16, 16, seed);
+            let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+            assert_eq!(fj.process_one(frame).unwrap(), want, "seed {seed}");
+        }
+        // streaming through the fork-join stage stays ordered and correct
+        let frames: Vec<Mat> = (0..6).map(|s| synth::noise_rgb(16, 16, 10 + s)).collect();
+        let (outs, _) = fj.run(frames.clone()).unwrap();
+        for (i, f) in frames.into_iter().enumerate() {
+            let want = interp.run(&[f]).unwrap().remove(0);
+            assert_eq!(outs[i], want, "frame {i}");
+        }
+    }
+
+    #[test]
+    fn same_buffer_in_two_argument_positions_traces_and_builds() {
+        // f(x, x): both inputs carry the same hash, so edges must be
+        // keyed by argument position or the call collapses to one arg
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = crate::app::parse_program(
+            "program selfPair\n\
+             input frame 12x12x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call resp = cv::harrisResponse(gray, gray)\n\
+             call out = cv::convertScaleAbs(resp)\n\
+             output out\n",
+        )
+        .unwrap();
+        let ir = ir_of(&prog, 12, 12);
+        assert_eq!(
+            ir.inputs_of_step(1).len(),
+            2,
+            "both argument slots must survive tracing: {:?}",
+            ir.step_edges()
+        );
+        let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+        let frame = synth::noise_rgb(12, 12, 4);
+        let interp = crate::app::Interpreter::new(
+            prog,
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+        assert_eq!(built.process_one(frame).unwrap(), want);
+    }
+
+    #[test]
+    fn dropped_fan_in_producer_rewires_to_duplicated_argument() {
+        // dropping one producer of a 2-ary fan-in re-points that argument
+        // to the producer's own source: the same buffer legally feeds two
+        // argument positions, the flow stops being a chain, and the
+        // built pipeline computes f(gray, gray) exactly
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = crate::app::parse_program(
+            "program dropDup\n\
+             input frame 16x16x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call ix = cv::Sobel(gray)\n\
+             call resp = cv::harrisResponse(ix, gray)\n\
+             call out = cv::convertScaleAbs(resp)\n\
+             output out\n",
+        )
+        .unwrap();
+        let mut ir = ir_of(&prog, 16, 16);
+        ir.drop_func(1).unwrap(); // drop Sobel: resp now reads gray twice
+        assert!(!ir.is_chain(), "duplicated argument must not classify as a chain");
+        let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+
+        let frame = synth::noise_rgb(16, 16, 2);
+        let got = built.process_one(frame.clone()).unwrap();
+        let gray = registry.call("cv::cvtColor", &[&frame]).unwrap();
+        let resp = registry.call("cv::harrisResponse", &[&gray, &gray]).unwrap();
+        let want = registry.call("cv::convertScaleAbs", &[&resp]).unwrap();
+        assert_eq!(got, want, "duplicated-argument wiring must compute f(gray, gray)");
+    }
+
+    #[test]
+    fn output_not_last_call_is_caught_by_the_program_check() {
+        // mirror of fanout_demo: the *declared* output is the blur, and a
+        // dead Sobel branch runs after it.  The trace alone cannot tell
+        // which unconsumed buffer is the output — the builder picks the
+        // final call — so the program-aware check must reject the build
+        // instead of letting the pipeline stream the wrong buffer.
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = crate::app::parse_program(
+            "program outNotLast\n\
+             input frame 16x16x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call out = cv::GaussianBlur(gray)\n\
+             call dbg = cv::Sobel(gray)\n\
+             output out\n",
+        )
+        .unwrap();
+        let built = build(&ir_of(&prog, 16, 16), &db, &rt, &registry, &cfg).unwrap();
+        assert_eq!(
+            crate::pipeline::declared_output_step(&prog),
+            Some(1),
+            "output is the blur at step 1"
+        );
+        let err = built.check_output_matches(&prog).unwrap_err();
+        assert!(matches!(err, CourierError::Dag(_)), "{err}");
+        // whereas the well-formed fan-out (output == final call) passes
+        let prog2 = fanout_demo(16, 16);
+        let built2 = build(&ir_of(&prog2, 16, 16), &db, &rt, &registry, &cfg).unwrap();
+        built2.check_output_matches(&prog2).unwrap();
+    }
+
+    #[test]
+    fn multi_external_input_flow_is_a_typed_dag_error() {
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = crate::app::gemm_chain_demo(8);
+        let inputs = vec![vec![
+            synth::random_matrix(8, 8, 1),
+            synth::random_matrix(8, 8, 2),
+        ]];
+        let t = trace_program(&prog, &inputs).unwrap();
+        let ir = Ir::from_graph(&CallGraph::from_trace(&t)).unwrap();
+        let err = build(&ir, &db, &rt, &registry, &cfg).unwrap_err();
+        assert!(matches!(err, CourierError::Dag(_)), "{err}");
+    }
+
+    #[test]
+    fn instantiate_rejects_backwards_plan_edges() {
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = harris_dag_demo(16, 16);
+        let built = build(&ir_of(&prog, 16, 16), &db, &rt, &registry, &cfg).unwrap();
+        let mut plan = built.plan.clone();
+        plan.edges.push((Some(5), 1));
+        let err = instantiate(&plan, db.dir(), &rt, &registry).unwrap_err();
+        assert!(matches!(err, CourierError::Dag(_)), "{err}");
+    }
+
+    #[test]
+    fn linear_chain_plans_keep_primary_shapes_and_empty_edges() {
+        let (_tmp, db, _rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let ir = demo_ir(24, 32);
+        let plan = plan_pipeline(&ir, &db, &registry, &cfg, None).unwrap();
+        assert!(plan.edges.is_empty(), "chain plans stay in the pre-DAG format");
+        assert!(plan.is_chain());
+        let shapes = primary_input_shapes(&ir).unwrap();
+        assert_eq!(shapes[0], vec![24, 32, 3]);
+        assert_eq!(shapes[1], vec![24, 32]);
     }
 }

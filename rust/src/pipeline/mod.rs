@@ -12,6 +12,11 @@
 //!    buffering), and
 //! 4. emits the **control program source** as a build artifact (the
 //!    paper's Jinja2 code-generation step).
+//!
+//! The whole path is **DAG-aware**: stage plans carry the dataflow edge
+//! set ([`PlanEdge`]), cuts are validated convex ([`partition_dag`]),
+//! tokens carry a multi-buffer [`FrameEnv`], and stages holding
+//! independent sub-flows execute them as fork-join branches.
 
 mod builder;
 mod codegen;
@@ -21,10 +26,13 @@ mod sim;
 mod tbb;
 
 pub use builder::{
-    build, build_calibrated, chain_input_shapes, instantiate, plan_pipeline, BuiltPipeline,
+    build, build_calibrated, declared_output_step, func_input_shapes, instantiate,
+    plan_pipeline, primary_input_shapes, BuiltPipeline, FrameEnv,
 };
 pub use codegen::render_control_program;
-pub use partition::{bottleneck, optimal, paper_policy, partition, Partition};
-pub use plan::{StagePlan, StageSpec, TaskKind, TaskSpec};
+pub use partition::{
+    bottleneck, optimal, paper_policy, partition, partition_dag, respects_dag, Partition,
+};
+pub use plan::{PlanEdge, StagePlan, StageSpec, TaskKind, TaskSpec};
 pub use sim::{paper_table1_plan, simulate, SimResult};
 pub use tbb::{FilterMode, FnFilter, PipelineStats, StageFilter, StageSpan, TokenPipeline};

@@ -130,6 +130,59 @@ pub fn optimal(times: &[u64], stages: usize) -> Partition {
     bounds.windows(2).map(|w| w[0]..w[1]).collect()
 }
 
+/// DAG legality of a partition: for every dependency edge `(a, b)` over
+/// task indices (a produces an input of b), the stage holding `a` must
+/// not come after the stage holding `b` — no edge may point backwards
+/// across a stage cut, and both endpoints must be covered.  Contiguous
+/// partitions over a topological order satisfy this by construction; the
+/// checker exists so the DAG entry point, the property suite and the
+/// tuner's move generator *verify* it instead of assuming it.
+pub fn respects_dag(p: &[std::ops::Range<usize>], task_edges: &[(usize, usize)]) -> bool {
+    let stage_of = |i: usize| p.iter().position(|r| r.contains(&i));
+    task_edges.iter().all(|&(a, b)| match (stage_of(a), stage_of(b)) {
+        (Some(sa), Some(sb)) => sa <= sb,
+        _ => false,
+    })
+}
+
+/// DAG mode of [`partition`]: `times` must be listed in a topological
+/// order of the dependency DAG given by `task_edges` (pairs of task
+/// indices).  Cuts are placed along that linearization exactly like the
+/// linear policies — contiguity over a topological order makes every
+/// stage convex — but the topological premise and the resulting cuts are
+/// *validated*, so a non-topological input (hand-edited IR, corrupted
+/// plan) is a typed [`crate::CourierError::Dag`] rather than a silently
+/// mis-wired pipeline.
+pub fn partition_dag(
+    times: &[u64],
+    task_edges: &[(usize, usize)],
+    threads: usize,
+    policy: PartitionPolicy,
+) -> crate::Result<Partition> {
+    for &(a, b) in task_edges {
+        if b < a {
+            return Err(crate::CourierError::Dag(format!(
+                "task order is not topological: dependency edge {a} -> {b} points backwards"
+            )));
+        }
+        if a.max(b) >= times.len() {
+            return Err(crate::CourierError::Dag(format!(
+                "dependency edge {a} -> {b} references a task beyond the {} listed",
+                times.len()
+            )));
+        }
+    }
+    let p = partition(times, threads, policy);
+    let forward: Vec<(usize, usize)> =
+        task_edges.iter().copied().filter(|&(a, b)| a != b).collect();
+    if !p.is_empty() && !respects_dag(&p, &forward) {
+        return Err(crate::CourierError::Dag(
+            "partition produced a stage cut with a backwards dependency edge".into(),
+        ));
+    }
+    Ok(p)
+}
+
 /// Bottleneck (max stage sum) of a partition — the pipeline's steady-state
 /// frame interval.
 pub fn bottleneck(times: &[u64], p: &Partition) -> u64 {
@@ -212,6 +265,38 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(partition(&[], 2, crate::config::PartitionPolicy::Paper).is_empty());
+    }
+
+    #[test]
+    fn dag_mode_accepts_topological_and_rejects_backwards() {
+        let times = [10u64, 30, 20, 40];
+        // harris-shaped: 0 -> {1, 2} -> 3
+        let edges = [(0usize, 1usize), (0, 2), (1, 3), (2, 3)];
+        let p = partition_dag(&times, &edges, 2, crate::config::PartitionPolicy::Paper).unwrap();
+        check_invariants(&times, &p);
+        assert!(respects_dag(&p, &edges));
+        // identical cuts to the edge-blind policy: contiguity over a topo
+        // order is already convex, the DAG mode only *verifies* it
+        assert_eq!(p, paper_policy(&times, 2));
+
+        let backwards = [(3usize, 1usize)];
+        let err =
+            partition_dag(&times, &backwards, 2, crate::config::PartitionPolicy::Paper)
+                .unwrap_err();
+        assert!(matches!(err, crate::CourierError::Dag(_)), "{err}");
+
+        let out_of_range = [(0usize, 9usize)];
+        assert!(partition_dag(&times, &out_of_range, 2, crate::config::PartitionPolicy::Paper)
+            .is_err());
+    }
+
+    #[test]
+    fn respects_dag_detects_backwards_cut() {
+        // stage layout {1} {0}: edge 0 -> 1 points backwards across it
+        assert!(!respects_dag(&[1..2, 0..1], &[(0, 1)]));
+        assert!(respects_dag(&[0..1, 1..2], &[(0, 1)]));
+        // uncovered endpoint fails rather than passing silently
+        assert!(!respects_dag(&[0..1], &[(0, 1)]));
     }
 
     use crate::util::testing::{forall, vec_u64};

@@ -48,6 +48,11 @@ impl TaskSpec {
     }
 }
 
+/// One dataflow edge at original-step granularity: `(producer step, or
+/// None for the external input frame, consumer step)`.  Edge order is
+/// argument order per consumer.
+pub type PlanEdge = (Option<usize>, usize);
+
 /// One pipeline stage: consecutive tasks executed by one filter.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StageSpec {
@@ -61,7 +66,7 @@ pub struct StageSpec {
 }
 
 impl StageSpec {
-    /// Estimated stage service time, ns.
+    /// Estimated stage service time, ns (tasks back to back).
     pub fn est_ns(&self) -> u64 {
         self.tasks.iter().map(|t| t.est_ns).sum()
     }
@@ -69,6 +74,67 @@ impl StageSpec {
     /// True iff any task runs on the fabric.
     pub fn has_hw(&self) -> bool {
         self.tasks.iter().any(|t| matches!(t.kind, TaskKind::Hw { .. }))
+    }
+
+    /// Group this stage's tasks into independent fork-join branches:
+    /// weakly connected components of the task-dependency subgraph
+    /// restricted to the stage, each component listed in task order.  A
+    /// linear chain always yields one branch; sibling sub-flows (e.g. the
+    /// two Sobel gradients) land in separate branches the runtime
+    /// executes concurrently.
+    pub fn branches(&self, edges: &[PlanEdge]) -> Vec<Vec<usize>> {
+        let n = self.tasks.len();
+        // union-find over task indices
+        let mut parent: Vec<usize> = (0..n).collect();
+        fn find(parent: &mut [usize], i: usize) -> usize {
+            let mut i = i;
+            while parent[i] != i {
+                parent[i] = parent[parent[i]];
+                i = parent[i];
+            }
+            i
+        }
+        let owner = |step: usize| self.tasks.iter().position(|t| t.covers.contains(&step));
+        for (p, c) in edges {
+            let Some(p) = p else { continue };
+            if let (Some(a), Some(b)) = (owner(*p), owner(*c)) {
+                if a != b {
+                    let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+                    parent[ra] = rb;
+                }
+            }
+        }
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut root_of: Vec<Option<usize>> = vec![None; n];
+        for i in 0..n {
+            let r = find(&mut parent, i);
+            match root_of[r] {
+                Some(g) => groups[g].push(i),
+                None => {
+                    root_of[r] = Some(groups.len());
+                    groups.push(vec![i]);
+                }
+            }
+        }
+        groups
+    }
+
+    /// Estimated stage service time under fork-join execution: branches
+    /// run concurrently, so the stage takes its longest branch.  Equals
+    /// [`Self::est_ns`] whenever the stage is a single branch (every
+    /// linear chain), keeping chain simulations bit-identical.
+    ///
+    /// Known model limit: sibling branches placing hardware tasks on the
+    /// *same* fabric module still serialize on that module's single
+    /// request thread at run time, so max-branch underestimates that
+    /// corner; the tuner's measured-validation gate bounds the damage
+    /// (a sim-winner measuring >10% slower than the seed is demoted).
+    pub fn fork_join_ns(&self, edges: &[PlanEdge]) -> u64 {
+        self.branches(edges)
+            .iter()
+            .map(|b| b.iter().map(|&i| self.tasks[i].est_ns).sum::<u64>())
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -81,19 +147,128 @@ pub struct StagePlan {
     pub threads: usize,
     /// Token-pool depth.
     pub tokens: usize,
+    /// Explicit dataflow edges for non-linear flows.  **Empty means the
+    /// implicit linear chain** over the flattened cover sequence (the
+    /// pre-DAG wiring), which keeps linear plans' JSON byte-identical;
+    /// use [`Self::effective_edges`] to read the wiring either way.
+    pub edges: Vec<PlanEdge>,
     /// Stages in order.
     pub stages: Vec<StageSpec>,
 }
 
 impl StagePlan {
-    /// Estimated steady-state frame interval = bottleneck stage, ns.
-    pub fn bottleneck_ns(&self) -> u64 {
-        self.stages.iter().map(StageSpec::est_ns).max().unwrap_or(0)
+    /// The flattened original-step sequence, stage by stage, task by task.
+    pub fn flat_covers(&self) -> Vec<usize> {
+        self.stages
+            .iter()
+            .flat_map(|s| &s.tasks)
+            .flat_map(|t| t.covers.iter().copied())
+            .collect()
     }
 
-    /// Estimated single-frame latency = sum of stages, ns.
+    /// The implicit linear-chain edge set over [`Self::flat_covers`].
+    pub fn chain_edges(&self) -> Vec<PlanEdge> {
+        let steps = self.flat_covers();
+        let mut out = Vec::with_capacity(steps.len());
+        let mut prev: Option<usize> = None;
+        for &s in &steps {
+            out.push((prev, s));
+            prev = Some(s);
+        }
+        out
+    }
+
+    /// The wiring in force: explicit edges, or the implicit chain when
+    /// `edges` is empty.
+    pub fn effective_edges(&self) -> Vec<PlanEdge> {
+        if self.edges.is_empty() {
+            self.chain_edges()
+        } else {
+            self.edges.clone()
+        }
+    }
+
+    /// Is this plan wired as a simple linear chain?
+    pub fn is_chain(&self) -> bool {
+        self.edges.is_empty() || self.edges == self.chain_edges()
+    }
+
+    /// Check DAG legality of the plan's wiring: every referenced step is
+    /// covered exactly once, no edge points backwards across the task
+    /// order (and therefore across any stage cut — stages are convex
+    /// intervals of the task order), and no fused task is tapped from
+    /// outside on an interior cover (its module only exposes the final
+    /// output).  Duplicate `(producer, consumer)` edges are legal: they
+    /// wire one buffer into two argument positions (the builder clones
+    /// all but the final occurrence).  Violations are typed
+    /// [`crate::CourierError::Dag`] — the pre-DAG path would have
+    /// silently mis-wired them instead.
+    pub fn validate_dag(&self) -> Result<()> {
+        use std::collections::HashMap;
+        // step -> (flat task index, is the task's last cover)
+        let mut pos: HashMap<usize, (usize, bool)> = HashMap::new();
+        let mut task_idx = 0usize;
+        for s in &self.stages {
+            for t in &s.tasks {
+                for (i, &c) in t.covers.iter().enumerate() {
+                    if pos.insert(c, (task_idx, i + 1 == t.covers.len())).is_some() {
+                        return Err(crate::CourierError::Dag(format!(
+                            "plan {}: step {c} covered more than once",
+                            self.program
+                        )));
+                    }
+                }
+                task_idx += 1;
+            }
+        }
+        for (p, c) in self.effective_edges() {
+            let Some(&(ct, _)) = pos.get(&c) else {
+                return Err(crate::CourierError::Dag(format!(
+                    "plan {}: edge consumer step {c} is not covered by any task",
+                    self.program
+                )));
+            };
+            let Some(p) = p else { continue };
+            let Some(&(pt, p_is_last)) = pos.get(&p) else {
+                return Err(crate::CourierError::Dag(format!(
+                    "plan {}: edge producer step {p} is not covered by any task",
+                    self.program
+                )));
+            };
+            if pt == ct {
+                continue; // internal to one (fused) task
+            }
+            if pt > ct {
+                return Err(crate::CourierError::Dag(format!(
+                    "plan {}: edge step {p} -> step {c} points backwards across \
+                     the stage order",
+                    self.program
+                )));
+            }
+            if !p_is_last {
+                return Err(crate::CourierError::Dag(format!(
+                    "plan {}: step {c} taps step {p} inside a fused task; only \
+                     the fused task's final output is exposed",
+                    self.program
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Estimated steady-state frame interval = bottleneck stage, ns
+    /// (fork-join aware: a stage of parallel branches costs its longest
+    /// branch).
+    pub fn bottleneck_ns(&self) -> u64 {
+        let edges = self.effective_edges();
+        self.stages.iter().map(|s| s.fork_join_ns(&edges)).max().unwrap_or(0)
+    }
+
+    /// Estimated single-frame latency = sum of stages, ns (fork-join
+    /// aware, like [`Self::bottleneck_ns`]).
     pub fn latency_ns(&self) -> u64 {
-        self.stages.iter().map(StageSpec::est_ns).sum()
+        let edges = self.effective_edges();
+        self.stages.iter().map(|s| s.fork_join_ns(&edges)).sum()
     }
 
     /// Estimated pipelined speed-up over the sequential original.
@@ -170,13 +345,37 @@ impl StagePlan {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut members = vec![
             ("program", Json::Str(self.program.clone())),
             ("threads", Json::Num(self.threads as f64)),
             ("tokens", Json::Num(self.tokens as f64)),
-            ("stages", Json::Arr(stages)),
-        ])
-        .to_string_pretty()
+        ];
+        // linear chains omit the field entirely: their serialization must
+        // stay byte-identical to the pre-DAG format
+        if !self.edges.is_empty() {
+            members.push((
+                "edges",
+                Json::Arr(
+                    self.edges
+                        .iter()
+                        .map(|(p, c)| {
+                            Json::obj(vec![
+                                (
+                                    "from",
+                                    match p {
+                                        Some(p) => Json::Num(*p as f64),
+                                        None => Json::Null,
+                                    },
+                                ),
+                                ("to", Json::Num(*c as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        members.push(("stages", Json::Arr(stages)));
+        Json::obj(members).to_string_pretty()
     }
 
     /// Parse a plan back (hand-edited plans for `courier build --plan`).
@@ -220,10 +419,25 @@ impl StagePlan {
                 })
             })
             .collect::<Result<_>>()?;
+        let edges = match v.get("edges") {
+            Some(ev) => ev
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    let from = match e.req("from")? {
+                        Json::Null => None,
+                        other => Some(other.as_usize()?),
+                    };
+                    Ok((from, e.req("to")?.as_usize()?))
+                })
+                .collect::<Result<_>>()?,
+            None => Vec::new(),
+        };
         Ok(StagePlan {
             program: v.req("program")?.as_str()?.to_string(),
             threads: v.req("threads")?.as_usize()?,
             tokens: v.req("tokens")?.as_usize()?,
+            edges,
             stages,
         })
     }
@@ -238,6 +452,7 @@ pub(crate) mod tests {
             program: "cornerHarris_Demo".into(),
             threads: 2,
             tokens: 4,
+            edges: Vec::new(),
             stages: vec![
                 StageSpec {
                     index: 0,
@@ -323,5 +538,112 @@ pub(crate) mod tests {
         let s = p.to_json();
         let back = StagePlan::from_json(&s).unwrap();
         assert_eq!(back, p);
+    }
+
+    /// A fork-join plan: one stage holding the two sibling Sobel branches.
+    pub(crate) fn dag_plan() -> StagePlan {
+        let sw = |covers: Vec<usize>, sym: &str, ms: u64| TaskSpec {
+            covers,
+            symbol: sym.into(),
+            kind: TaskKind::Sw,
+            est_ns: ms * 1_000_000,
+        };
+        StagePlan {
+            program: "harrisDag_Demo".into(),
+            threads: 2,
+            tokens: 4,
+            edges: vec![
+                (None, 0),
+                (Some(0), 1),
+                (Some(0), 2),
+                (Some(1), 3),
+                (Some(2), 3),
+                (Some(3), 4),
+            ],
+            stages: vec![
+                StageSpec {
+                    index: 0,
+                    serial: true,
+                    tasks: vec![sw(vec![0], "cv::cvtColor", 10)],
+                },
+                StageSpec {
+                    index: 1,
+                    serial: false,
+                    tasks: vec![sw(vec![1], "cv::Sobel", 30), sw(vec![2], "cv::SobelY", 20)],
+                },
+                StageSpec {
+                    index: 2,
+                    serial: true,
+                    tasks: vec![
+                        sw(vec![3], "cv::harrisResponse", 40),
+                        sw(vec![4], "cv::normalize", 5),
+                    ],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn linear_plan_json_omits_edges() {
+        let p = demo_plan();
+        assert!(p.is_chain());
+        assert!(!p.to_json().contains("edges"), "chain plans must keep the pre-DAG format");
+    }
+
+    #[test]
+    fn dag_plan_edges_roundtrip_and_validate() {
+        let p = dag_plan();
+        assert!(!p.is_chain());
+        p.validate_dag().unwrap();
+        let back = StagePlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.edges, p.edges, "edge order (argument order) must survive JSON");
+    }
+
+    #[test]
+    fn fork_join_branches_and_durations() {
+        let p = dag_plan();
+        let edges = p.effective_edges();
+        // stage 1: the two sobels are independent branches
+        assert_eq!(p.stages[1].branches(&edges), vec![vec![0], vec![1]]);
+        assert_eq!(p.stages[1].fork_join_ns(&edges), 30_000_000);
+        // stage 2: harrisResponse -> normalize is one chain branch
+        assert_eq!(p.stages[2].branches(&edges), vec![vec![0, 1]]);
+        assert_eq!(p.stages[2].fork_join_ns(&edges), 45_000_000);
+        // plan-level rollups are fork-join aware
+        assert_eq!(p.bottleneck_ns(), 45_000_000);
+        assert_eq!(p.latency_ns(), 10_000_000 + 30_000_000 + 45_000_000);
+    }
+
+    #[test]
+    fn validate_dag_rejects_backwards_and_tapped_fusions() {
+        let mut p = dag_plan();
+        p.edges.push((Some(4), 1));
+        let err = p.validate_dag().unwrap_err();
+        assert!(matches!(err, crate::CourierError::Dag(_)), "{err}");
+
+        // fuse steps 3+4 into one task, then tap the interior step 3
+        let mut p = dag_plan();
+        let norm = p.stages[2].tasks.remove(1);
+        p.stages[2].tasks[0].covers.push(4);
+        p.stages[2].tasks[0].symbol = format!("{}+{}", p.stages[2].tasks[0].symbol, norm.symbol);
+        p.edges.push((Some(3), 5));
+        p.stages.push(StageSpec {
+            index: 3,
+            serial: true,
+            tasks: vec![TaskSpec {
+                covers: vec![5],
+                symbol: "cv::convertScaleAbs".into(),
+                kind: TaskKind::Sw,
+                est_ns: 1,
+            }],
+        });
+        let err = p.validate_dag().unwrap_err();
+        assert!(err.to_string().contains("fused"), "{err}");
+
+        // a step covered twice is rejected
+        let mut p = dag_plan();
+        p.stages[0].tasks[0].covers.push(1);
+        assert!(p.validate_dag().is_err());
     }
 }

@@ -65,7 +65,12 @@ impl SimResult {
 /// fabric unit (serialising requests *to the same module* across stages).
 pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize) -> SimResult {
     let n_stages = plan.stages.len();
-    let stage_ns: Vec<u64> = plan.stages.iter().map(|s| s.est_ns()).collect();
+    // fork-join aware: a stage of independent branches (sibling sub-flows
+    // of a DAG plan) costs its longest branch, because the runtime
+    // executes branches concurrently.  For linear chains this equals the
+    // plain task sum, keeping chain makespans bit-identical.
+    let edges = plan.effective_edges();
+    let stage_ns: Vec<u64> = plan.stages.iter().map(|s| s.fork_join_ns(&edges)).collect();
     // fabric unit id per stage (stages sharing a module serialize on it)
     let mut module_names: Vec<String> = Vec::new();
     let stage_units: Vec<Vec<usize>> = plan
@@ -211,6 +216,7 @@ pub fn paper_table1_plan() -> StagePlan {
         program: "paper_table1".into(),
         threads: 2,
         tokens: 4,
+        edges: Vec::new(),
         stages: vec![
             StageSpec {
                 index: 0,
@@ -248,6 +254,7 @@ mod tests {
             program: "t".into(),
             threads: 2,
             tokens: 4,
+            edges: Vec::new(),
             stages: stage_ms
                 .iter()
                 .enumerate()
@@ -333,6 +340,31 @@ mod tests {
     }
 
     #[test]
+    fn fork_join_stage_costs_its_longest_branch() {
+        // the dag_plan fixture: stage 1 holds two sibling Sobel branches
+        // (30 ms + 20 ms) which fork-join to 30 ms, and the tail chain is
+        // 45 ms — the simulated interval must track max-branch, not sum
+        let p = crate::pipeline::plan::tests::dag_plan();
+        let r = simulate(&p, 32, 3, 4);
+        let interval = r.frame_interval_ns as f64 / 1e6;
+        assert!((44.0..50.0).contains(&interval), "{interval}");
+        // were the siblings summed (the pre-DAG model), stage 1 would be
+        // 50 ms and dominate
+        assert!(r.frame_interval_ns < 50_000_000, "{}", r.frame_interval_ns);
+    }
+
+    #[test]
+    fn linear_chain_makespans_unchanged_by_edge_awareness() {
+        // a chain plan with explicit chain edges simulates identically to
+        // the same plan with implicit (empty) edges
+        let mut p = plan_of(&[10, 20, 10], true);
+        let implicit = simulate(&p, 16, 2, 4);
+        p.edges = p.chain_edges();
+        let explicit = simulate(&p, 16, 2, 4);
+        assert_eq!(implicit, explicit);
+    }
+
+    #[test]
     fn shared_module_across_stages_serializes() {
         use crate::pipeline::plan::{StageSpec, TaskSpec};
         let hw = |module: &str| TaskSpec {
@@ -346,6 +378,7 @@ mod tests {
             program: "t".into(),
             threads: 4,
             tokens: 8,
+            edges: Vec::new(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: vec![hw("m0")] },
                 StageSpec { index: 1, serial: false, tasks: vec![hw("m0")] },

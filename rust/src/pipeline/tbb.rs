@@ -30,12 +30,14 @@ pub enum FilterMode {
     Parallel,
 }
 
-/// One pipeline stage body.
-pub trait StageFilter: Send + Sync {
+/// One pipeline stage body over payload `P` (defaults to a single `Mat`
+/// frame — the linear-chain wiring; the DAG-aware builder runs the same
+/// runtime over a multi-buffer frame environment).
+pub trait StageFilter<P = Mat>: Send + Sync {
     /// Scheduling mode.
     fn mode(&self) -> FilterMode;
     /// Process one token.
-    fn apply(&self, input: Mat) -> Result<Mat>;
+    fn apply(&self, input: P) -> Result<P>;
     /// Stage label for stats/rendering.
     fn name(&self) -> String {
         "stage".into()
@@ -43,7 +45,7 @@ pub trait StageFilter: Send + Sync {
 }
 
 /// A closure-backed filter (tests, benches, quick assemblies).
-pub struct FnFilter<F: Fn(Mat) -> Result<Mat> + Send + Sync> {
+pub struct FnFilter<F> {
     /// Scheduling mode.
     pub mode: FilterMode,
     /// Stage label.
@@ -52,11 +54,11 @@ pub struct FnFilter<F: Fn(Mat) -> Result<Mat> + Send + Sync> {
     pub f: F,
 }
 
-impl<F: Fn(Mat) -> Result<Mat> + Send + Sync> StageFilter for FnFilter<F> {
+impl<P, F: Fn(P) -> Result<P> + Send + Sync> StageFilter<P> for FnFilter<F> {
     fn mode(&self) -> FilterMode {
         self.mode
     }
-    fn apply(&self, input: Mat) -> Result<Mat> {
+    fn apply(&self, input: P) -> Result<P> {
         (self.f)(input)
     }
     fn name(&self) -> String {
@@ -142,9 +144,9 @@ impl PipelineStats {
     }
 }
 
-struct Shared {
+struct Shared<P> {
     /// Per-stage input queues keyed by token seq.
-    queues: Vec<Mutex<BTreeMap<u64, Mat>>>,
+    queues: Vec<Mutex<BTreeMap<u64, P>>>,
     /// Next token a serial stage must take.
     next_seq: Vec<AtomicU64>,
     /// Serial stage currently busy?
@@ -154,7 +156,7 @@ struct Shared {
     /// High-water mark of `in_flight`.
     peak_in_flight: AtomicUsize,
     /// Completed outputs keyed by seq.
-    outputs: Mutex<BTreeMap<u64, Mat>>,
+    outputs: Mutex<BTreeMap<u64, P>>,
     /// First error (poisons the run).
     error: Mutex<Option<CourierError>>,
     /// Recorded spans.
@@ -163,22 +165,27 @@ struct Shared {
     input_done: AtomicBool,
 }
 
-impl Shared {
+impl<P> Shared<P> {
     fn poisoned(&self) -> bool {
         self.error.lock().expect("error lock").is_some()
     }
 }
 
-/// The pipeline: filters + worker/token configuration.
-pub struct TokenPipeline {
-    filters: Vec<Box<dyn StageFilter>>,
+/// The pipeline: filters + worker/token configuration, generic over the
+/// token payload (a `Mat` frame by default).
+pub struct TokenPipeline<P = Mat> {
+    filters: Vec<Box<dyn StageFilter<P>>>,
     threads: usize,
     tokens: usize,
 }
 
-impl TokenPipeline {
+impl<P: Send> TokenPipeline<P> {
     /// Assemble a pipeline.  `threads >= 1`, `tokens >= 1`.
-    pub fn new(filters: Vec<Box<dyn StageFilter>>, threads: usize, tokens: usize) -> Result<Self> {
+    pub fn new(
+        filters: Vec<Box<dyn StageFilter<P>>>,
+        threads: usize,
+        tokens: usize,
+    ) -> Result<Self> {
         if filters.is_empty() {
             return Err(CourierError::Pipeline("pipeline needs >= 1 stage".into()));
         }
@@ -196,7 +203,7 @@ impl TokenPipeline {
 
     /// Process one frame synchronously through all stages on the calling
     /// thread (the blocking single-call path of the off-load wrapper).
-    pub fn process_one(&self, input: Mat) -> Result<Mat> {
+    pub fn process_one(&self, input: P) -> Result<P> {
         let mut cur = input;
         for f in &self.filters {
             cur = f.apply(cur)?;
@@ -206,7 +213,7 @@ impl TokenPipeline {
 
     /// Run a batch of frames through the pipeline, returning outputs in
     /// input order plus run statistics.
-    pub fn run(&self, inputs: Vec<Mat>) -> Result<(Vec<Mat>, PipelineStats)> {
+    pub fn run(&self, inputs: Vec<P>) -> Result<(Vec<P>, PipelineStats)> {
         let n_stages = self.filters.len();
         let shared = Shared {
             queues: (0..n_stages).map(|_| Mutex::new(BTreeMap::new())).collect(),
@@ -220,7 +227,7 @@ impl TokenPipeline {
             input_done: AtomicBool::new(false),
         };
         let total = inputs.len() as u64;
-        let feed: Mutex<std::vec::IntoIter<Mat>> = Mutex::new(inputs.into_iter());
+        let feed: Mutex<std::vec::IntoIter<P>> = Mutex::new(inputs.into_iter());
         let next_inject = AtomicU64::new(0);
         let epoch = Instant::now();
 
@@ -233,7 +240,7 @@ impl TokenPipeline {
         if let Some(err) = shared.error.lock().expect("error lock").take() {
             return Err(err);
         }
-        let outputs: Vec<Mat> = std::mem::take(&mut *shared.outputs.lock().expect("outputs lock"))
+        let outputs: Vec<P> = std::mem::take(&mut *shared.outputs.lock().expect("outputs lock"))
             .into_values()
             .collect();
         let stats = PipelineStats {
@@ -247,8 +254,8 @@ impl TokenPipeline {
 
     fn worker(
         &self,
-        shared: &Shared,
-        feed: &Mutex<std::vec::IntoIter<Mat>>,
+        shared: &Shared<P>,
+        feed: &Mutex<std::vec::IntoIter<P>>,
         next_inject: &AtomicU64,
         total: u64,
         epoch: Instant,
@@ -324,7 +331,7 @@ impl TokenPipeline {
     }
 
     /// Try to claim one runnable token for `stage`.
-    fn try_take(&self, shared: &Shared, stage: usize) -> Option<(u64, Mat)> {
+    fn try_take(&self, shared: &Shared<P>, stage: usize) -> Option<(u64, P)> {
         let mode = self.filters[stage].mode();
         let mut q = shared.queues[stage].lock().expect("queue lock");
         match mode {
@@ -351,7 +358,7 @@ impl TokenPipeline {
         }
     }
 
-    fn execute(&self, shared: &Shared, stage: usize, seq: u64, mat: Mat, epoch: Instant) {
+    fn execute(&self, shared: &Shared<P>, stage: usize, seq: u64, mat: P, epoch: Instant) {
         let start_ns = epoch.elapsed().as_nanos() as u64;
         let result = self.filters[stage].apply(mat);
         let end_ns = epoch.elapsed().as_nanos() as u64;

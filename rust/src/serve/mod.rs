@@ -158,6 +158,9 @@ impl Server {
                 &eff_cfg,
                 cal.as_ref(),
             )?;
+            // the trace cannot tell a trailing dead branch from the real
+            // output; confirm against the program before serving
+            built.check_output_matches(&spec.program)?;
             Ok(Arc::new(built))
         })?;
         let open_ns = t0.elapsed().as_nanos() as u64;

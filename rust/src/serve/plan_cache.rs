@@ -191,8 +191,7 @@ impl PlanCache {
 mod tests {
     use super::*;
     use crate::app::parse_program;
-    use crate::image::Mat;
-    use crate::pipeline::{FilterMode, FnFilter, StageFilter, StagePlan, TokenPipeline};
+    use crate::pipeline::{FilterMode, FnFilter, FrameEnv, StageFilter, StagePlan, TokenPipeline};
 
     fn key(name: &str) -> PlanKey {
         let prog = parse_program(&format!(
@@ -203,15 +202,20 @@ mod tests {
     }
 
     fn tiny_pipeline() -> Arc<BuiltPipeline> {
-        let plan =
-            StagePlan { program: "t".into(), threads: 1, tokens: 1, stages: vec![] };
-        let id: Box<dyn StageFilter> = Box::new(FnFilter {
+        let plan = StagePlan {
+            program: "t".into(),
+            threads: 1,
+            tokens: 1,
+            edges: Vec::new(),
+            stages: vec![],
+        };
+        let id: Box<dyn StageFilter<FrameEnv>> = Box::new(FnFilter {
             mode: FilterMode::SerialInOrder,
             label: "id".into(),
-            f: |m: Mat| Ok(m),
+            f: |e: FrameEnv| Ok(e),
         });
         let pipeline = TokenPipeline::new(vec![id], 1, 1).unwrap();
-        Arc::new(BuiltPipeline { plan, pipeline, control_program: String::new() })
+        Arc::new(BuiltPipeline { plan, pipeline, control_program: String::new(), terminal_step: 0 })
     }
 
     #[test]

@@ -215,6 +215,51 @@ pub fn corner_harris(img: &Mat, k: f32) -> Result<Mat> {
     Ok(out)
 }
 
+/// Harris-Stephens response from precomputed gradient images —
+/// the two-input fan-in of the DAG-shaped Harris flow (`gray →
+/// {Sobel dx, Sobel dy} → response`).  Window sums use the same
+/// unnormalized 3x3 box as [`corner_harris`], but over replicate-border
+/// gradients the caller already produced: this is the *separated*
+/// formulation, numerically distinct from the fused kernel at borders.
+pub fn harris_response(ix: &Mat, iy: &Mat, k: f32) -> Result<Mat> {
+    expect_gray(ix, "harris_response")?;
+    expect_gray(iy, "harris_response")?;
+    if ix.shape() != iy.shape() {
+        return Err(CourierError::ShapeMismatch {
+            context: "harris_response".into(),
+            expected: format!("{:?}", ix.shape()),
+            got: format!("{:?}", iy.shape()),
+        });
+    }
+    let (h, w) = (ix.height(), ix.width());
+    let mut pxx = Mat::zeros(&[h, w]);
+    let mut pyy = Mat::zeros(&[h, w]);
+    let mut pxy = Mat::zeros(&[h, w]);
+    {
+        let (xs, ys) = (ix.as_slice(), iy.as_slice());
+        let (dxx, dyy, dxy) = (pxx.as_mut_slice(), pyy.as_mut_slice(), pxy.as_mut_slice());
+        for i in 0..h * w {
+            dxx[i] = xs[i] * xs[i];
+            dyy[i] = ys[i] * ys[i];
+            dxy[i] = xs[i] * ys[i];
+        }
+    }
+    let box3 = [[1.0f32; 3]; 3];
+    let sxx = conv3x3(&pxx, &box3);
+    let syy = conv3x3(&pyy, &box3);
+    let sxy = conv3x3(&pxy, &box3);
+    let mut out = Mat::zeros(&[h, w]);
+    {
+        let (a, b, c) = (sxx.as_slice(), syy.as_slice(), sxy.as_slice());
+        let dst = out.as_mut_slice();
+        for i in 0..h * w {
+            let tr = a[i] + b[i];
+            dst[i] = (a[i] * b[i] - c[i] * c[i]) - k * tr * tr;
+        }
+    }
+    Ok(out)
+}
+
 /// Replicate-pad by `p` pixels on each spatial side.
 fn edge_pad2(img: &Mat, p: usize) -> Mat {
     let (h, w) = (img.height(), img.width());
@@ -399,6 +444,22 @@ mod tests {
             }
         }
         assert!(best.0.abs_diff(8) <= 2 && best.1.abs_diff(8) <= 2, "peak at {best:?}");
+    }
+
+    #[test]
+    fn harris_response_flat_is_zero_and_rejects_mismatch() {
+        let zx = Mat::zeros(&[8, 8]);
+        let zy = Mat::zeros(&[8, 8]);
+        let r = harris_response(&zx, &zy, HARRIS_K).unwrap();
+        assert_eq!(r.max_abs_diff(&Mat::zeros(&[8, 8])), 0.0);
+        assert!(harris_response(&zx, &Mat::zeros(&[4, 4]), HARRIS_K).is_err());
+
+        // corner-ish gradients produce a nonzero response somewhere
+        let img = synth::noise_gray(12, 12, 9);
+        let ix = sobel(&img, 1, 0).unwrap();
+        let iy = sobel(&img, 0, 1).unwrap();
+        let r = harris_response(&ix, &iy, HARRIS_K).unwrap();
+        assert!(r.as_slice().iter().any(|v| v.abs() > 0.0));
     }
 
     #[test]

@@ -70,6 +70,11 @@ impl Registry {
             Arc::new(|a: &[&Mat]| imgproc::corner_harris(a[0], imgproc::HARRIS_K)),
         );
         r.register(
+            "cv::harrisResponse",
+            2,
+            Arc::new(|a: &[&Mat]| imgproc::harris_response(a[0], a[1], imgproc::HARRIS_K)),
+        );
+        r.register(
             "cv::normalize",
             1,
             Arc::new(|a: &[&Mat]| imgproc::normalize(a[0], 0.0, 255.0)),

@@ -110,13 +110,17 @@ pub struct Trace {
 
 impl Trace {
     /// Number of frames observed, inferred from call-site repetition: the
-    /// trace has one frame per repetition of the smallest step index.
+    /// most-repeated step index bounds the frame count from below and is
+    /// exact for every attach point.  (Counting only the smallest step
+    /// undercounts when the tracer attaches mid-frame: the partial first
+    /// frame never reaches the early steps, but its tail steps still
+    /// repeat once per frame.)
     pub fn frames(&self) -> usize {
-        if self.events.is_empty() {
-            return 0;
+        let mut per_step: std::collections::HashMap<usize, usize> = Default::default();
+        for e in &self.events {
+            *per_step.entry(e.step).or_insert(0) += 1;
         }
-        let first = self.events.iter().map(|e| e.step).min().expect("non-empty");
-        self.events.iter().filter(|e| e.step == first).count()
+        per_step.values().copied().max().unwrap_or(0)
     }
 
     /// Total traced time across all events, ns.
@@ -172,6 +176,29 @@ mod tests {
         };
         assert_eq!(t.frames(), 2);
         assert_eq!(t.total_ns(), 20);
+    }
+
+    #[test]
+    fn frames_counts_partial_first_frame() {
+        // tracer attached mid-frame: the first frame only shows steps 2, 3;
+        // three full frames follow for those steps — the old
+        // smallest-step-repetition rule reported 2, not 3
+        let t = Trace {
+            program: "p".into(),
+            events: vec![
+                ev(0, 2, "c"),
+                ev(1, 3, "d"),
+                ev(2, 0, "a"),
+                ev(3, 1, "b"),
+                ev(4, 2, "c"),
+                ev(5, 3, "d"),
+                ev(6, 0, "a"),
+                ev(7, 1, "b"),
+                ev(8, 2, "c"),
+                ev(9, 3, "d"),
+            ],
+        };
+        assert_eq!(t.frames(), 3);
     }
 
     #[test]

@@ -85,16 +85,52 @@ impl CallGraph {
         // input hashes.  Logical data edges are keyed by
         // (producer site or None, consumer site, arg shape) and
         // deduplicated across frames.
+        // A tracer attached mid-frame records a partial first frame whose
+        // inputs' real producers ran before the attach: reconstructing
+        // edges from those events would fabricate external inputs (and
+        // extra argument slots) for interior steps.  When a later frame
+        // boundary proves the trace starts mid-frame, the leading partial
+        // frame is excluded from edge reconstruction (function timing
+        // stats above still use every event).
+        let min_step = trace.events.iter().map(|e| e.step).min().unwrap_or(0);
+        let skip = if trace.events.first().is_some_and(|e| e.step != min_step) {
+            trace
+                .events
+                .windows(2)
+                .position(|w| w[1].step <= w[0].step)
+                .map(|i| i + 1)
+                .unwrap_or(0)
+        } else {
+            0
+        };
+
         let mut producer_of_hash: HashMap<u64, usize> = HashMap::new();
+        // Logical edges are keyed by (producer site, consumer site, arg
+        // position): the arg position keeps a call that reads the same
+        // buffer in two argument slots (f(x, x)) as two edges — the
+        // duplicate-edge wiring the plan layer explicitly supports —
+        // while still deduplicating across frames.
         #[allow(clippy::type_complexity)]
-        let mut edges: HashMap<(Option<usize>, usize), (DataDesc, Vec<usize>)> = HashMap::new();
-        let mut edge_order: Vec<(Option<usize>, usize)> = Vec::new();
-        for e in &trace.events {
+        let mut edges: HashMap<(Option<usize>, usize, usize), (DataDesc, Vec<usize>)> =
+            HashMap::new();
+        let mut edge_order: Vec<(Option<usize>, usize, usize)> = Vec::new();
+        let mut prev_step: Option<usize> = None;
+        for e in &trace.events[skip..] {
+            // Frame boundary: call sites replay in ascending step order
+            // within one frame, so a non-increasing step index means a new
+            // frame began.  Producer hashes must not survive the boundary:
+            // an output hash from frame N matching an input in frame N+1
+            // would fabricate a cross-frame (often *backwards*) edge the
+            // "later in the same frame" rule above explicitly excludes.
+            if prev_step.is_some_and(|prev| e.step <= prev) {
+                producer_of_hash.clear();
+            }
+            prev_step = Some(e.step);
             let consumer = step_to_id[&e.step];
-            for input in &e.inputs {
+            for (arg_pos, input) in e.inputs.iter().enumerate() {
                 let producer = producer_of_hash.get(&input.hash).copied();
                 let key_site = producer.map(|p| funcs[p].step);
-                let key = (key_site, e.step);
+                let key = (key_site, e.step, arg_pos);
                 let entry = edges.entry(key).or_insert_with(|| {
                     edge_order.push(key);
                     (input.clone(), Vec::new())
@@ -106,27 +142,46 @@ impl CallGraph {
             producer_of_hash.insert(e.output.hash, step_to_id[&e.step]);
         }
 
-        // Terminal outputs: hashes produced but never consumed.
-        let consumed: std::collections::HashSet<u64> = trace
-            .events
-            .iter()
-            .flat_map(|e| e.inputs.iter().map(|d| d.hash))
-            .collect();
+        // Terminal outputs: hashes produced but never consumed *within
+        // their own frame* — the same per-frame scoping as the edge
+        // reconstruction above, so a cross-frame hash collision neither
+        // suppresses a genuine terminal nor fabricates one.  A trailing
+        // partial frame (tracer detached mid-frame) is excluded when a
+        // complete frame exists: its truncation point would otherwise
+        // fabricate a mid-chain terminal.
         let mut terminal: Vec<(usize, DataDesc)> = Vec::new();
         let mut seen_terminal: std::collections::HashSet<usize> = Default::default();
-        for e in &trace.events {
-            if !consumed.contains(&e.output.hash) {
-                let fid = step_to_id[&e.step];
-                if seen_terminal.insert(fid) {
-                    terminal.push((fid, e.output.clone()));
+        let windowed = &trace.events[skip..];
+        let max_step = windowed.iter().map(|e| e.step).max().unwrap_or(0);
+        let mut frame_start = 0usize;
+        while frame_start < windowed.len() {
+            let mut end = frame_start + 1;
+            while end < windowed.len() && windowed[end].step > windowed[end - 1].step {
+                end += 1;
+            }
+            let frame = &windowed[frame_start..end];
+            let trailing_partial = end == windowed.len()
+                && frame_start > 0
+                && frame.last().is_some_and(|e| e.step < max_step);
+            if !trailing_partial {
+                let consumed: std::collections::HashSet<u64> =
+                    frame.iter().flat_map(|e| e.inputs.iter().map(|d| d.hash)).collect();
+                for e in frame {
+                    if !consumed.contains(&e.output.hash) {
+                        let fid = step_to_id[&e.step];
+                        if seen_terminal.insert(fid) {
+                            terminal.push((fid, e.output.clone()));
+                        }
+                    }
                 }
             }
+            frame_start = end;
         }
 
         let mut data = Vec::new();
         for key in &edge_order {
             let (desc, consumers) = &edges[key];
-            let producer = key.0.map(|s| step_to_id[&s]);
+            let producer: Option<usize> = key.0.map(|s| step_to_id[&s]);
             data.push(DataNode {
                 id: data.len(),
                 shape: desc.shape.clone(),
@@ -154,9 +209,9 @@ impl CallGraph {
     }
 
     /// Is the traced flow a simple linear chain (each producer feeds
-    /// exactly the next step)?  Linear chains are what the Pipeline
-    /// Generator currently handles (the paper defers branches/loops to
-    /// future work).
+    /// exactly the next step)?  The Pipeline Generator handles DAGs too;
+    /// linear chains additionally keep the pre-DAG plan serialization
+    /// byte-for-byte.
     pub fn is_linear_chain(&self) -> bool {
         for d in &self.data {
             if d.consumers.len() > 1 {
@@ -237,5 +292,135 @@ mod tests {
         let g = graph_for(16, 16, 2);
         let total: f64 = g.time_shares().iter().map(|(_, s)| s).sum();
         assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    fn raw_event(
+        seq: usize,
+        step: usize,
+        sym: &str,
+        in_hashes: &[u64],
+        out_hash: u64,
+    ) -> crate::trace::CallEvent {
+        let d = |hash: u64| DataDesc { shape: vec![4, 4], bytes: 64, hash };
+        crate::trace::CallEvent {
+            seq,
+            step,
+            symbol: sym.into(),
+            start_ns: seq as u64 * 100,
+            end_ns: seq as u64 * 100 + 10,
+            inputs: in_hashes.iter().map(|&h| d(h)).collect(),
+            output: d(out_hash),
+        }
+    }
+
+    #[test]
+    fn cross_frame_hash_reuse_does_not_fabricate_edges() {
+        // Frame 1: a(ext 0x10) -> 0xA, b(0xA) -> 0xB.
+        // Frame 2: a's external input happens to hash 0xB — identical to
+        // frame 1's *output* of b.  Without the per-frame reset this
+        // matched b as the producer of a, a backwards b -> a edge across
+        // the frame boundary.
+        let t = Trace {
+            program: "leak".into(),
+            events: vec![
+                raw_event(0, 0, "a", &[0x10], 0xA),
+                raw_event(1, 1, "b", &[0xA], 0xB),
+                raw_event(2, 0, "a", &[0xB], 0xC),
+                raw_event(3, 1, "b", &[0xC], 0xD),
+            ],
+        };
+        let g = CallGraph::from_trace(&t);
+        for d in &g.data {
+            if d.consumers.contains(&0) {
+                assert_eq!(
+                    d.producer, None,
+                    "step 0's input must stay external, got fabricated edge: {d:?}"
+                );
+            }
+            if let (Some(p), Some(&c)) = (d.producer, d.consumers.first()) {
+                assert!(p < c, "backwards edge {p} -> {c} leaked across frames: {d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mid_frame_attach_excludes_partial_leading_frame_from_edges() {
+        // attach lands mid-frame: steps 2,3 of frame 0 are recorded, then
+        // two complete frames.  The partial frame's step-2 input has no
+        // visible producer; without the skip it fabricated an extra
+        // external (None, 2) edge that made unary step 2 look binary.
+        let chain = |seq0: usize, frame: u64, steps: std::ops::Range<usize>| {
+            let start = steps.start;
+            steps
+                .map(|s| {
+                    let base = frame * 0x100;
+                    raw_event(
+                        seq0 + s - start,
+                        s,
+                        "f",
+                        &[base + s as u64],
+                        base + s as u64 + 1,
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut events = chain(0, 0, 2..4);
+        events.extend(chain(2, 1, 0..4));
+        events.extend(chain(6, 2, 0..4));
+        let t = Trace { program: "midframe".into(), events };
+        assert_eq!(t.frames(), 3);
+        let g = CallGraph::from_trace(&t);
+        assert_eq!(g.funcs.len(), 4);
+        // step 2 is fed by exactly one data node, produced by step 1
+        let into2: Vec<_> = g.data.iter().filter(|d| d.consumers.contains(&2)).collect();
+        assert_eq!(into2.len(), 1, "fabricated edge from the partial frame: {into2:?}");
+        assert_eq!(into2[0].producer, Some(1));
+        // only the true head consumes the external input
+        for d in &g.data {
+            if d.producer.is_none() {
+                assert_eq!(d.consumers, vec![0], "{d:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_partial_frame_does_not_fabricate_terminals() {
+        // one complete a->b->c->d frame, then the tracer detaches after
+        // step 1 of the next frame: the truncation point must not appear
+        // as a mid-chain terminal output
+        let events = vec![
+            raw_event(0, 0, "a", &[0x10], 0x11),
+            raw_event(1, 1, "b", &[0x11], 0x12),
+            raw_event(2, 2, "c", &[0x12], 0x13),
+            raw_event(3, 3, "d", &[0x13], 0x14),
+            raw_event(4, 0, "a", &[0x20], 0x21),
+            raw_event(5, 1, "b", &[0x21], 0x22),
+        ];
+        let t = Trace { program: "detach".into(), events };
+        let g = CallGraph::from_trace(&t);
+        let terminals: Vec<_> = g.data.iter().filter(|d| d.consumers.is_empty()).collect();
+        assert_eq!(terminals.len(), 1, "detach fabricated a terminal: {terminals:?}");
+        assert_eq!(terminals[0].producer, Some(3));
+    }
+
+    #[test]
+    fn reconstructs_harris_shaped_dag() {
+        let prog = crate::app::harris_dag_demo(8, 10);
+        let inputs = vec![vec![synth::noise_rgb(8, 10, 0)]];
+        let t = trace_program(&prog, &inputs).unwrap();
+        let g = CallGraph::from_trace(&t);
+        assert_eq!(g.funcs.len(), 6);
+        assert!(!g.is_linear_chain(), "harris DAG must not look linear: {g:?}");
+        // gray (produced by step 0) fans out to sobel x (1) and sobel y (2)
+        let fanout: Vec<_> = g.data.iter().filter(|d| d.producer == Some(0)).collect();
+        let consumed_by: Vec<usize> =
+            fanout.iter().flat_map(|d| d.consumers.iter().copied()).collect();
+        assert!(consumed_by.contains(&1) && consumed_by.contains(&2), "{fanout:?}");
+        // the corner response (step 3) consumes both gradients
+        let into_resp: Vec<_> =
+            g.data.iter().filter(|d| d.consumers.contains(&3)).collect();
+        assert_eq!(into_resp.len(), 2, "{into_resp:?}");
+        assert_eq!(into_resp[0].producer, Some(1), "arg order must be Ix first");
+        assert_eq!(into_resp[1].producer, Some(2), "arg order must be Iy second");
     }
 }

@@ -10,7 +10,7 @@
 use crate::image::Mat;
 use crate::ir::Ir;
 use crate::metrics::TunerMetrics;
-use crate::pipeline::{chain_input_shapes, simulate, BuiltPipeline, PipelineStats};
+use crate::pipeline::{primary_input_shapes, simulate, BuiltPipeline, PipelineStats};
 use crate::{CourierError, Result};
 
 use super::cost_db::CalibratedCostDb;
@@ -83,7 +83,7 @@ pub fn calibrate(
         return Err(CourierError::Other("calibration needs at least one frame".into()));
     }
     let n_frames = frames.len() as u64;
-    let shapes = chain_input_shapes(ir)?;
+    let shapes = primary_input_shapes(ir)?;
     let flat_tasks: Vec<_> = built.plan.stages.iter().flat_map(|s| &s.tasks).collect();
     if flat_tasks.len() != shapes.len() || flat_tasks.len() != static_ns.len() {
         return Err(CourierError::Other(format!(

@@ -116,6 +116,7 @@ impl<'a> Tuner<'a> {
             self.cfg,
             pre_cal.as_ref(),
         )?);
+        built_seed.check_output_matches(program)?;
 
         // static estimates in flat task order (cut-independent): the cost
         // database anchors factors to these, never to calibrated values
@@ -300,7 +301,8 @@ impl<'a> Tuner<'a> {
         })
     }
 
-    /// A measurement stream for `program` (single-input linear chains).
+    /// A measurement stream for `program` (single-external-input flows —
+    /// linear chains and DAGs alike).
     fn measure_stream(&self, program: &Program) -> Vec<Mat> {
         synth_frames(program, self.cfg.tune.measure_frames.max(1))
             .into_iter()

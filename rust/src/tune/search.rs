@@ -70,10 +70,13 @@ impl SearchOutcome {
 }
 
 /// Assemble a plan from contiguous task groups (head/tail serial, middle
-/// parallel — the paper's filter modes).
+/// parallel — the paper's filter modes).  `edges` is the seed plan's
+/// dataflow edge set: it is cut-independent (step granularity) and rides
+/// along unchanged so every candidate stays DAG-wired.
 fn plan_from_groups(
     program: &str,
     tasks: &[TaskSpec],
+    edges: &[crate::pipeline::PlanEdge],
     groups: &[std::ops::Range<usize>],
     threads: usize,
     tokens: usize,
@@ -83,6 +86,7 @@ fn plan_from_groups(
         program: program.to_string(),
         threads,
         tokens,
+        edges: edges.to_vec(),
         stages: groups
             .iter()
             .enumerate()
@@ -161,6 +165,28 @@ pub fn search(
     let mut seen: std::collections::HashSet<(Vec<usize>, usize)> = std::collections::HashSet::new();
     seen.insert(config_sig(&groups_of(seed_plan), seed_plan.tokens));
 
+    // The dataflow edge set rides along every candidate unchanged; moves
+    // are additionally *checked* against it at task granularity so the
+    // search can never propose a DAG-illegal cut (contiguity over the
+    // topological task order makes legality automatic, but the guard
+    // turns "automatic" into "verified").
+    let edges = seed_plan.edges.clone();
+    let task_of_step = |step: usize| tasks.iter().position(|t| t.covers.contains(&step));
+    let task_edges: Vec<(usize, usize)> = seed_plan
+        .effective_edges()
+        .iter()
+        .filter_map(|(p, c)| match p {
+            Some(p) => match (task_of_step(*p), task_of_step(*c)) {
+                (Some(a), Some(b)) if a != b => Some((a, b)),
+                _ => None,
+            },
+            None => None,
+        })
+        .collect();
+    let dag_legal = |groups: &[std::ops::Range<usize>]| -> bool {
+        crate::pipeline::respects_dag(groups, &task_edges)
+    };
+
     let mut candidates: Vec<Candidate> = Vec::new();
     let mut push = |cands: &mut Vec<Candidate>, c: Option<Candidate>| -> Option<usize> {
         c.map(|c| {
@@ -215,7 +241,7 @@ pub fn search(
         crate::config::PartitionPolicy::Single,
     ] {
         let groups = partition(&times, threads, policy);
-        if groups.is_empty() {
+        if groups.is_empty() || !dag_legal(&groups) {
             continue;
         }
         for &tokens in &token_ladder {
@@ -227,7 +253,8 @@ pub fn search(
             if !seen.insert(config_sig(&groups, tokens)) {
                 continue;
             }
-            let plan = plan_from_groups(&seed_plan.program, tasks, &groups, threads, tokens);
+            let plan =
+                plan_from_groups(&seed_plan.program, tasks, &edges, &groups, threads, tokens);
             let idx = push(
                 &mut candidates,
                 ev.eval(
@@ -257,12 +284,16 @@ pub fn search(
                 let mut shifted = groups.clone();
                 shifted[b - 1] = shifted[b - 1].start..new_cut;
                 shifted[b] = new_cut..shifted[b].end;
+                if !dag_legal(&shifted) {
+                    continue; // never propose a DAG-illegal boundary move
+                }
                 if !seen.insert(config_sig(&shifted, incumbent.plan.tokens)) {
                     continue; // already scored (e.g. the reverse of an accepted move)
                 }
                 let plan = plan_from_groups(
                     &incumbent.plan.program,
                     tasks,
+                    &edges,
                     &shifted,
                     threads,
                     incumbent.plan.tokens,
@@ -298,12 +329,16 @@ pub fn search(
             let mut fused = groups.clone();
             let merged = fused[b - 1].start..fused[b].end;
             fused.splice(b - 1..=b, [merged]);
+            if !dag_legal(&fused) {
+                continue;
+            }
             if !seen.insert(config_sig(&fused, incumbent.plan.tokens)) {
                 continue;
             }
             let plan = plan_from_groups(
                 &incumbent.plan.program,
                 tasks,
+                &edges,
                 &fused,
                 threads,
                 incumbent.plan.tokens,
@@ -372,7 +407,7 @@ mod tests {
     fn seed_of(tasks: &[TaskSpec], threads: usize, tokens: usize, policy: PartitionPolicy) -> StagePlan {
         let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
         let groups = partition(&times, threads, policy);
-        plan_from_groups("t", tasks, &groups, threads, tokens)
+        plan_from_groups("t", tasks, &[], &groups, threads, tokens)
     }
 
     fn cfg_with(budget: usize) -> Config {
@@ -435,6 +470,35 @@ mod tests {
         assert!(out.candidates.iter().any(|c| c.penalty_ns > 0));
         assert_eq!(winner.penalty_ns, 0);
         assert_eq!(winner.queue_depth, winner.plan.tokens.max(2));
+    }
+
+    #[test]
+    fn dag_seed_candidates_are_all_dag_legal() {
+        // a harris-shaped DAG seed: 0 -> {1, 2} -> 3 -> 4; every candidate
+        // the search scores must keep a legal wiring
+        let tasks = sw_tasks(&[5, 40, 30, 25, 8]);
+        let edges: Vec<crate::pipeline::PlanEdge> = vec![
+            (None, 0),
+            (Some(0), 1),
+            (Some(0), 2),
+            (Some(1), 3),
+            (Some(2), 3),
+            (Some(3), 4),
+        ];
+        let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
+        let groups = partition(&times, 2, PartitionPolicy::Paper);
+        let seed = plan_from_groups("dag", &tasks, &edges, &groups, 2, 4);
+        seed.validate_dag().unwrap();
+
+        let cfg = cfg_with(64);
+        let out = search(&seed, &tasks, &cfg, &TunerMetrics::default());
+        assert!(out.candidates.len() > 1, "search must explore");
+        for c in &out.candidates {
+            c.plan.validate_dag().unwrap_or_else(|e| {
+                panic!("search proposed a DAG-illegal candidate ({}): {e}", c.desc)
+            });
+            assert_eq!(c.plan.edges, edges, "edges must ride along unchanged");
+        }
     }
 
     #[test]

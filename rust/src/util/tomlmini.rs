@@ -28,8 +28,15 @@ pub enum TomlValue {
 
 impl TomlDoc {
     /// Parse a TOML document (flat keys + one level of `[table]` headers).
+    ///
+    /// Duplicate keys and duplicate `[table]` headers are **errors**
+    /// carrying the offending line number, matching real TOML: the old
+    /// silent last-wins overwrite meant a config typo like two `[tune]`
+    /// sections quietly dropped half the settings.
     pub fn parse(text: &str) -> Result<Self> {
         let mut values = BTreeMap::new();
+        let mut first_line: BTreeMap<String, usize> = BTreeMap::new();
+        let mut seen_tables: BTreeMap<String, usize> = BTreeMap::new();
         let mut prefix = String::new();
         for (idx, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
@@ -47,6 +54,12 @@ impl TomlDoc {
                         idx + 1
                     )));
                 }
+                if let Some(first) = seen_tables.insert(name.to_string(), idx + 1) {
+                    return Err(CourierError::Config(format!(
+                        "line {}: duplicate table [{name}] (first defined on line {first})",
+                        idx + 1
+                    )));
+                }
                 prefix = format!("{name}.");
                 continue;
             }
@@ -56,6 +69,12 @@ impl TomlDoc {
             let key = format!("{prefix}{}", k.trim());
             let val = parse_value(v.trim())
                 .ok_or_else(|| CourierError::Config(format!("line {}: bad value {v:?}", idx + 1)))?;
+            if let Some(first) = first_line.insert(key.clone(), idx + 1) {
+                return Err(CourierError::Config(format!(
+                    "line {}: duplicate key {key:?} (first set on line {first})",
+                    idx + 1
+                )));
+            }
             values.insert(key, val);
         }
         Ok(Self { values })
@@ -166,6 +185,30 @@ mod tests {
         assert!(TomlDoc::parse("[]\n").is_err());
         assert!(TomlDoc::parse("key value\n").is_err());
         assert!(TomlDoc::parse("key = @@\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_error_with_line_number() {
+        let err = TomlDoc::parse("threads = 2\npolicy = \"paper\"\nthreads = 4\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 3"), "{msg}");
+        assert!(msg.contains("duplicate key"), "{msg}");
+        assert!(msg.contains("line 1"), "must name the first definition: {msg}");
+
+        // same key name under different tables is fine
+        let doc = TomlDoc::parse("[serve]\nworkers = 2\n[tune]\nworkers = 4\n").unwrap();
+        assert_eq!(doc.get_usize("serve.workers"), Some(2));
+        assert_eq!(doc.get_usize("tune.workers"), Some(4));
+    }
+
+    #[test]
+    fn duplicate_tables_error_with_line_number() {
+        let err =
+            TomlDoc::parse("[tune]\nbudget = 8\n[serve]\nworkers = 2\n[tune]\nbudget = 9\n")
+                .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 5"), "{msg}");
+        assert!(msg.contains("duplicate table [tune]"), "{msg}");
     }
 
     #[test]

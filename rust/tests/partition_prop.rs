@@ -1,11 +1,14 @@
-//! Property suite for the planner/partitioner: for randomized linear call
-//! graphs, every produced plan
+//! Property suite for the planner/partitioner: for randomized linear *and
+//! DAG-shaped* call graphs, every produced plan
 //!
 //! 1. is a contiguous, order-preserving partition covering every IR
 //!    function exactly once,
 //! 2. places hardware tasks only on modules that exist (and are enabled)
 //!    in the hardware-database manifest with a matching shape variant,
-//! 3. keeps the paper's filter modes: serial head/tail, parallel middles.
+//! 3. keeps the paper's filter modes: serial head/tail, parallel middles,
+//! 4. is DAG-legal: no dependency edge points backwards across a stage
+//!    cut, fork-join branches cover each stage's tasks exactly once, and
+//!    linear chains reproduce the pre-DAG partitions bit-for-bit.
 //!
 //! Randomness comes from the crate's tiny seeded PRNG (`util::rng::Rng`)
 //! through the `forall` helper — no new dependencies, reproducible seeds.
@@ -15,7 +18,7 @@ use std::path::PathBuf;
 use courier::config::{Config, PartitionPolicy};
 use courier::hwdb::HwDatabase;
 use courier::ir::{Ir, IrFunc, Placement};
-use courier::pipeline::{plan_pipeline, TaskKind};
+use courier::pipeline::{partition, plan_pipeline, respects_dag, TaskKind};
 use courier::swlib::Registry;
 use courier::trace::DataNode;
 use courier::util::rng::Rng;
@@ -232,6 +235,208 @@ fn serial_head_tail_parallel_middles_and_hw_placement_happens() {
     // the generators must actually exercise both interesting regimes
     assert!(saw_hw, "random chains never hit the hardware database");
     assert!(saw_multi_stage, "random chains never produced a multi-stage plan");
+}
+
+/// A randomized DAG-shaped call graph over a fixed single-channel shape:
+/// step 0 consumes the external input; every later step consumes 1–2
+/// earlier outputs (topological by construction).  One data node per
+/// dependency edge, like the tracer produces.
+fn random_dag_ir(rng: &mut Rng) -> Ir {
+    let n = 2 + rng.below(7);
+    let shape = vec![16usize, 16];
+    let funcs: Vec<IrFunc> = (0..n)
+        .map(|i| IrFunc {
+            step: i,
+            symbol: POOL[rng.below(POOL.len())].to_string(),
+            covers: vec![i],
+            mean_ns: rng.range_u64(1, 5_000_000),
+            placement: Placement::Auto,
+        })
+        .collect();
+    let bytes = shape.iter().product::<usize>() * 4;
+    let mut data: Vec<DataNode> = vec![DataNode {
+        id: 0,
+        shape: shape.clone(),
+        bytes,
+        producer: None,
+        consumers: vec![0],
+    }];
+    for i in 1..n {
+        let parents = 1 + rng.below(2.min(i));
+        let mut used: Vec<usize> = Vec::new();
+        for _ in 0..parents {
+            let p = rng.below(i);
+            if used.contains(&p) {
+                continue;
+            }
+            used.push(p);
+            data.push(DataNode {
+                id: data.len(),
+                shape: shape.clone(),
+                bytes,
+                producer: Some(p),
+                consumers: vec![i],
+            });
+        }
+    }
+    Ir { program: "dagprop".into(), frames: 1, funcs, data }
+}
+
+#[test]
+fn dag_plans_are_convex_and_fork_join_branches_cover_each_stage_once() {
+    let (_tmp, dir) = manifest_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let registry = Registry::standard();
+    forall(
+        200,
+        |rng| (random_dag_ir(rng), random_cfg(rng, dir.clone())),
+        |(ir, cfg)| {
+            let plan = plan_pipeline(ir, &db, &registry, cfg, None).expect("plannable DAG");
+            if plan.validate_dag().is_err() {
+                return false;
+            }
+            // stage cuts are convex: no dependency edge points backwards
+            let mut groups: Vec<std::ops::Range<usize>> = Vec::new();
+            let mut start = 0usize;
+            for s in &plan.stages {
+                groups.push(start..start + s.tasks.len());
+                start += s.tasks.len();
+            }
+            let flat: Vec<usize> = plan.flat_covers();
+            let task_of = |step: usize| flat.iter().position(|&s| s == step);
+            let func_edges: Vec<(usize, usize)> = plan
+                .effective_edges()
+                .iter()
+                .filter_map(|(p, c)| match p {
+                    Some(p) => match (task_of(*p), task_of(*c)) {
+                        (Some(a), Some(b)) if a != b => Some((a, b)),
+                        _ => None,
+                    },
+                    None => None,
+                })
+                .collect();
+            if !respects_dag(&groups, &func_edges) {
+                return false;
+            }
+            // fork-join branches cover each stage's tasks exactly once
+            let edges = plan.effective_edges();
+            for s in &plan.stages {
+                let mut covered: Vec<usize> =
+                    s.branches(&edges).into_iter().flatten().collect();
+                covered.sort_unstable();
+                if covered != (0..s.tasks.len()).collect::<Vec<_>>() {
+                    return false;
+                }
+            }
+            // every function covered exactly once, in order
+            let expect: Vec<usize> = (0..ir.funcs.len()).collect();
+            flat == expect
+        },
+    );
+}
+
+#[test]
+fn linear_chains_reproduce_the_pre_dag_partitions_bit_for_bit() {
+    let (_tmp, dir) = manifest_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let registry = Registry::standard();
+    forall(
+        200,
+        |rng| (random_ir(rng), random_cfg(rng, dir.clone())),
+        |(ir, cfg)| {
+            let plan = plan_pipeline(ir, &db, &registry, cfg, None).expect("plannable chain");
+            // chain plans carry no explicit edges: serialized form is the
+            // pre-DAG format, byte for byte
+            if !plan.edges.is_empty() || !plan.is_chain() {
+                return false;
+            }
+            if plan.to_json().contains("\"edges\"") {
+                return false;
+            }
+            // the stage grouping equals the edge-blind partition exactly
+            let times: Vec<u64> = plan
+                .stages
+                .iter()
+                .flat_map(|s| &s.tasks)
+                .map(|t| t.est_ns)
+                .collect();
+            let expect = partition(&times, cfg.threads, cfg.policy);
+            let mut got: Vec<std::ops::Range<usize>> = Vec::new();
+            let mut start = 0usize;
+            for s in &plan.stages {
+                got.push(start..start + s.tasks.len());
+                start += s.tasks.len();
+            }
+            got == expect
+        },
+    );
+}
+
+#[test]
+fn search_never_proposes_a_dag_illegal_boundary_move() {
+    // randomized DAG seeds through the tuner's whole search: every scored
+    // candidate (policy sweeps, boundary shifts, fusions, queue ladder)
+    // must stay DAG-legal and carry the seed's edge set unchanged
+    let (_tmp, dir) = manifest_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let registry = Registry::standard();
+    forall(
+        25,
+        |rng| (random_dag_ir(rng), random_cfg(rng, dir.clone())),
+        |(ir, cfg)| {
+            let mut cfg = cfg.clone();
+            cfg.tune.budget = 24;
+            cfg.tune.sim_frames = 4;
+            let seed = plan_pipeline(ir, &db, &registry, &cfg, None).expect("plannable DAG");
+            let tasks: Vec<_> =
+                seed.stages.iter().flat_map(|s| s.tasks.iter().cloned()).collect();
+            let metrics = courier::metrics::TunerMetrics::default();
+            let out = courier::tune::search(&seed, &tasks, &cfg, &metrics);
+            out.candidates
+                .iter()
+                .all(|c| c.plan.validate_dag().is_ok() && c.plan.edges == seed.edges)
+        },
+    );
+}
+
+#[test]
+fn golden_two_frame_harris_dag_trace_builds_cleanly() {
+    // The fixture's second frame reuses frame 1's terminal output hash as
+    // its *external input* hash — exactly the cross-frame collision that
+    // used to fabricate a backwards step5 -> step0 edge.  With the
+    // per-frame producer reset the trace lowers cleanly end to end.
+    let text = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/fixtures/harris_dag_two_frames.json"),
+    )
+    .unwrap();
+    let trace = courier::trace::Trace::from_json(&text).unwrap();
+    assert_eq!(trace.frames(), 2);
+
+    let graph = courier::trace::CallGraph::from_trace(&trace);
+    assert_eq!(graph.funcs.len(), 6);
+    for f in &graph.funcs {
+        assert_eq!(f.calls, 2, "{}: both frames must aggregate", f.symbol);
+    }
+    for d in &graph.data {
+        if d.consumers.contains(&0) {
+            assert_eq!(d.producer, None, "cross-frame edge fabricated: {d:?}");
+        }
+    }
+
+    // graph -> IR -> plan, hermetically (empty hw database)
+    let ir = Ir::from_graph(&graph).unwrap();
+    assert!(!ir.is_chain());
+    let tmp = courier::util::testing::empty_hwdb_dir("golden-dag").unwrap();
+    let db = HwDatabase::load(tmp.path()).unwrap();
+    let cfg = Config { artifacts_dir: tmp.path().to_path_buf(), ..Default::default() };
+    let plan = plan_pipeline(&ir, &db, &Registry::standard(), &cfg, None).unwrap();
+    plan.validate_dag().unwrap();
+    assert!(!plan.edges.is_empty(), "DAG plans carry explicit edges");
+    assert!(plan.edges.contains(&(Some(0), 1)));
+    assert!(plan.edges.contains(&(Some(0), 2)));
+    assert!(plan.edges.contains(&(Some(1), 3)));
+    assert!(plan.edges.contains(&(Some(2), 3)));
 }
 
 #[test]

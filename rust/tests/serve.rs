@@ -242,3 +242,37 @@ fn hardware_sessions_share_cached_pjrt_executables() {
 
     server.shutdown();
 }
+
+#[test]
+fn dag_program_cold_build_serves_and_matches_the_binary() {
+    // serve's cold-build path runs the whole trace -> IR -> partition ->
+    // build chain; a DAG-shaped tenant (gray fans out to both Sobels and
+    // back in at the corner response) must build a legal plan and serve
+    // outputs identical to the original binary
+    use courier::app::harris_dag_demo;
+
+    let tmp = empty_hwdb_dir("serve-dag").unwrap();
+    let server = Server::new(serve_config(empty_db(&tmp))).unwrap();
+
+    let session = server.open(SessionSpec::new(harris_dag_demo(24, 32))).unwrap();
+    assert!(!session.cache_hit());
+    let plan = &session.pipeline().plan;
+    plan.validate_dag().unwrap();
+    assert!(!plan.edges.is_empty(), "DAG plans carry explicit edges");
+
+    let frames: Vec<Mat> = (0..4).map(|s| synth::noise_rgb(24, 32, s)).collect();
+    let outs = session.run_window(frames.clone()).unwrap();
+    let original =
+        Interpreter::new(harris_dag_demo(24, 32), Arc::new(RegistryDispatch::standard()));
+    for (i, f) in frames.into_iter().enumerate() {
+        let want = original.run(&[f]).unwrap().remove(0);
+        assert_eq!(outs[i], want, "frame {i}: served DAG output diverges");
+    }
+
+    // a second open of the same DAG tenant hits the plan cache
+    let warm = server.open(SessionSpec::new(harris_dag_demo(24, 32))).unwrap();
+    assert!(warm.cache_hit());
+    assert!(Arc::ptr_eq(session.pipeline(), warm.pipeline()));
+
+    server.shutdown();
+}
