@@ -17,16 +17,16 @@ use courier::image::synth;
 use courier::ir::Ir;
 use courier::runtime::Runtime;
 use courier::swlib::Registry;
-use courier::util::bench::{section, Bench};
+use courier::util::bench::{section, smoke, write_bench_json, Bench};
 
 fn main() {
-    let (h, w) = (240, 320);
+    let (h, w) = if smoke() { (48, 64) } else { (240, 320) };
     section(&format!("ABLATION A — fused cvtColor+cornerHarris vs split @ {h}x{w}"));
 
     let dir = common::artifacts_dir();
     let db = HwDatabase::load(&dir).unwrap();
     let rt = Runtime::cpu().unwrap();
-    let bench = Bench::with_budget(Duration::from_secs(8));
+    let bench = Bench::from_env(Duration::from_secs(8));
     let rgb = synth::noise_rgb(h, w, 3);
 
     // raw module invocations
@@ -110,4 +110,14 @@ fn main() {
         built_split.plan.stages.len(),
         built_fused.plan.stages.len()
     );
+
+    write_bench_json(
+        "ablation_fusion",
+        &[m_fused, m_cvt, m_harris, m_split.clone(), m_fusedp.clone()],
+        &[
+            ("split_ms_per_frame", m_split.mean_ms() / 12.0),
+            ("fused_ms_per_frame", m_fusedp.mean_ms() / 12.0),
+        ],
+    )
+    .expect("write BENCH_ablation_fusion.json");
 }

@@ -10,16 +10,17 @@ use std::time::Duration;
 
 use courier::config::{Config, PartitionPolicy};
 use courier::pipeline::bottleneck;
-use courier::util::bench::{section, Bench};
+use courier::util::bench::{section, smoke, write_bench_json, Bench, Measurement};
 
 fn main() {
-    let (h, w) = (240, 320);
-    let frames = 12usize;
+    let (h, w) = if smoke() { (48, 64) } else { (240, 320) };
+    let frames = if smoke() { 4usize } else { 12usize };
     section(&format!("ABLATION B — partition policies @ {h}x{w}, {frames}-frame stream"));
 
     let program = courier::app::corner_harris_demo(h, w);
     let stream = common::frame_stream(h, w, frames);
-    let bench = Bench::with_budget(Duration::from_secs(8));
+    let bench = Bench::from_env(Duration::from_secs(8));
+    let mut all: Vec<Measurement> = Vec::new();
 
     // predicted bottlenecks on the paper's own Table I numbers
     section("predicted (paper's Table I times, us)");
@@ -61,6 +62,7 @@ fn main() {
             );
             let m = bench.run(&label, || built.run(stream.clone()).unwrap());
             println!("      -> measured {:.2} ms/frame", m.mean_ms() / frames as f64);
+            all.push(m);
         }
     }
     println!("\nexpected shape: paper ~ optimal >> single; per-function close to paper at threads>=2;");
@@ -124,4 +126,7 @@ fn main() {
             );
         }
     }
+
+    write_bench_json("ablation_partition", &all, &[("frames", frames as f64)])
+        .expect("write BENCH_ablation_partition.json");
 }

@@ -12,17 +12,18 @@ mod common;
 use std::time::Duration;
 
 use courier::config::{Config, PartitionPolicy};
-use courier::util::bench::{section, Bench};
+use courier::util::bench::{section, smoke, write_bench_json, Bench, Measurement};
 
 fn main() {
-    let (h, w) = (240, 320);
-    let frames = 16usize;
+    let (h, w) = if smoke() { (48, 64) } else { (240, 320) };
+    let frames = if smoke() { 6usize } else { 16usize };
     section(&format!("ABLATION C — token pool depth @ {h}x{w}, {frames}-frame stream"));
 
     let program = courier::app::corner_harris_demo(h, w);
     let stream = common::frame_stream(h, w, frames);
-    let bench = Bench::with_budget(Duration::from_secs(8));
+    let bench = Bench::from_env(Duration::from_secs(8));
 
+    let mut all: Vec<Measurement> = Vec::new();
     let mut results: Vec<(usize, f64)> = Vec::new();
     for tokens in [1usize, 2, 4, 8] {
         let cfg = Config {
@@ -48,6 +49,7 @@ fn main() {
             occ.join("/")
         );
         results.push((tokens, m.mean_ms() / frames as f64));
+        all.push(m);
     }
 
     println!("\nexpected shape: tokens=1 is the rigid pipeline (one frame in flight, ~sum of stages);");
@@ -87,4 +89,17 @@ fn main() {
         sim1 > r4.frame_interval_ns,
         "deeper token pool must help on the parallel platform model"
     );
+
+    write_bench_json(
+        "ablation_tokens",
+        &all,
+        &[
+            ("frames", frames as f64),
+            ("tokens1_ms_per_frame", results[0].1),
+            ("tokens4_ms_per_frame", results[2].1),
+            ("overlap_gain", results[0].1 / results[2].1),
+            ("sim_overlap_gain", sim1 as f64 / r4.frame_interval_ns as f64),
+        ],
+    )
+    .expect("write BENCH_ablation_tokens.json");
 }

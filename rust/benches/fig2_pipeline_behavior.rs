@@ -10,11 +10,11 @@ use std::sync::Arc;
 use courier::app::{edge_demo, RegistryDispatch};
 use courier::config::{Config, PartitionPolicy};
 use courier::offload::Deployment;
-use courier::util::bench::section;
+use courier::util::bench::{section, smoke, write_bench_json};
 
 fn main() {
-    let (h, w) = (240, 320);
-    let frames = 24usize;
+    let (h, w) = if smoke() { (48, 64) } else { (240, 320) };
+    let frames = if smoke() { 8usize } else { 24usize };
     section(&format!("FIG. 2 reproduction — mixed pipeline behaviour, {frames} frames @ {h}x{w}"));
 
     // the edge demo has 6 functions; per-function partitioning with 4
@@ -94,4 +94,16 @@ fn main() {
         stats.wall_ns as f64 / 1e6,
         seq_ns as f64 / stats.wall_ns as f64
     );
+
+    write_bench_json(
+        "fig2_pipeline_behavior",
+        &[],
+        &[
+            ("frames", frames as f64),
+            ("frame_interval_ms", stats.frame_interval_ns() as f64 / 1e6),
+            ("peak_concurrency", stats.peak_concurrency() as f64),
+            ("overlap_factor", seq_ns as f64 / stats.wall_ns as f64),
+        ],
+    )
+    .expect("write BENCH_fig2_pipeline_behavior.json");
 }

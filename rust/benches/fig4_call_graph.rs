@@ -11,10 +11,10 @@ use courier::app::corner_harris_demo;
 use courier::image::synth;
 use courier::ir::{to_dot, Ir};
 use courier::trace::{trace_program, CallGraph, Profile};
-use courier::util::bench::{section, Bench};
+use courier::util::bench::{section, smoke, write_bench_json, Bench};
 
 fn main() {
-    let (h, w) = (480, 640);
+    let (h, w) = if smoke() { (120, 160) } else { (480, 640) };
     section(&format!("FIG. 4 reproduction — call graph of cornerHarris_Demo @ {h}x{w}"));
 
     let program = corner_harris_demo(h, w);
@@ -48,7 +48,7 @@ fn main() {
     println!("\nwrote {} ({} bytes) — render with `dot -Tpng`", out.display(), dot.len());
 
     // Frontend cost: how expensive is the tracing machinery itself?
-    let bench = Bench::with_budget(Duration::from_secs(6));
+    let bench = Bench::from_env(Duration::from_secs(6));
     section("Frontend overhead (tracing + reconstruction)");
     let plain = bench.run("binary WITHOUT tracer (1 frame)", || {
         let interp = courier::app::Interpreter::new(
@@ -63,10 +63,17 @@ fn main() {
     let graphb = bench.run("graph reconstruction (3-frame trace)", || {
         CallGraph::from_trace(&trace)
     });
+    let overhead = (traced.mean_ns as f64 / plain.mean_ns as f64 - 1.0) * 100.0;
     println!(
-        "\ntracer overhead: {:.1}% of frame time; reconstruction {:.3} ms",
-        (traced.mean_ns as f64 / plain.mean_ns as f64 - 1.0) * 100.0,
+        "\ntracer overhead: {overhead:.1}% of frame time; reconstruction {:.3} ms",
         graphb.mean_ns as f64 / 1e6
     );
     println!("profile rows: {}", profile.functions.len());
+
+    write_bench_json(
+        "fig4_call_graph",
+        &[plain, traced, graphb],
+        &[("tracer_overhead_pct", overhead)],
+    )
+    .expect("write BENCH_fig4_call_graph.json");
 }

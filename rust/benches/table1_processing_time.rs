@@ -3,8 +3,11 @@
 //!
 //! Original = each function on the CPU library (traced).  Courier = the
 //! deployed mixed pipeline (measured per-module on the fabric + CPU task),
-//! plus the end-to-end streamed frame interval.  Run:
-//! `cargo bench --bench table1_processing_time [-- HxW]`
+//! plus the end-to-end streamed frame interval.  Also measures the
+//! **CPU-only software pipeline** (pooled kernels, fused selection, token
+//! runtime) against the sequential original — the number the perf
+//! trajectory tracks per-PR via `BENCH_table1_processing_time.json`.
+//! Run: `cargo bench --bench table1_processing_time [-- HxW]`
 
 mod common;
 
@@ -19,15 +22,18 @@ use courier::offload::Deployment;
 use courier::pipeline::TaskKind;
 use courier::report::{render_table1, Table1Row};
 use courier::runtime::Runtime;
-use courier::util::bench::{section, Bench};
+use courier::util::bench::{section, smoke, write_bench_json, Bench, Measurement};
 
 fn main() {
-    let size = std::env::args().nth(1).unwrap_or_else(|| "480x640".into());
+    // smoke must pick a size the AOT database carries (48x64 is the
+    // smallest image variant python/compile/aot.py builds)
+    let default_size = if smoke() { "48x64" } else { "480x640" };
+    let size = std::env::args().nth(1).unwrap_or_else(|| default_size.into());
     let (h, w) = size
         .split_once('x')
         .map(|(a, b)| (a.parse().unwrap(), b.parse().unwrap()))
         .unwrap_or((480, 640));
-    let frames = 12usize;
+    let frames = if smoke() { 4usize } else { 12usize };
     section(&format!("TABLE I reproduction — corner-Harris {h}x{w}, {frames}-frame stream"));
 
     let program = corner_harris_demo(h, w);
@@ -36,7 +42,8 @@ fn main() {
     let db = HwDatabase::load(&cfg.artifacts_dir).unwrap();
     let rt = Runtime::cpu().unwrap();
     let stream = common::frame_stream(h, w, frames);
-    let bench = Bench::with_budget(Duration::from_secs(8));
+    let bench = Bench::from_env(Duration::from_secs(8));
+    let mut all: Vec<Measurement> = Vec::new();
 
     // -- per-function measured times --------------------------------------
     let mut rows: Vec<Table1Row> = Vec::new();
@@ -68,6 +75,7 @@ fn main() {
                 TaskKind::Hw { .. } => "FPGA".into(),
             },
         });
+        all.push(orig);
         cur = registry.call(&f.symbol, &[&cur]).unwrap();
     }
 
@@ -79,7 +87,7 @@ fn main() {
     }
     let orig_total_ms = t0.elapsed().as_secs_f64() * 1e3 / frames as f64;
 
-    let dep = Deployment::new(program, Arc::new(RegistryDispatch::standard()), built.clone());
+    let dep = Deployment::new(program.clone(), Arc::new(RegistryDispatch::standard()), built.clone());
     // warm the pipeline once
     let _ = dep.run_stream(stream.clone()).unwrap();
     let t0 = Instant::now();
@@ -94,6 +102,33 @@ fn main() {
         orig_total_ms / courier_total_ms
     );
     println!("paper (Zynq, 1920x1080): 1371.1 -> 83.8 ms, x15.36 (published; arithmetic gives x16.36)");
+
+    // -- CPU-only software pipeline (the hot path this repo optimizes) -----
+    // Pooled kernels + fused gray→response selection + the parking token
+    // runtime, streamed end to end.  This is the pre/post-PR comparison
+    // point for the perf trajectory: same machine, no fabric involved.
+    section("software pipeline (CPU-only placement, pooled + fused)");
+    let sw_cfg = Config {
+        artifacts_dir: common::artifacts_dir(),
+        cpu_only: true,
+        ..Default::default()
+    };
+    let (_, sw_built) = common::build(&program, &sw_cfg);
+    let _ = sw_built.run(stream.clone()).unwrap(); // warm the buffer pool
+    let sw_m = bench.run("sw-pipeline streamed (per batch)", || {
+        sw_built.run(stream.clone()).unwrap()
+    });
+    let sw_pipeline_ms = sw_m.mean_ms() / frames as f64;
+    let pool = sw_built.pool.stats();
+    println!(
+        "sw-pipeline: {sw_pipeline_ms:.2} ms/frame vs sequential {orig_total_ms:.2} ms/frame -> x{:.2}; \
+         pool hit rate {:.1}% ({} misses / {} acquires)",
+        orig_total_ms / sw_pipeline_ms,
+        pool.hit_rate() * 100.0,
+        pool.misses,
+        pool.acquires()
+    );
+    all.push(sw_m);
 
     // ---- simulated deployed run (paper platform model) -------------------
     // This testbed has a single CPU core, so stage overlap cannot show in
@@ -136,6 +171,25 @@ fn main() {
     for i in 0..plan.stages.len() {
         println!("  stage#{i} simulated occupancy {:>5.1}%", sim.stage_occupancy(i) * 100.0);
     }
+
+    write_bench_json(
+        "table1_processing_time",
+        &all,
+        &[
+            ("height", h as f64),
+            ("width", w as f64),
+            ("frames", frames as f64),
+            ("original_ms_per_frame", orig_total_ms),
+            ("deployed_ms_per_frame", courier_total_ms),
+            ("deployed_speedup", orig_total_ms / courier_total_ms),
+            ("sw_pipeline_ms_per_frame", sw_pipeline_ms),
+            ("sw_pipeline_speedup", orig_total_ms / sw_pipeline_ms),
+            ("pool_hit_rate", pool.hit_rate()),
+            ("pool_misses", pool.misses as f64),
+            ("sim_frame_interval_ms", sim.frame_interval_ns as f64 / 1e6),
+        ],
+    )
+    .expect("write BENCH_table1_processing_time.json");
     let _ = std::hint::black_box(outs);
     let _ = std::hint::black_box(Mat::zeros(&[1]));
 }

@@ -10,10 +10,11 @@ use courier::hwdb::HwDatabase;
 use courier::image::synth;
 use courier::report::render_table2;
 use courier::runtime::Runtime;
-use courier::util::bench::{section, Bench};
+use courier::util::bench::{section, write_bench_json, Bench, Measurement};
 
 fn main() {
-    let size = std::env::args().nth(1).unwrap_or_else(|| "480x640".into());
+    let default_size = if courier::util::bench::smoke() { "48x64" } else { "480x640" };
+    let size = std::env::args().nth(1).unwrap_or_else(|| default_size.into());
     let (h, w): (usize, usize) = size
         .split_once('x')
         .map(|(a, b)| (a.parse().unwrap(), b.parse().unwrap()))
@@ -22,10 +23,11 @@ fn main() {
 
     let db = HwDatabase::load(&common::artifacts_dir()).unwrap();
     let rt = Runtime::cpu().unwrap();
-    let bench = Bench::with_budget(Duration::from_secs(6));
+    let bench = Bench::from_env(Duration::from_secs(6));
 
     // the three case-study modules first, then the rest of the library
     let mut reports = Vec::new();
+    let mut all: Vec<Measurement> = Vec::new();
     let mut measured: Vec<(String, f64)> = Vec::new();
     for sym in db.enabled_symbols() {
         let shapes: Vec<Vec<usize>> = vec![vec![h, w, 3], vec![h, w]];
@@ -45,6 +47,7 @@ fn main() {
             exe.run(&[&input]).unwrap()
         });
         measured.push((report.module.clone(), m.mean_ms()));
+        all.push(m);
         reports.push(report);
     }
 
@@ -56,4 +59,11 @@ fn main() {
     }
     println!("\npaper (Vivado @1080p): cvtColor 39.7 ms / cornerHarris 13.4 ms / convertScaleAbs 13.0 ms");
     println!("shape check: cornerHarris is the heaviest per-pixel module; estimates and measurements must order it above convertScaleAbs.");
+
+    write_bench_json(
+        "table2_module_synthesis",
+        &all,
+        &[("height", h as f64), ("width", w as f64), ("modules", reports.len() as f64)],
+    )
+    .expect("write BENCH_table2_module_synthesis.json");
 }

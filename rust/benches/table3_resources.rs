@@ -6,7 +6,7 @@ mod common;
 
 use courier::hwdb::HwDatabase;
 use courier::report::render_table3;
-use courier::util::bench::section;
+use courier::util::bench::{section, write_bench_json};
 
 fn main() {
     let size = std::env::args().nth(1).unwrap_or_else(|| "1080x1920".into());
@@ -57,4 +57,22 @@ fn main() {
         }
     }
     print!("{}", render_table3(&all));
+
+    let case = |name: &str| {
+        let r = get(name);
+        (r.resources.lut as f64, r.resources.dsp as f64)
+    };
+    let (harris_lut, harris_dsp) = case("corner_harris");
+    write_bench_json(
+        "table3_resources",
+        &[],
+        &[
+            ("height", h as f64),
+            ("width", w as f64),
+            ("modules", all.len() as f64),
+            ("harris_lut", harris_lut),
+            ("harris_dsp", harris_dsp),
+        ],
+    )
+    .expect("write BENCH_table3_resources.json");
 }

@@ -45,6 +45,23 @@ impl Mat {
         Self { shape: shape.to_vec(), data: vec![v; n] }
     }
 
+    /// Rebuild a tensor over recycled storage (the buffer-pool path).
+    ///
+    /// The storage is resized to the shape's element count — **no
+    /// allocation when its capacity already covers it** — and its
+    /// contents are *unspecified* (recycled data, or zeros where the
+    /// resize grew it): callers must overwrite every element.
+    pub fn from_storage(shape: &[usize], mut storage: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        if storage.len() != n {
+            // no clear() first: shrinking truncates for free, growing
+            // zero-fills only the tail — a full zero pass would cost one
+            // needless whole-image write per downcycled pool acquire
+            storage.resize(n, 0.0);
+        }
+        Self { shape: shape.to_vec(), data: storage }
+    }
+
     /// Tensor shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
@@ -246,6 +263,22 @@ mod tests {
     fn new_rejects_rank_0_and_4() {
         assert!(Mat::new(vec![], vec![]).is_err());
         assert!(Mat::new(vec![1, 1, 1, 1], vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn from_storage_recycles_capacity() {
+        let big = Mat::zeros(&[4, 4, 3]).into_vec(); // cap >= 48
+        let cap = big.capacity();
+        let m = Mat::from_storage(&[4, 4], big);
+        assert_eq!(m.shape(), &[4, 4]);
+        assert_eq!(m.len(), 16);
+        assert!(m.into_vec().capacity() >= 16 && cap >= 48);
+        // exact-length storage is reused untouched
+        let m = Mat::from_storage(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        // too-small storage grows (zero-filled)
+        let m = Mat::from_storage(&[2, 3], vec![1.0]);
+        assert_eq!(m.len(), 6);
     }
 
     #[test]

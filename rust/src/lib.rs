@@ -41,6 +41,15 @@
 //! hill-climb scored by the simulator, and *promotes* the measured winner
 //! into the serving plan cache without invalidating in-flight sessions.
 //! See `docs/tuning.md`.
+//!
+//! The steady-state frame path is allocation-free and cache-aware: CPU
+//! kernels ([`swlib::imgproc`]) run interior/border-split stencils with
+//! fused and separable variants, stage buffers recycle through a
+//! shape-keyed [`pipeline::BufferPool`], and the token runtime parks
+//! starved workers on a condvar instead of spinning.  Every optimization
+//! is pinned bit-for-bit to the naive reference kernels
+//! (`imgproc::reference`); `docs/performance.md` documents the layers and
+//! the `BENCH_*.json` perf-trajectory artifacts.
 
 pub mod app;
 pub mod config;

@@ -20,11 +20,12 @@ use crate::hwdb::HwDatabase;
 use crate::image::Mat;
 use crate::ir::{Ir, Placement};
 use crate::runtime::{Executable, Runtime};
-use crate::swlib::Registry;
+use crate::swlib::{Registry, FUSED_CVT_HARRIS, FUSED_SOBEL_PAIR};
 use crate::{CourierError, Result};
 
 use super::partition::partition_dag;
 use super::plan::{StagePlan, StageSpec, TaskKind, TaskSpec};
+use super::pool::BufferPool;
 use super::tbb::{FilterMode, PipelineStats, StageFilter, TokenPipeline};
 
 /// Cost of staging one byte across the accelerator boundary, ns (the AXI
@@ -34,16 +35,26 @@ const STAGING_NS_PER_BYTE: f64 = 1.0;
 /// The multi-buffer token payload of a DAG-wired pipeline: the external
 /// input frame plus every buffer produced so far, keyed by producing
 /// step.  Stages take or clone exactly the buffers their tasks' incoming
-/// edges name, and drop buffers whose last consumer has run.
+/// edges name, and drop buffers whose last consumer has run.  With a
+/// buffer pool attached ([`FrameEnv::pooled`] — what [`BuiltPipeline`]
+/// always does), clones come from the pool and dead buffers return to
+/// it, so the steady-state frame path allocates nothing.
 pub struct FrameEnv {
     input: Option<Mat>,
     bufs: HashMap<usize, Mat>,
+    pool: Option<Arc<BufferPool>>,
 }
 
 impl FrameEnv {
-    /// Wrap one external input frame.
+    /// Wrap one external input frame (no pool: clones allocate, dead
+    /// buffers free).
     pub fn new(input: Mat) -> Self {
-        Self { input: Some(input), bufs: HashMap::new() }
+        Self { input: Some(input), bufs: HashMap::new(), pool: None }
+    }
+
+    /// Wrap one external input frame with a recycling pool.
+    pub fn pooled(input: Mat, pool: Arc<BufferPool>) -> Self {
+        Self { input: Some(input), bufs: HashMap::new(), pool: Some(pool) }
     }
 
     /// Extract the terminal output buffer (produced by `step`).
@@ -51,6 +62,25 @@ impl FrameEnv {
         self.bufs.remove(&step).ok_or_else(|| {
             CourierError::Pipeline(format!("pipeline emitted no output for terminal step {step}"))
         })
+    }
+
+    fn pool_ref(&self) -> Option<&BufferPool> {
+        self.pool.as_deref()
+    }
+
+    /// Copy a live buffer — from the pool when one is attached.
+    fn clone_mat(&self, m: &Mat) -> Mat {
+        match &self.pool {
+            Some(p) => p.acquire_cloned(m),
+            None => m.clone(),
+        }
+    }
+
+    /// Retire a dead buffer — back to the pool when one is attached.
+    fn release(&self, m: Mat) {
+        if let Some(p) = &self.pool {
+            p.release(m);
+        }
     }
 }
 
@@ -65,12 +95,20 @@ pub struct BuiltPipeline {
     pub control_program: String,
     /// The step whose output is the pipeline's deliverable.
     pub terminal_step: usize,
+    /// Shape-keyed buffer recycling pool shared by every stage (and every
+    /// frame environment this pipeline creates); after warm-up the
+    /// steady-state frame path allocates nothing — `pool.stats().misses`
+    /// stays flat.
+    pub pool: Arc<BufferPool>,
 }
 
 impl BuiltPipeline {
     /// Run a frame stream with cross-frame overlap (deployed streaming).
     pub fn run(&self, frames: Vec<Mat>) -> Result<(Vec<Mat>, PipelineStats)> {
-        let envs: Vec<FrameEnv> = frames.into_iter().map(FrameEnv::new).collect();
+        let envs: Vec<FrameEnv> = frames
+            .into_iter()
+            .map(|f| FrameEnv::pooled(f, self.pool.clone()))
+            .collect();
         let (outs, stats) = self.pipeline.run(envs)?;
         let mats = outs
             .into_iter()
@@ -82,7 +120,9 @@ impl BuiltPipeline {
     /// Blocking single-frame path (the off-load wrapper's synchronous
     /// contract).
     pub fn process_one(&self, frame: Mat) -> Result<Mat> {
-        self.pipeline.process_one(FrameEnv::new(frame))?.into_output(self.terminal_step)
+        self.pipeline
+            .process_one(FrameEnv::pooled(frame, self.pool.clone()))?
+            .into_output(self.terminal_step)
     }
 
     /// Verify this pipeline's terminal buffer really is `program`'s
@@ -162,6 +202,11 @@ struct BuiltStage {
     /// Task-index groups executed as concurrent branches (one group ==
     /// plain sequential execution).
     branches: Vec<Vec<usize>>,
+    /// When the stage is exactly the two sibling Sobel gradients over one
+    /// shared input, `(dx task index, dy task index)`: executed as the
+    /// fused one-walk pair (`sobel_xy_into`) instead of two branch
+    /// threads each re-reading the image.
+    sobel_pair: Option<(usize, usize)>,
     /// Steps whose buffers die after this stage.
     drop_after: Vec<usize>,
     /// Whether the external input dies after this stage.
@@ -171,7 +216,7 @@ struct BuiltStage {
 impl BuiltStage {
     /// Fetch one argument inside a fork-join branch: branch-local
     /// producers first (cloned — a branch may fan out internally), then
-    /// the shared environment read-only.
+    /// the shared environment read-only.  Clones draw from the pool.
     fn fetch_branch(
         env: &FrameEnv,
         local: &HashMap<usize, Mat>,
@@ -182,25 +227,42 @@ impl BuiltStage {
             CourierError::Pipeline(format!("{symbol}: missing {what} in frame environment"))
         };
         match arg.source {
-            Source::External => {
-                env.input.clone().ok_or_else(|| missing("external input".into()))
-            }
+            Source::External => env
+                .input
+                .as_ref()
+                .map(|m| env.clone_mat(m))
+                .ok_or_else(|| missing("external input".into())),
             Source::Step(s) => local
                 .get(&s)
                 .or_else(|| env.bufs.get(&s))
-                .cloned()
+                .map(|m| env.clone_mat(m))
                 .ok_or_else(|| missing(format!("buffer of step {s}"))),
         }
     }
 
-    /// Execute one bound task over owned arguments.
-    fn exec(task: &BoundTaskSpec, owned: Vec<Mat>) -> Result<Mat> {
+    /// Execute one bound task over owned arguments.  Software tasks route
+    /// through their pooled form when a pool is attached, and every owned
+    /// argument is recycled afterwards — the environment retains un-taken
+    /// originals, so anything handed here is dead on return.  Hardware
+    /// tasks move their frames into the fabric request (no memcpy, and
+    /// nothing left to recycle).
+    fn exec(task: &BoundTaskSpec, owned: Vec<Mat>, pool: Option<&BufferPool>) -> Result<Mat> {
         match &task.bound {
             BoundTask::Sw(entry) => {
-                let refs: Vec<&Mat> = owned.iter().collect();
-                (entry.f)(&refs)
+                let out = {
+                    let refs: Vec<&Mat> = owned.iter().collect();
+                    match (&entry.pooled, pool) {
+                        (Some(pf), Some(p)) => pf(&refs, p)?,
+                        _ => (entry.f)(&refs)?,
+                    }
+                };
+                if let Some(p) = pool {
+                    for m in owned {
+                        p.release(m);
+                    }
+                }
+                Ok(out)
             }
-            // move the frames into the fabric request: no memcpy
             BoundTask::Hw(exe) => exe.run_owned(owned),
         }
     }
@@ -215,42 +277,94 @@ impl BuiltStage {
             for arg in &task.args {
                 owned.push(Self::fetch_branch(env, &local, arg, &task.symbol)?);
             }
-            let out = Self::exec(task, owned)?;
+            let out = Self::exec(task, owned, env.pool_ref())?;
             local.insert(task.out_step, out);
         }
         Ok(local.into_iter().collect())
     }
 
+    /// Run the fused Sobel dx+dy pair: one image walk over the shared
+    /// input (borrowed straight from the environment — no clone at all),
+    /// both gradients written into pooled outputs.  Bit-exact with the
+    /// two split kernels the pair replaces.
+    fn run_sobel_pair(&self, env: &FrameEnv, di: usize) -> Result<(Mat, Mat)> {
+        let arg = &self.tasks[di].args[0];
+        let src = match arg.source {
+            Source::External => env.input.as_ref(),
+            Source::Step(s) => env.bufs.get(&s),
+        }
+        .ok_or_else(|| {
+            CourierError::Pipeline(format!(
+                "{}: missing input in frame environment",
+                self.tasks[di].symbol
+            ))
+        })?;
+        let (mut dx, mut dy) = match env.pool_ref() {
+            Some(p) => (p.acquire(src.shape()), p.acquire(src.shape())),
+            None => (Mat::zeros(src.shape()), Mat::zeros(src.shape())),
+        };
+        crate::swlib::imgproc::sobel_xy_into(src, &mut dx, &mut dy)?;
+        Ok((dx, dy))
+    }
+
+    /// Move one taken (dying) argument out of the environment.
+    fn take_arg(env: &mut FrameEnv, arg: &ArgRef, symbol: &str) -> Result<Mat> {
+        match arg.source {
+            Source::External => env.input.take().ok_or_else(|| {
+                CourierError::Pipeline(format!("{symbol}: external input already consumed"))
+            }),
+            Source::Step(s) => env.bufs.remove(&s).ok_or_else(|| {
+                CourierError::Pipeline(format!("{symbol}: missing buffer of step {s}"))
+            }),
+        }
+    }
+
     /// Run one task against the mutable environment (sequential path,
     /// where moves are allowed).
     fn run_task_seq(&self, env: &mut FrameEnv, task: &BoundTaskSpec) -> Result<()> {
+        // in-place fast path: a unary elementwise op whose input buffer
+        // dies at this call mutates it instead of producing a new buffer
+        if let BoundTask::Sw(entry) = &task.bound {
+            if entry.arity == 1 && task.args.len() == 1 && task.args[0].take {
+                if let Some(ip) = &entry.inplace {
+                    let m = Self::take_arg(env, &task.args[0], &task.symbol)?;
+                    let out = ip(m)?;
+                    env.bufs.insert(task.out_step, out);
+                    return Ok(());
+                }
+            }
+        }
         let mut owned = Vec::with_capacity(task.args.len());
         for arg in &task.args {
-            let m = match (arg.source, arg.take) {
-                (Source::External, true) => env
-                    .input
-                    .take()
-                    .ok_or_else(|| CourierError::Pipeline(format!(
-                        "{}: external input already consumed",
-                        task.symbol
-                    )))?,
-                (Source::External, false) => env
-                    .input
-                    .clone()
-                    .ok_or_else(|| CourierError::Pipeline(format!(
-                        "{}: external input already consumed",
-                        task.symbol
-                    )))?,
-                (Source::Step(s), true) => env.bufs.remove(&s).ok_or_else(|| {
-                    CourierError::Pipeline(format!("{}: missing buffer of step {s}", task.symbol))
-                })?,
-                (Source::Step(s), false) => env.bufs.get(&s).cloned().ok_or_else(|| {
-                    CourierError::Pipeline(format!("{}: missing buffer of step {s}", task.symbol))
-                })?,
+            let m = if arg.take {
+                Self::take_arg(env, arg, &task.symbol)?
+            } else {
+                match arg.source {
+                    Source::External => env
+                        .input
+                        .as_ref()
+                        .map(|m| env.clone_mat(m))
+                        .ok_or_else(|| {
+                            CourierError::Pipeline(format!(
+                                "{}: external input already consumed",
+                                task.symbol
+                            ))
+                        })?,
+                    Source::Step(s) => env
+                        .bufs
+                        .get(&s)
+                        .map(|m| env.clone_mat(m))
+                        .ok_or_else(|| {
+                            CourierError::Pipeline(format!(
+                                "{}: missing buffer of step {s}",
+                                task.symbol
+                            ))
+                        })?,
+                }
             };
             owned.push(m);
         }
-        let out = Self::exec(task, owned)?;
+        let out = Self::exec(task, owned, env.pool_ref())?;
         env.bufs.insert(task.out_step, out);
         Ok(())
     }
@@ -267,6 +381,11 @@ impl StageFilter<FrameEnv> for BuiltStage {
             for task in &self.tasks {
                 self.run_task_seq(&mut env, task)?;
             }
+        } else if let Some((di, yi)) = self.sobel_pair {
+            // the two sibling gradients fuse into one image walk
+            let (dx, dy) = self.run_sobel_pair(&env, di)?;
+            env.bufs.insert(self.tasks[di].out_step, dx);
+            env.bufs.insert(self.tasks[yi].out_step, dy);
         } else {
             // fork-join: sibling branches read the shared environment
             // immutably and merge their outputs after the join.  The
@@ -294,11 +413,16 @@ impl StageFilter<FrameEnv> for BuiltStage {
                 }
             }
         }
+        // per-stage buffer GC: dead buffers go back to the pool
         for s in &self.drop_after {
-            env.bufs.remove(s);
+            if let Some(m) = env.bufs.remove(s) {
+                env.release(m);
+            }
         }
         if self.drop_input {
-            env.input = None;
+            if let Some(m) = env.input.take() {
+                env.release(m);
+            }
         }
         Ok(env)
     }
@@ -609,12 +733,85 @@ pub fn instantiate(
     let stage_branches: Vec<Vec<Vec<usize>>> =
         plan.stages.iter().map(|s| s.branches(&edges)).collect();
 
+    // Can flat tasks `fi` (cvtColor) and `fi + 1` (cornerHarris) collapse
+    // into the fused gray→response mega-kernel?  Both must be software,
+    // directly chained, and the gray intermediate must have no other
+    // consumer (nor be the terminal output) — then skipping its trip
+    // through the frame environment is unobservable.
+    fn fusable_cvt_harris(
+        a: &TaskSpec,
+        b: &TaskSpec,
+        gray: usize,
+        all_args: &[Vec<Source>],
+        fi: usize,
+        terminal_step: usize,
+    ) -> bool {
+        a.symbol == "cv::cvtColor"
+            && b.symbol == "cv::cornerHarris"
+            && matches!(a.kind, TaskKind::Sw)
+            && matches!(b.kind, TaskKind::Sw)
+            && gray != terminal_step
+            && all_args[fi + 1] == [Source::Step(gray)]
+            && all_args
+                .iter()
+                .flatten()
+                .filter(|s| **s == Source::Step(gray))
+                .count()
+                == 1
+    }
+
     let mut filters: Vec<Box<dyn StageFilter<FrameEnv>>> = Vec::with_capacity(plan.stages.len());
     let mut fi = 0usize;
     for (si, stage) in plan.stages.iter().enumerate() {
         let fork_join = stage_branches[si].len() > 1;
         let mut bound_tasks = Vec::with_capacity(stage.tasks.len());
-        for task in &stage.tasks {
+        let mut ti = 0usize;
+        while ti < stage.tasks.len() {
+            let task = &stage.tasks[ti];
+            // kernel-fusion selection: consecutive SW tasks covering the
+            // whole gray→response chain inside one sequential stage bind
+            // as the registry's fused mega-kernel — but only while the
+            // live registry still resolves both constituent symbols to
+            // the exact implementations the fused entry composes
+            // (`fuses_exactly`): a re-registered custom cvtColor or
+            // cornerHarris disables fusion instead of being bypassed
+            if !fork_join
+                && ti + 1 < stage.tasks.len()
+                && fusable_cvt_harris(
+                    task,
+                    &stage.tasks[ti + 1],
+                    flat[fi].out_step,
+                    &all_args,
+                    fi,
+                    terminal_step,
+                )
+                && registry.contains(FUSED_CVT_HARRIS)
+                && registry.resolve(FUSED_CVT_HARRIS)?.fuses_exactly(&[
+                    registry.resolve(&task.symbol)?,
+                    registry.resolve(&stage.tasks[ti + 1].symbol)?,
+                ])
+            {
+                let entry = registry.resolve(FUSED_CVT_HARRIS)?.clone();
+                let args: Vec<ArgRef> = all_args[fi]
+                    .iter()
+                    .enumerate()
+                    .map(|(ai, src)| ArgRef {
+                        source: *src,
+                        take: last_occurrence.get(src) == Some(&(fi, ai)),
+                    })
+                    .collect();
+                if entry.arity == args.len() {
+                    bound_tasks.push(BoundTaskSpec {
+                        bound: BoundTask::Sw(entry),
+                        args,
+                        out_step: flat[fi + 1].out_step,
+                        symbol: FUSED_CVT_HARRIS.to_string(),
+                    });
+                    fi += 2;
+                    ti += 2;
+                    continue;
+                }
+            }
             let bound = match &task.kind {
                 TaskKind::Sw => BoundTask::Sw(registry.resolve(&task.symbol)?.clone()),
                 TaskKind::Hw { artifact, .. } => {
@@ -654,6 +851,7 @@ pub fn instantiate(
                 symbol: task.symbol.clone(),
             });
             fi += 1;
+            ti += 1;
         }
 
         // buffers that die here: last consumed in this stage, or produced
@@ -675,12 +873,40 @@ pub fn instantiate(
         }
         let drop_input = last_use_stage.get(&Source::External) == Some(&si);
 
-        let label = stage
-            .tasks
-            .iter()
-            .map(|t| t.symbol.as_str())
-            .collect::<Vec<_>>()
-            .join(if fork_join { " || " } else { " ; " });
+        // fused Sobel-pair selection: a fork-join stage that is exactly
+        // the two sibling gradients over one shared input runs as one
+        // image walk — gated on the live registry still binding the
+        // standard Sobel kernels (an override disables the substitution)
+        let sobel_pair = if fork_join
+            && stage_branches[si].len() == 2
+            && stage_branches[si].iter().all(|b| b.len() == 1)
+            && registry.sobel_pair_intact()
+        {
+            let (a, b) = (stage_branches[si][0][0], stage_branches[si][1][0]);
+            let sw_unary_same_input = matches!(bound_tasks[a].bound, BoundTask::Sw(_))
+                && matches!(bound_tasks[b].bound, BoundTask::Sw(_))
+                && bound_tasks[a].args.len() == 1
+                && bound_tasks[b].args.len() == 1
+                && bound_tasks[a].args[0].source == bound_tasks[b].args[0].source;
+            match (bound_tasks[a].symbol.as_str(), bound_tasks[b].symbol.as_str()) {
+                ("cv::Sobel", "cv::SobelY") if sw_unary_same_input => Some((a, b)),
+                ("cv::SobelY", "cv::Sobel") if sw_unary_same_input => Some((b, a)),
+                _ => None,
+            }
+        } else {
+            None
+        };
+
+        // label from the *bound* tasks, so a fused binding is visible
+        let label = if sobel_pair.is_some() {
+            FUSED_SOBEL_PAIR.to_string()
+        } else {
+            bound_tasks
+                .iter()
+                .map(|t| t.symbol.as_str())
+                .collect::<Vec<_>>()
+                .join(if fork_join { " || " } else { " ; " })
+        };
         filters.push(Box::new(BuiltStage {
             label,
             mode: if stage.serial {
@@ -690,6 +916,7 @@ pub fn instantiate(
             },
             tasks: bound_tasks,
             branches: stage_branches[si].clone(),
+            sobel_pair,
             drop_after,
             drop_input,
         }));
@@ -700,7 +927,13 @@ pub fn instantiate(
     // config must come up exactly as written
     let pipeline = TokenPipeline::new(filters, plan.threads.max(1), plan.tokens.max(1))?;
     let control_program = super::codegen::render_control_program(plan);
-    Ok(BuiltPipeline { plan: plan.clone(), pipeline, control_program, terminal_step })
+    Ok(BuiltPipeline {
+        plan: plan.clone(),
+        pipeline,
+        control_program,
+        terminal_step,
+        pool: Arc::new(BufferPool::new()),
+    })
 }
 
 /// Per-IR-function input shapes, in argument order (public: the tuner
@@ -1028,6 +1261,13 @@ mod tests {
         }
 
         let fj = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        // the two-sibling gradient stage binds as the fused one-walk pair
+        assert_eq!(
+            fj.pipeline.stage_labels()[1],
+            FUSED_SOBEL_PAIR,
+            "{:?}",
+            fj.pipeline.stage_labels()
+        );
         let interp = crate::app::Interpreter::new(
             harris_dag_demo(16, 16),
             std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
@@ -1044,6 +1284,207 @@ mod tests {
             let want = interp.run(&[f]).unwrap().remove(0);
             assert_eq!(outs[i], want, "frame {i}");
         }
+    }
+
+    #[test]
+    fn consecutive_sw_cvt_harris_fuse_into_mega_kernel() {
+        // regroup the CPU-only Harris chain so cvtColor and cornerHarris
+        // share a stage: the builder must bind them as the fused
+        // gray→response mega-kernel, bit-exactly
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let built = build(&demo_ir(20, 24), &db, &rt, &registry, &cfg).unwrap();
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        assert_eq!(tasks.len(), 4);
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 4,
+            edges: built.plan.edges.clone(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
+                StageSpec { index: 1, serial: true, tasks: tasks[2..4].to_vec() },
+            ],
+        };
+        let fused = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        let labels = fused.pipeline.stage_labels();
+        assert!(
+            labels[0].contains(crate::swlib::FUSED_CVT_HARRIS),
+            "stage 0 should bind the fused kernel: {labels:?}"
+        );
+
+        let interp = crate::app::Interpreter::new(
+            corner_harris_demo(20, 24),
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        for seed in 0..3u64 {
+            let frame = synth::noise_rgb(20, 24, seed);
+            let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+            assert_eq!(fused.process_one(frame.clone()).unwrap(), want, "seed {seed}");
+            assert_eq!(built.process_one(frame).unwrap(), want, "seed {seed} (unfused)");
+        }
+        let frames: Vec<Mat> = (0..6).map(|s| synth::noise_rgb(20, 24, 50 + s)).collect();
+        let (outs, _) = fused.run(frames.clone()).unwrap();
+        for (i, f) in frames.into_iter().enumerate() {
+            assert_eq!(outs[i], interp.run(&[f]).unwrap().remove(0), "frame {i}");
+        }
+    }
+
+    #[test]
+    fn fusion_skipped_when_constituent_is_re_registered() {
+        // overriding cv::cvtColor with a custom implementation must
+        // disable the fused binding (which hardcodes the standard
+        // kernels), not silently bypass the override
+        let (_tmp, db, rt, mut registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let built = build(&demo_ir(16, 16), &db, &rt, &registry, &cfg).unwrap();
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 4,
+            edges: built.plan.edges.clone(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
+                StageSpec { index: 1, serial: true, tasks: tasks[2..4].to_vec() },
+            ],
+        };
+        registry.register(
+            "cv::cvtColor",
+            1,
+            std::sync::Arc::new(|a: &[&Mat]| {
+                let mut g = crate::swlib::imgproc::cvt_color(a[0])?;
+                for v in g.as_mut_slice() {
+                    *v += 1.0;
+                }
+                Ok(g)
+            }),
+        );
+        let unfused = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        assert!(
+            !unfused.pipeline.stage_labels()[0].contains('+'),
+            "override must disable fusion: {:?}",
+            unfused.pipeline.stage_labels()
+        );
+        // and the pipeline really runs the overridden cvtColor
+        let frame = synth::noise_rgb(16, 16, 3);
+        let gray = registry.call("cv::cvtColor", &[&frame]).unwrap();
+        let resp = registry.call("cv::cornerHarris", &[&gray]).unwrap();
+        let norm = registry.call("cv::normalize", &[&resp]).unwrap();
+        let want = registry.call("cv::convertScaleAbs", &[&norm]).unwrap();
+        assert_eq!(unfused.process_one(frame).unwrap(), want);
+    }
+
+    #[test]
+    fn fusion_skipped_when_gray_has_another_consumer() {
+        // gray feeds cornerHarris AND harrisResponse: collapsing the pair
+        // would starve the second consumer, so the builder must not fuse
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = crate::app::parse_program(
+            "program fuseNo\n\
+             input frame 12x12x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call resp = cv::cornerHarris(gray)\n\
+             call both = cv::harrisResponse(resp, gray)\n\
+             call out = cv::convertScaleAbs(both)\n\
+             output out\n",
+        )
+        .unwrap();
+        let built = build(&ir_of(&prog, 12, 12), &db, &rt, &registry, &cfg).unwrap();
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        assert_eq!(tasks.len(), 4);
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 4,
+            edges: built.plan.edges.clone(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
+                StageSpec { index: 1, serial: true, tasks: tasks[2..4].to_vec() },
+            ],
+        };
+        regrouped.validate_dag().unwrap();
+        let unfused = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        assert!(
+            !unfused.pipeline.stage_labels()[0].contains('+'),
+            "{:?}",
+            unfused.pipeline.stage_labels()
+        );
+        let frame = synth::noise_rgb(12, 12, 7);
+        let interp = crate::app::Interpreter::new(
+            prog,
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+        assert_eq!(unfused.process_one(frame).unwrap(), want);
+    }
+
+    #[test]
+    fn sobel_pair_fusion_disabled_by_override_and_stays_correct() {
+        // same regrouped harris_dag plan as the fork-join test, but with
+        // cv::Sobel re-registered: the fused pair must NOT be selected,
+        // and the generic fork-join path must run the override
+        let (_tmp, db, rt, mut registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = harris_dag_demo(16, 16);
+        let built = build(&ir_of(&prog, 16, 16), &db, &rt, &registry, &cfg).unwrap();
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 4,
+            edges: built.plan.edges.clone(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
+                StageSpec { index: 1, serial: false, tasks: tasks[1..3].to_vec() },
+                StageSpec { index: 2, serial: true, tasks: tasks[3..6].to_vec() },
+            ],
+        };
+        registry.register(
+            "cv::Sobel",
+            1,
+            std::sync::Arc::new(|a: &[&Mat]| {
+                let mut g = crate::swlib::imgproc::sobel(a[0], 1, 0)?;
+                for v in g.as_mut_slice() {
+                    *v *= 2.0;
+                }
+                Ok(g)
+            }),
+        );
+        assert!(!registry.sobel_pair_intact());
+        let fj = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        assert_ne!(fj.pipeline.stage_labels()[1], FUSED_SOBEL_PAIR);
+
+        // the pipeline must run the overridden Sobel (2x gradients)
+        let frame = synth::noise_rgb(16, 16, 4);
+        let gray = registry.call("cv::cvtColor", &[&frame]).unwrap();
+        let ix = registry.call("cv::Sobel", &[&gray]).unwrap();
+        let iy = registry.call("cv::SobelY", &[&gray]).unwrap();
+        let resp = registry.call("cv::harrisResponse", &[&ix, &iy]).unwrap();
+        let norm = registry.call("cv::normalize", &[&resp]).unwrap();
+        let want = registry.call("cv::convertScaleAbs", &[&norm]).unwrap();
+        assert_eq!(fj.process_one(frame).unwrap(), want);
     }
 
     #[test]

@@ -22,6 +22,7 @@ mod builder;
 mod codegen;
 mod partition;
 mod plan;
+mod pool;
 mod sim;
 mod tbb;
 
@@ -34,5 +35,6 @@ pub use partition::{
     bottleneck, optimal, paper_policy, partition, partition_dag, respects_dag, Partition,
 };
 pub use plan::{PlanEdge, StagePlan, StageSpec, TaskKind, TaskSpec};
+pub use pool::{BufferPool, PoolStats};
 pub use sim::{paper_table1_plan, simulate, SimResult};
 pub use tbb::{FilterMode, FnFilter, PipelineStats, StageFilter, StageSpan, TokenPipeline};

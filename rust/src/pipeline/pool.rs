@@ -1,0 +1,253 @@
+//! Shape-keyed frame-buffer recycling pool.
+//!
+//! The steady-state frame path used to allocate a fresh `Mat` per stage
+//! output (and per defensive clone), so a streamed pipeline was
+//! allocator-bound before it was compute-bound.  A [`BufferPool`] breaks
+//! that: stage outputs draw storage from per-shape shelves and dead
+//! buffers (the builder's move-vs-clone liveness + per-stage GC decides
+//! when) return to them, so after a warm-up stream the per-frame
+//! allocation count is zero — every acquire is a recycle hit.
+//!
+//! Two details make the steady state actually close:
+//!
+//! * **cross-shape downcycling** — an exact-shape miss falls back to the
+//!   best-fit spare whose *capacity* covers the request (smallest
+//!   sufficient capacity wins).  The external input frame's `(H, W, 3)`
+//!   storage gets recycled into `(H, W)` intermediates instead of
+//!   ballooning on an idle shelf while gray-scale requests allocate.
+//! * **bounded shelves** — at most [`MAX_IDLE_PER_SHAPE`] spares are kept
+//!   per shape; extra releases free their memory, so a burst never pins
+//!   its high-water mark forever.
+//!
+//! Stats are monotonic counters: `hits`/`misses` count acquires,
+//! `released` counts returns (including "foreign" buffers the pool never
+//! handed out, e.g. recycled input frames — which is why
+//! [`PoolStats::outstanding`] is a saturating estimate, not an exact
+//! ledger).  The zero-allocation invariant is asserted as "`misses` stays
+//! flat across a steady-state window" — see `tests/pool_steady_state.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::image::Mat;
+
+/// Spare storages kept per shape; releases beyond this are dropped (freed)
+/// instead of shelved.
+const MAX_IDLE_PER_SHAPE: usize = 32;
+
+/// Monotonic pool counters (a snapshot — see [`BufferPool::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Acquires served from a shelf (exact shape or downcycled capacity).
+    pub hits: u64,
+    /// Acquires that had to allocate.
+    pub misses: u64,
+    /// Buffers returned to the pool (shelved or dropped over the cap).
+    pub released: u64,
+}
+
+impl PoolStats {
+    /// Total acquires.
+    pub fn acquires(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of acquires served without allocating, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.acquires();
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    /// Acquired-but-not-yet-released estimate.  Saturating: foreign
+    /// releases (buffers the pool never handed out, e.g. recycled input
+    /// frames) can push `released` past `acquires`.
+    pub fn outstanding(&self) -> u64 {
+        self.acquires().saturating_sub(self.released)
+    }
+}
+
+/// A shape-keyed recycling pool for `Mat` storage.
+///
+/// Thread-safe; one pool is shared by every stage of a built pipeline
+/// (acquires/releases happen on whichever worker runs the stage).
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    /// shape -> spare storages (each spare's `capacity() >=` the shelf's
+    /// element count; lengths are fixed up on acquire).  BTreeMap keeps
+    /// the downcycling scan deterministic.
+    shelves: Mutex<BTreeMap<Vec<usize>, Vec<Vec<f32>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    released: AtomicU64,
+}
+
+impl BufferPool {
+    /// Empty pool.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a `Mat` of `shape` with **unspecified contents** (recycled
+    /// data or zeros) — callers overwrite every element.  Prefers an
+    /// exact-shape spare, then the best-fit (smallest sufficient
+    /// capacity) spare of any shape, then allocates.
+    pub fn acquire(&self, shape: &[usize]) -> Mat {
+        let n: usize = shape.iter().product();
+        let mut shelves = self.shelves.lock().expect("pool lock");
+        if let Some(storage) = shelves.get_mut(shape).and_then(Vec::pop) {
+            drop(shelves);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Mat::from_storage(shape, storage);
+        }
+        // downcycle: best-fit across every shelf by spare capacity
+        let mut best: Option<(usize, Vec<usize>, usize)> = None; // (cap, key, idx)
+        for (key, stack) in shelves.iter() {
+            for (i, spare) in stack.iter().enumerate() {
+                let cap = spare.capacity();
+                if cap >= n && best.as_ref().is_none_or(|(bc, _, _)| cap < *bc) {
+                    best = Some((cap, key.clone(), i));
+                }
+            }
+        }
+        if let Some((_, key, i)) = best {
+            let stack = shelves.get_mut(&key).expect("key just observed");
+            let storage = stack.swap_remove(i);
+            if stack.is_empty() {
+                shelves.remove(&key);
+            }
+            drop(shelves);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Mat::from_storage(shape, storage);
+        }
+        drop(shelves);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Mat::zeros(shape)
+    }
+
+    /// Take a pooled copy of `src` (acquire + memcpy — the pool-aware
+    /// replacement for `Mat::clone` on the frame path).
+    pub fn acquire_cloned(&self, src: &Mat) -> Mat {
+        let mut out = self.acquire(src.shape());
+        out.as_mut_slice().copy_from_slice(src.as_slice());
+        out
+    }
+
+    /// Return a dead buffer's storage to its shape shelf.  Accepts
+    /// buffers the pool never handed out (recycling external input
+    /// frames is the point); spares beyond [`MAX_IDLE_PER_SHAPE`] are
+    /// dropped.
+    pub fn release(&self, m: Mat) {
+        self.released.fetch_add(1, Ordering::Relaxed);
+        let shape = m.shape().to_vec();
+        let storage = m.into_vec();
+        let mut shelves = self.shelves.lock().expect("pool lock");
+        let stack = shelves.entry(shape).or_default();
+        if stack.len() < MAX_IDLE_PER_SHAPE {
+            stack.push(storage);
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            released: self.released.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Total spare buffers currently shelved (diagnostics).
+    pub fn idle(&self) -> usize {
+        self.shelves
+            .lock()
+            .expect("pool lock")
+            .values()
+            .map(Vec::len)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_roundtrip_hits() {
+        let pool = BufferPool::new();
+        let a = pool.acquire(&[4, 4]);
+        assert_eq!(pool.stats().misses, 1);
+        pool.release(a);
+        let b = pool.acquire(&[4, 4]);
+        assert_eq!(b.shape(), &[4, 4]);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.released), (1, 1, 1));
+    }
+
+    #[test]
+    fn downcycles_larger_capacity_best_fit() {
+        let pool = BufferPool::new();
+        // shelve a big (4, 4, 3) spare and a closer-fit (5, 5) spare
+        pool.release(Mat::zeros(&[4, 4, 3])); // cap 48
+        pool.release(Mat::zeros(&[5, 5])); // cap 25
+        let m = pool.acquire(&[4, 4]); // wants 16: best fit is the 25
+        assert_eq!(m.shape(), &[4, 4]);
+        assert_eq!(m.len(), 16);
+        assert_eq!(pool.stats().misses, 0);
+        assert_eq!(pool.idle(), 1, "the (4,4,3) spare stays shelved");
+    }
+
+    #[test]
+    fn too_small_spares_do_not_serve() {
+        let pool = BufferPool::new();
+        pool.release(Mat::zeros(&[2, 2]));
+        let m = pool.acquire(&[8, 8]);
+        assert_eq!(m.len(), 64);
+        assert_eq!(pool.stats().misses, 1);
+    }
+
+    #[test]
+    fn acquire_cloned_copies() {
+        let pool = BufferPool::new();
+        let src = Mat::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let c = pool.acquire_cloned(&src);
+        assert_eq!(c, src);
+        // recycled storage must be fully overwritten by the copy
+        pool.release(Mat::full(&[2, 2], 9.0));
+        let c2 = pool.acquire_cloned(&src);
+        assert_eq!(c2, src);
+    }
+
+    #[test]
+    fn shelves_are_bounded() {
+        let pool = BufferPool::new();
+        for _ in 0..(MAX_IDLE_PER_SHAPE + 10) {
+            pool.release(Mat::zeros(&[3, 3]));
+        }
+        assert_eq!(pool.idle(), MAX_IDLE_PER_SHAPE);
+        assert_eq!(pool.stats().released, (MAX_IDLE_PER_SHAPE + 10) as u64);
+    }
+
+    #[test]
+    fn steady_cycle_stops_missing() {
+        // emulate a frame cycle: acquire 2, release 2, repeatedly
+        let pool = BufferPool::new();
+        for _ in 0..3 {
+            let a = pool.acquire(&[6, 8]);
+            let b = pool.acquire(&[8, 10]);
+            pool.release(a);
+            pool.release(b);
+        }
+        let warm = pool.stats().misses;
+        for _ in 0..10 {
+            let a = pool.acquire(&[6, 8]);
+            let b = pool.acquire(&[8, 10]);
+            pool.release(a);
+            pool.release(b);
+        }
+        assert_eq!(pool.stats().misses, warm, "steady cycle must not allocate");
+    }
+}

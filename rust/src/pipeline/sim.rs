@@ -118,7 +118,11 @@ pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize
     }
 
     while completed < frames {
-        // pick the earliest-startable (token, stage) action
+        // pick the earliest-startable (token, stage) action.  The
+        // earliest-free CPU worker is loop-invariant across the token
+        // scan (workers are only re-booked after a pick), so hoist it —
+        // the scan is the simulator's hot loop (O(frames · tokens)).
+        let earliest_worker = *worker_free.iter().min().expect("workers");
         let mut best: Option<(u64, usize)> = None; // (start_time, token)
         for t in 0..token_ready.len() {
             let s = token_stage[t];
@@ -134,8 +138,7 @@ pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize
                 start = start.max(serial_free[s]);
             }
             // earliest CPU worker
-            let w = *worker_free.iter().min().expect("workers");
-            start = start.max(w);
+            start = start.max(earliest_worker);
             // fabric units
             for &u in &stage_units[s] {
                 start = start.max(unit_free[u]);

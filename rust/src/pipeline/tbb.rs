@@ -12,11 +12,19 @@
 //! * unlike a rigid hardware pipeline, a stage may start its next token
 //!   before the downstream stage finished the previous one — the
 //!   stall-reduction property ablation C measures.
+//!
+//! Runtime internals (the low-contention rework): per-stage queues are
+//! bounded rings sized to the token pool — seq-addressed slots for serial
+//! stages, FIFO for parallel ones — so a push/pop is O(1) under a short
+//! lock with no per-token allocation; starved workers spin briefly and
+//! then **park on a condvar** instead of burning CPU, woken by the next
+//! state change; and stage spans are recorded into per-worker local
+//! buffers merged once at join, not a global mutex on the hot path.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::image::Mat;
 use crate::{CourierError, Result};
@@ -144,9 +152,145 @@ impl PipelineStats {
     }
 }
 
+/// Spin iterations (yields) before a starved worker parks on the condvar.
+const SPIN_LIMIT: u32 = 64;
+
+/// Parked-worker wake timeout — a backstop against lost wakeups; real
+/// wakeups arrive via [`Shared::notify`] the moment state changes.
+const PARK_TIMEOUT: Duration = Duration::from_millis(1);
+
+/// Fixed-capacity FIFO ring for `parallel` stage queues.  The token pool
+/// bounds the entries a stage can hold to `tokens`, so the ring never
+/// grows in a healthy run; the growth path is a safety net for
+/// error-poisoned runs, whose early-exit races can break that window.
+struct FifoRing<P> {
+    buf: Vec<Option<(u64, P)>>,
+    head: usize,
+    len: usize,
+}
+
+impl<P> FifoRing<P> {
+    fn new(cap: usize) -> Self {
+        Self { buf: (0..cap.max(1)).map(|_| None).collect(), head: 0, len: 0 }
+    }
+
+    fn push(&mut self, seq: u64, p: P) {
+        if self.len == self.buf.len() {
+            self.grow();
+        }
+        let cap = self.buf.len();
+        self.buf[(self.head + self.len) % cap] = Some((seq, p));
+        self.len += 1;
+    }
+
+    fn grow(&mut self) {
+        let cap = self.buf.len();
+        let mut next: Vec<Option<(u64, P)>> = (0..cap * 2).map(|_| None).collect();
+        for (k, slot) in next.iter_mut().take(self.len).enumerate() {
+            *slot = self.buf[(self.head + k) % cap].take();
+        }
+        self.buf = next;
+        self.head = 0;
+    }
+
+    fn pop(&mut self) -> Option<(u64, P)> {
+        if self.len == 0 {
+            return None;
+        }
+        let e = self.buf[self.head].take();
+        self.head = (self.head + 1) % self.buf.len();
+        self.len -= 1;
+        e
+    }
+}
+
+/// Seq-addressed slot ring for `serial_in_order` stage queues: the entry
+/// for seq `s` lives at `s % capacity`.  In a healthy run every seq
+/// waiting at a serial stage is live (it has not passed the stage, so it
+/// was never emitted) and the token pool bounds live tokens to the
+/// capacity, which keeps waiting seqs within one capacity window of
+/// `next_seq` — the home slot is always free.  The displacement path is
+/// a safety net for error-poisoned runs only.
+struct SlotRing<P> {
+    slots: Vec<Option<(u64, P)>>,
+    /// Sticky flag: an entry was ever placed off its home slot, so
+    /// lookups must fall back to a scan.
+    displaced: bool,
+}
+
+impl<P> SlotRing<P> {
+    fn new(cap: usize) -> Self {
+        Self { slots: (0..cap.max(1)).map(|_| None).collect(), displaced: false }
+    }
+
+    fn home(&self, seq: u64) -> usize {
+        (seq % self.slots.len() as u64) as usize
+    }
+
+    fn insert(&mut self, seq: u64, p: P) {
+        let i = self.home(seq);
+        if self.slots[i].is_none() {
+            self.slots[i] = Some((seq, p));
+            return;
+        }
+        // degenerate (poisoned-run) fallback: linear-probe a free slot
+        let n = self.slots.len();
+        for d in 1..n {
+            let j = (i + d) % n;
+            if self.slots[j].is_none() {
+                self.slots[j] = Some((seq, p));
+                self.displaced = true;
+                return;
+            }
+        }
+        // cannot happen while the token pool bound holds
+        self.slots.push(Some((seq, p)));
+        self.displaced = true;
+    }
+
+    fn contains(&self, seq: u64) -> bool {
+        let i = self.home(seq);
+        if matches!(&self.slots[i], Some((s, _)) if *s == seq) {
+            return true;
+        }
+        self.displaced && self.slots.iter().any(|e| matches!(e, Some((s, _)) if *s == seq))
+    }
+
+    fn take(&mut self, seq: u64) -> Option<P> {
+        let i = self.home(seq);
+        if matches!(&self.slots[i], Some((s, _)) if *s == seq) {
+            return self.slots[i].take().map(|(_, p)| p);
+        }
+        if !self.displaced {
+            return None;
+        }
+        let j = self.slots.iter().position(|e| matches!(e, Some((s, _)) if *s == seq))?;
+        self.slots[j].take().map(|(_, p)| p)
+    }
+}
+
+/// One stage's bounded input queue.
+enum StageQueue<P> {
+    Serial(SlotRing<P>),
+    Parallel(FifoRing<P>),
+}
+
+impl<P> StageQueue<P> {
+    fn insert(&mut self, seq: u64, p: P) {
+        match self {
+            StageQueue::Serial(r) => r.insert(seq, p),
+            StageQueue::Parallel(r) => r.push(seq, p),
+        }
+    }
+}
+
 struct Shared<P> {
-    /// Per-stage input queues keyed by token seq.
-    queues: Vec<Mutex<BTreeMap<u64, P>>>,
+    /// Per-stage input queues: seq-addressed slots for serial stages,
+    /// FIFO rings for parallel ones — O(1) push/pop under a short lock
+    /// with no per-token allocation (the `Mutex<BTreeMap>` queues these
+    /// replace allocated and rebalanced a node per insert, under the
+    /// lock).
+    queues: Vec<Mutex<StageQueue<P>>>,
     /// Next token a serial stage must take.
     next_seq: Vec<AtomicU64>,
     /// Serial stage currently busy?
@@ -159,15 +303,40 @@ struct Shared<P> {
     outputs: Mutex<BTreeMap<u64, P>>,
     /// First error (poisons the run).
     error: Mutex<Option<CourierError>>,
-    /// Recorded spans.
+    /// Per-worker span buffers are merged here once at worker exit; the
+    /// hot path records into worker-local Vecs.
     spans: Mutex<Vec<StageSpan>>,
     /// All inputs injected?
     input_done: AtomicBool,
+    /// Bumped on every state change a starved worker could be waiting
+    /// for (read before a scan, compared before parking).
+    work_gen: AtomicU64,
+    /// Workers currently parked on `park_cv`.
+    parked: AtomicUsize,
+    park_lock: Mutex<()>,
+    park_cv: Condvar,
 }
 
 impl<P> Shared<P> {
     fn poisoned(&self) -> bool {
         self.error.lock().expect("error lock").is_some()
+    }
+
+    /// Publish a state change: bump the generation and wake parked
+    /// workers (skipping the lock entirely while nobody is parked).
+    ///
+    /// The gen bump and the `parked` read must be `SeqCst` (as must the
+    /// parking side's `parked` bump and gen read): this is a Dekker
+    /// store-buffering pair, and with acquire/release alone both sides
+    /// may read the other's *old* value — the producer skips the wake
+    /// while the consumer commits to waiting, stalling a runnable token
+    /// for the full park timeout.
+    fn notify(&self) {
+        self.work_gen.fetch_add(1, Ordering::SeqCst);
+        if self.parked.load(Ordering::SeqCst) > 0 {
+            let _guard = self.park_lock.lock().expect("park lock");
+            self.park_cv.notify_all();
+        }
     }
 }
 
@@ -201,6 +370,11 @@ impl<P: Send> TokenPipeline<P> {
         self.filters.len()
     }
 
+    /// Stage labels in order (diagnostics: shows e.g. fused bindings).
+    pub fn stage_labels(&self) -> Vec<String> {
+        self.filters.iter().map(|f| f.name()).collect()
+    }
+
     /// Process one frame synchronously through all stages on the calling
     /// thread (the blocking single-call path of the off-load wrapper).
     pub fn process_one(&self, input: P) -> Result<P> {
@@ -216,7 +390,18 @@ impl<P: Send> TokenPipeline<P> {
     pub fn run(&self, inputs: Vec<P>) -> Result<(Vec<P>, PipelineStats)> {
         let n_stages = self.filters.len();
         let shared = Shared {
-            queues: (0..n_stages).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            queues: self
+                .filters
+                .iter()
+                .map(|f| {
+                    Mutex::new(match f.mode() {
+                        FilterMode::SerialInOrder => {
+                            StageQueue::Serial(SlotRing::new(self.tokens))
+                        }
+                        FilterMode::Parallel => StageQueue::Parallel(FifoRing::new(self.tokens)),
+                    })
+                })
+                .collect(),
             next_seq: (0..n_stages).map(|_| AtomicU64::new(0)).collect(),
             busy: (0..n_stages).map(|_| AtomicBool::new(false)).collect(),
             in_flight: AtomicUsize::new(0),
@@ -225,6 +410,10 @@ impl<P: Send> TokenPipeline<P> {
             error: Mutex::new(None),
             spans: Mutex::new(Vec::new()),
             input_done: AtomicBool::new(false),
+            work_gen: AtomicU64::new(0),
+            parked: AtomicUsize::new(0),
+            park_lock: Mutex::new(()),
+            park_cv: Condvar::new(),
         };
         let total = inputs.len() as u64;
         let feed: Mutex<std::vec::IntoIter<P>> = Mutex::new(inputs.into_iter());
@@ -262,22 +451,27 @@ impl<P: Send> TokenPipeline<P> {
     ) {
         let n_stages = self.filters.len();
         let mut idle_spins = 0u32;
+        let mut local_spans: Vec<StageSpan> = Vec::new();
         loop {
             if shared.poisoned() {
-                return;
+                break;
             }
             // Finished? all inputs injected and nothing in flight.
             if shared.input_done.load(Ordering::Acquire)
                 && shared.in_flight.load(Ordering::Acquire) == 0
             {
-                return;
+                break;
             }
+            // Generation read precedes the scan: anything that arrives
+            // after this point bumps the generation, so the parking check
+            // below sees it and skips the wait.
+            let gen = shared.work_gen.load(Ordering::Acquire);
 
             // 1) drain-first: scan stages from the tail for runnable work.
             let mut did_work = false;
             for stage in (0..n_stages).rev() {
                 if let Some((seq, mat)) = self.try_take(shared, stage) {
-                    self.execute(shared, stage, seq, mat, epoch);
+                    self.execute(shared, stage, seq, mat, epoch, &mut local_spans);
                     did_work = true;
                     break;
                 }
@@ -310,63 +504,83 @@ impl<P: Send> TokenPipeline<P> {
                         if seq + 1 == total {
                             shared.input_done.store(true, Ordering::Release);
                         }
+                        shared.notify();
                         idle_spins = 0;
                         continue;
                     } else {
                         // feed exhausted: release the reserved (unused) slot
                         shared.in_flight.fetch_sub(1, Ordering::AcqRel);
                         shared.input_done.store(true, Ordering::Release);
+                        shared.notify();
                     }
                 }
             }
 
-            // 3) idle: yield, escalating to a short sleep.
+            // 3) idle: yield briefly, then park on the condvar until the
+            // next state change (or the timeout backstop) instead of
+            // burning a core on a starved stage.
             idle_spins += 1;
-            if idle_spins < 64 {
+            if idle_spins < SPIN_LIMIT {
                 std::thread::yield_now();
-            } else {
-                std::thread::sleep(std::time::Duration::from_micros(50));
+                continue;
             }
+            let guard = shared.park_lock.lock().expect("park lock");
+            // SeqCst pair with `Shared::notify` (see its doc): announce
+            // the park *before* re-checking the generation
+            shared.parked.fetch_add(1, Ordering::SeqCst);
+            if shared.work_gen.load(Ordering::SeqCst) == gen {
+                let _ = shared
+                    .park_cv
+                    .wait_timeout(guard, PARK_TIMEOUT)
+                    .expect("park lock");
+            } else {
+                drop(guard);
+            }
+            shared.parked.fetch_sub(1, Ordering::SeqCst);
+            idle_spins = 0;
+        }
+        if !local_spans.is_empty() {
+            shared.spans.lock().expect("spans lock").append(&mut local_spans);
         }
     }
 
     /// Try to claim one runnable token for `stage`.
     fn try_take(&self, shared: &Shared<P>, stage: usize) -> Option<(u64, P)> {
-        let mode = self.filters[stage].mode();
         let mut q = shared.queues[stage].lock().expect("queue lock");
-        match mode {
-            FilterMode::Parallel => {
-                let (&seq, _) = q.iter().next()?;
-                let mat = q.remove(&seq).expect("key just observed");
-                Some((seq, mat))
-            }
-            FilterMode::SerialInOrder => {
+        match &mut *q {
+            StageQueue::Parallel(ring) => ring.pop(),
+            StageQueue::Serial(ring) => {
                 let want = shared.next_seq[stage].load(Ordering::Acquire);
-                if !q.contains_key(&want) {
+                if !ring.contains(want) {
                     return None;
                 }
-                // one-at-a-time: claim the busy flag
+                // one-at-a-time: claim the busy flag (still under the
+                // queue lock, so the entry cannot vanish in between)
                 if shared.busy[stage]
                     .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
                     .is_err()
                 {
                     return None;
                 }
-                let mat = q.remove(&want).expect("key just observed");
+                let mat = ring.take(want).expect("entry just observed");
                 Some((want, mat))
             }
         }
     }
 
-    fn execute(&self, shared: &Shared<P>, stage: usize, seq: u64, mat: P, epoch: Instant) {
+    fn execute(
+        &self,
+        shared: &Shared<P>,
+        stage: usize,
+        seq: u64,
+        mat: P,
+        epoch: Instant,
+        spans: &mut Vec<StageSpan>,
+    ) {
         let start_ns = epoch.elapsed().as_nanos() as u64;
         let result = self.filters[stage].apply(mat);
         let end_ns = epoch.elapsed().as_nanos() as u64;
-        shared
-            .spans
-            .lock()
-            .expect("spans lock")
-            .push(StageSpan { stage, token: seq, start_ns, end_ns });
+        spans.push(StageSpan { stage, token: seq, start_ns, end_ns });
 
         if self.filters[stage].mode() == FilterMode::SerialInOrder {
             shared.next_seq[stage].fetch_add(1, Ordering::AcqRel);
@@ -393,6 +607,7 @@ impl<P: Send> TokenPipeline<P> {
                 shared.in_flight.fetch_sub(1, Ordering::AcqRel);
             }
         }
+        shared.notify();
     }
 }
 
@@ -633,6 +848,35 @@ mod tests {
     #[test]
     fn zero_stage_pipeline_rejected() {
         assert!(TokenPipeline::new(vec![], 2, 2).is_err());
+    }
+
+    #[test]
+    fn fifo_ring_is_fifo_and_grows() {
+        let mut r: FifoRing<u32> = FifoRing::new(2);
+        r.push(0, 10);
+        r.push(1, 11);
+        r.push(2, 12); // over capacity: the safety-net growth path
+        assert_eq!(r.pop(), Some((0, 10)));
+        r.push(3, 13);
+        assert_eq!(r.pop(), Some((1, 11)));
+        assert_eq!(r.pop(), Some((2, 12)));
+        assert_eq!(r.pop(), Some((3, 13)));
+        assert_eq!(r.pop(), None);
+    }
+
+    #[test]
+    fn slot_ring_addresses_by_seq_and_probes_when_displaced() {
+        let mut r: SlotRing<u32> = SlotRing::new(4);
+        r.insert(5, 50);
+        r.insert(6, 60);
+        assert!(r.contains(5) && r.contains(6) && !r.contains(7));
+        assert_eq!(r.take(5), Some(50));
+        assert_eq!(r.take(5), None);
+        // collide on the home slot (2 % 4 == 6 % 4): displacement path
+        r.insert(2, 20);
+        assert!(r.contains(2) && r.contains(6));
+        assert_eq!(r.take(2), Some(20));
+        assert_eq!(r.take(6), Some(60));
     }
 
     #[test]

@@ -215,7 +215,13 @@ mod tests {
             f: |e: FrameEnv| Ok(e),
         });
         let pipeline = TokenPipeline::new(vec![id], 1, 1).unwrap();
-        Arc::new(BuiltPipeline { plan, pipeline, control_program: String::new(), terminal_step: 0 })
+        Arc::new(BuiltPipeline {
+            plan,
+            pipeline,
+            control_program: String::new(),
+            terminal_step: 0,
+            pool: Arc::new(crate::pipeline::BufferPool::new()),
+        })
     }
 
     #[test]

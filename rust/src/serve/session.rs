@@ -144,6 +144,14 @@ impl Session {
         self.cache_hit
     }
 
+    /// Buffer-pool counters of the underlying pipeline.  The pool (like
+    /// the pipeline) is shared by every session on the same cached plan,
+    /// so a warm tenant's frames should show a flat `misses` count — the
+    /// steady-state zero-allocation invariant, observable per serve.
+    pub fn pool_stats(&self) -> crate::pipeline::PoolStats {
+        self.pipeline.pool.stats()
+    }
+
     /// Wall-clock the open took, ns (cold opens dwarf warm ones).
     pub fn open_ns(&self) -> u64 {
         self.open_ns

@@ -1,6 +1,19 @@
 //! CPU image-processing functions (ports of `ref.py`, replicate borders).
+//!
+//! Optimized for the steady-state frame path: every kernel has an
+//! `_into`-style out-parameter variant so stage outputs can draw from the
+//! pipeline's [`BufferPool`], each 3x3 stencil runs an interior fast path
+//! over raw slices (no clamped loads, autovectorizable) plus a clamped
+//! border pass, the Gaussian is a separable two-pass, Sobel dx+dy fuse
+//! into one image walk, and [`harris_pipeline`] covers the whole
+//! gray→response chain in one call.  The pre-optimization kernels live in
+//! [`reference`] as the parity oracle: the property suite in
+//! `tests/kernel_parity.rs` pins every fast path to them bit-for-bit
+//! (separable Gaussian: to ~1 ULP, the reassociation cost of the second
+//! pass).
 
 use crate::image::Mat;
+use crate::pipeline::BufferPool;
 use crate::{CourierError, Result};
 
 /// BT.601 luma weights (match `kernels/common.py`).
@@ -18,6 +31,8 @@ const GAUSS3: [[f32; 3]; 3] = [
     [2.0 / 16.0, 4.0 / 16.0, 2.0 / 16.0],
     [1.0 / 16.0, 2.0 / 16.0, 1.0 / 16.0],
 ];
+const LAPLACIAN: [[f32; 3]; 3] = [[0.0, 1.0, 0.0], [1.0, -4.0, 1.0], [0.0, 1.0, 0.0]];
+const SCHARR_DX: [[f32; 3]; 3] = [[-3.0, 0.0, 3.0], [-10.0, 0.0, 10.0], [-3.0, 0.0, 3.0]];
 
 fn expect_gray(m: &Mat, context: &str) -> Result<()> {
     if m.shape().len() != 2 {
@@ -30,8 +45,100 @@ fn expect_gray(m: &Mat, context: &str) -> Result<()> {
     Ok(())
 }
 
+fn expect_out_shape(out: &Mat, shape: &[usize], context: &str) -> Result<()> {
+    if out.shape() != shape {
+        return Err(CourierError::ShapeMismatch {
+            context: format!("{context} (out)"),
+            expected: format!("{shape:?}"),
+            got: format!("{:?}", out.shape()),
+        });
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// generic 3x3 stencil: interior fast path + clamped border pass
+// ---------------------------------------------------------------------------
+
+/// 3x3 convolution with replicate border into `out` (same shape).
+///
+/// Interior pixels read raw row slices with the stencil fully unrolled —
+/// no clamped loads, no per-tap zero check, bounds checks hoisted to the
+/// row slices — and only the one-pixel border falls back to the clamped
+/// reference loop.  Zero taps contribute an exact `+0.0`, so results
+/// compare equal (`==`) to the skip-zero reference everywhere.
+fn conv3x3_into(img: &Mat, taps: &[[f32; 3]; 3], out: &mut Mat) {
+    let (h, w) = (img.height(), img.width());
+    if h == 0 || w == 0 {
+        return;
+    }
+    let src = img.as_slice();
+    let t = taps;
+    {
+        let dst = out.as_mut_slice();
+        for y in 1..h.saturating_sub(1) {
+            let r0 = &src[(y - 1) * w..y * w];
+            let r1 = &src[y * w..(y + 1) * w];
+            let r2 = &src[(y + 1) * w..(y + 2) * w];
+            let drow = &mut dst[y * w..(y + 1) * w];
+            for x in 1..w - 1 {
+                drow[x] = t[0][0] * r0[x - 1]
+                    + t[0][1] * r0[x]
+                    + t[0][2] * r0[x + 1]
+                    + t[1][0] * r1[x - 1]
+                    + t[1][1] * r1[x]
+                    + t[1][2] * r1[x + 1]
+                    + t[2][0] * r2[x - 1]
+                    + t[2][1] * r2[x]
+                    + t[2][2] * r2[x + 1];
+            }
+        }
+    }
+    conv3x3_border(img, taps, out);
+}
+
+/// One clamped-border stencil evaluation (the reference inner loop).
+fn conv3x3_cell(img: &Mat, taps: &[[f32; 3]; 3], y: usize, x: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for (dy, row) in taps.iter().enumerate() {
+        for (dx, &t) in row.iter().enumerate() {
+            if t == 0.0 {
+                continue;
+            }
+            acc += t * img.at2_clamped(y as isize + dy as isize - 1, x as isize + dx as isize - 1);
+        }
+    }
+    acc
+}
+
+/// Border pass of [`conv3x3_into`]: top/bottom rows and left/right
+/// columns via clamped loads.
+fn conv3x3_border(img: &Mat, taps: &[[f32; 3]; 3], out: &mut Mat) {
+    let (h, w) = (img.height(), img.width());
+    let dst = out.as_mut_slice();
+    for x in 0..w {
+        dst[x] = conv3x3_cell(img, taps, 0, x);
+        dst[(h - 1) * w + x] = conv3x3_cell(img, taps, h - 1, x);
+    }
+    for y in 0..h {
+        dst[y * w] = conv3x3_cell(img, taps, y, 0);
+        dst[y * w + w - 1] = conv3x3_cell(img, taps, y, w - 1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// color conversion
+// ---------------------------------------------------------------------------
+
 /// RGB (H, W, 3) -> gray (H, W), BT.601 — `cv::cvtColor(RGB2GRAY)`.
 pub fn cvt_color(img: &Mat) -> Result<Mat> {
+    let mut out = Mat::zeros(&[img.height(), img.width()]);
+    cvt_color_into(img, &mut out)?;
+    Ok(out)
+}
+
+/// [`cvt_color`] into a caller-provided (H, W) buffer.
+pub fn cvt_color_into(img: &Mat, out: &mut Mat) -> Result<()> {
     if img.shape().len() != 3 || img.channels() != 3 {
         return Err(CourierError::ShapeMismatch {
             context: "cvt_color".into(),
@@ -40,137 +147,325 @@ pub fn cvt_color(img: &Mat) -> Result<Mat> {
         });
     }
     let (h, w) = (img.height(), img.width());
+    expect_out_shape(out, &[h, w], "cvt_color")?;
     let src = img.as_slice();
-    let mut out = Mat::zeros(&[h, w]);
     let dst = out.as_mut_slice();
     for i in 0..h * w {
         let base = i * 3;
         dst[i] = LUMA_R * src[base] + LUMA_G * src[base + 1] + LUMA_B * src[base + 2];
     }
-    Ok(out)
+    Ok(())
 }
 
-/// Valid 3x3 convolution with replicate border.
-fn conv3x3(img: &Mat, taps: &[[f32; 3]; 3]) -> Mat {
-    let (h, w) = (img.height(), img.width());
-    let mut out = Mat::zeros(&[h, w]);
-    let dst = out.as_mut_slice();
-    for y in 0..h {
-        for x in 0..w {
-            let mut acc = 0.0f32;
-            for (dy, row) in taps.iter().enumerate() {
-                for (dx, &t) in row.iter().enumerate() {
-                    if t == 0.0 {
-                        continue;
-                    }
-                    acc += t * img.at2_clamped(y as isize + dy as isize - 1, x as isize + dx as isize - 1);
-                }
-            }
-            dst[y * w + x] = acc;
-        }
-    }
-    out
-}
+// ---------------------------------------------------------------------------
+// derivative / smoothing stencils
+// ---------------------------------------------------------------------------
 
 /// 3x3 Sobel derivative — `cv::Sobel` (ksize 3). Exactly one of dx/dy = 1.
 pub fn sobel(img: &Mat, dx: u8, dy: u8) -> Result<Mat> {
-    expect_gray(img, "sobel")?;
-    match (dx, dy) {
-        (1, 0) => Ok(conv3x3(img, &SOBEL_DX)),
-        (0, 1) => Ok(conv3x3(img, &SOBEL_DY)),
-        _ => Err(CourierError::Other("sobel: exactly one of dx/dy must be 1".into())),
-    }
+    let mut out = Mat::zeros(img.shape());
+    sobel_into(img, dx, dy, &mut out)?;
+    Ok(out)
 }
 
-/// 3x3 Gaussian — `cv::GaussianBlur(3x3)`.
+/// [`sobel`] into a caller-provided same-shape buffer.
+pub fn sobel_into(img: &Mat, dx: u8, dy: u8, out: &mut Mat) -> Result<()> {
+    expect_gray(img, "sobel")?;
+    expect_out_shape(out, img.shape(), "sobel")?;
+    match (dx, dy) {
+        (1, 0) => conv3x3_into(img, &SOBEL_DX, out),
+        (0, 1) => conv3x3_into(img, &SOBEL_DY, out),
+        _ => return Err(CourierError::Other("sobel: exactly one of dx/dy must be 1".into())),
+    }
+    Ok(())
+}
+
+/// Fused Sobel dx+dy: both gradients in **one image walk** (the gradient
+/// pair every corner detector needs — two separate `sobel` calls read the
+/// image twice for no reason).  Each gradient accumulates in its own tap
+/// order, so both match their split-kernel counterparts exactly.
+pub fn sobel_xy_into(img: &Mat, dx: &mut Mat, dy: &mut Mat) -> Result<()> {
+    expect_gray(img, "sobel_xy")?;
+    expect_out_shape(dx, img.shape(), "sobel_xy dx")?;
+    expect_out_shape(dy, img.shape(), "sobel_xy dy")?;
+    let (h, w) = (img.height(), img.width());
+    if h == 0 || w == 0 {
+        return Ok(());
+    }
+    let src = img.as_slice();
+    {
+        let dxs = dx.as_mut_slice();
+        let dys = dy.as_mut_slice();
+        for y in 1..h.saturating_sub(1) {
+            let r0 = &src[(y - 1) * w..y * w];
+            let r1 = &src[y * w..(y + 1) * w];
+            let r2 = &src[(y + 1) * w..(y + 2) * w];
+            for x in 1..w - 1 {
+                let (a, b, c) = (r0[x - 1], r0[x], r0[x + 1]);
+                let (d, f) = (r1[x - 1], r1[x + 1]);
+                let (g, hh, i) = (r2[x - 1], r2[x], r2[x + 1]);
+                dxs[y * w + x] = -a + c - 2.0 * d + 2.0 * f - g + i;
+                dys[y * w + x] = -a - 2.0 * b - c + g + 2.0 * hh + i;
+            }
+        }
+    }
+    conv3x3_border(img, &SOBEL_DX, dx);
+    conv3x3_border(img, &SOBEL_DY, dy);
+    Ok(())
+}
+
+/// 3x3 Gaussian — `cv::GaussianBlur(3x3)`, separable two-pass.
 pub fn gaussian_blur(img: &Mat) -> Result<Mat> {
     expect_gray(img, "gaussian_blur")?;
-    Ok(conv3x3(img, &GAUSS3))
+    let mut tmp = Mat::zeros(img.shape());
+    let mut out = Mat::zeros(img.shape());
+    gaussian_blur_into(img, &mut tmp, &mut out)?;
+    Ok(out)
+}
+
+/// Separable two-pass Gaussian into caller-provided buffers: horizontal
+/// then vertical `[1, 2, 1]/4` with replicate borders.  The outer product
+/// of the passes is exactly the 2-D `GAUSS3` stencil (all weights are
+/// powers of two), so results agree with [`reference::gaussian_blur`] to
+/// ~1 ULP — one image walk cheaper and a much smaller working set.
+pub fn gaussian_blur_into(img: &Mat, tmp: &mut Mat, out: &mut Mat) -> Result<()> {
+    expect_gray(img, "gaussian_blur")?;
+    expect_out_shape(tmp, img.shape(), "gaussian_blur tmp")?;
+    expect_out_shape(out, img.shape(), "gaussian_blur")?;
+    let (h, w) = (img.height(), img.width());
+    if h == 0 || w == 0 {
+        return Ok(());
+    }
+    let src = img.as_slice();
+    {
+        let t = tmp.as_mut_slice();
+        for y in 0..h {
+            let row = &src[y * w..(y + 1) * w];
+            let trow = &mut t[y * w..(y + 1) * w];
+            trow[0] = 0.25 * row[0] + 0.5 * row[0] + 0.25 * row[1.min(w - 1)];
+            for x in 1..w.saturating_sub(1) {
+                trow[x] = 0.25 * row[x - 1] + 0.5 * row[x] + 0.25 * row[x + 1];
+            }
+            if w > 1 {
+                trow[w - 1] = 0.25 * row[w - 2] + 0.5 * row[w - 1] + 0.25 * row[w - 1];
+            }
+        }
+    }
+    {
+        let t = tmp.as_slice();
+        let dst = out.as_mut_slice();
+        for y in 0..h {
+            let ym = y.saturating_sub(1);
+            let yp = (y + 1).min(h - 1);
+            let r0 = &t[ym * w..ym * w + w];
+            let r1 = &t[y * w..y * w + w];
+            let r2 = &t[yp * w..yp * w + w];
+            let drow = &mut dst[y * w..(y + 1) * w];
+            for x in 0..w {
+                drow[x] = 0.25 * r0[x] + 0.5 * r1[x] + 0.25 * r2[x];
+            }
+        }
+    }
+    Ok(())
 }
 
 /// 3x3 box filter — `cv::boxFilter` (mean when `normalize`).
 pub fn box_filter(img: &Mat, normalize: bool) -> Result<Mat> {
-    expect_gray(img, "box_filter")?;
-    let t = if normalize { 1.0 / 9.0 } else { 1.0 };
-    Ok(conv3x3(img, &[[t; 3]; 3]))
+    let mut out = Mat::zeros(img.shape());
+    box_filter_into(img, normalize, &mut out)?;
+    Ok(out)
 }
 
-const LAPLACIAN: [[f32; 3]; 3] = [[0.0, 1.0, 0.0], [1.0, -4.0, 1.0], [0.0, 1.0, 0.0]];
-const SCHARR_DX: [[f32; 3]; 3] = [[-3.0, 0.0, 3.0], [-10.0, 0.0, 10.0], [-3.0, 0.0, 3.0]];
+/// [`box_filter`] into a caller-provided same-shape buffer.
+pub fn box_filter_into(img: &Mat, normalize: bool, out: &mut Mat) -> Result<()> {
+    expect_gray(img, "box_filter")?;
+    expect_out_shape(out, img.shape(), "box_filter")?;
+    let t = if normalize { 1.0 / 9.0 } else { 1.0 };
+    conv3x3_into(img, &[[t; 3]; 3], out);
+    Ok(())
+}
 
 /// 3x3 Laplacian — `cv::Laplacian` (ksize 3, no scaling).
 pub fn laplacian(img: &Mat) -> Result<Mat> {
+    let mut out = Mat::zeros(img.shape());
+    laplacian_into(img, &mut out)?;
+    Ok(out)
+}
+
+/// [`laplacian`] into a caller-provided same-shape buffer.
+pub fn laplacian_into(img: &Mat, out: &mut Mat) -> Result<()> {
     expect_gray(img, "laplacian")?;
-    Ok(conv3x3(img, &LAPLACIAN))
+    expect_out_shape(out, img.shape(), "laplacian")?;
+    conv3x3_into(img, &LAPLACIAN, out);
+    Ok(())
 }
 
 /// 3x3 Scharr d/dx — `cv::Scharr`.
 pub fn scharr(img: &Mat) -> Result<Mat> {
+    let mut out = Mat::zeros(img.shape());
+    scharr_into(img, &mut out)?;
+    Ok(out)
+}
+
+/// [`scharr`] into a caller-provided same-shape buffer.
+pub fn scharr_into(img: &Mat, out: &mut Mat) -> Result<()> {
     expect_gray(img, "scharr")?;
-    Ok(conv3x3(img, &SCHARR_DX))
+    expect_out_shape(out, img.shape(), "scharr")?;
+    conv3x3_into(img, &SCHARR_DX, out);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// rank / morphology windows
+// ---------------------------------------------------------------------------
+
+/// Partial selection sort to the middle of a 9-window (the reference's
+/// exact algorithm, shared by both the interior and border paths).
+fn median9(window: &mut [f32; 9]) -> f32 {
+    for i in 0..=4 {
+        let mut min_i = i;
+        for j in i + 1..9 {
+            if window[j] < window[min_i] {
+                min_i = j;
+            }
+        }
+        window.swap(i, min_i);
+    }
+    window[4]
+}
+
+fn median_window_clamped(img: &Mat, y: usize, x: usize) -> f32 {
+    let mut window = [0.0f32; 9];
+    let mut k = 0;
+    for dy in -1isize..=1 {
+        for dx in -1isize..=1 {
+            window[k] = img.at2_clamped(y as isize + dy, x as isize + dx);
+            k += 1;
+        }
+    }
+    median9(&mut window)
 }
 
 /// 3x3 median — `cv::medianBlur(3)` (replicate border).
 pub fn median_blur(img: &Mat) -> Result<Mat> {
+    let mut out = Mat::zeros(img.shape());
+    median_blur_into(img, &mut out)?;
+    Ok(out)
+}
+
+/// [`median_blur`] into a caller-provided same-shape buffer.
+pub fn median_blur_into(img: &Mat, out: &mut Mat) -> Result<()> {
     expect_gray(img, "median_blur")?;
+    expect_out_shape(out, img.shape(), "median_blur")?;
     let (h, w) = (img.height(), img.width());
-    let mut out = Mat::zeros(&[h, w]);
-    let dst = out.as_mut_slice();
-    let mut window = [0.0f32; 9];
-    for y in 0..h {
+    if h == 0 || w == 0 {
+        return Ok(());
+    }
+    let src = img.as_slice();
+    {
+        let dst = out.as_mut_slice();
+        for y in 1..h.saturating_sub(1) {
+            let r0 = &src[(y - 1) * w..y * w];
+            let r1 = &src[y * w..(y + 1) * w];
+            let r2 = &src[(y + 1) * w..(y + 2) * w];
+            for x in 1..w - 1 {
+                let mut window = [
+                    r0[x - 1], r0[x], r0[x + 1], r1[x - 1], r1[x], r1[x + 1], r2[x - 1],
+                    r2[x], r2[x + 1],
+                ];
+                dst[y * w + x] = median9(&mut window);
+            }
+        }
         for x in 0..w {
-            let mut k = 0;
-            for dy in -1isize..=1 {
-                for dx in -1isize..=1 {
-                    window[k] = img.at2_clamped(y as isize + dy, x as isize + dx);
-                    k += 1;
-                }
-            }
-            // partial selection sort to the middle element
-            for i in 0..=4 {
-                let mut min_i = i;
-                for j in i + 1..9 {
-                    if window[j] < window[min_i] {
-                        min_i = j;
-                    }
-                }
-                window.swap(i, min_i);
-            }
-            dst[y * w + x] = window[4];
+            dst[x] = median_window_clamped(img, 0, x);
+            dst[(h - 1) * w + x] = median_window_clamped(img, h - 1, x);
+        }
+        for y in 0..h {
+            dst[y * w] = median_window_clamped(img, y, 0);
+            dst[y * w + w - 1] = median_window_clamped(img, y, w - 1);
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// 3x3 erosion (window min) — `cv::erode`.
 pub fn erode(img: &Mat) -> Result<Mat> {
+    let mut out = Mat::zeros(img.shape());
+    erode_into(img, &mut out)?;
+    Ok(out)
+}
+
+/// [`erode`] into a caller-provided same-shape buffer.
+pub fn erode_into(img: &Mat, out: &mut Mat) -> Result<()> {
     expect_gray(img, "erode")?;
-    Ok(morph(img, f32::min))
+    expect_out_shape(out, img.shape(), "erode")?;
+    morph_into(img, f32::min, out);
+    Ok(())
 }
 
 /// 3x3 dilation (window max) — `cv::dilate`.
 pub fn dilate(img: &Mat) -> Result<Mat> {
-    expect_gray(img, "dilate")?;
-    Ok(morph(img, f32::max))
+    let mut out = Mat::zeros(img.shape());
+    dilate_into(img, &mut out)?;
+    Ok(out)
 }
 
-fn morph(img: &Mat, op: fn(f32, f32) -> f32) -> Mat {
+/// [`dilate`] into a caller-provided same-shape buffer.
+pub fn dilate_into(img: &Mat, out: &mut Mat) -> Result<()> {
+    expect_gray(img, "dilate")?;
+    expect_out_shape(out, img.shape(), "dilate")?;
+    morph_into(img, f32::max, out);
+    Ok(())
+}
+
+fn morph_cell_clamped(img: &Mat, op: fn(f32, f32) -> f32, y: usize, x: usize) -> f32 {
+    let mut acc = img.at2_clamped(y as isize - 1, x as isize - 1);
+    for dy in 0..3isize {
+        for dx in 0..3isize {
+            acc = op(acc, img.at2_clamped(y as isize + dy - 1, x as isize + dx - 1));
+        }
+    }
+    acc
+}
+
+fn morph_into(img: &Mat, op: fn(f32, f32) -> f32, out: &mut Mat) {
     let (h, w) = (img.height(), img.width());
-    let mut out = Mat::zeros(&[h, w]);
+    if h == 0 || w == 0 {
+        return;
+    }
+    let src = img.as_slice();
     let dst = out.as_mut_slice();
-    for y in 0..h {
-        for x in 0..w {
-            let mut acc = img.at2_clamped(y as isize - 1, x as isize - 1);
-            for dy in 0..3isize {
-                for dx in 0..3isize {
-                    acc = op(acc, img.at2_clamped(y as isize + dy - 1, x as isize + dx - 1));
-                }
-            }
+    for y in 1..h.saturating_sub(1) {
+        let r0 = &src[(y - 1) * w..y * w];
+        let r1 = &src[y * w..(y + 1) * w];
+        let r2 = &src[(y + 1) * w..(y + 2) * w];
+        for x in 1..w - 1 {
+            let mut acc = r0[x - 1];
+            acc = op(acc, r0[x - 1]);
+            acc = op(acc, r0[x]);
+            acc = op(acc, r0[x + 1]);
+            acc = op(acc, r1[x - 1]);
+            acc = op(acc, r1[x]);
+            acc = op(acc, r1[x + 1]);
+            acc = op(acc, r2[x - 1]);
+            acc = op(acc, r2[x]);
+            acc = op(acc, r2[x + 1]);
             dst[y * w + x] = acc;
         }
     }
-    out
+    for x in 0..w {
+        dst[x] = morph_cell_clamped(img, op, 0, x);
+        dst[(h - 1) * w + x] = morph_cell_clamped(img, op, h - 1, x);
+    }
+    for y in 0..h {
+        dst[y * w] = morph_cell_clamped(img, op, y, 0);
+        dst[y * w + w - 1] = morph_cell_clamped(img, op, y, w - 1);
+    }
 }
+
+// ---------------------------------------------------------------------------
+// Harris
+// ---------------------------------------------------------------------------
 
 /// Harris-Stephens corner response — `cv::cornerHarris(blockSize=3, ksize=3)`.
 ///
@@ -183,36 +478,104 @@ fn morph(img: &Mat, op: fn(f32, f32) -> f32) -> Mat {
 pub fn corner_harris(img: &Mat, k: f32) -> Result<Mat> {
     expect_gray(img, "corner_harris")?;
     let (h, w) = (img.height(), img.width());
-    let padded = edge_pad2(img, 2); // (h+4, w+4)
-    let dx = conv3x3_valid(&padded, &SOBEL_DX); // (h+2, w+2)
-    let dy = conv3x3_valid(&padded, &SOBEL_DY);
-    let n = dx.len();
-    let mut dxx = Mat::zeros(&[h + 2, w + 2]);
-    let mut dyy = Mat::zeros(&[h + 2, w + 2]);
+    let mut padded = Mat::zeros(&[h + 4, w + 4]);
+    let mut dx = Mat::zeros(&[h + 2, w + 2]);
+    let mut dy = Mat::zeros(&[h + 2, w + 2]);
     let mut dxy = Mat::zeros(&[h + 2, w + 2]);
-    {
-        let (xs, ys) = (dx.as_slice(), dy.as_slice());
-        let (pxx, pyy, pxy) = (dxx.as_mut_slice(), dyy.as_mut_slice(), dxy.as_mut_slice());
-        for i in 0..n {
-            pxx[i] = xs[i] * xs[i];
-            pyy[i] = ys[i] * ys[i];
-            pxy[i] = xs[i] * ys[i];
-        }
-    }
-    let box3 = [[1.0f32; 3]; 3];
-    let sxx = conv3x3_valid(&dxx, &box3); // (h, w)
-    let syy = conv3x3_valid(&dyy, &box3);
-    let sxy = conv3x3_valid(&dxy, &box3);
     let mut out = Mat::zeros(&[h, w]);
+    corner_harris_core(img, k, &mut padded, &mut dx, &mut dy, &mut dxy, &mut out);
+    Ok(out)
+}
+
+/// [`corner_harris`] with every scratch buffer drawn from (and returned
+/// to) the pool — the steady-state zero-allocation path.
+pub fn corner_harris_pooled(img: &Mat, k: f32, pool: &BufferPool) -> Result<Mat> {
+    expect_gray(img, "corner_harris")?;
+    let (h, w) = (img.height(), img.width());
+    let mut padded = pool.acquire(&[h + 4, w + 4]);
+    let mut dx = pool.acquire(&[h + 2, w + 2]);
+    let mut dy = pool.acquire(&[h + 2, w + 2]);
+    let mut dxy = pool.acquire(&[h + 2, w + 2]);
+    let mut out = pool.acquire(&[h, w]);
+    corner_harris_core(img, k, &mut padded, &mut dx, &mut dy, &mut dxy, &mut out);
+    pool.release(padded);
+    pool.release(dx);
+    pool.release(dy);
+    pool.release(dxy);
+    Ok(out)
+}
+
+/// The Harris body over caller-provided scratch: pad, fused valid Sobel
+/// pair, products squared in place, then fused window-sum + response (one
+/// walk instead of three box convs plus an elementwise pass).
+fn corner_harris_core(
+    img: &Mat,
+    k: f32,
+    padded: &mut Mat,
+    dx: &mut Mat,
+    dy: &mut Mat,
+    dxy: &mut Mat,
+    out: &mut Mat,
+) {
+    let (h, w) = (img.height(), img.width());
+    edge_pad2_into(img, 2, padded); // (h+4, w+4)
+    sobel_xy_valid_into(padded, dx, dy); // (h+2, w+2)
     {
-        let (a, b, c) = (sxx.as_slice(), syy.as_slice(), sxy.as_slice());
-        let dst = out.as_mut_slice();
-        for i in 0..h * w {
-            let tr = a[i] + b[i];
-            dst[i] = (a[i] * b[i] - c[i] * c[i]) - k * tr * tr;
+        let n = dx.len();
+        let xs = dx.as_mut_slice();
+        let ys = dy.as_mut_slice();
+        let xy = dxy.as_mut_slice();
+        for i in 0..n {
+            xy[i] = xs[i] * ys[i];
+            xs[i] = xs[i] * xs[i];
+            ys[i] = ys[i] * ys[i];
         }
     }
+    let wv = w + 2;
+    let sxx = dx.as_slice();
+    let syy = dy.as_slice();
+    let sxy = dxy.as_slice();
+    let dst = out.as_mut_slice();
+    for y in 0..h {
+        for x in 0..w {
+            let mut a = 0.0f32;
+            let mut b = 0.0f32;
+            let mut c = 0.0f32;
+            for d in 0..3 {
+                let base = (y + d) * wv + x;
+                a += sxx[base];
+                a += sxx[base + 1];
+                a += sxx[base + 2];
+                b += syy[base];
+                b += syy[base + 1];
+                b += syy[base + 2];
+                c += sxy[base];
+                c += sxy[base + 1];
+                c += sxy[base + 2];
+            }
+            let tr = a + b;
+            dst[y * w + x] = (a * b - c * c) - k * tr * tr;
+        }
+    }
+}
+
+/// The fused gray→response mega-kernel: `cvtColor` + `cornerHarris` in
+/// one call over pooled buffers.  The builder selects it when consecutive
+/// software tasks cover the whole chain inside one stage, skipping the
+/// intermediate gray buffer's trip through the frame environment.
+/// Bit-for-bit identical to running the two kernels back to back.
+pub fn harris_pipeline_pooled(rgb: &Mat, k: f32, pool: &BufferPool) -> Result<Mat> {
+    let mut gray = pool.acquire(&[rgb.height(), rgb.width()]);
+    cvt_color_into(rgb, &mut gray)?;
+    let out = corner_harris_pooled(&gray, k, pool)?;
+    pool.release(gray);
     Ok(out)
+}
+
+/// Pool-free [`harris_pipeline_pooled`] (the registry's plain fallback).
+pub fn harris_pipeline(rgb: &Mat, k: f32) -> Result<Mat> {
+    let gray = cvt_color(rgb)?;
+    corner_harris(&gray, k)
 }
 
 /// Harris-Stephens response from precomputed gradient images —
@@ -222,6 +585,28 @@ pub fn corner_harris(img: &Mat, k: f32) -> Result<Mat> {
 /// gradients the caller already produced: this is the *separated*
 /// formulation, numerically distinct from the fused kernel at borders.
 pub fn harris_response(ix: &Mat, iy: &Mat, k: f32) -> Result<Mat> {
+    check_harris_response(ix, iy)?;
+    let (h, w) = (ix.height(), ix.width());
+    let mut bufs: Vec<Mat> = (0..6).map(|_| Mat::zeros(&[h, w])).collect();
+    let mut out = Mat::zeros(&[h, w]);
+    harris_response_core(ix, iy, k, &mut bufs, &mut out);
+    Ok(out)
+}
+
+/// [`harris_response`] over pooled scratch.
+pub fn harris_response_pooled(ix: &Mat, iy: &Mat, k: f32, pool: &BufferPool) -> Result<Mat> {
+    check_harris_response(ix, iy)?;
+    let (h, w) = (ix.height(), ix.width());
+    let mut bufs: Vec<Mat> = (0..6).map(|_| pool.acquire(&[h, w])).collect();
+    let mut out = pool.acquire(&[h, w]);
+    harris_response_core(ix, iy, k, &mut bufs, &mut out);
+    for b in bufs {
+        pool.release(b);
+    }
+    Ok(out)
+}
+
+fn check_harris_response(ix: &Mat, iy: &Mat) -> Result<()> {
     expect_gray(ix, "harris_response")?;
     expect_gray(iy, "harris_response")?;
     if ix.shape() != iy.shape() {
@@ -231,13 +616,21 @@ pub fn harris_response(ix: &Mat, iy: &Mat, k: f32) -> Result<Mat> {
             got: format!("{:?}", iy.shape()),
         });
     }
+    Ok(())
+}
+
+/// Body of [`harris_response`]: products, three replicate-border box
+/// sums, response.  `bufs` must hold six (H, W) scratch buffers.
+fn harris_response_core(ix: &Mat, iy: &Mat, k: f32, bufs: &mut [Mat], out: &mut Mat) {
     let (h, w) = (ix.height(), ix.width());
-    let mut pxx = Mat::zeros(&[h, w]);
-    let mut pyy = Mat::zeros(&[h, w]);
-    let mut pxy = Mat::zeros(&[h, w]);
+    let [pxx, pyy, pxy, sxx, syy, sxy] = bufs else {
+        panic!("harris_response_core needs exactly 6 scratch buffers");
+    };
     {
-        let (xs, ys) = (ix.as_slice(), iy.as_slice());
-        let (dxx, dyy, dxy) = (pxx.as_mut_slice(), pyy.as_mut_slice(), pxy.as_mut_slice());
+        let xs = ix.as_slice();
+        let ys = iy.as_slice();
+        let (dxx, dyy, dxy) =
+            (pxx.as_mut_slice(), pyy.as_mut_slice(), pxy.as_mut_slice());
         for i in 0..h * w {
             dxx[i] = xs[i] * xs[i];
             dyy[i] = ys[i] * ys[i];
@@ -245,10 +638,9 @@ pub fn harris_response(ix: &Mat, iy: &Mat, k: f32) -> Result<Mat> {
         }
     }
     let box3 = [[1.0f32; 3]; 3];
-    let sxx = conv3x3(&pxx, &box3);
-    let syy = conv3x3(&pyy, &box3);
-    let sxy = conv3x3(&pxy, &box3);
-    let mut out = Mat::zeros(&[h, w]);
+    conv3x3_into(pxx, &box3, sxx);
+    conv3x3_into(pyy, &box3, syy);
+    conv3x3_into(pxy, &box3, sxy);
     {
         let (a, b, c) = (sxx.as_slice(), syy.as_slice(), sxy.as_slice());
         let dst = out.as_mut_slice();
@@ -257,58 +649,71 @@ pub fn harris_response(ix: &Mat, iy: &Mat, k: f32) -> Result<Mat> {
             dst[i] = (a[i] * b[i] - c[i] * c[i]) - k * tr * tr;
         }
     }
-    Ok(out)
 }
 
-/// Replicate-pad by `p` pixels on each spatial side.
-fn edge_pad2(img: &Mat, p: usize) -> Mat {
+/// Replicate-pad by `p` pixels on each spatial side into `out`
+/// ((H+2p, W+2p)): interior rows are straight `memcpy`s, pads are fills.
+fn edge_pad2_into(img: &Mat, p: usize, out: &mut Mat) {
     let (h, w) = (img.height(), img.width());
-    let mut out = Mat::zeros(&[h + 2 * p, w + 2 * p]);
-    let dst = out.as_mut_slice();
     let wp = w + 2 * p;
+    debug_assert_eq!(out.shape(), &[h + 2 * p, wp]);
+    let src = img.as_slice();
+    let dst = out.as_mut_slice();
     for y in 0..h + 2 * p {
-        for x in 0..wp {
-            dst[y * wp + x] =
-                img.at2_clamped(y as isize - p as isize, x as isize - p as isize);
-        }
+        let sy = (y as isize - p as isize).clamp(0, h as isize - 1) as usize;
+        let srow = &src[sy * w..(sy + 1) * w];
+        let drow = &mut dst[y * wp..(y + 1) * wp];
+        drow[..p].fill(srow[0]);
+        drow[p..p + w].copy_from_slice(srow);
+        drow[p + w..].fill(srow[w - 1]);
     }
-    out
 }
 
-/// Valid 3x3 convolution: (H, W) -> (H-2, W-2).
-fn conv3x3_valid(img: &Mat, taps: &[[f32; 3]; 3]) -> Mat {
-    let (h, w) = (img.height() - 2, img.width() - 2);
-    let src = img.as_slice();
-    let ws = img.width();
-    let mut out = Mat::zeros(&[h, w]);
-    let dst = out.as_mut_slice();
+/// Fused valid Sobel pair: (H, W) -> (H-2, W-2), both gradients in one
+/// raw-slice walk (no clamping anywhere — the input is already padded).
+fn sobel_xy_valid_into(padded: &Mat, dx: &mut Mat, dy: &mut Mat) {
+    let ws = padded.width();
+    let (h, w) = (padded.height() - 2, padded.width() - 2);
+    debug_assert_eq!(dx.shape(), &[h, w]);
+    debug_assert_eq!(dy.shape(), &[h, w]);
+    let src = padded.as_slice();
+    let dxs = dx.as_mut_slice();
+    let dys = dy.as_mut_slice();
     for y in 0..h {
+        let r0 = &src[y * ws..y * ws + ws];
+        let r1 = &src[(y + 1) * ws..(y + 1) * ws + ws];
+        let r2 = &src[(y + 2) * ws..(y + 2) * ws + ws];
         for x in 0..w {
-            let mut acc = 0.0f32;
-            for (dy, row) in taps.iter().enumerate() {
-                for (dx, &t) in row.iter().enumerate() {
-                    if t == 0.0 {
-                        continue;
-                    }
-                    acc += t * src[(y + dy) * ws + (x + dx)];
-                }
-            }
-            dst[y * w + x] = acc;
+            let (a, b, c) = (r0[x], r0[x + 1], r0[x + 2]);
+            let (d, f) = (r1[x], r1[x + 2]);
+            let (g, hh, i) = (r2[x], r2[x + 1], r2[x + 2]);
+            dxs[y * w + x] = -a + c - 2.0 * d + 2.0 * f - g + i;
+            dys[y * w + x] = -a - 2.0 * b - c + g + 2.0 * hh + i;
         }
     }
-    out
 }
+
+// ---------------------------------------------------------------------------
+// elementwise ops (in-place variants: the builder routes through them
+// when liveness says the input buffer dies)
+// ---------------------------------------------------------------------------
 
 /// Min-max normalize to `[alpha, beta]` — `cv::normalize(NORM_MINMAX)`.
 pub fn normalize(img: &Mat, alpha: f32, beta: f32) -> Result<Mat> {
+    let mut out = img.clone();
+    normalize_mut(&mut out, alpha, beta)?;
+    Ok(out)
+}
+
+/// In-place [`normalize`].
+pub fn normalize_mut(img: &mut Mat, alpha: f32, beta: f32) -> Result<()> {
     expect_gray(img, "normalize")?;
     let (mn, mx) = (img.min(), img.max());
     let scale = (beta - alpha) / (mx - mn).max(1e-12);
-    let mut out = img.clone();
-    for v in out.as_mut_slice() {
+    for v in img.as_mut_slice() {
         *v = (*v - mn) * scale + alpha;
     }
-    Ok(out)
+    Ok(())
 }
 
 /// `saturate_cast<uchar>(|alpha * x + beta|)` kept in f32 —
@@ -316,12 +721,18 @@ pub fn normalize(img: &Mat, alpha: f32, beta: f32) -> Result<Mat> {
 /// and the rounding is semantically important: it makes the function a
 /// genuine u8 quantization rather than a float identity.
 pub fn convert_scale_abs(img: &Mat, alpha: f32, beta: f32) -> Result<Mat> {
-    expect_gray(img, "convert_scale_abs")?;
     let mut out = img.clone();
-    for v in out.as_mut_slice() {
+    convert_scale_abs_mut(&mut out, alpha, beta)?;
+    Ok(out)
+}
+
+/// In-place [`convert_scale_abs`].
+pub fn convert_scale_abs_mut(img: &mut Mat, alpha: f32, beta: f32) -> Result<()> {
+    expect_gray(img, "convert_scale_abs")?;
+    for v in img.as_mut_slice() {
         *v = round_half_even((alpha * *v + beta).abs()).min(255.0);
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Round to nearest, ties to even (matches `jnp.round` / IEEE-754
@@ -337,12 +748,298 @@ fn round_half_even(x: f32) -> f32 {
 
 /// Binary threshold — `cv::threshold(THRESH_BINARY)`.
 pub fn threshold(img: &Mat, thresh: f32, maxval: f32) -> Result<Mat> {
-    expect_gray(img, "threshold")?;
     let mut out = img.clone();
-    for v in out.as_mut_slice() {
+    threshold_mut(&mut out, thresh, maxval)?;
+    Ok(out)
+}
+
+/// In-place [`threshold`].
+pub fn threshold_mut(img: &mut Mat, thresh: f32, maxval: f32) -> Result<()> {
+    expect_gray(img, "threshold")?;
+    for v in img.as_mut_slice() {
         *v = if *v > thresh { maxval } else { 0.0 };
     }
-    Ok(out)
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// parity oracle
+// ---------------------------------------------------------------------------
+
+/// The pre-optimization kernels, kept verbatim as the parity reference.
+///
+/// Every per-pixel arithmetic sequence here is what the fast paths above
+/// must reproduce; `tests/kernel_parity.rs` asserts the match across
+/// randomized shapes including 1×1, 1×N and N×1 degenerate images.
+pub mod reference {
+    use super::{
+        expect_gray, round_half_even, CourierError, Mat, Result, GAUSS3, LAPLACIAN, SCHARR_DX,
+        SOBEL_DX, SOBEL_DY,
+    };
+
+    /// Naive 3x3 convolution: clamped loads, per-tap zero check.
+    pub fn conv3x3(img: &Mat, taps: &[[f32; 3]; 3]) -> Mat {
+        let (h, w) = (img.height(), img.width());
+        let mut out = Mat::zeros(&[h, w]);
+        let dst = out.as_mut_slice();
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = 0.0f32;
+                for (dy, row) in taps.iter().enumerate() {
+                    for (dx, &t) in row.iter().enumerate() {
+                        if t == 0.0 {
+                            continue;
+                        }
+                        acc += t
+                            * img.at2_clamped(
+                                y as isize + dy as isize - 1,
+                                x as isize + dx as isize - 1,
+                            );
+                    }
+                }
+                dst[y * w + x] = acc;
+            }
+        }
+        out
+    }
+
+    /// Naive `cv::Sobel`.
+    pub fn sobel(img: &Mat, dx: u8, dy: u8) -> Result<Mat> {
+        expect_gray(img, "sobel")?;
+        match (dx, dy) {
+            (1, 0) => Ok(conv3x3(img, &SOBEL_DX)),
+            (0, 1) => Ok(conv3x3(img, &SOBEL_DY)),
+            _ => Err(CourierError::Other("sobel: exactly one of dx/dy must be 1".into())),
+        }
+    }
+
+    /// Naive 2-D `cv::GaussianBlur(3x3)`.
+    pub fn gaussian_blur(img: &Mat) -> Result<Mat> {
+        expect_gray(img, "gaussian_blur")?;
+        Ok(conv3x3(img, &GAUSS3))
+    }
+
+    /// Naive `cv::boxFilter`.
+    pub fn box_filter(img: &Mat, normalize: bool) -> Result<Mat> {
+        expect_gray(img, "box_filter")?;
+        let t = if normalize { 1.0 / 9.0 } else { 1.0 };
+        Ok(conv3x3(img, &[[t; 3]; 3]))
+    }
+
+    /// Naive `cv::Laplacian`.
+    pub fn laplacian(img: &Mat) -> Result<Mat> {
+        expect_gray(img, "laplacian")?;
+        Ok(conv3x3(img, &LAPLACIAN))
+    }
+
+    /// Naive `cv::Scharr`.
+    pub fn scharr(img: &Mat) -> Result<Mat> {
+        expect_gray(img, "scharr")?;
+        Ok(conv3x3(img, &SCHARR_DX))
+    }
+
+    /// Naive `cv::medianBlur(3)`.
+    pub fn median_blur(img: &Mat) -> Result<Mat> {
+        expect_gray(img, "median_blur")?;
+        let (h, w) = (img.height(), img.width());
+        let mut out = Mat::zeros(&[h, w]);
+        let dst = out.as_mut_slice();
+        let mut window = [0.0f32; 9];
+        for y in 0..h {
+            for x in 0..w {
+                let mut k = 0;
+                for dy in -1isize..=1 {
+                    for dx in -1isize..=1 {
+                        window[k] = img.at2_clamped(y as isize + dy, x as isize + dx);
+                        k += 1;
+                    }
+                }
+                for i in 0..=4 {
+                    let mut min_i = i;
+                    for j in i + 1..9 {
+                        if window[j] < window[min_i] {
+                            min_i = j;
+                        }
+                    }
+                    window.swap(i, min_i);
+                }
+                dst[y * w + x] = window[4];
+            }
+        }
+        Ok(out)
+    }
+
+    fn morph(img: &Mat, op: fn(f32, f32) -> f32) -> Mat {
+        let (h, w) = (img.height(), img.width());
+        let mut out = Mat::zeros(&[h, w]);
+        let dst = out.as_mut_slice();
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = img.at2_clamped(y as isize - 1, x as isize - 1);
+                for dy in 0..3isize {
+                    for dx in 0..3isize {
+                        acc = op(acc, img.at2_clamped(y as isize + dy - 1, x as isize + dx - 1));
+                    }
+                }
+                dst[y * w + x] = acc;
+            }
+        }
+        out
+    }
+
+    /// Naive `cv::erode`.
+    pub fn erode(img: &Mat) -> Result<Mat> {
+        expect_gray(img, "erode")?;
+        Ok(morph(img, f32::min))
+    }
+
+    /// Naive `cv::dilate`.
+    pub fn dilate(img: &Mat) -> Result<Mat> {
+        expect_gray(img, "dilate")?;
+        Ok(morph(img, f32::max))
+    }
+
+    /// Replicate-pad by `p` pixels on each spatial side.
+    fn edge_pad2(img: &Mat, p: usize) -> Mat {
+        let (h, w) = (img.height(), img.width());
+        let mut out = Mat::zeros(&[h + 2 * p, w + 2 * p]);
+        let dst = out.as_mut_slice();
+        let wp = w + 2 * p;
+        for y in 0..h + 2 * p {
+            for x in 0..wp {
+                dst[y * wp + x] =
+                    img.at2_clamped(y as isize - p as isize, x as isize - p as isize);
+            }
+        }
+        out
+    }
+
+    /// Valid naive 3x3 convolution: (H, W) -> (H-2, W-2).
+    fn conv3x3_valid(img: &Mat, taps: &[[f32; 3]; 3]) -> Mat {
+        let (h, w) = (img.height() - 2, img.width() - 2);
+        let src = img.as_slice();
+        let ws = img.width();
+        let mut out = Mat::zeros(&[h, w]);
+        let dst = out.as_mut_slice();
+        for y in 0..h {
+            for x in 0..w {
+                let mut acc = 0.0f32;
+                for (dy, row) in taps.iter().enumerate() {
+                    for (dx, &t) in row.iter().enumerate() {
+                        if t == 0.0 {
+                            continue;
+                        }
+                        acc += t * src[(y + dy) * ws + (x + dx)];
+                    }
+                }
+                dst[y * w + x] = acc;
+            }
+        }
+        out
+    }
+
+    /// Naive `cv::cornerHarris` (pad, two valid Sobels, products, three
+    /// valid box sums, response — each stage its own full image pass).
+    pub fn corner_harris(img: &Mat, k: f32) -> Result<Mat> {
+        expect_gray(img, "corner_harris")?;
+        let (h, w) = (img.height(), img.width());
+        let padded = edge_pad2(img, 2); // (h+4, w+4)
+        let dx = conv3x3_valid(&padded, &SOBEL_DX); // (h+2, w+2)
+        let dy = conv3x3_valid(&padded, &SOBEL_DY);
+        let n = dx.len();
+        let mut dxx = Mat::zeros(&[h + 2, w + 2]);
+        let mut dyy = Mat::zeros(&[h + 2, w + 2]);
+        let mut dxy = Mat::zeros(&[h + 2, w + 2]);
+        {
+            let (xs, ys) = (dx.as_slice(), dy.as_slice());
+            let (pxx, pyy, pxy) =
+                (dxx.as_mut_slice(), dyy.as_mut_slice(), dxy.as_mut_slice());
+            for i in 0..n {
+                pxx[i] = xs[i] * xs[i];
+                pyy[i] = ys[i] * ys[i];
+                pxy[i] = xs[i] * ys[i];
+            }
+        }
+        let box3 = [[1.0f32; 3]; 3];
+        let sxx = conv3x3_valid(&dxx, &box3); // (h, w)
+        let syy = conv3x3_valid(&dyy, &box3);
+        let sxy = conv3x3_valid(&dxy, &box3);
+        let mut out = Mat::zeros(&[h, w]);
+        {
+            let (a, b, c) = (sxx.as_slice(), syy.as_slice(), sxy.as_slice());
+            let dst = out.as_mut_slice();
+            for i in 0..h * w {
+                let tr = a[i] + b[i];
+                dst[i] = (a[i] * b[i] - c[i] * c[i]) - k * tr * tr;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Naive two-input Harris response.
+    pub fn harris_response(ix: &Mat, iy: &Mat, k: f32) -> Result<Mat> {
+        super::check_harris_response(ix, iy)?;
+        let (h, w) = (ix.height(), ix.width());
+        let mut pxx = Mat::zeros(&[h, w]);
+        let mut pyy = Mat::zeros(&[h, w]);
+        let mut pxy = Mat::zeros(&[h, w]);
+        {
+            let (xs, ys) = (ix.as_slice(), iy.as_slice());
+            let (dxx, dyy, dxy) =
+                (pxx.as_mut_slice(), pyy.as_mut_slice(), pxy.as_mut_slice());
+            for i in 0..h * w {
+                dxx[i] = xs[i] * xs[i];
+                dyy[i] = ys[i] * ys[i];
+                dxy[i] = xs[i] * ys[i];
+            }
+        }
+        let box3 = [[1.0f32; 3]; 3];
+        let sxx = conv3x3(&pxx, &box3);
+        let syy = conv3x3(&pyy, &box3);
+        let sxy = conv3x3(&pxy, &box3);
+        let mut out = Mat::zeros(&[h, w]);
+        {
+            let (a, b, c) = (sxx.as_slice(), syy.as_slice(), sxy.as_slice());
+            let dst = out.as_mut_slice();
+            for i in 0..h * w {
+                let tr = a[i] + b[i];
+                dst[i] = (a[i] * b[i] - c[i] * c[i]) - k * tr * tr;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Naive elementwise ops (allocate-then-transform clones).
+    pub fn normalize(img: &Mat, alpha: f32, beta: f32) -> Result<Mat> {
+        expect_gray(img, "normalize")?;
+        let (mn, mx) = (img.min(), img.max());
+        let scale = (beta - alpha) / (mx - mn).max(1e-12);
+        let mut out = img.clone();
+        for v in out.as_mut_slice() {
+            *v = (*v - mn) * scale + alpha;
+        }
+        Ok(out)
+    }
+
+    /// Naive `cv::convertScaleAbs`.
+    pub fn convert_scale_abs(img: &Mat, alpha: f32, beta: f32) -> Result<Mat> {
+        expect_gray(img, "convert_scale_abs")?;
+        let mut out = img.clone();
+        for v in out.as_mut_slice() {
+            *v = round_half_even((alpha * *v + beta).abs()).min(255.0);
+        }
+        Ok(out)
+    }
+
+    /// Naive `cv::threshold`.
+    pub fn threshold(img: &Mat, thresh: f32, maxval: f32) -> Result<Mat> {
+        expect_gray(img, "threshold")?;
+        let mut out = img.clone();
+        for v in out.as_mut_slice() {
+            *v = if *v > thresh { maxval } else { 0.0 };
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -392,10 +1089,34 @@ mod tests {
     }
 
     #[test]
+    fn sobel_xy_matches_split_kernels() {
+        let img = synth::noise_gray(11, 13, 7);
+        let mut dx = Mat::zeros(img.shape());
+        let mut dy = Mat::zeros(img.shape());
+        sobel_xy_into(&img, &mut dx, &mut dy).unwrap();
+        assert_eq!(dx, sobel(&img, 1, 0).unwrap());
+        assert_eq!(dy, sobel(&img, 0, 1).unwrap());
+    }
+
+    #[test]
     fn gaussian_preserves_constant() {
         let img = Mat::full(&[5, 5], 10.0);
         let g = gaussian_blur(&img).unwrap();
         assert!(g.max_abs_diff(&img) < 1e-4);
+    }
+
+    #[test]
+    fn gaussian_separable_tracks_2d_reference() {
+        for (h, w) in [(1usize, 1usize), (1, 7), (7, 1), (9, 12)] {
+            let img = synth::noise_gray(h, w, 3);
+            let sep = gaussian_blur(&img).unwrap();
+            let full = reference::gaussian_blur(&img).unwrap();
+            assert!(
+                sep.allclose(&full, 1e-6, 1e-4),
+                "({h}, {w}): max diff {}",
+                sep.max_abs_diff(&full)
+            );
+        }
     }
 
     #[test]
@@ -444,6 +1165,27 @@ mod tests {
             }
         }
         assert!(best.0.abs_diff(8) <= 2 && best.1.abs_diff(8) <= 2, "peak at {best:?}");
+    }
+
+    #[test]
+    fn harris_matches_naive_reference_bit_for_bit() {
+        for (h, w) in [(1usize, 1usize), (1, 6), (6, 1), (13, 17)] {
+            let img = synth::noise_gray(h, w, 5);
+            let fast = corner_harris(&img, HARRIS_K).unwrap();
+            let naive = reference::corner_harris(&img, HARRIS_K).unwrap();
+            assert_eq!(fast, naive, "({h}, {w})");
+        }
+    }
+
+    #[test]
+    fn harris_pipeline_matches_two_kernel_chain() {
+        let pool = BufferPool::new();
+        let rgb = synth::noise_rgb(10, 14, 9);
+        let fused = harris_pipeline_pooled(&rgb, HARRIS_K, &pool).unwrap();
+        let gray = cvt_color(&rgb).unwrap();
+        let chain = corner_harris(&gray, HARRIS_K).unwrap();
+        assert_eq!(fused, chain);
+        assert_eq!(harris_pipeline(&rgb, HARRIS_K).unwrap(), chain);
     }
 
     #[test]
@@ -527,5 +1269,19 @@ mod tests {
         let img = Mat::new(vec![1, 3], vec![10.0, 127.0, 128.0]).unwrap();
         let t = threshold(&img, 127.0, 255.0).unwrap();
         assert_eq!(t.as_slice(), &[0.0, 0.0, 255.0]);
+    }
+
+    #[test]
+    fn inplace_variants_match_allocating_ones() {
+        let img = synth::noise_gray(6, 6, 2);
+        let mut a = img.clone();
+        threshold_mut(&mut a, 100.0, 255.0).unwrap();
+        assert_eq!(a, threshold(&img, 100.0, 255.0).unwrap());
+        let mut b = img.clone();
+        normalize_mut(&mut b, 0.0, 255.0).unwrap();
+        assert_eq!(b, normalize(&img, 0.0, 255.0).unwrap());
+        let mut c = img.clone();
+        convert_scale_abs_mut(&mut c, 1.0, 0.0).unwrap();
+        assert_eq!(c, convert_scale_abs(&img, 1.0, 0.0).unwrap());
     }
 }

@@ -16,4 +16,6 @@ pub mod blas;
 pub mod imgproc;
 mod registry;
 
-pub use registry::{FuncEntry, Registry, SwFn};
+pub use registry::{
+    FuncEntry, Registry, SwFn, SwFnInPlace, SwFnPooled, FUSED_CVT_HARRIS, FUSED_SOBEL_PAIR,
+};

@@ -4,17 +4,48 @@
 //! Function Off-loader later *re-binds* symbols in a separate hook table
 //! (see `offload::HookTable`), so the registry itself always answers with
 //! the original library function — the paper's `dlsym(RTLD_NEXT, ...)`.
+//!
+//! Besides the plain callable, an entry may carry two hot-path variants
+//! the pipeline builder routes through when it can prove they are safe:
+//!
+//! * a **pooled** form (`Fn(&[&Mat], &BufferPool) -> Mat`) that draws its
+//!   output and scratch from the pipeline's shape-keyed buffer pool, and
+//! * an **in-place** form (`Fn(Mat) -> Mat`) for unary elementwise ops,
+//!   used when liveness says the input buffer dies at this call.
+//!
+//! Both must be numerically identical to the plain callable (the kernel
+//! parity suite pins this); the interpreter and tracer always use the
+//! plain form, so traces stay independent of pipeline execution details.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::image::Mat;
+use crate::pipeline::BufferPool;
 use crate::{CourierError, Result};
 
 use super::{blas, imgproc};
 
 /// A library function: a boxed pure function over `Mat` arguments.
 pub type SwFn = Arc<dyn Fn(&[&Mat]) -> Result<Mat> + Send + Sync>;
+
+/// Pool-aware variant: output (and any scratch) comes from the pool.
+pub type SwFnPooled = Arc<dyn Fn(&[&Mat], &BufferPool) -> Result<Mat> + Send + Sync>;
+
+/// In-place variant for unary elementwise ops: consumes the (dead) input
+/// buffer and returns it transformed.
+pub type SwFnInPlace = Arc<dyn Fn(Mat) -> Result<Mat> + Send + Sync>;
+
+/// The fused gray→response mega-kernel the builder selects when
+/// consecutive software tasks cover the whole `cvtColor → cornerHarris`
+/// chain inside one stage (same naming convention as the AOT module
+/// catalog's fused hardware entry).
+pub const FUSED_CVT_HARRIS: &str = "cv::cvtColor+cv::cornerHarris";
+
+/// Label of the fused one-walk Sobel dx+dy pair the builder selects when
+/// a fork-join stage holds exactly the two sibling gradients over one
+/// shared input ([`imgproc::sobel_xy_into`]).
+pub const FUSED_SOBEL_PAIR: &str = "cv::Sobel+cv::SobelY";
 
 /// One resolvable library symbol.
 #[derive(Clone)]
@@ -25,6 +56,31 @@ pub struct FuncEntry {
     pub arity: usize,
     /// The callable.
     pub f: SwFn,
+    /// Optional pool-aware form (same numerics, pooled buffers).
+    pub pooled: Option<SwFnPooled>,
+    /// Optional in-place form (same numerics, reuses the input buffer).
+    pub inplace: Option<SwFnInPlace>,
+    /// For a fused mega-kernel: the exact callables it composes, in
+    /// chain order.  The builder only selects the fused binding while
+    /// the live registry still resolves the constituent symbols to these
+    /// same `Arc`s — re-registering either constituent (the override
+    /// pattern) silently disables fusion instead of bypassing the
+    /// override.
+    pub fused_of: Option<Vec<SwFn>>,
+}
+
+impl FuncEntry {
+    /// True iff this entry is a fused kernel whose constituents are
+    /// exactly `parts` (pointer identity on the callables).
+    pub fn fuses_exactly(&self, parts: &[&FuncEntry]) -> bool {
+        match &self.fused_of {
+            Some(own) => {
+                own.len() == parts.len()
+                    && own.iter().zip(parts).all(|(a, b)| Arc::ptr_eq(a, &b.f))
+            }
+            None => false,
+        }
+    }
 }
 
 impl std::fmt::Debug for FuncEntry {
@@ -32,14 +88,29 @@ impl std::fmt::Debug for FuncEntry {
         f.debug_struct("FuncEntry")
             .field("symbol", &self.symbol)
             .field("arity", &self.arity)
+            .field("pooled", &self.pooled.is_some())
+            .field("inplace", &self.inplace.is_some())
             .finish()
     }
 }
 
 /// The function library a target binary links against.
-#[derive(Debug, Clone, Default)]
+#[derive(Clone, Default)]
 pub struct Registry {
     map: BTreeMap<String, FuncEntry>,
+    /// The standard Sobel dx/dy callables recorded by [`Registry::standard`]
+    /// — the identity link [`Registry::sobel_pair_intact`] checks before
+    /// the builder may substitute the fused one-walk pair.
+    sobel_pair: Option<(SwFn, SwFn)>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registry")
+            .field("symbols", &self.map.keys().collect::<Vec<_>>())
+            .field("sobel_pair", &self.sobel_pair.is_some())
+            .finish()
+    }
 }
 
 impl Registry {
@@ -53,10 +124,18 @@ impl Registry {
     /// ksize=3, k=0.04 for Harris; alpha=1, beta=0 for convertScaleAbs;
     /// ... — identical to the AOT module catalog in `python/compile`).
     pub fn standard() -> Self {
+        use imgproc::HARRIS_K;
         let mut r = Self::new();
-        r.register("cv::cvtColor", 1, Arc::new(|a: &[&Mat]| imgproc::cvt_color(a[0])));
-        r.register("cv::Sobel", 1, Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 1, 0)));
-        r.register("cv::SobelY", 1, Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 0, 1)));
+        // the cvt/harris callables are bound to locals so the fused
+        // mega-kernel can record exactly which implementations it fuses
+        let cvt_f: SwFn = Arc::new(|a: &[&Mat]| imgproc::cvt_color(a[0]));
+        let harris_f: SwFn = Arc::new(|a: &[&Mat]| imgproc::corner_harris(a[0], HARRIS_K));
+        let sobel_dx_f: SwFn = Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 1, 0));
+        let sobel_dy_f: SwFn = Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 0, 1));
+        r.register("cv::cvtColor", 1, cvt_f.clone());
+        r.register("cv::Sobel", 1, sobel_dx_f.clone());
+        r.register("cv::SobelY", 1, sobel_dy_f.clone());
+        r.sobel_pair = Some((sobel_dx_f, sobel_dy_f));
         r.register("cv::GaussianBlur", 1, Arc::new(|a: &[&Mat]| imgproc::gaussian_blur(a[0])));
         r.register("cv::boxFilter", 1, Arc::new(|a: &[&Mat]| imgproc::box_filter(a[0], true)));
         r.register("cv::erode", 1, Arc::new(|a: &[&Mat]| imgproc::erode(a[0])));
@@ -64,15 +143,11 @@ impl Registry {
         r.register("cv::Laplacian", 1, Arc::new(|a: &[&Mat]| imgproc::laplacian(a[0])));
         r.register("cv::Scharr", 1, Arc::new(|a: &[&Mat]| imgproc::scharr(a[0])));
         r.register("cv::medianBlur", 1, Arc::new(|a: &[&Mat]| imgproc::median_blur(a[0])));
-        r.register(
-            "cv::cornerHarris",
-            1,
-            Arc::new(|a: &[&Mat]| imgproc::corner_harris(a[0], imgproc::HARRIS_K)),
-        );
+        r.register("cv::cornerHarris", 1, harris_f.clone());
         r.register(
             "cv::harrisResponse",
             2,
-            Arc::new(|a: &[&Mat]| imgproc::harris_response(a[0], a[1], imgproc::HARRIS_K)),
+            Arc::new(|a: &[&Mat]| imgproc::harris_response(a[0], a[1], HARRIS_K)),
         );
         r.register(
             "cv::normalize",
@@ -89,9 +164,106 @@ impl Registry {
             1,
             Arc::new(|a: &[&Mat]| imgproc::threshold(a[0], 127.0, 255.0)),
         );
+        r.register(
+            FUSED_CVT_HARRIS,
+            1,
+            Arc::new(|a: &[&Mat]| imgproc::harris_pipeline(a[0], HARRIS_K)),
+        );
+        r.set_fused_of(FUSED_CVT_HARRIS, vec![cvt_f, harris_f]);
         r.register("blas::sgemm", 2, Arc::new(|a: &[&Mat]| blas::sgemm(a[0], a[1])));
         r.register("blas::saxpy", 2, Arc::new(|a: &[&Mat]| blas::saxpy(1.0, a[0], a[1])));
         r.register("blas::sdot", 2, Arc::new(|a: &[&Mat]| blas::sdot(a[0], a[1])));
+
+        // ---- pooled forms (output + scratch from the buffer pool) -----
+        r.set_pooled(
+            "cv::cvtColor",
+            Arc::new(|a: &[&Mat], p: &BufferPool| {
+                let mut out = p.acquire(&[a[0].height(), a[0].width()]);
+                imgproc::cvt_color_into(a[0], &mut out)?;
+                Ok(out)
+            }),
+        );
+        r.set_pooled("cv::Sobel", pooled_unary(|img, out| imgproc::sobel_into(img, 1, 0, out)));
+        r.set_pooled("cv::SobelY", pooled_unary(|img, out| imgproc::sobel_into(img, 0, 1, out)));
+        r.set_pooled(
+            "cv::GaussianBlur",
+            Arc::new(|a: &[&Mat], p: &BufferPool| {
+                let mut tmp = p.acquire(a[0].shape());
+                let mut out = p.acquire(a[0].shape());
+                let res = imgproc::gaussian_blur_into(a[0], &mut tmp, &mut out);
+                p.release(tmp);
+                res.map(|()| out)
+            }),
+        );
+        r.set_pooled("cv::boxFilter", pooled_unary(|img, out| imgproc::box_filter_into(img, true, out)));
+        r.set_pooled("cv::erode", pooled_unary(imgproc::erode_into));
+        r.set_pooled("cv::dilate", pooled_unary(imgproc::dilate_into));
+        r.set_pooled("cv::Laplacian", pooled_unary(imgproc::laplacian_into));
+        r.set_pooled("cv::Scharr", pooled_unary(imgproc::scharr_into));
+        r.set_pooled("cv::medianBlur", pooled_unary(imgproc::median_blur_into));
+        r.set_pooled(
+            "cv::cornerHarris",
+            Arc::new(|a: &[&Mat], p: &BufferPool| imgproc::corner_harris_pooled(a[0], HARRIS_K, p)),
+        );
+        r.set_pooled(
+            "cv::harrisResponse",
+            Arc::new(|a: &[&Mat], p: &BufferPool| {
+                imgproc::harris_response_pooled(a[0], a[1], HARRIS_K, p)
+            }),
+        );
+        r.set_pooled(
+            FUSED_CVT_HARRIS,
+            Arc::new(|a: &[&Mat], p: &BufferPool| {
+                imgproc::harris_pipeline_pooled(a[0], HARRIS_K, p)
+            }),
+        );
+        r.set_pooled(
+            "cv::normalize",
+            Arc::new(|a: &[&Mat], p: &BufferPool| {
+                let mut out = p.acquire_cloned(a[0]);
+                imgproc::normalize_mut(&mut out, 0.0, 255.0)?;
+                Ok(out)
+            }),
+        );
+        r.set_pooled(
+            "cv::convertScaleAbs",
+            Arc::new(|a: &[&Mat], p: &BufferPool| {
+                let mut out = p.acquire_cloned(a[0]);
+                imgproc::convert_scale_abs_mut(&mut out, 1.0, 0.0)?;
+                Ok(out)
+            }),
+        );
+        r.set_pooled(
+            "cv::threshold",
+            Arc::new(|a: &[&Mat], p: &BufferPool| {
+                let mut out = p.acquire_cloned(a[0]);
+                imgproc::threshold_mut(&mut out, 127.0, 255.0)?;
+                Ok(out)
+            }),
+        );
+
+        // ---- in-place forms (input buffer dies at the call) -----------
+        r.set_inplace(
+            "cv::normalize",
+            Arc::new(|mut m: Mat| {
+                imgproc::normalize_mut(&mut m, 0.0, 255.0)?;
+                Ok(m)
+            }),
+        );
+        r.set_inplace(
+            "cv::convertScaleAbs",
+            Arc::new(|mut m: Mat| {
+                imgproc::convert_scale_abs_mut(&mut m, 1.0, 0.0)?;
+                Ok(m)
+            }),
+        );
+        r.set_inplace(
+            "cv::threshold",
+            Arc::new(|mut m: Mat| {
+                imgproc::threshold_mut(&mut m, 127.0, 255.0)?;
+                Ok(m)
+            }),
+        );
         r
     }
 
@@ -99,8 +271,51 @@ impl Registry {
     pub fn register(&mut self, symbol: &str, arity: usize, f: SwFn) {
         self.map.insert(
             symbol.to_string(),
-            FuncEntry { symbol: symbol.to_string(), arity, f },
+            FuncEntry {
+                symbol: symbol.to_string(),
+                arity,
+                f,
+                pooled: None,
+                inplace: None,
+                fused_of: None,
+            },
         );
+    }
+
+    /// Declare an already-registered symbol as a fused kernel composing
+    /// exactly `parts` (in chain order).
+    pub fn set_fused_of(&mut self, symbol: &str, parts: Vec<SwFn>) {
+        if let Some(e) = self.map.get_mut(symbol) {
+            e.fused_of = Some(parts);
+        }
+    }
+
+    /// True while `cv::Sobel`/`cv::SobelY` still resolve to the standard
+    /// kernels recorded at [`Registry::standard`] time — the builder's
+    /// gate for substituting the fused one-walk Sobel pair
+    /// ([`FUSED_SOBEL_PAIR`]); re-registering either symbol disables it.
+    pub fn sobel_pair_intact(&self) -> bool {
+        match &self.sobel_pair {
+            Some((dx, dy)) => {
+                self.map.get("cv::Sobel").is_some_and(|e| Arc::ptr_eq(&e.f, dx))
+                    && self.map.get("cv::SobelY").is_some_and(|e| Arc::ptr_eq(&e.f, dy))
+            }
+            None => false,
+        }
+    }
+
+    /// Attach a pooled form to an already-registered symbol.
+    pub fn set_pooled(&mut self, symbol: &str, f: SwFnPooled) {
+        if let Some(e) = self.map.get_mut(symbol) {
+            e.pooled = Some(f);
+        }
+    }
+
+    /// Attach an in-place form to an already-registered symbol.
+    pub fn set_inplace(&mut self, symbol: &str, f: SwFnInPlace) {
+        if let Some(e) = self.map.get_mut(symbol) {
+            e.inplace = Some(f);
+        }
     }
 
     /// Resolve a symbol (the `dlsym` analogue).
@@ -134,6 +349,17 @@ impl Registry {
     }
 }
 
+/// Pooled form of a unary same-shape kernel with an `_into` variant.
+fn pooled_unary(
+    into: impl Fn(&Mat, &mut Mat) -> Result<()> + Send + Sync + 'static,
+) -> SwFnPooled {
+    Arc::new(move |a: &[&Mat], p: &BufferPool| {
+        let mut out = p.acquire(a[0].shape());
+        into(a[0], &mut out)?;
+        Ok(out)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +371,7 @@ mod tests {
         for sym in ["cv::cvtColor", "cv::cornerHarris", "cv::normalize", "cv::convertScaleAbs"] {
             assert!(r.contains(sym), "{sym} missing");
         }
+        assert!(r.contains(FUSED_CVT_HARRIS));
     }
 
     #[test]
@@ -178,5 +405,62 @@ mod tests {
         r.register("cv::cvtColor", 1, Arc::new(|_: &[&Mat]| Ok(Mat::full(&[1, 1], 9.0))));
         let out = r.call("cv::cvtColor", &[&Mat::zeros(&[2, 2])]).unwrap();
         assert_eq!(out.as_slice(), &[9.0]);
+        // replacing drops the hot-path variants with the old entry
+        assert!(r.resolve("cv::cvtColor").unwrap().pooled.is_none());
+    }
+
+    #[test]
+    fn fused_entry_tracks_constituent_identity() {
+        let mut r = Registry::standard();
+        let fused = r.resolve(FUSED_CVT_HARRIS).unwrap().clone();
+        let cvt = r.resolve("cv::cvtColor").unwrap().clone();
+        let harris = r.resolve("cv::cornerHarris").unwrap().clone();
+        assert!(fused.fuses_exactly(&[&cvt, &harris]));
+        assert!(!fused.fuses_exactly(&[&harris, &cvt]), "order matters");
+        assert!(!fused.fuses_exactly(&[&cvt]), "arity matters");
+        // re-registering a constituent breaks the identity link
+        r.register("cv::cvtColor", 1, Arc::new(|a: &[&Mat]| imgproc::cvt_color(a[0])));
+        let cvt2 = r.resolve("cv::cvtColor").unwrap().clone();
+        assert!(!fused.fuses_exactly(&[&cvt2, &harris]));
+    }
+
+    #[test]
+    fn pooled_and_inplace_forms_match_plain_calls() {
+        let r = Registry::standard();
+        let pool = BufferPool::new();
+        let rgb = synth::noise_rgb(9, 11, 3);
+        let gray = r.call("cv::cvtColor", &[&rgb]).unwrap();
+        for sym in [
+            "cv::Sobel",
+            "cv::SobelY",
+            "cv::GaussianBlur",
+            "cv::boxFilter",
+            "cv::erode",
+            "cv::dilate",
+            "cv::Laplacian",
+            "cv::Scharr",
+            "cv::medianBlur",
+            "cv::cornerHarris",
+            "cv::normalize",
+            "cv::convertScaleAbs",
+            "cv::threshold",
+        ] {
+            let entry = r.resolve(sym).unwrap();
+            let plain = (entry.f)(&[&gray]).unwrap();
+            let pooled = entry.pooled.as_ref().expect(sym)(&[&gray], &pool).unwrap();
+            assert_eq!(plain, pooled, "{sym} pooled form diverges");
+            if let Some(ip) = &entry.inplace {
+                assert_eq!(plain, ip(gray.clone()).unwrap(), "{sym} in-place form diverges");
+            }
+        }
+        // the fused mega-kernel and the 2-ary response
+        let entry = r.resolve(FUSED_CVT_HARRIS).unwrap();
+        let plain = (entry.f)(&[&rgb]).unwrap();
+        let pooled = entry.pooled.as_ref().unwrap()(&[&rgb], &pool).unwrap();
+        assert_eq!(plain, pooled);
+        let entry = r.resolve("cv::harrisResponse").unwrap();
+        let plain = (entry.f)(&[&gray, &gray]).unwrap();
+        let pooled = entry.pooled.as_ref().unwrap()(&[&gray, &gray], &pool).unwrap();
+        assert_eq!(plain, pooled);
     }
 }

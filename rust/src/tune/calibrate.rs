@@ -94,6 +94,12 @@ pub fn calibrate(
         )));
     }
 
+    // Warm the pipeline's buffer pool with one frame before timing: the
+    // first frame's pool misses (and lazy per-shape shelf growth) are a
+    // cold-start artifact, and calibration factors must reflect the
+    // steady state the plan will actually serve.
+    let _ = built.process_one(frames[0].clone())?;
+
     let t0 = std::time::Instant::now();
     let (_, stats): (_, PipelineStats) = built.run(frames)?;
     metrics.measure_time.record(t0.elapsed());

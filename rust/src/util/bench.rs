@@ -3,8 +3,17 @@
 //! `harness = false` bench binaries use [`Bench`] for warm-up, repeated
 //! measurement, and mean/p50/min reporting, plus table-style printing so
 //! `cargo bench` output can be diffed against the paper's tables.
+//!
+//! Every bench binary also serializes its measurements with
+//! [`write_bench_json`] into a `BENCH_<name>.json` artifact at the repo
+//! root, so the perf trajectory is machine-comparable across commits.
+//! Setting `COURIER_BENCH_SMOKE=1` switches [`Bench::from_env`] (and the
+//! binaries' workload sizes) to a seconds-long smoke budget for CI.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -26,6 +35,69 @@ impl Measurement {
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns as f64 / 1e6
     }
+
+    /// JSON form (for `BENCH_*.json` artifacts).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns as f64)),
+            ("p50_ns", Json::Num(self.p50_ns as f64)),
+            ("min_ns", Json::Num(self.min_ns as f64)),
+        ])
+    }
+}
+
+/// True when `COURIER_BENCH_SMOKE=1`: bench binaries shrink workloads and
+/// budgets to a CI-sized smoke run (the JSON artifact records the mode).
+pub fn smoke() -> bool {
+    std::env::var("COURIER_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Serialize a bench run into `BENCH_<name>.json` at the repo root (or
+/// `$COURIER_BENCH_DIR` when set) and return the path written.
+///
+/// `extras` carries the bench's headline scalars (speed-ups, frame
+/// intervals, pool hit rates, ...) so trajectory comparisons don't have
+/// to re-derive them from the raw measurements.
+pub fn write_bench_json(
+    name: &str,
+    measurements: &[Measurement],
+    extras: &[(&str, f64)],
+) -> std::io::Result<PathBuf> {
+    let root = match std::env::var("COURIER_BENCH_DIR") {
+        Ok(dir) => PathBuf::from(dir),
+        // the crate lives in <repo>/rust: artifacts land at the repo root
+        Err(_) => Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap_or_else(|| Path::new("."))
+            .to_path_buf(),
+    };
+    write_bench_json_at(&root, name, measurements, extras)
+}
+
+/// [`write_bench_json`] into an explicit directory.
+pub fn write_bench_json_at(
+    root: &Path,
+    name: &str,
+    measurements: &[Measurement],
+    extras: &[(&str, f64)],
+) -> std::io::Result<PathBuf> {
+    let mut members = vec![
+        ("bench", Json::Str(name.to_string())),
+        ("smoke", Json::Bool(smoke())),
+        (
+            "measurements",
+            Json::Arr(measurements.iter().map(Measurement::to_json).collect()),
+        ),
+    ];
+    for &(k, v) in extras {
+        members.push((k, Json::Num(v)));
+    }
+    let path = root.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, Json::obj(members).to_string_pretty())?;
+    println!("wrote {}", path.display());
+    Ok(path)
 }
 
 /// Benchmark runner with a global time budget per case.
@@ -46,6 +118,21 @@ impl Bench {
     /// Harness with a custom per-case budget.
     pub fn with_budget(budget: Duration) -> Self {
         Self { budget, ..Default::default() }
+    }
+
+    /// [`Bench::with_budget`], unless `COURIER_BENCH_SMOKE=1` caps the
+    /// run at a few fast iterations.
+    pub fn from_env(budget: Duration) -> Self {
+        if smoke() {
+            Self {
+                warmup: 0,
+                min_iters: 1,
+                max_iters: 3,
+                budget: Duration::from_millis(250),
+            }
+        } else {
+            Self::with_budget(budget)
+        }
     }
 
     /// Quick harness for cheap cases.
@@ -131,5 +218,26 @@ mod tests {
         };
         let m = b.run("fast", || 1 + 1);
         assert!(m.iters <= 4);
+    }
+
+    #[test]
+    fn json_artifact_roundtrips() {
+        let tmp = crate::util::testing::TempDir::new("bench-json").unwrap();
+        let m = Measurement {
+            label: "case".into(),
+            iters: 5,
+            mean_ns: 1_000,
+            p50_ns: 900,
+            min_ns: 800,
+        };
+        let path =
+            write_bench_json_at(tmp.path(), "unit", &[m], &[("speedup", 2.5)]).unwrap();
+        assert!(path.ends_with("BENCH_unit.json"));
+        let parsed = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.req("bench").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(parsed.req("speedup").unwrap().as_f64().unwrap(), 2.5);
+        let ms = parsed.req("measurements").unwrap().as_arr().unwrap();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].req("mean_ns").unwrap().as_u64().unwrap(), 1_000);
     }
 }

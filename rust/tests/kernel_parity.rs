@@ -1,0 +1,202 @@
+//! Kernel parity property suite: every optimized path in
+//! `swlib::imgproc` — interior/border split stencils, the fused Sobel
+//! pair, the scratch-reusing Harris, the fused gray→response mega-kernel,
+//! pooled and in-place variants — must match the naive reference
+//! (`imgproc::reference`) **bit-for-bit**; the separable two-pass
+//! Gaussian may differ by reassociation only (~1 ULP), pinned with a
+//! tight relative tolerance.  Shapes sweep the degenerate corners (1×1,
+//! 1×N, N×1) plus randomized sizes.
+
+use courier::image::{synth, Mat};
+use courier::pipeline::BufferPool;
+use courier::swlib::imgproc::{self, reference, HARRIS_K};
+use courier::util::rng::Rng;
+
+/// The shape sweep: degenerate corners + a few fixed + randomized sizes.
+fn shapes() -> Vec<(usize, usize)> {
+    let mut s = vec![
+        (1, 1),
+        (1, 2),
+        (2, 1),
+        (1, 9),
+        (9, 1),
+        (2, 2),
+        (2, 5),
+        (5, 2),
+        (3, 3),
+        (7, 13),
+        (16, 16),
+    ];
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..6 {
+        s.push((1 + rng.below(24), 1 + rng.below(24)));
+    }
+    s
+}
+
+fn gray(h: usize, w: usize, seed: u64) -> Mat {
+    synth::noise_gray(h, w, seed)
+}
+
+#[test]
+fn unary_stencils_match_reference_bit_for_bit() {
+    for (h, w) in shapes() {
+        for seed in 0..2u64 {
+            let img = gray(h, w, seed);
+            let cases: Vec<(&str, Mat, Mat)> = vec![
+                (
+                    "sobel_dx",
+                    imgproc::sobel(&img, 1, 0).unwrap(),
+                    reference::sobel(&img, 1, 0).unwrap(),
+                ),
+                (
+                    "sobel_dy",
+                    imgproc::sobel(&img, 0, 1).unwrap(),
+                    reference::sobel(&img, 0, 1).unwrap(),
+                ),
+                (
+                    "box_norm",
+                    imgproc::box_filter(&img, true).unwrap(),
+                    reference::box_filter(&img, true).unwrap(),
+                ),
+                (
+                    "box_raw",
+                    imgproc::box_filter(&img, false).unwrap(),
+                    reference::box_filter(&img, false).unwrap(),
+                ),
+                (
+                    "laplacian",
+                    imgproc::laplacian(&img).unwrap(),
+                    reference::laplacian(&img).unwrap(),
+                ),
+                (
+                    "scharr",
+                    imgproc::scharr(&img).unwrap(),
+                    reference::scharr(&img).unwrap(),
+                ),
+                (
+                    "median",
+                    imgproc::median_blur(&img).unwrap(),
+                    reference::median_blur(&img).unwrap(),
+                ),
+                (
+                    "erode",
+                    imgproc::erode(&img).unwrap(),
+                    reference::erode(&img).unwrap(),
+                ),
+                (
+                    "dilate",
+                    imgproc::dilate(&img).unwrap(),
+                    reference::dilate(&img).unwrap(),
+                ),
+                (
+                    "harris",
+                    imgproc::corner_harris(&img, HARRIS_K).unwrap(),
+                    reference::corner_harris(&img, HARRIS_K).unwrap(),
+                ),
+            ];
+            for (name, fast, naive) in cases {
+                assert_eq!(fast, naive, "{name} diverges at ({h}, {w}) seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn separable_gaussian_within_one_ulp_of_reference() {
+    for (h, w) in shapes() {
+        let img = gray(h, w, 11);
+        let sep = imgproc::gaussian_blur(&img).unwrap();
+        let full = reference::gaussian_blur(&img).unwrap();
+        // values are O(255): 1e-6 relative ~= 1 ULP at that magnitude
+        assert!(
+            sep.allclose(&full, 1e-6, 1e-4),
+            "gaussian diverges at ({h}, {w}): max diff {}",
+            sep.max_abs_diff(&full)
+        );
+    }
+}
+
+#[test]
+fn fused_sobel_pair_matches_split_kernels() {
+    for (h, w) in shapes() {
+        let img = gray(h, w, 23);
+        let mut dx = Mat::zeros(img.shape());
+        let mut dy = Mat::zeros(img.shape());
+        imgproc::sobel_xy_into(&img, &mut dx, &mut dy).unwrap();
+        assert_eq!(dx, reference::sobel(&img, 1, 0).unwrap(), "dx ({h}, {w})");
+        assert_eq!(dy, reference::sobel(&img, 0, 1).unwrap(), "dy ({h}, {w})");
+    }
+}
+
+#[test]
+fn harris_response_and_elementwise_match_reference() {
+    for (h, w) in shapes() {
+        let img = gray(h, w, 31);
+        let ix = imgproc::sobel(&img, 1, 0).unwrap();
+        let iy = imgproc::sobel(&img, 0, 1).unwrap();
+        assert_eq!(
+            imgproc::harris_response(&ix, &iy, HARRIS_K).unwrap(),
+            reference::harris_response(&ix, &iy, HARRIS_K).unwrap(),
+            "harris_response ({h}, {w})"
+        );
+        assert_eq!(
+            imgproc::normalize(&img, 0.0, 255.0).unwrap(),
+            reference::normalize(&img, 0.0, 255.0).unwrap()
+        );
+        assert_eq!(
+            imgproc::convert_scale_abs(&img, 1.0, 0.0).unwrap(),
+            reference::convert_scale_abs(&img, 1.0, 0.0).unwrap()
+        );
+        assert_eq!(
+            imgproc::threshold(&img, 127.0, 255.0).unwrap(),
+            reference::threshold(&img, 127.0, 255.0).unwrap()
+        );
+    }
+}
+
+#[test]
+fn pooled_variants_match_plain_across_shapes() {
+    let pool = BufferPool::new();
+    for (h, w) in shapes() {
+        let img = gray(h, w, 41);
+        // run every pooled kernel twice so the second pass consumes
+        // recycled (dirty) storage — any cell the kernel forgets to
+        // overwrite shows up as a mismatch
+        for pass in 0..2 {
+            let ctx = format!("({h}, {w}) pass {pass}");
+            let out = imgproc::corner_harris_pooled(&img, HARRIS_K, &pool).unwrap();
+            assert_eq!(out, reference::corner_harris(&img, HARRIS_K).unwrap(), "{ctx}");
+            pool.release(out);
+            let ix = imgproc::sobel(&img, 1, 0).unwrap();
+            let iy = imgproc::sobel(&img, 0, 1).unwrap();
+            let resp = imgproc::harris_response_pooled(&ix, &iy, HARRIS_K, &pool).unwrap();
+            assert_eq!(resp, reference::harris_response(&ix, &iy, HARRIS_K).unwrap(), "{ctx}");
+            pool.release(resp);
+        }
+    }
+}
+
+#[test]
+fn fused_gray_response_pipeline_matches_chain_across_shapes() {
+    let pool = BufferPool::new();
+    for (h, w) in shapes() {
+        let rgb = synth::noise_rgb(h, w, 51);
+        let gray = imgproc::cvt_color(&rgb).unwrap();
+        let want = reference::corner_harris(&gray, HARRIS_K).unwrap();
+        assert_eq!(imgproc::harris_pipeline(&rgb, HARRIS_K).unwrap(), want, "({h}, {w})");
+        let pooled = imgproc::harris_pipeline_pooled(&rgb, HARRIS_K, &pool).unwrap();
+        assert_eq!(pooled, want, "pooled ({h}, {w})");
+        pool.release(pooled);
+    }
+}
+
+#[test]
+fn into_variants_validate_out_shape() {
+    let img = gray(6, 6, 1);
+    let mut wrong = Mat::zeros(&[5, 6]);
+    assert!(imgproc::sobel_into(&img, 1, 0, &mut wrong).is_err());
+    assert!(imgproc::cvt_color_into(&synth::noise_rgb(4, 4, 0), &mut wrong).is_err());
+    let mut tmp = Mat::zeros(&[6, 6]);
+    assert!(imgproc::gaussian_blur_into(&img, &mut tmp, &mut wrong).is_err());
+}

@@ -1,0 +1,110 @@
+//! The zero-allocation invariant: after a warm-up stream, the steady-state
+//! frame path of a built pipeline draws every buffer from the pool —
+//! `pool.stats().misses` stays flat while frames keep flowing.
+//!
+//! Hermetic (empty hardware database, CPU-only placement) and
+//! deterministic: one worker thread, so acquire/release interleaving is a
+//! fixed cycle and the assertion cannot flake on scheduling.
+
+use courier::app::{corner_harris_demo, Interpreter, RegistryDispatch};
+use courier::config::Config;
+use courier::hwdb::HwDatabase;
+use courier::image::{synth, Mat};
+use courier::ir::Ir;
+use courier::pipeline::{build, BuiltPipeline};
+use courier::runtime::Runtime;
+use courier::swlib::Registry;
+use courier::trace::{trace_program, CallGraph};
+use courier::util::testing::empty_hwdb_dir;
+
+fn hermetic_build(h: usize, w: usize, threads: usize, tokens: usize) -> BuiltPipeline {
+    let tmp = empty_hwdb_dir("pool-steady").unwrap();
+    let db = HwDatabase::load(tmp.path()).unwrap();
+    let prog = corner_harris_demo(h, w);
+    let trace = trace_program(&prog, &[vec![synth::noise_rgb(h, w, 0)]]).unwrap();
+    let ir = Ir::from_graph(&CallGraph::from_trace(&trace)).unwrap();
+    let cfg = Config {
+        artifacts_dir: tmp.path().to_path_buf(),
+        cpu_only: true,
+        threads,
+        tokens,
+        ..Default::default()
+    };
+    build(&ir, &db, &Runtime::cpu().unwrap(), &Registry::standard(), &cfg).unwrap()
+}
+
+fn frames(h: usize, w: usize, n: usize, base: u64) -> Vec<Mat> {
+    (0..n).map(|i| synth::noise_rgb(h, w, base + i as u64)).collect()
+}
+
+#[test]
+fn steady_state_frame_path_allocates_nothing() {
+    let (h, w) = (24, 32);
+    let built = hermetic_build(h, w, 1, 2);
+
+    // warm-up: shelves fill to the working set (incl. recycled inputs)
+    let (warm_out, _) = built.run(frames(h, w, 8, 0)).unwrap();
+    assert_eq!(warm_out.len(), 8);
+    let warm = built.pool.stats();
+    assert!(warm.misses > 0, "cold start must have allocated something");
+
+    // steady state: more frames, zero new allocations
+    let (outs, _) = built.run(frames(h, w, 10, 100)).unwrap();
+    assert_eq!(outs.len(), 10);
+    let steady = built.pool.stats();
+    assert_eq!(
+        steady.misses, warm.misses,
+        "steady-state frame path allocated: {} new misses over 10 frames \
+         (hits {} -> {})",
+        steady.misses - warm.misses,
+        warm.hits,
+        steady.hits
+    );
+    assert!(steady.hits > warm.hits, "the steady-state frames must run off the pool");
+
+    // and the pooled stream stays numerically identical to the original
+    let interp = Interpreter::new(
+        corner_harris_demo(h, w),
+        std::sync::Arc::new(RegistryDispatch::standard()),
+    );
+    for (i, f) in frames(h, w, 10, 100).into_iter().enumerate() {
+        let want = interp.run(&[f]).unwrap().remove(0);
+        assert_eq!(outs[i], want, "frame {i} diverges from the original binary");
+    }
+}
+
+#[test]
+fn process_one_reaches_steady_state_too() {
+    let (h, w) = (16, 20);
+    let built = hermetic_build(h, w, 1, 1);
+    for i in 0..4 {
+        let _ = built.process_one(synth::noise_rgb(h, w, i)).unwrap();
+    }
+    let warm = built.pool.stats();
+    for i in 0..6 {
+        let _ = built.process_one(synth::noise_rgb(h, w, 50 + i)).unwrap();
+    }
+    assert_eq!(built.pool.stats().misses, warm.misses);
+}
+
+#[test]
+fn pool_survives_multi_worker_streams() {
+    // more workers/tokens: the invariant loosens to "misses stop growing
+    // once shelves cover the peak concurrent working set" — run a large
+    // warm-up, then assert a long steady window stays flat
+    let (h, w) = (16, 16);
+    let built = hermetic_build(h, w, 2, 3);
+    let _ = built.run(frames(h, w, 24, 0)).unwrap();
+    let warm = built.pool.stats();
+    let (outs, _) = built.run(frames(h, w, 24, 500)).unwrap();
+    assert_eq!(outs.len(), 24);
+    let steady = built.pool.stats();
+    // concurrency can in principle deepen the working set mid-window, but
+    // it must not grow per-frame: allow at most one extra per-stage
+    // working set, not one per frame
+    assert!(
+        steady.misses - warm.misses <= 8,
+        "pool misses grew by {} over 24 steady frames",
+        steady.misses - warm.misses
+    );
+}

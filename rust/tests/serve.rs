@@ -67,6 +67,14 @@ fn second_open_with_identical_key_is_served_from_the_plan_cache() {
     let want = original.run(&[frame]).unwrap().remove(0);
     assert!(got.quantized_close(&want, 1.0, 1e-3), "served output diverges from binary");
 
+    // the frame ran off the shared buffer pool (one pool per cached plan)
+    let pool = warm.pool_stats();
+    assert!(pool.acquires() > 0, "served frames must draw from the buffer pool");
+    assert_eq!(
+        pool, cold.pool_stats(),
+        "sessions on one cached plan share one pool"
+    );
+
     server.shutdown();
 }
 
