@@ -45,7 +45,7 @@
 //! The steady-state frame path is allocation-free and cache-aware: CPU
 //! kernels ([`swlib::imgproc`]) run interior/border-split stencils with
 //! fused and separable variants, stage buffers recycle through a
-//! shape-keyed [`pipeline::BufferPool`], and the token runtime parks
+//! capacity-class [`pipeline::BufferPool`], and the token runtime parks
 //! starved workers on a condvar instead of spinning.  Every optimization
 //! is pinned bit-for-bit to the naive reference kernels
 //! (`imgproc::reference`); `docs/performance.md` documents the layers and

@@ -9,6 +9,18 @@
 //! independent sub-flows execute them as fork-join branches.  Illegal
 //! wirings (backwards edges, tapped fusions, multi-external-input flows)
 //! are typed [`CourierError::Dag`] — never a silently wrong pipeline.
+//!
+//! `instantiate` runs a **generalized fusion planner** over each stage:
+//! maximal runs of chained single-consumer software tasks inside a
+//! sequential stage bind as one composed callable
+//! ([`Registry::compose_chain`] — intermediates route through pool
+//! scratch, never the frame environment), and a two-branch fork-join
+//! stage over one shared input binds a registered one-walk sibling pair
+//! (`Registry::sibling_pair`).  Both are gated per link on registry
+//! provenance, so re-registered (overridden) kernels always run un-fused.
+//! Generic fork-join stages are **move-aware**: the final consumer of a
+//! dying buffer receives it moved, earlier consumers get pool clones —
+//! one clone per extra consumer instead of one per consumer.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -20,7 +32,7 @@ use crate::hwdb::HwDatabase;
 use crate::image::Mat;
 use crate::ir::{Ir, Placement};
 use crate::runtime::{Executable, Runtime};
-use crate::swlib::{Registry, FUSED_CVT_HARRIS, FUSED_SOBEL_PAIR};
+use crate::swlib::Registry;
 use crate::{CourierError, Result};
 
 use super::partition::partition_dag;
@@ -95,7 +107,7 @@ pub struct BuiltPipeline {
     pub control_program: String,
     /// The step whose output is the pipeline's deliverable.
     pub terminal_step: usize,
-    /// Shape-keyed buffer recycling pool shared by every stage (and every
+    /// Capacity-class-keyed buffer recycling pool shared by every stage (and every
     /// frame environment this pipeline creates); after warm-up the
     /// steady-state frame path allocates nothing — `pool.stats().misses`
     /// stays flat.
@@ -169,9 +181,9 @@ enum Source {
 }
 
 /// One resolved task argument: its source, and whether this use is the
-/// flow's last (so the buffer may be moved out of the environment instead
-/// of cloned — fork-join stages always clone, their branches share the
-/// environment read-only).
+/// flow's last occurrence (so the buffer is moved out of the environment
+/// instead of cloned — on the sequential path directly, on the fork-join
+/// path via the coordinating thread's move-aware prefetch).
 #[derive(Debug, Clone, Copy)]
 struct ArgRef {
     source: Source,
@@ -202,11 +214,13 @@ struct BuiltStage {
     /// Task-index groups executed as concurrent branches (one group ==
     /// plain sequential execution).
     branches: Vec<Vec<usize>>,
-    /// When the stage is exactly the two sibling Sobel gradients over one
-    /// shared input, `(dx task index, dy task index)`: executed as the
-    /// fused one-walk pair (`sobel_xy_into`) instead of two branch
-    /// threads each re-reading the image.
-    sobel_pair: Option<(usize, usize)>,
+    /// When the stage is exactly two single-task software branches over
+    /// one shared input and the registry carries a matching one-walk
+    /// pair kernel: `(first task index, second task index, pair)` — the
+    /// stage runs as one image walk (borrowing the shared input straight
+    /// from the environment) instead of two branch threads each
+    /// re-reading the image.
+    sibling_pair: Option<(usize, usize, crate::swlib::PairEntry)>,
     /// Steps whose buffers die after this stage.
     drop_after: Vec<usize>,
     /// Whether the external input dies after this stage.
@@ -214,32 +228,6 @@ struct BuiltStage {
 }
 
 impl BuiltStage {
-    /// Fetch one argument inside a fork-join branch: branch-local
-    /// producers first (cloned — a branch may fan out internally), then
-    /// the shared environment read-only.  Clones draw from the pool.
-    fn fetch_branch(
-        env: &FrameEnv,
-        local: &HashMap<usize, Mat>,
-        arg: &ArgRef,
-        symbol: &str,
-    ) -> Result<Mat> {
-        let missing = |what: String| {
-            CourierError::Pipeline(format!("{symbol}: missing {what} in frame environment"))
-        };
-        match arg.source {
-            Source::External => env
-                .input
-                .as_ref()
-                .map(|m| env.clone_mat(m))
-                .ok_or_else(|| missing("external input".into())),
-            Source::Step(s) => local
-                .get(&s)
-                .or_else(|| env.bufs.get(&s))
-                .map(|m| env.clone_mat(m))
-                .ok_or_else(|| missing(format!("buffer of step {s}"))),
-        }
-    }
-
     /// Execute one bound task over owned arguments.  Software tasks route
     /// through their pooled form when a pool is attached, and every owned
     /// argument is recycled afterwards — the environment retains un-taken
@@ -267,27 +255,68 @@ impl BuiltStage {
         }
     }
 
-    /// Run one fork-join branch against the shared environment, returning
-    /// its produced buffers.
-    fn run_branch(&self, env: &FrameEnv, branch: &[usize]) -> Result<Vec<(usize, Mat)>> {
+    /// Run one fork-join branch.  Arguments whose buffer the stage MOVES
+    /// somewhere arrive pre-resolved (owned) from the coordinating
+    /// thread — the move-aware prefetch in [`BuiltStage::apply`] — so
+    /// clone-before-move ordering is already settled; everything else is
+    /// resolved here, concurrently with the sibling branches:
+    /// branch-local products (moved on their final use, pool-cloned
+    /// otherwise) and read-only pool clones of shared environment
+    /// buffers.  Returns the branch's produced buffers.
+    fn run_branch(
+        &self,
+        env: &FrameEnv,
+        tasks: Vec<(usize, Vec<Option<Mat>>)>,
+    ) -> Result<Vec<(usize, Mat)>> {
+        let pool = env.pool_ref();
         let mut local: HashMap<usize, Mat> = HashMap::new();
-        for &ti in branch {
+        for (ti, pre) in tasks {
             let task = &self.tasks[ti];
             let mut owned = Vec::with_capacity(task.args.len());
-            for arg in &task.args {
-                owned.push(Self::fetch_branch(env, &local, arg, &task.symbol)?);
+            for (ai, slot) in pre.into_iter().enumerate() {
+                let m = match slot {
+                    Some(m) => m,
+                    None => {
+                        let arg = &task.args[ai];
+                        match arg.source {
+                            Source::Step(s) if local.contains_key(&s) => {
+                                // branch-local product: move on its final
+                                // use, pool-clone otherwise
+                                if arg.take {
+                                    local.remove(&s).expect("just checked")
+                                } else {
+                                    let m = local.get(&s).expect("just checked");
+                                    match pool {
+                                        Some(p) => p.acquire_cloned(m),
+                                        None => m.clone(),
+                                    }
+                                }
+                            }
+                            // shared environment buffer this stage never
+                            // moves: read-only clone (takes are always
+                            // prefetched by the coordinator)
+                            src => Self::clone_from_env(env, src, &task.symbol)?,
+                        }
+                    }
+                };
+                owned.push(m);
             }
-            let out = Self::exec(task, owned, env.pool_ref())?;
+            let out = Self::exec(task, owned, pool)?;
             local.insert(task.out_step, out);
         }
         Ok(local.into_iter().collect())
     }
 
-    /// Run the fused Sobel dx+dy pair: one image walk over the shared
-    /// input (borrowed straight from the environment — no clone at all),
-    /// both gradients written into pooled outputs.  Bit-exact with the
-    /// two split kernels the pair replaces.
-    fn run_sobel_pair(&self, env: &FrameEnv, di: usize) -> Result<(Mat, Mat)> {
+    /// Run a fused sibling pair: one image walk over the shared input
+    /// (borrowed straight from the environment — no clone at all), both
+    /// outputs written into pooled buffers.  Bit-exact with the two split
+    /// kernels the pair replaces.
+    fn run_sibling_pair(
+        &self,
+        env: &FrameEnv,
+        di: usize,
+        pair: &crate::swlib::PairEntry,
+    ) -> Result<(Mat, Mat)> {
         let arg = &self.tasks[di].args[0];
         let src = match arg.source {
             Source::External => env.input.as_ref(),
@@ -299,12 +328,12 @@ impl BuiltStage {
                 self.tasks[di].symbol
             ))
         })?;
-        let (mut dx, mut dy) = match env.pool_ref() {
+        let (mut a, mut b) = match env.pool_ref() {
             Some(p) => (p.acquire(src.shape()), p.acquire(src.shape())),
             None => (Mat::zeros(src.shape()), Mat::zeros(src.shape())),
         };
-        crate::swlib::imgproc::sobel_xy_into(src, &mut dx, &mut dy)?;
-        Ok((dx, dy))
+        (pair.f)(src, &mut a, &mut b)?;
+        Ok((a, b))
     }
 
     /// Move one taken (dying) argument out of the environment.
@@ -314,6 +343,22 @@ impl BuiltStage {
                 CourierError::Pipeline(format!("{symbol}: external input already consumed"))
             }),
             Source::Step(s) => env.bufs.remove(&s).ok_or_else(|| {
+                CourierError::Pipeline(format!("{symbol}: missing buffer of step {s}"))
+            }),
+        }
+    }
+
+    /// Pool-backed clone of a live source from the environment — the one
+    /// lookup shared by the sequential path, the fork-join prefetch, and
+    /// the in-branch fallback.
+    fn clone_from_env(env: &FrameEnv, source: Source, symbol: &str) -> Result<Mat> {
+        match source {
+            Source::External => {
+                env.input.as_ref().map(|m| env.clone_mat(m)).ok_or_else(|| {
+                    CourierError::Pipeline(format!("{symbol}: external input already consumed"))
+                })
+            }
+            Source::Step(s) => env.bufs.get(&s).map(|m| env.clone_mat(m)).ok_or_else(|| {
                 CourierError::Pipeline(format!("{symbol}: missing buffer of step {s}"))
             }),
         }
@@ -339,28 +384,7 @@ impl BuiltStage {
             let m = if arg.take {
                 Self::take_arg(env, arg, &task.symbol)?
             } else {
-                match arg.source {
-                    Source::External => env
-                        .input
-                        .as_ref()
-                        .map(|m| env.clone_mat(m))
-                        .ok_or_else(|| {
-                            CourierError::Pipeline(format!(
-                                "{}: external input already consumed",
-                                task.symbol
-                            ))
-                        })?,
-                    Source::Step(s) => env
-                        .bufs
-                        .get(&s)
-                        .map(|m| env.clone_mat(m))
-                        .ok_or_else(|| {
-                            CourierError::Pipeline(format!(
-                                "{}: missing buffer of step {s}",
-                                task.symbol
-                            ))
-                        })?,
-                }
+                Self::clone_from_env(env, arg.source, &task.symbol)?
             };
             owned.push(m);
         }
@@ -381,23 +405,79 @@ impl StageFilter<FrameEnv> for BuiltStage {
             for task in &self.tasks {
                 self.run_task_seq(&mut env, task)?;
             }
-        } else if let Some((di, yi)) = self.sobel_pair {
-            // the two sibling gradients fuse into one image walk
-            let (dx, dy) = self.run_sobel_pair(&env, di)?;
-            env.bufs.insert(self.tasks[di].out_step, dx);
-            env.bufs.insert(self.tasks[yi].out_step, dy);
+        } else if let Some((di, yi, pair)) = &self.sibling_pair {
+            // the two sibling stencils fuse into one image walk
+            let (a, b) = self.run_sibling_pair(&env, *di, pair)?;
+            env.bufs.insert(self.tasks[*di].out_step, a);
+            env.bufs.insert(self.tasks[*yi].out_step, b);
         } else {
-            // fork-join: sibling branches read the shared environment
-            // immutably and merge their outputs after the join.  The
-            // first branch runs on the current worker thread; only the
-            // extra branches cost a scoped-thread spawn per token.
-            let (first, rest) =
-                self.branches.split_first().expect("fork-join needs branches");
+            // move-aware fork-join.  Buffers this stage MOVES need
+            // clone-before-move ordering, so the coordinating thread
+            // resolves every use of a *dying* buffer first, in task
+            // order: earlier uses become pool clones, the final
+            // occurrence is moved out of the environment — one clone per
+            // extra consumer instead of one per consumer.  Buffers that
+            // survive the stage stay in the environment and the branches
+            // clone them concurrently in-thread (no serialized copies
+            // for them).  The first branch runs on the current worker
+            // thread; only the extra branches cost a scoped-thread spawn
+            // per token.
+            let mut branch_of = vec![0usize; self.tasks.len()];
+            for (bi, branch) in self.branches.iter().enumerate() {
+                for &ti in branch {
+                    branch_of[ti] = bi;
+                }
+            }
+            let local_steps: Vec<std::collections::HashSet<usize>> = self
+                .branches
+                .iter()
+                .map(|b| b.iter().map(|&ti| self.tasks[ti].out_step).collect())
+                .collect();
+            // sources moved out of the environment by some task here
+            let taken_sources: std::collections::HashSet<Source> = self
+                .tasks
+                .iter()
+                .flat_map(|t| t.args.iter())
+                .filter(|a| a.take)
+                .map(|a| a.source)
+                .collect();
+            let mut prefetched: Vec<Vec<Option<Mat>>> = Vec::with_capacity(self.tasks.len());
+            for (ti, task) in self.tasks.iter().enumerate() {
+                let mut row = Vec::with_capacity(task.args.len());
+                for arg in &task.args {
+                    let branch_local = match arg.source {
+                        Source::External => false,
+                        Source::Step(s) => local_steps[branch_of[ti]].contains(&s),
+                    };
+                    if branch_local || !taken_sources.contains(&arg.source) {
+                        row.push(None); // resolved inside the branch
+                        continue;
+                    }
+                    let m = if arg.take {
+                        Self::take_arg(&mut env, arg, &task.symbol)?
+                    } else {
+                        Self::clone_from_env(&env, arg.source, &task.symbol)?
+                    };
+                    row.push(Some(m));
+                }
+                prefetched.push(row);
+            }
+            let mut branch_inputs: Vec<Vec<(usize, Vec<Option<Mat>>)>> = self
+                .branches
+                .iter()
+                .map(|b| {
+                    b.iter()
+                        .map(|&ti| (ti, std::mem::take(&mut prefetched[ti])))
+                        .collect()
+                })
+                .collect();
+            let rest = branch_inputs.split_off(1);
+            let first = branch_inputs.pop().expect("fork-join needs branches");
             let results: Vec<Result<Vec<(usize, Mat)>>> = std::thread::scope(|scope| {
                 let env_ref = &env;
                 let handles: Vec<_> = rest
-                    .iter()
-                    .map(|branch| scope.spawn(move || self.run_branch(env_ref, branch)))
+                    .into_iter()
+                    .map(|bi| scope.spawn(move || self.run_branch(env_ref, bi)))
                     .collect();
                 let mut out = vec![self.run_branch(env_ref, first)];
                 out.extend(
@@ -733,32 +813,15 @@ pub fn instantiate(
     let stage_branches: Vec<Vec<Vec<usize>>> =
         plan.stages.iter().map(|s| s.branches(&edges)).collect();
 
-    // Can flat tasks `fi` (cvtColor) and `fi + 1` (cornerHarris) collapse
-    // into the fused gray→response mega-kernel?  Both must be software,
-    // directly chained, and the gray intermediate must have no other
-    // consumer (nor be the terminal output) — then skipping its trip
-    // through the frame environment is unobservable.
-    fn fusable_cvt_harris(
-        a: &TaskSpec,
-        b: &TaskSpec,
-        gray: usize,
-        all_args: &[Vec<Source>],
-        fi: usize,
-        terminal_step: usize,
-    ) -> bool {
-        a.symbol == "cv::cvtColor"
-            && b.symbol == "cv::cornerHarris"
-            && matches!(a.kind, TaskKind::Sw)
-            && matches!(b.kind, TaskKind::Sw)
-            && gray != terminal_step
-            && all_args[fi + 1] == [Source::Step(gray)]
-            && all_args
-                .iter()
-                .flatten()
-                .filter(|s| **s == Source::Step(gray))
-                .count()
-                == 1
-    }
+    // how many argument positions (anywhere in the flow) read step `s` —
+    // the single-consumer check of the fusion planner
+    let consumer_uses = |s: usize| -> usize {
+        all_args
+            .iter()
+            .flatten()
+            .filter(|src| **src == Source::Step(s))
+            .count()
+    };
 
     let mut filters: Vec<Box<dyn StageFilter<FrameEnv>>> = Vec::with_capacity(plan.stages.len());
     let mut fi = 0usize;
@@ -768,30 +831,47 @@ pub fn instantiate(
         let mut ti = 0usize;
         while ti < stage.tasks.len() {
             let task = &stage.tasks[ti];
-            // kernel-fusion selection: consecutive SW tasks covering the
-            // whole gray→response chain inside one sequential stage bind
-            // as the registry's fused mega-kernel — but only while the
-            // live registry still resolves both constituent symbols to
-            // the exact implementations the fused entry composes
-            // (`fuses_exactly`): a re-registered custom cvtColor or
-            // cornerHarris disables fusion instead of being bypassed
-            if !fork_join
-                && ti + 1 < stage.tasks.len()
-                && fusable_cvt_harris(
-                    task,
-                    &stage.tasks[ti + 1],
-                    flat[fi].out_step,
-                    &all_args,
-                    fi,
-                    terminal_step,
-                )
-                && registry.contains(FUSED_CVT_HARRIS)
-                && registry.resolve(FUSED_CVT_HARRIS)?.fuses_exactly(&[
-                    registry.resolve(&task.symbol)?,
-                    registry.resolve(&stage.tasks[ti + 1].symbol)?,
-                ])
-            {
-                let entry = registry.resolve(FUSED_CVT_HARRIS)?.clone();
+            // generalized SW-chain fusion: a maximal run of chained
+            // software tasks inside a sequential stage binds as ONE
+            // composed callable.  A task extends the run when it is
+            // software, provenance-intact (`Registry::link_intact` — a
+            // re-registered constituent breaks the links that touch it,
+            // splitting the run, so overrides always run un-fused), its
+            // only input is the previous task's output, and that
+            // intermediate has no other consumer (nor is the terminal
+            // output) — then skipping its trip through the frame
+            // environment is unobservable.  `Registry::compose_chain`
+            // substitutes a registered mega-kernel (e.g. the
+            // gray→response Harris kernel) when one covers the exact run.
+            let fusable = |t: &TaskSpec| -> bool {
+                matches!(t.kind, TaskKind::Sw) && registry.link_intact(&t.symbol)
+            };
+            let mut run_len = 1usize;
+            if !fork_join && fusable(task) {
+                while ti + run_len < stage.tasks.len() {
+                    let next = &stage.tasks[ti + run_len];
+                    let link = flat[fi + run_len - 1].out_step;
+                    let next_unary = registry
+                        .resolve(&next.symbol)
+                        .map(|e| e.arity == 1)
+                        .unwrap_or(false);
+                    if fusable(next)
+                        && next_unary
+                        && all_args[fi + run_len] == [Source::Step(link)]
+                        && consumer_uses(link) == 1
+                        && link != terminal_step
+                    {
+                        run_len += 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            if run_len >= 2 {
+                let symbols: Vec<&str> = (0..run_len)
+                    .map(|k| stage.tasks[ti + k].symbol.as_str())
+                    .collect();
+                let entry = registry.compose_chain(&symbols)?;
                 let args: Vec<ArgRef> = all_args[fi]
                     .iter()
                     .enumerate()
@@ -802,13 +882,13 @@ pub fn instantiate(
                     .collect();
                 if entry.arity == args.len() {
                     bound_tasks.push(BoundTaskSpec {
+                        symbol: entry.symbol.clone(),
                         bound: BoundTask::Sw(entry),
                         args,
-                        out_step: flat[fi + 1].out_step,
-                        symbol: FUSED_CVT_HARRIS.to_string(),
+                        out_step: flat[fi + run_len - 1].out_step,
                     });
-                    fi += 2;
-                    ti += 2;
+                    fi += run_len;
+                    ti += run_len;
                     continue;
                 }
             }
@@ -823,9 +903,11 @@ pub fn instantiate(
                 .enumerate()
                 .map(|(ai, src)| ArgRef {
                     source: *src,
-                    // moves are only safe on the sequential path; branch
-                    // threads share the environment read-only
-                    take: !fork_join && last_occurrence.get(src) == Some(&(fi, ai)),
+                    // the final occurrence moves the buffer out of the
+                    // environment — on the sequential path directly, on
+                    // the fork-join path via the coordinating thread's
+                    // move-aware prefetch
+                    take: last_occurrence.get(src) == Some(&(fi, ai)),
                 })
                 .collect();
             // arity must match the wiring exactly — a collapsed or
@@ -873,14 +955,14 @@ pub fn instantiate(
         }
         let drop_input = last_use_stage.get(&Source::External) == Some(&si);
 
-        // fused Sobel-pair selection: a fork-join stage that is exactly
-        // the two sibling gradients over one shared input runs as one
-        // image walk — gated on the live registry still binding the
-        // standard Sobel kernels (an override disables the substitution)
-        let sobel_pair = if fork_join
+        // fused sibling-pair selection: a fork-join stage that is exactly
+        // two single-task software branches over one shared input runs as
+        // one image walk when the registry carries a matching pair kernel
+        // — gated on pair provenance (re-registering either constituent
+        // disables the substitution instead of bypassing the override)
+        let sibling_pair = if fork_join
             && stage_branches[si].len() == 2
             && stage_branches[si].iter().all(|b| b.len() == 1)
-            && registry.sobel_pair_intact()
         {
             let (a, b) = (stage_branches[si][0][0], stage_branches[si][1][0]);
             let sw_unary_same_input = matches!(bound_tasks[a].bound, BoundTask::Sw(_))
@@ -888,24 +970,30 @@ pub fn instantiate(
                 && bound_tasks[a].args.len() == 1
                 && bound_tasks[b].args.len() == 1
                 && bound_tasks[a].args[0].source == bound_tasks[b].args[0].source;
-            match (bound_tasks[a].symbol.as_str(), bound_tasks[b].symbol.as_str()) {
-                ("cv::Sobel", "cv::SobelY") if sw_unary_same_input => Some((a, b)),
-                ("cv::SobelY", "cv::Sobel") if sw_unary_same_input => Some((b, a)),
-                _ => None,
+            if sw_unary_same_input {
+                registry
+                    .sibling_pair(&bound_tasks[a].symbol, &bound_tasks[b].symbol)
+                    .map(|p| (a, b, p.clone()))
+                    .or_else(|| {
+                        registry
+                            .sibling_pair(&bound_tasks[b].symbol, &bound_tasks[a].symbol)
+                            .map(|p| (b, a, p.clone()))
+                    })
+            } else {
+                None
             }
         } else {
             None
         };
 
         // label from the *bound* tasks, so a fused binding is visible
-        let label = if sobel_pair.is_some() {
-            FUSED_SOBEL_PAIR.to_string()
-        } else {
-            bound_tasks
+        let label = match &sibling_pair {
+            Some((_, _, pair)) => pair.label.clone(),
+            None => bound_tasks
                 .iter()
                 .map(|t| t.symbol.as_str())
                 .collect::<Vec<_>>()
-                .join(if fork_join { " || " } else { " ; " })
+                .join(if fork_join { " || " } else { " ; " }),
         };
         filters.push(Box::new(BuiltStage {
             label,
@@ -916,7 +1004,7 @@ pub fn instantiate(
             },
             tasks: bound_tasks,
             branches: stage_branches[si].clone(),
-            sobel_pair,
+            sibling_pair,
             drop_after,
             drop_input,
         }));
@@ -982,6 +1070,7 @@ mod tests {
     use super::*;
     use crate::app::{corner_harris_demo, fanout_demo, harris_dag_demo};
     use crate::image::synth;
+    use crate::swlib::{FUSED_CVT_HARRIS, FUSED_SOBEL_PAIR};
     use crate::trace::{trace_program, CallGraph};
 
     fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -1333,6 +1422,121 @@ mod tests {
         for (i, f) in frames.into_iter().enumerate() {
             assert_eq!(outs[i], interp.run(&[f]).unwrap().remove(0), "frame {i}");
         }
+    }
+
+    #[test]
+    fn maximal_sw_chain_fuses_into_one_composed_binding() {
+        // a 4-call unary chain regrouped into one sequential stage binds
+        // as a single composed callable covering the whole run —
+        // bit-for-bit with the interpreter and the unfused build
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = crate::app::parse_program(
+            "program chain4\n\
+             input frame 14x18x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call blur = cv::GaussianBlur(gray)\n\
+             call edge = cv::Laplacian(blur)\n\
+             call out = cv::convertScaleAbs(edge)\n\
+             output out\n",
+        )
+        .unwrap();
+        let built = build(&ir_of(&prog, 14, 18), &db, &rt, &registry, &cfg).unwrap();
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        assert_eq!(tasks.len(), 4);
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 4,
+            edges: built.plan.edges.clone(),
+            stages: vec![StageSpec { index: 0, serial: true, tasks }],
+        };
+        let fused = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        assert_eq!(
+            fused.pipeline.stage_labels(),
+            vec!["cv::cvtColor+cv::GaussianBlur+cv::Laplacian+cv::convertScaleAbs".to_string()],
+            "the whole run must bind as one composed callable"
+        );
+        let interp = crate::app::Interpreter::new(
+            prog,
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        for seed in 0..3u64 {
+            let frame = synth::noise_rgb(14, 18, seed);
+            let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+            assert_eq!(fused.process_one(frame.clone()).unwrap(), want, "seed {seed} (fused)");
+            assert_eq!(built.process_one(frame).unwrap(), want, "seed {seed} (unfused)");
+        }
+        // streamed too (pool-backed steady state)
+        let frames: Vec<Mat> = (0..6).map(|s| synth::noise_rgb(14, 18, 70 + s)).collect();
+        let (outs, _) = fused.run(frames.clone()).unwrap();
+        for (i, f) in frames.into_iter().enumerate() {
+            assert_eq!(outs[i], interp.run(&[f]).unwrap().remove(0), "frame {i}");
+        }
+    }
+
+    #[test]
+    fn partial_override_splits_the_run_around_the_broken_link() {
+        // re-registering ONE interior constituent must disable exactly
+        // the links that touch it: the run splits, the rest still fuses,
+        // and the override really runs
+        let (_tmp, db, rt, mut registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = crate::app::parse_program(
+            "program chainSplit\n\
+             input frame 12x16x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call blur = cv::GaussianBlur(gray)\n\
+             call edge = cv::Laplacian(blur)\n\
+             call out = cv::convertScaleAbs(edge)\n\
+             output out\n",
+        )
+        .unwrap();
+        let built = build(&ir_of(&prog, 12, 16), &db, &rt, &registry, &cfg).unwrap();
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 4,
+            edges: built.plan.edges.clone(),
+            stages: vec![StageSpec { index: 0, serial: true, tasks }],
+        };
+        registry.register(
+            "cv::Laplacian",
+            1,
+            std::sync::Arc::new(|a: &[&Mat]| {
+                let mut m = crate::swlib::imgproc::laplacian(a[0])?;
+                for v in m.as_mut_slice() {
+                    *v += 3.0;
+                }
+                Ok(m)
+            }),
+        );
+        let split = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        assert_eq!(
+            split.pipeline.stage_labels(),
+            vec![
+                "cv::cvtColor+cv::GaussianBlur ; cv::Laplacian ; cv::convertScaleAbs"
+                    .to_string()
+            ],
+            "only the intact prefix may fuse"
+        );
+        let frame = synth::noise_rgb(12, 16, 9);
+        let gray = registry.call("cv::cvtColor", &[&frame]).unwrap();
+        let blur = registry.call("cv::GaussianBlur", &[&gray]).unwrap();
+        let edge = registry.call("cv::Laplacian", &[&blur]).unwrap();
+        let want = registry.call("cv::convertScaleAbs", &[&edge]).unwrap();
+        assert_eq!(split.process_one(frame).unwrap(), want, "the override must run");
     }
 
     #[test]

@@ -53,6 +53,14 @@ impl TaskSpec {
 /// argument order per consumer.
 pub type PlanEdge = (Option<usize>, usize);
 
+/// Modeled per-link saving when the builder fuses two chained software
+/// tasks: the intermediate buffer skips its round-trip through the frame
+/// environment (one pooled store + one load + queue bookkeeping),
+/// credited as this fraction of the cheaper endpoint task's time.  The
+/// simulator subtracts the credit from fused-eligible stages so the
+/// tuner's search prefers partitions that enable fusion.
+pub const FUSION_LINK_SAVING: f64 = 0.10;
+
 /// One pipeline stage: consecutive tasks executed by one filter.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StageSpec {
@@ -117,6 +125,70 @@ impl StageSpec {
             }
         }
         groups
+    }
+
+    /// First-task indices of the chained software links inside this
+    /// stage a fusion planner can collapse: consecutive task pairs where
+    /// both tasks are software, the consumer's only input is the
+    /// producer's output, and that intermediate has no other consumer
+    /// anywhere in `edges` (mirrors the builder's run detection minus
+    /// registry provenance — the model assumes standard kernels).
+    /// `edges` must be the plan's full effective edge set.  A fork-join
+    /// stage (more than one branch) reports none: the builder only
+    /// chain-fuses sequential stages, so crediting links inside branches
+    /// would model a saving deploy cannot realize.
+    fn fusable_link_starts(&self, edges: &[PlanEdge]) -> Vec<usize> {
+        if self.branches(edges).len() > 1 {
+            return Vec::new();
+        }
+        let mut starts = Vec::new();
+        for (i, w) in self.tasks.windows(2).enumerate() {
+            let (a, b) = (&w[0], &w[1]);
+            if !matches!(a.kind, TaskKind::Sw) || !matches!(b.kind, TaskKind::Sw) {
+                continue;
+            }
+            let Some(&out) = a.covers.last() else { continue };
+            // every edge feeding b from outside b's own covers
+            let incoming: Vec<Option<usize>> = edges
+                .iter()
+                .filter(|(p, c)| {
+                    b.covers.contains(c)
+                        && match p {
+                            Some(p) => !b.covers.contains(p),
+                            None => true,
+                        }
+                })
+                .map(|(p, _)| *p)
+                .collect();
+            if incoming != [Some(out)] {
+                continue;
+            }
+            // the intermediate must have exactly one consumer edge
+            if edges.iter().filter(|(p, _)| *p == Some(out)).count() == 1 {
+                starts.push(i);
+            }
+        }
+        starts
+    }
+
+    /// Number of collapsible software links in this stage — see
+    /// [`Self::fusable_link_starts`] for the exact criteria.
+    pub fn fusable_links(&self, edges: &[PlanEdge]) -> usize {
+        self.fusable_link_starts(edges).len()
+    }
+
+    /// Estimated service-time credit from fusing this stage's chained
+    /// software links, ns: [`FUSION_LINK_SAVING`] of the cheaper endpoint
+    /// per link (the intermediate's skipped environment round-trip).
+    /// Zero for fork-join stages, like [`Self::fusable_links`].
+    pub fn fusion_credit_ns(&self, edges: &[PlanEdge]) -> u64 {
+        self.fusable_link_starts(edges)
+            .into_iter()
+            .map(|i| {
+                let link_min = self.tasks[i].est_ns.min(self.tasks[i + 1].est_ns);
+                (link_min as f64 * FUSION_LINK_SAVING) as u64
+            })
+            .sum()
     }
 
     /// Estimated stage service time under fork-join execution: branches
@@ -581,6 +653,72 @@ pub(crate) mod tests {
                 },
             ],
         }
+    }
+
+    #[test]
+    fn fusable_links_and_credit() {
+        // all-SW chain plan: a 2-task stage holds one fusable link
+        let sw = |covers: Vec<usize>, ms: u64| TaskSpec {
+            covers,
+            symbol: "f".into(),
+            kind: TaskKind::Sw,
+            est_ns: ms * 1_000_000,
+        };
+        let p = StagePlan {
+            program: "t".into(),
+            threads: 2,
+            tokens: 4,
+            edges: Vec::new(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: vec![sw(vec![0], 10), sw(vec![1], 30)] },
+                StageSpec { index: 1, serial: true, tasks: vec![sw(vec![2], 20)] },
+            ],
+        };
+        let edges = p.effective_edges();
+        assert_eq!(p.stages[0].fusable_links(&edges), 1);
+        assert_eq!(p.stages[1].fusable_links(&edges), 0);
+        // credit: 10% of the cheaper endpoint (10 ms)
+        assert_eq!(p.stages[0].fusion_credit_ns(&edges), 1_000_000);
+        assert_eq!(p.stages[1].fusion_credit_ns(&edges), 0);
+
+        // a fan-out intermediate (two consumers) breaks the link
+        let mut fan = p.clone();
+        fan.edges = vec![(None, 0), (Some(0), 1), (Some(0), 2)];
+        let edges = fan.effective_edges();
+        assert_eq!(fan.stages[0].fusable_links(&edges), 0);
+
+        // hardware endpoints never count
+        let mut hw = p.clone();
+        hw.stages[0].tasks[1].kind = TaskKind::Hw { module: "m".into(), artifact: "a".into() };
+        assert_eq!(hw.stages[0].fusable_links(&hw.effective_edges()), 0);
+
+        // the demo fork-join plan: harrisResponse -> normalize chain in
+        // stage 2 is one fusable link, the sibling Sobels are none
+        let dag = dag_plan();
+        let edges = dag.effective_edges();
+        assert_eq!(dag.stages[1].fusable_links(&edges), 0);
+        assert_eq!(dag.stages[2].fusable_links(&edges), 1);
+
+        // a fork-join stage earns NO credit even when one of its branches
+        // holds a chained pair — the builder only fuses sequential stages
+        let fj = StagePlan {
+            program: "t".into(),
+            threads: 2,
+            tokens: 4,
+            edges: vec![(None, 0), (Some(0), 1), (Some(1), 2), (Some(0), 3)],
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: vec![sw(vec![0], 5)] },
+                StageSpec {
+                    index: 1,
+                    serial: false,
+                    tasks: vec![sw(vec![1], 10), sw(vec![2], 10), sw(vec![3], 10)],
+                },
+            ],
+        };
+        let edges = fj.effective_edges();
+        assert_eq!(fj.stages[1].branches(&edges).len(), 2, "chain branch + sibling");
+        assert_eq!(fj.stages[1].fusable_links(&edges), 0);
+        assert_eq!(fj.stages[1].fusion_credit_ns(&edges), 0);
     }
 
     #[test]

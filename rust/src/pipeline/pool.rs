@@ -8,20 +8,31 @@
 //! when) return to them, so after a warm-up stream the per-frame
 //! allocation count is zero — every acquire is a recycle hit.
 //!
-//! Two details make the steady state actually close:
+//! Three details make the steady state actually close:
 //!
-//! * **cross-shape downcycling** — an exact-shape miss falls back to the
-//!   best-fit spare whose *capacity* covers the request (smallest
-//!   sufficient capacity wins).  The external input frame's `(H, W, 3)`
-//!   storage gets recycled into `(H, W)` intermediates instead of
-//!   ballooning on an idle shelf while gray-scale requests allocate.
-//! * **bounded shelves** — at most [`MAX_IDLE_PER_SHAPE`] spares are kept
-//!   per shape; extra releases free their memory, so a burst never pins
-//!   its high-water mark forever.
+//! * **capacity-class shelves** — spares are shelved by their storage's
+//!   *allocation capacity*, not the shape they last carried.  A request
+//!   takes the smallest sufficient class (exact size first, downcycling
+//!   otherwise), and a release always returns the storage to its own
+//!   class — so an input frame's `(H, W, 3)` storage that spent a while
+//!   as a `(H, W)` intermediate still rejoins the 3-channel class
+//!   instead of starving it (the historical shape-keyed shelves lost
+//!   exactly those migrated storages: released under the *new* shape,
+//!   they never rejoined their original shelf, and steady streams bled
+//!   one large allocation per frame once the small shelf hit its cap).
+//! * **cross-shape downcycling** — an exact-size miss falls back to the
+//!   best-fit spare whose capacity covers the request (smallest
+//!   sufficient class wins), instead of ballooning idle shelves while
+//!   smaller requests allocate.
+//! * **bounded shelves** — at most [`MAX_IDLE_PER_CLASS`] spares are kept
+//!   per capacity class; extra releases free their memory, so a burst
+//!   never pins its high-water mark forever.
 //!
 //! Stats are monotonic counters: `hits`/`misses` count acquires,
-//! `released` counts returns (including "foreign" buffers the pool never
-//! handed out, e.g. recycled input frames — which is why
+//! `cloned` counts pool-backed copies ([`BufferPool::acquire_cloned`] —
+//! what the builder's move-aware scheduling minimizes), `released`
+//! counts returns (including "foreign" buffers the pool never handed
+//! out, e.g. recycled input frames — which is why
 //! [`PoolStats::outstanding`] is a saturating estimate, not an exact
 //! ledger).  The zero-allocation invariant is asserted as "`misses` stays
 //! flat across a steady-state window" — see `tests/pool_steady_state.rs`.
@@ -32,17 +43,20 @@ use std::sync::Mutex;
 
 use crate::image::Mat;
 
-/// Spare storages kept per shape; releases beyond this are dropped (freed)
-/// instead of shelved.
-const MAX_IDLE_PER_SHAPE: usize = 32;
+/// Spare storages kept per capacity class; releases beyond this are
+/// dropped (freed) instead of shelved.
+const MAX_IDLE_PER_CLASS: usize = 32;
 
 /// Monotonic pool counters (a snapshot — see [`BufferPool::stats`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct PoolStats {
-    /// Acquires served from a shelf (exact shape or downcycled capacity).
+    /// Acquires served from a shelf (exact capacity or downcycled).
     pub hits: u64,
     /// Acquires that had to allocate.
     pub misses: u64,
+    /// Pool-backed copies ([`BufferPool::acquire_cloned`]) — each is an
+    /// acquire (counted in `hits`/`misses`) plus one memcpy.
+    pub cloned: u64,
     /// Buffers returned to the pool (shelved or dropped over the cap).
     pub released: u64,
 }
@@ -70,18 +84,21 @@ impl PoolStats {
     }
 }
 
-/// A shape-keyed recycling pool for `Mat` storage.
+/// A capacity-class-keyed recycling pool for `Mat` storage.
 ///
 /// Thread-safe; one pool is shared by every stage of a built pipeline
 /// (acquires/releases happen on whichever worker runs the stage).
 #[derive(Debug, Default)]
 pub struct BufferPool {
-    /// shape -> spare storages (each spare's `capacity() >=` the shelf's
-    /// element count; lengths are fixed up on acquire).  BTreeMap keeps
-    /// the downcycling scan deterministic.
-    shelves: Mutex<BTreeMap<Vec<usize>, Vec<Vec<f32>>>>,
+    /// storage capacity (f32 elements) -> spare storages of exactly that
+    /// capacity.  Keying by capacity class — not by the shape a spare
+    /// last carried — is what lets a downcycled storage rejoin its
+    /// original class on release.  BTreeMap gives an ordered range scan
+    /// for smallest-sufficient-class lookup.
+    shelves: Mutex<BTreeMap<usize, Vec<Vec<f32>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    cloned: AtomicU64,
     released: AtomicU64,
 }
 
@@ -92,32 +109,23 @@ impl BufferPool {
     }
 
     /// Take a `Mat` of `shape` with **unspecified contents** (recycled
-    /// data or zeros) — callers overwrite every element.  Prefers an
-    /// exact-shape spare, then the best-fit (smallest sufficient
-    /// capacity) spare of any shape, then allocates.
+    /// data or zeros) — callers overwrite every element.  Serves the
+    /// smallest capacity class that covers the request (an exact-size
+    /// class first, downcycling from a larger one otherwise), then
+    /// allocates.
     pub fn acquire(&self, shape: &[usize]) -> Mat {
         let n: usize = shape.iter().product();
         let mut shelves = self.shelves.lock().expect("pool lock");
-        if let Some(storage) = shelves.get_mut(shape).and_then(Vec::pop) {
-            drop(shelves);
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Mat::from_storage(shape, storage);
-        }
-        // downcycle: best-fit across every shelf by spare capacity
-        let mut best: Option<(usize, Vec<usize>, usize)> = None; // (cap, key, idx)
-        for (key, stack) in shelves.iter() {
-            for (i, spare) in stack.iter().enumerate() {
-                let cap = spare.capacity();
-                if cap >= n && best.as_ref().is_none_or(|(bc, _, _)| cap < *bc) {
-                    best = Some((cap, key.clone(), i));
-                }
-            }
-        }
-        if let Some((_, key, i)) = best {
-            let stack = shelves.get_mut(&key).expect("key just observed");
-            let storage = stack.swap_remove(i);
+        // smallest sufficient class with a spare
+        let class = shelves
+            .range(n..)
+            .find(|(_, stack)| !stack.is_empty())
+            .map(|(cap, _)| *cap);
+        if let Some(cap) = class {
+            let stack = shelves.get_mut(&cap).expect("class just observed");
+            let storage = stack.pop().expect("non-empty just observed");
             if stack.is_empty() {
-                shelves.remove(&key);
+                shelves.remove(&cap);
             }
             drop(shelves);
             self.hits.fetch_add(1, Ordering::Relaxed);
@@ -129,24 +137,27 @@ impl BufferPool {
     }
 
     /// Take a pooled copy of `src` (acquire + memcpy — the pool-aware
-    /// replacement for `Mat::clone` on the frame path).
+    /// replacement for `Mat::clone` on the frame path).  Counted in
+    /// `stats().cloned`, which is how the move-aware fork-join tests pin
+    /// "exactly one clone per extra consumer".
     pub fn acquire_cloned(&self, src: &Mat) -> Mat {
+        self.cloned.fetch_add(1, Ordering::Relaxed);
         let mut out = self.acquire(src.shape());
         out.as_mut_slice().copy_from_slice(src.as_slice());
         out
     }
 
-    /// Return a dead buffer's storage to its shape shelf.  Accepts
+    /// Return a dead buffer's storage to its capacity class.  Accepts
     /// buffers the pool never handed out (recycling external input
-    /// frames is the point); spares beyond [`MAX_IDLE_PER_SHAPE`] are
+    /// frames is the point); spares beyond [`MAX_IDLE_PER_CLASS`] are
     /// dropped.
     pub fn release(&self, m: Mat) {
         self.released.fetch_add(1, Ordering::Relaxed);
-        let shape = m.shape().to_vec();
         let storage = m.into_vec();
+        let class = storage.capacity();
         let mut shelves = self.shelves.lock().expect("pool lock");
-        let stack = shelves.entry(shape).or_default();
-        if stack.len() < MAX_IDLE_PER_SHAPE {
+        let stack = shelves.entry(class).or_default();
+        if stack.len() < MAX_IDLE_PER_CLASS {
             stack.push(storage);
         }
     }
@@ -156,6 +167,7 @@ impl BufferPool {
         PoolStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            cloned: self.cloned.load(Ordering::Relaxed),
             released: self.released.load(Ordering::Relaxed),
         }
     }
@@ -224,11 +236,58 @@ mod tests {
     #[test]
     fn shelves_are_bounded() {
         let pool = BufferPool::new();
-        for _ in 0..(MAX_IDLE_PER_SHAPE + 10) {
+        for _ in 0..(MAX_IDLE_PER_CLASS + 10) {
             pool.release(Mat::zeros(&[3, 3]));
         }
-        assert_eq!(pool.idle(), MAX_IDLE_PER_SHAPE);
-        assert_eq!(pool.stats().released, (MAX_IDLE_PER_SHAPE + 10) as u64);
+        assert_eq!(pool.idle(), MAX_IDLE_PER_CLASS);
+        assert_eq!(pool.stats().released, (MAX_IDLE_PER_CLASS + 10) as u64);
+    }
+
+    #[test]
+    fn downcycled_storage_rejoins_its_capacity_class() {
+        // The shelf-migration regression: a (4,4,3) storage downcycled
+        // into a (4,4) intermediate used to be released under its NEW
+        // shape — once the small shelf hit its cap the big storage was
+        // dropped while the 3-channel shelf sat empty, so the next
+        // (4,4,3) acquire allocated.  Capacity-class keying returns it
+        // to the 48-element class regardless of the shape it carried.
+        let pool = BufferPool::new();
+        // fill the 16-element class to its cap
+        for _ in 0..MAX_IDLE_PER_CLASS {
+            pool.release(Mat::zeros(&[4, 4]));
+        }
+        // a 3-channel storage downcycles into a (4,4) intermediate ...
+        pool.release(Mat::zeros(&[4, 4, 3]));
+        let m = pool.acquire(&[4, 4]); // served from the 48 class? no —
+        // smallest sufficient class is 16, so the 48 spare stays put
+        assert_eq!(pool.stats().misses, 0);
+        pool.release(m);
+        // ... now force the downcycle: drain the 16 class first
+        let held: Vec<Mat> = (0..MAX_IDLE_PER_CLASS + 1).map(|_| pool.acquire(&[4, 4])).collect();
+        assert_eq!(pool.stats().misses, 0, "the 48-cap spare must serve the overflow");
+        // release everything back: the 48-cap storage (currently shaped
+        // (4,4)) must rejoin the 48 class even though the 16 class is full
+        for m in held {
+            pool.release(m);
+        }
+        let big = pool.acquire(&[4, 4, 3]);
+        assert_eq!(
+            pool.stats().misses,
+            0,
+            "migrated storage never rejoined its class: 3-channel acquire allocated"
+        );
+        assert_eq!(big.shape(), &[4, 4, 3]);
+    }
+
+    #[test]
+    fn cloned_counter_tracks_pool_copies() {
+        let pool = BufferPool::new();
+        let src = Mat::full(&[3, 5], 2.5);
+        assert_eq!(pool.stats().cloned, 0);
+        let a = pool.acquire_cloned(&src);
+        let b = pool.acquire_cloned(&src);
+        assert_eq!((a, b), (src.clone(), src));
+        assert_eq!(pool.stats().cloned, 2);
     }
 
     #[test]

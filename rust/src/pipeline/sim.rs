@@ -34,17 +34,26 @@ pub struct SimResult {
     pub first_frame_ns: u64,
     /// Per-stage busy time, ns.
     pub stage_busy_ns: Vec<u64>,
+    /// Effective worker capacity per stage (1 for serial stages,
+    /// `min(cpu_workers, tokens)` for parallel ones) — the normalizer
+    /// [`SimResult::stage_occupancy`] divides by, mirroring the measured
+    /// [`crate::pipeline::PipelineStats::stage_occupancy`] semantics.
+    pub stage_workers: Vec<usize>,
     /// Frames simulated.
     pub frames: u64,
 }
 
 impl SimResult {
-    /// Occupancy of a stage in [0, 1].
+    /// Occupancy of a stage in [0, 1]: busy over makespan, normalized by
+    /// the stage's effective worker count so a parallel stage running
+    /// several tokens concurrently cannot report > 1.0 (which mis-ranked
+    /// the bottleneck in reports).
     pub fn stage_occupancy(&self, stage: usize) -> f64 {
         if self.makespan_ns == 0 {
             return 0.0;
         }
-        self.stage_busy_ns[stage] as f64 / self.makespan_ns as f64
+        let workers = self.stage_workers.get(stage).copied().unwrap_or(1).max(1);
+        self.stage_busy_ns[stage] as f64 / (self.makespan_ns as f64 * workers as f64)
     }
 
     /// Speed-up over a sequential original with `original_frame_ns` per
@@ -68,9 +77,17 @@ pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize
     // fork-join aware: a stage of independent branches (sibling sub-flows
     // of a DAG plan) costs its longest branch, because the runtime
     // executes branches concurrently.  For linear chains this equals the
-    // plain task sum, keeping chain makespans bit-identical.
+    // plain task sum, keeping chain makespans bit-identical.  Fusion
+    // aware: chained single-consumer software pairs inside one stage run
+    // as one composed kernel at deploy time, so the per-link buffer
+    // traffic is credited back ([`StageSpec::fusion_credit_ns`]) — this
+    // is what makes the tuner's search prefer fusion-enabling partitions.
     let edges = plan.effective_edges();
-    let stage_ns: Vec<u64> = plan.stages.iter().map(|s| s.fork_join_ns(&edges)).collect();
+    let stage_ns: Vec<u64> = plan
+        .stages
+        .iter()
+        .map(|s| s.fork_join_ns(&edges).saturating_sub(s.fusion_credit_ns(&edges)))
+        .collect();
     // fabric unit id per stage (stages sharing a module serialize on it)
     let mut module_names: Vec<String> = Vec::new();
     let stage_units: Vec<Vec<usize>> = plan
@@ -193,6 +210,11 @@ pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize
         frame_interval_ns: if frames == 0 { 0 } else { now / frames },
         first_frame_ns,
         stage_busy_ns: stage_busy,
+        stage_workers: plan
+            .stages
+            .iter()
+            .map(|s| if s.serial { 1 } else { cpu_workers.min(tokens).max(1) })
+            .collect(),
         frames,
     }
 }
@@ -354,6 +376,46 @@ mod tests {
         // were the siblings summed (the pre-DAG model), stage 1 would be
         // 50 ms and dominate
         assert!(r.frame_interval_ns < 50_000_000, "{}", r.frame_interval_ns);
+    }
+
+    #[test]
+    fn fusion_credit_lowers_colocated_sw_chain_cost() {
+        let sw = |c: usize, ms: u64| TaskSpec {
+            covers: vec![c],
+            symbol: format!("cv::f{c}"),
+            kind: TaskKind::Sw,
+            est_ns: ms * 1_000_000,
+        };
+        // two chained SW tasks colocated in one stage: the run binds as a
+        // composed kernel at deploy time, so the link credit applies
+        let colocated = StagePlan {
+            program: "t".into(),
+            threads: 1,
+            tokens: 1,
+            edges: Vec::new(),
+            stages: vec![StageSpec {
+                index: 0,
+                serial: true,
+                tasks: vec![sw(0, 10), sw(1, 10)],
+            }],
+        };
+        let r = simulate(&colocated, 8, 1, 1);
+        // 20 ms per frame minus the 10%-of-min (1 ms) link credit
+        assert_eq!(r.frame_interval_ns, 19_000_000);
+
+        // the same tasks split across stages earn no credit
+        let split = StagePlan {
+            program: "t".into(),
+            threads: 1,
+            tokens: 1,
+            edges: Vec::new(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: vec![sw(0, 10)] },
+                StageSpec { index: 1, serial: true, tasks: vec![sw(1, 10)] },
+            ],
+        };
+        let r = simulate(&split, 8, 1, 1);
+        assert_eq!(r.frame_interval_ns, 20_000_000);
     }
 
     #[test]

@@ -96,16 +96,20 @@ pub struct PipelineStats {
     pub frames: u64,
     /// Wall-clock of the whole run, ns.
     pub wall_ns: u64,
-    /// High-water mark of the token pool's reservation counter
-    /// (injection to emission).  This is the pool's own accounting, not
-    /// derived from spans, so an overshoot is visible even for frames
-    /// still queued ahead of their first stage.  Near stream end a
-    /// racing worker's reservation that finds the feed empty can be
-    /// counted into another worker's mark before being released, so the
-    /// value may exceed the true frame overlap by up to `threads - 1` —
-    /// it never exceeds the pool bound, which is the invariant it
-    /// exists to check.
+    /// **Exact** high-water mark of frames in flight (injected from the
+    /// feed but not yet emitted).  This is the runtime's own accounting,
+    /// not derived from spans, so it covers frames still queued ahead of
+    /// their first stage — and it counts a pool reservation only once a
+    /// frame was actually claimed from the feed, so racing reservations
+    /// that find the feed empty (the historical `threads - 1` over-count
+    /// near stream end) never inflate it.  Never exceeds the token pool
+    /// bound, and equals the configured overlap on a schedule that
+    /// saturates the pool.
     pub peak_in_flight: usize,
+    /// Effective worker capacity per stage: 1 for `serial_in_order`
+    /// stages, `min(threads, tokens)` for `parallel` ones — the
+    /// normalizer [`PipelineStats::stage_occupancy`] divides by.
+    pub stage_workers: Vec<usize>,
 }
 
 impl PipelineStats {
@@ -118,12 +122,19 @@ impl PipelineStats {
             .sum()
     }
 
-    /// Occupancy of one stage in [0, 1].
+    /// Occupancy of one stage in [0, 1]: busy time over wall-clock
+    /// **normalized by the stage's effective worker count** (1 for
+    /// serial stages, `min(threads, tokens)` for parallel ones).  A
+    /// parallel stage's spans overlap across workers, so the raw
+    /// busy/wall ratio exceeds 1.0 and mis-ranks the bottleneck; the
+    /// normalized value is the fraction of the stage's *capacity* in
+    /// use, comparable across serial and parallel stages.
     pub fn stage_occupancy(&self, stage: usize) -> f64 {
         if self.wall_ns == 0 {
             return 0.0;
         }
-        self.stage_busy_ns(stage) as f64 / self.wall_ns as f64
+        let workers = self.stage_workers.get(stage).copied().unwrap_or(1).max(1);
+        self.stage_busy_ns(stage) as f64 / (self.wall_ns as f64 * workers as f64)
     }
 
     /// Steady-state frame interval estimate: wall / frames, ns.
@@ -295,9 +306,13 @@ struct Shared<P> {
     next_seq: Vec<AtomicU64>,
     /// Serial stage currently busy?
     busy: Vec<AtomicBool>,
-    /// Tokens injected but not yet emitted.
+    /// Pool reservations outstanding (reserved-before-pull CAS counter;
+    /// includes short-lived reservations that find the feed empty).
     in_flight: AtomicUsize,
-    /// High-water mark of `in_flight`.
+    /// Frames actually claimed from the feed and not yet emitted —
+    /// always `<= in_flight`, and the quantity `peak_in_flight` tracks.
+    frames_in_flight: AtomicUsize,
+    /// Exact high-water mark of `frames_in_flight`.
     peak_in_flight: AtomicUsize,
     /// Completed outputs keyed by seq.
     outputs: Mutex<BTreeMap<u64, P>>,
@@ -405,6 +420,7 @@ impl<P: Send> TokenPipeline<P> {
             next_seq: (0..n_stages).map(|_| AtomicU64::new(0)).collect(),
             busy: (0..n_stages).map(|_| AtomicBool::new(false)).collect(),
             in_flight: AtomicUsize::new(0),
+            frames_in_flight: AtomicUsize::new(0),
             peak_in_flight: AtomicUsize::new(0),
             outputs: Mutex::new(BTreeMap::new()),
             error: Mutex::new(None),
@@ -437,6 +453,14 @@ impl<P: Send> TokenPipeline<P> {
             frames: outputs.len() as u64,
             wall_ns: epoch.elapsed().as_nanos() as u64,
             peak_in_flight: shared.peak_in_flight.load(Ordering::Acquire),
+            stage_workers: self
+                .filters
+                .iter()
+                .map(|f| match f.mode() {
+                    FilterMode::SerialInOrder => 1,
+                    FilterMode::Parallel => self.threads.min(self.tokens).max(1),
+                })
+                .collect(),
         };
         Ok((outputs, stats))
     }
@@ -487,17 +511,23 @@ impl<P: Send> TokenPipeline<P> {
             // check at `tokens - 1` simultaneously and overshoot the pool
             // (the 10k-frame stress test flushes exactly that race out).
             if !shared.input_done.load(Ordering::Acquire) {
-                if let Ok(prev) = shared.in_flight.fetch_update(
-                    Ordering::AcqRel,
-                    Ordering::Acquire,
-                    |v| (v < self.tokens).then_some(v + 1),
-                ) {
+                if shared
+                    .in_flight
+                    .fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                        (v < self.tokens).then_some(v + 1)
+                    })
+                    .is_ok()
+                {
                     let mut it = feed.lock().expect("feed lock");
                     if let Some(mat) = it.next() {
-                        // record the high-water mark only for a real
-                        // injection — a reservation released on feed
-                        // exhaustion never carried a frame
-                        shared.peak_in_flight.fetch_max(prev + 1, Ordering::AcqRel);
+                        // count into the high-water mark only once a
+                        // frame is actually claimed from the feed: the
+                        // dedicated claimed-frame counter (not the
+                        // reservation counter `prev + 1`, which also
+                        // holds other workers' empty-feed reservations
+                        // and over-counted by up to threads - 1)
+                        let cur = shared.frames_in_flight.fetch_add(1, Ordering::AcqRel) + 1;
+                        shared.peak_in_flight.fetch_max(cur, Ordering::AcqRel);
                         let seq = next_inject.fetch_add(1, Ordering::AcqRel);
                         drop(it);
                         shared.queues[0].lock().expect("queue lock").insert(seq, mat);
@@ -596,6 +626,7 @@ impl<P: Send> TokenPipeline<P> {
                         .insert(seq, out);
                 } else {
                     shared.outputs.lock().expect("outputs lock").insert(seq, out);
+                    shared.frames_in_flight.fetch_sub(1, Ordering::AcqRel);
                     shared.in_flight.fetch_sub(1, Ordering::AcqRel);
                 }
             }
@@ -604,6 +635,7 @@ impl<P: Send> TokenPipeline<P> {
                 if slot.is_none() {
                     *slot = Some(e);
                 }
+                shared.frames_in_flight.fetch_sub(1, Ordering::AcqRel);
                 shared.in_flight.fetch_sub(1, Ordering::AcqRel);
             }
         }
@@ -814,6 +846,53 @@ mod tests {
                 .any(|b| a.token != b.token && a.start_ns < b.end_ns && b.start_ns < a.end_ns)
         });
         assert!(overlapping, "parallel stage never overlapped");
+    }
+
+    #[test]
+    fn parallel_stage_occupancy_is_normalized_and_ranks_the_bottleneck() {
+        // serial head 2 ms, parallel middle 5 ms over 4 workers: the
+        // head is the true bottleneck (the middle's effective rate is
+        // 5/4 ms per token).  The middle's spans overlap across workers,
+        // so the un-normalized busy/wall ratio exceeds 1.0 and would
+        // out-rank the head — the regression the worker-count
+        // normalization fixes.
+        let head = Box::new(FnFilter {
+            mode: FilterMode::SerialInOrder,
+            label: "head".into(),
+            f: |m: Mat| {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                Ok(m)
+            },
+        });
+        let mid = Box::new(FnFilter {
+            mode: FilterMode::Parallel,
+            label: "mid".into(),
+            f: |m: Mat| {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                Ok(m)
+            },
+        });
+        let pipe = TokenPipeline::new(vec![head, mid], 4, 8).unwrap();
+        let (_, stats) = pipe.run(inputs(16)).unwrap();
+        assert_eq!(stats.stage_workers, vec![1, 4]);
+        // the raw cross-worker span sum really exceeds wall-clock — the
+        // over-count the normalization divides away
+        assert!(
+            stats.stage_busy_ns(1) > stats.wall_ns,
+            "middle busy {} <= wall {}: no overlap, test lost its pressure",
+            stats.stage_busy_ns(1),
+            stats.wall_ns
+        );
+        for s in 0..2 {
+            let occ = stats.stage_occupancy(s);
+            assert!(occ <= 1.0, "stage {s} occupancy {occ} > 1.0");
+        }
+        assert!(
+            stats.stage_occupancy(0) > stats.stage_occupancy(1),
+            "the serial head must rank as the bottleneck: head {:.3} vs middle {:.3}",
+            stats.stage_occupancy(0),
+            stats.stage_occupancy(1)
+        );
     }
 
     #[test]

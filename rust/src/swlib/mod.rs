@@ -17,5 +17,6 @@ pub mod imgproc;
 mod registry;
 
 pub use registry::{
-    FuncEntry, Registry, SwFn, SwFnInPlace, SwFnPooled, FUSED_CVT_HARRIS, FUSED_SOBEL_PAIR,
+    FuncEntry, PairEntry, Registry, SwFn, SwFnInPlace, SwFnPair, SwFnPooled, FUSED_CVT_HARRIS,
+    FUSED_SOBEL_PAIR,
 };

@@ -9,13 +9,33 @@
 //! the pipeline builder routes through when it can prove they are safe:
 //!
 //! * a **pooled** form (`Fn(&[&Mat], &BufferPool) -> Mat`) that draws its
-//!   output and scratch from the pipeline's shape-keyed buffer pool, and
+//!   output and scratch from the pipeline's capacity-class buffer pool, and
 //! * an **in-place** form (`Fn(Mat) -> Mat`) for unary elementwise ops,
 //!   used when liveness says the input buffer dies at this call.
 //!
 //! Both must be numerically identical to the plain callable (the kernel
 //! parity suite pins this); the interpreter and tracer always use the
 //! plain form, so traces stay independent of pipeline execution details.
+//!
+//! The registry is also the substrate of the builder's **generalized
+//! fusion planner**:
+//!
+//! * [`Registry::compose_chain`] turns any run of chained symbols into
+//!   one composed entry whose pooled form threads intermediates through
+//!   stack-scoped pool scratch (acquire → consume → release, or the
+//!   constituent's in-place form) — a fused run allocates nothing in
+//!   steady state.  A registered mega-kernel covering the exact run
+//!   (e.g. [`FUSED_CVT_HARRIS`]) is preferred over generic composition.
+//! * [`Registry::register_sibling_pair`] declares a one-walk two-output
+//!   kernel for a matched pair of sibling stencils sharing one input
+//!   (e.g. the Sobel dx/dy pair); the builder substitutes it for a
+//!   two-branch fork-join stage.
+//! * Both are gated on **per-link provenance**: [`Registry::mark_fusable`]
+//!   records the exact callable a symbol resolved to when it was declared
+//!   fusable, and [`Registry::link_intact`] checks pointer identity
+//!   against the live entry.  Re-registering a constituent (the override
+//!   pattern) silently disables just the links that touch it — the
+//!   override always runs; fusion never bypasses it.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -35,6 +55,10 @@ pub type SwFnPooled = Arc<dyn Fn(&[&Mat], &BufferPool) -> Result<Mat> + Send + S
 /// In-place variant for unary elementwise ops: consumes the (dead) input
 /// buffer and returns it transformed.
 pub type SwFnInPlace = Arc<dyn Fn(Mat) -> Result<Mat> + Send + Sync>;
+
+/// One-walk sibling-pair kernel: reads the shared input once and writes
+/// both siblings' outputs (same shape as the input) in a single pass.
+pub type SwFnPair = Arc<dyn Fn(&Mat, &mut Mat, &mut Mat) -> Result<()> + Send + Sync>;
 
 /// The fused gray→response mega-kernel the builder selects when
 /// consecutive software tasks cover the whole `cvtColor → cornerHarris`
@@ -94,21 +118,51 @@ impl std::fmt::Debug for FuncEntry {
     }
 }
 
+/// A registered one-walk sibling-pair kernel: `f` computes what the two
+/// constituent unary kernels `(a, b)` would over one shared input, in a
+/// single image walk writing both outputs.
+#[derive(Clone)]
+pub struct PairEntry {
+    /// Display label, `"<a>+<b>"` (what the stage label shows).
+    pub label: String,
+    /// First constituent symbol (its output is the pair's first output).
+    pub a: String,
+    /// Second constituent symbol.
+    pub b: String,
+    /// The exact constituent callables recorded at registration — the
+    /// provenance link [`Registry::sibling_pair`] checks before the
+    /// builder may substitute the pair.
+    parts: (SwFn, SwFn),
+    /// The one-walk kernel.
+    pub f: SwFnPair,
+}
+
+impl std::fmt::Debug for PairEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PairEntry").field("label", &self.label).finish()
+    }
+}
+
 /// The function library a target binary links against.
 #[derive(Clone, Default)]
 pub struct Registry {
     map: BTreeMap<String, FuncEntry>,
-    /// The standard Sobel dx/dy callables recorded by [`Registry::standard`]
-    /// — the identity link [`Registry::sobel_pair_intact`] checks before
-    /// the builder may substitute the fused one-walk pair.
-    sobel_pair: Option<(SwFn, SwFn)>,
+    /// Per-symbol fusion-provenance anchors: the exact callable each
+    /// symbol resolved to when it was declared chain-fusable
+    /// ([`Registry::mark_fusable`]).  [`Registry::link_intact`] compares
+    /// the live entry against this by pointer identity, so re-registering
+    /// a symbol disables just the fusion links that touch it.
+    fusable: BTreeMap<String, SwFn>,
+    /// Registered one-walk sibling-pair kernels.
+    pairs: Vec<PairEntry>,
 }
 
 impl std::fmt::Debug for Registry {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Registry")
             .field("symbols", &self.map.keys().collect::<Vec<_>>())
-            .field("sobel_pair", &self.sobel_pair.is_some())
+            .field("fusable", &self.fusable.keys().collect::<Vec<_>>())
+            .field("pairs", &self.pairs.iter().map(|p| &p.label).collect::<Vec<_>>())
             .finish()
     }
 }
@@ -130,12 +184,9 @@ impl Registry {
         // mega-kernel can record exactly which implementations it fuses
         let cvt_f: SwFn = Arc::new(|a: &[&Mat]| imgproc::cvt_color(a[0]));
         let harris_f: SwFn = Arc::new(|a: &[&Mat]| imgproc::corner_harris(a[0], HARRIS_K));
-        let sobel_dx_f: SwFn = Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 1, 0));
-        let sobel_dy_f: SwFn = Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 0, 1));
         r.register("cv::cvtColor", 1, cvt_f.clone());
-        r.register("cv::Sobel", 1, sobel_dx_f.clone());
-        r.register("cv::SobelY", 1, sobel_dy_f.clone());
-        r.sobel_pair = Some((sobel_dx_f, sobel_dy_f));
+        r.register("cv::Sobel", 1, Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 1, 0)));
+        r.register("cv::SobelY", 1, Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 0, 1)));
         r.register("cv::GaussianBlur", 1, Arc::new(|a: &[&Mat]| imgproc::gaussian_blur(a[0])));
         r.register("cv::boxFilter", 1, Arc::new(|a: &[&Mat]| imgproc::box_filter(a[0], true)));
         r.register("cv::erode", 1, Arc::new(|a: &[&Mat]| imgproc::erode(a[0])));
@@ -264,6 +315,37 @@ impl Registry {
                 Ok(m)
             }),
         );
+
+        // ---- fusion substrate -----------------------------------------
+        // the one-walk Sobel dx+dy pair for fork-join sibling stages
+        r.register_sibling_pair(
+            "cv::Sobel",
+            "cv::SobelY",
+            Arc::new(|src: &Mat, dx: &mut Mat, dy: &mut Mat| imgproc::sobel_xy_into(src, dx, dy)),
+        )
+        .expect("standard Sobel kernels are registered above");
+        // every standard kernel is chain-fusable while it still resolves
+        // to the implementation recorded here (per-link provenance)
+        for sym in [
+            "cv::cvtColor",
+            "cv::Sobel",
+            "cv::SobelY",
+            "cv::GaussianBlur",
+            "cv::boxFilter",
+            "cv::erode",
+            "cv::dilate",
+            "cv::Laplacian",
+            "cv::Scharr",
+            "cv::medianBlur",
+            "cv::cornerHarris",
+            "cv::harrisResponse",
+            "cv::normalize",
+            "cv::convertScaleAbs",
+            "cv::threshold",
+        ] {
+            let anchored = r.mark_fusable(sym);
+            debug_assert!(anchored, "standard symbol {sym} must be registered before anchoring");
+        }
         r
     }
 
@@ -290,18 +372,167 @@ impl Registry {
         }
     }
 
-    /// True while `cv::Sobel`/`cv::SobelY` still resolve to the standard
-    /// kernels recorded at [`Registry::standard`] time — the builder's
-    /// gate for substituting the fused one-walk Sobel pair
-    /// ([`FUSED_SOBEL_PAIR`]); re-registering either symbol disables it.
-    pub fn sobel_pair_intact(&self) -> bool {
-        match &self.sobel_pair {
-            Some((dx, dy)) => {
-                self.map.get("cv::Sobel").is_some_and(|e| Arc::ptr_eq(&e.f, dx))
-                    && self.map.get("cv::SobelY").is_some_and(|e| Arc::ptr_eq(&e.f, dy))
+    /// Declare a symbol chain-fusable, anchoring its *current* callable
+    /// as the provenance the fusion planner checks.  Re-registering the
+    /// symbol afterwards breaks the anchor ([`Registry::link_intact`])
+    /// and thereby disables exactly the fusion links that touch it.
+    /// Returns `false` (and anchors nothing) if the symbol is not
+    /// registered — callers wiring up custom kernels should check it
+    /// rather than discover later that fusion silently never fires.
+    pub fn mark_fusable(&mut self, symbol: &str) -> bool {
+        match self.map.get(symbol) {
+            Some(e) => {
+                let f = e.f.clone();
+                self.fusable.insert(symbol.to_string(), f);
+                true
             }
             None => false,
         }
+    }
+
+    /// True while `symbol` still resolves to the exact callable recorded
+    /// by [`Registry::mark_fusable`] — the per-link gate of the fusion
+    /// planner.  Symbols never marked fusable are never fused.
+    pub fn link_intact(&self, symbol: &str) -> bool {
+        match self.fusable.get(symbol) {
+            Some(anchor) => self
+                .map
+                .get(symbol)
+                .is_some_and(|e| Arc::ptr_eq(&e.f, anchor)),
+            None => false,
+        }
+    }
+
+    /// Register a one-walk sibling-pair kernel for unary symbols `a` and
+    /// `b` over one shared input.  `f` must write, in a single pass, what
+    /// `a` produces into its first output and what `b` produces into its
+    /// second (both input-shaped) — bit-for-bit.  The pair records the
+    /// constituents' current callables as provenance; an unregistered
+    /// constituent is a typed error, not a silent no-op.
+    pub fn register_sibling_pair(&mut self, a: &str, b: &str, f: SwFnPair) -> Result<()> {
+        let parts = (self.resolve(a)?.f.clone(), self.resolve(b)?.f.clone());
+        self.pairs.push(PairEntry {
+            label: format!("{a}+{b}"),
+            a: a.to_string(),
+            b: b.to_string(),
+            parts,
+            f,
+        });
+        Ok(())
+    }
+
+    /// The registered sibling pair for `(a, b)` — in that order — while
+    /// both constituents still resolve to the callables recorded at
+    /// registration.  Re-registering either symbol disables the pair
+    /// instead of bypassing the override.
+    pub fn sibling_pair(&self, a: &str, b: &str) -> Option<&PairEntry> {
+        self.pairs.iter().find(|p| {
+            p.a == a
+                && p.b == b
+                && self.map.get(a).is_some_and(|e| Arc::ptr_eq(&e.f, &p.parts.0))
+                && self.map.get(b).is_some_and(|e| Arc::ptr_eq(&e.f, &p.parts.1))
+        })
+    }
+
+    /// True while the one-walk Sobel dx/dy pair ([`FUSED_SOBEL_PAIR`]) is
+    /// still substitutable — kept as a convenience over
+    /// [`Registry::sibling_pair`] for the standard pair.
+    pub fn sobel_pair_intact(&self) -> bool {
+        self.sibling_pair("cv::Sobel", "cv::SobelY").is_some()
+    }
+
+    /// Compose a run of chained symbols into one bound entry: the first
+    /// constituent consumes the run's external arguments, every later one
+    /// consumes its predecessor's output (so all but the first must be
+    /// unary).  A registered mega-kernel under the canonical joined name
+    /// (`"a+b+..."`) whose [`FuncEntry::fuses_exactly`] matches the live
+    /// constituents is preferred; otherwise a generic composition is
+    /// built whose pooled form threads every intermediate through
+    /// stack-scoped pool scratch (the constituent's in-place form when it
+    /// has one, else pooled-acquire → release) — a fused run touches the
+    /// frame environment only at its two ends and allocates nothing in
+    /// steady state.  The caller is responsible for provenance gating
+    /// ([`Registry::link_intact`]) and dataflow legality.
+    pub fn compose_chain(&self, symbols: &[&str]) -> Result<FuncEntry> {
+        if symbols.len() < 2 {
+            return Err(CourierError::Other(
+                "compose_chain needs at least two symbols".into(),
+            ));
+        }
+        let parts: Vec<FuncEntry> = symbols
+            .iter()
+            .map(|s| self.resolve(s).cloned())
+            .collect::<Result<_>>()?;
+        for p in &parts[1..] {
+            if p.arity != 1 {
+                return Err(CourierError::Other(format!(
+                    "compose_chain: interior constituent {} has arity {} (must be 1)",
+                    p.symbol, p.arity
+                )));
+            }
+        }
+        let joined = symbols.join("+");
+        // a hand-tuned mega-kernel covering exactly this run wins
+        if let Some(e) = self.map.get(&joined) {
+            if e.fuses_exactly(&parts.iter().collect::<Vec<_>>()) {
+                return Ok(e.clone());
+            }
+        }
+        let arity = parts[0].arity;
+        let fused_of: Vec<SwFn> = parts.iter().map(|p| p.f.clone()).collect();
+        // a fully elementwise run composes an in-place form too, so the
+        // builder's dying-input fast path stays zero-copy through fusion
+        let inplace: Option<SwFnInPlace> = if arity == 1
+            && parts.iter().all(|p| p.inplace.is_some())
+        {
+            let ips: Vec<SwFnInPlace> =
+                parts.iter().map(|p| p.inplace.clone().expect("checked")).collect();
+            Some(Arc::new(move |m: Mat| {
+                let mut cur = m;
+                for ip in &ips {
+                    cur = ip(cur)?;
+                }
+                Ok(cur)
+            }))
+        } else {
+            None
+        };
+        let plain_parts = parts.clone();
+        let plain: SwFn = Arc::new(move |args: &[&Mat]| {
+            let mut cur = (plain_parts[0].f)(args)?;
+            for p in &plain_parts[1..] {
+                cur = (p.f)(&[&cur])?;
+            }
+            Ok(cur)
+        });
+        let pooled_parts = parts;
+        let pooled: SwFnPooled = Arc::new(move |args: &[&Mat], pool: &BufferPool| {
+            let mut cur = match &pooled_parts[0].pooled {
+                Some(pf) => pf(args, pool)?,
+                None => (pooled_parts[0].f)(args)?,
+            };
+            for p in &pooled_parts[1..] {
+                cur = if let Some(ip) = &p.inplace {
+                    ip(cur)?
+                } else {
+                    let out = match &p.pooled {
+                        Some(pf) => pf(&[&cur], pool)?,
+                        None => (p.f)(&[&cur])?,
+                    };
+                    pool.release(cur);
+                    out
+                };
+            }
+            Ok(cur)
+        });
+        Ok(FuncEntry {
+            symbol: joined,
+            arity,
+            f: plain,
+            pooled: Some(pooled),
+            inplace,
+            fused_of: Some(fused_of),
+        })
     }
 
     /// Attach a pooled form to an already-registered symbol.
@@ -422,6 +653,89 @@ mod tests {
         r.register("cv::cvtColor", 1, Arc::new(|a: &[&Mat]| imgproc::cvt_color(a[0])));
         let cvt2 = r.resolve("cv::cvtColor").unwrap().clone();
         assert!(!fused.fuses_exactly(&[&cvt2, &harris]));
+    }
+
+    #[test]
+    fn link_intact_tracks_reregistration() {
+        let mut r = Registry::standard();
+        assert!(r.link_intact("cv::cvtColor"));
+        assert!(r.link_intact("cv::normalize"));
+        assert!(!r.link_intact("blas::sgemm"), "never marked fusable");
+        r.register("cv::cvtColor", 1, Arc::new(|a: &[&Mat]| imgproc::cvt_color(a[0])));
+        assert!(!r.link_intact("cv::cvtColor"), "override must break the anchor");
+        assert!(r.link_intact("cv::cornerHarris"), "other links stay intact");
+        // re-marking re-anchors the new implementation
+        r.mark_fusable("cv::cvtColor");
+        assert!(r.link_intact("cv::cvtColor"));
+    }
+
+    #[test]
+    fn sibling_pair_gated_on_provenance() {
+        let mut r = Registry::standard();
+        assert!(r.sibling_pair("cv::Sobel", "cv::SobelY").is_some());
+        assert!(r.sibling_pair("cv::SobelY", "cv::Sobel").is_none(), "order matters");
+        assert!(r.sobel_pair_intact());
+        // an unregistered constituent is a typed error, not a silent no-op
+        let err = r.register_sibling_pair(
+            "cv::doesNotExist",
+            "cv::Sobel",
+            Arc::new(|_: &Mat, _: &mut Mat, _: &mut Mat| Ok(())),
+        );
+        assert!(matches!(err, Err(CourierError::UnknownSymbol(_))));
+        assert!(!r.mark_fusable("cv::doesNotExist"));
+        r.register("cv::SobelY", 1, Arc::new(|a: &[&Mat]| imgproc::sobel(a[0], 0, 1)));
+        assert!(r.sibling_pair("cv::Sobel", "cv::SobelY").is_none());
+        assert!(!r.sobel_pair_intact());
+    }
+
+    #[test]
+    fn compose_chain_prefers_registered_mega_kernel() {
+        let r = Registry::standard();
+        let e = r.compose_chain(&["cv::cvtColor", "cv::cornerHarris"]).unwrap();
+        assert_eq!(e.symbol, FUSED_CVT_HARRIS);
+        // the mega-kernel, not a generic composition: same Arc as registered
+        let reg = r.resolve(FUSED_CVT_HARRIS).unwrap();
+        assert!(Arc::ptr_eq(&e.f, &reg.f));
+    }
+
+    #[test]
+    fn compose_chain_generic_matches_back_to_back() {
+        let r = Registry::standard();
+        let pool = BufferPool::new();
+        let gray = {
+            let rgb = synth::noise_rgb(7, 9, 5);
+            r.call("cv::cvtColor", &[&rgb]).unwrap()
+        };
+        let e = r
+            .compose_chain(&["cv::GaussianBlur", "cv::normalize", "cv::threshold"])
+            .unwrap();
+        assert_eq!(e.arity, 1);
+        assert_eq!(e.symbol, "cv::GaussianBlur+cv::normalize+cv::threshold");
+        let want = {
+            let a = r.call("cv::GaussianBlur", &[&gray]).unwrap();
+            let b = r.call("cv::normalize", &[&a]).unwrap();
+            r.call("cv::threshold", &[&b]).unwrap()
+        };
+        assert_eq!((e.f)(&[&gray]).unwrap(), want, "plain composition diverges");
+        let pooled = e.pooled.as_ref().unwrap()(&[&gray], &pool).unwrap();
+        assert_eq!(pooled, want, "pooled composition diverges");
+        pool.release(pooled);
+        // intermediates were recycled, not leaked: further pooled runs
+        // allocate nothing new
+        let warm = pool.stats().misses;
+        for _ in 0..3 {
+            let again = e.pooled.as_ref().unwrap()(&[&gray], &pool).unwrap();
+            pool.release(again);
+        }
+        assert_eq!(pool.stats().misses, warm, "fused run must reuse pool scratch");
+    }
+
+    #[test]
+    fn compose_chain_rejects_non_unary_interior() {
+        let r = Registry::standard();
+        let err = r.compose_chain(&["cv::cvtColor", "blas::sgemm"]).unwrap_err();
+        assert!(err.to_string().contains("arity"));
+        assert!(r.compose_chain(&["cv::cvtColor"]).is_err());
     }
 
     #[test]

@@ -318,9 +318,15 @@ pub fn search(
     }
 
     // -- 3) software-stage fusion ------------------------------------------
+    // merging adjacent all-CPU stages shrinks the stage count AND can
+    // enable kernel fusion: chained single-consumer SW tasks that land in
+    // one stage bind as a composed kernel at deploy time, which the
+    // simulator credits (`StageSpec::fusion_credit_ns`) — so
+    // fusion-enabling merges win on merit, not by special-casing
     {
         let incumbent = candidates[best].clone();
         let groups = groups_of(&incumbent.plan);
+        let before_edges = incumbent.plan.effective_edges();
         for b in 1..groups.len() {
             let (lo, hi) = (&incumbent.plan.stages[b - 1], &incumbent.plan.stages[b]);
             if lo.has_hw() || hi.has_hw() {
@@ -343,14 +349,20 @@ pub fn search(
                 threads,
                 incumbent.plan.tokens,
             );
+            // report only the links the merge NEWLY enables (the cross-cut
+            // ones), not links each pre-merge stage already carried
+            let links = plan.stages[b - 1]
+                .fusable_links(&plan.effective_edges())
+                .saturating_sub(lo.fusable_links(&before_edges))
+                .saturating_sub(hi.fusable_links(&before_edges));
+            let desc = if links > 0 {
+                format!("fuse sw stages {}+{} (enables {links} fused sw links)", b - 1, b)
+            } else {
+                format!("fuse sw stages {}+{}", b - 1, b)
+            };
             let idx = push(
                 &mut candidates,
-                ev.eval(
-                    plan,
-                    incumbent.queue_depth,
-                    0,
-                    format!("fuse sw stages {}+{}", b - 1, b),
-                ),
+                ev.eval(plan, incumbent.queue_depth, 0, desc),
             );
             consider(&mut candidates, &mut best, idx);
         }
@@ -499,6 +511,30 @@ mod tests {
             });
             assert_eq!(c.plan.edges, edges, "edges must ride along unchanged");
         }
+    }
+
+    #[test]
+    fn search_emits_fusion_enabling_partition_for_harris_chain() {
+        // the CPU-only Harris chain shape (cvt → harris → normalize →
+        // csa): the search must score at least one partition that
+        // colocates chained SW tasks the seed keeps apart — i.e. a
+        // candidate with strictly more fusable links than the seed —
+        // because the simulator credits fused links
+        let tasks = sw_tasks(&[12, 40, 8, 5]);
+        let cfg = cfg_with(64);
+        let seed = seed_of(&tasks, 2, 4, PartitionPolicy::Paper);
+        let metrics = TunerMetrics::default();
+        let out = search(&seed, &tasks, &cfg, &metrics);
+        let links = |p: &StagePlan| -> usize {
+            let e = p.effective_edges();
+            p.stages.iter().map(|s| s.fusable_links(&e)).sum()
+        };
+        let seed_links = links(&out.seed().plan);
+        assert!(
+            out.candidates.iter().any(|c| links(&c.plan) > seed_links),
+            "search must emit a fusion-enabling partition candidate \
+             (seed has {seed_links} links)"
+        );
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Seeded property suite for the generalized SW-chain fusion planner and
+//! move-aware fork-join scheduling.
+//!
+//! 1. **Fused == unfused, bit for bit.**  Random unary software chains
+//!    (length 2–6, random shapes including degenerate 1×N / N×1 images)
+//!    are built twice — default partition, and regrouped into one
+//!    sequential stage so the planner fuses the whole run — and both must
+//!    match the plain interpreter exactly on every frame.
+//! 2. **Move-aware fork-join.**  On the generic (non-pair) fork-join
+//!    path, the last sibling consumer of a dying buffer receives it
+//!    moved; only the earlier siblings clone.  Pinned via the pool's
+//!    clone counter: exactly one pool clone per fork per frame where the
+//!    pre-move-aware scheduler paid one per sibling.
+
+use courier::app::{parse_program, Interpreter, Program, RegistryDispatch};
+use courier::config::Config;
+use courier::hwdb::HwDatabase;
+use courier::image::{synth, Mat};
+use courier::ir::Ir;
+use courier::pipeline::{build, instantiate, BuiltPipeline, StagePlan, StageSpec, TaskSpec};
+use courier::runtime::Runtime;
+use courier::swlib::Registry;
+use courier::trace::{trace_program, CallGraph};
+use courier::util::rng::Rng;
+use courier::util::testing::empty_hwdb_dir;
+
+/// Unary, shape-preserving standard kernels the chain generator samples.
+const UNARY: &[&str] = &[
+    "cv::Sobel",
+    "cv::SobelY",
+    "cv::GaussianBlur",
+    "cv::boxFilter",
+    "cv::erode",
+    "cv::dilate",
+    "cv::Laplacian",
+    "cv::Scharr",
+    "cv::medianBlur",
+    "cv::cornerHarris",
+    "cv::normalize",
+    "cv::convertScaleAbs",
+    "cv::threshold",
+];
+
+fn chain_program(symbols: &[&str], h: usize, w: usize) -> Program {
+    let mut text = format!("program chainProp\ninput x0 {h}x{w}\n");
+    for (i, sym) in symbols.iter().enumerate() {
+        text.push_str(&format!("call x{} = {}(x{})\n", i + 1, sym, i));
+    }
+    text.push_str(&format!("output x{}\n", symbols.len()));
+    parse_program(&text).unwrap()
+}
+
+fn flat_tasks(built: &BuiltPipeline) -> Vec<TaskSpec> {
+    built
+        .plan
+        .stages
+        .iter()
+        .flat_map(|s| s.tasks.iter().cloned())
+        .collect()
+}
+
+#[test]
+fn random_unary_chains_fuse_bit_for_bit() {
+    let mut rng = Rng::new(0x5EEDED);
+    // random shapes plus the degenerate row/column/pixel images
+    let shapes: [(usize, usize); 5] = [(9, 11), (1, 13), (13, 1), (1, 1), (16, 8)];
+    let tmp = empty_hwdb_dir("fusion-prop").unwrap();
+    let db = HwDatabase::load(tmp.path()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let registry = Registry::standard();
+    let interp_dispatch = std::sync::Arc::new(RegistryDispatch::standard());
+
+    for len in 2..=6usize {
+        let (h, w) = shapes[len - 2];
+        let symbols: Vec<&str> = (0..len).map(|_| UNARY[rng.below(UNARY.len())]).collect();
+        let prog = chain_program(&symbols, h, w);
+        let trace = trace_program(&prog, &[vec![synth::noise_gray(h, w, len as u64)]]).unwrap();
+        let ir = Ir::from_graph(&CallGraph::from_trace(&trace)).unwrap();
+        assert!(ir.is_chain(), "{symbols:?}: unary chain must lower as a chain");
+
+        let cfg = Config {
+            artifacts_dir: tmp.path().to_path_buf(),
+            cpu_only: true,
+            threads: 1,
+            tokens: 2,
+            ..Default::default()
+        };
+        let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+
+        // regroup into ONE sequential stage: the planner must fuse the
+        // entire run into a single composed binding
+        let fused = instantiate(
+            &StagePlan {
+                program: built.plan.program.clone(),
+                threads: 1,
+                tokens: 2,
+                edges: built.plan.edges.clone(),
+                stages: vec![StageSpec { index: 0, serial: true, tasks: flat_tasks(&built) }],
+            },
+            db.dir(),
+            &rt,
+            &registry,
+        )
+        .unwrap();
+        let labels = fused.pipeline.stage_labels();
+        assert_eq!(labels.len(), 1);
+        assert_eq!(
+            labels[0].matches('+').count(),
+            len - 1,
+            "{symbols:?}: whole run must fuse, got label {:?}",
+            labels[0]
+        );
+
+        let interp = Interpreter::new(prog, interp_dispatch.clone());
+        for fseed in 0..2u64 {
+            let frame = synth::noise_gray(h, w, 100 + fseed);
+            let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+            assert_eq!(
+                fused.process_one(frame.clone()).unwrap(),
+                want,
+                "{symbols:?} @{h}x{w} seed {fseed}: fused diverges"
+            );
+            assert_eq!(
+                built.process_one(frame).unwrap(),
+                want,
+                "{symbols:?} @{h}x{w} seed {fseed}: unfused diverges"
+            );
+        }
+        // streamed through the fused pipeline (pool-backed steady state)
+        let frames: Vec<Mat> = (0..4).map(|s| synth::noise_gray(h, w, 200 + s)).collect();
+        let (outs, _) = fused.run(frames.clone()).unwrap();
+        for (i, f) in frames.into_iter().enumerate() {
+            assert_eq!(
+                outs[i],
+                interp.run(&[f]).unwrap().remove(0),
+                "{symbols:?}: streamed frame {i} diverges"
+            );
+        }
+    }
+}
+
+#[test]
+fn fork_join_last_sibling_moves_instead_of_cloning() {
+    // harris_dag with cv::Sobel overridden: the override disables the
+    // fused one-walk pair, so the stage takes the generic fork-join
+    // path.  Both siblings consume the dying gray buffer; move-aware
+    // scheduling clones for the first and MOVES it into the last —
+    // exactly one pool clone per fork per frame (the pre-move-aware
+    // scheduler cloned once per sibling: two).
+    let tmp = empty_hwdb_dir("fusion-prop-fj").unwrap();
+    let db = HwDatabase::load(tmp.path()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut registry = Registry::standard();
+    let cfg = Config {
+        artifacts_dir: tmp.path().to_path_buf(),
+        cpu_only: true,
+        ..Default::default()
+    };
+    let prog = courier::app::harris_dag_demo(16, 16);
+    let trace = trace_program(&prog, &[vec![synth::noise_rgb(16, 16, 0)]]).unwrap();
+    let ir = Ir::from_graph(&CallGraph::from_trace(&trace)).unwrap();
+    let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+    let tasks = flat_tasks(&built);
+    assert_eq!(tasks.len(), 6);
+    let regrouped = StagePlan {
+        program: built.plan.program.clone(),
+        threads: 2,
+        tokens: 4,
+        edges: built.plan.edges.clone(),
+        stages: vec![
+            StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
+            StageSpec { index: 1, serial: false, tasks: tasks[1..3].to_vec() },
+            StageSpec { index: 2, serial: true, tasks: tasks[3..6].to_vec() },
+        ],
+    };
+    registry.register(
+        "cv::Sobel",
+        1,
+        std::sync::Arc::new(|a: &[&Mat]| {
+            let mut g = courier::swlib::imgproc::sobel(a[0], 1, 0)?;
+            for v in g.as_mut_slice() {
+                *v *= 2.0;
+            }
+            Ok(g)
+        }),
+    );
+    assert!(!registry.sobel_pair_intact());
+    let fj = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+    assert!(
+        fj.pipeline.stage_labels()[1].contains(" || "),
+        "override must force the generic fork-join path: {:?}",
+        fj.pipeline.stage_labels()
+    );
+
+    // correctness first: the override really runs
+    let frame = synth::noise_rgb(16, 16, 7);
+    let gray = registry.call("cv::cvtColor", &[&frame]).unwrap();
+    let ix = registry.call("cv::Sobel", &[&gray]).unwrap();
+    let iy = registry.call("cv::SobelY", &[&gray]).unwrap();
+    let resp = registry.call("cv::harrisResponse", &[&ix, &iy]).unwrap();
+    let norm = registry.call("cv::normalize", &[&resp]).unwrap();
+    let want = registry.call("cv::convertScaleAbs", &[&norm]).unwrap();
+    assert_eq!(fj.process_one(frame).unwrap(), want);
+
+    // clone accounting: the only pool clone on the whole frame path is
+    // the first sibling's copy of gray — the last sibling borrows the
+    // moved original
+    let warm_clones = fj.pool.stats().cloned;
+    const FRAMES: u64 = 8;
+    let frames: Vec<Mat> = (0..FRAMES).map(|s| synth::noise_rgb(16, 16, 50 + s)).collect();
+    let (outs, _) = fj.run(frames).unwrap();
+    assert_eq!(outs.len(), FRAMES as usize);
+    let clones = fj.pool.stats().cloned - warm_clones;
+    assert_eq!(
+        clones, FRAMES,
+        "move-aware fork-join must clone exactly once per fork per frame \
+         (one shared dying buffer, two siblings): got {clones} over {FRAMES} frames"
+    );
+}

@@ -88,6 +88,52 @@ fn process_one_reaches_steady_state_too() {
 }
 
 #[test]
+fn downcycling_stream_reaches_zero_steady_state_misses() {
+    // The shelf-migration regression at stream scale: every frame a
+    // 3-channel input storage enters the pool, gets downcycled into gray
+    // intermediates, and 3-channel storage is needed again.  Under the
+    // historical shape-keyed shelves a downcycled (H, W, 3) storage was
+    // released under its *new* (H, W) shape — once the gray shelf hit
+    // its cap the big storages were dropped while the 3-channel shelf
+    // starved, so misses never stopped.  Capacity-class keying returns
+    // every storage to its own class and the stream goes fully
+    // allocation-free.
+    use courier::pipeline::BufferPool;
+    let pool = BufferPool::new();
+    let (h, w) = (12, 16);
+    // more gray intermediates per frame than one shelf's idle cap (32)
+    const GRAYS: usize = 36;
+    let frame = |pool: &BufferPool| {
+        // the dying external input returns its (H, W, 3) storage
+        pool.release(Mat::zeros(&[h, w, 3]));
+        // a burst of gray intermediates forces downcycling into the
+        // 3-channel storages and overflows the small class
+        let grays: Vec<Mat> = (0..GRAYS).map(|_| pool.acquire(&[h, w])).collect();
+        for g in grays {
+            pool.release(g);
+        }
+        // ...and the next frame needs 3-channel working storage again
+        let staged = pool.acquire(&[h, w, 3]);
+        pool.release(staged);
+    };
+    for _ in 0..6 {
+        frame(&pool); // warm-up: classes fill to the working set
+    }
+    let warm = pool.stats().misses;
+    for _ in 0..32 {
+        frame(&pool);
+    }
+    assert_eq!(
+        pool.stats().misses,
+        warm,
+        "downcycling stream still allocating in steady state \
+         (hits {} misses {})",
+        pool.stats().hits,
+        pool.stats().misses
+    );
+}
+
+#[test]
 fn pool_survives_multi_worker_streams() {
     // more workers/tokens: the invariant loosens to "misses stop growing
     // once shelves cover the peak concurrent working set" — run a large

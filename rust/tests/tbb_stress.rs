@@ -143,6 +143,63 @@ fn stress_tight_pool_and_single_thread_degenerate() {
     run_stress(500, 1, 4, 11, 8);
 }
 
+/// `peak_in_flight` is exact: on a deterministic schedule that provably
+/// saturates the token pool, the high-water mark must EQUAL the
+/// configured overlap — not merely stay under the pool bound.  (The
+/// historical metric counted racing empty-feed reservations and could
+/// read up to `threads - 1` high; an exact metric makes the equality
+/// assertion possible at all.)
+///
+/// Schedule: `TOKENS` frames, `TOKENS + 1` workers, a middle `parallel`
+/// stage that blocks every token on a condvar until all `TOKENS` tokens
+/// have entered it.  No emission can happen before every frame is
+/// injected, so the claimed-frame counter reaches exactly `TOKENS`; the
+/// spare worker keeps the serial head and the injection loop running
+/// while the others hold the gate.  No timing assumptions anywhere.
+#[test]
+fn peak_in_flight_equals_configured_overlap_on_a_deterministic_schedule() {
+    use std::sync::{Arc, Condvar, Mutex};
+
+    const TOKENS: usize = 3;
+    struct Gate {
+        entered: Mutex<usize>,
+        cv: Condvar,
+    }
+    let gate = Arc::new(Gate { entered: Mutex::new(0), cv: Condvar::new() });
+    let g = gate.clone();
+    let blocking = Box::new(FnFilter {
+        mode: FilterMode::Parallel,
+        label: "gate".into(),
+        f: move |m: Mat| {
+            let mut n = g.entered.lock().unwrap();
+            *n += 1;
+            if *n >= TOKENS {
+                g.cv.notify_all();
+            }
+            while *n < TOKENS {
+                n = g.cv.wait(n).unwrap();
+            }
+            Ok(m)
+        },
+    });
+    let pass = |label: &str| -> Box<dyn StageFilter> {
+        Box::new(FnFilter {
+            mode: FilterMode::SerialInOrder,
+            label: label.to_string(),
+            f: |m: Mat| Ok(m),
+        })
+    };
+    let pipe = TokenPipeline::new(vec![pass("head"), blocking, pass("tail")], TOKENS + 1, TOKENS)
+        .unwrap();
+    let inputs: Vec<Mat> = (0..TOKENS).map(|i| Mat::full(&[1, 1], i as f32)).collect();
+    let (out, stats) = pipe.run(inputs).unwrap();
+    assert_eq!(out.len(), TOKENS);
+    assert_eq!(
+        stats.peak_in_flight, TOKENS,
+        "exact metric must equal the configured overlap on a pool-saturating schedule"
+    );
+}
+
 /// The full 10k-frame sweep (release-mode slow job: `cargo test -q -- --ignored`).
 #[test]
 #[ignore = "slow: 10k frames; run in the CI slow-test job"]
