@@ -119,6 +119,9 @@ fn main() {
         sw_built.run(stream.clone()).unwrap()
     });
     let sw_pipeline_ms = sw_m.mean_ms() / frames as f64;
+    // one more instrumented batch for runtime structure (peak frames in
+    // flight, per-stage occupancy) — the bench closure discards stats
+    let (_, sw_stats) = sw_built.run(stream.clone()).unwrap();
     let pool = sw_built.pool.stats();
     println!(
         "sw-pipeline: {sw_pipeline_ms:.2} ms/frame vs sequential {orig_total_ms:.2} ms/frame -> x{:.2}; \
@@ -129,6 +132,26 @@ fn main() {
         pool.acquires()
     );
     all.push(sw_m);
+
+    // Same batch with the trace sink disabled: the always-on telemetry
+    // budget (< 2% on ms/frame) is pinned by comparing these two numbers.
+    sw_built.sink.set_enabled(false);
+    let sw_untraced_m = bench.run("sw-pipeline streamed (untraced)", || {
+        sw_built.run(stream.clone()).unwrap()
+    });
+    sw_built.sink.set_enabled(true);
+    let sw_pipeline_untraced_ms = sw_untraced_m.mean_ms() / frames as f64;
+    let trace_overhead_pct = if sw_pipeline_untraced_ms > 0.0 {
+        (sw_pipeline_ms - sw_pipeline_untraced_ms) / sw_pipeline_untraced_ms * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "sw-pipeline untraced: {sw_pipeline_untraced_ms:.2} ms/frame (trace overhead {trace_overhead_pct:+.2}%); \
+         peak {} frames in flight",
+        sw_stats.peak_in_flight
+    );
+    all.push(sw_untraced_m);
 
     // ---- simulated deployed run (paper platform model) -------------------
     // This testbed has a single CPU core, so stage overlap cannot show in
@@ -172,24 +195,30 @@ fn main() {
         println!("  stage#{i} simulated occupancy {:>5.1}%", sim.stage_occupancy(i) * 100.0);
     }
 
-    write_bench_json(
-        "table1_processing_time",
-        &all,
-        &[
-            ("height", h as f64),
-            ("width", w as f64),
-            ("frames", frames as f64),
-            ("original_ms_per_frame", orig_total_ms),
-            ("deployed_ms_per_frame", courier_total_ms),
-            ("deployed_speedup", orig_total_ms / courier_total_ms),
-            ("sw_pipeline_ms_per_frame", sw_pipeline_ms),
-            ("sw_pipeline_speedup", orig_total_ms / sw_pipeline_ms),
-            ("pool_hit_rate", pool.hit_rate()),
-            ("pool_misses", pool.misses as f64),
-            ("sim_frame_interval_ms", sim.frame_interval_ns as f64 / 1e6),
-        ],
-    )
-    .expect("write BENCH_table1_processing_time.json");
+    let occupancy_keys: Vec<String> = (0..sw_built.plan.stages.len())
+        .map(|i| format!("stage{i}_occupancy"))
+        .collect();
+    let mut extras: Vec<(&str, f64)> = vec![
+        ("height", h as f64),
+        ("width", w as f64),
+        ("frames", frames as f64),
+        ("original_ms_per_frame", orig_total_ms),
+        ("deployed_ms_per_frame", courier_total_ms),
+        ("deployed_speedup", orig_total_ms / courier_total_ms),
+        ("sw_pipeline_ms_per_frame", sw_pipeline_ms),
+        ("sw_pipeline_ms_per_frame_untraced", sw_pipeline_untraced_ms),
+        ("trace_overhead_pct", trace_overhead_pct),
+        ("sw_pipeline_speedup", orig_total_ms / sw_pipeline_ms),
+        ("pool_hit_rate", pool.hit_rate()),
+        ("pool_misses", pool.misses as f64),
+        ("peak_in_flight", sw_stats.peak_in_flight as f64),
+        ("sim_frame_interval_ms", sim.frame_interval_ns as f64 / 1e6),
+    ];
+    for (i, key) in occupancy_keys.iter().enumerate() {
+        extras.push((key.as_str(), sw_stats.stage_occupancy(i)));
+    }
+    write_bench_json("table1_processing_time", &all, &extras)
+        .expect("write BENCH_table1_processing_time.json");
     let _ = std::hint::black_box(outs);
     let _ = std::hint::black_box(Mat::zeros(&[1]));
 }

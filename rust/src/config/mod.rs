@@ -98,6 +98,31 @@ impl Default for TuneConfig {
     }
 }
 
+/// `[obs]` section: knobs for the always-on observability layer
+/// ([`crate::obs`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Whether built pipelines record trace events (a disabled sink
+    /// costs one relaxed atomic load per would-be event).
+    pub enabled: bool,
+    /// Per-shard trace-ring capacity, events (the sink keeps the most
+    /// recent window and counts what it overwrites).
+    pub trace_capacity: usize,
+    /// `courier serve` writes a metrics snapshot to `--metrics-out`
+    /// every this many seconds while running; 0 = only at exit.
+    pub snapshot_secs: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            trace_capacity: crate::obs::DEFAULT_TRACE_CAPACITY,
+            snapshot_secs: 0,
+        }
+    }
+}
+
 /// Courier configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -119,6 +144,8 @@ pub struct Config {
     pub serve: ServeConfig,
     /// `[tune]` section (measurement-driven autotuning).
     pub tune: TuneConfig,
+    /// `[obs]` section (trace sink + metrics snapshots).
+    pub obs: ObsConfig,
 }
 
 impl Default for Config {
@@ -133,6 +160,7 @@ impl Default for Config {
             include_disabled_modules: false,
             serve: ServeConfig::default(),
             tune: TuneConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -164,6 +192,9 @@ impl Config {
             "tune.top_k",
             "tune.max_tokens",
             "tune.cost_db",
+            "obs.enabled",
+            "obs.trace_capacity",
+            "obs.snapshot_secs",
         ];
         for k in doc.keys() {
             if !KNOWN.contains(&k) {
@@ -219,6 +250,15 @@ impl Config {
         if let Some(v) = doc.get_str("tune.cost_db") {
             cfg.tune.cost_db = (!v.is_empty()).then(|| PathBuf::from(v));
         }
+        if let Some(v) = doc.get_bool("obs.enabled") {
+            cfg.obs.enabled = v;
+        }
+        if let Some(v) = doc.get_usize("obs.trace_capacity") {
+            cfg.obs.trace_capacity = v;
+        }
+        if let Some(v) = doc.get_usize("obs.snapshot_secs") {
+            cfg.obs.snapshot_secs = v as u64;
+        }
         Ok(cfg)
     }
 
@@ -249,6 +289,10 @@ impl Config {
         if let Some(p) = &self.tune.cost_db {
             s.push_str(&format!("cost_db = \"{}\"\n", p.display()));
         }
+        s.push_str(&format!(
+            "\n[obs]\nenabled = {}\ntrace_capacity = {}\nsnapshot_secs = {}\n",
+            self.obs.enabled, self.obs.trace_capacity, self.obs.snapshot_secs,
+        ));
         s
     }
 
@@ -323,6 +367,19 @@ mod tests {
         };
         let doc = TomlDoc::parse(&c.to_toml()).unwrap();
         assert_eq!(Config::from_doc(&doc).unwrap(), c);
+    }
+
+    #[test]
+    fn obs_section_parses_and_roundtrips() {
+        let doc =
+            TomlDoc::parse("[obs]\nenabled = false\ntrace_capacity = 128\nsnapshot_secs = 5\n")
+                .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert!(!c.obs.enabled);
+        assert_eq!(c.obs.trace_capacity, 128);
+        assert_eq!(c.obs.snapshot_secs, 5);
+        let back = Config::from_doc(&TomlDoc::parse(&c.to_toml()).unwrap()).unwrap();
+        assert_eq!(back, c);
     }
 
     #[test]

@@ -58,6 +58,7 @@ pub mod hwdb;
 pub mod image;
 pub mod ir;
 pub mod metrics;
+pub mod obs;
 pub mod offload;
 pub mod pipeline;
 pub mod report;

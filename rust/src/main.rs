@@ -51,8 +51,9 @@ COMMANDS:
   run     --program <spec> [--frames N]                run the original binary
   deploy  --program <spec> [--frames N]                Step 9: accelerated run
   serve   --programs <spec,...> [--sessions N] [--frames M]
-                                                       multi-tenant serving
-                                                       (see docs/serving.md)
+          [--trace-out FILE] [--metrics-out FILE]      multi-tenant serving
+                                                       (see docs/serving.md
+                                                       and docs/observability.md)
   tune    --program <spec> [--budget N] [--frames M] [--cost-db FILE]
                                                        calibrate + search +
                                                        report (docs/tuning.md)
@@ -77,7 +78,7 @@ const KNOWN_FLAGS: &[&str] = &[
     // global
     "config", "artifacts", "threads", "tokens", "policy",
     // trace / run / deploy / serve
-    "program", "programs", "frames", "sessions", "out",
+    "program", "programs", "frames", "sessions", "out", "trace-out", "metrics-out",
     // tune
     "budget", "cost-db",
     // graph / edit / plan / build
@@ -229,7 +230,6 @@ fn load_program(spec: &str) -> anyhow::Result<Program> {
         path => Ok(app::parse_program(&std::fs::read_to_string(path)?)?),
     }
 }
-
 
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     let prog = load_program(args.require("program").map_err(anyhow::Error::msg)?)?;
@@ -438,6 +438,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     }
     let n_sessions = args.get_usize("sessions", specs.len()).map_err(anyhow::Error::msg)?;
     let frames = args.get_usize("frames", 16).map_err(anyhow::Error::msg)?;
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
 
     let server = Server::new(cfg.clone())?;
     println!(
@@ -459,8 +461,32 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         sessions.push(session);
     }
 
-    // one client thread per session, all submitting with backpressure
+    // one client thread per session, all submitting with backpressure;
+    // plus (when asked for) a snapshot thread writing the metrics JSON
+    // every `[obs] snapshot_secs` while the clients run
+    let stop_snapshots = std::sync::atomic::AtomicBool::new(false);
     let errors: Vec<String> = std::thread::scope(|scope| {
+        if let (Some(path), true) = (&metrics_out, cfg.obs.snapshot_secs > 0) {
+            let server = &server;
+            let stop = &stop_snapshots;
+            let every = std::time::Duration::from_secs(cfg.obs.snapshot_secs);
+            scope.spawn(move || {
+                let mut last = std::time::Instant::now();
+                while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                    // poll coarsely so shutdown never waits a full period
+                    std::thread::sleep(std::time::Duration::from_millis(100));
+                    if last.elapsed() >= every {
+                        last = std::time::Instant::now();
+                        if let Err(e) = std::fs::write(
+                            path,
+                            server.metrics_snapshot().to_string_pretty(),
+                        ) {
+                            eprintln!("courier serve: metrics snapshot: {e}");
+                        }
+                    }
+                }
+            });
+        }
         let handles: Vec<_> = sessions
             .iter()
             .map(|session| {
@@ -486,16 +512,30 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
                 })
             })
             .collect();
-        handles
+        let errs = handles
             .into_iter()
             .filter_map(|h| h.join().expect("serve client thread").err())
-            .collect()
+            .collect();
+        stop_snapshots.store(true, std::sync::atomic::Ordering::Release);
+        errs
     });
     for e in &errors {
         eprintln!("courier serve: {e}");
     }
 
     print!("{}", server.render_report());
+    // final observability artifacts before teardown: the metrics snapshot
+    // (also rendered for the console) and the Perfetto-loadable trace
+    let snapshot = server.metrics_snapshot();
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, snapshot.to_string_pretty())?;
+        println!("wrote metrics snapshot -> {}", path.display());
+    }
+    print!("{}", report::render_metrics(&snapshot));
+    if let Some(path) = &trace_out {
+        server.export_chrome_trace(path)?;
+        println!("wrote Chrome trace (load at ui.perfetto.dev) -> {}", path.display());
+    }
     server.shutdown();
     if !errors.is_empty() {
         anyhow::bail!("{} session(s) failed", errors.len());

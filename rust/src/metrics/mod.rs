@@ -4,6 +4,7 @@
 //! lock-cheap (atomics + a mutexed histogram) so instrumentation does not
 //! perturb the hot loop it measures.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -134,13 +135,27 @@ impl Latency {
 
     /// Percentile (0.0..=1.0) over retained samples, ns (0 when empty).
     pub fn percentile_ns(&self, q: f64) -> u64 {
-        let mut s = self.inner.lock().expect("latency lock").samples_ns.clone();
+        self.quantiles(&[q])[0]
+    }
+
+    /// Batch percentile query: one snapshot of the ring, one sort, any
+    /// number of quantiles.  The snapshot copy is taken under the lock
+    /// but the sort happens outside it, so concurrent recorders are
+    /// never stalled behind an O(n log n) pass — callers needing several
+    /// percentiles (serve report: p50 + p99) pay one sort instead of one
+    /// clone-and-sort per percentile.
+    pub fn quantiles(&self, qs: &[f64]) -> Vec<u64> {
+        let mut s = {
+            let r = self.inner.lock().expect("latency lock");
+            r.samples_ns.clone()
+        };
         if s.is_empty() {
-            return 0;
+            return vec![0; qs.len()];
         }
         s.sort_unstable();
-        let idx = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-        s[idx]
+        qs.iter()
+            .map(|q| s[((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize])
+            .collect()
     }
 
     /// Max over retained samples, ns.
@@ -156,11 +171,27 @@ impl Latency {
     }
 }
 
+/// Trailing window for [`Throughput::recent_per_sec`], seconds.
+const RATE_WINDOW_SECS: f64 = 5.0;
+/// Checkpoint cap — the window holds ~64 marks plus one anchor, so this
+/// is slack against clock jitter, never a steady-state eviction.
+const RATE_MARK_CAP: usize = 128;
+
 /// Throughput gauge: items over a wall-clock window.
+///
+/// [`Throughput::per_sec`] is the lifetime average — stable, but stale
+/// over long uptimes (an idle hour drags it down forever, so a server
+/// that served 1M frames yesterday and nothing since still "does" 11/s).
+/// [`Throughput::recent_per_sec`] answers "how fast right now": the rate
+/// over the trailing [`RATE_WINDOW_SECS`], computed from a bounded ring
+/// of cumulative-count checkpoints laid down by `add`.
 #[derive(Debug)]
 pub struct Throughput {
     start: Instant,
     items: Counter,
+    window_secs: f64,
+    /// `(elapsed_secs, lifetime_items)` checkpoints, oldest first.
+    marks: Mutex<VecDeque<(f64, u64)>>,
 }
 
 impl Default for Throughput {
@@ -172,21 +203,68 @@ impl Default for Throughput {
 impl Throughput {
     /// Start the window now.
     pub fn new() -> Self {
-        Self { start: Instant::now(), items: Counter::default() }
+        Self::with_window(RATE_WINDOW_SECS)
+    }
+
+    /// Gauge with a custom recent-rate window (tests shrink it so the
+    /// stale-rate path is reachable without sleeping for seconds).
+    pub fn with_window(secs: f64) -> Self {
+        Self {
+            start: Instant::now(),
+            items: Counter::default(),
+            window_secs: secs.max(1e-3),
+            marks: Mutex::new(VecDeque::with_capacity(RATE_MARK_CAP + 1)),
+        }
     }
 
     /// Record `n` completed items.
     pub fn add(&self, n: u64) {
         self.items.add(n);
+        let now = self.start.elapsed().as_secs_f64();
+        let mut marks = self.marks.lock().expect("throughput lock");
+        // checkpoint at most ~64 times per window so the ring stays tiny
+        let due = marks
+            .back()
+            .is_none_or(|&(t, _)| now - t >= self.window_secs / 64.0);
+        if !due {
+            return;
+        }
+        marks.push_back((now, self.items.get()));
+        // evict marks that fell out of the window, but keep the newest
+        // such mark: it anchors the rate at exactly one window of history
+        while marks.len() > 1 && now - marks[1].0 > self.window_secs {
+            marks.pop_front();
+        }
+        while marks.len() > RATE_MARK_CAP {
+            marks.pop_front();
+        }
     }
 
-    /// Items per second since construction.
+    /// Items per second since construction (lifetime average).
     pub fn per_sec(&self) -> f64 {
         let secs = self.start.elapsed().as_secs_f64();
         if secs <= 0.0 {
             return 0.0;
         }
         self.items.get() as f64 / secs
+    }
+
+    /// Items per second over the trailing window.
+    ///
+    /// Anchored at the newest checkpoint older than the window (or the
+    /// oldest one, for a gauge younger than its window).  A gauge that
+    /// stopped receiving items decays toward 0 as the idle time grows —
+    /// exactly the signal the lifetime average hides.
+    pub fn recent_per_sec(&self) -> f64 {
+        let now = self.start.elapsed().as_secs_f64();
+        let total = self.items.get();
+        let marks = self.marks.lock().expect("throughput lock");
+        let cutoff = now - self.window_secs;
+        let anchor = marks.iter().rev().find(|&&(t, _)| t <= cutoff).or_else(|| marks.front());
+        match anchor {
+            Some(&(t0, n0)) if now > t0 => total.saturating_sub(n0) as f64 / (now - t0),
+            _ => 0.0,
+        }
     }
 
     /// Total items.
@@ -322,5 +400,50 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         assert_eq!(t.total(), 10);
         assert!(t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn quantiles_batch_agrees_with_single_percentiles() {
+        let l = Latency::default();
+        for ms in [9u64, 1, 5, 3, 7, 2, 8, 4, 10, 6] {
+            l.record(Duration::from_millis(ms));
+        }
+        let q = l.quantiles(&[0.0, 0.5, 0.99, 1.0]);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q[0], l.percentile_ns(0.0));
+        assert_eq!(q[1], l.percentile_ns(0.5));
+        assert_eq!(q[2], l.percentile_ns(0.99));
+        assert_eq!(q[3], l.percentile_ns(1.0));
+        assert_eq!(q[0], 1_000_000);
+        assert_eq!(q[3], 10_000_000);
+        // empty recorder: zeros, one per requested quantile
+        assert_eq!(Latency::default().quantiles(&[0.5, 0.9]), vec![0, 0]);
+    }
+
+    #[test]
+    fn recent_rate_tracks_the_window_not_the_lifetime() {
+        let t = Throughput::with_window(0.05);
+        t.add(100);
+        // a fresh burst: both rates are positive
+        assert!(t.recent_per_sec() > 0.0 || t.per_sec() > 0.0);
+        std::thread::sleep(Duration::from_millis(150));
+        // the burst has left the window: the lifetime average still
+        // remembers it, the recent rate has decayed to ~0
+        let lifetime = t.per_sec();
+        let recent = t.recent_per_sec();
+        assert!(lifetime > 0.0);
+        assert!(
+            recent < lifetime / 2.0,
+            "stale gauge: recent {recent:.1}/s must decay below lifetime {lifetime:.1}/s"
+        );
+        // traffic resumes: the recent rate comes back
+        t.add(50);
+        assert!(t.recent_per_sec() > 0.0, "resumed traffic must show in the recent rate");
+    }
+
+    #[test]
+    fn recent_rate_of_an_idle_gauge_is_zero() {
+        let t = Throughput::with_window(0.05);
+        assert_eq!(t.recent_per_sec(), 0.0);
     }
 }

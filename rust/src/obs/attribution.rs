@@ -1,0 +1,370 @@
+//! Per-frame critical-path attribution: decompose measured end-to-end
+//! frame latency into ingress wait, fabric-slot wait, and per-stage
+//! queue/service time, name the bottleneck stage, and compare measured
+//! per-task time against the static cost model (`sim-vs-measured
+//! drift`) — the signal an online-calibration loop would feed back into
+//! the [`crate::tune::CalibratedCostDb`].
+//!
+//! Only frames whose events survived the sink's overwrite ring intact
+//! (causal chain complete enough to bound end-to-end time) contribute,
+//! so a long-running server attributes its most recent window.
+
+use crate::pipeline::StagePlan;
+use crate::util::json::Json;
+
+use super::sink::{EventKind, TraceEvent};
+
+/// One stage's share of the end-to-end time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageAttribution {
+    /// Stage index.
+    pub stage: usize,
+    /// Stage label.
+    pub name: String,
+    /// Spans folded in.
+    pub spans: u64,
+    /// Time frames spent queued ahead of this stage, ns (total).
+    pub queue_ns: u64,
+    /// Time this stage spent servicing frames, ns (total).
+    pub service_ns: u64,
+}
+
+/// The decomposition of measured end-to-end latency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attribution {
+    /// Frames with a complete-enough causal chain.
+    pub frames: u64,
+    /// Summed end-to-end time of those frames, ns.
+    pub e2e_ns: u64,
+    /// Ingress-queue wait before the first stage span (serve frames), ns.
+    pub ingress_wait_ns: u64,
+    /// Fabric-slot acquisition wait, ns.
+    pub fabric_wait_ns: u64,
+    /// Per-stage queue/service split.
+    pub stages: Vec<StageAttribution>,
+    /// `e2e - attributed`: what the instrumentation cannot see
+    /// (egress hand-off, scheduler dispatch).  Small residual = the
+    /// attribution genuinely sums to the measured latency.
+    pub residual_ns: i64,
+    /// Stage index with the largest service share, if any span landed.
+    pub bottleneck: Option<usize>,
+}
+
+impl Attribution {
+    /// Mean measured end-to-end latency, ms/frame.
+    pub fn e2e_ms_per_frame(&self) -> f64 {
+        if self.frames == 0 {
+            return 0.0;
+        }
+        self.e2e_ns as f64 / self.frames as f64 / 1e6
+    }
+
+    /// Everything the decomposition accounts for, ns.
+    pub fn attributed_ns(&self) -> u64 {
+        self.ingress_wait_ns
+            + self.fabric_wait_ns
+            + self.stages.iter().map(|s| s.queue_ns + s.service_ns).sum::<u64>()
+    }
+
+    /// Label of the bottleneck stage.
+    pub fn bottleneck_name(&self) -> Option<&str> {
+        self.bottleneck.and_then(|i| self.stages.get(i)).map(|s| s.name.as_str())
+    }
+
+    /// JSON form (ms/frame scaling for readability).
+    pub fn to_json(&self) -> Json {
+        let per_frame = |ns: u64| {
+            if self.frames == 0 {
+                0.0
+            } else {
+                ns as f64 / self.frames as f64 / 1e6
+            }
+        };
+        Json::obj(vec![
+            ("frames", Json::Num(self.frames as f64)),
+            ("e2e_ms_per_frame", Json::Num(self.e2e_ms_per_frame())),
+            ("attributed_ms_per_frame", Json::Num(per_frame(self.attributed_ns()))),
+            (
+                "residual_ms_per_frame",
+                Json::Num(if self.frames == 0 {
+                    0.0
+                } else {
+                    self.residual_ns as f64 / self.frames as f64 / 1e6
+                }),
+            ),
+            ("ingress_wait_ms_per_frame", Json::Num(per_frame(self.ingress_wait_ns))),
+            ("fabric_wait_ms_per_frame", Json::Num(per_frame(self.fabric_wait_ns))),
+            (
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("stage", Json::Num(s.stage as f64)),
+                                ("name", Json::Str(s.name.clone())),
+                                ("spans", Json::Num(s.spans as f64)),
+                                ("queue_ms_per_frame", Json::Num(per_frame(s.queue_ns))),
+                                ("service_ms_per_frame", Json::Num(per_frame(s.service_ns))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "bottleneck",
+                match self.bottleneck_name() {
+                    Some(n) => Json::Str(n.to_string()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct FrameAcc {
+    ingress: Option<u64>,
+    egress: Option<u64>,
+    fabric_ns: u64,
+    first_span_start: Option<u64>,
+    last_span_end: u64,
+    /// `(stage, queue_ns, service_ns)` — folded into the stage table
+    /// only when the frame's end-to-end time is measurable, so the
+    /// per-stage sums stay consistent with `e2e_ns` by construction.
+    spans: Vec<(usize, u64, u64)>,
+}
+
+/// Reconstruct per-frame causal chains from a sink snapshot and fold
+/// them into an [`Attribution`] over `stage_names`.
+pub fn attribute(events: &[TraceEvent], stage_names: &[String]) -> Attribution {
+    use std::collections::BTreeMap;
+
+    let mut frames: BTreeMap<u64, FrameAcc> = BTreeMap::new();
+    for ev in events {
+        let acc = frames.entry(ev.frame).or_default();
+        match ev.kind {
+            EventKind::StageSpan => {
+                acc.spans.push((ev.stage as usize, ev.arg, ev.dur_ns));
+                let start = ev.ts_ns;
+                acc.first_span_start =
+                    Some(acc.first_span_start.map_or(start, |s| s.min(start)));
+                acc.last_span_end = acc.last_span_end.max(ev.ts_ns + ev.dur_ns);
+            }
+            EventKind::Ingress => {
+                acc.ingress = Some(acc.ingress.map_or(ev.ts_ns, |t| t.min(ev.ts_ns)));
+            }
+            EventKind::Egress => {
+                acc.egress = Some(acc.egress.map_or(ev.ts_ns, |t| t.max(ev.ts_ns)));
+            }
+            EventKind::FabricAcquire => acc.fabric_ns += ev.dur_ns,
+            // pool traffic is not on any single frame's critical path
+            EventKind::PoolHit | EventKind::PoolMiss | EventKind::PoolDowncycle => {}
+        }
+    }
+
+    let mut stages: Vec<StageAttribution> = stage_names
+        .iter()
+        .enumerate()
+        .map(|(i, n)| StageAttribution {
+            stage: i,
+            name: n.clone(),
+            spans: 0,
+            queue_ns: 0,
+            service_ns: 0,
+        })
+        .collect();
+    let (mut n, mut e2e, mut ingress_wait, mut fabric) = (0u64, 0u64, 0u64, 0u64);
+    for acc in frames.values() {
+        // end-to-end bounds: ingress→egress when the serve chain is
+        // complete, else the span envelope (batch runs have no queue)
+        let (start, end) = match (acc.ingress, acc.egress) {
+            (Some(i), Some(e)) if e >= i => (i, e),
+            _ => match acc.first_span_start {
+                Some(s) if acc.last_span_end >= s => (s, acc.last_span_end),
+                _ => continue,
+            },
+        };
+        n += 1;
+        e2e += end - start;
+        fabric += acc.fabric_ns;
+        if let (Some(i), Some(s)) = (acc.ingress, acc.first_span_start) {
+            // the fabric wait sits inside the ingress→first-span gap;
+            // subtract it so the two buckets never double-count
+            ingress_wait += s.saturating_sub(i).saturating_sub(acc.fabric_ns).min(end - start);
+        }
+        for &(stage, queue_ns, service_ns) in &acc.spans {
+            if stage >= stages.len() {
+                continue;
+            }
+            stages[stage].spans += 1;
+            stages[stage].queue_ns += queue_ns;
+            stages[stage].service_ns += service_ns;
+        }
+    }
+
+    let attributed: u64 = ingress_wait
+        + fabric
+        + stages.iter().map(|s| s.queue_ns + s.service_ns).sum::<u64>();
+    let bottleneck = stages
+        .iter()
+        .filter(|s| s.spans > 0)
+        .max_by_key(|s| s.service_ns)
+        .map(|s| s.stage);
+    Attribution {
+        frames: n,
+        e2e_ns: e2e,
+        ingress_wait_ns: ingress_wait,
+        fabric_wait_ns: fabric,
+        stages,
+        residual_ns: e2e as i64 - attributed as i64,
+        bottleneck,
+    }
+}
+
+/// Measured-vs-static drift for one task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDrift {
+    /// Calibration key ([`crate::hlo::task_key`] format).
+    pub key: String,
+    /// Static estimate, ns/frame.
+    pub est_ns: u64,
+    /// Measured share of the stage service time, ns/frame.
+    pub measured_ns: u64,
+    /// `measured / est` (1.0 = the model was right).
+    pub factor: f64,
+}
+
+/// Attribute each stage's measured per-frame service time to its tasks
+/// proportionally to their static estimates — the same scheme
+/// [`crate::tune::calibrate`] uses — and report the per-task drift.
+///
+/// `task_keys` must be in flat plan order (see
+/// `BuiltPipeline::task_keys`); an empty or mismatched list yields no
+/// drift rows rather than misattributed ones.
+pub fn drift(plan: &StagePlan, task_keys: &[String], a: &Attribution) -> Vec<TaskDrift> {
+    let n_tasks: usize = plan.stages.iter().map(|s| s.tasks.len()).sum();
+    if task_keys.len() != n_tasks {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(n_tasks);
+    let mut ti = 0usize;
+    for (si, stage) in plan.stages.iter().enumerate() {
+        let (spans, service_ns) =
+            a.stages.get(si).map(|s| (s.spans, s.service_ns)).unwrap_or((0, 0));
+        let per_frame = if spans == 0 { 0 } else { service_ns / spans };
+        let est_total = stage.est_ns();
+        for task in &stage.tasks {
+            let measured = if est_total == 0 {
+                per_frame / stage.tasks.len().max(1) as u64
+            } else {
+                (per_frame as u128 * task.est_ns as u128 / est_total as u128) as u64
+            };
+            let factor =
+                if task.est_ns == 0 { 0.0 } else { measured as f64 / task.est_ns as f64 };
+            out.push(TaskDrift {
+                key: task_keys[ti].clone(),
+                est_ns: task.est_ns,
+                measured_ns: measured,
+                factor,
+            });
+            ti += 1;
+        }
+    }
+    out
+}
+
+/// JSON form of a drift table.
+pub fn drift_to_json(rows: &[TaskDrift]) -> Json {
+    Json::Obj(
+        rows.iter()
+            .map(|r| {
+                (
+                    r.key.clone(),
+                    Json::obj(vec![
+                        ("est_ms", Json::Num(r.est_ns as f64 / 1e6)),
+                        ("measured_ms", Json::Num(r.measured_ns as f64 / 1e6)),
+                        ("factor", Json::Num(r.factor)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::sink::frame_id;
+
+    fn span(frame: u64, stage: u32, ts: u64, dur: u64, wait: u64) -> TraceEvent {
+        TraceEvent {
+            kind: EventKind::StageSpan,
+            ts_ns: ts,
+            dur_ns: dur,
+            frame,
+            stage,
+            tid: 1,
+            arg: wait,
+        }
+    }
+
+    fn instant(kind: EventKind, frame: u64, ts: u64) -> TraceEvent {
+        TraceEvent { kind, ts_ns: ts, dur_ns: 0, frame, stage: 0, tid: 1, arg: 0 }
+    }
+
+    #[test]
+    fn serve_chain_decomposes_into_named_buckets() {
+        let names = vec!["head".to_string(), "work".to_string()];
+        let f = frame_id(0, 1);
+        let events = vec![
+            instant(EventKind::Ingress, f, 0),
+            TraceEvent {
+                kind: EventKind::FabricAcquire,
+                ts_ns: 50,
+                dur_ns: 50,
+                frame: f,
+                stage: 0,
+                tid: 1,
+                arg: 0,
+            },
+            span(f, 0, 200, 100, 0),
+            span(f, 1, 320, 600, 20),
+            instant(EventKind::Egress, f, 1000),
+        ];
+        let a = attribute(&events, &names);
+        assert_eq!(a.frames, 1);
+        assert_eq!(a.e2e_ns, 1000);
+        assert_eq!(a.fabric_wait_ns, 50);
+        assert_eq!(a.ingress_wait_ns, 150, "ingress gap minus the fabric wait");
+        assert_eq!(a.stages[0].service_ns, 100);
+        assert_eq!(a.stages[1].service_ns, 600);
+        assert_eq!(a.stages[1].queue_ns, 20);
+        assert_eq!(a.bottleneck_name(), Some("work"));
+        // buckets + residual reconstruct the measured end-to-end time
+        assert_eq!(a.attributed_ns() as i64 + a.residual_ns, a.e2e_ns as i64);
+        let json = a.to_json();
+        assert_eq!(json.req("bottleneck").unwrap().as_str().unwrap(), "work");
+    }
+
+    #[test]
+    fn batch_frames_use_the_span_envelope() {
+        let names = vec!["s0".to_string()];
+        let events = vec![span(1, 0, 100, 40, 5), span(2, 0, 150, 60, 0)];
+        let a = attribute(&events, &names);
+        assert_eq!(a.frames, 2);
+        assert_eq!(a.e2e_ns, 100, "40 + 60, no queue gaps inside one-span frames");
+        assert_eq!(a.ingress_wait_ns, 0);
+        assert_eq!(a.bottleneck, Some(0));
+    }
+
+    #[test]
+    fn incomplete_frames_do_not_skew_the_average() {
+        let names = vec!["s0".to_string()];
+        // egress without any span or ingress: unmeasurable, skipped
+        let events = vec![instant(EventKind::Egress, 9, 500), span(1, 0, 0, 100, 0)];
+        let a = attribute(&events, &names);
+        assert_eq!(a.frames, 1);
+        assert_eq!(a.e2e_ns, 100);
+    }
+}

@@ -1,0 +1,181 @@
+//! Chrome trace-event JSON export (the `chrome://tracing` / Perfetto
+//! "JSON array format"): one `X` complete event per stage span, `i`
+//! instant events for ingress/egress and pool traffic, and process/
+//! thread metadata so the UI shows session and stage names.
+//!
+//! Load the output at <https://ui.perfetto.dev> ("Open trace file") —
+//! each serve session gets its own process lane (batch runs are lane 0),
+//! worker threads get their own tracks, and queue-wait shows up in each
+//! span's args.
+
+use crate::util::json::Json;
+
+use super::sink::{frame_lane, frame_seq, EventKind, TraceEvent};
+
+/// One pipeline's worth of events, labelled for the trace UI.
+#[derive(Debug, Clone)]
+pub struct ChromeGroup {
+    /// Plan/program label (process-name suffix).
+    pub label: String,
+    /// Stage labels, indexed by span `stage`.
+    pub stage_names: Vec<String>,
+    /// Sink snapshot to export.
+    pub events: Vec<TraceEvent>,
+}
+
+fn us(ns: u64) -> Json {
+    Json::Num(ns as f64 / 1e3)
+}
+
+/// Render trace groups as a Chrome trace-event JSON document.
+pub fn chrome_trace(groups: &[ChromeGroup]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+    for g in groups {
+        let mut lanes: Vec<u64> = g.events.iter().map(|e| frame_lane(e.frame)).collect();
+        lanes.sort_unstable();
+        lanes.dedup();
+        for lane in lanes {
+            let who = if lane == 0 {
+                format!("{} (batch)", g.label)
+            } else {
+                format!("{} session {}", g.label, lane - 1)
+            };
+            out.push(Json::obj(vec![
+                ("name", Json::Str("process_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Num(lane as f64)),
+                ("tid", Json::Num(0.0)),
+                ("args", Json::obj(vec![("name", Json::Str(who))])),
+            ]));
+        }
+        for ev in &g.events {
+            out.push(event_json(g, ev));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+fn event_json(g: &ChromeGroup, ev: &TraceEvent) -> Json {
+    let pid = Json::Num(frame_lane(ev.frame) as f64);
+    match ev.kind {
+        EventKind::StageSpan => {
+            let name = g
+                .stage_names
+                .get(ev.stage as usize)
+                .cloned()
+                .unwrap_or_else(|| format!("stage{}", ev.stage));
+            Json::obj(vec![
+                ("name", Json::Str(name)),
+                ("cat", Json::Str("stage".into())),
+                ("ph", Json::Str("X".into())),
+                ("ts", us(ev.ts_ns)),
+                ("dur", us(ev.dur_ns)),
+                ("pid", pid),
+                ("tid", Json::Num(ev.tid as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("frame", Json::Num(frame_seq(ev.frame) as f64)),
+                        ("stage", Json::Num(ev.stage as f64)),
+                        ("queue_wait_us", us(ev.arg)),
+                    ]),
+                ),
+            ])
+        }
+        EventKind::FabricAcquire => Json::obj(vec![
+            ("name", Json::Str(ev.kind.label().into())),
+            ("cat", Json::Str("fabric".into())),
+            ("ph", Json::Str("X".into())),
+            ("ts", us(ev.ts_ns)),
+            ("dur", us(ev.dur_ns)),
+            ("pid", pid),
+            ("tid", Json::Num(ev.tid as f64)),
+            ("args", Json::obj(vec![("frame", Json::Num(frame_seq(ev.frame) as f64))])),
+        ]),
+        EventKind::Ingress | EventKind::Egress => Json::obj(vec![
+            ("name", Json::Str(ev.kind.label().into())),
+            ("cat", Json::Str("session".into())),
+            ("ph", Json::Str("i".into())),
+            ("s", Json::Str("p".into())),
+            ("ts", us(ev.ts_ns)),
+            ("pid", pid),
+            ("tid", Json::Num(ev.tid as f64)),
+            ("args", Json::obj(vec![("frame", Json::Num(frame_seq(ev.frame) as f64))])),
+        ]),
+        EventKind::PoolHit | EventKind::PoolMiss | EventKind::PoolDowncycle => Json::obj(vec![
+            ("name", Json::Str(ev.kind.label().into())),
+            ("cat", Json::Str("pool".into())),
+            ("ph", Json::Str("i".into())),
+            ("s", Json::Str("t".into())),
+            ("ts", us(ev.ts_ns)),
+            ("pid", pid),
+            ("tid", Json::Num(ev.tid as f64)),
+            ("args", Json::obj(vec![("elems", Json::Num(ev.arg as f64))])),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::sink::frame_id;
+
+    #[test]
+    fn export_has_the_trace_event_schema() {
+        let g = ChromeGroup {
+            label: "harris".into(),
+            stage_names: vec!["head".into(), "work".into()],
+            events: vec![
+                TraceEvent {
+                    kind: EventKind::Ingress,
+                    ts_ns: 1_000,
+                    dur_ns: 0,
+                    frame: frame_id(0, 7),
+                    stage: 0,
+                    tid: 3,
+                    arg: 0,
+                },
+                TraceEvent {
+                    kind: EventKind::StageSpan,
+                    ts_ns: 2_000,
+                    dur_ns: 500,
+                    frame: frame_id(0, 7),
+                    stage: 1,
+                    tid: 3,
+                    arg: 250,
+                },
+            ],
+        };
+        let doc = chrome_trace(&[g]);
+        let text = doc.to_string_pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let events = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name metadata (lane 1) + 2 events
+        assert_eq!(events.len(), 3);
+        let meta = &events[0];
+        assert_eq!(meta.req("ph").unwrap().as_str().unwrap(), "M");
+        assert!(meta
+            .req("args")
+            .unwrap()
+            .req("name")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("session 0"));
+        let span = events
+            .iter()
+            .find(|e| {
+                e.req("ph").and_then(|p| p.as_str()).map(|s| s == "X").unwrap_or(false)
+            })
+            .expect("a complete event");
+        assert_eq!(span.req("name").unwrap().as_str().unwrap(), "work");
+        assert_eq!(span.req("dur").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(span.req("pid").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(span.req("tid").unwrap().as_u64().unwrap(), 3);
+        let wait = span.req("args").unwrap().req("queue_wait_us").unwrap().as_f64().unwrap();
+        assert_eq!(wait, 0.25);
+    }
+}

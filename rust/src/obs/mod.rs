@@ -1,0 +1,37 @@
+//! Always-on pipeline observability: frame-scoped span tracing, a
+//! metrics registry, and critical-path attribution.
+//!
+//! Courier-FPGA's premise is a toolchain that gathers runtime
+//! information from the *running* target binary; this module is that
+//! loop's measurement half for the serving system.  Three layers:
+//!
+//! - [`TraceSink`] — a lock-cheap, bounded, drop-counting event ring
+//!   every built pipeline carries.  The token runtime records each
+//!   stage's queue-wait/service split per frame, the buffer pool its
+//!   hit/miss/downcycle traffic, the scheduler its fabric-slot waits,
+//!   sessions their ingress/egress — all under one composite frame id
+//!   ([`frame_id`]), so a frame's causal chain is reconstructible.
+//! - [`MetricsRegistry`] — live metric sources registered by subsystem
+//!   and name, snapshotted to JSON on demand (rendered as the METRICS
+//!   report by [`crate::report::render_metrics`]).
+//! - exporters/analysis — [`chrome_trace`] writes Perfetto-loadable
+//!   trace JSON; [`attribute`] decomposes measured end-to-end latency
+//!   into ingress/fabric/queue/service buckets, names the bottleneck
+//!   stage, and [`drift`] compares measured per-task time against the
+//!   static cost model per calibration key.
+//!
+//! See `docs/observability.md` for the design, overhead budget and
+//! Perfetto how-to.
+
+mod attribution;
+mod chrome;
+mod registry;
+mod sink;
+
+pub use attribution::{attribute, drift, drift_to_json, Attribution, StageAttribution, TaskDrift};
+pub use chrome::{chrome_trace, ChromeGroup};
+pub use registry::{MetricSource, MetricsRegistry};
+pub use sink::{
+    frame_id, frame_lane, frame_seq, obs_now_ns, EventKind, TraceEvent, TraceSink,
+    DEFAULT_TRACE_CAPACITY,
+};

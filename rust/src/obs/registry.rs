@@ -1,0 +1,277 @@
+//! The metrics registry: named registration of live metric sources by
+//! subsystem, with a point-in-time JSON snapshot.
+//!
+//! Registration is by [`std::sync::Weak`] reference, so the registry
+//! never keeps a closed session (or an evicted plan's pool) alive —
+//! dead entries are pruned at snapshot time.  Re-registering under an
+//! existing `(subsystem, name)` replaces the entry, which is what the
+//! serving plan cache wants: every session on one cached plan shares one
+//! pool/sink and the registry should list it once.
+
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::metrics::{Counter, Gauge, Latency, StageMetrics, Throughput, TunerMetrics};
+use crate::util::json::Json;
+
+use super::sink::TraceSink;
+
+/// Anything that can report itself as a JSON fragment.
+pub trait MetricSource: Send + Sync {
+    /// Point-in-time snapshot of this source.
+    fn snapshot(&self) -> Json;
+}
+
+struct Entry {
+    subsystem: String,
+    name: String,
+    source: Weak<dyn MetricSource>,
+}
+
+/// See module docs.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) `source` under `subsystem.name`.
+    pub fn register<T: MetricSource + 'static>(
+        &self,
+        subsystem: &str,
+        name: &str,
+        source: &Arc<T>,
+    ) {
+        let weak: Weak<dyn MetricSource> = Arc::downgrade(source);
+        self.register_weak(subsystem, name, weak);
+    }
+
+    /// [`MetricsRegistry::register`] with a pre-erased weak reference.
+    pub fn register_weak(&self, subsystem: &str, name: &str, source: Weak<dyn MetricSource>) {
+        let mut entries = self.entries.lock().expect("registry lock");
+        match entries.iter_mut().find(|e| e.subsystem == subsystem && e.name == name) {
+            Some(e) => e.source = source,
+            None => entries.push(Entry {
+                subsystem: subsystem.to_string(),
+                name: name.to_string(),
+                source,
+            }),
+        }
+    }
+
+    /// Live entries (dead weak references excluded).
+    pub fn len(&self) -> usize {
+        self.entries
+            .lock()
+            .expect("registry lock")
+            .iter()
+            .filter(|e| e.source.strong_count() > 0)
+            .count()
+    }
+
+    /// True when no live source is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot every live source, grouped by subsystem in registration
+    /// order; entries whose source has been dropped are pruned.
+    pub fn snapshot(&self) -> Json {
+        let mut entries = self.entries.lock().expect("registry lock");
+        entries.retain(|e| e.source.strong_count() > 0);
+        let mut subsystems: Vec<(String, Vec<(String, Json)>)> = Vec::new();
+        for e in entries.iter() {
+            let Some(source) = e.source.upgrade() else { continue };
+            let snap = source.snapshot();
+            match subsystems.iter_mut().find(|(s, _)| s == &e.subsystem) {
+                Some((_, members)) => members.push((e.name.clone(), snap)),
+                None => subsystems.push((e.subsystem.clone(), vec![(e.name.clone(), snap)])),
+            }
+        }
+        Json::Obj(
+            subsystems
+                .into_iter()
+                .map(|(s, members)| (s, Json::Obj(members)))
+                .collect(),
+        )
+    }
+}
+
+// ---- MetricSource for the existing metric primitives --------------------
+
+impl MetricSource for Counter {
+    fn snapshot(&self) -> Json {
+        Json::Num(self.get() as f64)
+    }
+}
+
+impl MetricSource for Gauge {
+    fn snapshot(&self) -> Json {
+        Json::Num(self.get() as f64)
+    }
+}
+
+impl MetricSource for Latency {
+    fn snapshot(&self) -> Json {
+        let q = self.quantiles(&[0.5, 0.9, 0.99]);
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("total", Json::Num(self.total() as f64)),
+            ("mean_ms", Json::Num(self.mean_ns() as f64 / 1e6)),
+            ("p50_ms", Json::Num(q[0] as f64 / 1e6)),
+            ("p90_ms", Json::Num(q[1] as f64 / 1e6)),
+            ("p99_ms", Json::Num(q[2] as f64 / 1e6)),
+            ("max_ms", Json::Num(self.max_ns() as f64 / 1e6)),
+        ])
+    }
+}
+
+impl MetricSource for Throughput {
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("total", Json::Num(self.total() as f64)),
+            ("per_sec", Json::Num(self.per_sec())),
+            ("recent_per_sec", Json::Num(self.recent_per_sec())),
+        ])
+    }
+}
+
+impl MetricSource for StageMetrics {
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("processed", self.processed.snapshot()),
+            ("service", self.service.snapshot()),
+            ("wait", self.wait.snapshot()),
+        ])
+    }
+}
+
+impl MetricSource for TunerMetrics {
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("candidates", self.candidates.snapshot()),
+            ("rejected", self.rejected.snapshot()),
+            ("accepted", self.accepted.snapshot()),
+            ("measured_runs", self.measured_runs.snapshot()),
+            ("calibration_samples", self.calibration_samples.snapshot()),
+            ("sim_time", self.sim_time.snapshot()),
+            ("measure_time", self.measure_time.snapshot()),
+        ])
+    }
+}
+
+impl MetricSource for TraceSink {
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.is_enabled())),
+            ("recorded", Json::Num(self.recorded() as f64)),
+            ("dropped", Json::Num(self.dropped() as f64)),
+        ])
+    }
+}
+
+impl MetricSource for crate::pipeline::BufferPool {
+    fn snapshot(&self) -> Json {
+        let s = self.stats();
+        Json::obj(vec![
+            ("hits", Json::Num(s.hits as f64)),
+            ("misses", Json::Num(s.misses as f64)),
+            ("cloned", Json::Num(s.cloned as f64)),
+            ("released", Json::Num(s.released as f64)),
+            ("hit_rate", Json::Num(s.hit_rate())),
+            ("idle", Json::Num(self.idle() as f64)),
+        ])
+    }
+}
+
+impl MetricSource for crate::serve::SessionStats {
+    fn snapshot(&self) -> Json {
+        let (p50_ms, p99_ms) = self.latency_ms();
+        Json::obj(vec![
+            ("submitted", self.submitted.snapshot()),
+            ("completed", self.completed.snapshot()),
+            ("failed", self.failed.snapshot()),
+            ("rejected", self.rejected.snapshot()),
+            ("cancelled", self.cancelled.snapshot()),
+            ("in_flight", Json::Num(self.in_flight() as f64)),
+            ("queue_depth", self.queue_depth.snapshot()),
+            ("p50_ms", Json::Num(p50_ms)),
+            ("p99_ms", Json::Num(p99_ms)),
+            ("service", self.service.snapshot()),
+        ])
+    }
+}
+
+impl MetricSource for crate::serve::ServerStats {
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("sessions_opened", self.sessions_opened.snapshot()),
+            ("sessions_rejected", self.sessions_rejected.snapshot()),
+            ("active_sessions", self.active_sessions.snapshot()),
+            ("open_latency", self.open_latency.snapshot()),
+            ("frames", self.frames.snapshot()),
+        ])
+    }
+}
+
+impl MetricSource for crate::serve::Session {
+    fn snapshot(&self) -> Json {
+        self.stats.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_groups_by_subsystem_and_prunes_dead_sources() {
+        let reg = MetricsRegistry::new();
+        let frames = Arc::new(Counter::default());
+        frames.add(7);
+        let depth = Arc::new(Gauge::default());
+        depth.set(3);
+        reg.register("serve", "frames", &frames);
+        reg.register("pool", "depth", &depth);
+        assert_eq!(reg.len(), 2);
+
+        let snap = reg.snapshot();
+        assert_eq!(snap.req("serve").unwrap().req("frames").unwrap().as_u64().unwrap(), 7);
+        assert_eq!(snap.req("pool").unwrap().req("depth").unwrap().as_u64().unwrap(), 3);
+
+        drop(depth); // source dies -> pruned on the next snapshot
+        let snap = reg.snapshot();
+        assert!(snap.req("pool").is_err() || snap.req("pool").unwrap().get("depth").is_none());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn reregistration_replaces_the_entry() {
+        let reg = MetricsRegistry::new();
+        let a = Arc::new(Counter::default());
+        a.add(1);
+        let b = Arc::new(Counter::default());
+        b.add(2);
+        reg.register("tbb", "sink", &a);
+        reg.register("tbb", "sink", &b);
+        assert_eq!(reg.len(), 1, "same name replaces, not duplicates");
+        let snap = reg.snapshot();
+        assert_eq!(snap.req("tbb").unwrap().req("sink").unwrap().as_u64().unwrap(), 2);
+    }
+
+    #[test]
+    fn latency_source_uses_one_batch_quantile_query() {
+        let l = Arc::new(Latency::default());
+        for ms in [1u64, 2, 3, 4, 100] {
+            l.record(std::time::Duration::from_millis(ms));
+        }
+        let snap = l.snapshot();
+        assert_eq!(snap.req("count").unwrap().as_u64().unwrap(), 5);
+        let p99 = snap.req("p99_ms").unwrap().as_f64().unwrap();
+        assert!(p99 >= 99.0, "p99 {p99}");
+    }
+}

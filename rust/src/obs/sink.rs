@@ -1,0 +1,388 @@
+//! The frame-scoped trace sink: a lock-cheap, ring-buffered event
+//! recorder the whole runtime shares.
+//!
+//! Generalizes the token runtime's per-worker `StageSpan` buffers into
+//! one place every subsystem can write to: stage spans with their
+//! queue-wait/service split ([`crate::pipeline::TokenPipeline`]), buffer
+//! pool traffic ([`crate::pipeline::BufferPool`]), fabric-slot
+//! acquisition (`serve::scheduler`) and session ingress/egress
+//! (`serve::session`).  One frame id threads through all of them, so a
+//! frame's full causal chain is reconstructible from a single snapshot.
+//!
+//! Design constraints, in order:
+//! 1. **zero steady-state allocation** — every ring is allocated once at
+//!    construction and overwritten in place; recording never allocates,
+//!    so the pool's zero-allocation pin holds with tracing enabled;
+//! 2. **lock-cheap** — events go through a sharded `Mutex<EventRing>`
+//!    keyed by the recording thread, so concurrent workers almost never
+//!    contend; a disabled sink costs one relaxed atomic load;
+//! 3. **bounded + drop-counting** — a full ring overwrites its oldest
+//!    event and counts the loss, so a long-running server keeps the most
+//!    recent window and [`TraceSink::dropped`] says what it lost.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Ring shards; more than the typical worker count so same-shard
+/// collisions are rare, few enough that snapshots stay cheap.
+const SHARDS: usize = 4;
+
+/// Default per-shard event capacity (`[obs] trace_capacity` overrides).
+pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
+
+/// Process-wide trace epoch: every sink timestamp is nanoseconds since
+/// the first observation in the process, so events from different
+/// pipelines/sessions land on one comparable timeline.
+static OBS_EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process-wide trace epoch.
+pub fn obs_now_ns() -> u64 {
+    OBS_EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Composite frame id: serve sessions get their own process lane
+/// (`session + 1`), lane 0 is batch/offline runs (`BuiltPipeline::run`,
+/// calibration replays).
+pub fn frame_id(session: u64, seq: u64) -> u64 {
+    ((session + 1) << 32) | (seq & 0xFFFF_FFFF)
+}
+
+/// The lane half of a frame id (0 = batch, `n` = session `n - 1`).
+pub fn frame_lane(frame: u64) -> u64 {
+    frame >> 32
+}
+
+/// The sequence half of a frame id.
+pub fn frame_seq(frame: u64) -> u64 {
+    frame & 0xFFFF_FFFF
+}
+
+/// What happened.  `Copy` + fieldless so a [`TraceEvent`] stays a small
+/// POD the rings can hold by value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A stage executed a frame: `stage`, `dur_ns` = service time,
+    /// `arg` = queue-wait ns before service began.
+    StageSpan,
+    /// Buffer pool served an acquire from the exact class (`arg` = elems).
+    PoolHit,
+    /// Buffer pool had to allocate (`arg` = elems).
+    PoolMiss,
+    /// Buffer pool served from a larger class (`arg` = elems requested).
+    PoolDowncycle,
+    /// Scheduler acquired every fabric slot a frame's modules need
+    /// (`dur_ns` = how long the locks took — cross-tenant contention).
+    FabricAcquire,
+    /// A frame entered a session's ingress queue.
+    Ingress,
+    /// A frame's result was delivered back to the session.
+    Egress,
+}
+
+impl EventKind {
+    /// Stable label (trace export, reports).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::StageSpan => "stage",
+            EventKind::PoolHit => "pool.hit",
+            EventKind::PoolMiss => "pool.miss",
+            EventKind::PoolDowncycle => "pool.downcycle",
+            EventKind::FabricAcquire => "fabric.acquire",
+            EventKind::Ingress => "ingress",
+            EventKind::Egress => "egress",
+        }
+    }
+}
+
+/// One recorded event.  Field meaning varies by [`EventKind`] (see its
+/// variants); `tid` tags the recording thread so parallel-stage overlap
+/// renders on separate tracks in the Chrome trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// What happened.
+    pub kind: EventKind,
+    /// Start, ns since the process trace epoch.
+    pub ts_ns: u64,
+    /// Duration (0 for instant events).
+    pub dur_ns: u64,
+    /// Composite frame id ([`frame_id`]); 0 when not frame-scoped.
+    pub frame: u64,
+    /// Stage index (spans), otherwise 0.
+    pub stage: u32,
+    /// Recording-thread tag.
+    pub tid: u32,
+    /// Kind-specific payload (queue-wait ns, element count, ...).
+    pub arg: u64,
+}
+
+/// Fixed-capacity overwrite ring (allocated once, then in-place).
+#[derive(Debug)]
+struct EventRing {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Overwrite cursor once the ring is full.
+    next: usize,
+}
+
+impl EventRing {
+    fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap.max(1)), cap: cap.max(1), next: 0 }
+    }
+
+    /// Returns true when an older event was overwritten.
+    fn push(&mut self, ev: TraceEvent) -> bool {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+            false
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % self.cap;
+            true
+        }
+    }
+
+    /// Events oldest-first.
+    fn ordered(&self) -> impl Iterator<Item = &TraceEvent> {
+        let (newer, older) = self.buf.split_at(self.next.min(self.buf.len()));
+        older.iter().chain(newer.iter())
+    }
+}
+
+/// Per-thread shard/track tag, hashed once from the thread id.
+fn thread_tag() -> u64 {
+    use std::hash::{Hash, Hasher};
+    thread_local! {
+        static TAG: u64 = {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            std::thread::current().id().hash(&mut h);
+            h.finish()
+        };
+    }
+    TAG.with(|t| *t)
+}
+
+/// The shared trace sink (one per built pipeline; see module docs).
+#[derive(Debug)]
+pub struct TraceSink {
+    shards: Vec<Mutex<EventRing>>,
+    enabled: AtomicBool,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink {
+    /// Sink with the default shard count and capacity, enabled.
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// Sink retaining up to `SHARDS * per_shard` events.
+    pub fn with_capacity(per_shard: usize) -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(EventRing::with_capacity(per_shard))).collect(),
+            enabled: AtomicBool::new(true),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether recording is on (one relaxed load on every record call).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on/off (a disabled sink keeps its events).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Lifetime events recorded (including any since overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring overwrites.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Replace every ring with an empty one of `per_shard` capacity.
+    pub fn resize(&self, per_shard: usize) {
+        for shard in &self.shards {
+            *shard.lock().expect("trace shard") = EventRing::with_capacity(per_shard);
+        }
+    }
+
+    /// Drop all retained events (counters keep their lifetime totals).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut ring = shard.lock().expect("trace shard");
+            ring.buf.clear();
+            ring.next = 0;
+        }
+    }
+
+    /// Record one event.  Never allocates; a disabled sink returns after
+    /// one atomic load.
+    pub fn record(&self, ev: TraceEvent) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let tag = thread_tag();
+        let overwrote = {
+            let mut ring =
+                self.shards[(tag as usize) % self.shards.len()].lock().expect("trace shard");
+            ring.push(ev)
+        };
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        if overwrote {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a stage span: `arg` carries the queue wait preceding it.
+    pub fn span(&self, frame: u64, stage: u32, ts_ns: u64, dur_ns: u64, queue_wait_ns: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.record(TraceEvent {
+            kind: EventKind::StageSpan,
+            ts_ns,
+            dur_ns,
+            frame,
+            stage,
+            tid: thread_tag() as u32,
+            arg: queue_wait_ns,
+        });
+    }
+
+    /// Record an instant event stamped now.
+    pub fn instant(&self, kind: EventKind, frame: u64, arg: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.record(TraceEvent {
+            kind,
+            ts_ns: obs_now_ns(),
+            dur_ns: 0,
+            frame,
+            stage: 0,
+            tid: thread_tag() as u32,
+            arg,
+        });
+    }
+
+    /// Record a closed interval `[start_ns, end_ns]`.
+    pub fn interval(&self, kind: EventKind, frame: u64, start_ns: u64, end_ns: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.record(TraceEvent {
+            kind,
+            ts_ns: start_ns,
+            dur_ns: end_ns.saturating_sub(start_ns),
+            frame,
+            stage: 0,
+            tid: thread_tag() as u32,
+            arg: 0,
+        });
+    }
+
+    /// Non-destructive merged snapshot, chronological.
+    pub fn snapshot_events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let ring = shard.lock().expect("trace shard");
+            out.extend(ring.ordered().copied());
+        }
+        out.sort_by_key(|e| e.ts_ns);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts: u64) -> TraceEvent {
+        TraceEvent {
+            kind: EventKind::StageSpan,
+            ts_ns: ts,
+            dur_ns: 1,
+            frame: ts,
+            stage: 0,
+            tid: 0,
+            arg: 0,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_reports_it() {
+        let mut r = EventRing::with_capacity(3);
+        assert!(!r.push(ev(1)));
+        assert!(!r.push(ev(2)));
+        assert!(!r.push(ev(3)));
+        assert!(r.push(ev(4)), "a full ring overwrites");
+        let got: Vec<u64> = r.ordered().map(|e| e.ts_ns).collect();
+        assert_eq!(got, vec![2, 3, 4], "oldest event evicted, order kept");
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let s = TraceSink::with_capacity(8);
+        s.set_enabled(false);
+        s.instant(EventKind::PoolHit, 0, 1);
+        s.span(1, 0, 10, 5, 0);
+        assert_eq!(s.recorded(), 0);
+        assert!(s.snapshot_events().is_empty());
+        s.set_enabled(true);
+        s.instant(EventKind::PoolHit, 0, 1);
+        assert_eq!(s.recorded(), 1);
+    }
+
+    #[test]
+    fn snapshot_is_chronological_across_shards() {
+        let s = TraceSink::with_capacity(64);
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let s = &s;
+                scope.spawn(move || {
+                    for i in 0..16u64 {
+                        s.span(t * 100 + i, 0, obs_now_ns(), 1, 0);
+                    }
+                });
+            }
+        });
+        let events = s.snapshot_events();
+        assert_eq!(events.len(), 64);
+        assert_eq!(s.dropped(), 0);
+        assert!(events.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+    }
+
+    #[test]
+    fn drop_counter_tracks_overwrites() {
+        let s = TraceSink::with_capacity(2);
+        for i in 0..100 {
+            s.instant(EventKind::PoolMiss, 0, i);
+        }
+        assert_eq!(s.recorded(), 100);
+        assert!(s.dropped() > 0);
+        assert!(s.snapshot_events().len() <= 2 * SHARDS);
+        s.resize(256);
+        assert!(s.snapshot_events().is_empty(), "resize starts fresh rings");
+    }
+
+    #[test]
+    fn frame_id_round_trips() {
+        let f = frame_id(3, 41);
+        assert_eq!(frame_lane(f), 4, "session 3 lives on lane 4 (lane 0 = batch)");
+        assert_eq!(frame_seq(f), 41);
+    }
+}

@@ -31,6 +31,7 @@ use crate::hlo::CostCalibration;
 use crate::hwdb::HwDatabase;
 use crate::image::Mat;
 use crate::ir::{Ir, Placement};
+use crate::obs::{TraceSink, DEFAULT_TRACE_CAPACITY};
 use crate::runtime::{Executable, Runtime};
 use crate::swlib::Registry;
 use crate::{CourierError, Result};
@@ -112,6 +113,16 @@ pub struct BuiltPipeline {
     /// steady-state frame path allocates nothing — `pool.stats().misses`
     /// stays flat.
     pub pool: Arc<BufferPool>,
+    /// The always-on trace sink every instrumented component of this
+    /// pipeline (token runtime, buffer pool, scheduler, session) records
+    /// into.  Ring-buffered and preallocated, so recording never
+    /// allocates on the frame path; disable via `[obs] enabled = false`.
+    pub sink: Arc<TraceSink>,
+    /// Per-task calibration keys in flat stage order (same derivation as
+    /// the calibrator: [`TaskSpec::calibration_key`] over the primary
+    /// input shape) — what [`crate::obs::drift`] joins measured stage
+    /// time against.  Empty when built from a bare plan with no IR.
+    pub task_keys: Vec<String>,
 }
 
 impl BuiltPipeline {
@@ -134,6 +145,16 @@ impl BuiltPipeline {
     pub fn process_one(&self, frame: Mat) -> Result<Mat> {
         self.pipeline
             .process_one(FrameEnv::pooled(frame, self.pool.clone()))?
+            .into_output(self.terminal_step)
+    }
+
+    /// [`Self::process_one`] with span tracing under an explicit frame
+    /// id ([`crate::obs::frame_id`]) — the serving scheduler's frame
+    /// path, so every stage span lands in the sink tagged with the
+    /// session/sequence pair it served.
+    pub fn process_one_traced(&self, frame: Mat, frame_id: u64) -> Result<Mat> {
+        self.pipeline
+            .process_one_traced(FrameEnv::pooled(frame, self.pool.clone()), frame_id)?
             .into_output(self.terminal_step)
     }
 
@@ -537,7 +558,26 @@ pub fn build_calibrated(
     cal: Option<&CostCalibration>,
 ) -> Result<BuiltPipeline> {
     let plan = plan_pipeline(ir, db, registry, cfg, cal)?;
-    instantiate(&plan, db.dir(), rt, registry)
+    let mut built = instantiate(&plan, db.dir(), rt, registry)?;
+    // Join keys for sim-vs-measured drift: the flat task order across
+    // stages is the IR function order the planner partitioned, so keys
+    // zip 1:1 with the primary input shapes (guarded — a mismatch means
+    // the plan was edited out from under the IR, and drift is skipped
+    // rather than misattributed).
+    let shapes = primary_input_shapes(ir)?;
+    let flat: Vec<&TaskSpec> = plan.stages.iter().flat_map(|s| s.tasks.iter()).collect();
+    if flat.len() == shapes.len() {
+        built.task_keys = flat
+            .iter()
+            .zip(&shapes)
+            .map(|(t, shape)| t.calibration_key(shape))
+            .collect();
+    }
+    built.sink.set_enabled(cfg.obs.enabled);
+    if cfg.obs.trace_capacity != DEFAULT_TRACE_CAPACITY {
+        built.sink.resize(cfg.obs.trace_capacity);
+    }
+    Ok(built)
 }
 
 /// The declarative half of [`build`]: placement + estimates + balancing,
@@ -1013,14 +1053,20 @@ pub fn instantiate(
     // the plan is authoritative for its own shape knobs: a hand-edited or
     // tuner-produced plan with different thread/token counts than the
     // config must come up exactly as written
-    let pipeline = TokenPipeline::new(filters, plan.threads.max(1), plan.tokens.max(1))?;
+    let sink = Arc::new(TraceSink::new());
+    let pipeline = TokenPipeline::new(filters, plan.threads.max(1), plan.tokens.max(1))?
+        .with_sink(sink.clone());
+    let pool = Arc::new(BufferPool::new());
+    pool.attach_sink(sink.clone());
     let control_program = super::codegen::render_control_program(plan);
     Ok(BuiltPipeline {
         plan: plan.clone(),
         pipeline,
         control_program,
         terminal_step,
-        pool: Arc::new(BufferPool::new()),
+        pool,
+        sink,
+        task_keys: Vec::new(),
     })
 }
 

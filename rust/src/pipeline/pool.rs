@@ -39,9 +39,10 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::image::Mat;
+use crate::obs::{EventKind, TraceSink};
 
 /// Spare storages kept per capacity class; releases beyond this are
 /// dropped (freed) instead of shelved.
@@ -100,12 +101,21 @@ pub struct BufferPool {
     misses: AtomicU64,
     cloned: AtomicU64,
     released: AtomicU64,
+    /// Trace sink hit/miss/downcycle events flow into (builder wiring;
+    /// first attachment wins — every session on a cached plan shares
+    /// this pool, and they all share the plan's sink too).
+    sink: OnceLock<Arc<TraceSink>>,
 }
 
 impl BufferPool {
     /// Empty pool.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach the trace sink pool events are recorded into.
+    pub fn attach_sink(&self, sink: Arc<TraceSink>) {
+        let _ = self.sink.set(sink);
     }
 
     /// Take a `Mat` of `shape` with **unspecified contents** (recycled
@@ -129,10 +139,20 @@ impl BufferPool {
             }
             drop(shelves);
             self.hits.fetch_add(1, Ordering::Relaxed);
+            // events record after the shelf lock drops: the sink has its
+            // own (sharded) locking and must never nest inside ours
+            if let Some(sink) = self.sink.get() {
+                let kind =
+                    if cap == n { EventKind::PoolHit } else { EventKind::PoolDowncycle };
+                sink.instant(kind, 0, n as u64);
+            }
             return Mat::from_storage(shape, storage);
         }
         drop(shelves);
         self.misses.fetch_add(1, Ordering::Relaxed);
+        if let Some(sink) = self.sink.get() {
+            sink.instant(EventKind::PoolMiss, 0, n as u64);
+        }
         Mat::zeros(shape)
     }
 
@@ -288,6 +308,23 @@ mod tests {
         let b = pool.acquire_cloned(&src);
         assert_eq!((a, b), (src.clone(), src));
         assert_eq!(pool.stats().cloned, 2);
+    }
+
+    #[test]
+    fn sink_sees_hit_miss_and_downcycle_traffic() {
+        let pool = BufferPool::new();
+        let sink = Arc::new(TraceSink::with_capacity(32));
+        pool.attach_sink(sink.clone());
+        let a = pool.acquire(&[4, 4]); // cold: miss
+        pool.release(a);
+        let b = pool.acquire(&[4, 4]); // exact class: hit
+        pool.release(b);
+        let _c = pool.acquire(&[2, 2]); // smaller request: downcycle
+        let kinds: Vec<EventKind> = sink.snapshot_events().iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![EventKind::PoolMiss, EventKind::PoolHit, EventKind::PoolDowncycle]
+        );
     }
 
     #[test]

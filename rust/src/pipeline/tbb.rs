@@ -23,10 +23,11 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::image::Mat;
+use crate::obs::{obs_now_ns, TraceSink};
 use crate::{CourierError, Result};
 
 /// Filter scheduling mode.
@@ -280,17 +281,20 @@ impl<P> SlotRing<P> {
     }
 }
 
-/// One stage's bounded input queue.
+/// One stage's bounded input queue.  Entries carry the enqueue timestamp
+/// (ns on the run clock) alongside the payload, so the consuming stage
+/// can split queue-wait from service time without an extra clock read —
+/// the producer's span end doubles as the downstream enqueue stamp.
 enum StageQueue<P> {
-    Serial(SlotRing<P>),
-    Parallel(FifoRing<P>),
+    Serial(SlotRing<(u64, P)>),
+    Parallel(FifoRing<(u64, P)>),
 }
 
 impl<P> StageQueue<P> {
-    fn insert(&mut self, seq: u64, p: P) {
+    fn insert(&mut self, seq: u64, enq_ns: u64, p: P) {
         match self {
-            StageQueue::Serial(r) => r.insert(seq, p),
-            StageQueue::Parallel(r) => r.push(seq, p),
+            StageQueue::Serial(r) => r.insert(seq, (enq_ns, p)),
+            StageQueue::Parallel(r) => r.push(seq, (enq_ns, p)),
         }
     }
 }
@@ -355,12 +359,24 @@ impl<P> Shared<P> {
     }
 }
 
+/// Run-relative clock handed to workers: `epoch` is the run start,
+/// `obs_base` its offset on the process-wide sink timeline — adding the
+/// two re-bases a span onto the sink timeline with no extra clock reads.
+#[derive(Clone, Copy)]
+struct Clock {
+    epoch: Instant,
+    obs_base: u64,
+}
+
 /// The pipeline: filters + worker/token configuration, generic over the
 /// token payload (a `Mat` frame by default).
 pub struct TokenPipeline<P = Mat> {
     filters: Vec<Box<dyn StageFilter<P>>>,
     threads: usize,
     tokens: usize,
+    /// Trace sink stage spans are mirrored into (in addition to the
+    /// run's own [`PipelineStats`] spans).  `None` = stats only.
+    sink: Option<Arc<TraceSink>>,
 }
 
 impl<P: Send> TokenPipeline<P> {
@@ -377,7 +393,19 @@ impl<P: Send> TokenPipeline<P> {
             filters,
             threads: threads.max(1),
             tokens: tokens.max(1),
+            sink: None,
         })
+    }
+
+    /// Attach a trace sink (builder wiring).
+    pub fn with_sink(mut self, sink: Arc<TraceSink>) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// The attached trace sink, if any.
+    pub fn sink(&self) -> Option<&Arc<TraceSink>> {
+        self.sink.as_ref()
     }
 
     /// Stage count.
@@ -396,6 +424,24 @@ impl<P: Send> TokenPipeline<P> {
         let mut cur = input;
         for f in &self.filters {
             cur = f.apply(cur)?;
+        }
+        Ok(cur)
+    }
+
+    /// [`TokenPipeline::process_one`] recording a per-stage span chain
+    /// under `frame` into the attached sink (the serving workers' path;
+    /// without a sink it degrades to `process_one`).  Queue-wait is zero
+    /// by construction here — stages run back to back on one thread; the
+    /// frame's queueing shows up as the session ingress→first-span gap.
+    pub fn process_one_traced(&self, input: P, frame: u64) -> Result<P> {
+        let Some(sink) = self.sink.as_ref().filter(|s| s.is_enabled()) else {
+            return self.process_one(input);
+        };
+        let mut cur = input;
+        for (stage, f) in self.filters.iter().enumerate() {
+            let start_ns = obs_now_ns();
+            cur = f.apply(cur)?;
+            sink.span(frame, stage as u32, start_ns, obs_now_ns() - start_ns, 0);
         }
         Ok(cur)
     }
@@ -434,11 +480,11 @@ impl<P: Send> TokenPipeline<P> {
         let total = inputs.len() as u64;
         let feed: Mutex<std::vec::IntoIter<P>> = Mutex::new(inputs.into_iter());
         let next_inject = AtomicU64::new(0);
-        let epoch = Instant::now();
+        let clock = Clock { epoch: Instant::now(), obs_base: obs_now_ns() };
 
         std::thread::scope(|scope| {
             for _ in 0..self.threads {
-                scope.spawn(|| self.worker(&shared, &feed, &next_inject, total, epoch));
+                scope.spawn(|| self.worker(&shared, &feed, &next_inject, total, clock));
             }
         });
 
@@ -451,7 +497,7 @@ impl<P: Send> TokenPipeline<P> {
         let stats = PipelineStats {
             spans: std::mem::take(&mut *shared.spans.lock().expect("spans lock")),
             frames: outputs.len() as u64,
-            wall_ns: epoch.elapsed().as_nanos() as u64,
+            wall_ns: clock.epoch.elapsed().as_nanos() as u64,
             peak_in_flight: shared.peak_in_flight.load(Ordering::Acquire),
             stage_workers: self
                 .filters
@@ -471,7 +517,7 @@ impl<P: Send> TokenPipeline<P> {
         feed: &Mutex<std::vec::IntoIter<P>>,
         next_inject: &AtomicU64,
         total: u64,
-        epoch: Instant,
+        clock: Clock,
     ) {
         let n_stages = self.filters.len();
         let mut idle_spins = 0u32;
@@ -494,8 +540,8 @@ impl<P: Send> TokenPipeline<P> {
             // 1) drain-first: scan stages from the tail for runnable work.
             let mut did_work = false;
             for stage in (0..n_stages).rev() {
-                if let Some((seq, mat)) = self.try_take(shared, stage) {
-                    self.execute(shared, stage, seq, mat, epoch, &mut local_spans);
+                if let Some(token) = self.try_take(shared, stage) {
+                    self.execute(shared, stage, token, clock, &mut local_spans);
                     did_work = true;
                     break;
                 }
@@ -530,7 +576,10 @@ impl<P: Send> TokenPipeline<P> {
                         shared.peak_in_flight.fetch_max(cur, Ordering::AcqRel);
                         let seq = next_inject.fetch_add(1, Ordering::AcqRel);
                         drop(it);
-                        shared.queues[0].lock().expect("queue lock").insert(seq, mat);
+                        // the injection path already holds the feed lock,
+                        // so a clock read here is off the contended path
+                        let enq_ns = clock.epoch.elapsed().as_nanos() as u64;
+                        shared.queues[0].lock().expect("queue lock").insert(seq, enq_ns, mat);
                         if seq + 1 == total {
                             shared.input_done.store(true, Ordering::Release);
                         }
@@ -574,11 +623,13 @@ impl<P: Send> TokenPipeline<P> {
         }
     }
 
-    /// Try to claim one runnable token for `stage`.
-    fn try_take(&self, shared: &Shared<P>, stage: usize) -> Option<(u64, P)> {
+    /// Try to claim one runnable token for `stage`: `(seq, enq_ns,
+    /// payload)`, where `enq_ns` is when the token entered this stage's
+    /// queue (run clock).
+    fn try_take(&self, shared: &Shared<P>, stage: usize) -> Option<(u64, u64, P)> {
         let mut q = shared.queues[stage].lock().expect("queue lock");
         match &mut *q {
-            StageQueue::Parallel(ring) => ring.pop(),
+            StageQueue::Parallel(ring) => ring.pop().map(|(seq, (enq_ns, p))| (seq, enq_ns, p)),
             StageQueue::Serial(ring) => {
                 let want = shared.next_seq[stage].load(Ordering::Acquire);
                 if !ring.contains(want) {
@@ -592,8 +643,8 @@ impl<P: Send> TokenPipeline<P> {
                 {
                     return None;
                 }
-                let mat = ring.take(want).expect("entry just observed");
-                Some((want, mat))
+                let (enq_ns, mat) = ring.take(want).expect("entry just observed");
+                Some((want, enq_ns, mat))
             }
         }
     }
@@ -602,15 +653,26 @@ impl<P: Send> TokenPipeline<P> {
         &self,
         shared: &Shared<P>,
         stage: usize,
-        seq: u64,
-        mat: P,
-        epoch: Instant,
+        token: (u64, u64, P),
+        clock: Clock,
         spans: &mut Vec<StageSpan>,
     ) {
-        let start_ns = epoch.elapsed().as_nanos() as u64;
+        let (seq, enq_ns, mat) = token;
+        let start_ns = clock.epoch.elapsed().as_nanos() as u64;
         let result = self.filters[stage].apply(mat);
-        let end_ns = epoch.elapsed().as_nanos() as u64;
+        let end_ns = clock.epoch.elapsed().as_nanos() as u64;
         spans.push(StageSpan { stage, token: seq, start_ns, end_ns });
+        if let Some(sink) = &self.sink {
+            // same two clock reads re-based onto the sink timeline; the
+            // entry's enqueue stamp yields the queue-wait for free
+            sink.span(
+                seq,
+                stage as u32,
+                clock.obs_base + start_ns,
+                end_ns - start_ns,
+                start_ns.saturating_sub(enq_ns),
+            );
+        }
 
         if self.filters[stage].mode() == FilterMode::SerialInOrder {
             shared.next_seq[stage].fetch_add(1, Ordering::AcqRel);
@@ -620,10 +682,12 @@ impl<P: Send> TokenPipeline<P> {
         match result {
             Ok(out) => {
                 if stage + 1 < self.filters.len() {
+                    // the producer's span end doubles as the downstream
+                    // enqueue stamp — no extra clock read
                     shared.queues[stage + 1]
                         .lock()
                         .expect("queue lock")
-                        .insert(seq, out);
+                        .insert(seq, end_ns, out);
                 } else {
                     shared.outputs.lock().expect("outputs lock").insert(seq, out);
                     shared.frames_in_flight.fetch_sub(1, Ordering::AcqRel);
@@ -646,6 +710,7 @@ impl<P: Send> TokenPipeline<P> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::EventKind;
     use std::sync::atomic::AtomicUsize;
 
     fn add_filter(mode: FilterMode, delta: f32) -> Box<dyn StageFilter> {
@@ -956,6 +1021,62 @@ mod tests {
         assert!(r.contains(2) && r.contains(6));
         assert_eq!(r.take(2), Some(20));
         assert_eq!(r.take(6), Some(60));
+    }
+
+    #[test]
+    fn sink_mirrors_every_span_with_queue_wait_split() {
+        let sink = Arc::new(TraceSink::with_capacity(256));
+        let pipe = TokenPipeline::new(
+            vec![
+                add_filter(FilterMode::SerialInOrder, 1.0),
+                add_filter(FilterMode::Parallel, 10.0),
+                add_filter(FilterMode::SerialInOrder, 100.0),
+            ],
+            2,
+            4,
+        )
+        .unwrap()
+        .with_sink(sink.clone());
+        let (out, stats) = pipe.run(inputs(16)).unwrap();
+        assert_eq!(out.len(), 16);
+        let events = sink.snapshot_events();
+        assert_eq!(events.len(), stats.spans.len(), "one sink span per stats span");
+        assert_eq!(sink.dropped(), 0);
+        // frame/stage pairs match the stats spans exactly
+        let mut want: Vec<(u64, u32)> =
+            stats.spans.iter().map(|s| (s.token, s.stage as u32)).collect();
+        let mut got: Vec<(u64, u32)> = events.iter().map(|e| (e.frame, e.stage)).collect();
+        want.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(got, want);
+        // queue waits are sane: bounded by each span's distance from run
+        // start (a wait cannot predate the frame's injection)
+        for e in &events {
+            assert!(e.kind == EventKind::StageSpan);
+            assert!(e.arg <= e.ts_ns, "queue wait {} exceeds span ts {}", e.arg, e.ts_ns);
+        }
+    }
+
+    #[test]
+    fn process_one_traced_records_a_full_chain_under_one_frame_id() {
+        let sink = Arc::new(TraceSink::with_capacity(64));
+        let pipe = TokenPipeline::new(
+            vec![
+                add_filter(FilterMode::SerialInOrder, 1.0),
+                add_filter(FilterMode::Parallel, 1.0),
+            ],
+            1,
+            1,
+        )
+        .unwrap()
+        .with_sink(sink.clone());
+        let out = pipe.process_one_traced(Mat::full(&[2, 2], 0.0), 0xABCD).unwrap();
+        assert_eq!(out.at2(0, 0), 2.0);
+        let events = sink.snapshot_events();
+        assert_eq!(events.len(), 2);
+        assert!(events.iter().all(|e| e.frame == 0xABCD));
+        assert_eq!(events[0].stage, 0);
+        assert_eq!(events[1].stage, 1);
     }
 
     #[test]

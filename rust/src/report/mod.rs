@@ -7,6 +7,7 @@
 
 use crate::hwdb::SynthReport;
 use crate::pipeline::StagePlan;
+use crate::util::json::Json;
 
 /// One Table I row: per-function original vs accelerated time.
 #[derive(Debug, Clone)]
@@ -125,6 +126,7 @@ pub fn render_serve(
     cache_hit_rate: f64,
     cached_plans: usize,
     fps: f64,
+    recent_fps: f64,
 ) -> String {
     let mut s = String::new();
     s.push_str("SERVE: per-session report\n");
@@ -149,11 +151,44 @@ pub fn render_serve(
         ));
     }
     s.push_str(&format!(
-        "plan cache: {} plans, {:.0}% hit rate; {:.1} frames/s served\n",
+        "plan cache: {} plans, {:.0}% hit rate; {:.1} frames/s served lifetime, \
+         {:.1} frames/s recent\n",
         cached_plans,
         cache_hit_rate * 100.0,
-        fps
+        fps,
+        recent_fps
     ));
+    s
+}
+
+/// Render a metrics snapshot ([`crate::serve::Server::metrics_snapshot`])
+/// as a flat plain-text report: one `subsystem.source.field = value` line
+/// per leaf value, array elements indexed — grep- and diff-friendly, with
+/// the JSON document staying the machine-readable artifact.
+pub fn render_metrics(snapshot: &Json) -> String {
+    fn walk(j: &Json, path: &str, out: &mut String) {
+        match j {
+            Json::Obj(pairs) => {
+                for (k, v) in pairs {
+                    let p = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                    walk(v, &p, out);
+                }
+            }
+            Json::Arr(items) => {
+                for (i, v) in items.iter().enumerate() {
+                    walk(v, &format!("{path}[{i}]"), out);
+                }
+            }
+            leaf => {
+                out.push_str(path);
+                out.push_str(" = ");
+                out.push_str(&leaf.to_string_compact());
+                out.push('\n');
+            }
+        }
+    }
+    let mut s = String::from("METRICS: registry snapshot\n");
+    walk(snapshot, "", &mut s);
     s
 }
 
@@ -320,13 +355,36 @@ mod tests {
                 open_ms: 0.3,
             },
         ];
-        let t = render_serve(&rows, 0.5, 2, 42.0);
+        let t = render_serve(&rows, 0.5, 2, 42.0, 37.5);
         assert!(t.contains("SERVE"));
         assert!(t.contains("cornerHarris_Demo/paper"));
         assert!(t.contains("cold"));
         assert!(t.contains("warm"));
         assert!(t.contains("50% hit rate"), "{t}");
-        assert!(t.contains("42.0 frames/s"), "{t}");
+        assert!(t.contains("42.0 frames/s served lifetime"), "{t}");
+        assert!(t.contains("37.5 frames/s recent"), "{t}");
+    }
+
+    #[test]
+    fn metrics_report_flattens_the_snapshot() {
+        let snap = Json::obj(vec![
+            (
+                "serve",
+                Json::obj(vec![(
+                    "server",
+                    Json::obj(vec![("frames", Json::Num(12.0)), ("name", Json::Str("x".into()))]),
+                )]),
+            ),
+            (
+                "stages",
+                Json::Arr(vec![Json::obj(vec![("service_ms", Json::Num(1.5))])]),
+            ),
+        ]);
+        let t = render_metrics(&snap);
+        assert!(t.starts_with("METRICS"), "{t}");
+        assert!(t.contains("serve.server.frames = 12"), "{t}");
+        assert!(t.contains("serve.server.name = \"x\""), "{t}");
+        assert!(t.contains("stages[0].service_ms = 1.5"), "{t}");
     }
 
     #[test]

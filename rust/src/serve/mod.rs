@@ -56,10 +56,12 @@ use std::time::Instant;
 use crate::config::Config;
 use crate::hwdb::HwDatabase;
 use crate::ir::Ir;
+use crate::obs::{self, MetricsRegistry};
 use crate::report;
 use crate::runtime::Runtime;
 use crate::swlib::Registry;
 use crate::trace::{trace_program, CallGraph};
+use crate::util::json::Json;
 use crate::{CourierError, Result};
 
 /// The long-running, multi-tenant pipeline server.
@@ -71,6 +73,9 @@ pub struct Server {
     cache: PlanCache,
     scheduler: Scheduler,
     stats: Arc<ServerStats>,
+    /// Live metric sources by subsystem ([`MetricsRegistry`] holds them
+    /// weakly — a closed session's entry prunes itself at snapshot).
+    obs: MetricsRegistry,
     sessions: Mutex<Vec<Arc<Session>>>,
     next_id: AtomicU64,
     shut_down: AtomicBool,
@@ -98,6 +103,8 @@ impl Server {
         let rt = Runtime::cpu()?;
         let stats = Arc::new(ServerStats::default());
         let scheduler = Scheduler::start(cfg.serve.workers, stats.clone());
+        let obs = MetricsRegistry::new();
+        obs.register("serve", "server", &stats);
         Ok(Self {
             cfg,
             db,
@@ -106,6 +113,7 @@ impl Server {
             cache: PlanCache::new(),
             scheduler,
             stats,
+            obs,
             sessions: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(0),
             shut_down: AtomicBool::new(false),
@@ -199,6 +207,18 @@ impl Server {
             self.scheduler.register(session.clone());
             self.stats.record_open(t0.elapsed());
         }
+        // metric sources: the session itself, plus its (shared) pipeline's
+        // pool and sink under the plan label — re-registration of the same
+        // (subsystem, name) replaces, so N tenants on one cached plan cost
+        // one entry each for pool and sink
+        let plan_label = session.key().describe();
+        self.obs.register(
+            "serve",
+            &format!("session.{}.{}", session.id(), session.name()),
+            &session,
+        );
+        self.obs.register("pool", &plan_label, &session.pipeline().pool);
+        self.obs.register("tbb", &format!("{plan_label}.sink"), &session.pipeline().sink);
         Ok(session)
     }
 
@@ -289,6 +309,66 @@ impl Server {
         &self.cache
     }
 
+    /// The live metric-source registry (`serve` / `pool` / `tbb` entries
+    /// accrue as sessions open; closed sessions prune at snapshot).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.obs
+    }
+
+    /// One JSON document with everything observable right now: the
+    /// registry snapshot per subsystem, plus an `attribution` section per
+    /// cached plan — measured end-to-end latency decomposed into
+    /// ingress/fabric/queue/service with the bottleneck stage named, and
+    /// sim-vs-measured drift per calibration key.  `--metrics-out` writes
+    /// this; [`report::render_metrics`] renders it for the console.
+    pub fn metrics_snapshot(&self) -> Json {
+        let mut doc = match self.obs.snapshot() {
+            Json::Obj(pairs) => pairs,
+            other => vec![("metrics".to_string(), other)],
+        };
+        let mut attrib: Vec<(String, Json)> = Vec::new();
+        for (key, plan) in self.cache.plans() {
+            let events = plan.sink.snapshot_events();
+            if events.is_empty() {
+                continue;
+            }
+            let a = obs::attribute(&events, &plan.pipeline.stage_labels());
+            let mut entry = match a.to_json() {
+                Json::Obj(pairs) => pairs,
+                other => vec![("attribution".to_string(), other)],
+            };
+            let rows = obs::drift(&plan.plan, &plan.task_keys, &a);
+            if !rows.is_empty() {
+                entry.push(("drift".to_string(), obs::drift_to_json(&rows)));
+            }
+            attrib.push((key.describe(), Json::Obj(entry)));
+        }
+        doc.push(("attribution".to_string(), Json::Obj(attrib)));
+        Json::Obj(doc)
+    }
+
+    /// Chrome trace-event JSON over every cached plan's sink (load at
+    /// <https://ui.perfetto.dev>); `--trace-out` writes this.
+    pub fn chrome_trace(&self) -> Json {
+        let groups: Vec<obs::ChromeGroup> = self
+            .cache
+            .plans()
+            .into_iter()
+            .map(|(key, plan)| obs::ChromeGroup {
+                label: key.describe(),
+                stage_names: plan.pipeline.stage_labels(),
+                events: plan.sink.snapshot_events(),
+            })
+            .collect();
+        obs::chrome_trace(&groups)
+    }
+
+    /// Write [`Self::chrome_trace`] to `path`.
+    pub fn export_chrome_trace(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.chrome_trace().to_string_pretty())?;
+        Ok(())
+    }
+
     /// The server's base configuration.
     pub fn config(&self) -> &Config {
         &self.cfg
@@ -300,17 +380,20 @@ impl Server {
         let sessions = self.sessions.lock().expect("server sessions lock").clone();
         let rows: Vec<report::ServeRow> = sessions
             .iter()
-            .map(|s| report::ServeRow {
-                session: format!("#{} {}", s.id(), s.name()),
-                program: s.key().describe(),
-                completed: s.stats.completed.get(),
-                failed: s.stats.failed.get(),
-                rejected: s.stats.rejected.get(),
-                p50_ms: s.stats.p50_ms(),
-                p99_ms: s.stats.p99_ms(),
-                queue_depth: s.stats.queue_depth.get(),
-                warm_open: s.cache_hit(),
-                open_ms: s.open_ns() as f64 / 1e6,
+            .map(|s| {
+                let (p50_ms, p99_ms) = s.stats.latency_ms();
+                report::ServeRow {
+                    session: format!("#{} {}", s.id(), s.name()),
+                    program: s.key().describe(),
+                    completed: s.stats.completed.get(),
+                    failed: s.stats.failed.get(),
+                    rejected: s.stats.rejected.get(),
+                    p50_ms,
+                    p99_ms,
+                    queue_depth: s.stats.queue_depth.get(),
+                    warm_open: s.cache_hit(),
+                    open_ms: s.open_ns() as f64 / 1e6,
+                }
             })
             .collect();
         report::render_serve(
@@ -318,6 +401,7 @@ impl Server {
             self.cache.hit_rate(),
             self.cache.len(),
             self.stats.frames.per_sec(),
+            self.stats.frames.recent_per_sec(),
         )
     }
 

@@ -120,6 +120,22 @@ impl PlanCache {
         guard.clone()
     }
 
+    /// Every completed plan with its key — the exporters' walk (trace
+    /// export and critical-path attribution cover cached plans even
+    /// after their sessions closed).  Same non-blocking stance as
+    /// [`Self::len`]: in-flight builds are skipped, not waited on.
+    pub fn plans(&self) -> Vec<(PlanKey, Arc<BuiltPipeline>)> {
+        self.entries
+            .lock()
+            .expect("plan cache lock")
+            .iter()
+            .filter_map(|(key, slot)| {
+                let plan = slot.try_lock().ok().and_then(|s| s.clone())?;
+                Some((key.clone(), plan))
+            })
+            .collect()
+    }
+
     /// Hits / (hits + misses); 0 before any lookup.
     pub fn hit_rate(&self) -> f64 {
         let h = self.hits.get() as f64;
@@ -221,6 +237,8 @@ mod tests {
             control_program: String::new(),
             terminal_step: 0,
             pool: Arc::new(crate::pipeline::BufferPool::new()),
+            sink: Arc::new(crate::obs::TraceSink::new()),
+            task_keys: Vec::new(),
         })
     }
 

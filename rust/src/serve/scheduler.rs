@@ -17,6 +17,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::obs::{frame_id, obs_now_ns, EventKind};
 use crate::CourierError;
 
 use super::session::{Job, Session};
@@ -160,21 +161,34 @@ fn worker_loop(shared: &SchedShared) {
 }
 
 fn run_job(shared: &SchedShared, session: &Session, job: Job) {
-    // exclusive fabric: hold every placed module's slot for the frame
-    let slots = shared.fabric.slots_for(session.hw_modules());
-    let _guards: Vec<_> = slots.iter().map(|s| s.lock().expect("fabric slot")).collect();
-    let t0 = Instant::now();
     let Job { seq, frame, submitted } = job;
+    let fid = frame_id(session.id(), seq);
+    // exclusive fabric: hold every placed module's slot for the frame;
+    // the acquisition interval is cross-tenant contention, recorded so
+    // attribution can split it out of the frame's queue time
+    let slots = shared.fabric.slots_for(session.hw_modules());
+    let acquire_start = if slots.is_empty() { 0 } else { obs_now_ns() };
+    let _guards: Vec<_> = slots.iter().map(|s| s.lock().expect("fabric slot")).collect();
+    if !slots.is_empty() {
+        session.pipeline().sink.interval(
+            EventKind::FabricAcquire,
+            fid,
+            acquire_start,
+            obs_now_ns(),
+        );
+    }
+    let t0 = Instant::now();
     // contain stage panics: the ticket must always complete (or the
     // client waits forever), the worker must survive, and the slot
     // guards above must be dropped cleanly instead of being poisoned
-    let result = catch_unwind(AssertUnwindSafe(|| session.pipeline().process_one(frame)))
-        .unwrap_or_else(|panic| {
-            Err(CourierError::Serve(format!(
-                "worker panicked while serving frame {seq}: {}",
-                panic_message(panic.as_ref())
-            )))
-        });
+    let result =
+        catch_unwind(AssertUnwindSafe(|| session.pipeline().process_one_traced(frame, fid)))
+            .unwrap_or_else(|panic| {
+                Err(CourierError::Serve(format!(
+                    "worker panicked while serving frame {seq}: {}",
+                    panic_message(panic.as_ref())
+                )))
+            });
     session.stats.service.record(t0.elapsed());
     if result.is_ok() {
         shared.stats.frames.add(1);

@@ -13,6 +13,7 @@ use std::time::{Duration, Instant};
 
 use crate::app::Program;
 use crate::image::Mat;
+use crate::obs::{frame_id, EventKind};
 use crate::pipeline::BuiltPipeline;
 use crate::{CourierError, Result};
 
@@ -190,6 +191,7 @@ impl Session {
             Ok(()) => {
                 self.stats.submitted.inc();
                 self.stats.queue_depth.set(self.queue.len() as u64);
+                self.pipeline.sink.instant(EventKind::Ingress, frame_id(self.id, seq), 0);
                 Ok(Ticket { seq })
             }
             Err(PushError::Full(_)) => {
@@ -246,6 +248,7 @@ impl Session {
     /// Deliver one finished job.
     pub(crate) fn complete(&self, seq: u64, submitted: Instant, result: Result<Mat>) {
         self.stats.latency.record(submitted.elapsed());
+        self.pipeline.sink.instant(EventKind::Egress, frame_id(self.id, seq), 0);
         match &result {
             Ok(_) => self.stats.completed.inc(),
             Err(_) => self.stats.failed.inc(),

@@ -47,14 +47,21 @@ impl Default for SessionStats {
 }
 
 impl SessionStats {
+    /// `(p50, p99)` end-to-end latency in ms from one batch quantile
+    /// query — one clone+sort of the sample window instead of two.
+    pub fn latency_ms(&self) -> (f64, f64) {
+        let q = self.latency.quantiles(&[0.5, 0.99]);
+        (q[0] as f64 / 1e6, q[1] as f64 / 1e6)
+    }
+
     /// p50 end-to-end latency, ms.
     pub fn p50_ms(&self) -> f64 {
-        self.latency.percentile_ns(0.5) as f64 / 1e6
+        self.latency_ms().0
     }
 
     /// p99 end-to-end latency, ms.
     pub fn p99_ms(&self) -> f64 {
-        self.latency.percentile_ns(0.99) as f64 / 1e6
+        self.latency_ms().1
     }
 
     /// Frames still owed to the client: accepted but not yet completed,

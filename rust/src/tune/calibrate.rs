@@ -100,6 +100,9 @@ pub fn calibrate(
     // steady state the plan will actually serve.
     let _ = built.process_one(frames[0].clone())?;
 
+    // The replay records through the pipeline's trace sink like any
+    // other run, so a calibration pass also leaves spans behind for
+    // `obs::attribute`/`obs::drift` to decompose.
     let t0 = std::time::Instant::now();
     let (_, stats): (_, PipelineStats) = built.run(frames)?;
     metrics.measure_time.record(t0.elapsed());
@@ -195,6 +198,10 @@ mod tests {
         assert_eq!(metrics.calibration_samples.get(), ir.funcs.len() as u64);
         assert_eq!(metrics.measured_runs.get(), 1);
         assert!(run.overall_factor() > 0.0);
+        assert!(
+            built.sink.recorded() > 0,
+            "calibration replays must record spans through the pipeline's trace sink"
+        );
         // keys embed the per-task input shape and placement (CPU here)
         assert!(db.get("cv::cvtColor@24x32x3#sw").is_some());
         assert!(db.get("cv::cornerHarris@24x32#sw").is_some());

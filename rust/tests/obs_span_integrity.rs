@@ -1,0 +1,102 @@
+//! Stress: the trace sink under the token runtime's adversarial jitter
+//! schedule (the same shape as `tbb_stress.rs`).
+//!
+//! The claim being pinned: a merged `snapshot_events()` view is
+//! **loss-free** (capacity permitting, `dropped() == 0`) and
+//! **frame-consistent** — every frame appears with exactly one stage
+//! span per stage, queue-wait never exceeds the span's own timeline
+//! position, and the merged view is chronological.  Worker threads race
+//! on the sink's shards for the whole run; any torn or misattributed
+//! record shows up as a duplicated or missing `(frame, stage)` pair.
+//!
+//! All randomness is seeded (`util::rng::Rng`); no wall-clock assertions.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use courier::image::Mat;
+use courier::obs::{EventKind, TraceSink};
+use courier::pipeline::{FilterMode, FnFilter, StageFilter, TokenPipeline};
+use courier::util::rng::Rng;
+
+/// Deterministic per-(token, stage) jitter in [0, max_us).
+fn jitter_us(seed: u64, token: u64, stage: u64, max_us: u64) -> u64 {
+    Rng::new(seed ^ (token << 8) ^ stage).next_u64() % max_us
+}
+
+fn jitter_filter(mode: FilterMode, stage: u64, seed: u64, max_us: u64) -> Box<dyn StageFilter> {
+    Box::new(FnFilter {
+        mode,
+        label: format!("jitter{stage}"),
+        f: move |mut m: Mat| {
+            let token = m.at2(0, 0).floor() as u64;
+            let us = jitter_us(seed, token, stage, max_us);
+            if us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(us));
+            }
+            for v in m.as_mut_slice() {
+                *v += 0.125;
+            }
+            Ok(m)
+        },
+    })
+}
+
+#[test]
+fn merged_spans_are_loss_free_and_frame_consistent_under_stress() {
+    let (frames, threads, tokens, seed, max_us) = (2_000usize, 4, 3, 0xC0FFEE_u64, 24);
+    let stages = 4usize;
+    // capacity sized so even a maximally skewed shard holds every span
+    let sink = Arc::new(TraceSink::with_capacity(frames * stages));
+    let pipe = TokenPipeline::new(
+        vec![
+            jitter_filter(FilterMode::SerialInOrder, 0, seed, max_us / 4),
+            jitter_filter(FilterMode::Parallel, 1, seed, max_us),
+            jitter_filter(FilterMode::Parallel, 2, seed.rotate_left(17), max_us),
+            jitter_filter(FilterMode::SerialInOrder, 3, seed, max_us / 4),
+        ],
+        threads,
+        tokens,
+    )
+    .unwrap()
+    .with_sink(sink.clone());
+
+    let inputs: Vec<Mat> = (0..frames).map(|i| Mat::full(&[1, 1], i as f32)).collect();
+    let (out, stats) = pipe.run(inputs).unwrap();
+    assert_eq!(out.len(), frames);
+
+    // loss-free: nothing overwritten, one record per runtime span
+    assert_eq!(sink.dropped(), 0, "sink capacity must hold the whole run");
+    assert_eq!(sink.recorded(), (frames * stages) as u64);
+    assert_eq!(stats.spans.len(), frames * stages);
+
+    let events = sink.snapshot_events();
+    assert_eq!(events.len(), frames * stages);
+
+    // frame-consistent: every frame carries exactly one span per stage
+    let mut per_frame: HashMap<u64, Vec<u32>> = HashMap::new();
+    for e in &events {
+        assert_eq!(e.kind, EventKind::StageSpan);
+        assert!(
+            e.arg <= e.ts_ns,
+            "queue wait {} precedes the epoch (span starts at {})",
+            e.arg,
+            e.ts_ns
+        );
+        per_frame.entry(e.frame).or_default().push(e.stage);
+    }
+    assert_eq!(per_frame.len(), frames, "every frame must appear in the merged view");
+    for (frame, mut chain) in per_frame {
+        chain.sort_unstable();
+        assert_eq!(
+            chain,
+            (0..stages as u32).collect::<Vec<_>>(),
+            "frame {frame} has a broken stage chain"
+        );
+    }
+
+    // the merged snapshot is chronological across shards
+    for w in events.windows(2) {
+        assert!(w[0].ts_ns <= w[1].ts_ns, "snapshot must merge shards in time order");
+    }
+}

@@ -1,0 +1,119 @@
+//! Integration: the observability exports of a serving run.
+//!
+//! A hermetic (CPU-only) `harris_dag` serve produces, without any
+//! opt-in flags, (a) a Chrome trace-event document that roundtrips
+//! through our own JSON parser with the schema Perfetto expects, and
+//! (b) a metrics snapshot whose critical-path attribution decomposes
+//! the measured end-to-end frame latency into ingress/fabric/queue/
+//! service buckets that — together with the explicit residual — sum
+//! back to the measured number, with the bottleneck stage named.
+
+use courier::app::harris_dag_demo;
+use courier::config::Config;
+use courier::image::{synth, Mat};
+use courier::serve::{Server, SessionSpec};
+use courier::util::json::{parse, Json};
+use courier::util::testing::{empty_hwdb_dir, TempDir};
+
+const FRAMES: usize = 6;
+
+fn served_server() -> (Server, TempDir) {
+    let tmp = empty_hwdb_dir("obs-export").unwrap();
+    let mut cfg = Config { artifacts_dir: tmp.path().to_path_buf(), ..Default::default() };
+    cfg.serve.workers = 2;
+    cfg.serve.queue_depth = 4;
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(harris_dag_demo(24, 32))).unwrap();
+    let frames: Vec<Mat> = (0..FRAMES).map(|s| synth::noise_rgb(24, 32, s as u64)).collect();
+    let outs = session.run_window(frames).unwrap();
+    assert_eq!(outs.len(), FRAMES);
+    (server, tmp)
+}
+
+#[test]
+fn chrome_trace_export_has_the_perfetto_schema() {
+    let (server, _tmp) = served_server();
+    let text = server.chrome_trace().to_string_pretty();
+    let doc = parse(&text).expect("trace export must be valid JSON");
+    assert_eq!(doc.req("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+
+    let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "a served run must leave trace events behind");
+    let (mut spans, mut metas, mut instants) = (0usize, 0usize, 0usize);
+    for e in events {
+        // every event carries the fields the trace UI keys on
+        assert!(e.req("name").unwrap().as_str().is_ok());
+        assert!(e.req("pid").unwrap().as_u64().is_ok());
+        assert!(e.req("tid").unwrap().as_u64().is_ok());
+        match e.req("ph").unwrap().as_str().unwrap() {
+            "X" => {
+                spans += 1;
+                assert!(e.req("ts").unwrap().as_f64().is_ok());
+                assert!(e.req("dur").unwrap().as_f64().is_ok());
+            }
+            "M" => metas += 1,
+            "i" => instants += 1,
+            other => panic!("unexpected trace phase {other:?}"),
+        }
+    }
+    assert!(spans >= FRAMES, "at least one complete span per served frame");
+    assert!(metas > 0, "process_name metadata names the session lanes");
+    assert!(instants >= 2 * FRAMES, "ingress + egress instants per frame");
+
+    server.shutdown();
+}
+
+#[test]
+fn metrics_snapshot_attribution_sums_to_measured_latency() {
+    let (server, _tmp) = served_server();
+    let snap = server.metrics_snapshot();
+
+    // non-zero frame counts in the registry section
+    let frames_total = snap
+        .req("serve")
+        .unwrap()
+        .req("server")
+        .unwrap()
+        .req("frames")
+        .unwrap()
+        .req("total")
+        .unwrap()
+        .as_u64()
+        .unwrap();
+    assert!(frames_total >= FRAMES as u64, "server throughput saw {frames_total} frames");
+
+    // exactly one cached plan -> exactly one attribution entry
+    let attrib = match snap.req("attribution").unwrap() {
+        Json::Obj(pairs) => pairs,
+        other => panic!("attribution must be an object, got {other:?}"),
+    };
+    assert_eq!(attrib.len(), 1, "one cached plan, one attribution entry");
+    let (plan_key, a) = &attrib[0];
+    assert!(plan_key.contains("24x32"), "entry is keyed by plan ({plan_key})");
+
+    assert!(a.req("frames").unwrap().as_u64().unwrap() > 0);
+    let e2e = a.req("e2e_ms_per_frame").unwrap().as_f64().unwrap();
+    let attributed = a.req("attributed_ms_per_frame").unwrap().as_f64().unwrap();
+    let residual = a.req("residual_ms_per_frame").unwrap().as_f64().unwrap();
+    assert!(e2e > 0.0, "served frames take measurable time");
+    assert!(
+        (attributed + residual - e2e).abs() < 1e-6,
+        "buckets + residual must reconstruct e2e: {attributed} + {residual} vs {e2e}"
+    );
+
+    // the per-stage table has real spans and a named bottleneck
+    let stages = a.req("stages").unwrap().as_arr().unwrap();
+    assert!(!stages.is_empty());
+    let folded: u64 = stages
+        .iter()
+        .map(|s| s.req("spans").unwrap().as_u64().unwrap())
+        .sum();
+    assert!(folded > 0, "stage spans folded into the attribution");
+    let bottleneck = a.req("bottleneck").unwrap().as_str().unwrap().to_string();
+    assert!(
+        stages.iter().any(|s| s.req("name").unwrap().as_str().unwrap() == bottleneck),
+        "bottleneck {bottleneck:?} names one of the stages"
+    );
+
+    server.shutdown();
+}
