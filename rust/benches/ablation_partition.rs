@@ -113,6 +113,7 @@ fn main() {
                 program: "sweep".into(),
                 threads,
                 tokens: (threads * 2).max(2),
+                bands: 1,
                 edges: Vec::new(),
                 stages,
             };

@@ -1,0 +1,102 @@
+//! **Band scaling**: row-band sharding of the CPU-only software pipeline.
+//!
+//! The same corner-Harris stream is built at matched worker/band counts
+//! (1, 2, 4) and measured end to end — `sw_pipeline_ms_per_frame` must
+//! improve as cores are added, because every interior stencil shards its
+//! destination across row bands (`swlib::banding::band_exec`).  Wall-clock
+//! scaling depends on the host actually having the cores, so the artifact
+//! also records the deterministic discrete-event projection of the same
+//! plans (`pipeline::simulate` with the banded cost model), which is the
+//! machine-independent trajectory number.
+//!
+//! Hermetic: empty hardware database, CPU-only placement — no `make
+//! artifacts` needed.  Run: `cargo bench --bench band_scaling [-- HxW]`
+
+mod common;
+
+use std::time::Duration;
+
+use courier::app::corner_harris_demo;
+use courier::config::Config;
+use courier::pipeline::simulate;
+use courier::util::bench::{section, smoke, write_bench_json, Bench, Measurement};
+use courier::util::testing::empty_hwdb_dir;
+
+fn main() {
+    let default_size = if smoke() { "120x160" } else { "1080x1920" };
+    let size = std::env::args().nth(1).unwrap_or_else(|| default_size.into());
+    let (h, w) = size
+        .split_once('x')
+        .map(|(a, b)| (a.parse().unwrap(), b.parse().unwrap()))
+        .unwrap_or((1080, 1920));
+    let frames = if smoke() { 4usize } else { 8usize };
+    section(&format!(
+        "band scaling — corner-Harris {h}x{w}, {frames}-frame stream, CPU-only"
+    ));
+
+    let program = corner_harris_demo(h, w);
+    let tmp = empty_hwdb_dir("band-scaling").unwrap();
+    let stream = common::frame_stream(h, w, frames);
+    let bench = Bench::from_env(Duration::from_secs(6));
+    let mut all: Vec<Measurement> = Vec::new();
+    let mut measured: Vec<(usize, f64)> = Vec::new();
+    let mut simulated: Vec<(usize, f64)> = Vec::new();
+
+    for &workers in &[1usize, 2, 4] {
+        let cfg = Config {
+            artifacts_dir: tmp.path().to_path_buf(),
+            cpu_only: true,
+            threads: workers,
+            tokens: 2,
+            bands: workers,
+            ..Default::default()
+        };
+        let (_, built) = common::build(&program, &cfg);
+        assert_eq!(built.plan.bands, workers, "config bands must reach the plan");
+        let _ = built.run(stream.clone()).unwrap(); // warm pool + parked workers
+        let m = bench.run(&format!("sw-pipeline {workers} worker(s) x {workers} band(s)"), || {
+            built.run(stream.clone()).unwrap()
+        });
+        let ms = m.mean_ms() / frames as f64;
+        // the same plan through the platform model: deterministic, and the
+        // banded cost model makes the projection machine-independent
+        let sim = simulate(&built.plan, 64, workers, 2);
+        let sim_ms = sim.frame_interval_ns as f64 / 1e6;
+        println!(
+            "  workers={workers} bands={workers}: measured {ms:.3} ms/frame, simulated interval {sim_ms:.3} ms"
+        );
+        measured.push((workers, ms));
+        simulated.push((workers, sim_ms));
+        all.push(m);
+    }
+
+    let base = measured[0].1;
+    let sim_base = simulated[0].1;
+    println!();
+    for ((workers, ms), (_, sim_ms)) in measured.iter().zip(&simulated) {
+        println!(
+            "workers={workers}: measured x{:.2}, simulated x{:.2} vs 1-worker baseline",
+            base / ms,
+            sim_base / sim_ms
+        );
+    }
+
+    let mut extras: Vec<(String, f64)> = vec![
+        ("height".into(), h as f64),
+        ("width".into(), w as f64),
+        ("frames".into(), frames as f64),
+        // the headline trajectory number: the banded multi-worker run
+        ("sw_pipeline_ms_per_frame".into(), measured.last().expect("swept").1),
+    ];
+    for &(workers, ms) in &measured {
+        extras.push((format!("ms_per_frame_workers{workers}"), ms));
+        extras.push((format!("fps_per_core_workers{workers}"), 1e3 / (ms * workers as f64)));
+        extras.push((format!("band_speedup_workers{workers}"), base / ms));
+    }
+    for &(workers, sim_ms) in &simulated {
+        extras.push((format!("sim_ms_per_frame_workers{workers}"), sim_ms));
+        extras.push((format!("sim_band_speedup_workers{workers}"), sim_base / sim_ms));
+    }
+    let extra_refs: Vec<(&str, f64)> = extras.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    write_bench_json("band_scaling", &all, &extra_refs).expect("write BENCH_band_scaling.json");
+}

@@ -130,6 +130,11 @@ pub struct Config {
     pub threads: usize,
     /// Token-pool depth (in-flight frames); double buffering needs >= 2.
     pub tokens: usize,
+    /// Intra-frame row-band count: software stages shard their stencil
+    /// interiors into this many bands across scoped worker threads
+    /// ([`crate::swlib::banding`]).  1 = off.  Tokens trade throughput
+    /// *across* frames; bands trade latency *within* one.
+    pub bands: usize,
     /// Partition policy.
     pub policy: PartitionPolicy,
     /// Artifact/database directory.
@@ -153,6 +158,7 @@ impl Default for Config {
         Self {
             threads: 2,
             tokens: 4,
+            bands: 1,
             policy: PartitionPolicy::Paper,
             artifacts_dir: PathBuf::from("artifacts"),
             trace_frames: 3,
@@ -178,6 +184,7 @@ impl Config {
         const KNOWN: &[&str] = &[
             "threads",
             "tokens",
+            "bands",
             "policy",
             "artifacts_dir",
             "trace_frames",
@@ -207,6 +214,9 @@ impl Config {
         }
         if let Some(v) = doc.get_usize("tokens") {
             cfg.tokens = v;
+        }
+        if let Some(v) = doc.get_usize("bands") {
+            cfg.bands = v.max(1);
         }
         if let Some(v) = doc.get_str("policy") {
             cfg.policy = PartitionPolicy::parse(v)?;
@@ -265,13 +275,14 @@ impl Config {
     /// Serialize to TOML.
     pub fn to_toml(&self) -> String {
         let mut s = format!(
-            "threads = {}\ntokens = {}\npolicy = \"{}\"\nartifacts_dir = \"{}\"\n\
+            "threads = {}\ntokens = {}\nbands = {}\npolicy = \"{}\"\nartifacts_dir = \"{}\"\n\
              trace_frames = {}\ncpu_only = {}\ninclude_disabled_modules = {}\n\
              \n[serve]\nworkers = {}\nmax_sessions = {}\nqueue_depth = {}\n\
              \n[tune]\nbudget = {}\nsim_frames = {}\nmeasure_frames = {}\n\
              top_k = {}\nmax_tokens = {}\n",
             self.threads,
             self.tokens,
+            self.bands,
             self.policy.as_str(),
             self.artifacts_dir.display(),
             self.trace_frames,
@@ -386,6 +397,17 @@ mod tests {
     fn unknown_serve_key_rejected() {
         let doc = TomlDoc::parse("[serve]\nworkerz = 9\n").unwrap();
         assert!(Config::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn bands_knob_parses_clamps_and_roundtrips() {
+        let c = Config::from_doc(&TomlDoc::parse("bands = 4\n").unwrap()).unwrap();
+        assert_eq!(c.bands, 4);
+        // 0 clamps to 1 (off) rather than dividing frames into nothing
+        let c0 = Config::from_doc(&TomlDoc::parse("bands = 0\n").unwrap()).unwrap();
+        assert_eq!(c0.bands, 1);
+        let back = Config::from_doc(&TomlDoc::parse(&c.to_toml()).unwrap()).unwrap();
+        assert_eq!(back, c);
     }
 
     #[test]

@@ -158,8 +158,13 @@ pub fn attribute(events: &[TraceEvent], stage_names: &[String]) -> Attribution {
                 acc.egress = Some(acc.egress.map_or(ev.ts_ns, |t| t.max(ev.ts_ns)));
             }
             EventKind::FabricAcquire => acc.fabric_ns += ev.dur_ns,
-            // pool traffic is not on any single frame's critical path
-            EventKind::PoolHit | EventKind::PoolMiss | EventKind::PoolDowncycle => {}
+            // pool traffic is not on any single frame's critical path;
+            // band spans nest inside a stage span that already carries
+            // the full service time (counting both would double it)
+            EventKind::PoolHit
+            | EventKind::PoolMiss
+            | EventKind::PoolDowncycle
+            | EventKind::BandSpan => {}
         }
     }
 

@@ -85,6 +85,23 @@ fn event_json(g: &ChromeGroup, ev: &TraceEvent) -> Json {
                 ),
             ])
         }
+        EventKind::BandSpan => Json::obj(vec![
+            ("name", Json::Str(format!("band {}", ev.arg))),
+            ("cat", Json::Str("band".into())),
+            ("ph", Json::Str("X".into())),
+            ("ts", us(ev.ts_ns)),
+            ("dur", us(ev.dur_ns)),
+            ("pid", pid),
+            ("tid", Json::Num(ev.tid as f64)),
+            (
+                "args",
+                Json::obj(vec![
+                    ("frame", Json::Num(frame_seq(ev.frame) as f64)),
+                    ("stage", Json::Num(ev.stage as f64)),
+                    ("band", Json::Num(ev.arg as f64)),
+                ]),
+            ),
+        ]),
         EventKind::FabricAcquire => Json::obj(vec![
             ("name", Json::Str(ev.kind.label().into())),
             ("cat", Json::Str("fabric".into())),

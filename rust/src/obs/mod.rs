@@ -32,6 +32,6 @@ pub use attribution::{attribute, drift, drift_to_json, Attribution, StageAttribu
 pub use chrome::{chrome_trace, ChromeGroup};
 pub use registry::{MetricSource, MetricsRegistry};
 pub use sink::{
-    frame_id, frame_lane, frame_seq, obs_now_ns, EventKind, TraceEvent, TraceSink,
-    DEFAULT_TRACE_CAPACITY,
+    band_ctx, frame_id, frame_lane, frame_seq, obs_now_ns, set_band_ctx, BandCtxGuard, EventKind,
+    TraceEvent, TraceSink, DEFAULT_TRACE_CAPACITY,
 };

@@ -20,8 +20,9 @@
 //!    event and counts the loss, so a long-running server keeps the most
 //!    recent window and [`TraceSink::dropped`] says what it lost.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 /// Ring shards; more than the typical worker count so same-shard
@@ -65,6 +66,12 @@ pub enum EventKind {
     /// A stage executed a frame: `stage`, `dur_ns` = service time,
     /// `arg` = queue-wait ns before service began.
     StageSpan,
+    /// One row band of a banded kernel pass: `stage`, `dur_ns` = band
+    /// service time, `arg` = band index within the pass.  Band spans
+    /// nest inside their frame's [`EventKind::StageSpan`] on the
+    /// timeline; attribution ignores them (the stage span already
+    /// carries the full service time).
+    BandSpan,
     /// Buffer pool served an acquire from the exact class (`arg` = elems).
     PoolHit,
     /// Buffer pool had to allocate (`arg` = elems).
@@ -85,6 +92,7 @@ impl EventKind {
     pub fn label(&self) -> &'static str {
         match self {
             EventKind::StageSpan => "stage",
+            EventKind::BandSpan => "band",
             EventKind::PoolHit => "pool.hit",
             EventKind::PoolMiss => "pool.miss",
             EventKind::PoolDowncycle => "pool.downcycle",
@@ -263,6 +271,24 @@ impl TraceSink {
         });
     }
 
+    /// Record one row band's span of a banded kernel pass (`arg` =
+    /// band index).  Called from the band worker that ran it, so `tid`
+    /// puts each band on its own track under the frame's stage span.
+    pub fn band_span(&self, frame: u64, stage: u32, band: u64, ts_ns: u64, dur_ns: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.record(TraceEvent {
+            kind: EventKind::BandSpan,
+            ts_ns,
+            dur_ns,
+            frame,
+            stage,
+            tid: thread_tag() as u32,
+            arg: band,
+        });
+    }
+
     /// Record an instant event stamped now.
     pub fn instant(&self, kind: EventKind, frame: u64, arg: u64) {
         if !self.is_enabled() {
@@ -305,6 +331,39 @@ impl TraceSink {
         out.sort_by_key(|e| e.ts_ns);
         out
     }
+}
+
+thread_local! {
+    /// Trace context a banded kernel pass records its band spans under:
+    /// `(sink, frame, stage)` of the stage execution currently running
+    /// on this worker thread.  Set by the token runtime around
+    /// `StageFilter::apply`; read once by the banding coordinator (band
+    /// workers are fresh scoped threads with no TLS inheritance, so the
+    /// context is captured before spawning).
+    static BAND_CTX: RefCell<Option<(Arc<TraceSink>, u64, u32)>> = const { RefCell::new(None) };
+}
+
+/// RAII restore for [`set_band_ctx`].
+pub struct BandCtxGuard {
+    prev: Option<(Arc<TraceSink>, u64, u32)>,
+}
+
+impl Drop for BandCtxGuard {
+    fn drop(&mut self) {
+        BAND_CTX.with(|c| *c.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install the band trace context for the current thread; the previous
+/// context is restored when the guard drops.
+pub fn set_band_ctx(sink: Arc<TraceSink>, frame: u64, stage: u32) -> BandCtxGuard {
+    let prev = BAND_CTX.with(|c| c.borrow_mut().replace((sink, frame, stage)));
+    BandCtxGuard { prev }
+}
+
+/// The current thread's band trace context, if a stage span is open.
+pub fn band_ctx() -> Option<(Arc<TraceSink>, u64, u32)> {
+    BAND_CTX.with(|c| c.borrow().clone())
 }
 
 #[cfg(test)]

@@ -233,8 +233,14 @@ struct BuiltStage {
     mode: FilterMode,
     tasks: Vec<BoundTaskSpec>,
     /// Task-index groups executed as concurrent branches (one group ==
-    /// plain sequential execution).
+    /// plain sequential execution).  Indices refer to `tasks` (bound
+    /// tasks), not the plan's task list — a fused run is one index.
     branches: Vec<Vec<usize>>,
+    /// Intra-frame row-band count this stage's software kernels shard
+    /// their interiors into ([`crate::swlib::banding`]).  1 = no
+    /// sharding; always 1 for stages touching hardware (the fabric
+    /// streams whole frames).
+    bands: usize,
     /// When the stage is exactly two single-task software branches over
     /// one shared input and the registry carries a matching one-walk
     /// pair kernel: `(first task index, second task index, pair)` — the
@@ -420,7 +426,26 @@ impl StageFilter<FrameEnv> for BuiltStage {
         self.mode
     }
 
+    fn bands(&self) -> usize {
+        // mirror `apply`: fork-join stages never install the band hint,
+        // so reporting the configured count would overstate their
+        // effective worker capacity in the measured stats
+        if self.branches.len() > 1 {
+            1
+        } else {
+            self.bands
+        }
+    }
+
     fn apply(&self, input: FrameEnv) -> Result<FrameEnv> {
+        // intra-frame band schedule: kernels running under this guard
+        // read the hint and shard their interiors across scoped worker
+        // threads.  Fork-join stages spend their parallelism on branches
+        // instead — the hint stays 1 there (branch threads are fresh and
+        // default to 1 anyway, so setting it would only band the branch
+        // that happens to run on the coordinating thread).
+        let _bands = (self.branches.len() <= 1)
+            .then(|| crate::swlib::banding::set_bands(self.bands));
         let mut env = input;
         if self.branches.len() <= 1 {
             for task in &self.tasks {
@@ -723,6 +748,7 @@ pub fn plan_pipeline(
         program: ir.program.clone(),
         threads: cfg.threads,
         tokens: cfg.tokens,
+        bands: cfg.bands.max(1),
         // linear chains store no explicit edges: their serialized plans
         // stay byte-identical to the pre-DAG format
         edges: if ir.is_chain() { Vec::new() } else { step_edges },
@@ -867,114 +893,154 @@ pub fn instantiate(
     let mut fi = 0usize;
     for (si, stage) in plan.stages.iter().enumerate() {
         let fork_join = stage_branches[si].len() > 1;
-        let mut bound_tasks = Vec::with_capacity(stage.tasks.len());
-        let mut ti = 0usize;
-        while ti < stage.tasks.len() {
-            let task = &stage.tasks[ti];
-            // generalized SW-chain fusion: a maximal run of chained
-            // software tasks inside a sequential stage binds as ONE
-            // composed callable.  A task extends the run when it is
-            // software, provenance-intact (`Registry::link_intact` — a
-            // re-registered constituent breaks the links that touch it,
-            // splitting the run, so overrides always run un-fused), its
-            // only input is the previous task's output, and that
-            // intermediate has no other consumer (nor is the terminal
-            // output) — then skipping its trip through the frame
-            // environment is unobservable.  `Registry::compose_chain`
-            // substitutes a registered mega-kernel (e.g. the
-            // gray→response Harris kernel) when one covers the exact run.
-            let fusable = |t: &TaskSpec| -> bool {
-                matches!(t.kind, TaskKind::Sw) && registry.link_intact(&t.symbol)
-            };
-            let mut run_len = 1usize;
-            if !fork_join && fusable(task) {
-                while ti + run_len < stage.tasks.len() {
-                    let next = &stage.tasks[ti + run_len];
-                    let link = flat[fi + run_len - 1].out_step;
-                    let next_unary = registry
-                        .resolve(&next.symbol)
-                        .map(|e| e.arity == 1)
-                        .unwrap_or(false);
-                    if fusable(next)
-                        && next_unary
-                        && all_args[fi + run_len] == [Source::Step(link)]
-                        && consumer_uses(link) == 1
-                        && link != terminal_step
-                    {
-                        run_len += 1;
-                    } else {
-                        break;
+        let fi_base = fi;
+        // generalized SW-chain fusion, per fork-join branch: a maximal
+        // run of chained software tasks *within one branch* binds as ONE
+        // composed callable.  A task extends the run when it is software,
+        // provenance-intact (`Registry::link_intact` — a re-registered
+        // constituent breaks the links that touch it, splitting the run,
+        // so overrides always run un-fused), its only input is the
+        // previous task's output, and that intermediate has no other
+        // consumer (nor is the terminal output) — then skipping its trip
+        // through the frame environment is unobservable.  On a
+        // single-branch (sequential) stage this degenerates to the
+        // adjacent-task scan; on a fork-join stage each branch is scanned
+        // independently, so a chain inside one branch fuses even while
+        // sibling branches run beside it ([`StageSpec::fusable_link_pairs`]
+        // is the planner's model of exactly this rule).
+        // `Registry::compose_chain` substitutes a registered mega-kernel
+        // (e.g. the gray→response Harris kernel) when one covers the
+        // exact run.
+        let fusable = |t: &TaskSpec| -> bool {
+            matches!(t.kind, TaskKind::Sw) && registry.link_intact(&t.symbol)
+        };
+        let mut runs: Vec<Vec<usize>> = Vec::new();
+        for branch in &stage_branches[si] {
+            let mut k = 0usize;
+            while k < branch.len() {
+                let mut run = vec![branch[k]];
+                if fusable(&stage.tasks[branch[k]]) {
+                    while k + run.len() < branch.len() {
+                        let tn = branch[k + run.len()];
+                        let link = flat[fi_base + *run.last().expect("non-empty")].out_step;
+                        let next = &stage.tasks[tn];
+                        let next_unary = registry
+                            .resolve(&next.symbol)
+                            .map(|e| e.arity == 1)
+                            .unwrap_or(false);
+                        if fusable(next)
+                            && next_unary
+                            && all_args[fi_base + tn] == [Source::Step(link)]
+                            && consumer_uses(link) == 1
+                            && link != terminal_step
+                        {
+                            run.push(tn);
+                        } else {
+                            break;
+                        }
                     }
                 }
+                k += run.len();
+                runs.push(run);
             }
-            if run_len >= 2 {
-                let symbols: Vec<&str> = (0..run_len)
-                    .map(|k| stage.tasks[ti + k].symbol.as_str())
-                    .collect();
+        }
+        // bind in first-constituent order so surviving arguments keep
+        // their flat-order positions — the move-aware prefetch relies on
+        // every clone-use of a buffer preceding its final, moving use
+        runs.sort_by_key(|r| r[0]);
+        let mut bound_tasks = Vec::with_capacity(stage.tasks.len());
+        let mut bound_of: HashMap<usize, usize> = HashMap::new();
+        for run in &runs {
+            let fi0 = fi_base + run[0];
+            if run.len() >= 2 {
+                let symbols: Vec<&str> =
+                    run.iter().map(|&ti| stage.tasks[ti].symbol.as_str()).collect();
                 let entry = registry.compose_chain(&symbols)?;
-                let args: Vec<ArgRef> = all_args[fi]
+                let args: Vec<ArgRef> = all_args[fi0]
                     .iter()
                     .enumerate()
                     .map(|(ai, src)| ArgRef {
                         source: *src,
-                        take: last_occurrence.get(src) == Some(&(fi, ai)),
+                        take: last_occurrence.get(src) == Some(&(fi0, ai)),
                     })
                     .collect();
                 if entry.arity == args.len() {
+                    for &ti in run {
+                        bound_of.insert(ti, bound_tasks.len());
+                    }
                     bound_tasks.push(BoundTaskSpec {
                         symbol: entry.symbol.clone(),
                         bound: BoundTask::Sw(entry),
                         args,
-                        out_step: flat[fi + run_len - 1].out_step,
+                        out_step: flat[fi_base + *run.last().expect("non-empty")].out_step,
                     });
-                    fi += run_len;
-                    ti += run_len;
                     continue;
                 }
             }
-            let bound = match &task.kind {
-                TaskKind::Sw => BoundTask::Sw(registry.resolve(&task.symbol)?.clone()),
-                TaskKind::Hw { artifact, .. } => {
-                    BoundTask::Hw(loaded[artifact.as_str()].clone())
+            // singleton run (or a composed entry whose arity cannot match
+            // the wiring): bind each task on its own
+            for &ti in run {
+                let task = &stage.tasks[ti];
+                let fit = fi_base + ti;
+                let bound = match &task.kind {
+                    TaskKind::Sw => BoundTask::Sw(registry.resolve(&task.symbol)?.clone()),
+                    TaskKind::Hw { artifact, .. } => {
+                        BoundTask::Hw(loaded[artifact.as_str()].clone())
+                    }
+                };
+                let args: Vec<ArgRef> = all_args[fit]
+                    .iter()
+                    .enumerate()
+                    .map(|(ai, src)| ArgRef {
+                        source: *src,
+                        // the final occurrence moves the buffer out of the
+                        // environment — on the sequential path directly, on
+                        // the fork-join path via the coordinating thread's
+                        // move-aware prefetch
+                        take: last_occurrence.get(src) == Some(&(fit, ai)),
+                    })
+                    .collect();
+                // arity must match the wiring exactly — a collapsed or
+                // missing edge (e.g. two external inputs deduplicated by
+                // the tracer) would otherwise call the function with the
+                // wrong argument count at runtime
+                if let BoundTask::Sw(entry) = &bound {
+                    if entry.arity != args.len() {
+                        return Err(CourierError::Dag(format!(
+                            "plan {}: {} takes {} arguments but the dataflow wires {} \
+                             (multi-external-input flows are unsupported)",
+                            plan.program,
+                            task.symbol,
+                            entry.arity,
+                            args.len()
+                        )));
+                    }
                 }
-            };
-            let args: Vec<ArgRef> = all_args[fi]
-                .iter()
-                .enumerate()
-                .map(|(ai, src)| ArgRef {
-                    source: *src,
-                    // the final occurrence moves the buffer out of the
-                    // environment — on the sequential path directly, on
-                    // the fork-join path via the coordinating thread's
-                    // move-aware prefetch
-                    take: last_occurrence.get(src) == Some(&(fi, ai)),
-                })
-                .collect();
-            // arity must match the wiring exactly — a collapsed or
-            // missing edge (e.g. two external inputs deduplicated by the
-            // tracer) would otherwise call the function with the wrong
-            // argument count at runtime
-            if let BoundTask::Sw(entry) = &bound {
-                if entry.arity != args.len() {
-                    return Err(CourierError::Dag(format!(
-                        "plan {}: {} takes {} arguments but the dataflow wires {} \
-                         (multi-external-input flows are unsupported)",
-                        plan.program,
-                        task.symbol,
-                        entry.arity,
-                        args.len()
-                    )));
-                }
+                bound_of.insert(ti, bound_tasks.len());
+                bound_tasks.push(BoundTaskSpec {
+                    bound,
+                    args,
+                    out_step: flat[fit].out_step,
+                    symbol: task.symbol.clone(),
+                });
             }
-            bound_tasks.push(BoundTaskSpec {
-                bound,
-                args,
-                out_step: flat[fi].out_step,
-                symbol: task.symbol.clone(),
-            });
-            fi += 1;
-            ti += 1;
         }
+        fi += stage.tasks.len();
+        // remap the branch groups from stage-task indices to bound-task
+        // indices — a fused run collapses to the one index it bound as
+        let branches: Vec<Vec<usize>> = stage_branches[si]
+            .iter()
+            .map(|b| {
+                let mut v = Vec::with_capacity(b.len());
+                for ti in b {
+                    let bi = bound_of[ti];
+                    if !v.contains(&bi) {
+                        v.push(bi);
+                    }
+                }
+                v
+            })
+            .collect();
 
         // buffers that die here: last consumed in this stage, or produced
         // here and never consumed at all (dead branches) — never the
@@ -1001,10 +1067,10 @@ pub fn instantiate(
         // — gated on pair provenance (re-registering either constituent
         // disables the substitution instead of bypassing the override)
         let sibling_pair = if fork_join
-            && stage_branches[si].len() == 2
-            && stage_branches[si].iter().all(|b| b.len() == 1)
+            && branches.len() == 2
+            && branches.iter().all(|b| b.len() == 1)
         {
-            let (a, b) = (stage_branches[si][0][0], stage_branches[si][1][0]);
+            let (a, b) = (branches[0][0], branches[1][0]);
             let sw_unary_same_input = matches!(bound_tasks[a].bound, BoundTask::Sw(_))
                 && matches!(bound_tasks[b].bound, BoundTask::Sw(_))
                 && bound_tasks[a].args.len() == 1
@@ -1043,7 +1109,10 @@ pub fn instantiate(
                 FilterMode::Parallel
             },
             tasks: bound_tasks,
-            branches: stage_branches[si].clone(),
+            branches,
+            // hardware stages stream whole frames through the fabric;
+            // only all-software stages shard their interiors
+            bands: if stage.has_hw() { 1 } else { plan.bands.max(1) },
             sibling_pair,
             drop_after,
             drop_input,
@@ -1375,6 +1444,7 @@ mod tests {
             program: built.plan.program.clone(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: built.plan.edges.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
@@ -1422,6 +1492,143 @@ mod tests {
     }
 
     #[test]
+    fn sw_chain_inside_fork_join_branch_fuses() {
+        // one fork-join stage whose second branch is a two-task chain:
+        // the in-branch run must bind as a composed callable (the old
+        // planner skipped fusion entirely as soon as a stage had more
+        // than one branch), the sibling branch must stay separate, and
+        // the output must remain bit-exact
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = crate::app::parse_program(
+            "program fjChain\n\
+             input frame 16x20x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call ix = cv::Sobel(gray)\n\
+             call blur = cv::GaussianBlur(gray)\n\
+             call edge = cv::Laplacian(blur)\n\
+             call resp = cv::harrisResponse(ix, edge)\n\
+             call out = cv::convertScaleAbs(resp)\n\
+             output out\n",
+        )
+        .unwrap();
+        let built = build(&ir_of(&prog, 16, 20), &db, &rt, &registry, &cfg).unwrap();
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        assert_eq!(tasks.len(), 6);
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 4,
+            bands: 1,
+            edges: built.plan.edges.clone(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
+                StageSpec { index: 1, serial: false, tasks: tasks[1..4].to_vec() },
+                StageSpec { index: 2, serial: true, tasks: tasks[4..6].to_vec() },
+            ],
+        };
+        regrouped.validate_dag().unwrap();
+        let edges = regrouped.effective_edges();
+        assert_eq!(
+            regrouped.stages[1].branches(&edges),
+            vec![vec![0], vec![1, 2]],
+            "Sobel beside the blur→laplacian chain"
+        );
+        let fj = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        assert_eq!(
+            fj.pipeline.stage_labels()[1],
+            "cv::Sobel || cv::GaussianBlur+cv::Laplacian",
+            "{:?}",
+            fj.pipeline.stage_labels()
+        );
+        let interp = crate::app::Interpreter::new(
+            prog,
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        for seed in 0..3u64 {
+            let frame = synth::noise_rgb(16, 20, seed);
+            let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+            assert_eq!(fj.process_one(frame).unwrap(), want, "seed {seed}");
+        }
+        // streamed too (pool-backed steady state, branches on threads)
+        let frames: Vec<Mat> = (0..6).map(|s| synth::noise_rgb(16, 20, 30 + s)).collect();
+        let (outs, _) = fj.run(frames.clone()).unwrap();
+        for (i, f) in frames.into_iter().enumerate() {
+            assert_eq!(outs[i], interp.run(&[f]).unwrap().remove(0), "frame {i}");
+        }
+    }
+
+    #[test]
+    fn in_branch_fusion_respects_provenance_overrides() {
+        // re-registering a constituent of the in-branch chain must split
+        // the run (no composed binding) and really run the override
+        let (_tmp, db, rt, mut registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = crate::app::parse_program(
+            "program fjChainSplit\n\
+             input frame 14x18x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call ix = cv::Sobel(gray)\n\
+             call blur = cv::GaussianBlur(gray)\n\
+             call edge = cv::Laplacian(blur)\n\
+             call resp = cv::harrisResponse(ix, edge)\n\
+             call out = cv::convertScaleAbs(resp)\n\
+             output out\n",
+        )
+        .unwrap();
+        let built = build(&ir_of(&prog, 14, 18), &db, &rt, &registry, &cfg).unwrap();
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 4,
+            bands: 1,
+            edges: built.plan.edges.clone(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
+                StageSpec { index: 1, serial: false, tasks: tasks[1..4].to_vec() },
+                StageSpec { index: 2, serial: true, tasks: tasks[4..6].to_vec() },
+            ],
+        };
+        registry.register(
+            "cv::Laplacian",
+            1,
+            std::sync::Arc::new(|a: &[&Mat]| {
+                let mut m = crate::swlib::imgproc::laplacian(a[0])?;
+                for v in m.as_mut_slice() {
+                    *v += 5.0;
+                }
+                Ok(m)
+            }),
+        );
+        let fj = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        assert_eq!(
+            fj.pipeline.stage_labels()[1],
+            "cv::Sobel || cv::GaussianBlur || cv::Laplacian",
+            "{:?}",
+            fj.pipeline.stage_labels()
+        );
+        let frame = synth::noise_rgb(14, 18, 6);
+        let gray = registry.call("cv::cvtColor", &[&frame]).unwrap();
+        let ix = registry.call("cv::Sobel", &[&gray]).unwrap();
+        let blur = registry.call("cv::GaussianBlur", &[&gray]).unwrap();
+        let edge = registry.call("cv::Laplacian", &[&blur]).unwrap();
+        let resp = registry.call("cv::harrisResponse", &[&ix, &edge]).unwrap();
+        let want = registry.call("cv::convertScaleAbs", &[&resp]).unwrap();
+        assert_eq!(fj.process_one(frame).unwrap(), want, "the override must run");
+    }
+
+    #[test]
     fn consecutive_sw_cvt_harris_fuse_into_mega_kernel() {
         // regroup the CPU-only Harris chain so cvtColor and cornerHarris
         // share a stage: the builder must bind them as the fused
@@ -1440,6 +1647,7 @@ mod tests {
             program: built.plan.program.clone(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: built.plan.edges.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
@@ -1499,6 +1707,7 @@ mod tests {
             program: built.plan.program.clone(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: built.plan.edges.clone(),
             stages: vec![StageSpec { index: 0, serial: true, tasks }],
         };
@@ -1554,6 +1763,7 @@ mod tests {
             program: built.plan.program.clone(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: built.plan.edges.clone(),
             stages: vec![StageSpec { index: 0, serial: true, tasks }],
         };
@@ -1603,6 +1813,7 @@ mod tests {
             program: built.plan.program.clone(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: built.plan.edges.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
@@ -1663,6 +1874,7 @@ mod tests {
             program: built.plan.program.clone(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: built.plan.edges.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
@@ -1704,6 +1916,7 @@ mod tests {
             program: built.plan.program.clone(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: built.plan.edges.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },

@@ -61,6 +61,15 @@ pub type PlanEdge = (Option<usize>, usize);
 /// tuner's search prefers partitions that enable fusion.
 pub const FUSION_LINK_SAVING: f64 = 0.10;
 
+/// Modeled per-extra-band cost of row-band sharding a software stage:
+/// each band beyond the first re-reads a halo row pair, re-warms its
+/// cache working set, and pays scoped-thread spawn/join — charged as
+/// this fraction of the stage's unsharded service time per extra
+/// effective band.  The simulator divides a banded stage's cost by its
+/// effective parallelism and adds this back, so the tuner's bands-axis
+/// search stops where halo overhead outruns the speedup.
+pub const BAND_HALO_OVERHEAD: f64 = 0.02;
+
 /// One pipeline stage: consecutive tasks executed by one filter.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StageSpec {
@@ -127,65 +136,67 @@ impl StageSpec {
         groups
     }
 
-    /// First-task indices of the chained software links inside this
-    /// stage a fusion planner can collapse: consecutive task pairs where
-    /// both tasks are software, the consumer's only input is the
-    /// producer's output, and that intermediate has no other consumer
-    /// anywhere in `edges` (mirrors the builder's run detection minus
-    /// registry provenance — the model assumes standard kernels).
-    /// `edges` must be the plan's full effective edge set.  A fork-join
-    /// stage (more than one branch) reports none: the builder only
-    /// chain-fuses sequential stages, so crediting links inside branches
-    /// would model a saving deploy cannot realize.
-    fn fusable_link_starts(&self, edges: &[PlanEdge]) -> Vec<usize> {
-        if self.branches(edges).len() > 1 {
-            return Vec::new();
+    /// Task-index pairs of the chained software links inside this stage
+    /// a fusion planner can collapse: task pairs *consecutive within one
+    /// fork-join branch* where both tasks are software, the consumer's
+    /// only input is the producer's output, and that intermediate has no
+    /// other consumer anywhere in `edges` (mirrors the builder's
+    /// per-branch run detection minus registry provenance — the model
+    /// assumes standard kernels).  `edges` must be the plan's full
+    /// effective edge set.  On a single-branch (linear) stage this is
+    /// exactly the adjacent-task scan; on a fork-join stage each branch
+    /// is scanned independently, so a chained pair inside one branch
+    /// earns its link even while siblings run beside it.
+    fn fusable_link_pairs(&self, edges: &[PlanEdge]) -> Vec<(usize, usize)> {
+        let mut pairs = Vec::new();
+        for branch in self.branches(edges) {
+            for w in branch.windows(2) {
+                let (i, j) = (w[0], w[1]);
+                let (a, b) = (&self.tasks[i], &self.tasks[j]);
+                if !matches!(a.kind, TaskKind::Sw) || !matches!(b.kind, TaskKind::Sw) {
+                    continue;
+                }
+                let Some(&out) = a.covers.last() else { continue };
+                // every edge feeding b from outside b's own covers
+                let incoming: Vec<Option<usize>> = edges
+                    .iter()
+                    .filter(|(p, c)| {
+                        b.covers.contains(c)
+                            && match p {
+                                Some(p) => !b.covers.contains(p),
+                                None => true,
+                            }
+                    })
+                    .map(|(p, _)| *p)
+                    .collect();
+                if incoming != [Some(out)] {
+                    continue;
+                }
+                // the intermediate must have exactly one consumer edge
+                if edges.iter().filter(|(p, _)| *p == Some(out)).count() == 1 {
+                    pairs.push((i, j));
+                }
+            }
         }
-        let mut starts = Vec::new();
-        for (i, w) in self.tasks.windows(2).enumerate() {
-            let (a, b) = (&w[0], &w[1]);
-            if !matches!(a.kind, TaskKind::Sw) || !matches!(b.kind, TaskKind::Sw) {
-                continue;
-            }
-            let Some(&out) = a.covers.last() else { continue };
-            // every edge feeding b from outside b's own covers
-            let incoming: Vec<Option<usize>> = edges
-                .iter()
-                .filter(|(p, c)| {
-                    b.covers.contains(c)
-                        && match p {
-                            Some(p) => !b.covers.contains(p),
-                            None => true,
-                        }
-                })
-                .map(|(p, _)| *p)
-                .collect();
-            if incoming != [Some(out)] {
-                continue;
-            }
-            // the intermediate must have exactly one consumer edge
-            if edges.iter().filter(|(p, _)| *p == Some(out)).count() == 1 {
-                starts.push(i);
-            }
-        }
-        starts
+        pairs
     }
 
     /// Number of collapsible software links in this stage — see
-    /// [`Self::fusable_link_starts`] for the exact criteria.
+    /// [`Self::fusable_link_pairs`] for the exact criteria.
     pub fn fusable_links(&self, edges: &[PlanEdge]) -> usize {
-        self.fusable_link_starts(edges).len()
+        self.fusable_link_pairs(edges).len()
     }
 
     /// Estimated service-time credit from fusing this stage's chained
     /// software links, ns: [`FUSION_LINK_SAVING`] of the cheaper endpoint
     /// per link (the intermediate's skipped environment round-trip).
-    /// Zero for fork-join stages, like [`Self::fusable_links`].
+    /// Links inside fork-join branches count, matching the builder's
+    /// per-branch fusion.
     pub fn fusion_credit_ns(&self, edges: &[PlanEdge]) -> u64 {
-        self.fusable_link_starts(edges)
+        self.fusable_link_pairs(edges)
             .into_iter()
-            .map(|i| {
-                let link_min = self.tasks[i].est_ns.min(self.tasks[i + 1].est_ns);
+            .map(|(i, j)| {
+                let link_min = self.tasks[i].est_ns.min(self.tasks[j].est_ns);
                 (link_min as f64 * FUSION_LINK_SAVING) as u64
             })
             .sum()
@@ -219,6 +230,12 @@ pub struct StagePlan {
     pub threads: usize,
     /// Token-pool depth.
     pub tokens: usize,
+    /// Row bands per frame for parallel software stages (1 = unsharded).
+    /// Tokens buy *inter*-frame parallelism (frames in flight), bands
+    /// buy *intra*-frame parallelism (one frame's rows across cores) —
+    /// the tuner trades the two against each other.  Hardware stages
+    /// ignore it.
+    pub bands: usize,
     /// Explicit dataflow edges for non-linear flows.  **Empty means the
     /// implicit linear chain** over the flattened cover sequence (the
     /// pre-DAG wiring), which keeps linear plans' JSON byte-identical;
@@ -422,6 +439,11 @@ impl StagePlan {
             ("threads", Json::Num(self.threads as f64)),
             ("tokens", Json::Num(self.tokens as f64)),
         ];
+        // unsharded plans omit the field: their serialization must stay
+        // byte-identical to the pre-banding format
+        if self.bands != 1 {
+            members.push(("bands", Json::Num(self.bands as f64)));
+        }
         // linear chains omit the field entirely: their serialization must
         // stay byte-identical to the pre-DAG format
         if !self.edges.is_empty() {
@@ -509,6 +531,10 @@ impl StagePlan {
             program: v.req("program")?.as_str()?.to_string(),
             threads: v.req("threads")?.as_usize()?,
             tokens: v.req("tokens")?.as_usize()?,
+            bands: match v.get("bands") {
+                Some(b) => b.as_usize()?.max(1),
+                None => 1,
+            },
             edges,
             stages,
         })
@@ -524,6 +550,7 @@ pub(crate) mod tests {
             program: "cornerHarris_Demo".into(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: Vec::new(),
             stages: vec![
                 StageSpec {
@@ -624,6 +651,7 @@ pub(crate) mod tests {
             program: "harrisDag_Demo".into(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: vec![
                 (None, 0),
                 (Some(0), 1),
@@ -668,6 +696,7 @@ pub(crate) mod tests {
             program: "t".into(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: Vec::new(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: vec![sw(vec![0], 10), sw(vec![1], 30)] },
@@ -699,12 +728,14 @@ pub(crate) mod tests {
         assert_eq!(dag.stages[1].fusable_links(&edges), 0);
         assert_eq!(dag.stages[2].fusable_links(&edges), 1);
 
-        // a fork-join stage earns NO credit even when one of its branches
-        // holds a chained pair — the builder only fuses sequential stages
+        // a fork-join stage earns credit for the chained pair *inside* a
+        // branch (the builder fuses per branch) — but never across the
+        // sibling boundary
         let fj = StagePlan {
             program: "t".into(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: vec![(None, 0), (Some(0), 1), (Some(1), 2), (Some(0), 3)],
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: vec![sw(vec![0], 5)] },
@@ -717,8 +748,9 @@ pub(crate) mod tests {
         };
         let edges = fj.effective_edges();
         assert_eq!(fj.stages[1].branches(&edges).len(), 2, "chain branch + sibling");
-        assert_eq!(fj.stages[1].fusable_links(&edges), 0);
-        assert_eq!(fj.stages[1].fusion_credit_ns(&edges), 0);
+        assert_eq!(fj.stages[1].fusable_links(&edges), 1, "the in-branch 1->2 link counts");
+        // credit: 10% of the cheaper endpoint of the one in-branch link
+        assert_eq!(fj.stages[1].fusion_credit_ns(&edges), 1_000_000);
     }
 
     #[test]
@@ -726,6 +758,18 @@ pub(crate) mod tests {
         let p = demo_plan();
         assert!(p.is_chain());
         assert!(!p.to_json().contains("edges"), "chain plans must keep the pre-DAG format");
+        assert!(!p.to_json().contains("bands"), "bands=1 must keep the pre-banding format");
+    }
+
+    #[test]
+    fn banded_plan_json_roundtrips() {
+        let mut p = demo_plan();
+        p.bands = 4;
+        let s = p.to_json();
+        assert!(s.contains("\"bands\""));
+        let back = StagePlan::from_json(&s).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.bands, 4);
     }
 
     #[test]

@@ -156,6 +156,28 @@ impl BufferPool {
         Mat::zeros(shape)
     }
 
+    /// Take band scratch shaped `band_shape`, but drawn from (and
+    /// destined to return to) the **parent frame's** capacity class.
+    ///
+    /// A banded kernel that acquired plain `band_shape` buffers would
+    /// mint one shelf per band count (`rows/2`, `rows/4`, ... element
+    /// classes): retuning the band axis leaks a shelf per setting, and
+    /// every class change starts with fresh misses.  Acquiring the
+    /// *parent* class and carrying it at the band shape means every band
+    /// count shares one shelf, and [`Self::release`] (which keys by
+    /// storage capacity, not carried shape) sends the scratch straight
+    /// back to it.  Degenerate `band_shape` larger than `parent_shape`
+    /// falls back to a plain acquire of the band shape.
+    pub fn acquire_band_scratch(&self, parent_shape: &[usize], band_shape: &[usize]) -> Mat {
+        let parent_n: usize = parent_shape.iter().product();
+        let band_n: usize = band_shape.iter().product();
+        if band_n > parent_n {
+            return self.acquire(band_shape);
+        }
+        let storage = self.acquire(parent_shape).into_vec();
+        Mat::from_storage(band_shape, storage)
+    }
+
     /// Take a pooled copy of `src` (acquire + memcpy — the pool-aware
     /// replacement for `Mat::clone` on the frame path).  Counted in
     /// `stats().cloned`, which is how the move-aware fork-join tests pin
@@ -297,6 +319,29 @@ mod tests {
             "migrated storage never rejoined its class: 3-channel acquire allocated"
         );
         assert_eq!(big.shape(), &[4, 4, 3]);
+    }
+
+    #[test]
+    fn band_scratch_shares_the_parent_capacity_class() {
+        let pool = BufferPool::new();
+        // warm exactly one full-frame class
+        pool.release(Mat::zeros(&[16, 8]));
+        let warm_misses = pool.stats().misses;
+        // cycle band scratch at several band counts: every acquire must
+        // come from (and return to) the single 128-element class
+        for bands in [2usize, 4, 8] {
+            let rows = 16 / bands;
+            let m = pool.acquire_band_scratch(&[16, 8], &[rows, 8]);
+            assert_eq!(m.shape(), &[rows, 8]);
+            pool.release(m);
+        }
+        assert_eq!(pool.stats().misses, warm_misses, "band scratch minted a new class");
+        assert_eq!(pool.idle(), 1, "all band counts share one shelf");
+        // degenerate oversize band falls back to a plain acquire (larger
+        // than every shelved class, so it must allocate)
+        let big = pool.acquire_band_scratch(&[4, 4], &[32, 8]);
+        assert_eq!(big.len(), 256);
+        assert_eq!(pool.stats().misses, warm_misses + 1);
     }
 
     #[test]

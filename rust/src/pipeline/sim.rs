@@ -21,7 +21,7 @@
 //! model (HW) — the same numbers the Pipeline Generator balanced with, or
 //! the paper's own Table I measurements for the calibration run.
 
-use super::plan::{StagePlan, TaskKind};
+use super::plan::{StagePlan, StageSpec, TaskKind, BAND_HALO_OVERHEAD};
 
 /// Simulation result.
 #[derive(Debug, Clone, PartialEq)]
@@ -34,10 +34,16 @@ pub struct SimResult {
     pub first_frame_ns: u64,
     /// Per-stage busy time, ns.
     pub stage_busy_ns: Vec<u64>,
-    /// Effective worker capacity per stage (1 for serial stages,
-    /// `min(cpu_workers, tokens)` for parallel ones) — the normalizer
-    /// [`SimResult::stage_occupancy`] divides by, mirroring the measured
-    /// [`crate::pipeline::PipelineStats::stage_occupancy`] semantics.
+    /// Effective worker capacity per stage:
+    /// `min(cpu_workers, tokens_eff × bands)` where `tokens_eff` is 1 for
+    /// serial stages (one in-flight frame) and the token-pool size for
+    /// parallel ones, and `bands` is the plan's intra-frame band count
+    /// (1 for hardware stages, which stream whole frames).  This is the
+    /// normalizer [`SimResult::stage_occupancy`] divides by, mirroring
+    /// the measured [`crate::pipeline::PipelineStats::stage_occupancy`]
+    /// semantics — a serial stage sharded into 4 bands really does hold
+    /// up to 4 workers at once, and normalizing by 1 would let its
+    /// occupancy exceed 1.0 and mis-rank the bottleneck.
     pub stage_workers: Vec<usize>,
     /// Frames simulated.
     pub frames: u64,
@@ -86,7 +92,10 @@ pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize
     let stage_ns: Vec<u64> = plan
         .stages
         .iter()
-        .map(|s| s.fork_join_ns(&edges).saturating_sub(s.fusion_credit_ns(&edges)))
+        .map(|s| {
+            let base = s.fork_join_ns(&edges).saturating_sub(s.fusion_credit_ns(&edges));
+            banded_stage_ns(base, s, plan.bands, cpu_workers)
+        })
         .collect();
     // fabric unit id per stage (stages sharing a module serialize on it)
     let mut module_names: Vec<String> = Vec::new();
@@ -213,10 +222,32 @@ pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize
         stage_workers: plan
             .stages
             .iter()
-            .map(|s| if s.serial { 1 } else { cpu_workers.min(tokens).max(1) })
+            .map(|s| {
+                let tokens_eff = if s.serial { 1 } else { tokens };
+                let bands = if s.has_hw() { 1 } else { plan.bands.max(1) };
+                cpu_workers.min(tokens_eff.saturating_mul(bands)).max(1)
+            })
             .collect(),
         frames,
     }
+}
+
+/// Service time of a stage once the deploy-time band schedule shards its
+/// interior across `bands` row bands.  Bands split one frame across
+/// otherwise-idle workers, so the effective intra-frame parallelism is
+/// `min(bands, cpu_workers)`; each extra band re-reads (and for
+/// multi-pass kernels recomputes) halo rows at its seams, charged as
+/// [`BAND_HALO_OVERHEAD`] of the un-banded cost per extra band.
+/// Hardware stages stream whole frames through the fabric and do not
+/// band, so their cost is returned untouched.
+fn banded_stage_ns(cost: u64, stage: &StageSpec, bands: usize, cpu_workers: usize) -> u64 {
+    if bands <= 1 || stage.has_hw() {
+        return cost;
+    }
+    let eff = bands.min(cpu_workers.max(1)).max(1);
+    let sharded = cost as f64 / eff as f64;
+    let halo = cost as f64 * BAND_HALO_OVERHEAD * (eff - 1) as f64;
+    (sharded + halo) as u64
 }
 
 /// Convenience: the paper's calibration plan — Table I's Courier column as
@@ -241,6 +272,7 @@ pub fn paper_table1_plan() -> StagePlan {
         program: "paper_table1".into(),
         threads: 2,
         tokens: 4,
+        bands: 1,
         edges: Vec::new(),
         stages: vec![
             StageSpec {
@@ -279,6 +311,7 @@ mod tests {
             program: "t".into(),
             threads: 2,
             tokens: 4,
+            bands: 1,
             edges: Vec::new(),
             stages: stage_ms
                 .iter()
@@ -392,6 +425,7 @@ mod tests {
             program: "t".into(),
             threads: 1,
             tokens: 1,
+            bands: 1,
             edges: Vec::new(),
             stages: vec![StageSpec {
                 index: 0,
@@ -408,6 +442,7 @@ mod tests {
             program: "t".into(),
             threads: 1,
             tokens: 1,
+            bands: 1,
             edges: Vec::new(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: vec![sw(0, 10)] },
@@ -416,6 +451,46 @@ mod tests {
         };
         let r = simulate(&split, 8, 1, 1);
         assert_eq!(r.frame_interval_ns, 20_000_000);
+    }
+
+    #[test]
+    fn banding_shards_a_frame_across_idle_workers() {
+        // one serial 40 ms SW stage with 4 workers: un-banded, a frame
+        // holds exactly one worker and the other three idle
+        let mut p = plan_of(&[40], true);
+        let base = simulate(&p, 8, 4, 4);
+        assert_eq!(base.frame_interval_ns, 40_000_000);
+        assert_eq!(base.stage_workers, vec![1]);
+
+        // bands=4 shards the interior: 40/4 = 10 ms of work per worker
+        // plus 2% halo recompute per extra band (3 × 0.8 ms) = 12.4 ms
+        p.bands = 4;
+        let banded = simulate(&p, 8, 4, 4);
+        assert_eq!(banded.frame_interval_ns, 12_400_000);
+        // worker accounting follows: min(4 workers, 1 token × 4 bands)
+        assert_eq!(banded.stage_workers, vec![4]);
+        // ...which keeps occupancy normalized to [0, 1] — dividing by the
+        // band-blind count of 1 would report 1.0 here and mis-rank the
+        // stage against genuinely saturated ones
+        let occ = banded.stage_occupancy(0);
+        assert!((0.24..0.26).contains(&occ), "{occ}");
+
+        // more bands than workers cannot shard further: eff = min(8, 4)
+        p.bands = 8;
+        let over = simulate(&p, 8, 4, 4);
+        assert_eq!(over.frame_interval_ns, 12_400_000);
+        assert_eq!(over.stage_workers, vec![4]);
+    }
+
+    #[test]
+    fn hardware_stages_ignore_the_band_schedule() {
+        // every stage of the calibration plan touches the fabric or is
+        // dominated by it — banding must leave the simulation untouched
+        let base = simulate(&paper_table1_plan(), 16, 2, 4);
+        let mut banded_plan = paper_table1_plan();
+        banded_plan.bands = 4;
+        let banded = simulate(&banded_plan, 16, 2, 4);
+        assert_eq!(base, banded);
     }
 
     #[test]
@@ -443,6 +518,7 @@ mod tests {
             program: "t".into(),
             threads: 4,
             tokens: 8,
+            bands: 1,
             edges: Vec::new(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: vec![hw("m0")] },

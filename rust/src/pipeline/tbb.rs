@@ -51,6 +51,13 @@ pub trait StageFilter<P = Mat>: Send + Sync {
     fn name(&self) -> String {
         "stage".into()
     }
+    /// Row bands one `apply` call shards its frame into (intra-frame
+    /// data parallelism via [`crate::swlib::banding`]); 1 = unsharded.
+    /// Only affects worker accounting here — the sharding itself lives
+    /// inside the filter body.
+    fn bands(&self) -> usize {
+        1
+    }
 }
 
 /// A closure-backed filter (tests, benches, quick assemblies).
@@ -107,9 +114,14 @@ pub struct PipelineStats {
     /// bound, and equals the configured overlap on a schedule that
     /// saturates the pool.
     pub peak_in_flight: usize,
-    /// Effective worker capacity per stage: 1 for `serial_in_order`
-    /// stages, `min(threads, tokens)` for `parallel` ones — the
-    /// normalizer [`PipelineStats::stage_occupancy`] divides by.
+    /// Effective worker capacity per stage — the normalizer
+    /// [`PipelineStats::stage_occupancy`] divides by.  Tokens bound the
+    /// *frames* a stage can hold and bands multiply the *threads* each
+    /// frame occupies, so the capacity is `min(threads, tokens_eff ×
+    /// bands)` with `tokens_eff` = 1 for `serial_in_order` stages and
+    /// the pool depth for `parallel` ones.  Ignoring the band factor
+    /// (the historical `min(threads, tokens)`) under-counted banded
+    /// stages' capacity and over-ranked them as bottlenecks.
     pub stage_workers: Vec<usize>,
 }
 
@@ -124,12 +136,12 @@ impl PipelineStats {
     }
 
     /// Occupancy of one stage in [0, 1]: busy time over wall-clock
-    /// **normalized by the stage's effective worker count** (1 for
-    /// serial stages, `min(threads, tokens)` for parallel ones).  A
-    /// parallel stage's spans overlap across workers, so the raw
-    /// busy/wall ratio exceeds 1.0 and mis-ranks the bottleneck; the
-    /// normalized value is the fraction of the stage's *capacity* in
-    /// use, comparable across serial and parallel stages.
+    /// **normalized by the stage's effective worker count** (see
+    /// [`Self::stage_workers`] — band-aware `min(threads, tokens_eff ×
+    /// bands)`).  A parallel stage's spans overlap across workers, so
+    /// the raw busy/wall ratio exceeds 1.0 and mis-ranks the
+    /// bottleneck; the normalized value is the fraction of the stage's
+    /// *capacity* in use, comparable across serial and parallel stages.
     pub fn stage_occupancy(&self, stage: usize) -> f64 {
         if self.wall_ns == 0 {
             return 0.0;
@@ -439,6 +451,7 @@ impl<P: Send> TokenPipeline<P> {
         };
         let mut cur = input;
         for (stage, f) in self.filters.iter().enumerate() {
+            let _band_ctx = crate::obs::set_band_ctx(sink.clone(), frame, stage as u32);
             let start_ns = obs_now_ns();
             cur = f.apply(cur)?;
             sink.span(frame, stage as u32, start_ns, obs_now_ns() - start_ns, 0);
@@ -502,9 +515,16 @@ impl<P: Send> TokenPipeline<P> {
             stage_workers: self
                 .filters
                 .iter()
-                .map(|f| match f.mode() {
-                    FilterMode::SerialInOrder => 1,
-                    FilterMode::Parallel => self.threads.min(self.tokens).max(1),
+                .map(|f| {
+                    // a serial stage holds one frame at a time; a banded
+                    // filter spreads that frame across `bands` threads
+                    let tokens_eff = match f.mode() {
+                        FilterMode::SerialInOrder => 1,
+                        FilterMode::Parallel => self.tokens,
+                    };
+                    self.threads
+                        .min(tokens_eff.saturating_mul(f.bands().max(1)))
+                        .max(1)
                 })
                 .collect(),
         };
@@ -658,9 +678,18 @@ impl<P: Send> TokenPipeline<P> {
         spans: &mut Vec<StageSpan>,
     ) {
         let (seq, enq_ns, mat) = token;
+        // band workers inside the filter body record their BandSpans
+        // under this frame/stage (the ctx is captured by the banded pass
+        // before it spawns — fresh scoped threads inherit no TLS)
+        let _band_ctx = self
+            .sink
+            .as_ref()
+            .filter(|s| s.is_enabled())
+            .map(|s| crate::obs::set_band_ctx(s.clone(), seq, stage as u32));
         let start_ns = clock.epoch.elapsed().as_nanos() as u64;
         let result = self.filters[stage].apply(mat);
         let end_ns = clock.epoch.elapsed().as_nanos() as u64;
+        drop(_band_ctx);
         spans.push(StageSpan { stage, token: seq, start_ns, end_ns });
         if let Some(sink) = &self.sink {
             // same two clock reads re-based onto the sink timeline; the
@@ -728,6 +757,71 @@ mod tests {
 
     fn inputs(n: usize) -> Vec<Mat> {
         (0..n).map(|i| Mat::full(&[4, 4], i as f32)).collect()
+    }
+
+    /// A filter that advertises intra-frame banding (the builder's
+    /// banded stages do, through their `StageFilter::bands` override).
+    struct BandedFilter {
+        mode: FilterMode,
+        bands: usize,
+    }
+
+    impl StageFilter for BandedFilter {
+        fn mode(&self) -> FilterMode {
+            self.mode
+        }
+        fn apply(&self, input: Mat) -> Result<Mat> {
+            Ok(input)
+        }
+        fn name(&self) -> String {
+            format!("banded{}", self.bands)
+        }
+        fn bands(&self) -> usize {
+            self.bands
+        }
+    }
+
+    #[test]
+    fn stage_workers_account_for_intra_frame_bands() {
+        // threads = 8, tokens = 2: a parallel unsharded stage caps at
+        // min(8, 2) = 2 workers; a 4-band parallel stage at
+        // min(8, 2 * 4) = 8; a banded *serial* stage still holds one
+        // frame at a time but spreads it over min(8, 1 * 4) = 4 threads
+        let pipe = TokenPipeline::new(
+            vec![
+                Box::new(BandedFilter { mode: FilterMode::SerialInOrder, bands: 1 })
+                    as Box<dyn StageFilter>,
+                Box::new(BandedFilter { mode: FilterMode::Parallel, bands: 1 }),
+                Box::new(BandedFilter { mode: FilterMode::Parallel, bands: 4 }),
+                Box::new(BandedFilter { mode: FilterMode::SerialInOrder, bands: 4 }),
+            ],
+            8,
+            2,
+        )
+        .unwrap();
+        let (out, stats) = pipe.run(inputs(4)).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(stats.stage_workers, vec![1, 2, 8, 4]);
+
+        // occupancy under a deterministic gate schedule: hand-built
+        // spans pin the normalization exactly.  A 4-band stage of
+        // capacity 8 keeps 4 band-workers busy for the whole 1000 ns
+        // wall: busy = 4000, occupancy = 4000 / (1000 * 8) = 0.5.
+        let stats = PipelineStats {
+            spans: (0..4)
+                .map(|i| StageSpan { stage: 0, token: i, start_ns: 0, end_ns: 1_000 })
+                .collect(),
+            frames: 4,
+            wall_ns: 1_000,
+            peak_in_flight: 2,
+            stage_workers: vec![8],
+        };
+        assert_eq!(stats.stage_occupancy(0), 0.5);
+        // the historical band-blind normalizer min(threads, tokens) = 2
+        // reported 4000 / (1000 * 2) = 2.0 — over unity, mis-ranking
+        // the banded stage as the bottleneck
+        let blind = PipelineStats { stage_workers: vec![2], ..stats };
+        assert_eq!(blind.stage_occupancy(0), 2.0);
     }
 
     #[test]

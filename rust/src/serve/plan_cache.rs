@@ -222,6 +222,7 @@ mod tests {
             program: "t".into(),
             threads: 1,
             tokens: 1,
+            bands: 1,
             edges: Vec::new(),
             stages: vec![],
         };

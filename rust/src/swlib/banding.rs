@@ -1,0 +1,376 @@
+//! Row-band sharding for the kernel interiors (data-parallel frames).
+//!
+//! The token runtime overlaps *frames* across stages, but each stage
+//! execution still walked its whole image on one worker — single-stream
+//! latency was one-core-bound.  This module is the intra-frame half of
+//! the Halide schedule (tile / vectorize / parallelize): a stage asks
+//! for `n` bands ([`set_bands`], installed by the builder from the
+//! plan's `bands` knob), and every interior-stencil pass splits its row
+//! range into `n` contiguous bands executed on scoped threads.  Halo
+//! rows are free: the source image is shared immutably, so a band reads
+//! its neighbours' boundary rows directly — only the *destination* is
+//! partitioned, which is what makes the split bitwise-exact (each
+//! output row is computed by exactly one band, with the same arithmetic
+//! as the sequential walk).
+//!
+//! The hints are thread-local (`Cell`s), not globals: concurrent stage
+//! workers can run different band counts, and parallel tests don't race
+//! on each other's overrides.  Band workers are *fresh* scoped threads
+//! with no TLS inheritance, so [`band_exec`] captures every hint (and
+//! the [`crate::obs`] band trace context) on the coordinating thread
+//! before spawning.
+//!
+//! [`simd_enabled`] is the matching runtime switch for the vectorized
+//! ([`super::simd::F32x8`]) interiors: a thread-local override
+//! ([`force_simd`] — how one test binary pins both paths), else the
+//! `COURIER_SIMD` env var (CI's on/off matrix), else the `simd` cargo
+//! feature's compile-time default.
+
+use std::cell::Cell;
+use std::sync::{Arc, OnceLock};
+
+use crate::obs::{band_ctx, obs_now_ns, TraceSink};
+
+thread_local! {
+    /// Bands the current stage execution wants per kernel pass (1 = off).
+    static BANDS: Cell<usize> = const { Cell::new(1) };
+    /// Per-thread SIMD override; `None` falls through to env/feature.
+    static SIMD: Cell<Option<bool>> = const { Cell::new(None) };
+}
+
+/// The current thread's band count hint (>= 1).
+pub fn band_hint() -> usize {
+    BANDS.with(|b| b.get()).max(1)
+}
+
+/// RAII restore for [`set_bands`].
+pub struct BandGuard {
+    prev: usize,
+}
+
+impl Drop for BandGuard {
+    fn drop(&mut self) {
+        BANDS.with(|b| b.set(self.prev));
+    }
+}
+
+/// Install a band count hint for the current thread (the builder wraps
+/// each banded stage's `apply` in one); restored when the guard drops.
+pub fn set_bands(n: usize) -> BandGuard {
+    let prev = BANDS.with(|b| b.replace(n.max(1)));
+    BandGuard { prev }
+}
+
+/// RAII restore for [`force_simd`].
+pub struct SimdGuard {
+    prev: Option<bool>,
+}
+
+impl Drop for SimdGuard {
+    fn drop(&mut self) {
+        SIMD.with(|s| s.set(self.prev));
+    }
+}
+
+/// Force the SIMD interiors on/off for the current thread (parity tests
+/// cover both paths through this); restored when the guard drops.
+pub fn force_simd(on: bool) -> SimdGuard {
+    let prev = SIMD.with(|s| s.replace(Some(on)));
+    SimdGuard { prev }
+}
+
+/// Process-wide `COURIER_SIMD` env default, read once.
+fn simd_env() -> Option<bool> {
+    static ENV: OnceLock<Option<bool>> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("COURIER_SIMD").ok().map(|v| !(v.is_empty() || v == "0")))
+}
+
+/// Whether kernels take the vectorized interior path right now:
+/// thread-local override, else `COURIER_SIMD` (`0` = off, anything else
+/// = on), else the `simd` cargo feature's compile-time default.
+#[allow(unexpected_cfgs)]
+pub fn simd_enabled() -> bool {
+    if let Some(on) = SIMD.with(|s| s.get()) {
+        return on;
+    }
+    if let Some(on) = simd_env() {
+        return on;
+    }
+    cfg!(feature = "simd")
+}
+
+/// Band trace context, captured once per pass on the coordinating thread.
+type Ctx = Option<(Arc<TraceSink>, u64, u32)>;
+
+/// Run one band's work under its [`crate::obs::EventKind::BandSpan`].
+#[inline]
+fn with_span(ctx: &Ctx, band: usize, f: impl FnOnce()) {
+    match ctx {
+        Some((sink, frame, stage)) => {
+            let t0 = obs_now_ns();
+            f();
+            sink.band_span(*frame, *stage, band as u64, t0, obs_now_ns().saturating_sub(t0));
+        }
+        None => f(),
+    }
+}
+
+/// Partition `dst` rows `[y_begin, y_begin + rows)` (row stride `w`)
+/// into `bands` contiguous `(y0, y1, chunk)` triples via repeated
+/// `split_at_mut`.  Caller guarantees `1 <= bands <= rows`.
+fn split_bands<'s>(
+    dst: &'s mut [f32],
+    w: usize,
+    y_begin: usize,
+    rows: usize,
+    bands: usize,
+) -> Vec<(usize, usize, &'s mut [f32])> {
+    let mut chunks = Vec::with_capacity(bands);
+    let mut rest = &mut dst[y_begin * w..(y_begin + rows) * w];
+    let mut prev = 0usize;
+    for b in 1..=bands {
+        let hi = rows * b / bands;
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - prev) * w);
+        chunks.push((y_begin + prev, y_begin + hi, head));
+        rest = tail;
+        prev = hi;
+    }
+    chunks
+}
+
+/// Split `dst` rows `[y_begin, y_end)` (row stride `w`) into at most
+/// `bands` contiguous row bands and run `f(y0, y1, chunk)` for each —
+/// on the current thread for the first band, scoped threads for the
+/// rest.  `chunk` is `&mut dst[y0*w .. y1*w]`; address row `y` of the
+/// destination at `(y - y0) * w` within it.  Sources stay shared
+/// through `f`'s captures, so halo rows are plain reads.  `bands` is
+/// clamped to the row count (never an empty band); `bands <= 1`, zero
+/// rows or zero width degenerate to a plain sequential call.  The scope
+/// join doubles as a barrier: multi-pass kernels call `band_exec` once
+/// per pass and each pass sees the previous one complete.
+pub fn band_exec<F>(dst: &mut [f32], w: usize, y_begin: usize, y_end: usize, bands: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let rows = y_end.saturating_sub(y_begin);
+    if rows == 0 || w == 0 {
+        return;
+    }
+    let bands = bands.clamp(1, rows);
+    if bands == 1 {
+        f(y_begin, y_end, &mut dst[y_begin * w..y_end * w]);
+        return;
+    }
+    let chunks = split_bands(dst, w, y_begin, rows, bands);
+    let ctx: Ctx = band_ctx();
+    let (ctx, f) = (&ctx, &f);
+    std::thread::scope(|scope| {
+        let mut it = chunks.into_iter();
+        let (y0, y1, chunk) = it.next().expect("bands >= 1");
+        for (b, (by0, by1, bchunk)) in it.enumerate() {
+            scope.spawn(move || with_span(ctx, b + 1, move || f(by0, by1, bchunk)));
+        }
+        with_span(ctx, 0, move || f(y0, y1, chunk));
+    });
+}
+
+/// [`band_exec`] over **two** equally-shaped destinations partitioned by
+/// the same row bands — the fused Sobel pair writes `dx`/`dy` in one
+/// walk.
+pub fn band_exec2<F>(
+    a: &mut [f32],
+    b: &mut [f32],
+    w: usize,
+    y_begin: usize,
+    y_end: usize,
+    bands: usize,
+    f: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+{
+    let rows = y_end.saturating_sub(y_begin);
+    if rows == 0 || w == 0 {
+        return;
+    }
+    let bands = bands.clamp(1, rows);
+    if bands == 1 {
+        let r = y_begin * w..y_end * w;
+        f(y_begin, y_end, &mut a[r.clone()], &mut b[r]);
+        return;
+    }
+    let ca = split_bands(a, w, y_begin, rows, bands);
+    let cb = split_bands(b, w, y_begin, rows, bands);
+    let ctx: Ctx = band_ctx();
+    let (ctx, f) = (&ctx, &f);
+    std::thread::scope(|scope| {
+        let mut it = ca.into_iter().zip(cb);
+        let first = it.next().expect("bands >= 1");
+        for (bi, ((y0, y1, xa), (_, _, xb))) in it.enumerate() {
+            scope.spawn(move || with_span(ctx, bi + 1, move || f(y0, y1, xa, xb)));
+        }
+        let ((y0, y1, xa), (_, _, xb)) = first;
+        with_span(ctx, 0, move || f(y0, y1, xa, xb));
+    });
+}
+
+/// [`band_exec`] over **three** equally-shaped destinations partitioned
+/// by the same row bands — the fused Sobel-pair + gradient-products
+/// pass of Harris writes `dxx`/`dyy`/`dxy` in one walk.
+pub fn band_exec3<F>(
+    a: &mut [f32],
+    b: &mut [f32],
+    c: &mut [f32],
+    w: usize,
+    y_begin: usize,
+    y_end: usize,
+    bands: usize,
+    f: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+{
+    let rows = y_end.saturating_sub(y_begin);
+    if rows == 0 || w == 0 {
+        return;
+    }
+    let bands = bands.clamp(1, rows);
+    if bands == 1 {
+        let r = y_begin * w..y_end * w;
+        f(y_begin, y_end, &mut a[r.clone()], &mut b[r.clone()], &mut c[r]);
+        return;
+    }
+    let ca = split_bands(a, w, y_begin, rows, bands);
+    let cb = split_bands(b, w, y_begin, rows, bands);
+    let cc = split_bands(c, w, y_begin, rows, bands);
+    let ctx: Ctx = band_ctx();
+    let (ctx, f) = (&ctx, &f);
+    std::thread::scope(|scope| {
+        let mut it = ca.into_iter().zip(cb.into_iter().zip(cc));
+        let first = it.next().expect("bands >= 1");
+        for (bi, ((y0, y1, xa), ((_, _, xb), (_, _, xc)))) in it.enumerate() {
+            scope.spawn(move || with_span(ctx, bi + 1, move || f(y0, y1, xa, xb, xc)));
+        }
+        let ((y0, y1, xa), ((_, _, xb), (_, _, xc))) = first;
+        with_span(ctx, 0, move || f(y0, y1, xa, xb, xc));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn band_hint_guard_nests_and_restores() {
+        assert_eq!(band_hint(), 1);
+        {
+            let _g = set_bands(4);
+            assert_eq!(band_hint(), 4);
+            {
+                let _g2 = set_bands(2);
+                assert_eq!(band_hint(), 2);
+            }
+            assert_eq!(band_hint(), 4);
+        }
+        assert_eq!(band_hint(), 1);
+        let _g = set_bands(0);
+        assert_eq!(band_hint(), 1, "zero clamps to 1");
+    }
+
+    #[test]
+    fn simd_override_guard_restores() {
+        let base = simd_enabled();
+        {
+            let _g = force_simd(!base);
+            assert_eq!(simd_enabled(), !base);
+        }
+        assert_eq!(simd_enabled(), base);
+    }
+
+    #[test]
+    fn band_exec_covers_every_row_once() {
+        let w = 5;
+        for (h, bands) in [(8usize, 3usize), (8, 1), (2, 7), (1, 4), (16, 4)] {
+            let mut dst = vec![0.0f32; h * w];
+            band_exec(&mut dst, w, 0, h, bands, |y0, y1, chunk| {
+                for y in y0..y1 {
+                    for x in 0..w {
+                        chunk[(y - y0) * w + x] += (y * w + x) as f32;
+                    }
+                }
+            });
+            let want: Vec<f32> = (0..h * w).map(|i| i as f32).collect();
+            assert_eq!(dst, want, "h={h} bands={bands}");
+        }
+    }
+
+    #[test]
+    fn band_exec_respects_partial_row_range() {
+        let (h, w) = (6usize, 3usize);
+        let mut dst = vec![0.0f32; h * w];
+        band_exec(&mut dst, w, 1, h - 1, 3, |y0, y1, chunk| {
+            chunk[..(y1 - y0) * w].fill(1.0);
+        });
+        for y in 0..h {
+            let expect = if (1..h - 1).contains(&y) { 1.0 } else { 0.0 };
+            assert!(dst[y * w..(y + 1) * w].iter().all(|&v| v == expect), "row {y}");
+        }
+    }
+
+    #[test]
+    fn band_exec3_partitions_all_three_in_lockstep() {
+        let (h, w) = (7usize, 4usize);
+        let (mut a, mut b, mut c) =
+            (vec![0.0f32; h * w], vec![0.0f32; h * w], vec![0.0f32; h * w]);
+        band_exec3(&mut a, &mut b, &mut c, w, 0, h, 3, |y0, y1, ca, cb, cc| {
+            for y in y0..y1 {
+                for x in 0..w {
+                    let i = (y - y0) * w + x;
+                    ca[i] = y as f32;
+                    cb[i] = x as f32;
+                    cc[i] = (y + x) as f32;
+                }
+            }
+        });
+        for y in 0..h {
+            for x in 0..w {
+                assert_eq!(a[y * w + x], y as f32);
+                assert_eq!(b[y * w + x], x as f32);
+                assert_eq!(c[y * w + x], (y + x) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn band_exec2_partitions_both_in_lockstep() {
+        let (h, w) = (5usize, 3usize);
+        let (mut a, mut b) = (vec![0.0f32; h * w], vec![0.0f32; h * w]);
+        band_exec2(&mut a, &mut b, w, 0, h, 2, |y0, y1, ca, cb| {
+            for i in 0..(y1 - y0) * w {
+                ca[i] = (y0 * w + i) as f32;
+                cb[i] = -((y0 * w + i) as f32);
+            }
+        });
+        for i in 0..h * w {
+            assert_eq!(a[i], i as f32);
+            assert_eq!(b[i], -(i as f32));
+        }
+    }
+
+    #[test]
+    fn band_workers_record_spans_under_the_ctx() {
+        let sink = Arc::new(TraceSink::with_capacity(64));
+        let _ctx = crate::obs::set_band_ctx(sink.clone(), crate::obs::frame_id(0, 3), 2);
+        let mut dst = vec![0.0f32; 8 * 4];
+        band_exec(&mut dst, 4, 0, 8, 4, |_, _, chunk| chunk.fill(1.0));
+        let events = sink.snapshot_events();
+        let bands: Vec<u64> = events
+            .iter()
+            .filter(|e| e.kind == crate::obs::EventKind::BandSpan)
+            .map(|e| e.arg)
+            .collect();
+        assert_eq!(bands.len(), 4);
+        let mut sorted = bands.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        assert!(events.iter().all(|e| e.stage == 2));
+    }
+}

@@ -11,7 +11,19 @@
 //! `tests/kernel_parity.rs` pins every fast path to them bit-for-bit
 //! (separable Gaussian: to ~1 ULP, the reassociation cost of the second
 //! pass).
+//!
+//! Two orthogonal interior accelerators, both parity-preserving:
+//!
+//! * **row bands** ([`super::banding`]) — every interior pass splits its
+//!   row range into [`band_hint`] contiguous bands on scoped threads
+//!   (sources shared immutably, so halo rows are plain reads; each
+//!   output row keeps its sequential arithmetic → bitwise identical);
+//! * **SIMD lanes** ([`super::simd::F32x8`]) — the unrolled per-pixel
+//!   expressions re-stated lanewise in the same evaluation order, with a
+//!   scalar tail; selected at runtime by [`simd_enabled`].
 
+use super::banding::{band_exec, band_exec2, band_exec3, band_hint, simd_enabled};
+use super::simd::{F32x8, LANES};
 use crate::image::Mat;
 use crate::pipeline::BufferPool;
 use crate::{CourierError, Result};
@@ -74,27 +86,69 @@ fn conv3x3_into(img: &Mat, taps: &[[f32; 3]; 3], out: &mut Mat) {
     }
     let src = img.as_slice();
     let t = taps;
-    {
+    if h > 2 && w > 2 {
+        let simd = simd_enabled();
         let dst = out.as_mut_slice();
-        for y in 1..h.saturating_sub(1) {
-            let r0 = &src[(y - 1) * w..y * w];
-            let r1 = &src[y * w..(y + 1) * w];
-            let r2 = &src[(y + 1) * w..(y + 2) * w];
-            let drow = &mut dst[y * w..(y + 1) * w];
-            for x in 1..w - 1 {
-                drow[x] = t[0][0] * r0[x - 1]
-                    + t[0][1] * r0[x]
-                    + t[0][2] * r0[x + 1]
-                    + t[1][0] * r1[x - 1]
-                    + t[1][1] * r1[x]
-                    + t[1][2] * r1[x + 1]
-                    + t[2][0] * r2[x - 1]
-                    + t[2][1] * r2[x]
-                    + t[2][2] * r2[x + 1];
+        band_exec(dst, w, 1, h - 1, band_hint(), |y0, y1, chunk| {
+            for y in y0..y1 {
+                let r0 = &src[(y - 1) * w..y * w];
+                let r1 = &src[y * w..(y + 1) * w];
+                let r2 = &src[(y + 1) * w..(y + 2) * w];
+                let drow = &mut chunk[(y - y0) * w..(y - y0 + 1) * w];
+                conv3x3_row(t, r0, r1, r2, drow, simd);
             }
-        }
+        });
     }
     conv3x3_border(img, taps, out);
+}
+
+/// One interior row of [`conv3x3_into`]: columns `1..w-1` of `drow`
+/// from full source rows `r0`/`r1`/`r2`.  The vector body is the scalar
+/// expression restated lanewise in the same order (bitwise identical);
+/// the tail (and the whole row with SIMD off) runs the scalar loop.
+#[inline]
+fn conv3x3_row(
+    t: &[[f32; 3]; 3],
+    r0: &[f32],
+    r1: &[f32],
+    r2: &[f32],
+    drow: &mut [f32],
+    simd: bool,
+) {
+    let w = drow.len();
+    let mut x = 1usize;
+    if simd {
+        let (t00, t01, t02) =
+            (F32x8::splat(t[0][0]), F32x8::splat(t[0][1]), F32x8::splat(t[0][2]));
+        let (t10, t11, t12) =
+            (F32x8::splat(t[1][0]), F32x8::splat(t[1][1]), F32x8::splat(t[1][2]));
+        let (t20, t21, t22) =
+            (F32x8::splat(t[2][0]), F32x8::splat(t[2][1]), F32x8::splat(t[2][2]));
+        while x + LANES <= w - 1 {
+            let v = t00 * F32x8::load(&r0[x - 1..])
+                + t01 * F32x8::load(&r0[x..])
+                + t02 * F32x8::load(&r0[x + 1..])
+                + t10 * F32x8::load(&r1[x - 1..])
+                + t11 * F32x8::load(&r1[x..])
+                + t12 * F32x8::load(&r1[x + 1..])
+                + t20 * F32x8::load(&r2[x - 1..])
+                + t21 * F32x8::load(&r2[x..])
+                + t22 * F32x8::load(&r2[x + 1..]);
+            v.store(&mut drow[x..]);
+            x += LANES;
+        }
+    }
+    for x in x..w - 1 {
+        drow[x] = t[0][0] * r0[x - 1]
+            + t[0][1] * r0[x]
+            + t[0][2] * r0[x + 1]
+            + t[1][0] * r1[x - 1]
+            + t[1][1] * r1[x]
+            + t[1][2] * r1[x + 1]
+            + t[2][0] * r2[x - 1]
+            + t[2][1] * r2[x]
+            + t[2][2] * r2[x + 1];
+    }
 }
 
 /// One clamped-border stencil evaluation (the reference inner loop).
@@ -150,10 +204,13 @@ pub fn cvt_color_into(img: &Mat, out: &mut Mat) -> Result<()> {
     expect_out_shape(out, &[h, w], "cvt_color")?;
     let src = img.as_slice();
     let dst = out.as_mut_slice();
-    for i in 0..h * w {
-        let base = i * 3;
-        dst[i] = LUMA_R * src[base] + LUMA_G * src[base + 1] + LUMA_B * src[base + 2];
-    }
+    band_exec(dst, w, 0, h, band_hint(), |y0, y1, chunk| {
+        let off = y0 * w;
+        for i in off..y1 * w {
+            let base = i * 3;
+            chunk[i - off] = LUMA_R * src[base] + LUMA_G * src[base + 1] + LUMA_B * src[base + 2];
+        }
+    });
     Ok(())
 }
 
@@ -193,25 +250,53 @@ pub fn sobel_xy_into(img: &Mat, dx: &mut Mat, dy: &mut Mat) -> Result<()> {
         return Ok(());
     }
     let src = img.as_slice();
-    {
+    if h > 2 && w > 2 {
+        let simd = simd_enabled();
         let dxs = dx.as_mut_slice();
         let dys = dy.as_mut_slice();
-        for y in 1..h.saturating_sub(1) {
-            let r0 = &src[(y - 1) * w..y * w];
-            let r1 = &src[y * w..(y + 1) * w];
-            let r2 = &src[(y + 1) * w..(y + 2) * w];
-            for x in 1..w - 1 {
-                let (a, b, c) = (r0[x - 1], r0[x], r0[x + 1]);
-                let (d, f) = (r1[x - 1], r1[x + 1]);
-                let (g, hh, i) = (r2[x - 1], r2[x], r2[x + 1]);
-                dxs[y * w + x] = -a + c - 2.0 * d + 2.0 * f - g + i;
-                dys[y * w + x] = -a - 2.0 * b - c + g + 2.0 * hh + i;
+        band_exec2(dxs, dys, w, 1, h - 1, band_hint(), |y0, y1, cx, cy| {
+            for y in y0..y1 {
+                let r0 = &src[(y - 1) * w..y * w];
+                let r1 = &src[y * w..(y + 1) * w];
+                let r2 = &src[(y + 1) * w..(y + 2) * w];
+                let o = (y - y0) * w;
+                sobel_xy_row(r0, r1, r2, &mut cx[o..o + w], &mut cy[o..o + w], simd);
             }
-        }
+        });
     }
     conv3x3_border(img, &SOBEL_DX, dx);
     conv3x3_border(img, &SOBEL_DY, dy);
     Ok(())
+}
+
+/// One interior row of the fused Sobel pair (columns `1..w-1`).
+#[inline]
+fn sobel_xy_row(r0: &[f32], r1: &[f32], r2: &[f32], xrow: &mut [f32], yrow: &mut [f32], simd: bool) {
+    let w = xrow.len();
+    let mut x = 1usize;
+    if simd {
+        let two = F32x8::splat(2.0);
+        while x + LANES <= w - 1 {
+            let a = F32x8::load(&r0[x - 1..]);
+            let b = F32x8::load(&r0[x..]);
+            let c = F32x8::load(&r0[x + 1..]);
+            let d = F32x8::load(&r1[x - 1..]);
+            let f = F32x8::load(&r1[x + 1..]);
+            let g = F32x8::load(&r2[x - 1..]);
+            let hh = F32x8::load(&r2[x..]);
+            let i = F32x8::load(&r2[x + 1..]);
+            (-a + c - two * d + two * f - g + i).store(&mut xrow[x..]);
+            (-a - two * b - c + g + two * hh + i).store(&mut yrow[x..]);
+            x += LANES;
+        }
+    }
+    for x in x..w - 1 {
+        let (a, b, c) = (r0[x - 1], r0[x], r0[x + 1]);
+        let (d, f) = (r1[x - 1], r1[x + 1]);
+        let (g, hh, i) = (r2[x - 1], r2[x], r2[x + 1]);
+        xrow[x] = -a + c - 2.0 * d + 2.0 * f - g + i;
+        yrow[x] = -a - 2.0 * b - c + g + 2.0 * hh + i;
+    }
 }
 
 /// 3x3 Gaussian — `cv::GaussianBlur(3x3)`, separable two-pass.
@@ -237,36 +322,135 @@ pub fn gaussian_blur_into(img: &Mat, tmp: &mut Mat, out: &mut Mat) -> Result<()>
         return Ok(());
     }
     let src = img.as_slice();
+    let bands = band_hint();
+    let simd = simd_enabled();
     {
         let t = tmp.as_mut_slice();
-        for y in 0..h {
-            let row = &src[y * w..(y + 1) * w];
-            let trow = &mut t[y * w..(y + 1) * w];
-            trow[0] = 0.25 * row[0] + 0.5 * row[0] + 0.25 * row[1.min(w - 1)];
-            for x in 1..w.saturating_sub(1) {
-                trow[x] = 0.25 * row[x - 1] + 0.5 * row[x] + 0.25 * row[x + 1];
+        band_exec(t, w, 0, h, bands, |y0, y1, chunk| {
+            for y in y0..y1 {
+                let row = &src[y * w..(y + 1) * w];
+                let trow = &mut chunk[(y - y0) * w..(y - y0 + 1) * w];
+                gaussian_h_row(row, trow, simd);
             }
-            if w > 1 {
-                trow[w - 1] = 0.25 * row[w - 2] + 0.5 * row[w - 1] + 0.25 * row[w - 1];
-            }
-        }
+        });
     }
+    // the band_exec scope join above is the barrier: every horizontal
+    // row is complete before any vertical band reads across a boundary
     {
         let t = tmp.as_slice();
         let dst = out.as_mut_slice();
-        for y in 0..h {
-            let ym = y.saturating_sub(1);
-            let yp = (y + 1).min(h - 1);
-            let r0 = &t[ym * w..ym * w + w];
-            let r1 = &t[y * w..y * w + w];
-            let r2 = &t[yp * w..yp * w + w];
-            let drow = &mut dst[y * w..(y + 1) * w];
-            for x in 0..w {
-                drow[x] = 0.25 * r0[x] + 0.5 * r1[x] + 0.25 * r2[x];
+        band_exec(dst, w, 0, h, bands, |y0, y1, chunk| {
+            for y in y0..y1 {
+                let ym = y.saturating_sub(1);
+                let yp = (y + 1).min(h - 1);
+                let r0 = &t[ym * w..ym * w + w];
+                let r1 = &t[y * w..y * w + w];
+                let r2 = &t[yp * w..yp * w + w];
+                let drow = &mut chunk[(y - y0) * w..(y - y0 + 1) * w];
+                gaussian_v_row(r0, r1, r2, drow, simd);
             }
-        }
+        });
     }
     Ok(())
+}
+
+/// One horizontal `[1, 2, 1]/4` pass row (replicate ends).
+#[inline]
+fn gaussian_h_row(row: &[f32], trow: &mut [f32], simd: bool) {
+    let w = trow.len();
+    trow[0] = 0.25 * row[0] + 0.5 * row[0] + 0.25 * row[1.min(w - 1)];
+    let mut x = 1usize;
+    if simd {
+        let (q, hlf) = (F32x8::splat(0.25), F32x8::splat(0.5));
+        while x + LANES <= w - 1 {
+            let v = q * F32x8::load(&row[x - 1..])
+                + hlf * F32x8::load(&row[x..])
+                + q * F32x8::load(&row[x + 1..]);
+            v.store(&mut trow[x..]);
+            x += LANES;
+        }
+    }
+    for x in x..w.saturating_sub(1) {
+        trow[x] = 0.25 * row[x - 1] + 0.5 * row[x] + 0.25 * row[x + 1];
+    }
+    if w > 1 {
+        trow[w - 1] = 0.25 * row[w - 2] + 0.5 * row[w - 1] + 0.25 * row[w - 1];
+    }
+}
+
+/// One vertical `[1, 2, 1]/4` pass row (`r0`/`r1`/`r2` pre-clamped).
+#[inline]
+fn gaussian_v_row(r0: &[f32], r1: &[f32], r2: &[f32], drow: &mut [f32], simd: bool) {
+    let w = drow.len();
+    let mut x = 0usize;
+    if simd {
+        let (q, hlf) = (F32x8::splat(0.25), F32x8::splat(0.5));
+        while x + LANES <= w {
+            let v = q * F32x8::load(&r0[x..])
+                + hlf * F32x8::load(&r1[x..])
+                + q * F32x8::load(&r2[x..]);
+            v.store(&mut drow[x..]);
+            x += LANES;
+        }
+    }
+    for x in x..w {
+        drow[x] = 0.25 * r0[x] + 0.5 * r1[x] + 0.25 * r2[x];
+    }
+}
+
+/// [`gaussian_blur_into`] with pooled, *banded* scratch: instead of one
+/// full-frame tmp, each row band draws an overlapped tile (its rows plus
+/// one halo row each side) via [`BufferPool::acquire_band_scratch`],
+/// h-passes into it, and v-passes straight to `out`.  Halo rows are
+/// recomputed by both neighbouring bands — the classic overlapped-tiling
+/// trade: a couple of redundant rows of work buys zero cross-band
+/// synchronization and an `O(rows/bands)` working set per thread.
+/// Bitwise identical to the two-pass path, because every scratch row is
+/// the h-pass of the same source row.
+pub fn gaussian_blur_pooled(img: &Mat, pool: &BufferPool) -> Result<Mat> {
+    expect_gray(img, "gaussian_blur")?;
+    let (h, w) = (img.height(), img.width());
+    let mut out = pool.acquire(&[h, w]);
+    if h == 0 || w == 0 {
+        return Ok(out);
+    }
+    let bands = band_hint();
+    if bands <= 1 {
+        let mut tmp = pool.acquire(&[h, w]);
+        let res = gaussian_blur_into(img, &mut tmp, &mut out);
+        pool.release(tmp);
+        return res.map(|()| out);
+    }
+    let src = img.as_slice();
+    let simd = simd_enabled();
+    let dst = out.as_mut_slice();
+    band_exec(dst, w, 0, h, bands, |y0, y1, chunk| {
+        let sy0 = y0.saturating_sub(1);
+        let sy1 = (y1 + 1).min(h);
+        let mut scratch = pool.acquire_band_scratch(&[h, w], &[sy1 - sy0, w]);
+        {
+            let t = scratch.as_mut_slice();
+            for y in sy0..sy1 {
+                let row = &src[y * w..(y + 1) * w];
+                let trow = &mut t[(y - sy0) * w..(y - sy0 + 1) * w];
+                gaussian_h_row(row, trow, simd);
+            }
+        }
+        {
+            let t = scratch.as_slice();
+            for y in y0..y1 {
+                let ym = y.saturating_sub(1);
+                let yp = (y + 1).min(h - 1);
+                let r0 = &t[(ym - sy0) * w..(ym - sy0 + 1) * w];
+                let r1 = &t[(y - sy0) * w..(y - sy0 + 1) * w];
+                let r2 = &t[(yp - sy0) * w..(yp - sy0 + 1) * w];
+                let drow = &mut chunk[(y - y0) * w..(y - y0 + 1) * w];
+                gaussian_v_row(r0, r1, r2, drow, simd);
+            }
+        }
+        pool.release(scratch);
+    });
+    Ok(out)
 }
 
 /// 3x3 box filter — `cv::boxFilter` (mean when `normalize`).
@@ -362,20 +546,28 @@ pub fn median_blur_into(img: &Mat, out: &mut Mat) -> Result<()> {
         return Ok(());
     }
     let src = img.as_slice();
+    if h > 2 && w > 2 {
+        let dst = out.as_mut_slice();
+        // rank filter: no useful SIMD shape, but the rows band like any
+        // other interior stencil (sources stay shared, halo reads free)
+        band_exec(dst, w, 1, h - 1, band_hint(), |y0, y1, chunk| {
+            for y in y0..y1 {
+                let r0 = &src[(y - 1) * w..y * w];
+                let r1 = &src[y * w..(y + 1) * w];
+                let r2 = &src[(y + 1) * w..(y + 2) * w];
+                let drow = &mut chunk[(y - y0) * w..(y - y0 + 1) * w];
+                for x in 1..w - 1 {
+                    let mut window = [
+                        r0[x - 1], r0[x], r0[x + 1], r1[x - 1], r1[x], r1[x + 1], r2[x - 1],
+                        r2[x], r2[x + 1],
+                    ];
+                    drow[x] = median9(&mut window);
+                }
+            }
+        });
+    }
     {
         let dst = out.as_mut_slice();
-        for y in 1..h.saturating_sub(1) {
-            let r0 = &src[(y - 1) * w..y * w];
-            let r1 = &src[y * w..(y + 1) * w];
-            let r2 = &src[(y + 1) * w..(y + 2) * w];
-            for x in 1..w - 1 {
-                let mut window = [
-                    r0[x - 1], r0[x], r0[x + 1], r1[x - 1], r1[x], r1[x + 1], r2[x - 1],
-                    r2[x], r2[x + 1],
-                ];
-                dst[y * w + x] = median9(&mut window);
-            }
-        }
         for x in 0..w {
             dst[x] = median_window_clamped(img, 0, x);
             dst[(h - 1) * w + x] = median_window_clamped(img, h - 1, x);
@@ -399,7 +591,7 @@ pub fn erode(img: &Mat) -> Result<Mat> {
 pub fn erode_into(img: &Mat, out: &mut Mat) -> Result<()> {
     expect_gray(img, "erode")?;
     expect_out_shape(out, img.shape(), "erode")?;
-    morph_into(img, f32::min, out);
+    morph_into(img, MorphOp::Min, out);
     Ok(())
 }
 
@@ -414,45 +606,67 @@ pub fn dilate(img: &Mat) -> Result<Mat> {
 pub fn dilate_into(img: &Mat, out: &mut Mat) -> Result<()> {
     expect_gray(img, "dilate")?;
     expect_out_shape(out, img.shape(), "dilate")?;
-    morph_into(img, f32::max, out);
+    morph_into(img, MorphOp::Max, out);
     Ok(())
 }
 
-fn morph_cell_clamped(img: &Mat, op: fn(f32, f32) -> f32, y: usize, x: usize) -> f32 {
+/// Window reduction selector — scalar and lanewise forms apply the same
+/// op in the same order, so both paths agree bit for bit (`f32::min`/
+/// `f32::max` semantics, lanewise).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum MorphOp {
+    Min,
+    Max,
+}
+
+impl MorphOp {
+    #[inline(always)]
+    fn fold(self, a: f32, b: f32) -> f32 {
+        match self {
+            MorphOp::Min => a.min(b),
+            MorphOp::Max => a.max(b),
+        }
+    }
+
+    #[inline(always)]
+    fn fold_v(self, a: F32x8, b: F32x8) -> F32x8 {
+        match self {
+            MorphOp::Min => a.min(b),
+            MorphOp::Max => a.max(b),
+        }
+    }
+}
+
+fn morph_cell_clamped(img: &Mat, op: MorphOp, y: usize, x: usize) -> f32 {
     let mut acc = img.at2_clamped(y as isize - 1, x as isize - 1);
     for dy in 0..3isize {
         for dx in 0..3isize {
-            acc = op(acc, img.at2_clamped(y as isize + dy - 1, x as isize + dx - 1));
+            acc = op.fold(acc, img.at2_clamped(y as isize + dy - 1, x as isize + dx - 1));
         }
     }
     acc
 }
 
-fn morph_into(img: &Mat, op: fn(f32, f32) -> f32, out: &mut Mat) {
+fn morph_into(img: &Mat, op: MorphOp, out: &mut Mat) {
     let (h, w) = (img.height(), img.width());
     if h == 0 || w == 0 {
         return;
     }
     let src = img.as_slice();
-    let dst = out.as_mut_slice();
-    for y in 1..h.saturating_sub(1) {
-        let r0 = &src[(y - 1) * w..y * w];
-        let r1 = &src[y * w..(y + 1) * w];
-        let r2 = &src[(y + 1) * w..(y + 2) * w];
-        for x in 1..w - 1 {
-            let mut acc = r0[x - 1];
-            acc = op(acc, r0[x - 1]);
-            acc = op(acc, r0[x]);
-            acc = op(acc, r0[x + 1]);
-            acc = op(acc, r1[x - 1]);
-            acc = op(acc, r1[x]);
-            acc = op(acc, r1[x + 1]);
-            acc = op(acc, r2[x - 1]);
-            acc = op(acc, r2[x]);
-            acc = op(acc, r2[x + 1]);
-            dst[y * w + x] = acc;
-        }
+    if h > 2 && w > 2 {
+        let simd = simd_enabled();
+        let dst = out.as_mut_slice();
+        band_exec(dst, w, 1, h - 1, band_hint(), |y0, y1, chunk| {
+            for y in y0..y1 {
+                let r0 = &src[(y - 1) * w..y * w];
+                let r1 = &src[y * w..(y + 1) * w];
+                let r2 = &src[(y + 1) * w..(y + 2) * w];
+                let drow = &mut chunk[(y - y0) * w..(y - y0 + 1) * w];
+                morph_row(op, r0, r1, r2, drow, simd);
+            }
+        });
     }
+    let dst = out.as_mut_slice();
     for x in 0..w {
         dst[x] = morph_cell_clamped(img, op, 0, x);
         dst[(h - 1) * w + x] = morph_cell_clamped(img, op, h - 1, x);
@@ -460,6 +674,44 @@ fn morph_into(img: &Mat, op: fn(f32, f32) -> f32, out: &mut Mat) {
     for y in 0..h {
         dst[y * w] = morph_cell_clamped(img, op, y, 0);
         dst[y * w + w - 1] = morph_cell_clamped(img, op, y, w - 1);
+    }
+}
+
+/// One interior morphology row: seed with `r0[x-1]`, fold the nine
+/// window cells in the reference order (the seed cell folds twice,
+/// exactly like the scalar loop always has).
+#[inline]
+fn morph_row(op: MorphOp, r0: &[f32], r1: &[f32], r2: &[f32], drow: &mut [f32], simd: bool) {
+    let w = drow.len();
+    let mut x = 1usize;
+    if simd {
+        while x + LANES <= w - 1 {
+            let mut acc = F32x8::load(&r0[x - 1..]);
+            acc = op.fold_v(acc, F32x8::load(&r0[x - 1..]));
+            acc = op.fold_v(acc, F32x8::load(&r0[x..]));
+            acc = op.fold_v(acc, F32x8::load(&r0[x + 1..]));
+            acc = op.fold_v(acc, F32x8::load(&r1[x - 1..]));
+            acc = op.fold_v(acc, F32x8::load(&r1[x..]));
+            acc = op.fold_v(acc, F32x8::load(&r1[x + 1..]));
+            acc = op.fold_v(acc, F32x8::load(&r2[x - 1..]));
+            acc = op.fold_v(acc, F32x8::load(&r2[x..]));
+            acc = op.fold_v(acc, F32x8::load(&r2[x + 1..]));
+            acc.store(&mut drow[x..]);
+            x += LANES;
+        }
+    }
+    for x in x..w - 1 {
+        let mut acc = r0[x - 1];
+        acc = op.fold(acc, r0[x - 1]);
+        acc = op.fold(acc, r0[x]);
+        acc = op.fold(acc, r0[x + 1]);
+        acc = op.fold(acc, r1[x - 1]);
+        acc = op.fold(acc, r1[x]);
+        acc = op.fold(acc, r1[x + 1]);
+        acc = op.fold(acc, r2[x - 1]);
+        acc = op.fold(acc, r2[x]);
+        acc = op.fold(acc, r2[x + 1]);
+        drow[x] = acc;
     }
 }
 
@@ -506,8 +758,9 @@ pub fn corner_harris_pooled(img: &Mat, k: f32, pool: &BufferPool) -> Result<Mat>
 }
 
 /// The Harris body over caller-provided scratch: pad, fused valid Sobel
-/// pair, products squared in place, then fused window-sum + response (one
-/// walk instead of three box convs plus an elementwise pass).
+/// pair with products folded in, then fused window-sum + response (one
+/// walk instead of three box convs plus an elementwise pass).  Every
+/// phase shards into row bands per the ambient [`band_hint`].
 fn corner_harris_core(
     img: &Mat,
     k: f32,
@@ -518,44 +771,84 @@ fn corner_harris_core(
     out: &mut Mat,
 ) {
     let (h, w) = (img.height(), img.width());
+    let bands = band_hint();
+    let simd = simd_enabled();
     edge_pad2_into(img, 2, padded); // (h+4, w+4)
-    sobel_xy_valid_into(padded, dx, dy); // (h+2, w+2)
-    {
-        let n = dx.len();
-        let xs = dx.as_mut_slice();
-        let ys = dy.as_mut_slice();
-        let xy = dxy.as_mut_slice();
-        for i in 0..n {
-            xy[i] = xs[i] * ys[i];
-            xs[i] = xs[i] * xs[i];
-            ys[i] = ys[i] * ys[i];
-        }
-    }
+    sobel_products_valid_into(padded, dx, dy, dxy, bands, simd); // (h+2, w+2)
     let wv = w + 2;
     let sxx = dx.as_slice();
     let syy = dy.as_slice();
     let sxy = dxy.as_slice();
     let dst = out.as_mut_slice();
-    for y in 0..h {
-        for x in 0..w {
-            let mut a = 0.0f32;
-            let mut b = 0.0f32;
-            let mut c = 0.0f32;
+    band_exec(dst, w, 0, h, bands, |y0, y1, chunk| {
+        for y in y0..y1 {
+            let drow = &mut chunk[(y - y0) * w..(y - y0 + 1) * w];
+            harris_response_row(sxx, syy, sxy, wv, y, k, drow, simd);
+        }
+    });
+}
+
+/// One Harris response row: unnormalized 3x3 window sums of the three
+/// gradient-product planes (full slices, padded width `wv`), then
+/// `R = det(M) - k*trace(M)^2`.  Per-accumulator add order matches the
+/// scalar triple-loop exactly.
+#[inline]
+fn harris_response_row(
+    sxx: &[f32],
+    syy: &[f32],
+    sxy: &[f32],
+    wv: usize,
+    y: usize,
+    k: f32,
+    drow: &mut [f32],
+    simd: bool,
+) {
+    let w = drow.len();
+    let mut x = 0usize;
+    if simd {
+        let vk = F32x8::splat(k);
+        while x + LANES <= w {
+            let mut va = F32x8::splat(0.0);
+            let mut vb = F32x8::splat(0.0);
+            let mut vc = F32x8::splat(0.0);
             for d in 0..3 {
                 let base = (y + d) * wv + x;
-                a += sxx[base];
-                a += sxx[base + 1];
-                a += sxx[base + 2];
-                b += syy[base];
-                b += syy[base + 1];
-                b += syy[base + 2];
-                c += sxy[base];
-                c += sxy[base + 1];
-                c += sxy[base + 2];
+                va = va
+                    + F32x8::load(&sxx[base..])
+                    + F32x8::load(&sxx[base + 1..])
+                    + F32x8::load(&sxx[base + 2..]);
+                vb = vb
+                    + F32x8::load(&syy[base..])
+                    + F32x8::load(&syy[base + 1..])
+                    + F32x8::load(&syy[base + 2..]);
+                vc = vc
+                    + F32x8::load(&sxy[base..])
+                    + F32x8::load(&sxy[base + 1..])
+                    + F32x8::load(&sxy[base + 2..]);
             }
-            let tr = a + b;
-            dst[y * w + x] = (a * b - c * c) - k * tr * tr;
+            let tr = va + vb;
+            (va * vb - vc * vc - vk * tr * tr).store(&mut drow[x..]);
+            x += LANES;
         }
+    }
+    for x in x..w {
+        let mut a = 0.0f32;
+        let mut b = 0.0f32;
+        let mut c = 0.0f32;
+        for d in 0..3 {
+            let base = (y + d) * wv + x;
+            a += sxx[base];
+            a += sxx[base + 1];
+            a += sxx[base + 2];
+            b += syy[base];
+            b += syy[base + 1];
+            b += syy[base + 2];
+            c += sxy[base];
+            c += sxy[base + 1];
+            c += sxy[base + 2];
+        }
+        let tr = a + b;
+        drow[x] = (a * b - c * c) - k * tr * tr;
     }
 }
 
@@ -626,16 +919,20 @@ fn harris_response_core(ix: &Mat, iy: &Mat, k: f32, bufs: &mut [Mat], out: &mut 
     let [pxx, pyy, pxy, sxx, syy, sxy] = bufs else {
         panic!("harris_response_core needs exactly 6 scratch buffers");
     };
+    let bands = band_hint();
     {
         let xs = ix.as_slice();
         let ys = iy.as_slice();
         let (dxx, dyy, dxy) =
             (pxx.as_mut_slice(), pyy.as_mut_slice(), pxy.as_mut_slice());
-        for i in 0..h * w {
-            dxx[i] = xs[i] * xs[i];
-            dyy[i] = ys[i] * ys[i];
-            dxy[i] = xs[i] * ys[i];
-        }
+        band_exec3(dxx, dyy, dxy, w, 0, h, bands, |y0, y1, cxx, cyy, cxy| {
+            let off = y0 * w;
+            for i in off..y1 * w {
+                cxx[i - off] = xs[i] * xs[i];
+                cyy[i - off] = ys[i] * ys[i];
+                cxy[i - off] = xs[i] * ys[i];
+            }
+        });
     }
     let box3 = [[1.0f32; 3]; 3];
     conv3x3_into(pxx, &box3, sxx);
@@ -644,10 +941,13 @@ fn harris_response_core(ix: &Mat, iy: &Mat, k: f32, bufs: &mut [Mat], out: &mut 
     {
         let (a, b, c) = (sxx.as_slice(), syy.as_slice(), sxy.as_slice());
         let dst = out.as_mut_slice();
-        for i in 0..h * w {
-            let tr = a[i] + b[i];
-            dst[i] = (a[i] * b[i] - c[i] * c[i]) - k * tr * tr;
-        }
+        band_exec(dst, w, 0, h, bands, |y0, y1, chunk| {
+            let off = y0 * w;
+            for i in off..y1 * w {
+                let tr = a[i] + b[i];
+                chunk[i - off] = (a[i] * b[i] - c[i] * c[i]) - k * tr * tr;
+            }
+        });
     }
 }
 
@@ -659,37 +959,102 @@ fn edge_pad2_into(img: &Mat, p: usize, out: &mut Mat) {
     debug_assert_eq!(out.shape(), &[h + 2 * p, wp]);
     let src = img.as_slice();
     let dst = out.as_mut_slice();
-    for y in 0..h + 2 * p {
-        let sy = (y as isize - p as isize).clamp(0, h as isize - 1) as usize;
-        let srow = &src[sy * w..(sy + 1) * w];
-        let drow = &mut dst[y * wp..(y + 1) * wp];
-        drow[..p].fill(srow[0]);
-        drow[p..p + w].copy_from_slice(srow);
-        drow[p + w..].fill(srow[w - 1]);
-    }
+    band_exec(dst, wp, 0, h + 2 * p, band_hint(), |y0, y1, chunk| {
+        for y in y0..y1 {
+            let sy = (y as isize - p as isize).clamp(0, h as isize - 1) as usize;
+            let srow = &src[sy * w..(sy + 1) * w];
+            let drow = &mut chunk[(y - y0) * wp..(y - y0 + 1) * wp];
+            drow[..p].fill(srow[0]);
+            drow[p..p + w].copy_from_slice(srow);
+            drow[p + w..].fill(srow[w - 1]);
+        }
+    });
 }
 
-/// Fused valid Sobel pair: (H, W) -> (H-2, W-2), both gradients in one
-/// raw-slice walk (no clamping anywhere — the input is already padded).
-fn sobel_xy_valid_into(padded: &Mat, dx: &mut Mat, dy: &mut Mat) {
+/// Fused valid Sobel pair *with* gradient products: (H, W) ->
+/// (H-2, W-2) planes `gx*gx`, `gy*gy`, `gx*gy` in one raw-slice walk
+/// (no clamping anywhere — the input is already padded).  Folding the
+/// products in saves a full read-modify-write sweep over three planes
+/// versus the old separate squaring pass, and produces identical f32
+/// values (same gradient expressions, then one multiply each).
+fn sobel_products_valid_into(
+    padded: &Mat,
+    dxx: &mut Mat,
+    dyy: &mut Mat,
+    dxy: &mut Mat,
+    bands: usize,
+    simd: bool,
+) {
     let ws = padded.width();
     let (h, w) = (padded.height() - 2, padded.width() - 2);
-    debug_assert_eq!(dx.shape(), &[h, w]);
-    debug_assert_eq!(dy.shape(), &[h, w]);
+    debug_assert_eq!(dxx.shape(), &[h, w]);
+    debug_assert_eq!(dyy.shape(), &[h, w]);
+    debug_assert_eq!(dxy.shape(), &[h, w]);
     let src = padded.as_slice();
-    let dxs = dx.as_mut_slice();
-    let dys = dy.as_mut_slice();
-    for y in 0..h {
-        let r0 = &src[y * ws..y * ws + ws];
-        let r1 = &src[(y + 1) * ws..(y + 1) * ws + ws];
-        let r2 = &src[(y + 2) * ws..(y + 2) * ws + ws];
-        for x in 0..w {
-            let (a, b, c) = (r0[x], r0[x + 1], r0[x + 2]);
-            let (d, f) = (r1[x], r1[x + 2]);
-            let (g, hh, i) = (r2[x], r2[x + 1], r2[x + 2]);
-            dxs[y * w + x] = -a + c - 2.0 * d + 2.0 * f - g + i;
-            dys[y * w + x] = -a - 2.0 * b - c + g + 2.0 * hh + i;
+    let xs = dxx.as_mut_slice();
+    let ys = dyy.as_mut_slice();
+    let xy = dxy.as_mut_slice();
+    band_exec3(xs, ys, xy, w, 0, h, bands, |y0, y1, cxx, cyy, cxy| {
+        for y in y0..y1 {
+            let r0 = &src[y * ws..y * ws + ws];
+            let r1 = &src[(y + 1) * ws..(y + 1) * ws + ws];
+            let r2 = &src[(y + 2) * ws..(y + 2) * ws + ws];
+            let o = (y - y0) * w;
+            sobel_products_row(
+                r0,
+                r1,
+                r2,
+                &mut cxx[o..o + w],
+                &mut cyy[o..o + w],
+                &mut cxy[o..o + w],
+                simd,
+            );
         }
+    });
+}
+
+/// One valid-Sobel-plus-products row over a padded source (rows are
+/// `w + 2` wide; reads are at `x`, `x+1`, `x+2`).
+#[inline]
+fn sobel_products_row(
+    r0: &[f32],
+    r1: &[f32],
+    r2: &[f32],
+    xrow: &mut [f32],
+    yrow: &mut [f32],
+    xyrow: &mut [f32],
+    simd: bool,
+) {
+    let w = xrow.len();
+    let mut x = 0usize;
+    if simd {
+        let two = F32x8::splat(2.0);
+        while x + LANES <= w {
+            let a = F32x8::load(&r0[x..]);
+            let b = F32x8::load(&r0[x + 1..]);
+            let c = F32x8::load(&r0[x + 2..]);
+            let d = F32x8::load(&r1[x..]);
+            let f = F32x8::load(&r1[x + 2..]);
+            let g = F32x8::load(&r2[x..]);
+            let hh = F32x8::load(&r2[x + 1..]);
+            let i = F32x8::load(&r2[x + 2..]);
+            let gx = -a + c - two * d + two * f - g + i;
+            let gy = -a - two * b - c + g + two * hh + i;
+            (gx * gx).store(&mut xrow[x..]);
+            (gy * gy).store(&mut yrow[x..]);
+            (gx * gy).store(&mut xyrow[x..]);
+            x += LANES;
+        }
+    }
+    for x in x..w {
+        let (a, b, c) = (r0[x], r0[x + 1], r0[x + 2]);
+        let (d, f) = (r1[x], r1[x + 2]);
+        let (g, hh, i) = (r2[x], r2[x + 1], r2[x + 2]);
+        let gx = -a + c - 2.0 * d + 2.0 * f - g + i;
+        let gy = -a - 2.0 * b - c + g + 2.0 * hh + i;
+        xrow[x] = gx * gx;
+        yrow[x] = gy * gy;
+        xyrow[x] = gx * gy;
     }
 }
 
@@ -1202,6 +1567,36 @@ mod tests {
         let iy = sobel(&img, 0, 1).unwrap();
         let r = harris_response(&ix, &iy, HARRIS_K).unwrap();
         assert!(r.as_slice().iter().any(|v| v.abs() > 0.0));
+    }
+
+    #[test]
+    fn pooled_banded_gaussian_matches_two_pass_bitwise() {
+        use super::super::banding::set_bands;
+        let pool = BufferPool::new();
+        for (h, w) in [(1usize, 9usize), (3, 9), (16, 9), (17, 5)] {
+            let img = synth::noise_gray(h, w, 11);
+            let plain = gaussian_blur(&img).unwrap();
+            for bands in [1usize, 2, 3, 8] {
+                let _g = set_bands(bands);
+                let banded = gaussian_blur_pooled(&img, &pool).unwrap();
+                assert_eq!(banded, plain, "({h}, {w}) bands={bands}");
+                pool.release(banded);
+            }
+        }
+        // steady state: the overlapped tiles recycle through the parent
+        // frame's capacity class instead of minting per-band shelves
+        let img = synth::noise_gray(16, 9, 2);
+        {
+            let _g = set_bands(4);
+            let a = gaussian_blur_pooled(&img, &pool).unwrap();
+            pool.release(a);
+            let warm = pool.stats().misses;
+            for _ in 0..5 {
+                let b = gaussian_blur_pooled(&img, &pool).unwrap();
+                pool.release(b);
+            }
+            assert_eq!(pool.stats().misses, warm, "banded scratch must recycle");
+        }
     }
 
     #[test]

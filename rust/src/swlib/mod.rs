@@ -12,9 +12,11 @@
 //! and the off-loader patches resolutions the same way DLL injection
 //! rebinds `dlsym` lookups in the paper.
 
+pub mod banding;
 pub mod blas;
 pub mod imgproc;
 mod registry;
+pub mod simd;
 
 pub use registry::{
     FuncEntry, PairEntry, Registry, SwFn, SwFnInPlace, SwFnPair, SwFnPooled, FUSED_CVT_HARRIS,

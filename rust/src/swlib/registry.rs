@@ -238,13 +238,7 @@ impl Registry {
         r.set_pooled("cv::SobelY", pooled_unary(|img, out| imgproc::sobel_into(img, 0, 1, out)));
         r.set_pooled(
             "cv::GaussianBlur",
-            Arc::new(|a: &[&Mat], p: &BufferPool| {
-                let mut tmp = p.acquire(a[0].shape());
-                let mut out = p.acquire(a[0].shape());
-                let res = imgproc::gaussian_blur_into(a[0], &mut tmp, &mut out);
-                p.release(tmp);
-                res.map(|()| out)
-            }),
+            Arc::new(|a: &[&Mat], p: &BufferPool| imgproc::gaussian_blur_pooled(a[0], p)),
         );
         r.set_pooled("cv::boxFilter", pooled_unary(|img, out| imgproc::box_filter_into(img, true, out)));
         r.set_pooled("cv::erode", pooled_unary(imgproc::erode_into));

@@ -1,0 +1,151 @@
+//! Portable 8-lane `f32` vector for the stencil interiors.
+//!
+//! A deliberate stand-in for `std::simd::f32x8` (portable-SIMD is still
+//! nightly-only): a `[f32; 8]` wrapper whose lanewise operators preserve
+//! Rust's left-associative evaluation order **per lane**, so a vectorized
+//! interior produces bit-identical results to the unrolled scalar loop it
+//! replaces — the parity contract `tests/kernel_parity.rs` pins.  The
+//! fixed-count lane loops are exactly the shape LLVM's SLP vectorizer
+//! turns into one AVX/NEON op at `opt-level=3`; no intrinsics, no target
+//! features, no unsafe.
+//!
+//! Whether kernels take this path is a *runtime* choice
+//! ([`super::banding::simd_enabled`]), defaulting from the `simd` cargo
+//! feature when declared — both paths always compile, so one test binary
+//! covers both.
+
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// Lane count of [`F32x8`].
+pub const LANES: usize = 8;
+
+/// Eight `f32` lanes with elementwise arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        Self([v; LANES])
+    }
+
+    /// Unaligned load of the first 8 elements of `s` (panics when short).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        let mut lanes = [0.0f32; LANES];
+        lanes.copy_from_slice(&s[..LANES]);
+        Self(lanes)
+    }
+
+    /// Unaligned store into the first 8 elements of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f32]) {
+        d[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Lanewise minimum (same NaN semantics as `f32::min`).
+    #[inline(always)]
+    pub fn min(self, rhs: Self) -> Self {
+        let mut lanes = [0.0f32; LANES];
+        for i in 0..LANES {
+            lanes[i] = self.0[i].min(rhs.0[i]);
+        }
+        Self(lanes)
+    }
+
+    /// Lanewise maximum.
+    #[inline(always)]
+    pub fn max(self, rhs: Self) -> Self {
+        let mut lanes = [0.0f32; LANES];
+        for i in 0..LANES {
+            lanes[i] = self.0[i].max(rhs.0[i]);
+        }
+        Self(lanes)
+    }
+}
+
+impl Add for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        let mut lanes = [0.0f32; LANES];
+        for i in 0..LANES {
+            lanes[i] = self.0[i] + rhs.0[i];
+        }
+        Self(lanes)
+    }
+}
+
+impl Sub for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        let mut lanes = [0.0f32; LANES];
+        for i in 0..LANES {
+            lanes[i] = self.0[i] - rhs.0[i];
+        }
+        Self(lanes)
+    }
+}
+
+impl Mul for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        let mut lanes = [0.0f32; LANES];
+        for i in 0..LANES {
+            lanes[i] = self.0[i] * rhs.0[i];
+        }
+        Self(lanes)
+    }
+}
+
+impl Neg for F32x8 {
+    type Output = Self;
+    /// Lanewise negation — true IEEE sign flip, **not** `0.0 - x` (which
+    /// turns `-0.0` into `+0.0` and would break bitwise parity with the
+    /// scalar `-a + c` stencil expressions).
+    #[inline(always)]
+    fn neg(self) -> Self {
+        let mut lanes = [0.0f32; LANES];
+        for i in 0..LANES {
+            lanes[i] = -self.0[i];
+        }
+        Self(lanes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanewise_ops_match_scalar_bitwise() {
+        let a: Vec<f32> = (0..LANES).map(|i| 0.3 + i as f32 * 1.7).collect();
+        let b: Vec<f32> = (0..LANES).map(|i| -2.1 + i as f32 * 0.9).collect();
+        let va = F32x8::load(&a);
+        let vb = F32x8::load(&b);
+        // the exact expression shape the stencil interiors use
+        let v = F32x8::splat(0.25) * va + F32x8::splat(0.5) * vb - va * vb;
+        for i in 0..LANES {
+            let s = 0.25 * a[i] + 0.5 * b[i] - a[i] * b[i];
+            assert_eq!(v.0[i].to_bits(), s.to_bits(), "lane {i}");
+        }
+        assert_eq!(va.min(vb).0[3], a[3].min(b[3]));
+        assert_eq!(va.max(vb).0[3], a[3].max(b[3]));
+        assert_eq!((-va).0[2].to_bits(), (-a[2]).to_bits());
+        // sign flip keeps the signed zero the scalar path produces
+        assert_eq!((-F32x8::splat(0.0)).0[0].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let src: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let v = F32x8::load(&src[2..]);
+        let mut dst = vec![0.0f32; 10];
+        v.store(&mut dst[1..]);
+        assert_eq!(&dst[1..9], &src[2..10]);
+        assert_eq!(F32x8::splat(3.5).0, [3.5; LANES]);
+    }
+}

@@ -10,7 +10,11 @@
 //!    stage boundary left/right one task at a time while it improves;
 //! 3. **software-stage fusion** — merge adjacent all-CPU stages (helps
 //!    when the plan has more stages than workers);
-//! 4. **queue-depth ladder** — deeper ingress queues cost tail latency
+//! 4. **intra-frame band ladder** — shard software-stage interiors into
+//!    row bands across otherwise-idle workers (tokens overlap *across*
+//!    frames; bands split *within* one — the simulator prices the halo
+//!    recompute, so banding only wins when idle capacity really exists);
+//! 5. **queue-depth ladder** — deeper ingress queues cost tail latency
 //!    and win nothing once the token pool is covered, so depth is scored
 //!    with an explicit latency penalty.
 //!
@@ -80,12 +84,14 @@ fn plan_from_groups(
     groups: &[std::ops::Range<usize>],
     threads: usize,
     tokens: usize,
+    bands: usize,
 ) -> StagePlan {
     let n = groups.len();
     StagePlan {
         program: program.to_string(),
         threads,
         tokens,
+        bands: bands.max(1),
         edges: edges.to_vec(),
         stages: groups
             .iter()
@@ -99,12 +105,16 @@ fn plan_from_groups(
     }
 }
 
-/// Hashable identity of a configuration: stage end-cuts + token count
-/// (the search must never spend budget re-simulating a layout it has
-/// already scored — the hill-climb would otherwise re-evaluate the
-/// reverse of every accepted move).
-fn config_sig(groups: &[std::ops::Range<usize>], tokens: usize) -> (Vec<usize>, usize) {
-    (groups.iter().map(|r| r.end).collect(), tokens)
+/// Hashable identity of a configuration: stage end-cuts + token count +
+/// band count (the search must never spend budget re-simulating a layout
+/// it has already scored — the hill-climb would otherwise re-evaluate
+/// the reverse of every accepted move).
+fn config_sig(
+    groups: &[std::ops::Range<usize>],
+    tokens: usize,
+    bands: usize,
+) -> (Vec<usize>, usize, usize) {
+    (groups.iter().map(|r| r.end).collect(), tokens, bands.max(1))
 }
 
 /// Recover the contiguous group ranges of a plan.
@@ -162,8 +172,9 @@ pub fn search(
     let threads = seed_plan.threads.max(1);
     let base_depth = |tokens: usize| tokens.max(2);
     let mut ev = Evaluator { cfg, metrics, remaining: cfg.tune.budget.max(1) };
-    let mut seen: std::collections::HashSet<(Vec<usize>, usize)> = std::collections::HashSet::new();
-    seen.insert(config_sig(&groups_of(seed_plan), seed_plan.tokens));
+    let mut seen: std::collections::HashSet<(Vec<usize>, usize, usize)> =
+        std::collections::HashSet::new();
+    seen.insert(config_sig(&groups_of(seed_plan), seed_plan.tokens, seed_plan.bands));
 
     // The dataflow edge set rides along every candidate unchanged; moves
     // are additionally *checked* against it at task granularity so the
@@ -250,11 +261,18 @@ pub fn search(
             // cuts came from *uncalibrated* estimates, so a repartition
             // under its own policy over calibrated times is a genuinely
             // new configuration and is scored like any other
-            if !seen.insert(config_sig(&groups, tokens)) {
+            if !seen.insert(config_sig(&groups, tokens, seed_plan.bands)) {
                 continue;
             }
-            let plan =
-                plan_from_groups(&seed_plan.program, tasks, &edges, &groups, threads, tokens);
+            let plan = plan_from_groups(
+                &seed_plan.program,
+                tasks,
+                &edges,
+                &groups,
+                threads,
+                tokens,
+                seed_plan.bands,
+            );
             let idx = push(
                 &mut candidates,
                 ev.eval(
@@ -287,7 +305,8 @@ pub fn search(
                 if !dag_legal(&shifted) {
                     continue; // never propose a DAG-illegal boundary move
                 }
-                if !seen.insert(config_sig(&shifted, incumbent.plan.tokens)) {
+                if !seen.insert(config_sig(&shifted, incumbent.plan.tokens, incumbent.plan.bands))
+                {
                     continue; // already scored (e.g. the reverse of an accepted move)
                 }
                 let plan = plan_from_groups(
@@ -297,6 +316,7 @@ pub fn search(
                     &shifted,
                     threads,
                     incumbent.plan.tokens,
+                    incumbent.plan.bands,
                 );
                 let idx = push(
                     &mut candidates,
@@ -338,7 +358,7 @@ pub fn search(
             if !dag_legal(&fused) {
                 continue;
             }
-            if !seen.insert(config_sig(&fused, incumbent.plan.tokens)) {
+            if !seen.insert(config_sig(&fused, incumbent.plan.tokens, incumbent.plan.bands)) {
                 continue;
             }
             let plan = plan_from_groups(
@@ -348,6 +368,7 @@ pub fn search(
                 &fused,
                 threads,
                 incumbent.plan.tokens,
+                incumbent.plan.bands,
             );
             // report only the links the merge NEWLY enables (the cross-cut
             // ones), not links each pre-merge stage already carried
@@ -368,7 +389,38 @@ pub fn search(
         }
     }
 
-    // -- 4) queue-depth ladder on the incumbent ----------------------------
+    // -- 4) intra-frame band ladder on the incumbent -----------------------
+    // bands shard a software stage's interior across otherwise-idle
+    // workers; the simulator prices the per-band halo recompute
+    // ([`crate::pipeline::plan::BAND_HALO_OVERHEAD`]), so banding wins
+    // only when idle worker capacity really exists — it trades against
+    // the token axis instead of stacking on top of it blindly
+    {
+        let incumbent = candidates[best].clone();
+        let groups = groups_of(&incumbent.plan);
+        for bands in [2usize, 4] {
+            if bands > threads {
+                break; // more bands than workers only adds halo overhead
+            }
+            if !seen.insert(config_sig(&groups, incumbent.plan.tokens, bands)) {
+                continue;
+            }
+            let mut plan = incumbent.plan.clone();
+            plan.bands = bands;
+            let idx = push(
+                &mut candidates,
+                ev.eval(
+                    plan,
+                    incumbent.queue_depth,
+                    0,
+                    format!("bands={bands} (tokens={})", incumbent.plan.tokens),
+                ),
+            );
+            consider(&mut candidates, &mut best, idx);
+        }
+    }
+
+    // -- 5) queue-depth ladder on the incumbent ----------------------------
     {
         let incumbent = candidates[best].clone();
         let base = base_depth(incumbent.plan.tokens);
@@ -419,7 +471,7 @@ mod tests {
     fn seed_of(tasks: &[TaskSpec], threads: usize, tokens: usize, policy: PartitionPolicy) -> StagePlan {
         let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
         let groups = partition(&times, threads, policy);
-        plan_from_groups("t", tasks, &[], &groups, threads, tokens)
+        plan_from_groups("t", tasks, &[], &groups, threads, tokens, 1)
     }
 
     fn cfg_with(budget: usize) -> Config {
@@ -499,7 +551,7 @@ mod tests {
         ];
         let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
         let groups = partition(&times, 2, PartitionPolicy::Paper);
-        let seed = plan_from_groups("dag", &tasks, &edges, &groups, 2, 4);
+        let seed = plan_from_groups("dag", &tasks, &edges, &groups, 2, 4, 1);
         seed.validate_dag().unwrap();
 
         let cfg = cfg_with(64);
@@ -544,7 +596,36 @@ mod tests {
         let seed = seed_of(&tasks, cfg.threads, cfg.tokens, cfg.policy);
         let out = search(&seed, &tasks, &cfg, &TunerMetrics::default());
         assert!(out.candidates.len() > 1);
-        // one task: makespan is frames * time regardless, seed must tie-win
-        assert_eq!(out.winner().sim.makespan_ns, out.seed().sim.makespan_ns);
+        // one task: no cut or token variant can beat the seed's makespan
+        // — only the band ladder can (sharding the single stage's
+        // interior), so the winner is at worst the seed and at best a
+        // banded variant of it
+        assert!(out.winner().sim.makespan_ns <= out.seed().sim.makespan_ns);
+        assert_eq!(groups_of(&out.winner().plan), groups_of(&out.seed().plan));
+    }
+
+    #[test]
+    fn band_ladder_wins_when_workers_idle() {
+        // one dominant software stage with 4 workers and a token pool of
+        // 1: the frame holds a single worker un-banded, so the bands axis
+        // is the only way to use the idle capacity — the winner must be a
+        // banded plan with a strictly better makespan
+        let tasks = sw_tasks(&[40]);
+        let cfg = cfg_with(32);
+        let seed = seed_of(&tasks, 4, 1, PartitionPolicy::Single);
+        let out = search(&seed, &tasks, &cfg, &TunerMetrics::default());
+        let winner = out.winner();
+        assert!(winner.plan.bands > 1, "winner must band: {}", winner.desc);
+        assert!(
+            winner.sim.makespan_ns < out.seed().sim.makespan_ns,
+            "banded winner {} must beat the un-banded seed {}",
+            winner.sim.makespan_ns,
+            out.seed().sim.makespan_ns
+        );
+        // and the deduper must keep the ladder from re-scoring the seed
+        assert!(
+            out.candidates.iter().filter(|c| c.plan.bands == 1).count() >= 1,
+            "the un-banded incumbent stays in the list"
+        );
     }
 }

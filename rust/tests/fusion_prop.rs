@@ -94,6 +94,7 @@ fn random_unary_chains_fuse_bit_for_bit() {
                 program: built.plan.program.clone(),
                 threads: 1,
                 tokens: 2,
+                bands: 1,
                 edges: built.plan.edges.clone(),
                 stages: vec![StageSpec { index: 0, serial: true, tasks: flat_tasks(&built) }],
             },
@@ -140,6 +141,144 @@ fn random_unary_chains_fuse_bit_for_bit() {
 }
 
 #[test]
+fn random_chains_inside_fork_join_branches_fuse_bit_for_bit() {
+    // Property 3: the fusion planner walks *branches*, not just whole
+    // sequential stages.  A fork-join stage whose second branch is a
+    // random unary chain must fuse that chain into one composed binding
+    // (label `a || s1+s2+...`), stay bit-identical to the interpreter,
+    // and — per-link provenance gating — stop fusing at a re-registered
+    // symbol while the intact prefix still fuses.
+    let mut rng = Rng::new(0xF0524A01);
+    let tmp = empty_hwdb_dir("fusion-prop-branch").unwrap();
+    let db = HwDatabase::load(tmp.path()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let interp_dispatch = std::sync::Arc::new(RegistryDispatch::standard());
+    // symbols the fixed skeleton already uses must not appear in the
+    // sampled chain, so the provenance override below hits exactly one
+    // call site
+    let reserved = ["cv::Sobel", "cv::cornerHarris"];
+
+    for len in 2..=4usize {
+        let (h, w) = (10 + len, 12);
+        let mut symbols: Vec<&str> = Vec::new();
+        while symbols.len() < len {
+            let s = UNARY[rng.below(UNARY.len())];
+            if !symbols.contains(&s) && !reserved.contains(&s) {
+                symbols.push(s);
+            }
+        }
+        let mut text = format!(
+            "program fjBranchProp\n\
+             input x {h}x{w}x3\n\
+             call gray = cv::cvtColor(x)\n\
+             call a = cv::Sobel(gray)\n\
+             call b1 = {}(gray)\n",
+            symbols[0]
+        );
+        for (i, sym) in symbols.iter().enumerate().skip(1) {
+            text.push_str(&format!("call b{} = {}(b{})\n", i + 1, sym, i));
+        }
+        text.push_str(&format!(
+            "call join = cv::harrisResponse(a, b{len})\n\
+             call out = cv::normalize(join)\n\
+             output out\n"
+        ));
+        let prog = parse_program(&text).unwrap();
+        let trace = trace_program(&prog, &[vec![synth::noise_rgb(h, w, len as u64)]]).unwrap();
+        let ir = Ir::from_graph(&CallGraph::from_trace(&trace)).unwrap();
+        let registry = Registry::standard();
+        let cfg = Config {
+            artifacts_dir: tmp.path().to_path_buf(),
+            cpu_only: true,
+            threads: 2,
+            tokens: 2,
+            ..Default::default()
+        };
+        let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+        let tasks = flat_tasks(&built);
+        assert_eq!(tasks.len(), len + 4, "{symbols:?}");
+
+        // regroup so the Sobel branch and the whole chain share one
+        // fork-join stage
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 2,
+            bands: 1,
+            edges: built.plan.edges.clone(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
+                StageSpec { index: 1, serial: false, tasks: tasks[1..len + 2].to_vec() },
+                StageSpec { index: 2, serial: true, tasks: tasks[len + 2..len + 4].to_vec() },
+            ],
+        };
+        let fj = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        let labels = fj.pipeline.stage_labels();
+        assert_eq!(labels.len(), 3);
+        assert_eq!(
+            labels[1],
+            format!("cv::Sobel || {}", symbols.join("+")),
+            "{symbols:?}: in-branch chain must fuse"
+        );
+
+        let interp = Interpreter::new(prog, interp_dispatch.clone());
+        for fseed in 0..2u64 {
+            let frame = synth::noise_rgb(h, w, 300 + fseed);
+            let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+            assert_eq!(
+                fj.process_one(frame).unwrap(),
+                want,
+                "{symbols:?} seed {fseed}: branch-fused diverges"
+            );
+        }
+        let frames: Vec<Mat> = (0..4).map(|s| synth::noise_rgb(h, w, 400 + s)).collect();
+        let (outs, _) = fj.run(frames.clone()).unwrap();
+        for (i, f) in frames.into_iter().enumerate() {
+            assert_eq!(
+                outs[i],
+                interp.run(&[f]).unwrap().remove(0),
+                "{symbols:?}: streamed frame {i} diverges"
+            );
+        }
+
+        // re-register the chain's LAST symbol: the link into it is no
+        // longer provenance-intact, so the prefix fuses and the patched
+        // tail binds alone
+        let mut patched = Registry::standard();
+        let last = symbols[len - 1];
+        patched.register(
+            last,
+            1,
+            std::sync::Arc::new(|a: &[&Mat]| {
+                let mut m = a[0].clone();
+                for v in m.as_mut_slice() {
+                    *v = *v * 0.5 + 3.0;
+                }
+                Ok(m)
+            }),
+        );
+        let split = instantiate(&regrouped, db.dir(), &rt, &patched).unwrap();
+        let want_label = format!("cv::Sobel || {} || {last}", symbols[..len - 1].join("+"));
+        assert_eq!(
+            split.pipeline.stage_labels()[1],
+            want_label,
+            "{symbols:?}: fusion must stop at the overridden link"
+        );
+        // and the override's semantics flow through the fork-join stage
+        let frame = synth::noise_rgb(h, w, 777);
+        let gray = patched.call("cv::cvtColor", &[&frame]).unwrap();
+        let a = patched.call("cv::Sobel", &[&gray]).unwrap();
+        let mut b = gray;
+        for sym in &symbols {
+            b = patched.call(sym, &[&b]).unwrap();
+        }
+        let join = patched.call("cv::harrisResponse", &[&a, &b]).unwrap();
+        let want = patched.call("cv::normalize", &[&join]).unwrap();
+        assert_eq!(split.process_one(frame).unwrap(), want, "{symbols:?}: override lost");
+    }
+}
+
+#[test]
 fn fork_join_last_sibling_moves_instead_of_cloning() {
     // harris_dag with cv::Sobel overridden: the override disables the
     // fused one-walk pair, so the stage takes the generic fork-join
@@ -166,6 +305,7 @@ fn fork_join_last_sibling_moves_instead_of_cloning() {
         program: built.plan.program.clone(),
         threads: 2,
         tokens: 4,
+        bands: 1,
         edges: built.plan.edges.clone(),
         stages: vec![
             StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },

@@ -192,6 +192,119 @@ fn fused_gray_response_pipeline_matches_chain_across_shapes() {
 }
 
 #[test]
+fn banded_and_simd_interiors_match_reference_bit_for_bit() {
+    // The row-band shards and the vectorized interiors must be
+    // unobservable: only the destination is partitioned (sources are
+    // shared immutably, halo rows are free reads) and the vector ops are
+    // lanewise in the scalar evaluation order, so every combination of
+    // band count × SIMD toggle is bit-identical to the naive reference.
+    // Band counts deliberately straddle the heights in the shape sweep
+    // (bands > rows clamps), and band boundaries land mid-stencil.
+    use courier::swlib::banding::{force_simd, set_bands};
+    for &bands in &[1usize, 2, 3, 8] {
+        for &simd in &[false, true] {
+            let _b = set_bands(bands);
+            let _s = force_simd(simd);
+            for (h, w) in shapes() {
+                let img = gray(h, w, 7);
+                let ctx = format!("({h}, {w}) bands={bands} simd={simd}");
+                assert_eq!(
+                    imgproc::sobel(&img, 1, 0).unwrap(),
+                    reference::sobel(&img, 1, 0).unwrap(),
+                    "sobel dx {ctx}"
+                );
+                assert_eq!(
+                    imgproc::sobel(&img, 0, 1).unwrap(),
+                    reference::sobel(&img, 0, 1).unwrap(),
+                    "sobel dy {ctx}"
+                );
+                let mut dx = Mat::zeros(img.shape());
+                let mut dy = Mat::zeros(img.shape());
+                imgproc::sobel_xy_into(&img, &mut dx, &mut dy).unwrap();
+                assert_eq!(dx, reference::sobel(&img, 1, 0).unwrap(), "pair dx {ctx}");
+                assert_eq!(dy, reference::sobel(&img, 0, 1).unwrap(), "pair dy {ctx}");
+                assert_eq!(
+                    imgproc::box_filter(&img, true).unwrap(),
+                    reference::box_filter(&img, true).unwrap(),
+                    "box {ctx}"
+                );
+                assert_eq!(
+                    imgproc::laplacian(&img).unwrap(),
+                    reference::laplacian(&img).unwrap(),
+                    "laplacian {ctx}"
+                );
+                assert_eq!(
+                    imgproc::scharr(&img).unwrap(),
+                    reference::scharr(&img).unwrap(),
+                    "scharr {ctx}"
+                );
+                assert_eq!(
+                    imgproc::median_blur(&img).unwrap(),
+                    reference::median_blur(&img).unwrap(),
+                    "median {ctx}"
+                );
+                assert_eq!(
+                    imgproc::erode(&img).unwrap(),
+                    reference::erode(&img).unwrap(),
+                    "erode {ctx}"
+                );
+                assert_eq!(
+                    imgproc::dilate(&img).unwrap(),
+                    reference::dilate(&img).unwrap(),
+                    "dilate {ctx}"
+                );
+                assert_eq!(
+                    imgproc::corner_harris(&img, HARRIS_K).unwrap(),
+                    reference::corner_harris(&img, HARRIS_K).unwrap(),
+                    "harris {ctx}"
+                );
+                let rgb = synth::noise_rgb(h, w, 7);
+                let cvt_want = {
+                    // scalar, unsharded baseline (guards nest + restore)
+                    let _b0 = set_bands(1);
+                    let _s0 = force_simd(false);
+                    imgproc::cvt_color(&rgb).unwrap()
+                };
+                assert_eq!(imgproc::cvt_color(&rgb).unwrap(), cvt_want, "cvt {ctx}");
+                // separable Gaussian: banding/SIMD may not add ANY error
+                // beyond the reassociation the two-pass form already has
+                let sep = imgproc::gaussian_blur(&img).unwrap();
+                let full = reference::gaussian_blur(&img).unwrap();
+                assert!(
+                    sep.allclose(&full, 1e-6, 1e-4),
+                    "gaussian {ctx}: max diff {}",
+                    sep.max_abs_diff(&full)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn banded_gaussian_is_bitwise_stable_across_band_counts() {
+    // the two-pass Gaussian must produce the SAME bits whatever the band
+    // count (halo rows of the h-pass are recomputed identically by
+    // neighbouring bands), so deployments can retune bands without
+    // golden outputs shifting
+    use courier::swlib::banding::set_bands;
+    for (h, w) in shapes() {
+        let img = gray(h, w, 13);
+        let baseline = {
+            let _b = set_bands(1);
+            imgproc::gaussian_blur(&img).unwrap()
+        };
+        for &bands in &[2usize, 3, 5, 8] {
+            let _b = set_bands(bands);
+            assert_eq!(
+                imgproc::gaussian_blur(&img).unwrap(),
+                baseline,
+                "({h}, {w}) bands={bands}"
+            );
+        }
+    }
+}
+
+#[test]
 fn into_variants_validate_out_shape() {
     let img = gray(6, 6, 1);
     let mut wrong = Mat::zeros(&[5, 6]);

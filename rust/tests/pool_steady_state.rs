@@ -134,6 +134,66 @@ fn downcycling_stream_reaches_zero_steady_state_misses() {
 }
 
 #[test]
+fn banded_pipeline_reaches_zero_steady_state_misses() {
+    // banding on: every band of the pooled Gaussian draws its h-pass
+    // scratch from the *parent* capacity class (acquire_band_scratch),
+    // so sharded stages add no per-band-count shelves and the
+    // zero-allocation invariant holds unchanged — the regression this
+    // pins is a pool that leaked one shelf per distinct band height
+    let (h, w) = (24, 32);
+    let tmp = empty_hwdb_dir("pool-steady-bands").unwrap();
+    let db = HwDatabase::load(tmp.path()).unwrap();
+    let prog = courier::app::parse_program(&format!(
+        "program bandedChain\n\
+         input frame {h}x{w}x3\n\
+         call gray = cv::cvtColor(frame)\n\
+         call blur = cv::GaussianBlur(gray)\n\
+         call resp = cv::cornerHarris(blur)\n\
+         call out = cv::convertScaleAbs(resp)\n\
+         output out\n"
+    ))
+    .unwrap();
+    let trace = trace_program(&prog, &[vec![synth::noise_rgb(h, w, 0)]]).unwrap();
+    let ir = Ir::from_graph(&CallGraph::from_trace(&trace)).unwrap();
+    let cfg = Config {
+        artifacts_dir: tmp.path().to_path_buf(),
+        cpu_only: true,
+        threads: 1,
+        tokens: 2,
+        bands: 4,
+        ..Default::default()
+    };
+    let built =
+        build(&ir, &db, &Runtime::cpu().unwrap(), &Registry::standard(), &cfg).unwrap();
+    assert_eq!(built.plan.bands, 4, "the config's band count must reach the plan");
+
+    let (warm_out, _) = built.run(frames(h, w, 8, 0)).unwrap();
+    assert_eq!(warm_out.len(), 8);
+    let warm = built.pool.stats();
+    assert!(warm.misses > 0, "cold start must have allocated something");
+
+    let (outs, _) = built.run(frames(h, w, 12, 200)).unwrap();
+    assert_eq!(outs.len(), 12);
+    let steady = built.pool.stats();
+    assert_eq!(
+        steady.misses, warm.misses,
+        "banded steady-state frame path allocated: {} new misses over 12 \
+         frames (hits {} -> {})",
+        steady.misses - warm.misses,
+        warm.hits,
+        steady.hits
+    );
+    assert!(steady.hits > warm.hits, "the steady-state frames must run off the pool");
+
+    // and the banded stream stays bit-identical to the original binary
+    let interp = Interpreter::new(prog, std::sync::Arc::new(RegistryDispatch::standard()));
+    for (i, f) in frames(h, w, 12, 200).into_iter().enumerate() {
+        let want = interp.run(&[f]).unwrap().remove(0);
+        assert_eq!(outs[i], want, "frame {i} diverges from the original binary");
+    }
+}
+
+#[test]
 fn pool_survives_multi_worker_streams() {
     // more workers/tokens: the invariant loosens to "misses stop growing
     // once shelves cover the peak concurrent working set" — run a large
