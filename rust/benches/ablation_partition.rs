@@ -105,6 +105,7 @@ fn main() {
                                 TaskKind::Sw
                             },
                             est_ns: courier_times[i],
+                            hw_cost: None,
                         })
                         .collect(),
                 })

@@ -1,0 +1,157 @@
+//! **Pareto frontier**: the tuner's latency × area × power trade-off on
+//! the corner-Harris chain.
+//!
+//! A PPA-annotated Harris plan (paper Table I software times as the
+//! demotion alternatives, case-study-scale hardware estimates) is pushed
+//! through `tune::search`; the placement-demotion phase populates the
+//! area/power axes, so the frontier must hold at least two non-dominated
+//! points — the full-hardware latency optimum and at least one demoted,
+//! smaller-footprint point.  The artifact records the frontier extremes
+//! (latency / area / power keys) plus what a budget-gated promotion
+//! would pick at the default XC7Z020 budget.
+//!
+//! Hermetic: the search evaluates plans in the platform simulator only —
+//! no artifact database, no `make artifacts`.  Run:
+//! `cargo bench --bench pareto_frontier`
+
+mod common;
+
+use std::time::Duration;
+
+use courier::config::Config;
+use courier::metrics::TunerMetrics;
+use courier::pipeline::{partition, HwCost, StagePlan, StageSpec, TaskKind, TaskSpec};
+use courier::tune::search;
+use courier::util::bench::{section, smoke, write_bench_json, Bench, Measurement};
+
+/// Paper Table I software times for the Harris chain, ns.
+const SW_NS: [u64; 4] = [39_800_000, 13_600_000, 80_200_000, 13_200_000];
+const SYMBOLS: [&str; 4] =
+    ["cv::cvtColor", "cv::cornerHarris", "cv::normalize", "cv::convertScaleAbs"];
+/// Hardware placement mask (normalize stays software, like the database).
+const HW: [bool; 4] = [true, true, false, true];
+/// Per-module (est_ns, area_luts, power_mw) for the placed modules.
+const HW_COST: [(u64, u64, u64); 4] =
+    [(4_000_000, 9_000, 200), (2_500_000, 12_000, 250), (0, 0, 0), (1_800_000, 4_000, 100)];
+
+fn harris_tasks() -> Vec<TaskSpec> {
+    (0..4)
+        .map(|i| {
+            let (hw_ns, area, power) = HW_COST[i];
+            if HW[i] {
+                TaskSpec {
+                    covers: vec![i],
+                    symbol: SYMBOLS[i].into(),
+                    kind: TaskKind::Hw {
+                        module: format!("hls_m{i}"),
+                        artifact: format!("hls_m{i}.hlo.txt"),
+                    },
+                    est_ns: hw_ns,
+                    hw_cost: Some(HwCost {
+                        area_luts: area,
+                        power_mw: power,
+                        xfer_in_ns: 500_000,
+                        xfer_out_ns: 500_000,
+                        sw_alt_ns: SW_NS[i],
+                    }),
+                }
+            } else {
+                TaskSpec {
+                    covers: vec![i],
+                    symbol: SYMBOLS[i].into(),
+                    kind: TaskKind::Sw,
+                    est_ns: SW_NS[i],
+                    hw_cost: None,
+                }
+            }
+        })
+        .collect()
+}
+
+fn seed_plan(tasks: &[TaskSpec], threads: usize, tokens: usize) -> StagePlan {
+    let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
+    let groups = partition(&times, threads, Config::default().policy);
+    let n = groups.len();
+    let stages: Vec<StageSpec> = groups
+        .iter()
+        .enumerate()
+        .map(|(idx, r)| StageSpec {
+            index: idx,
+            serial: idx == 0 || idx == n - 1,
+            tasks: r.clone().map(|i| tasks[i].clone()).collect(),
+        })
+        .collect();
+    StagePlan {
+        program: "paretoHarris".into(),
+        threads,
+        tokens,
+        bands: 1,
+        edges: Vec::new(),
+        stages,
+    }
+}
+
+fn main() {
+    section("pareto frontier — Harris chain, latency x area x power");
+    let mut cfg = Config::default();
+    if smoke() {
+        cfg.tune.budget = cfg.tune.budget.min(48);
+    }
+    let tasks = harris_tasks();
+    let seed = seed_plan(&tasks, cfg.threads.max(2), cfg.tokens.max(2));
+
+    let bench = Bench::from_env(Duration::from_secs(4));
+    let mut outcome = None;
+    let m: Measurement = bench.run("tune::search over the annotated Harris chain", || {
+        outcome = Some(search(&seed, &tasks, &cfg, &TunerMetrics::default()));
+    });
+    let outcome = outcome.expect("search ran at least once");
+
+    let frontier = &outcome.frontier;
+    assert!(
+        frontier.len() >= 2,
+        "demotion must populate at least two non-dominated points, got {}",
+        frontier.len()
+    );
+    println!("  {} candidate(s), {} non-dominated point(s):", outcome.candidates.len(), frontier.len());
+    for p in frontier {
+        println!(
+            "    {:<40} {:>9.3} ms {:>7} LUT {:>5} mW",
+            outcome.candidates[p.candidate].desc,
+            p.latency_ns as f64 / 1e6,
+            p.area_luts,
+            p.power_mw
+        );
+    }
+
+    // frontier extremes: the first point is latency-optimal, the last is
+    // the smallest footprint (sorted by latency; non-domination makes the
+    // area axis fall as latency rises)
+    let fastest = &frontier[0];
+    let smallest = frontier.iter().min_by_key(|p| p.area_luts).expect("non-empty");
+    assert!(
+        smallest.area_luts < fastest.area_luts,
+        "frontier must trade area for latency ({} vs {} LUTs)",
+        smallest.area_luts,
+        fastest.area_luts
+    );
+
+    // what a budget-gated promotion would pick on the default XC7Z020
+    let budget = cfg.serve.fabric_area_luts as u64;
+    let promoted = outcome.best_within_area(budget).expect("all-sw point always fits");
+
+    let extras: Vec<(&str, f64)> = vec![
+        ("frontier_points", frontier.len() as f64),
+        ("candidates", outcome.candidates.len() as f64),
+        ("latency_ms", fastest.latency_ns as f64 / 1e6),
+        ("area_luts", fastest.area_luts as f64),
+        ("power_mw", fastest.power_mw as f64),
+        ("min_area_latency_ms", smallest.latency_ns as f64 / 1e6),
+        ("min_area_luts", smallest.area_luts as f64),
+        ("min_area_power_mw", smallest.power_mw as f64),
+        ("fabric_budget_luts", budget as f64),
+        ("promoted_latency_ms", promoted.latency_ns as f64 / 1e6),
+        ("promoted_area_luts", promoted.area_luts as f64),
+    ];
+    write_bench_json("pareto", &[m], &extras).expect("write BENCH_pareto.json");
+}

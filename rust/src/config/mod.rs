@@ -57,17 +57,22 @@ pub struct ServeConfig {
     pub max_sessions: usize,
     /// Per-session ingress queue bound (backpressure depth).
     pub queue_depth: usize,
+    /// Fabric area budget in slice LUTs: the hardware modules a plan
+    /// places concurrently must fit this footprint, or the cold build
+    /// fails with [`crate::CourierError::Fabric`] and serve falls back to
+    /// sw placement.  Default: the XC7Z020's 53 200 LUTs.
+    pub fabric_area_luts: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: 4, max_sessions: 8, queue_depth: 16 }
+        Self { workers: 4, max_sessions: 8, queue_depth: 16, fabric_area_luts: 53_200 }
     }
 }
 
 /// `[tune]` section: knobs for the measurement-driven autotuner
 /// ([`crate::tune`]).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TuneConfig {
     /// Search budget: maximum candidate plans the simulator scores.
     pub budget: usize,
@@ -83,6 +88,13 @@ pub struct TuneConfig {
     /// Calibrated cost database manifest to load/merge/save
     /// (`hwdb`-style JSON); empty = in-memory only.
     pub cost_db: Option<PathBuf>,
+    /// Sim model: fractional cost saving credited per fusable link inside
+    /// a stage (was the hardcoded `FUSION_LINK_SAVING`).  A later PR will
+    /// calibrate this from measured fused-vs-split runs.
+    pub fusion_link_saving: f64,
+    /// Sim model: fractional per-band halo overhead for row-band sharding
+    /// (was the hardcoded `BAND_HALO_OVERHEAD`).
+    pub band_halo_overhead: f64,
 }
 
 impl Default for TuneConfig {
@@ -94,6 +106,8 @@ impl Default for TuneConfig {
             top_k: 2,
             max_tokens: 16,
             cost_db: None,
+            fusion_link_saving: crate::pipeline::FUSION_LINK_SAVING,
+            band_halo_overhead: crate::pipeline::BAND_HALO_OVERHEAD,
         }
     }
 }
@@ -193,12 +207,15 @@ impl Config {
             "serve.workers",
             "serve.max_sessions",
             "serve.queue_depth",
+            "serve.fabric_area_luts",
             "tune.budget",
             "tune.sim_frames",
             "tune.measure_frames",
             "tune.top_k",
             "tune.max_tokens",
             "tune.cost_db",
+            "tune.fusion_link_saving",
+            "tune.band_halo_overhead",
             "obs.enabled",
             "obs.trace_capacity",
             "obs.snapshot_secs",
@@ -242,6 +259,9 @@ impl Config {
         if let Some(v) = doc.get_usize("serve.queue_depth") {
             cfg.serve.queue_depth = v;
         }
+        if let Some(v) = doc.get_usize("serve.fabric_area_luts") {
+            cfg.serve.fabric_area_luts = v;
+        }
         if let Some(v) = doc.get_usize("tune.budget") {
             cfg.tune.budget = v;
         }
@@ -259,6 +279,12 @@ impl Config {
         }
         if let Some(v) = doc.get_str("tune.cost_db") {
             cfg.tune.cost_db = (!v.is_empty()).then(|| PathBuf::from(v));
+        }
+        if let Some(v) = doc.get_f64("tune.fusion_link_saving") {
+            cfg.tune.fusion_link_saving = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = doc.get_f64("tune.band_halo_overhead") {
+            cfg.tune.band_halo_overhead = v.max(0.0);
         }
         if let Some(v) = doc.get_bool("obs.enabled") {
             cfg.obs.enabled = v;
@@ -278,8 +304,10 @@ impl Config {
             "threads = {}\ntokens = {}\nbands = {}\npolicy = \"{}\"\nartifacts_dir = \"{}\"\n\
              trace_frames = {}\ncpu_only = {}\ninclude_disabled_modules = {}\n\
              \n[serve]\nworkers = {}\nmax_sessions = {}\nqueue_depth = {}\n\
+             fabric_area_luts = {}\n\
              \n[tune]\nbudget = {}\nsim_frames = {}\nmeasure_frames = {}\n\
-             top_k = {}\nmax_tokens = {}\n",
+             top_k = {}\nmax_tokens = {}\n\
+             fusion_link_saving = {}\nband_halo_overhead = {}\n",
             self.threads,
             self.tokens,
             self.bands,
@@ -291,11 +319,14 @@ impl Config {
             self.serve.workers,
             self.serve.max_sessions,
             self.serve.queue_depth,
+            self.serve.fabric_area_luts,
             self.tune.budget,
             self.tune.sim_frames,
             self.tune.measure_frames,
             self.tune.top_k,
             self.tune.max_tokens,
+            self.tune.fusion_link_saving,
+            self.tune.band_halo_overhead,
         );
         if let Some(p) = &self.tune.cost_db {
             s.push_str(&format!("cost_db = \"{}\"\n", p.display()));
@@ -332,7 +363,7 @@ mod tests {
             threads: 4,
             tokens: 8,
             policy: PartitionPolicy::Optimal,
-            serve: ServeConfig { workers: 6, max_sessions: 3, queue_depth: 5 },
+            serve: ServeConfig { workers: 6, max_sessions: 3, queue_depth: 5, ..Default::default() },
             ..Default::default()
         };
         let doc = TomlDoc::parse(&c.to_toml()).unwrap();
@@ -373,6 +404,8 @@ mod tests {
                 top_k: 1,
                 max_tokens: 8,
                 cost_db: Some(PathBuf::from("x.json")),
+                fusion_link_saving: 0.25,
+                band_halo_overhead: 0.05,
             },
             ..Default::default()
         };
@@ -391,6 +424,26 @@ mod tests {
         assert_eq!(c.obs.snapshot_secs, 5);
         let back = Config::from_doc(&TomlDoc::parse(&c.to_toml()).unwrap()).unwrap();
         assert_eq!(back, c);
+    }
+
+    #[test]
+    fn sim_model_knobs_default_to_the_pinned_constants() {
+        let c = Config::default();
+        assert_eq!(c.tune.fusion_link_saving, crate::pipeline::FUSION_LINK_SAVING);
+        assert_eq!(c.tune.band_halo_overhead, crate::pipeline::BAND_HALO_OVERHEAD);
+        assert_eq!(c.serve.fabric_area_luts, 53_200); // XC7Z020
+
+        let doc = TomlDoc::parse(
+            "[serve]\nfabric_area_luts = 9000\n[tune]\nfusion_link_saving = 0.2\nband_halo_overhead = 0.01\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.serve.fabric_area_luts, 9000);
+        assert_eq!(c.tune.fusion_link_saving, 0.2);
+        assert_eq!(c.tune.band_halo_overhead, 0.01);
+        // out-of-range saving clamps rather than producing negative costs
+        let doc = TomlDoc::parse("[tune]\nfusion_link_saving = 7.0\n").unwrap();
+        assert_eq!(Config::from_doc(&doc).unwrap().tune.fusion_link_saving, 1.0);
     }
 
     #[test]

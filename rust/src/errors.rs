@@ -63,6 +63,12 @@ pub enum CourierError {
     #[error("hlo parse error: {0}")]
     HloParse(String),
 
+    /// Fabric area budget violation: the set of concurrently placed hardware
+    /// modules does not fit `[serve].fabric_area_luts`.  Callers that can
+    /// degrade (serve cold builds) catch this and retry with sw placement.
+    #[error("fabric budget: {0}")]
+    Fabric(String),
+
     /// Dataflow-graph legality violation: a backwards edge across a stage
     /// cut, a fused region tapped from outside, an unsupported multi-input
     /// flow — anything that would otherwise mis-wire a non-linear call

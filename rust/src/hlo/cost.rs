@@ -138,6 +138,30 @@ pub fn latency_cycles(flops: f64, bytes: f64) -> u64 {
     (flops / 8.0).max(bytes / 4.0).ceil() as u64
 }
 
+/// Byte volume of a set of f32 tensor ports: Σ shape-product × 4 — the
+/// payload one side of a sw↔hw cut must DMA.
+pub fn staging_bytes(shapes: &[&[usize]]) -> f64 {
+    shapes
+        .iter()
+        .map(|s| s.iter().product::<usize>() as f64 * 4.0)
+        .sum()
+}
+
+/// DMA cost of one boundary crossing, ns: fixed per-transfer setup
+/// (descriptor write + doorbell + completion interrupt) plus byte volume
+/// over sustained streaming bandwidth.  This is the edge price the
+/// builder attaches to every hardware task and the simulator charges on
+/// the hardware side of each sw↔hw cut — hw→hw links stream on-fabric
+/// and never come through here.
+pub fn dma_transfer_ns(bytes: f64, bytes_per_us: f64, setup_us: f64) -> u64 {
+    let bw = if bytes_per_us > 0.0 {
+        bytes_per_us
+    } else {
+        crate::hwdb::DEFAULT_DMA_BYTES_PER_US
+    };
+    ((setup_us.max(0.0) + bytes.max(0.0) / bw) * 1e3).ceil() as u64
+}
+
 /// Calibration factors are clamped to this band: a single wild
 /// measurement (page fault, cold cache) must not swing an estimate by
 /// more than an order of magnitude in either direction.
@@ -306,6 +330,27 @@ mod tests {
             task_key("cv::Sobel", &[16, 16], true),
             task_key("cv::Sobel", &[16, 16], false)
         );
+    }
+
+    #[test]
+    fn dma_price_is_setup_plus_bytes_over_bandwidth() {
+        // 4 KiB at 1024 B/us with 4 us setup: 4 + 4 = 8 us.
+        assert_eq!(dma_transfer_ns(4096.0, 1024.0, 4.0), 8000);
+        // Setup dominates tiny payloads — a cut is never free.
+        assert_eq!(dma_transfer_ns(0.0, 1024.0, 4.0), 4000);
+        // Degenerate bandwidth falls back to the manifest default
+        // instead of dividing by zero.
+        assert_eq!(
+            dma_transfer_ns(1024.0, 0.0, 4.0),
+            dma_transfer_ns(1024.0, crate::hwdb::DEFAULT_DMA_BYTES_PER_US, 4.0)
+        );
+    }
+
+    #[test]
+    fn staging_bytes_sums_f32_ports() {
+        assert_eq!(staging_bytes(&[&[240, 320, 3]]), 240.0 * 320.0 * 3.0 * 4.0);
+        assert_eq!(staging_bytes(&[&[8, 8], &[4]]), (64.0 + 4.0) * 4.0);
+        assert_eq!(staging_bytes(&[]), 0.0);
     }
 
     #[test]

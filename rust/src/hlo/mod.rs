@@ -20,7 +20,7 @@ mod cost;
 mod parser;
 
 pub use cost::{
-    cycles_to_ms, latency_cycles, task_key, CostCalibration, ResourceEstimate, BRAM_BYTES,
-    CALIBRATION_FACTOR_BAND,
+    cycles_to_ms, dma_transfer_ns, latency_cycles, staging_bytes, task_key, CostCalibration,
+    ResourceEstimate, BRAM_BYTES, CALIBRATION_FACTOR_BAND,
 };
 pub use parser::{parse_hlo_text, HloComputation, HloInstruction, HloModule};

@@ -1,7 +1,45 @@
 //! Manifest schema (mirror of what `python/compile/aot.py` writes).
+//!
+//! Two schema versions are accepted:
+//!
+//! * **v1** — flat analytic estimates per variant (`est_flops`,
+//!   `est_bytes`, `est_latency_cycles`).  Still the format the AOT
+//!   compiler emits; every PPA/DMA field falls back to a documented
+//!   default so v1 databases keep building and tuning.
+//! * **v2** — v1 plus a per-variant PPA record (`ppa`: latency,
+//!   throughput, LUT/BRAM area, power) and per-direction DMA descriptors
+//!   (`dma_in`/`dma_out`: streaming bandwidth + per-transfer setup).
+//!   This is what the area-budgeted fabric allocator and the Pareto
+//!   tuner consume.
+//!
+//! Parse errors carry the module name / variant index / offending key so
+//! a broken hand-edited manifest points at the line that matters
+//! (parity with `tomlmini`'s line-numbered errors).
 
 use crate::util::json::{self, Json};
-use crate::Result;
+use crate::{CourierError, Result};
+
+/// Default streaming DMA bandwidth when a manifest carries no descriptor:
+/// ~1 GB/s, a conservative AXI-DMA figure for a Zynq-7000 HP port.
+pub const DEFAULT_DMA_BYTES_PER_US: f64 = 1024.0;
+/// Default per-transfer DMA setup cost (descriptor write + interrupt), us.
+pub const DEFAULT_DMA_SETUP_US: f64 = 4.0;
+/// Default module area when a v1 manifest carries no PPA record: a
+/// mid-size HLS video kernel on the XC7Z020 (~9% of its 53 200 LUTs).
+pub const DEFAULT_AREA_LUTS: f64 = 4800.0;
+/// Default module BRAM footprint (two 18 Kb line buffers), Kb.
+pub const DEFAULT_AREA_BRAM_KB: f64 = 36.0;
+/// Default module dynamic power, mW.
+pub const DEFAULT_POWER_MW: f64 = 120.0;
+
+/// Add `where_` context to a JSON shape error without disturbing other
+/// error kinds (IO errors already carry their own context).
+fn ctx(e: CourierError, where_: &str) -> CourierError {
+    match e {
+        CourierError::Json(msg) => CourierError::Json(format!("{where_}: {msg}")),
+        other => other,
+    }
+}
 
 /// Shape + dtype of one module port.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -18,6 +56,119 @@ impl TensorDesc {
             shape: v.req("shape")?.as_usize_vec()?,
             dtype: v.req("dtype")?.as_str()?.to_string(),
         })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shape", Json::from_usizes(&self.shape)),
+            ("dtype", Json::Str(self.dtype.clone())),
+        ])
+    }
+}
+
+/// One direction of the DMA path between host memory and a module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DmaDesc {
+    /// Sustained streaming bandwidth, bytes per microsecond.
+    pub dma_bytes_per_us: f64,
+    /// Fixed per-transfer setup cost (descriptor + doorbell), microseconds.
+    pub dma_setup_us: f64,
+}
+
+impl Default for DmaDesc {
+    fn default() -> Self {
+        Self { dma_bytes_per_us: DEFAULT_DMA_BYTES_PER_US, dma_setup_us: DEFAULT_DMA_SETUP_US }
+    }
+}
+
+impl DmaDesc {
+    /// Nanoseconds to move `bytes` across this direction of the link.
+    pub fn transfer_ns(&self, bytes: f64) -> f64 {
+        let bw = if self.dma_bytes_per_us > 0.0 { self.dma_bytes_per_us } else { DEFAULT_DMA_BYTES_PER_US };
+        (self.dma_setup_us + bytes / bw) * 1e3
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            dma_bytes_per_us: v
+                .get("dma_bytes_per_us")
+                .map(Json::as_f64)
+                .transpose()?
+                .unwrap_or(DEFAULT_DMA_BYTES_PER_US),
+            dma_setup_us: v
+                .get("dma_setup_us")
+                .map(Json::as_f64)
+                .transpose()?
+                .unwrap_or(DEFAULT_DMA_SETUP_US),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dma_bytes_per_us", Json::Num(self.dma_bytes_per_us)),
+            ("dma_setup_us", Json::Num(self.dma_setup_us)),
+        ])
+    }
+}
+
+/// Performance / power / area record for one compiled variant (v2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PpaRecord {
+    /// Pipeline latency in fabric cycles (v1: `est_latency_cycles`).
+    pub latency_cycles: u64,
+    /// Sustained throughput, frames per second (0 = unknown).
+    pub throughput_fps: f64,
+    /// Slice-LUT footprint.
+    pub area_luts: f64,
+    /// Block-RAM footprint, Kb.
+    pub area_bram_kb: f64,
+    /// Dynamic power, mW.
+    pub power_mw: f64,
+}
+
+impl PpaRecord {
+    /// v1 fallback: latency from the flat estimate, everything else at the
+    /// documented defaults.
+    pub fn from_v1(est_latency_cycles: u64) -> Self {
+        Self {
+            latency_cycles: est_latency_cycles,
+            throughput_fps: 0.0,
+            area_luts: DEFAULT_AREA_LUTS,
+            area_bram_kb: DEFAULT_AREA_BRAM_KB,
+            power_mw: DEFAULT_POWER_MW,
+        }
+    }
+
+    fn from_json(v: &Json, est_latency_cycles: u64) -> Result<Self> {
+        Ok(Self {
+            latency_cycles: v
+                .get("latency_cycles")
+                .map(Json::as_u64)
+                .transpose()?
+                .unwrap_or(est_latency_cycles),
+            throughput_fps: v
+                .get("throughput_fps")
+                .map(Json::as_f64)
+                .transpose()?
+                .unwrap_or(0.0),
+            area_luts: v.get("area_luts").map(Json::as_f64).transpose()?.unwrap_or(DEFAULT_AREA_LUTS),
+            area_bram_kb: v
+                .get("area_bram_kb")
+                .map(Json::as_f64)
+                .transpose()?
+                .unwrap_or(DEFAULT_AREA_BRAM_KB),
+            power_mw: v.get("power_mw").map(Json::as_f64).transpose()?.unwrap_or(DEFAULT_POWER_MW),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("latency_cycles", Json::Num(self.latency_cycles as f64)),
+            ("throughput_fps", Json::Num(self.throughput_fps)),
+            ("area_luts", Json::Num(self.area_luts)),
+            ("area_bram_kb", Json::Num(self.area_bram_kb)),
+            ("power_mw", Json::Num(self.power_mw)),
+        ])
     }
 }
 
@@ -40,10 +191,17 @@ pub struct Variant {
     pub est_latency_cycles: u64,
     /// Size of the HLO text, chars.
     pub hlo_chars: usize,
+    /// PPA record (v2; v1 manifests get [`PpaRecord::from_v1`] defaults).
+    pub ppa: PpaRecord,
+    /// Host→fabric DMA descriptor.
+    pub dma_in: DmaDesc,
+    /// Fabric→host DMA descriptor.
+    pub dma_out: DmaDesc,
 }
 
 impl Variant {
     fn from_json(v: &Json) -> Result<Self> {
+        let est_latency_cycles = v.req("est_latency_cycles")?.as_u64()?;
         Ok(Self {
             size: v.req("size")?.as_usize_vec()?,
             inputs: v
@@ -51,19 +209,50 @@ impl Variant {
                 .as_arr()?
                 .iter()
                 .map(TensorDesc::from_json)
-                .collect::<Result<_>>()?,
+                .collect::<Result<_>>()
+                .map_err(|e| ctx(e, "key \"inputs\""))?,
             outputs: v
                 .req("outputs")?
                 .as_arr()?
                 .iter()
                 .map(TensorDesc::from_json)
-                .collect::<Result<_>>()?,
+                .collect::<Result<_>>()
+                .map_err(|e| ctx(e, "key \"outputs\""))?,
             artifact: v.req("artifact")?.as_str()?.to_string(),
             est_flops: v.req("est_flops")?.as_f64()?,
             est_bytes: v.req("est_bytes")?.as_f64()?,
-            est_latency_cycles: v.req("est_latency_cycles")?.as_u64()?,
+            est_latency_cycles,
             hlo_chars: v.get("hlo_chars").map(Json::as_usize).transpose()?.unwrap_or(0),
+            ppa: match v.get("ppa") {
+                Some(p) => PpaRecord::from_json(p, est_latency_cycles)
+                    .map_err(|e| ctx(e, "key \"ppa\""))?,
+                None => PpaRecord::from_v1(est_latency_cycles),
+            },
+            dma_in: match v.get("dma_in") {
+                Some(d) => DmaDesc::from_json(d).map_err(|e| ctx(e, "key \"dma_in\""))?,
+                None => DmaDesc::default(),
+            },
+            dma_out: match v.get("dma_out") {
+                Some(d) => DmaDesc::from_json(d).map_err(|e| ctx(e, "key \"dma_out\""))?,
+                None => DmaDesc::default(),
+            },
         })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("size", Json::from_usizes(&self.size)),
+            ("inputs", Json::Arr(self.inputs.iter().map(TensorDesc::to_json).collect())),
+            ("outputs", Json::Arr(self.outputs.iter().map(TensorDesc::to_json).collect())),
+            ("artifact", Json::Str(self.artifact.clone())),
+            ("est_flops", Json::Num(self.est_flops)),
+            ("est_bytes", Json::Num(self.est_bytes)),
+            ("est_latency_cycles", Json::Num(self.est_latency_cycles as f64)),
+            ("hlo_chars", Json::Num(self.hlo_chars as f64)),
+            ("ppa", self.ppa.to_json()),
+            ("dma_in", self.dma_in.to_json()),
+            ("dma_out", self.dma_out.to_json()),
+        ])
     }
 }
 
@@ -86,31 +275,56 @@ pub struct ModuleEntry {
 
 impl ModuleEntry {
     fn from_json(v: &Json) -> Result<Self> {
+        // resolve the name first so every later error can carry it; an
+        // unnamed entry still reports its position via the caller's index
+        let name = v.req("name")?.as_str()?.to_string();
+        let module_ctx = |e| ctx(e, &format!("module {name:?}"));
         Ok(Self {
-            name: v.req("name")?.as_str()?.to_string(),
-            library_symbol: v.req("library_symbol")?.as_str()?.to_string(),
-            enabled: v.req("enabled")?.as_bool()?,
-            kind: v.req("kind")?.as_str()?.to_string(),
+            library_symbol: v
+                .req("library_symbol")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .map_err(module_ctx)?,
+            enabled: v.req("enabled").and_then(Json::as_bool).map_err(module_ctx)?,
+            kind: v.req("kind").and_then(Json::as_str).map(str::to_string).map_err(module_ctx)?,
             description: v
                 .get("description")
                 .map(Json::as_str)
-                .transpose()?
+                .transpose()
+                .map_err(module_ctx)?
                 .unwrap_or("")
                 .to_string(),
             variants: v
-                .req("variants")?
-                .as_arr()?
+                .req("variants")
+                .and_then(Json::as_arr)
+                .map_err(module_ctx)?
                 .iter()
-                .map(Variant::from_json)
+                .enumerate()
+                .map(|(i, var)| {
+                    Variant::from_json(var)
+                        .map_err(|e| ctx(e, &format!("module {name:?} variant #{i}")))
+                })
                 .collect::<Result<_>>()?,
+            name,
         })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("library_symbol", Json::Str(self.library_symbol.clone())),
+            ("enabled", Json::Bool(self.enabled)),
+            ("kind", Json::Str(self.kind.clone())),
+            ("description", Json::Str(self.description.clone())),
+            ("variants", Json::Arr(self.variants.iter().map(Variant::to_json).collect())),
+        ])
     }
 }
 
 /// The whole database manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Manifest {
-    /// Schema version (1).
+    /// Schema version (1 or 2).
     pub version: u32,
     /// Producer tag.
     pub generated_by: String,
@@ -123,18 +337,22 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    /// Parse a manifest JSON document.
+    /// Parse a manifest JSON document (schema v1 or v2).
     pub fn parse(text: &str) -> Result<Self> {
         let v = json::parse(text)?;
         Ok(Self {
-            version: v.req("version")?.as_u64()? as u32,
+            version: v.req("version").and_then(Json::as_u64).map_err(|e| ctx(e, "manifest"))?
+                as u32,
             generated_by: v
                 .get("generated_by")
                 .map(Json::as_str)
                 .transpose()?
                 .unwrap_or("")
                 .to_string(),
-            fabric_clock_mhz: v.req("fabric_clock_mhz")?.as_f64()?,
+            fabric_clock_mhz: v
+                .req("fabric_clock_mhz")
+                .and_then(Json::as_f64)
+                .map_err(|e| ctx(e, "manifest"))?,
             interchange: v
                 .get("interchange")
                 .map(Json::as_str)
@@ -142,12 +360,33 @@ impl Manifest {
                 .unwrap_or("")
                 .to_string(),
             modules: v
-                .req("modules")?
-                .as_arr()?
+                .req("modules")
+                .and_then(Json::as_arr)
+                .map_err(|e| ctx(e, "manifest"))?
                 .iter()
-                .map(ModuleEntry::from_json)
+                .enumerate()
+                .map(|(i, m)| {
+                    ModuleEntry::from_json(m).map_err(|e| ctx(e, &format!("modules[{i}]")))
+                })
                 .collect::<Result<_>>()?,
         })
+    }
+
+    /// Serialize as a v2 JSON document (every PPA/DMA field explicit, so a
+    /// round trip through [`Manifest::parse`] reproduces the value).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            ("generated_by", Json::Str(self.generated_by.clone())),
+            ("fabric_clock_mhz", Json::Num(self.fabric_clock_mhz)),
+            ("interchange", Json::Str(self.interchange.clone())),
+            ("modules", Json::Arr(self.modules.iter().map(ModuleEntry::to_json).collect())),
+        ])
+    }
+
+    /// Pretty-printed v2 document.
+    pub fn to_string_pretty(&self) -> String {
+        self.to_json().to_string_pretty()
     }
 }
 
@@ -175,6 +414,35 @@ mod tests {
         }]
     }"#;
 
+    const V2: &str = r#"{
+        "version": 2,
+        "fabric_clock_mhz": 157.0,
+        "modules": [{
+            "name": "hls_x",
+            "library_symbol": "cv::x",
+            "enabled": true,
+            "kind": "image1",
+            "variants": [{
+                "size": [8, 8],
+                "inputs": [{"shape": [8, 8], "dtype": "f32"}],
+                "outputs": [{"shape": [8, 8], "dtype": "f32"}],
+                "artifact": "hls_x__8x8.hlo.txt",
+                "est_flops": 64.0,
+                "est_bytes": 512.0,
+                "est_latency_cycles": 128,
+                "ppa": {
+                    "latency_cycles": 144,
+                    "throughput_fps": 60.0,
+                    "area_luts": 9100,
+                    "area_bram_kb": 72.0,
+                    "power_mw": 210.0
+                },
+                "dma_in": {"dma_bytes_per_us": 1600.0, "dma_setup_us": 2.5},
+                "dma_out": {"dma_bytes_per_us": 800.0, "dma_setup_us": 3.0}
+            }]
+        }]
+    }"#;
+
     #[test]
     fn parses_minimal_manifest() {
         let m = Manifest::parse(MINIMAL).unwrap();
@@ -187,9 +455,73 @@ mod tests {
     }
 
     #[test]
+    fn v1_fills_ppa_and_dma_defaults() {
+        let m = Manifest::parse(MINIMAL).unwrap();
+        let v = &m.modules[0].variants[0];
+        assert_eq!(v.ppa.latency_cycles, 128, "v1 latency comes from est_latency_cycles");
+        assert_eq!(v.ppa.throughput_fps, 0.0);
+        assert_eq!(v.ppa.area_luts, DEFAULT_AREA_LUTS);
+        assert_eq!(v.ppa.area_bram_kb, DEFAULT_AREA_BRAM_KB);
+        assert_eq!(v.ppa.power_mw, DEFAULT_POWER_MW);
+        assert_eq!(v.dma_in, DmaDesc::default());
+        assert_eq!(v.dma_out, DmaDesc::default());
+        // a transfer is never free: setup alone is nonzero
+        assert!(v.dma_in.transfer_ns(0.0) > 0.0);
+    }
+
+    #[test]
+    fn parses_v2_ppa_and_dma() {
+        let m = Manifest::parse(V2).unwrap();
+        assert_eq!(m.version, 2);
+        let v = &m.modules[0].variants[0];
+        assert_eq!(v.ppa.latency_cycles, 144);
+        assert_eq!(v.ppa.throughput_fps, 60.0);
+        assert_eq!(v.ppa.area_luts, 9100.0);
+        assert_eq!(v.ppa.power_mw, 210.0);
+        assert_eq!(v.dma_in.dma_bytes_per_us, 1600.0);
+        assert_eq!(v.dma_out.dma_setup_us, 3.0);
+        // 4096 bytes in at 1600 B/us + 2.5us setup = 2.5 + 2.56 us
+        assert!((v.dma_in.transfer_ns(4096.0) - 5060.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn v2_roundtrips_through_serialization() {
+        let m = Manifest::parse(V2).unwrap();
+        let text = m.to_string_pretty();
+        let back = Manifest::parse(&text).unwrap();
+        assert_eq!(back, m);
+
+        // a v1 manifest round-trips too (defaults become explicit v2 fields)
+        let m1 = Manifest::parse(MINIMAL).unwrap();
+        let back1 = Manifest::parse(&m1.to_string_pretty()).unwrap();
+        assert_eq!(back1, m1);
+    }
+
+    #[test]
     fn rejects_missing_fields() {
         assert!(Manifest::parse("{\"version\": 1}").is_err());
         assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_module_and_key_context() {
+        // missing "kind" inside a named module → error names the module
+        let bad = MINIMAL.replace("\"kind\": \"image1\",", "");
+        let err = Manifest::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("hls_x"), "module name missing from: {err}");
+        assert!(err.contains("kind"), "offending key missing from: {err}");
+
+        // broken variant → error names the module and the variant index
+        let bad = MINIMAL.replace("\"est_flops\": 64.0,", "");
+        let err = Manifest::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("hls_x"), "{err}");
+        assert!(err.contains("variant #0"), "{err}");
+        assert!(err.contains("est_flops"), "{err}");
+
+        // top-level breakage → positional context
+        let err = Manifest::parse("{\"version\": 1, \"modules\": []}").unwrap_err().to_string();
+        assert!(err.contains("manifest"), "{err}");
+        assert!(err.contains("fabric_clock_mhz"), "{err}");
     }
 
     #[test]

@@ -10,7 +10,10 @@
 mod manifest;
 mod synth;
 
-pub use manifest::{Manifest, ModuleEntry, TensorDesc, Variant};
+pub use manifest::{
+    DmaDesc, Manifest, ModuleEntry, PpaRecord, TensorDesc, Variant, DEFAULT_AREA_BRAM_KB,
+    DEFAULT_AREA_LUTS, DEFAULT_DMA_BYTES_PER_US, DEFAULT_DMA_SETUP_US, DEFAULT_POWER_MW,
+};
 pub use synth::{synth_report, SynthReport};
 
 use std::path::{Path, PathBuf};
@@ -51,9 +54,9 @@ impl HwDatabase {
             ))
         })?;
         let manifest = Manifest::parse(&text)?;
-        if manifest.version != 1 {
+        if !matches!(manifest.version, 1 | 2) {
             return Err(CourierError::HwDb(format!(
-                "unsupported manifest version {}",
+                "unsupported manifest version {} (expected 1 or 2)",
                 manifest.version
             )));
         }

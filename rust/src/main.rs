@@ -567,6 +567,7 @@ fn cmd_tune(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     let outcome = tuner.tune_with_db(&prog, cost_db)?;
 
     print!("{}", report::render_tune(&outcome.report));
+    print!("{}", report::render_pareto(&outcome.report));
     print!("{}", report::render_plan(&outcome.winner.plan));
     println!(
         "recommended: tokens = {}, serve.queue_depth = {}",

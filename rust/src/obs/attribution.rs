@@ -279,6 +279,73 @@ pub fn drift(plan: &StagePlan, task_keys: &[String], a: &Attribution) -> Vec<Tas
     out
 }
 
+/// Modeled DMA transfer cost charged to one stage, ns/frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageTransfer {
+    /// Stage index.
+    pub stage: usize,
+    /// Symbols of the stage's hardware tasks (what crosses the boundary).
+    pub symbols: Vec<String>,
+    /// Host↔fabric DMA cost the platform model charges this stage,
+    /// ns/frame ([`StagePlan::stage_transfer_ns`]).
+    pub transfer_ns: u64,
+}
+
+/// The `transfer` component of sim-vs-measured attribution: the DMA cost
+/// the plan's platform model charges each sw↔hw boundary crossing.  The
+/// serving instrumentation cannot time the DMA engine separately from
+/// the stage span it lives inside, so this component is the *model's*
+/// share — nonzero on every stage whose hardware tasks border software
+/// (or the frame source/sink), empty on all-software plans.
+pub fn transfer_model(plan: &StagePlan) -> Vec<StageTransfer> {
+    plan.stages
+        .iter()
+        .filter_map(|s| {
+            let ns = plan.stage_transfer_ns(s);
+            if ns == 0 {
+                return None;
+            }
+            let symbols = s
+                .tasks
+                .iter()
+                .filter(|t| t.hw_cost.is_some())
+                .map(|t| t.symbol.clone())
+                .collect();
+            Some(StageTransfer { stage: s.index, symbols, transfer_ns: ns })
+        })
+        .collect()
+}
+
+/// JSON form of the transfer component (ms/frame scaling, plus a total).
+pub fn transfer_to_json(rows: &[StageTransfer]) -> Json {
+    let total: u64 = rows.iter().map(|r| r.transfer_ns).sum();
+    Json::obj(vec![
+        ("total_ms_per_frame", Json::Num(total as f64 / 1e6)),
+        (
+            "stages",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("stage", Json::Num(r.stage as f64)),
+                            (
+                                "symbols",
+                                Json::Arr(
+                                    r.symbols.iter().map(|s| Json::Str(s.clone())).collect(),
+                                ),
+                            ),
+                            (
+                                "transfer_ms_per_frame",
+                                Json::Num(r.transfer_ns as f64 / 1e6),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// JSON form of a drift table.
 pub fn drift_to_json(rows: &[TaskDrift]) -> Json {
     Json::Obj(
@@ -361,6 +428,68 @@ mod tests {
         assert_eq!(a.e2e_ns, 100, "40 + 60, no queue gaps inside one-span frames");
         assert_eq!(a.ingress_wait_ns, 0);
         assert_eq!(a.bottleneck, Some(0));
+    }
+
+    #[test]
+    fn transfer_component_prices_every_sw_hw_edge() {
+        use crate::pipeline::{HwCost, StageSpec, TaskKind, TaskSpec};
+        // sw cvtColor → hw Sobel (terminal): one ingress crossing from
+        // software, one egress crossing to the sink
+        let plan = StagePlan {
+            program: "t".into(),
+            threads: 2,
+            tokens: 2,
+            bands: 1,
+            edges: Vec::new(),
+            stages: vec![
+                StageSpec {
+                    index: 0,
+                    serial: true,
+                    tasks: vec![TaskSpec {
+                        covers: vec![0],
+                        symbol: "cv::cvtColor".into(),
+                        kind: TaskKind::Sw,
+                        est_ns: 2_000_000,
+                        hw_cost: None,
+                    }],
+                },
+                StageSpec {
+                    index: 1,
+                    serial: true,
+                    tasks: vec![TaskSpec {
+                        covers: vec![1],
+                        symbol: "cv::Sobel".into(),
+                        kind: TaskKind::Hw {
+                            module: "hls_sobel".into(),
+                            artifact: "a.hlo.txt".into(),
+                        },
+                        est_ns: 1_000_000,
+                        hw_cost: Some(HwCost {
+                            area_luts: 9_000,
+                            power_mw: 200,
+                            xfer_in_ns: 400_000,
+                            xfer_out_ns: 300_000,
+                            sw_alt_ns: 0,
+                        }),
+                    }],
+                },
+            ],
+        };
+        let rows = transfer_model(&plan);
+        assert_eq!(rows.len(), 1, "only the hw-bordering stage carries transfer");
+        assert_eq!(rows[0].stage, 1);
+        assert_eq!(rows[0].symbols, vec!["cv::Sobel".to_string()]);
+        assert_eq!(rows[0].transfer_ns, 700_000, "sw→hw ingress + hw→sink egress");
+
+        let json = transfer_to_json(&rows);
+        let total = json.req("total_ms_per_frame").unwrap().as_f64().unwrap();
+        assert!((total - 0.7).abs() < 1e-9, "{total}");
+
+        // demoting the hw task leaves an all-software plan: no component
+        let mut sw = plan;
+        sw.stages[1].tasks[0].kind = TaskKind::Sw;
+        sw.stages[1].tasks[0].hw_cost = None;
+        assert!(transfer_model(&sw).is_empty());
     }
 
     #[test]

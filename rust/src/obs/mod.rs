@@ -28,7 +28,10 @@ mod chrome;
 mod registry;
 mod sink;
 
-pub use attribution::{attribute, drift, drift_to_json, Attribution, StageAttribution, TaskDrift};
+pub use attribution::{
+    attribute, drift, drift_to_json, transfer_model, transfer_to_json, Attribution,
+    StageAttribution, StageTransfer, TaskDrift,
+};
 pub use chrome::{chrome_trace, ChromeGroup};
 pub use registry::{MetricSource, MetricsRegistry};
 pub use sink::{

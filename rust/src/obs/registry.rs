@@ -214,6 +214,7 @@ impl MetricSource for crate::serve::ServerStats {
             ("active_sessions", self.active_sessions.snapshot()),
             ("open_latency", self.open_latency.snapshot()),
             ("frames", self.frames.snapshot()),
+            ("fabric_fallbacks", self.fabric_fallbacks.snapshot()),
         ])
     }
 }

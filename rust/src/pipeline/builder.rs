@@ -37,13 +37,10 @@ use crate::swlib::Registry;
 use crate::{CourierError, Result};
 
 use super::partition::partition_dag;
-use super::plan::{StagePlan, StageSpec, TaskKind, TaskSpec};
+use super::plan::{HwCost, StagePlan, StageSpec, TaskKind, TaskSpec};
 use super::pool::BufferPool;
 use super::tbb::{FilterMode, PipelineStats, StageFilter, TokenPipeline};
 
-/// Cost of staging one byte across the accelerator boundary, ns (the AXI
-/// DMA analogue folded into hardware-task estimates).
-const STAGING_NS_PER_BYTE: f64 = 1.0;
 
 /// The multi-buffer token payload of a DAG-wired pipeline: the external
 /// input frame plus every buffer produced so far, keyed by producing
@@ -666,16 +663,28 @@ pub fn plan_pipeline(
         };
         match (hit, f.placement) {
             (Some(hit), _) => {
-                let cycles = hit.variant.est_latency_cycles;
-                let ms = cycles as f64 / (db.fabric_clock_mhz() * 1e3);
-                let staging_bytes: usize = hit
-                    .variant
-                    .inputs
-                    .iter()
-                    .chain(&hit.variant.outputs)
-                    .map(|t| t.shape.iter().product::<usize>() * 4)
-                    .sum();
-                let est_ns = (ms * 1e6 + staging_bytes as f64 * STAGING_NS_PER_BYTE) as u64;
+                // est_ns is the *compute* latency only (PPA cycles at the
+                // fabric clock); the sw↔hw boundary is priced separately
+                // through the variant's DMA descriptors so the simulator
+                // can charge each crossing on the correct side of the cut
+                // — and drop it entirely for hw→hw links that stream
+                // on-fabric.
+                let v = hit.variant;
+                let ms = crate::hlo::cycles_to_ms(v.ppa.latency_cycles, db.fabric_clock_mhz());
+                let in_shapes: Vec<&[usize]> =
+                    v.inputs.iter().map(|t| t.shape.as_slice()).collect();
+                let out_shapes: Vec<&[usize]> =
+                    v.outputs.iter().map(|t| t.shape.as_slice()).collect();
+                let xfer_in_ns = crate::hlo::dma_transfer_ns(
+                    crate::hlo::staging_bytes(&in_shapes),
+                    v.dma_in.dma_bytes_per_us,
+                    v.dma_in.dma_setup_us,
+                );
+                let xfer_out_ns = crate::hlo::dma_transfer_ns(
+                    crate::hlo::staging_bytes(&out_shapes),
+                    v.dma_out.dma_bytes_per_us,
+                    v.dma_out.dma_setup_us,
+                );
                 tasks.push(TaskSpec {
                     covers: f.covers.clone(),
                     symbol: f.symbol.clone(),
@@ -683,7 +692,18 @@ pub fn plan_pipeline(
                         module: hit.module.name.clone(),
                         artifact: hit.variant.artifact.clone(),
                     },
-                    est_ns,
+                    est_ns: (ms * 1e6) as u64,
+                    hw_cost: Some(HwCost {
+                        area_luts: v.ppa.area_luts.round() as u64,
+                        power_mw: v.ppa.power_mw.round() as u64,
+                        xfer_in_ns,
+                        xfer_out_ns,
+                        // the traced software time for the same function —
+                        // what a placement demotion (hw→sw flip) costs,
+                        // which the tuner's Pareto sweep trades against
+                        // the freed area and power
+                        sw_alt_ns: f.mean_ns,
+                    }),
                 });
             }
             (None, Placement::Hw) => {
@@ -705,6 +725,7 @@ pub fn plan_pipeline(
                     symbol: f.symbol.clone(),
                     kind: TaskKind::Sw,
                     est_ns: f.mean_ns,
+                    hw_cost: None,
                 });
             }
         }
@@ -755,6 +776,36 @@ pub fn plan_pipeline(
         stages,
     };
     plan.validate_dag()?;
+
+    // -- fabric area budget -------------------------------------------------
+    // The placed modules must fit the configured fabric together (each
+    // distinct module is placed once, however many tasks it serves).  An
+    // over-budget plan is a typed error the serving layer catches to fall
+    // back to an all-software build — never a panic, never a silently
+    // unroutable bitstream.
+    if !cfg.cpu_only {
+        let area = plan.fabric_area_luts();
+        let budget = cfg.serve.fabric_area_luts as u64;
+        if area > budget {
+            let mut modules: Vec<&str> = plan
+                .stages
+                .iter()
+                .flat_map(|s| &s.tasks)
+                .filter_map(|t| match &t.kind {
+                    TaskKind::Hw { module, .. } => Some(module.as_str()),
+                    TaskKind::Sw => None,
+                })
+                .collect();
+            modules.sort_unstable();
+            modules.dedup();
+            return Err(CourierError::Fabric(format!(
+                "plan {}: hardware modules {modules:?} need {area} LUTs but \
+                 [serve] fabric_area_luts = {budget}; raise the budget or \
+                 build cpu-only",
+                plan.program
+            )));
+        }
+    }
     Ok(plan)
 }
 
@@ -2070,6 +2121,113 @@ mod tests {
         plan.edges.push((Some(5), 1));
         let err = instantiate(&plan, db.dir(), &rt, &registry).unwrap_err();
         assert!(matches!(err, CourierError::Dag(_)), "{err}");
+    }
+
+    /// A hermetic one-module v2 manifest: an XL Sobel variant whose PPA
+    /// record overflows the default fabric budget, with an explicit
+    /// ingress DMA descriptor (egress falls back to the defaults).
+    fn xl_sobel_dir() -> crate::util::testing::TempDir {
+        let tmp = crate::util::testing::TempDir::new("builder-xl-sobel").unwrap();
+        std::fs::write(
+            tmp.path().join("manifest.json"),
+            r#"{
+                "version": 2,
+                "fabric_clock_mhz": 157.0,
+                "modules": [{
+                    "name": "hls_sobel_xl",
+                    "library_symbol": "cv::Sobel",
+                    "enabled": true,
+                    "kind": "image1",
+                    "variants": [{
+                        "size": [16, 16],
+                        "inputs": [{"shape": [16, 16], "dtype": "f32"}],
+                        "outputs": [{"shape": [16, 16], "dtype": "f32"}],
+                        "artifact": "hls_sobel__16x16.hlo.txt",
+                        "est_flops": 4096.0,
+                        "est_bytes": 2048.0,
+                        "est_latency_cycles": 512,
+                        "ppa": {"latency_cycles": 512, "area_luts": 60000.0, "power_mw": 900.0},
+                        "dma_in": {"dma_bytes_per_us": 512.0, "dma_setup_us": 2.0}
+                    }]
+                }]
+            }"#,
+        )
+        .unwrap();
+        tmp
+    }
+
+    fn sobel_chain_ir() -> Ir {
+        let prog = crate::app::parse_program(
+            "program sobelChain\n\
+             input frame 16x16x3\n\
+             call gray = cv::cvtColor(frame)\n\
+             call ix = cv::Sobel(gray)\n\
+             call out = cv::convertScaleAbs(ix)\n\
+             output out\n",
+        )
+        .unwrap();
+        ir_of(&prog, 16, 16)
+    }
+
+    #[test]
+    fn over_budget_plan_is_a_typed_fabric_error() {
+        let tmp = xl_sobel_dir();
+        let db = HwDatabase::load(tmp.path()).unwrap();
+        let registry = Registry::standard();
+        let ir = sobel_chain_ir();
+
+        // 60k LUTs > the default 53.2k budget: typed error naming the module
+        let cfg = Config { artifacts_dir: tmp.path().to_path_buf(), ..Default::default() };
+        let err = plan_pipeline(&ir, &db, &registry, &cfg, None).unwrap_err();
+        assert!(matches!(err, CourierError::Fabric(_)), "{err}");
+        assert!(err.to_string().contains("hls_sobel_xl"), "{err}");
+
+        // the sw fallback the serving layer retries with plans cleanly
+        let cpu = Config { cpu_only: true, ..cfg.clone() };
+        let plan = plan_pipeline(&ir, &db, &registry, &cpu, None).unwrap();
+        assert_eq!(plan.placement_counts().0, 0);
+
+        // and a raised budget admits the module
+        let mut roomy = cfg;
+        roomy.serve.fabric_area_luts = 120_000;
+        let plan = plan_pipeline(&ir, &db, &registry, &roomy, None).unwrap();
+        assert_eq!(plan.placement_counts().0, 1);
+        assert_eq!(plan.fabric_area_luts(), 60_000);
+        assert_eq!(plan.fabric_power_mw(), 900);
+    }
+
+    #[test]
+    fn hw_tasks_price_the_boundary_with_the_variant_dma_model() {
+        let tmp = xl_sobel_dir();
+        let db = HwDatabase::load(tmp.path()).unwrap();
+        let registry = Registry::standard();
+        let ir = sobel_chain_ir();
+        let mut cfg = Config { artifacts_dir: tmp.path().to_path_buf(), ..Default::default() };
+        cfg.serve.fabric_area_luts = 120_000;
+        let plan = plan_pipeline(&ir, &db, &registry, &cfg, None).unwrap();
+
+        let hw: Vec<&TaskSpec> = plan
+            .stages
+            .iter()
+            .flat_map(|s| &s.tasks)
+            .filter(|t| !matches!(t.kind, TaskKind::Sw))
+            .collect();
+        assert_eq!(hw.len(), 1);
+        let hc = hw[0].hw_cost.as_ref().expect("hw placements carry a cost record");
+        // 16x16 f32 = 1024 bytes.  Ingress at 512 B/us with 2 us setup:
+        // (2 + 2) us.  Egress falls back to the 1024 B/us / 4 us default:
+        // (4 + 1) us.
+        assert_eq!(hc.xfer_in_ns, 4_000);
+        assert_eq!(hc.xfer_out_ns, 5_000);
+        assert_eq!((hc.area_luts, hc.power_mw), (60_000, 900));
+        // the demotion alternative is the traced software time
+        let sobel_mean =
+            ir.funcs.iter().find(|f| f.symbol == "cv::Sobel").map(|f| f.mean_ns).unwrap();
+        assert_eq!(hc.sw_alt_ns, sobel_mean);
+        // est_ns is compute-only: 512 cycles at 157 MHz, no staging term
+        assert_eq!(hw[0].est_ns, 3_261);
+        // sw→hw→sw in the middle of the chain: both crossings are priced
+        assert_eq!(plan.transfer_ns(), 9_000);
     }
 
     #[test]

@@ -34,7 +34,10 @@ pub use codegen::render_control_program;
 pub use partition::{
     bottleneck, optimal, paper_policy, partition, partition_dag, respects_dag, Partition,
 };
-pub use plan::{PlanEdge, StagePlan, StageSpec, TaskKind, TaskSpec};
+pub use plan::{
+    HwCost, PlanEdge, StagePlan, StageSpec, TaskKind, TaskSpec, BAND_HALO_OVERHEAD,
+    FUSION_LINK_SAVING,
+};
 pub use pool::{BufferPool, PoolStats};
-pub use sim::{paper_table1_plan, simulate, SimResult};
+pub use sim::{paper_table1_plan, simulate, simulate_with_model, SimModel, SimResult};
 pub use tbb::{FilterMode, FnFilter, PipelineStats, StageFilter, StageSpan, TokenPipeline};

@@ -20,6 +20,33 @@ pub enum TaskKind {
     },
 }
 
+/// PPA + DMA footprint of a hardware-placed task, filled by the builder
+/// from the manifest's v2 PPA record (or its v1 defaults).  `None` on
+/// software tasks and on legacy/hand-built plans — every consumer treats
+/// that as "no fabric footprint, free transfers", which keeps the pinned
+/// sim fixtures and old plan JSON bit-identical.
+///
+/// All fields are integers (ns / LUTs / mW) so plans stay `Eq`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HwCost {
+    /// Slice-LUT footprint of the placed module variant.
+    pub area_luts: u64,
+    /// Dynamic power of the placed module variant, mW.
+    pub power_mw: u64,
+    /// Modeled DMA cost of staging this task's inputs host→fabric, ns
+    /// (setup + bytes/bandwidth) — charged only when the producing side
+    /// of the edge is software or the external frame source.
+    pub xfer_in_ns: u64,
+    /// Modeled DMA cost of draining this task's outputs fabric→host, ns —
+    /// charged only when the consuming side is software or the sink.
+    pub xfer_out_ns: u64,
+    /// Traced software cost of the same call, ns (0 = unknown) — what the
+    /// task would cost if demoted to CPU.  The tuner's placement ladder
+    /// flips hw tasks back to sw with this estimate to populate the
+    /// area/power axes of the Pareto frontier.
+    pub sw_alt_ns: u64,
+}
+
 /// One task: a library function placed on CPU or fabric.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TaskSpec {
@@ -32,6 +59,8 @@ pub struct TaskSpec {
     /// Estimated per-frame time, ns (traced for SW, synthesis estimate for
     /// HW) — the number the partition policy consumed.
     pub est_ns: u64,
+    /// PPA + DMA footprint (hardware tasks only; see [`HwCost`]).
+    pub hw_cost: Option<HwCost>,
 }
 
 impl TaskSpec {
@@ -193,11 +222,18 @@ impl StageSpec {
     /// Links inside fork-join branches count, matching the builder's
     /// per-branch fusion.
     pub fn fusion_credit_ns(&self, edges: &[PlanEdge]) -> u64 {
+        self.fusion_credit_ns_with(edges, FUSION_LINK_SAVING)
+    }
+
+    /// [`Self::fusion_credit_ns`] with an explicit per-link saving
+    /// fraction — the `[tune] fusion_link_saving` knob reaches the sim
+    /// through here.
+    pub fn fusion_credit_ns_with(&self, edges: &[PlanEdge], link_saving: f64) -> u64 {
         self.fusable_link_pairs(edges)
             .into_iter()
             .map(|(i, j)| {
                 let link_min = self.tasks[i].est_ns.min(self.tasks[j].est_ns);
-                (link_min as f64 * FUSION_LINK_SAVING) as u64
+                (link_min as f64 * link_saving) as u64
             })
             .sum()
     }
@@ -386,6 +422,110 @@ impl StagePlan {
         mods
     }
 
+    /// Combined slice-LUT footprint of the hardware modules this plan
+    /// places concurrently on the fabric, deduplicated by module name
+    /// (two tasks on the same module share one placement).  0 on all-sw
+    /// plans and on plans without [`HwCost`] records.
+    pub fn fabric_area_luts(&self) -> u64 {
+        self.fabric_footprint().0
+    }
+
+    /// Combined dynamic power of the placed hardware modules, mW
+    /// (deduplicated like [`Self::fabric_area_luts`]).
+    pub fn fabric_power_mw(&self) -> u64 {
+        self.fabric_footprint().1
+    }
+
+    fn fabric_footprint(&self) -> (u64, u64) {
+        self.per_module_footprint()
+            .values()
+            .fold((0, 0), |acc, v| (acc.0 + v.0, acc.1 + v.1))
+    }
+
+    /// Per-module slice-LUT footprint, `(name, area_luts)` sorted by
+    /// name — what the serving layer registers with its fabric-slot
+    /// allocator for occupancy accounting.  Modules placed without a
+    /// [`HwCost`] record report area 0.
+    pub fn hw_module_areas(&self) -> Vec<(String, u64)> {
+        use std::collections::BTreeMap;
+        let mut areas: BTreeMap<&str, u64> = BTreeMap::new();
+        for t in self.stages.iter().flat_map(|s| &s.tasks) {
+            let TaskKind::Hw { module, .. } = &t.kind else { continue };
+            let area = t.hw_cost.as_ref().map_or(0, |c| c.area_luts);
+            let e = areas.entry(module.as_str()).or_insert(0);
+            *e = (*e).max(area);
+        }
+        areas.into_iter().map(|(m, a)| (m.to_string(), a)).collect()
+    }
+
+    fn per_module_footprint(&self) -> std::collections::BTreeMap<&str, (u64, u64)> {
+        let mut per_module: std::collections::BTreeMap<&str, (u64, u64)> = Default::default();
+        for t in self.stages.iter().flat_map(|s| &s.tasks) {
+            let TaskKind::Hw { module, .. } = &t.kind else { continue };
+            let Some(cost) = &t.hw_cost else { continue };
+            let e = per_module.entry(module.as_str()).or_insert((0, 0));
+            e.0 = e.0.max(cost.area_luts);
+            e.1 = e.1.max(cost.power_mw);
+        }
+        per_module
+    }
+
+    /// Modeled DMA transfer time charged to `stage`, ns: for every
+    /// hardware task in the stage, the host→fabric cost of inputs arriving
+    /// from software (or the external frame source) plus the fabric→host
+    /// cost of outputs consumed by software (or the sink).  hw→hw links
+    /// stream on-fabric and cost nothing — which is exactly why moving a
+    /// partition boundary can change the transfer bill, the paper's real
+    /// design space.  Both directions are charged to the hardware side of
+    /// the cut (the DMA engines live on the fabric; the host worker
+    /// blocks on them).
+    pub fn stage_transfer_ns(&self, stage: &StageSpec) -> u64 {
+        if !stage.tasks.iter().any(|t| t.hw_cost.is_some()) {
+            return 0;
+        }
+        use std::collections::HashSet;
+        let edges = self.effective_edges();
+        let hw_steps: HashSet<usize> = self
+            .stages
+            .iter()
+            .flat_map(|s| &s.tasks)
+            .filter(|t| matches!(t.kind, TaskKind::Hw { .. }))
+            .flat_map(|t| t.covers.iter().copied())
+            .collect();
+        let producer_steps: HashSet<usize> = edges.iter().filter_map(|(p, _)| *p).collect();
+        let mut total = 0u64;
+        for t in &stage.tasks {
+            if !matches!(t.kind, TaskKind::Hw { .. }) {
+                continue;
+            }
+            let Some(cost) = &t.hw_cost else { continue };
+            let in_crosses = edges.iter().any(|(p, c)| {
+                t.covers.contains(c)
+                    && match p {
+                        None => true,
+                        Some(p) => !t.covers.contains(p) && !hw_steps.contains(p),
+                    }
+            });
+            let out_crosses = edges.iter().any(|(p, c)| {
+                matches!(p, Some(p) if t.covers.contains(p))
+                    && !t.covers.contains(c)
+                    && !hw_steps.contains(c)
+            }) || t.covers.last().is_some_and(|last| !producer_steps.contains(last));
+            if in_crosses {
+                total += cost.xfer_in_ns;
+            }
+            if out_crosses {
+                total += cost.xfer_out_ns;
+            }
+        }
+        total
+    }
+
+    /// Total modeled DMA transfer per frame across all stages, ns.
+    pub fn transfer_ns(&self) -> u64 {
+        self.stages.iter().map(|s| self.stage_transfer_ns(s)).sum()
+    }
+
     /// Count of (hw, sw) tasks.
     pub fn placement_counts(&self) -> (usize, usize) {
         let mut hw = 0;
@@ -419,12 +559,28 @@ impl StagePlan {
                                 ("artifact", Json::Str(artifact.clone())),
                             ]),
                         };
-                        Json::obj(vec![
+                        let mut members = vec![
                             ("covers", Json::from_usizes(&t.covers)),
                             ("symbol", Json::Str(t.symbol.clone())),
                             ("kind", kind),
                             ("est_ns", Json::Num(t.est_ns as f64)),
-                        ])
+                        ];
+                        // sw tasks / legacy plans omit the field: their
+                        // serialization must stay byte-identical to the
+                        // pre-PPA format
+                        if let Some(hc) = &t.hw_cost {
+                            members.push((
+                                "hw_cost",
+                                Json::obj(vec![
+                                    ("area_luts", Json::Num(hc.area_luts as f64)),
+                                    ("power_mw", Json::Num(hc.power_mw as f64)),
+                                    ("xfer_in_ns", Json::Num(hc.xfer_in_ns as f64)),
+                                    ("xfer_out_ns", Json::Num(hc.xfer_out_ns as f64)),
+                                    ("sw_alt_ns", Json::Num(hc.sw_alt_ns as f64)),
+                                ]),
+                            ));
+                        }
+                        Json::obj(members)
                     })
                     .collect();
                 Json::obj(vec![
@@ -498,11 +654,22 @@ impl StagePlan {
                                 )))
                             }
                         };
+                        let hw_cost = match tv.get("hw_cost") {
+                            Some(hc) => Some(HwCost {
+                                area_luts: hc.req("area_luts")?.as_u64()?,
+                                power_mw: hc.req("power_mw")?.as_u64()?,
+                                xfer_in_ns: hc.req("xfer_in_ns")?.as_u64()?,
+                                xfer_out_ns: hc.req("xfer_out_ns")?.as_u64()?,
+                                sw_alt_ns: hc.req("sw_alt_ns")?.as_u64()?,
+                            }),
+                            None => None,
+                        };
                         Ok(TaskSpec {
                             covers: tv.req("covers")?.as_usize_vec()?,
                             symbol: tv.req("symbol")?.as_str()?.to_string(),
                             kind,
                             est_ns: tv.req("est_ns")?.as_u64()?,
+                            hw_cost,
                         })
                     })
                     .collect::<Result<_>>()?;
@@ -564,6 +731,7 @@ pub(crate) mod tests {
                             artifact: "hls_cvt_color__48x64.hlo.txt".into(),
                         },
                         est_ns: 39_800_000,
+                        hw_cost: None,
                     }],
                 },
                 StageSpec {
@@ -577,6 +745,7 @@ pub(crate) mod tests {
                             artifact: "hls_corner_harris__48x64.hlo.txt".into(),
                         },
                         est_ns: 13_600_000,
+                        hw_cost: None,
                     }],
                 },
                 StageSpec {
@@ -588,6 +757,7 @@ pub(crate) mod tests {
                             symbol: "cv::normalize".into(),
                             kind: TaskKind::Sw,
                             est_ns: 80_200_000,
+                            hw_cost: None,
                         },
                         TaskSpec {
                             covers: vec![3],
@@ -597,6 +767,7 @@ pub(crate) mod tests {
                                 artifact: "hls_convert_scale_abs__48x64.hlo.txt".into(),
                             },
                             est_ns: 13_200_000,
+                            hw_cost: None,
                         },
                     ],
                 },
@@ -637,6 +808,107 @@ pub(crate) mod tests {
         let s = p.to_json();
         let back = StagePlan::from_json(&s).unwrap();
         assert_eq!(back, p);
+        assert!(!s.contains("hw_cost"), "cost-less plans must keep the pre-PPA format");
+    }
+
+    /// The demo plan with PPA/DMA records on its hardware tasks — the
+    /// fixture for transfer pricing and fabric footprint rollups.
+    pub(crate) fn ppa_plan() -> StagePlan {
+        let mut p = demo_plan();
+        // stage 0: cvtColor (hw, fed by the frame source)
+        p.stages[0].tasks[0].hw_cost = Some(HwCost {
+            area_luts: 9_000,
+            power_mw: 200,
+            xfer_in_ns: 5_000_000,
+            xfer_out_ns: 2_000_000,
+            sw_alt_ns: 397_000_000,
+        });
+        // stage 1: cornerHarris (hw, fed by hw, drains to sw normalize)
+        p.stages[1].tasks[0].hw_cost = Some(HwCost {
+            area_luts: 12_000,
+            power_mw: 250,
+            xfer_in_ns: 1_000_000,
+            xfer_out_ns: 1_500_000,
+            sw_alt_ns: 208_900_000,
+        });
+        // stage 2: convertScaleAbs (hw, fed by sw, terminal)
+        p.stages[2].tasks[1].hw_cost = Some(HwCost {
+            area_luts: 4_000,
+            power_mw: 100,
+            xfer_in_ns: 800_000,
+            xfer_out_ns: 900_000,
+            sw_alt_ns: 106_200_000,
+        });
+        p
+    }
+
+    #[test]
+    fn transfer_charges_only_sw_hw_crossings() {
+        let p = ppa_plan();
+        // cvtColor: frame source → hw crossing pays xfer_in (5 ms); its
+        // consumer is hw (harris) so no xfer_out.
+        assert_eq!(p.stage_transfer_ns(&p.stages[0]), 5_000_000);
+        // harris: fed on-fabric (free), drains to sw normalize (1.5 ms).
+        assert_eq!(p.stage_transfer_ns(&p.stages[1]), 1_500_000);
+        // csa: fed from sw (0.8 ms) and terminal → sink (0.9 ms).
+        assert_eq!(p.stage_transfer_ns(&p.stages[2]), 1_700_000);
+        assert_eq!(p.transfer_ns(), 8_200_000);
+        // a cost-less plan is transfer-free (legacy behaviour)
+        assert_eq!(demo_plan().transfer_ns(), 0);
+    }
+
+    #[test]
+    fn fabric_footprint_dedups_modules() {
+        let p = ppa_plan();
+        assert_eq!(p.fabric_area_luts(), 25_000);
+        assert_eq!(p.fabric_power_mw(), 550);
+        assert_eq!(demo_plan().fabric_area_luts(), 0);
+
+        // a second task on an already-placed module shares the placement
+        let mut twice = p.clone();
+        let mut extra = twice.stages[1].tasks[0].clone();
+        extra.covers = vec![9];
+        twice.stages[1].tasks.push(extra);
+        assert_eq!(twice.fabric_area_luts(), 25_000, "same module counted once");
+    }
+
+    #[test]
+    fn hw_module_areas_lists_each_placement_once() {
+        let p = ppa_plan();
+        assert_eq!(
+            p.hw_module_areas(),
+            vec![
+                ("hls_convert_scale_abs".to_string(), 4_000),
+                ("hls_corner_harris".to_string(), 12_000),
+                ("hls_cvt_color".to_string(), 9_000),
+            ]
+        );
+        // cost-less hw placements still appear, at an unknown footprint
+        let legacy = demo_plan();
+        let areas = legacy.hw_module_areas();
+        assert_eq!(areas.len(), 3);
+        assert!(areas.iter().all(|(_, a)| *a == 0));
+    }
+
+    #[test]
+    fn hw_cost_roundtrips_through_json() {
+        let p = ppa_plan();
+        let s = p.to_json();
+        assert!(s.contains("hw_cost"));
+        assert!(s.contains("area_luts"));
+        let back = StagePlan::from_json(&s).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.fabric_area_luts(), 25_000);
+    }
+
+    #[test]
+    fn fusion_credit_scales_with_the_knob() {
+        let p = demo_plan();
+        let edges = p.effective_edges();
+        for s in &p.stages {
+            assert_eq!(s.fusion_credit_ns(&edges), s.fusion_credit_ns_with(&edges, FUSION_LINK_SAVING));
+            assert_eq!(s.fusion_credit_ns_with(&edges, 0.0), 0);
+        }
     }
 
     /// A fork-join plan: one stage holding the two sibling Sobel branches.
@@ -646,6 +918,7 @@ pub(crate) mod tests {
             symbol: sym.into(),
             kind: TaskKind::Sw,
             est_ns: ms * 1_000_000,
+            hw_cost: None,
         };
         StagePlan {
             program: "harrisDag_Demo".into(),
@@ -691,6 +964,7 @@ pub(crate) mod tests {
             symbol: "f".into(),
             kind: TaskKind::Sw,
             est_ns: ms * 1_000_000,
+            hw_cost: None,
         };
         let p = StagePlan {
             program: "t".into(),
@@ -818,6 +1092,7 @@ pub(crate) mod tests {
                 symbol: "cv::convertScaleAbs".into(),
                 kind: TaskKind::Sw,
                 est_ns: 1,
+                hw_cost: None,
             }],
         });
         let err = p.validate_dag().unwrap_err();

@@ -21,7 +21,34 @@
 //! model (HW) — the same numbers the Pipeline Generator balanced with, or
 //! the paper's own Table I measurements for the calibration run.
 
-use super::plan::{StagePlan, StageSpec, TaskKind, BAND_HALO_OVERHEAD};
+use super::plan::{StagePlan, StageSpec, TaskKind, BAND_HALO_OVERHEAD, FUSION_LINK_SAVING};
+
+/// Tunable coefficients of the sim's cost model.  Defaults are the
+/// pinned constants; the `[tune]` config section overrides them so a
+/// later calibration PR has a seam ([`crate::config::TuneConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimModel {
+    /// Fractional cost saving credited per fusable sw link in a stage.
+    pub fusion_link_saving: f64,
+    /// Fractional per-extra-band halo overhead for row-band sharding.
+    pub band_halo_overhead: f64,
+}
+
+impl Default for SimModel {
+    fn default() -> Self {
+        Self { fusion_link_saving: FUSION_LINK_SAVING, band_halo_overhead: BAND_HALO_OVERHEAD }
+    }
+}
+
+impl SimModel {
+    /// The model a tune config describes.
+    pub fn from_tune(cfg: &crate::config::TuneConfig) -> Self {
+        Self {
+            fusion_link_saving: cfg.fusion_link_saving,
+            band_halo_overhead: cfg.band_halo_overhead,
+        }
+    }
+}
 
 /// Simulation result.
 #[derive(Debug, Clone, PartialEq)]
@@ -32,6 +59,10 @@ pub struct SimResult {
     pub frame_interval_ns: u64,
     /// Virtual completion time of the first frame, ns (fill latency).
     pub first_frame_ns: u64,
+    /// Modeled DMA transfer time per frame, ns: the summed sw↔hw
+    /// boundary-crossing cost the plan pays ([`StagePlan::transfer_ns`]).
+    /// 0 when no task carries a [`crate::pipeline::HwCost`] record.
+    pub transfer_ns: u64,
     /// Per-stage busy time, ns.
     pub stage_busy_ns: Vec<u64>,
     /// Effective worker capacity per stage:
@@ -79,6 +110,18 @@ impl SimResult {
 /// worker, and each hardware module within it additionally holds its
 /// fabric unit (serialising requests *to the same module* across stages).
 pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize) -> SimResult {
+    simulate_with_model(plan, frames, cpu_workers, tokens, &SimModel::default())
+}
+
+/// [`simulate`] with explicit model coefficients (the tuner threads its
+/// `[tune] fusion_link_saving` / `band_halo_overhead` knobs through here).
+pub fn simulate_with_model(
+    plan: &StagePlan,
+    frames: u64,
+    cpu_workers: usize,
+    tokens: usize,
+    model: &SimModel,
+) -> SimResult {
     let n_stages = plan.stages.len();
     // fork-join aware: a stage of independent branches (sibling sub-flows
     // of a DAG plan) costs its longest branch, because the runtime
@@ -88,13 +131,20 @@ pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize
     // as one composed kernel at deploy time, so the per-link buffer
     // traffic is credited back ([`StageSpec::fusion_credit_ns`]) — this
     // is what makes the tuner's search prefer fusion-enabling partitions.
+    // Transfer aware: every sw↔hw boundary crossing pays its DMA bill
+    // ([`StagePlan::stage_transfer_ns`]), charged to the hardware stage
+    // after banding (the link does not shard) — so candidates that keep
+    // hw neighbours adjacent genuinely save the round trip.
     let edges = plan.effective_edges();
     let stage_ns: Vec<u64> = plan
         .stages
         .iter()
         .map(|s| {
-            let base = s.fork_join_ns(&edges).saturating_sub(s.fusion_credit_ns(&edges));
-            banded_stage_ns(base, s, plan.bands, cpu_workers)
+            let base = s
+                .fork_join_ns(&edges)
+                .saturating_sub(s.fusion_credit_ns_with(&edges, model.fusion_link_saving));
+            banded_stage_ns(base, s, plan.bands, cpu_workers, model.band_halo_overhead)
+                + plan.stage_transfer_ns(s)
         })
         .collect();
     // fabric unit id per stage (stages sharing a module serialize on it)
@@ -218,6 +268,7 @@ pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize
         makespan_ns: now,
         frame_interval_ns: if frames == 0 { 0 } else { now / frames },
         first_frame_ns,
+        transfer_ns: plan.transfer_ns(),
         stage_busy_ns: stage_busy,
         stage_workers: plan
             .stages
@@ -237,16 +288,22 @@ pub fn simulate(plan: &StagePlan, frames: u64, cpu_workers: usize, tokens: usize
 /// otherwise-idle workers, so the effective intra-frame parallelism is
 /// `min(bands, cpu_workers)`; each extra band re-reads (and for
 /// multi-pass kernels recomputes) halo rows at its seams, charged as
-/// [`BAND_HALO_OVERHEAD`] of the un-banded cost per extra band.
-/// Hardware stages stream whole frames through the fabric and do not
-/// band, so their cost is returned untouched.
-fn banded_stage_ns(cost: u64, stage: &StageSpec, bands: usize, cpu_workers: usize) -> u64 {
+/// `halo_overhead` (default [`BAND_HALO_OVERHEAD`]) of the un-banded
+/// cost per extra band.  Hardware stages stream whole frames through the
+/// fabric and do not band, so their cost is returned untouched.
+fn banded_stage_ns(
+    cost: u64,
+    stage: &StageSpec,
+    bands: usize,
+    cpu_workers: usize,
+    halo_overhead: f64,
+) -> u64 {
     if bands <= 1 || stage.has_hw() {
         return cost;
     }
     let eff = bands.min(cpu_workers.max(1)).max(1);
     let sharded = cost as f64 / eff as f64;
-    let halo = cost as f64 * BAND_HALO_OVERHEAD * (eff - 1) as f64;
+    let halo = cost as f64 * halo_overhead * (eff - 1) as f64;
     (sharded + halo) as u64
 }
 
@@ -259,12 +316,14 @@ pub fn paper_table1_plan() -> StagePlan {
         symbol: sym.into(),
         kind: TaskKind::Hw { module: module.into(), artifact: format!("{module}.hlo.txt") },
         est_ns: (ms * 1e6) as u64,
+        hw_cost: None,
     };
     let sw = |covers: Vec<usize>, sym: &str, ms: f64| TaskSpec {
         covers,
         symbol: sym.into(),
         kind: TaskKind::Sw,
         est_ns: (ms * 1e6) as u64,
+        hw_cost: None,
     };
     // paper policy over the Courier-column times [39.8, 13.6, 80.2, 13.2]
     // with threads=2 yields {cvt}, {harris}, {normalize, csa}
@@ -303,7 +362,13 @@ mod tests {
     use crate::pipeline::plan::{StagePlan, StageSpec, TaskSpec};
 
     fn sw_task(ms: u64) -> TaskSpec {
-        TaskSpec { covers: vec![0], symbol: "f".into(), kind: TaskKind::Sw, est_ns: ms * 1_000_000 }
+        TaskSpec {
+            covers: vec![0],
+            symbol: "f".into(),
+            kind: TaskKind::Sw,
+            est_ns: ms * 1_000_000,
+            hw_cost: None,
+        }
     }
 
     fn plan_of(stage_ms: &[u64], serial_all: bool) -> StagePlan {
@@ -418,6 +483,7 @@ mod tests {
             symbol: format!("cv::f{c}"),
             kind: TaskKind::Sw,
             est_ns: ms * 1_000_000,
+            hw_cost: None,
         };
         // two chained SW tasks colocated in one stage: the run binds as a
         // composed kernel at deploy time, so the link credit applies
@@ -483,6 +549,61 @@ mod tests {
     }
 
     #[test]
+    fn transfer_is_priced_on_every_sw_hw_crossing() {
+        // the PPA-annotated demo plan: dma in for cvtColor (source→hw),
+        // dma out for harris (hw→sw), dma in+out for csa (sw→hw→sink);
+        // the hw→hw cvt→harris link streams on-fabric for free
+        let p = crate::pipeline::plan::tests::ppa_plan();
+        let r = simulate(&p, 64, 2, 4);
+        assert_eq!(r.transfer_ns, 8_200_000);
+        // the bottleneck stage (normalize+csa) absorbs its 1.7 ms bill:
+        // 93.4 + 1.7 = 95.1 ms steady-state
+        let interval = r.frame_interval_ns as f64 / 1e6;
+        assert!((95.0..100.0).contains(&interval), "{interval}");
+
+        // the cost-less demo plan pays nothing and runs faster
+        let base = simulate(&crate::pipeline::plan::tests::demo_plan(), 64, 2, 4);
+        assert_eq!(base.transfer_ns, 0);
+        assert!(base.frame_interval_ns < r.frame_interval_ns);
+    }
+
+    #[test]
+    fn model_knobs_reach_the_simulation() {
+        // fusion saving off: the colocated chain loses its 1 ms credit
+        let sw = |c: usize, ms: u64| TaskSpec {
+            covers: vec![c],
+            symbol: format!("cv::f{c}"),
+            kind: TaskKind::Sw,
+            est_ns: ms * 1_000_000,
+            hw_cost: None,
+        };
+        let colocated = StagePlan {
+            program: "t".into(),
+            threads: 1,
+            tokens: 1,
+            bands: 1,
+            edges: Vec::new(),
+            stages: vec![StageSpec { index: 0, serial: true, tasks: vec![sw(0, 10), sw(1, 10)] }],
+        };
+        let off = SimModel { fusion_link_saving: 0.0, band_halo_overhead: BAND_HALO_OVERHEAD };
+        let r = simulate_with_model(&colocated, 8, 1, 1, &off);
+        assert_eq!(r.frame_interval_ns, 20_000_000);
+        // default model matches the plain entry point
+        assert_eq!(
+            simulate_with_model(&colocated, 8, 1, 1, &SimModel::default()),
+            simulate(&colocated, 8, 1, 1)
+        );
+
+        // halo overhead doubled: the banded 40 ms stage costs
+        // 40/4 + 3×(4% of 40) = 14.8 ms instead of 12.4
+        let mut banded = plan_of(&[40], true);
+        banded.bands = 4;
+        let heavy = SimModel { fusion_link_saving: FUSION_LINK_SAVING, band_halo_overhead: 0.04 };
+        let r = simulate_with_model(&banded, 8, 4, 4, &heavy);
+        assert_eq!(r.frame_interval_ns, 14_800_000);
+    }
+
+    #[test]
     fn hardware_stages_ignore_the_band_schedule() {
         // every stage of the calibration plan touches the fabric or is
         // dominated by it — banding must leave the simulation untouched
@@ -512,6 +633,7 @@ mod tests {
             symbol: "f".into(),
             kind: TaskKind::Hw { module: module.into(), artifact: "x".into() },
             est_ns: 10_000_000,
+            hw_cost: None,
         };
         // two parallel-ish stages using the SAME module: fabric serializes
         let p = StagePlan {

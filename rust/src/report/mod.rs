@@ -230,6 +230,56 @@ pub struct TuneReport {
     pub rows: Vec<TuneRow>,
     /// Measured validation runs: (candidate desc, measured ms/frame).
     pub measured: Vec<(String, f64)>,
+    /// Fabric area budget the promotion was gated on, LUTs.
+    pub fabric_budget_luts: usize,
+    /// The latency × area × power frontier, sorted by latency.
+    pub pareto: Vec<ParetoRow>,
+}
+
+/// One non-dominated point of the PARETO report.
+#[derive(Debug, Clone)]
+pub struct ParetoRow {
+    /// Candidate label of the point's representative plan.
+    pub desc: String,
+    /// Simulated latency (makespan + queue penalty), ms.
+    pub latency_ms: f64,
+    /// Fabric footprint of the plan's distinct hw modules, LUTs.
+    pub area_luts: u64,
+    /// Fabric power of the plan's distinct hw modules, mW.
+    pub power_mw: u64,
+    /// Whether this point's candidate was promoted.
+    pub promoted: bool,
+}
+
+/// Render the PARETO report: the tuner's latency × area × power
+/// frontier, with the promoted (latency-optimal in-budget) point marked.
+pub fn render_pareto(r: &TuneReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "PARETO: {} — {} non-dominated point{} (fabric budget {} LUTs)\n",
+        r.program,
+        r.pareto.len(),
+        if r.pareto.len() == 1 { "" } else { "s" },
+        r.fabric_budget_luts
+    ));
+    s.push_str(&format!(
+        "{:<34} {:>13} {:>11} {:>11}  {}\n",
+        "Candidate", "latency [ms]", "area [LUT]", "power [mW]", "verdict"
+    ));
+    for row in &r.pareto {
+        let verdict = if row.promoted {
+            "promoted"
+        } else if row.area_luts > r.fabric_budget_luts as u64 {
+            "over budget"
+        } else {
+            "-"
+        };
+        s.push_str(&format!(
+            "{:<34} {:>13.2} {:>11} {:>11}  {verdict}\n",
+            row.desc, row.latency_ms, row.area_luts, row.power_mw
+        ));
+    }
+    s
 }
 
 /// Render the TUNE report.
@@ -424,6 +474,23 @@ mod tests {
                 },
             ],
             measured: vec![("policy=optimal tokens=8".into(), 2.61)],
+            fabric_budget_luts: 53_200,
+            pareto: vec![
+                ParetoRow {
+                    desc: "policy=optimal tokens=8".into(),
+                    latency_ms: 80.0,
+                    area_luts: 25_200,
+                    power_mw: 550,
+                    promoted: true,
+                },
+                ParetoRow {
+                    desc: "demote cv::cornerHarris to sw".into(),
+                    latency_ms: 140.0,
+                    area_luts: 0,
+                    power_mw: 0,
+                    promoted: false,
+                },
+            ],
         };
         let t = render_tune(&r);
         assert!(t.contains("TUNE: cornerHarris_Demo"));
@@ -432,6 +499,48 @@ mod tests {
         assert!(t.contains("x1.50"), "{t}");
         assert!(t.contains("measured policy=optimal tokens=8: 2.61 ms/frame"));
         assert!(t.contains("x1.70"), "{t}");
+
+        let p = render_pareto(&r);
+        assert!(p.contains("PARETO: cornerHarris_Demo"), "{p}");
+        assert!(p.contains("2 non-dominated points"), "{p}");
+        assert!(p.contains("53200 LUTs"), "{p}");
+        assert!(p.contains("promoted"), "{p}");
+        assert!(p.contains("demote cv::cornerHarris to sw"), "{p}");
+    }
+
+    #[test]
+    fn pareto_report_flags_over_budget_points() {
+        let r = TuneReport {
+            program: "p".into(),
+            budget: 8,
+            evaluated: 3,
+            calibration_entries: 0,
+            calibration_factor: 1.0,
+            seed_ms: 10.0,
+            winner_ms: 10.0,
+            rows: Vec::new(),
+            measured: Vec::new(),
+            fabric_budget_luts: 10_000,
+            pareto: vec![
+                ParetoRow {
+                    desc: "seed".into(),
+                    latency_ms: 5.0,
+                    area_luts: 60_000,
+                    power_mw: 900,
+                    promoted: false,
+                },
+                ParetoRow {
+                    desc: "demote x".into(),
+                    latency_ms: 9.0,
+                    area_luts: 0,
+                    power_mw: 0,
+                    promoted: true,
+                },
+            ],
+        };
+        let p = render_pareto(&r);
+        assert!(p.contains("over budget"), "{p}");
+        assert!(p.contains("promoted"), "{p}");
     }
 
     #[test]

@@ -13,7 +13,13 @@
 //! * a **scheduler** ([`Scheduler`]) multiplexes all sessions onto a
 //!   bounded worker pool with round-robin fairness, treating each placed
 //!   hardware module as an exclusive fabric slot (one request per placed
-//!   module — the paper's model, as simulated in `pipeline/sim.rs`);
+//!   module — the paper's model, as simulated in `pipeline/sim.rs`); the
+//!   slot allocator is area-aware: it tracks each module's slice-LUT
+//!   footprint and exports occupancy against `[serve].fabric_area_luts`;
+//! * a cold build whose hardware placement exceeds the fabric area
+//!   budget surfaces as a typed `CourierError::Fabric` and is retried
+//!   all-software (counted in `ServerStats::fabric_fallbacks`), so an
+//!   oversized manifest degrades to CPU serving instead of failing opens;
 //! * bounded per-session **ingress queues** ([`queue::BoundedQueue`])
 //!   provide backpressure (`submit`) and load shedding (`try_submit`);
 //! * per-session and global **stats** ([`SessionStats`], [`ServerStats`])
@@ -146,30 +152,22 @@ impl Server {
 
         let t0 = Instant::now();
         let (pipeline, hit) = self.cache.get_or_build(&key, || {
-            let inputs = crate::app::synth_frames(&spec.program, eff_cfg.trace_frames.max(1));
-            let trace = trace_program(&spec.program, &inputs)?;
-            let ir = Ir::from_graph(&CallGraph::from_trace(&trace))?;
-            // cold builds consume the persisted calibrated cost database
-            // (when configured): measured corrections from earlier tune
-            // runs move the partition cuts of every plan built here
-            let cal = match &eff_cfg.tune.cost_db {
-                Some(p) => {
-                    Some(crate::tune::CalibratedCostDb::load_or_default(p)?.calibration())
+            match self.build_for(&spec.program, &eff_cfg) {
+                // over-budget hardware placement: retry all-software
+                // instead of failing the open — the fabric budget bounds
+                // what lands on the fabric, not what the server can serve
+                Err(CourierError::Fabric(reason)) => {
+                    self.stats.fabric_fallbacks.inc();
+                    let mut sw_cfg = eff_cfg.clone();
+                    sw_cfg.cpu_only = true;
+                    self.build_for(&spec.program, &sw_cfg).map_err(|e| {
+                        CourierError::Fabric(format!(
+                            "{reason}; software fallback also failed: {e}"
+                        ))
+                    })
                 }
-                None => None,
-            };
-            let built = crate::pipeline::build_calibrated(
-                &ir,
-                &self.db,
-                &self.rt,
-                &self.registry,
-                &eff_cfg,
-                cal.as_ref(),
-            )?;
-            // the trace cannot tell a trailing dead branch from the real
-            // output; confirm against the program before serving
-            built.check_output_matches(&spec.program)?;
-            Ok(Arc::new(built))
+                other => other,
+            }
         })?;
         let open_ns = t0.elapsed().as_nanos() as u64;
 
@@ -219,7 +217,67 @@ impl Server {
         );
         self.obs.register("pool", &plan_label, &session.pipeline().pool);
         self.obs.register("tbb", &format!("{plan_label}.sink"), &session.pipeline().sink);
+        // the fabric allocator learns the footprint of every module this
+        // plan places, so occupancy metrics report real LUTs
+        let areas = session.pipeline().plan.hw_module_areas();
+        if !areas.is_empty() {
+            self.scheduler.fabric().register(&areas);
+        }
         Ok(session)
+    }
+
+    /// One cold build: trace → IR → (calibrated) partition → build.
+    fn build_for(
+        &self,
+        program: &crate::app::Program,
+        cfg: &Config,
+    ) -> Result<Arc<crate::pipeline::BuiltPipeline>> {
+        let inputs = crate::app::synth_frames(program, cfg.trace_frames.max(1));
+        let trace = trace_program(program, &inputs)?;
+        let ir = Ir::from_graph(&CallGraph::from_trace(&trace))?;
+        // cold builds consume the persisted calibrated cost database
+        // (when configured): measured corrections from earlier tune
+        // runs move the partition cuts of every plan built here
+        let cal = match &cfg.tune.cost_db {
+            Some(p) => Some(crate::tune::CalibratedCostDb::load_or_default(p)?.calibration()),
+            None => None,
+        };
+        let built = crate::pipeline::build_calibrated(
+            &ir,
+            &self.db,
+            &self.rt,
+            &self.registry,
+            cfg,
+            cal.as_ref(),
+        )?;
+        // the trace cannot tell a trailing dead branch from the real
+        // output; confirm against the program before serving
+        built.check_output_matches(program)?;
+        Ok(Arc::new(built))
+    }
+
+    /// Re-sync the fabric allocator with what is actually placed: register
+    /// the footprint of every live plan's modules, then drop slots no live
+    /// plan or open session references (stale placements from before a
+    /// promotion).  Called after [`PlanCache::promote`] replaces a plan.
+    fn refresh_fabric(&self) {
+        use std::collections::HashSet;
+        let mut live: HashSet<String> = HashSet::new();
+        let mut areas: Vec<(String, u64)> = Vec::new();
+        for (_, plan) in self.cache.plans() {
+            for (module, area) in plan.plan.hw_module_areas() {
+                live.insert(module.clone());
+                areas.push((module, area));
+            }
+        }
+        for s in self.sessions.lock().expect("server sessions lock").iter() {
+            for module in s.hw_modules() {
+                live.insert(module.clone());
+            }
+        }
+        let fabric = self.scheduler.fabric();
+        fabric.register(&areas);
+        fabric.prune(&live);
     }
 
     /// Re-tune one session key: run the autotuner over `spec`'s program
@@ -273,6 +331,9 @@ impl Server {
             // PlanCache::promotions is the authoritative promotion counter
             self.cache.promote(&key, outcome.winner.clone());
             tuned.insert(key, (Arc::downgrade(&outcome.winner), outcome.winner_measured_ms));
+            // the promoted plan may place different modules than the one
+            // it replaced: re-register live footprints, drop stale slots
+            self.refresh_fabric();
         }
         if let Some(p) = &eff_cfg.tune.cost_db {
             outcome.cost_db.save(p)?;
@@ -316,11 +377,14 @@ impl Server {
     }
 
     /// One JSON document with everything observable right now: the
-    /// registry snapshot per subsystem, plus an `attribution` section per
+    /// registry snapshot per subsystem, an `attribution` section per
     /// cached plan — measured end-to-end latency decomposed into
-    /// ingress/fabric/queue/service with the bottleneck stage named, and
-    /// sim-vs-measured drift per calibration key.  `--metrics-out` writes
-    /// this; [`report::render_metrics`] renders it for the console.
+    /// ingress/fabric/queue/service with the bottleneck stage named,
+    /// sim-vs-measured drift per calibration key, and the modeled
+    /// `transfer` (DMA) component per sw↔hw boundary — plus a `fabric`
+    /// occupancy section (registered vs busy LUTs against
+    /// `[serve].fabric_area_luts`).  `--metrics-out` writes this;
+    /// [`report::render_metrics`] renders it for the console.
     pub fn metrics_snapshot(&self) -> Json {
         let mut doc = match self.obs.snapshot() {
             Json::Obj(pairs) => pairs,
@@ -341,9 +405,23 @@ impl Server {
             if !rows.is_empty() {
                 entry.push(("drift".to_string(), obs::drift_to_json(&rows)));
             }
+            // the model's DMA bill per sw↔hw boundary crossing — the
+            // instrumentation cannot time the DMA engine apart from the
+            // stage span it lives inside, so the component is modeled
+            let transfers = obs::transfer_model(&plan.plan);
+            if !transfers.is_empty() {
+                entry.push(("transfer".to_string(), obs::transfer_to_json(&transfers)));
+            }
             attrib.push((key.describe(), Json::Obj(entry)));
         }
         doc.push(("attribution".to_string(), Json::Obj(attrib)));
+        doc.push((
+            "fabric".to_string(),
+            self.scheduler
+                .fabric()
+                .occupancy()
+                .to_json(self.cfg.serve.fabric_area_luts as u64),
+        ));
         Json::Obj(doc)
     }
 

@@ -23,10 +23,73 @@ use crate::CourierError;
 use super::session::{Job, Session};
 use super::stats::ServerStats;
 
-/// Exclusive fabric slots, one per placed hardware module name.
+/// Exclusive fabric slots, one per placed hardware module name, each
+/// carrying the module's slice-LUT footprint so the scheduler can report
+/// fabric occupancy against `[serve].fabric_area_luts`.
 #[derive(Default)]
 pub(crate) struct FabricSlots {
-    slots: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    slots: Mutex<HashMap<String, SlotEntry>>,
+}
+
+#[derive(Default)]
+struct SlotEntry {
+    lock: Arc<Mutex<()>>,
+    /// Slice-LUT footprint of the placed module (0 until registered —
+    /// `slots_for` may create a slot before the server registers areas).
+    area_luts: u64,
+}
+
+/// One module's occupancy row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct FabricModuleOcc {
+    pub(crate) name: String,
+    pub(crate) area_luts: u64,
+    /// True while a worker holds the module's slot for a frame.
+    pub(crate) busy: bool,
+}
+
+/// Snapshot of the fabric allocator: what is placed and what is running.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub(crate) struct FabricOccupancy {
+    /// Per-module rows, sorted by name.
+    pub(crate) modules: Vec<FabricModuleOcc>,
+}
+
+impl FabricOccupancy {
+    /// Combined footprint of every registered module, LUTs.
+    pub(crate) fn registered_luts(&self) -> u64 {
+        self.modules.iter().map(|m| m.area_luts).sum()
+    }
+
+    /// Footprint of the modules currently serving a frame, LUTs.
+    pub(crate) fn busy_luts(&self) -> u64 {
+        self.modules.iter().filter(|m| m.busy).map(|m| m.area_luts).sum()
+    }
+
+    /// JSON form for the server's metrics snapshot.
+    pub(crate) fn to_json(&self, budget_luts: u64) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("budget_luts", Json::Num(budget_luts as f64)),
+            ("registered_luts", Json::Num(self.registered_luts() as f64)),
+            ("busy_luts", Json::Num(self.busy_luts() as f64)),
+            (
+                "modules",
+                Json::Arr(
+                    self.modules
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("name", Json::Str(m.name.clone())),
+                                ("area_luts", Json::Num(m.area_luts as f64)),
+                                ("busy", Json::Bool(m.busy)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 impl FabricSlots {
@@ -37,8 +100,44 @@ impl FabricSlots {
         let mut map = self.slots.lock().expect("fabric slots lock");
         modules
             .iter()
-            .map(|m| map.entry(m.clone()).or_default().clone())
+            .map(|m| map.entry(m.clone()).or_default().lock.clone())
             .collect()
+    }
+
+    /// Record (or update) the slice-LUT footprint of placed modules —
+    /// called by the server with [`crate::pipeline::StagePlan::hw_module_areas`]
+    /// whenever a plan lands on the fabric.
+    pub(crate) fn register(&self, modules: &[(String, u64)]) {
+        let mut map = self.slots.lock().expect("fabric slots lock");
+        for (name, area) in modules {
+            map.entry(name.clone()).or_default().area_luts = *area;
+        }
+    }
+
+    /// Drop slots whose module is in no live plan (the re-tune path: a
+    /// promotion can move a key off modules its old plan placed).  A
+    /// worker that still holds a pruned slot's `Arc` finishes its frame
+    /// normally — only the name → mutex binding is forgotten, and the
+    /// caller guarantees no live plan places a pruned module.
+    pub(crate) fn prune(&self, live: &std::collections::HashSet<String>) {
+        self.slots.lock().expect("fabric slots lock").retain(|name, _| live.contains(name));
+    }
+
+    /// Occupancy snapshot: every registered module with its footprint and
+    /// whether a worker currently holds it (`try_lock` probe — a busy
+    /// mutex is a frame in flight on that module).
+    pub(crate) fn occupancy(&self) -> FabricOccupancy {
+        let map = self.slots.lock().expect("fabric slots lock");
+        let mut modules: Vec<FabricModuleOcc> = map
+            .iter()
+            .map(|(name, e)| FabricModuleOcc {
+                name: name.clone(),
+                area_luts: e.area_luts,
+                busy: e.lock.try_lock().is_err(),
+            })
+            .collect();
+        modules.sort_by(|a, b| a.name.cmp(&b.name));
+        FabricOccupancy { modules }
     }
 }
 
@@ -96,6 +195,11 @@ impl Scheduler {
     /// Sessions currently in rotation.
     pub fn session_count(&self) -> usize {
         self.shared.sessions.lock().expect("scheduler sessions lock").len()
+    }
+
+    /// The fabric-slot allocator (area registration, occupancy, pruning).
+    pub(crate) fn fabric(&self) -> &FabricSlots {
+        &self.shared.fabric
     }
 
     /// Stop accepting work and join all workers.  Queued jobs that no
@@ -222,6 +326,52 @@ mod tests {
     fn empty_module_list_locks_nothing() {
         let fabric = FabricSlots::default();
         assert!(fabric.slots_for(&[]).is_empty());
+    }
+
+    #[test]
+    fn registered_areas_feed_the_occupancy_snapshot() {
+        let fabric = FabricSlots::default();
+        fabric.register(&[("m1".into(), 10_000), ("m2".into(), 4_000)]);
+        let occ = fabric.occupancy();
+        assert_eq!(occ.modules.len(), 2);
+        assert_eq!(occ.registered_luts(), 14_000);
+        assert_eq!(occ.busy_luts(), 0, "nothing is serving a frame yet");
+
+        // a held slot shows up as busy area
+        let slots = fabric.slots_for(&["m1".into()]);
+        let _guard = slots[0].lock().unwrap();
+        let occ = fabric.occupancy();
+        assert_eq!(occ.busy_luts(), 10_000);
+        let m1 = occ.modules.iter().find(|m| m.name == "m1").unwrap();
+        assert!(m1.busy);
+        assert!(!occ.modules.iter().find(|m| m.name == "m2").unwrap().busy);
+
+        let json = occ.to_json(53_200).to_string_pretty();
+        assert!(json.contains("\"budget_luts\""), "{json}");
+        assert!(json.contains("\"busy_luts\""), "{json}");
+    }
+
+    #[test]
+    fn prune_drops_stale_slots_but_keeps_live_ones() {
+        let fabric = FabricSlots::default();
+        fabric.register(&[("live".into(), 5_000), ("stale".into(), 7_000)]);
+        let before = fabric.slots_for(&["live".into()]);
+
+        let live: std::collections::HashSet<String> = ["live".to_string()].into();
+        fabric.prune(&live);
+        let occ = fabric.occupancy();
+        assert_eq!(occ.modules.len(), 1);
+        assert_eq!(occ.modules[0].name, "live");
+        assert_eq!(occ.registered_luts(), 5_000);
+
+        // the surviving slot keeps its identity across the prune
+        let after = fabric.slots_for(&["live".into()]);
+        assert!(Arc::ptr_eq(&before[0], &after[0]), "live slot must not be recreated");
+
+        // a pruned module re-appearing starts over at an unknown footprint
+        fabric.slots_for(&["stale".into()]);
+        let back = fabric.occupancy();
+        assert_eq!(back.modules.iter().find(|m| m.name == "stale").unwrap().area_luts, 0);
     }
 
     #[test]

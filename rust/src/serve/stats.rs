@@ -87,6 +87,9 @@ pub struct ServerStats {
     pub open_latency: Latency,
     /// Frames served across all sessions since server start.
     pub frames: Throughput,
+    /// Cold builds whose hardware placement blew `[serve].fabric_area_luts`
+    /// and were retried all-software (the plan served is the CPU fallback).
+    pub fabric_fallbacks: Counter,
 }
 
 impl ServerStats {

@@ -27,7 +27,7 @@ mod search;
 
 pub use calibrate::{calibrate, CalibrationRun, StageCalibration};
 pub use cost_db::{CalibratedCostDb, CostRecord, COST_DB_VERSION};
-pub use search::{search, Candidate, SearchOutcome};
+pub use search::{search, Candidate, ParetoPoint, SearchOutcome};
 
 use std::sync::Arc;
 
@@ -38,7 +38,7 @@ use crate::image::Mat;
 use crate::ir::Ir;
 use crate::metrics::TunerMetrics;
 use crate::pipeline::{instantiate, BuiltPipeline};
-use crate::report::{TuneReport, TuneRow};
+use crate::report::{ParetoRow, TuneReport, TuneRow};
 use crate::runtime::Runtime;
 use crate::swlib::Registry;
 use crate::trace::{trace_program, CallGraph};
@@ -181,8 +181,17 @@ impl<'a> Tuner<'a> {
         // run that teaches nothing, so only penalty-free candidates rank.
         // (Those are all distinct plans already: the search's seen-set
         // scores each (cuts, tokens) configuration at most once.)
+        // Candidates whose fabric footprint exceeds `[serve]
+        // fabric_area_luts` never rank: promotion is the latency-optimal
+        // *in-budget* Pareto point.  (The seed passed the builder's
+        // budget check and non-demotion candidates keep its placement,
+        // so the gate only ever bites plans that grew the footprint.)
+        let budget_luts = self.cfg.serve.fabric_area_luts as u64;
         let mut ranked: Vec<usize> = (0..outcome.candidates.len())
-            .filter(|&i| outcome.candidates[i].penalty_ns == 0)
+            .filter(|&i| {
+                outcome.candidates[i].penalty_ns == 0
+                    && outcome.candidates[i].plan.fabric_area_luts() <= budget_luts
+            })
             .collect();
         ranked.sort_by_key(|&i| outcome.candidates[i].score());
         ranked.truncate(self.cfg.tune.top_k.max(1));
@@ -273,6 +282,18 @@ impl<'a> Tuner<'a> {
             })
             .collect();
 
+        let pareto: Vec<ParetoRow> = outcome
+            .frontier
+            .iter()
+            .map(|p| ParetoRow {
+                desc: outcome.candidates[p.candidate].desc.clone(),
+                latency_ms: p.latency_ns as f64 / 1e6,
+                area_luts: p.area_luts,
+                power_mw: p.power_mw,
+                promoted: p.candidate == winner_idx,
+            })
+            .collect();
+
         let report = TuneReport {
             program: program.name.clone(),
             budget: self.cfg.tune.budget,
@@ -286,6 +307,8 @@ impl<'a> Tuner<'a> {
             winner_ms: winner_cand.sim.makespan_ns as f64 / 1e6,
             rows,
             measured,
+            fabric_budget_luts: self.cfg.serve.fabric_area_luts,
+            pareto,
         };
         let queue_depth = winner_cand.queue_depth;
         let winner_measured_ms = winner_sel_ms;
@@ -362,6 +385,13 @@ mod tests {
         );
         assert!(!out.cost_db.is_empty(), "calibration must record tasks");
         assert!(!out.report.measured.is_empty(), "top-K must be measured");
+        // all-sw run: every candidate has zero footprint, so the frontier
+        // collapses to the single best-latency point
+        assert_eq!(out.report.pareto.len(), 1, "{:?}", out.report.pareto);
+        assert_eq!(out.report.pareto[0].area_luts, 0);
+        assert_eq!(out.report.fabric_budget_luts, 53_200);
+        assert!(out.report.pareto.iter().filter(|p| p.promoted).count() <= 1);
+        assert!(crate::report::render_pareto(&out.report).contains("PARETO:"));
         // metrics count every candidate (including budget-exempt ladder
         // rows); the report counts simulator evaluations only
         assert!(tuner.metrics.candidates.get() >= out.report.evaluated as u64);

@@ -14,7 +14,10 @@
 //!    row bands across otherwise-idle workers (tokens overlap *across*
 //!    frames; bands split *within* one — the simulator prices the halo
 //!    recompute, so banding only wins when idle capacity really exists);
-//! 5. **queue-depth ladder** — deeper ingress queues cost tail latency
+//! 5. **placement demotion** — each hardware task with a software
+//!    alternative is flipped to sw one at a time, trading latency
+//!    against freed fabric area and power;
+//! 6. **queue-depth ladder** — deeper ingress queues cost tail latency
 //!    and win nothing once the token pool is covered, so depth is scored
 //!    with an explicit latency penalty.
 //!
@@ -22,10 +25,17 @@
 //! then the queue-latency penalty, then smaller token pools and fewer
 //! stages.  The seed plan is always candidate #0, so the winner's
 //! simulated makespan can never exceed the untuned plan's.
+//!
+//! Besides the single winner, the search keeps the **Pareto frontier**
+//! over (latency, area, power) — the tuner promotes the latency-optimal
+//! point that fits the configured fabric area budget, which is the
+//! winner whenever the winner fits.
 
 use crate::config::Config;
 use crate::metrics::TunerMetrics;
-use crate::pipeline::{partition, simulate, SimResult, StagePlan, StageSpec, TaskSpec};
+use crate::pipeline::{
+    partition, simulate_with_model, SimModel, SimResult, StagePlan, StageSpec, TaskKind, TaskSpec,
+};
 
 /// One evaluated configuration.
 #[derive(Debug, Clone)]
@@ -49,6 +59,62 @@ impl Candidate {
     }
 }
 
+/// One point on the latency × area × power Pareto frontier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParetoPoint {
+    /// Index into [`SearchOutcome::candidates`].
+    pub candidate: usize,
+    /// Simulated makespan plus the queue-latency penalty, ns.
+    pub latency_ns: u64,
+    /// Fabric footprint of the plan's distinct hardware modules, LUTs.
+    pub area_luts: u64,
+    /// Fabric power of the plan's distinct hardware modules, mW.
+    pub power_mw: u64,
+}
+
+/// The non-dominated subset of the scored candidates over
+/// (latency, area, power), sorted by latency.  One representative is
+/// kept per distinct objective triple (the earliest-scored candidate).
+fn pareto_frontier(candidates: &[Candidate]) -> Vec<ParetoPoint> {
+    let pts: Vec<ParetoPoint> = candidates
+        .iter()
+        .enumerate()
+        .map(|(i, c)| ParetoPoint {
+            candidate: i,
+            latency_ns: c.sim.makespan_ns + c.penalty_ns,
+            area_luts: c.plan.fabric_area_luts(),
+            power_mw: c.plan.fabric_power_mw(),
+        })
+        .collect();
+    let dominates = |a: &ParetoPoint, b: &ParetoPoint| {
+        a.latency_ns <= b.latency_ns
+            && a.area_luts <= b.area_luts
+            && a.power_mw <= b.power_mw
+            && (a.latency_ns < b.latency_ns
+                || a.area_luts < b.area_luts
+                || a.power_mw < b.power_mw)
+    };
+    let triple = |p: &ParetoPoint| (p.latency_ns, p.area_luts, p.power_mw);
+    let mut out: Vec<ParetoPoint> = Vec::new();
+    for p in &pts {
+        if pts.iter().any(|q| dominates(q, p)) {
+            continue;
+        }
+        // one representative per objective triple: the best-scored
+        // candidate holding it (so the winner represents its own point)
+        match out.iter_mut().find(|q| triple(q) == triple(p)) {
+            Some(q) => {
+                if candidates[p.candidate].score() < candidates[q.candidate].score() {
+                    *q = p.clone();
+                }
+            }
+            None => out.push(p.clone()),
+        }
+    }
+    out.sort_by_key(triple);
+    out
+}
+
 /// The search deliverable: every scored candidate plus seed/winner
 /// indices into the list.
 #[derive(Debug, Clone)]
@@ -59,6 +125,11 @@ pub struct SearchOutcome {
     pub seed: usize,
     /// Index of the best configuration found.
     pub winner: usize,
+    /// The latency × area × power Pareto frontier over the candidates,
+    /// sorted by latency.  Promotion picks the latency-optimal point
+    /// whose area fits `[serve].fabric_area_luts`
+    /// ([`Self::best_within_area`]).
+    pub frontier: Vec<ParetoPoint>,
 }
 
 impl SearchOutcome {
@@ -70,6 +141,14 @@ impl SearchOutcome {
     /// The seed candidate.
     pub fn seed(&self) -> &Candidate {
         &self.candidates[self.seed]
+    }
+
+    /// The latency-optimal frontier point whose fabric footprint fits
+    /// `budget_luts`.  `None` only when every point is over budget (an
+    /// all-software plan has zero area, so any search seeded from one —
+    /// or holding a demotion candidate — always yields a fit).
+    pub fn best_within_area(&self, budget_luts: u64) -> Option<&ParetoPoint> {
+        self.frontier.iter().find(|p| p.area_luts <= budget_luts)
     }
 }
 
@@ -132,6 +211,8 @@ struct Evaluator<'a> {
     cfg: &'a Config,
     metrics: &'a TunerMetrics,
     remaining: usize,
+    /// Sim-model knobs from `[tune]` (fusion link saving, band halo).
+    model: SimModel,
 }
 
 impl Evaluator<'_> {
@@ -147,11 +228,12 @@ impl Evaluator<'_> {
         }
         self.remaining -= 1;
         let sim = self.metrics.sim_time.time(|| {
-            simulate(
+            simulate_with_model(
                 &plan,
                 self.cfg.tune.sim_frames.max(1) as u64,
                 plan.threads.max(1),
                 plan.tokens.max(1),
+                &self.model,
             )
         });
         self.metrics.candidates.inc();
@@ -171,7 +253,12 @@ pub fn search(
     let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
     let threads = seed_plan.threads.max(1);
     let base_depth = |tokens: usize| tokens.max(2);
-    let mut ev = Evaluator { cfg, metrics, remaining: cfg.tune.budget.max(1) };
+    let mut ev = Evaluator {
+        cfg,
+        metrics,
+        remaining: cfg.tune.budget.max(1),
+        model: SimModel::from_tune(&cfg.tune),
+    };
     let mut seen: std::collections::HashSet<(Vec<usize>, usize, usize)> =
         std::collections::HashSet::new();
     seen.insert(config_sig(&groups_of(seed_plan), seed_plan.tokens, seed_plan.bands));
@@ -420,7 +507,59 @@ pub fn search(
         }
     }
 
-    // -- 5) queue-depth ladder on the incumbent ----------------------------
+    // -- 5) placement demotion (hw → sw flips) -----------------------------
+    // each hardware task whose cost record carries a software alternative
+    // is flipped to sw placement one at a time: the flip trades latency
+    // (the traced software time replaces compute + both DMA crossings)
+    // against the module's freed area and power, populating the cheap end
+    // of the Pareto frontier.  A flip can also WIN outright when a
+    // module's DMA overhead exceeds its compute advantage — the simulator
+    // decides, not a heuristic.  Flips never touch cuts, tokens or bands,
+    // so each is a genuinely new configuration (the seen-set keys on the
+    // task list's placement being fixed, which the flip breaks).
+    {
+        let incumbent = candidates[best].clone();
+        let groups = groups_of(&incumbent.plan);
+        let inc_tasks: Vec<TaskSpec> =
+            incumbent.plan.stages.iter().flat_map(|s| s.tasks.iter().cloned()).collect();
+        for (ti, task) in inc_tasks.iter().enumerate() {
+            let Some(hc) = &task.hw_cost else { continue };
+            if matches!(task.kind, TaskKind::Sw) || hc.sw_alt_ns == 0 {
+                continue;
+            }
+            let mut flipped = inc_tasks.clone();
+            flipped[ti] = TaskSpec {
+                kind: TaskKind::Sw,
+                est_ns: hc.sw_alt_ns,
+                hw_cost: None,
+                ..flipped[ti].clone()
+            };
+            let plan = plan_from_groups(
+                &incumbent.plan.program,
+                &flipped,
+                &edges,
+                &groups,
+                threads,
+                incumbent.plan.tokens,
+                incumbent.plan.bands,
+            );
+            let idx = push(
+                &mut candidates,
+                ev.eval(
+                    plan,
+                    incumbent.queue_depth,
+                    0,
+                    format!(
+                        "demote {} to sw (frees {} LUTs, {} mW)",
+                        task.symbol, hc.area_luts, hc.power_mw
+                    ),
+                ),
+            );
+            consider(&mut candidates, &mut best, idx);
+        }
+    }
+
+    // -- 6) queue-depth ladder on the incumbent ----------------------------
     {
         let incumbent = candidates[best].clone();
         let base = base_depth(incumbent.plan.tokens);
@@ -446,7 +585,8 @@ pub fn search(
         }
     }
 
-    SearchOutcome { candidates, seed: seed_idx, winner: best }
+    let frontier = pareto_frontier(&candidates);
+    SearchOutcome { candidates, seed: seed_idx, winner: best, frontier }
 }
 
 #[cfg(test)]
@@ -464,8 +604,32 @@ mod tests {
                 symbol: format!("cv::f{i}"),
                 kind: TaskKind::Sw,
                 est_ns: ms * 1_000_000,
+                hw_cost: None,
             })
             .collect()
+    }
+
+    /// A 3-task chain whose middle task sits on the fabric: compute +
+    /// DMA ≈ 7 ms against a 40 ms software alternative, 12k LUTs,
+    /// 250 mW.
+    fn hw_middle_tasks() -> Vec<TaskSpec> {
+        let mut tasks = sw_tasks(&[10, 0, 8]);
+        tasks[1] = TaskSpec {
+            kind: TaskKind::Hw {
+                module: "hls_mid".into(),
+                artifact: "hls_mid.hlo.txt".into(),
+            },
+            est_ns: 5_000_000,
+            hw_cost: Some(crate::pipeline::HwCost {
+                area_luts: 12_000,
+                power_mw: 250,
+                xfer_in_ns: 1_000_000,
+                xfer_out_ns: 1_000_000,
+                sw_alt_ns: 40_000_000,
+            }),
+            ..tasks[1].clone()
+        };
+        tasks
     }
 
     fn seed_of(tasks: &[TaskSpec], threads: usize, tokens: usize, policy: PartitionPolicy) -> StagePlan {
@@ -602,6 +766,71 @@ mod tests {
         // banded variant of it
         assert!(out.winner().sim.makespan_ns <= out.seed().sim.makespan_ns);
         assert_eq!(groups_of(&out.winner().plan), groups_of(&out.seed().plan));
+    }
+
+    #[test]
+    fn demotion_populates_a_multi_point_pareto_frontier() {
+        let tasks = hw_middle_tasks();
+        let cfg = cfg_with(64);
+        let seed = seed_of(&tasks, cfg.threads, cfg.tokens, cfg.policy);
+        let out = search(&seed, &tasks, &cfg, &TunerMetrics::default());
+
+        // a demotion candidate exists and its plan really is all-sw
+        let demoted = out
+            .candidates
+            .iter()
+            .find(|c| c.desc.starts_with("demote cv::f1"))
+            .expect("hw task with a sw alternative must produce a demotion candidate");
+        assert_eq!(demoted.plan.fabric_area_luts(), 0);
+        assert!(demoted
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| &s.tasks)
+            .all(|t| matches!(t.kind, TaskKind::Sw)));
+
+        // the frontier holds (at least) the fast-but-large hw point and
+        // the slow-but-free sw point — neither dominates the other
+        assert!(out.frontier.len() >= 2, "frontier: {:?}", out.frontier);
+        let hw_pt = out.frontier.iter().find(|p| p.area_luts == 12_000).expect("hw point");
+        let sw_pt = out.frontier.iter().find(|p| p.area_luts == 0).expect("sw point");
+        assert_eq!(hw_pt.power_mw, 250);
+        assert!(hw_pt.latency_ns < sw_pt.latency_ns);
+
+        // frontier is sorted by latency and genuinely non-dominated
+        for w in out.frontier.windows(2) {
+            assert!(w[0].latency_ns <= w[1].latency_ns);
+            assert!(
+                w[1].area_luts < w[0].area_luts || w[1].power_mw < w[0].power_mw,
+                "a later frontier point must win on some axis: {:?}",
+                out.frontier
+            );
+        }
+
+        // promotion policy: latency-optimal within budget
+        assert_eq!(
+            out.best_within_area(53_200).unwrap().candidate,
+            hw_pt.candidate,
+            "a roomy budget takes the fast hw point"
+        );
+        assert_eq!(
+            out.best_within_area(1_000).unwrap().candidate,
+            sw_pt.candidate,
+            "a tiny budget forces the all-sw point"
+        );
+    }
+
+    #[test]
+    fn winner_is_on_the_frontier_and_within_any_covering_budget() {
+        let tasks = sw_tasks(&[5, 40, 12, 30, 8]);
+        let cfg = cfg_with(64);
+        let seed = seed_of(&tasks, cfg.threads, cfg.tokens, cfg.policy);
+        let out = search(&seed, &tasks, &cfg, &TunerMetrics::default());
+        // all-sw search: every plan has zero footprint, so the frontier
+        // collapses to the single best latency — the winner
+        assert_eq!(out.frontier.len(), 1);
+        assert_eq!(out.frontier[0].candidate, out.winner);
+        assert_eq!(out.best_within_area(0).unwrap().candidate, out.winner);
     }
 
     #[test]

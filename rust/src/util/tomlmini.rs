@@ -104,6 +104,15 @@ impl TomlDoc {
         }
     }
 
+    /// Float value (integers coerce, like real TOML readers do).
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        match self.values.get(key) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
     /// Whether a key exists.
     pub fn contains(&self, key: &str) -> bool {
         self.values.contains_key(key)
@@ -160,6 +169,8 @@ mod tests {
         assert_eq!(doc.get_str("policy"), Some("optimal"));
         assert_eq!(doc.get_bool("cpu_only"), Some(true));
         assert!(doc.contains("ratio"));
+        assert_eq!(doc.get_f64("ratio"), Some(1.5));
+        assert_eq!(doc.get_f64("threads"), Some(4.0), "ints coerce to float");
     }
 
     #[test]

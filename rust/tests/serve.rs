@@ -15,6 +15,101 @@ use courier::image::{synth, Mat};
 use courier::serve::{Server, SessionSpec};
 use courier::util::testing::{empty_hwdb_dir, TempDir};
 
+/// A v2 manifest matching the corner-Harris case-study ops at `h`x`w`,
+/// each module with a real PPA record — no artifact files, so it only
+/// supports tests whose builds never reach the fabric (over-budget
+/// fallback).  Three modules at 4 800 LUTs each: combined 14 400.
+fn harris_ppa_db(tag: &str, h: usize, w: usize) -> TempDir {
+    let tmp = TempDir::new(tag).unwrap();
+    let module = |name: &str, symbol: &str, in_shape: &str| {
+        format!(
+            r#"{{
+                "name": "{name}",
+                "library_symbol": "{symbol}",
+                "enabled": true,
+                "kind": "image1",
+                "variants": [{{
+                    "size": [{h}, {w}],
+                    "inputs": [{{"shape": [{in_shape}], "dtype": "f32"}}],
+                    "outputs": [{{"shape": [{h}, {w}], "dtype": "f32"}}],
+                    "artifact": "{name}__{h}x{w}.hlo.txt",
+                    "est_flops": 1000.0,
+                    "est_bytes": 1000.0,
+                    "est_latency_cycles": 256,
+                    "ppa": {{"latency_cycles": 256, "area_luts": 4800.0, "power_mw": 120.0}}
+                }}]
+            }}"#
+        )
+    };
+    let manifest = format!(
+        r#"{{"version": 2, "fabric_clock_mhz": 157.0, "modules": [{}, {}, {}]}}"#,
+        module("hls_cvt_color", "cv::cvtColor", &format!("{h}, {w}, 3")),
+        module("hls_corner_harris", "cv::cornerHarris", &format!("{h}, {w}")),
+        module("hls_convert_scale_abs", "cv::convertScaleAbs", &format!("{h}, {w}")),
+    );
+    std::fs::write(tmp.path().join("manifest.json"), manifest).unwrap();
+    tmp
+}
+
+#[test]
+fn over_budget_cold_build_flips_the_partition_to_software() {
+    let tmp = harris_ppa_db("serve-fabric-budget", 24, 32);
+    let program = corner_harris_demo(24, 32);
+
+    // the planner itself admits all three modules at the default budget …
+    let db = courier::hwdb::HwDatabase::load(tmp.path()).unwrap();
+    let inputs = courier::app::synth_frames(&program, 1);
+    let trace = courier::trace::trace_program(&program, &inputs).unwrap();
+    let ir =
+        courier::ir::Ir::from_graph(&courier::trace::CallGraph::from_trace(&trace)).unwrap();
+    let registry = courier::swlib::Registry::standard();
+    let roomy = Config { artifacts_dir: tmp.path().to_path_buf(), ..Default::default() };
+    let plan = courier::pipeline::plan_pipeline(&ir, &db, &registry, &roomy, None).unwrap();
+    assert_eq!(plan.placement_counts().0, 3, "default budget admits the case study");
+    assert_eq!(plan.fabric_area_luts(), 14_400);
+
+    // … but a budget below the combined 14 400-LUT footprint flips the
+    // serve cold build to an all-software plan instead of failing (or
+    // panicking): typed fabric error inside, graceful fallback outside
+    let mut cfg = serve_config(tmp.path().to_path_buf());
+    cfg.serve.fabric_area_luts = 10_000;
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(corner_harris_demo(24, 32))).unwrap();
+    assert_eq!(
+        session.pipeline().plan.placement_counts().0,
+        0,
+        "fallback plan must be all-software"
+    );
+    assert_eq!(server.stats().fabric_fallbacks.get(), 1);
+
+    // frames serve correctly on the fallback plan
+    let frame = synth::noise_rgb(24, 32, 3);
+    let out = session.run_window(vec![frame.clone()]).unwrap().remove(0);
+    let original =
+        Interpreter::new(corner_harris_demo(24, 32), Arc::new(RegistryDispatch::standard()));
+    let want = original.run(&[frame]).unwrap().remove(0);
+    assert!(out.quantized_close(&want, 1.0, 1e-3), "fallback output diverges");
+
+    // a second open of the same key is a warm hit on the fallback plan
+    // (the fallback is cached under the original key — no rebuild loop)
+    let warm = server.open(SessionSpec::new(corner_harris_demo(24, 32))).unwrap();
+    assert!(warm.cache_hit());
+    assert_eq!(server.stats().fabric_fallbacks.get(), 1, "no second fallback build");
+
+    // the metrics snapshot exports fabric occupancy: nothing is placed
+    let snap = server.metrics_snapshot();
+    let fabric = snap.req("fabric").unwrap();
+    assert_eq!(fabric.req("busy_luts").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(fabric.req("registered_luts").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(
+        fabric.req("budget_luts").unwrap().as_f64().unwrap(),
+        10_000.0,
+        "occupancy is reported against the configured budget"
+    );
+
+    server.shutdown();
+}
+
 /// A valid artifact dir whose database has no modules (CPU-only serving)
 /// — written by the shared `empty_hwdb_dir` helper at TempDir creation.
 fn empty_db(tmp: &TempDir) -> PathBuf {
