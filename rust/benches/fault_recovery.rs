@@ -1,0 +1,100 @@
+//! **Fault recovery** — what containment costs and what it saves.
+//!
+//! Serves the harris DAG all-software (hermetic: an empty hardware
+//! manifest, no artifacts needed) in three modes: injection disabled
+//! (the hot path carries no injector branches), injection armed but
+//! never striking (the per-invocation consultation cost), and a
+//! period-8 `sw_panic` schedule where every 8th frame is poisoned and
+//! must be contained without disturbing its neighbours.
+//! `cargo bench --bench fault_recovery`
+
+use std::time::Duration;
+
+use courier::app::harris_dag_demo;
+use courier::config::Config;
+use courier::image::{synth, Mat};
+use courier::serve::{Server, Session, SessionSpec};
+use courier::util::bench::{section, smoke, write_bench_json, Bench};
+use courier::util::testing::empty_hwdb_dir;
+
+/// Submit the whole window, wait every ticket, count deliveries.  A
+/// faulted frame surfaces as a wait error and is simply not counted —
+/// the run must never hang or abort on it.
+fn stream(session: &Session, frames: &[Mat]) -> u64 {
+    let tickets: Vec<_> = frames.iter().map(|f| session.submit(f.clone()).unwrap()).collect();
+    tickets.into_iter().filter(|&t| session.wait(t).is_ok()).count() as u64
+}
+
+fn main() {
+    let (h, w, n) = if smoke() { (24, 32, 64) } else { (48, 64, 240) };
+    section(&format!("FAULT RECOVERY — all-software harris DAG @ {h}x{w}, {n} frames/run"));
+
+    let tmp = empty_hwdb_dir("bench-fault-recovery").unwrap();
+    let base_cfg = || {
+        let mut cfg = Config { artifacts_dir: tmp.path().to_path_buf(), ..Default::default() };
+        cfg.serve.workers = 2;
+        cfg.serve.queue_depth = 16;
+        cfg
+    };
+    let bench = Bench::from_env(Duration::from_secs(6));
+    let frames: Vec<Mat> = (0..n).map(|s| synth::noise_rgb(h, w, s as u64)).collect();
+    let program = || harris_dag_demo(h, w);
+
+    // 1) injection disabled: the baseline frame path
+    let server = Server::new(base_cfg()).unwrap();
+    let session = server.open(SessionSpec::new(program())).unwrap();
+    let m_off = bench.run("serve window, injection disabled", || stream(&session, &frames));
+    server.shutdown();
+
+    // 2) armed but never striking: the injector is consulted on every
+    //    software invocation (counter bump + draw) yet no fault lands —
+    //    the pure overhead of leaving the harness on
+    let mut cfg = base_cfg();
+    cfg.fault.enabled = true;
+    cfg.fault.kinds = "sw_panic".to_string();
+    cfg.fault.probability = 1e-12;
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(program())).unwrap();
+    let m_idle = bench.run("serve window, armed but idle", || stream(&session, &frames));
+    server.shutdown();
+
+    // 3) period-8 sw panics: 1 frame in 8 is poisoned mid-pipeline; the
+    //    worker contains it, delivers the error, and keeps going
+    let mut cfg = base_cfg();
+    cfg.fault.enabled = true;
+    cfg.fault.kinds = "sw_panic".to_string();
+    cfg.fault.period = 8;
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(program())).unwrap();
+    let m_inj = bench.run("serve window, period-8 sw panics", || stream(&session, &frames));
+    let completed = session.stats.completed.get() as f64;
+    let failed = session.stats.failed.get() as f64;
+    let fault_rate = failed / (completed + failed);
+    server.shutdown();
+
+    let per_frame = |m: &courier::util::bench::Measurement| m.mean_ns as f64 / n as f64 / 1e6;
+    let overhead_pct = (per_frame(&m_idle) - per_frame(&m_off)) / per_frame(&m_off) * 100.0;
+    println!(
+        "\nper frame: disabled {:.3} ms, armed-idle {:.3} ms ({overhead_pct:+.2} %), \
+         faulted run {:.3} ms",
+        per_frame(&m_off),
+        per_frame(&m_idle),
+        per_frame(&m_inj)
+    );
+    println!(
+        "containment: {:.1} % of frames poisoned, {:.1} % delivered, zero worker deaths",
+        fault_rate * 100.0,
+        (1.0 - fault_rate) * 100.0
+    );
+
+    let extras = [
+        ("frames_per_run", n as f64),
+        ("ms_per_frame_disabled", per_frame(&m_off)),
+        ("ms_per_frame_armed_idle", per_frame(&m_idle)),
+        ("ms_per_frame_faulted", per_frame(&m_inj)),
+        ("armed_idle_overhead_pct", overhead_pct),
+        ("fault_rate", fault_rate),
+        ("delivered_ratio", 1.0 - fault_rate),
+    ];
+    write_bench_json("fault_recovery", &[m_off, m_idle, m_inj], &extras).unwrap();
+}

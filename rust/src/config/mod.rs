@@ -62,11 +62,86 @@ pub struct ServeConfig {
     /// fails with [`crate::CourierError::Fabric`] and serve falls back to
     /// sw placement.  Default: the XC7Z020's 53 200 LUTs.
     pub fabric_area_luts: usize,
+    /// Per-frame deadline in ms, checked at stage boundaries and as a
+    /// watchdog on hardware invocations; a frame over budget becomes a
+    /// typed [`crate::CourierError::FrameFault`].  0 = no deadline.
+    pub frame_deadline_ms: u64,
+    /// Retry a hardware-faulted frame once on the module's software
+    /// alternative (the all-sw twin plan) instead of failing the frame.
+    pub hw_failover: bool,
+    /// Quarantine a module once it accumulates this many faults within
+    /// the last `quarantine_window` outcomes.
+    pub quarantine_threshold: usize,
+    /// Sliding outcome window the failure-rate threshold is judged over.
+    pub quarantine_window: usize,
+    /// Consecutive clean probation probes required to re-admit a
+    /// quarantined module to hardware placement.
+    pub probation_frames: usize,
+    /// While quarantined, every Nth frame of a session probes the
+    /// hardware path; the rest serve from the software twin.
+    pub probe_every: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: 4, max_sessions: 8, queue_depth: 16, fabric_area_luts: 53_200 }
+        Self {
+            workers: 4,
+            max_sessions: 8,
+            queue_depth: 16,
+            fabric_area_luts: 53_200,
+            frame_deadline_ms: 0,
+            hw_failover: true,
+            quarantine_threshold: 3,
+            quarantine_window: 20,
+            probation_frames: 4,
+            probe_every: 4,
+        }
+    }
+}
+
+/// `[fault]` section: the deterministic fault-injection harness
+/// ([`crate::fault`]).  Disabled by default; when disabled no injector is
+/// constructed and the hot path pays one `Option` check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch.
+    pub enabled: bool,
+    /// Schedule seed: the same seed replays the same fault schedule.
+    pub seed: u64,
+    /// Per-invocation fault probability in [0, 1] (ignored when `period`
+    /// is set).
+    pub probability: f64,
+    /// Deterministic mode: every Nth invocation at a site faults
+    /// (0 = off; overrides `probability`).
+    pub period: usize,
+    /// Comma-separated [`crate::fault::FaultKind`] labels to draw from.
+    pub kinds: String,
+    /// Substring filter on site names (artifact name / task symbol);
+    /// empty = every site is eligible.
+    pub only: String,
+    /// Upper bound on injected latency jitter per invocation, µs (applies
+    /// to healthy invocations too; 0 = no jitter).
+    pub jitter_us: u64,
+    /// How long an injected `fabric_hang` wedges the module, ms.
+    pub hang_ms: u64,
+    /// Total faults to inject before the schedule drains (0 = unlimited);
+    /// recovery tests use this to let probation re-admit.
+    pub max_faults: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 1,
+            probability: 0.0,
+            period: 0,
+            kinds: "dma_timeout,fabric_hang,corrupt_output,sw_panic".into(),
+            only: String::new(),
+            jitter_us: 0,
+            hang_ms: 50,
+            max_faults: 0,
+        }
     }
 }
 
@@ -165,6 +240,8 @@ pub struct Config {
     pub tune: TuneConfig,
     /// `[obs]` section (trace sink + metrics snapshots).
     pub obs: ObsConfig,
+    /// `[fault]` section (deterministic fault injection).
+    pub fault: FaultConfig,
 }
 
 impl Default for Config {
@@ -181,6 +258,7 @@ impl Default for Config {
             serve: ServeConfig::default(),
             tune: TuneConfig::default(),
             obs: ObsConfig::default(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -208,6 +286,12 @@ impl Config {
             "serve.max_sessions",
             "serve.queue_depth",
             "serve.fabric_area_luts",
+            "serve.frame_deadline_ms",
+            "serve.hw_failover",
+            "serve.quarantine_threshold",
+            "serve.quarantine_window",
+            "serve.probation_frames",
+            "serve.probe_every",
             "tune.budget",
             "tune.sim_frames",
             "tune.measure_frames",
@@ -219,6 +303,15 @@ impl Config {
             "obs.enabled",
             "obs.trace_capacity",
             "obs.snapshot_secs",
+            "fault.enabled",
+            "fault.seed",
+            "fault.probability",
+            "fault.period",
+            "fault.kinds",
+            "fault.only",
+            "fault.jitter_us",
+            "fault.hang_ms",
+            "fault.max_faults",
         ];
         for k in doc.keys() {
             if !KNOWN.contains(&k) {
@@ -262,6 +355,24 @@ impl Config {
         if let Some(v) = doc.get_usize("serve.fabric_area_luts") {
             cfg.serve.fabric_area_luts = v;
         }
+        if let Some(v) = doc.get_usize("serve.frame_deadline_ms") {
+            cfg.serve.frame_deadline_ms = v as u64;
+        }
+        if let Some(v) = doc.get_bool("serve.hw_failover") {
+            cfg.serve.hw_failover = v;
+        }
+        if let Some(v) = doc.get_usize("serve.quarantine_threshold") {
+            cfg.serve.quarantine_threshold = v.max(1);
+        }
+        if let Some(v) = doc.get_usize("serve.quarantine_window") {
+            cfg.serve.quarantine_window = v.max(1);
+        }
+        if let Some(v) = doc.get_usize("serve.probation_frames") {
+            cfg.serve.probation_frames = v.max(1);
+        }
+        if let Some(v) = doc.get_usize("serve.probe_every") {
+            cfg.serve.probe_every = v.max(1);
+        }
         if let Some(v) = doc.get_usize("tune.budget") {
             cfg.tune.budget = v;
         }
@@ -295,6 +406,33 @@ impl Config {
         if let Some(v) = doc.get_usize("obs.snapshot_secs") {
             cfg.obs.snapshot_secs = v as u64;
         }
+        if let Some(v) = doc.get_bool("fault.enabled") {
+            cfg.fault.enabled = v;
+        }
+        if let Some(v) = doc.get_usize("fault.seed") {
+            cfg.fault.seed = v as u64;
+        }
+        if let Some(v) = doc.get_f64("fault.probability") {
+            cfg.fault.probability = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = doc.get_usize("fault.period") {
+            cfg.fault.period = v;
+        }
+        if let Some(v) = doc.get_str("fault.kinds") {
+            cfg.fault.kinds = v.to_string();
+        }
+        if let Some(v) = doc.get_str("fault.only") {
+            cfg.fault.only = v.to_string();
+        }
+        if let Some(v) = doc.get_usize("fault.jitter_us") {
+            cfg.fault.jitter_us = v as u64;
+        }
+        if let Some(v) = doc.get_usize("fault.hang_ms") {
+            cfg.fault.hang_ms = v as u64;
+        }
+        if let Some(v) = doc.get_usize("fault.max_faults") {
+            cfg.fault.max_faults = v;
+        }
         Ok(cfg)
     }
 
@@ -304,7 +442,9 @@ impl Config {
             "threads = {}\ntokens = {}\nbands = {}\npolicy = \"{}\"\nartifacts_dir = \"{}\"\n\
              trace_frames = {}\ncpu_only = {}\ninclude_disabled_modules = {}\n\
              \n[serve]\nworkers = {}\nmax_sessions = {}\nqueue_depth = {}\n\
-             fabric_area_luts = {}\n\
+             fabric_area_luts = {}\nframe_deadline_ms = {}\nhw_failover = {}\n\
+             quarantine_threshold = {}\nquarantine_window = {}\n\
+             probation_frames = {}\nprobe_every = {}\n\
              \n[tune]\nbudget = {}\nsim_frames = {}\nmeasure_frames = {}\n\
              top_k = {}\nmax_tokens = {}\n\
              fusion_link_saving = {}\nband_halo_overhead = {}\n",
@@ -320,6 +460,12 @@ impl Config {
             self.serve.max_sessions,
             self.serve.queue_depth,
             self.serve.fabric_area_luts,
+            self.serve.frame_deadline_ms,
+            self.serve.hw_failover,
+            self.serve.quarantine_threshold,
+            self.serve.quarantine_window,
+            self.serve.probation_frames,
+            self.serve.probe_every,
             self.tune.budget,
             self.tune.sim_frames,
             self.tune.measure_frames,
@@ -334,6 +480,19 @@ impl Config {
         s.push_str(&format!(
             "\n[obs]\nenabled = {}\ntrace_capacity = {}\nsnapshot_secs = {}\n",
             self.obs.enabled, self.obs.trace_capacity, self.obs.snapshot_secs,
+        ));
+        s.push_str(&format!(
+            "\n[fault]\nenabled = {}\nseed = {}\nprobability = {}\nperiod = {}\n\
+             kinds = \"{}\"\nonly = \"{}\"\njitter_us = {}\nhang_ms = {}\nmax_faults = {}\n",
+            self.fault.enabled,
+            self.fault.seed,
+            self.fault.probability,
+            self.fault.period,
+            self.fault.kinds,
+            self.fault.only,
+            self.fault.jitter_us,
+            self.fault.hang_ms,
+            self.fault.max_faults,
         ));
         s
     }
@@ -379,6 +538,58 @@ mod tests {
         assert_eq!(c.serve.workers, 9);
         assert_eq!(c.serve.queue_depth, 2);
         assert_eq!(c.serve.max_sessions, ServeConfig::default().max_sessions);
+    }
+
+    #[test]
+    fn serve_robustness_knobs_parse_and_roundtrip() {
+        let doc = TomlDoc::parse(
+            "[serve]\nframe_deadline_ms = 250\nhw_failover = false\n\
+             quarantine_threshold = 5\nquarantine_window = 40\n\
+             probation_frames = 6\nprobe_every = 2\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.serve.frame_deadline_ms, 250);
+        assert!(!c.serve.hw_failover);
+        assert_eq!(c.serve.quarantine_threshold, 5);
+        assert_eq!(c.serve.quarantine_window, 40);
+        assert_eq!(c.serve.probation_frames, 6);
+        assert_eq!(c.serve.probe_every, 2);
+        let back = Config::from_doc(&TomlDoc::parse(&c.to_toml()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // degenerate zeroes clamp to 1 rather than dividing by nothing
+        let doc = TomlDoc::parse("[serve]\nquarantine_threshold = 0\nprobe_every = 0\n").unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert_eq!(c.serve.quarantine_threshold, 1);
+        assert_eq!(c.serve.probe_every, 1);
+    }
+
+    #[test]
+    fn fault_section_parses_and_roundtrips() {
+        let c = Config::default();
+        assert!(!c.fault.enabled, "injection is off by default");
+        let doc = TomlDoc::parse(
+            "[fault]\nenabled = true\nseed = 42\nprobability = 0.05\n\
+             kinds = \"dma_timeout,sw_panic\"\nonly = \"harris\"\n\
+             jitter_us = 150\nhang_ms = 20\nmax_faults = 8\n",
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc).unwrap();
+        assert!(c.fault.enabled);
+        assert_eq!(c.fault.seed, 42);
+        assert_eq!(c.fault.probability, 0.05);
+        assert_eq!(c.fault.kinds, "dma_timeout,sw_panic");
+        assert_eq!(c.fault.only, "harris");
+        assert_eq!(c.fault.jitter_us, 150);
+        assert_eq!(c.fault.hang_ms, 20);
+        assert_eq!(c.fault.max_faults, 8);
+        let back = Config::from_doc(&TomlDoc::parse(&c.to_toml()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // out-of-range probability clamps
+        let doc = TomlDoc::parse("[fault]\nprobability = 3.5\n").unwrap();
+        assert_eq!(Config::from_doc(&doc).unwrap().fault.probability, 1.0);
+        // unknown fault keys fail loudly
+        assert!(Config::from_doc(&TomlDoc::parse("[fault]\nprob = 0.1\n").unwrap()).is_err());
     }
 
     #[test]

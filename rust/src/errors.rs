@@ -69,6 +69,21 @@ pub enum CourierError {
     #[error("fabric budget: {0}")]
     Fabric(String),
 
+    /// One frame's execution faulted (panic, injected fault, missed
+    /// deadline) and was contained: the pipeline stays alive, the frame's
+    /// slot is delivered as this error, and every other frame is
+    /// unaffected.  `frame_id` is the composite id
+    /// ([`crate::obs::frame_id`]; the raw sequence number in batch runs).
+    #[error("frame {frame_id} faulted at stage {stage}: {cause}")]
+    FrameFault {
+        /// Composite frame id (lane << 32 | seq) or batch sequence.
+        frame_id: u64,
+        /// Stage index the fault struck.
+        stage: usize,
+        /// Human-readable cause (panic payload, injected kind, deadline).
+        cause: String,
+    },
+
     /// Dataflow-graph legality violation: a backwards edge across a stage
     /// cut, a fused region tapped from outside, an unsupported multi-input
     /// flow — anything that would otherwise mis-wire a non-linear call

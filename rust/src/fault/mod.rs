@@ -1,0 +1,315 @@
+//! Deterministic fault injection for the serving robustness suite.
+//!
+//! A [`FaultInjector`] is built from the `[fault]` config section and
+//! threaded through the runtime ([`crate::runtime`] hardware invocations)
+//! and the software task bindings ([`crate::pipeline`]).  Every decision
+//! is a pure function of `(seed, site, invocation#)`, so a seeded run
+//! replays the exact same fault schedule — the fault tests and the
+//! recovery bench depend on that.
+//!
+//! Hot-path cost: when injection is disabled, [`FaultInjector::from_config`]
+//! returns `None` and the call sites reduce to a single `Option` check —
+//! the <1% overhead budget on `BENCH_table1` is held by never constructing
+//! an injector rather than by branching inside one.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::FaultConfig;
+
+/// The injectable failure modes (the `[fault] kinds` list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The DMA channel never completes the transfer: the invocation
+    /// fails immediately with a timeout-shaped error (transient).
+    DmaTimeout,
+    /// The fabric module wedges: the reply is delayed by `hang_ms`, so
+    /// only a caller-side deadline watchdog bounds the stall.
+    FabricHang,
+    /// The DMA readback fails its integrity check: the module computed,
+    /// but the output cannot be trusted and is reported as an error
+    /// (corrupted data is *detected*, never delivered).
+    CorruptOutput,
+    /// A software task panics mid-frame (poison input, library bug).
+    SwPanic,
+}
+
+impl FaultKind {
+    /// Stable label (config parsing, error messages, reports).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::DmaTimeout => "dma_timeout",
+            FaultKind::FabricHang => "fabric_hang",
+            FaultKind::CorruptOutput => "corrupt_output",
+            FaultKind::SwPanic => "sw_panic",
+        }
+    }
+
+    /// Parse one `kinds` list entry.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "dma_timeout" => Some(FaultKind::DmaTimeout),
+            "fabric_hang" => Some(FaultKind::FabricHang),
+            "corrupt_output" => Some(FaultKind::CorruptOutput),
+            "sw_panic" => Some(FaultKind::SwPanic),
+            _ => None,
+        }
+    }
+
+    /// True for the kinds that strike hardware invocations.
+    pub fn is_hw(&self) -> bool {
+        !matches!(self, FaultKind::SwPanic)
+    }
+}
+
+/// One invocation's injection decision: an optional fault plus the
+/// latency jitter to add regardless (jitter models a noisy bus, not a
+/// failure, so it applies to healthy invocations too).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Injection {
+    /// The fault to inject, if this invocation is struck.
+    pub fault: Option<FaultKind>,
+    /// Latency jitter to add before serving the invocation.
+    pub jitter: Duration,
+}
+
+impl Injection {
+    /// No fault, no jitter.
+    pub fn none() -> Self {
+        Self { fault: None, jitter: Duration::ZERO }
+    }
+}
+
+/// SplitMix64 finalizer: one mixing round is enough to decorrelate the
+/// (seed, site, invocation) triples fed to it.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over the site name (stable across runs and platforms).
+fn site_hash(site: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in site.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The seeded fault-decision engine (see module docs).
+#[derive(Debug)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    kinds: Vec<FaultKind>,
+    /// Per-site invocation counters: decisions key on the *n-th call at
+    /// this site*, so schedules replay regardless of cross-site timing.
+    counters: Mutex<HashMap<String, u64>>,
+    /// Faults actually injected (caps out at `max_faults` when set).
+    injected: AtomicU64,
+}
+
+impl FaultInjector {
+    /// Build from the `[fault]` section.  Returns `None` when injection
+    /// is off (disabled, zero rates, or no parseable kinds) so the hot
+    /// path stays a single `Option` check.
+    pub fn from_config(cfg: &FaultConfig) -> Option<Arc<Self>> {
+        if !cfg.enabled {
+            return None;
+        }
+        let kinds: Vec<FaultKind> = cfg.kinds.split(',').filter_map(FaultKind::parse).collect();
+        let armed = cfg.period > 0 || cfg.probability > 0.0;
+        if kinds.is_empty() || (!armed && cfg.jitter_us == 0) {
+            return None;
+        }
+        Some(Arc::new(Self {
+            cfg: cfg.clone(),
+            kinds,
+            counters: Mutex::new(HashMap::new()),
+            injected: AtomicU64::new(0),
+        }))
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// How long an injected [`FaultKind::FabricHang`] wedges the module.
+    pub fn hang(&self) -> Duration {
+        Duration::from_millis(self.cfg.hang_ms)
+    }
+
+    /// Decision for a hardware invocation at `site` (artifact name).
+    pub fn plan_hw(&self, site: &str) -> Injection {
+        self.plan(site, true)
+    }
+
+    /// Decision for a software task invocation at `site` (task symbol).
+    pub fn plan_sw(&self, site: &str) -> Injection {
+        self.plan(site, false)
+    }
+
+    fn plan(&self, site: &str, hw: bool) -> Injection {
+        if !self.cfg.only.is_empty() && !site.contains(&self.cfg.only) {
+            return Injection::none();
+        }
+        let n = {
+            let mut map = self.counters.lock().unwrap_or_else(|p| p.into_inner());
+            let c = map.entry(site.to_string()).or_insert(0);
+            let n = *c;
+            *c += 1;
+            n
+        };
+        let h = site_hash(site) ^ self.cfg.seed;
+        let jitter = if self.cfg.jitter_us > 0 {
+            Duration::from_micros(mix(h ^ n ^ 0x6A17) % (self.cfg.jitter_us + 1))
+        } else {
+            Duration::ZERO
+        };
+        let struck = if self.cfg.period > 0 {
+            (n + 1) % self.cfg.period as u64 == 0
+        } else if self.cfg.probability > 0.0 {
+            let draw = mix(h ^ n.wrapping_mul(0x517C_C1B7_2722_0A95)) >> 11;
+            (draw as f64 / (1u64 << 53) as f64) < self.cfg.probability
+        } else {
+            false
+        };
+        if !struck {
+            return Injection { fault: None, jitter };
+        }
+        let eligible: Vec<FaultKind> =
+            self.kinds.iter().copied().filter(|k| k.is_hw() == hw).collect();
+        if eligible.is_empty() {
+            return Injection { fault: None, jitter };
+        }
+        // the global fault cap lets recovery tests drain the schedule:
+        // after `max_faults` strikes the stream runs clean
+        if self.cfg.max_faults > 0 {
+            let capped = self
+                .injected
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    (v < self.cfg.max_faults as u64).then_some(v + 1)
+                })
+                .is_err();
+            if capped {
+                return Injection { fault: None, jitter };
+            }
+        } else {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        let kind = eligible[(mix(h ^ n ^ 0xFA_17) % eligible.len() as u64) as usize];
+        Injection { fault: Some(kind), jitter }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FaultConfig {
+        FaultConfig { enabled: true, probability: 0.5, ..FaultConfig::default() }
+    }
+
+    #[test]
+    fn disabled_config_builds_no_injector() {
+        assert!(FaultInjector::from_config(&FaultConfig::default()).is_none());
+        let off = FaultConfig { enabled: true, ..FaultConfig::default() };
+        assert!(FaultInjector::from_config(&off).is_none(), "zero rates stay off");
+        let no_kinds =
+            FaultConfig { enabled: true, probability: 0.5, kinds: "bogus".into(), ..cfg() };
+        assert!(FaultInjector::from_config(&no_kinds).is_none());
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let plan = |seed: u64| -> Vec<Option<FaultKind>> {
+            let inj = FaultInjector::from_config(&FaultConfig { seed, ..cfg() }).unwrap();
+            (0..64).map(|_| inj.plan_hw("hls_mod__24x32").fault).collect()
+        };
+        assert_eq!(plan(7), plan(7));
+        assert_ne!(plan(7), plan(8), "different seeds diverge");
+        let faults = plan(7).iter().filter(|f| f.is_some()).count();
+        assert!(faults > 10 && faults < 54, "p=0.5 strikes roughly half: {faults}");
+    }
+
+    #[test]
+    fn period_mode_is_exact() {
+        let c = FaultConfig { enabled: true, period: 4, ..FaultConfig::default() };
+        let inj = FaultInjector::from_config(&c).unwrap();
+        let hits: Vec<bool> = (0..12).map(|_| inj.plan_hw("m").fault.is_some()).collect();
+        let want: Vec<bool> = (0..12).map(|i| (i + 1) % 4 == 0).collect();
+        assert_eq!(hits, want, "every 4th invocation faults, nothing else");
+        assert_eq!(inj.injected(), 3);
+    }
+
+    #[test]
+    fn only_filter_scopes_by_site() {
+        let c = FaultConfig {
+            only: "harris".into(),
+            period: 1,
+            enabled: true,
+            ..FaultConfig::default()
+        };
+        let inj = FaultInjector::from_config(&c).unwrap();
+        assert!(inj.plan_hw("hls_corner_harris__24x32").fault.is_some());
+        assert!(inj.plan_hw("hls_cvt_color__24x32").fault.is_none());
+        assert!(inj.plan_sw("cv::cornerHarris").fault.is_some());
+    }
+
+    #[test]
+    fn sw_sites_only_panic_and_hw_sites_never_do() {
+        let inj = FaultInjector::from_config(&FaultConfig {
+            enabled: true,
+            period: 1,
+            ..FaultConfig::default()
+        })
+        .unwrap();
+        for _ in 0..32 {
+            assert_eq!(inj.plan_sw("cv::f").fault, Some(FaultKind::SwPanic));
+            let hw = inj.plan_hw("hls_m").fault.unwrap();
+            assert!(hw.is_hw(), "{hw:?}");
+        }
+    }
+
+    #[test]
+    fn max_faults_caps_the_schedule() {
+        let c = FaultConfig { enabled: true, period: 1, max_faults: 3, ..FaultConfig::default() };
+        let inj = FaultInjector::from_config(&c).unwrap();
+        let struck = (0..10).filter(|_| inj.plan_hw("m").fault.is_some()).count();
+        assert_eq!(struck, 3, "schedule drains after max_faults");
+        assert_eq!(inj.injected(), 3);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let c = FaultConfig { enabled: true, jitter_us: 200, ..FaultConfig::default() };
+        let inj = FaultInjector::from_config(&c).unwrap();
+        let a: Vec<Duration> = (0..16).map(|_| inj.plan_hw("m").jitter).collect();
+        assert!(a.iter().all(|j| *j <= Duration::from_micros(200)));
+        assert!(a.iter().any(|j| *j > Duration::ZERO), "jitter draws vary: {a:?}");
+        let inj2 = FaultInjector::from_config(&c).unwrap();
+        let b: Vec<Duration> = (0..16).map(|_| inj2.plan_hw("m").jitter).collect();
+        assert_eq!(a, b);
+        // jitter-only config arms the injector but never faults
+        assert!((0..32).all(|_| inj.plan_hw("m").fault.is_none()));
+    }
+
+    #[test]
+    fn kind_labels_round_trip() {
+        for k in [
+            FaultKind::DmaTimeout,
+            FaultKind::FabricHang,
+            FaultKind::CorruptOutput,
+            FaultKind::SwPanic,
+        ] {
+            assert_eq!(FaultKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(FaultKind::parse(" dma_timeout "), Some(FaultKind::DmaTimeout));
+        assert_eq!(FaultKind::parse("nope"), None);
+    }
+}

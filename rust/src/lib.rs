@@ -50,9 +50,19 @@
 //! is pinned bit-for-bit to the naive reference kernels
 //! (`imgproc::reference`); `docs/performance.md` documents the layers and
 //! the `BENCH_*.json` perf-trajectory artifacts.
+//!
+//! Runtime faults degrade the stream instead of corrupting or killing
+//! it: [`fault`] injects deterministic, seeded failures (DMA timeouts,
+//! fabric hangs, detected-corrupt outputs, worker panics, latency
+//! jitter), the token runtime contains a poison frame as a typed
+//! [`CourierError::FrameFault`] without losing in-order delivery, and
+//! [`serve`] retries hardware faults on the module's software twin,
+//! quarantines repeat offenders, and re-admits them after clean
+//! probation probes.  See `docs/robustness.md`.
 
 pub mod app;
 pub mod config;
+pub mod fault;
 pub mod hlo;
 pub mod hwdb;
 pub mod image;

@@ -446,6 +446,12 @@ fn cmd_serve(args: &Args, cfg: &Config) -> anyhow::Result<()> {
         "serve: {} workers, {} max sessions, queue depth {}",
         cfg.serve.workers, cfg.serve.max_sessions, cfg.serve.queue_depth
     );
+    if cfg.fault.enabled {
+        println!(
+            "serve: fault injection ON (seed {}, p={}, period {}, kinds {})",
+            cfg.fault.seed, cfg.fault.probability, cfg.fault.period, cfg.fault.kinds
+        );
+    }
 
     let mut sessions = Vec::with_capacity(n_sessions);
     for i in 0..n_sessions {

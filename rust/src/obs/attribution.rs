@@ -160,11 +160,16 @@ pub fn attribute(events: &[TraceEvent], stage_names: &[String]) -> Attribution {
             EventKind::FabricAcquire => acc.fabric_ns += ev.dur_ns,
             // pool traffic is not on any single frame's critical path;
             // band spans nest inside a stage span that already carries
-            // the full service time (counting both would double it)
+            // the full service time (counting both would double it);
+            // fault lifecycle markers carry no latency of their own
             EventKind::PoolHit
             | EventKind::PoolMiss
             | EventKind::PoolDowncycle
-            | EventKind::BandSpan => {}
+            | EventKind::BandSpan
+            | EventKind::FrameFault
+            | EventKind::FailoverRetry
+            | EventKind::Quarantine
+            | EventKind::Probation => {}
         }
     }
 

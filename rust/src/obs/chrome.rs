@@ -132,6 +132,25 @@ fn event_json(g: &ChromeGroup, ev: &TraceEvent) -> Json {
             ("tid", Json::Num(ev.tid as f64)),
             ("args", Json::obj(vec![("elems", Json::Num(ev.arg as f64))])),
         ]),
+        EventKind::FrameFault
+        | EventKind::FailoverRetry
+        | EventKind::Quarantine
+        | EventKind::Probation => Json::obj(vec![
+            ("name", Json::Str(ev.kind.label().into())),
+            ("cat", Json::Str("fault".into())),
+            ("ph", Json::Str("i".into())),
+            ("s", Json::Str("t".into())),
+            ("ts", us(ev.ts_ns)),
+            ("pid", pid),
+            ("tid", Json::Num(ev.tid as f64)),
+            (
+                "args",
+                Json::obj(vec![
+                    ("frame", Json::Num(frame_seq(ev.frame) as f64)),
+                    ("arg", Json::Num(ev.arg as f64)),
+                ]),
+            ),
+        ]),
     }
 }
 

@@ -215,6 +215,10 @@ impl MetricSource for crate::serve::ServerStats {
             ("open_latency", self.open_latency.snapshot()),
             ("frames", self.frames.snapshot()),
             ("fabric_fallbacks", self.fabric_fallbacks.snapshot()),
+            ("frame_faults", self.frame_faults.snapshot()),
+            ("retries", self.retries.snapshot()),
+            ("quarantines", self.quarantines.snapshot()),
+            ("probation_readmissions", self.probation_readmissions.snapshot()),
         ])
     }
 }

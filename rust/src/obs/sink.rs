@@ -85,6 +85,18 @@ pub enum EventKind {
     Ingress,
     /// A frame's result was delivered back to the session.
     Egress,
+    /// A frame faulted and was contained (`arg` = stage index; the frame
+    /// is delivered as [`crate::CourierError::FrameFault`] or recovered
+    /// by a failover retry).
+    FrameFault,
+    /// A hardware-faulted frame was retried on the module's software
+    /// twin plan.
+    FailoverRetry,
+    /// A module crossed the failure-rate threshold and was quarantined
+    /// (traffic shifts to software until probation clears it).
+    Quarantine,
+    /// A probation probe outcome (`arg` = 1 re-admitted, 0 probe only).
+    Probation,
 }
 
 impl EventKind {
@@ -99,6 +111,10 @@ impl EventKind {
             EventKind::FabricAcquire => "fabric.acquire",
             EventKind::Ingress => "ingress",
             EventKind::Egress => "egress",
+            EventKind::FrameFault => "frame.fault",
+            EventKind::FailoverRetry => "failover.retry",
+            EventKind::Quarantine => "quarantine",
+            EventKind::Probation => "probation",
         }
     }
 }

@@ -25,8 +25,10 @@
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::Config;
+use crate::fault::{FaultInjector, FaultKind};
 use crate::hlo::CostCalibration;
 use crate::hwdb::HwDatabase;
 use crate::image::Mat;
@@ -39,7 +41,7 @@ use crate::{CourierError, Result};
 use super::partition::partition_dag;
 use super::plan::{HwCost, StagePlan, StageSpec, TaskKind, TaskSpec};
 use super::pool::BufferPool;
-use super::tbb::{FilterMode, PipelineStats, StageFilter, TokenPipeline};
+use super::tbb::{panic_message, FilterMode, PipelineStats, StageFilter, TokenPipeline};
 
 
 /// The multi-buffer token payload of a DAG-wired pipeline: the external
@@ -249,6 +251,16 @@ struct BuiltStage {
     drop_after: Vec<usize>,
     /// Whether the external input dies after this stage.
     drop_input: bool,
+    /// Deterministic fault-injection harness ([`crate::fault`]) for the
+    /// software tasks this stage binds; hardware tasks are injected
+    /// inside their fabric threads.  `None` (the default) keeps the hot
+    /// path free of any per-frame injection branches.
+    injector: Option<Arc<FaultInjector>>,
+    /// Per-call bound on each hardware invocation: a fabric module that
+    /// does not reply within the frame deadline is abandoned with a
+    /// typed error instead of wedging the worker (`[serve]
+    /// frame_deadline_ms`).
+    deadline: Option<Duration>,
 }
 
 impl BuiltStage {
@@ -257,10 +269,27 @@ impl BuiltStage {
     /// argument is recycled afterwards — the environment retains un-taken
     /// originals, so anything handed here is dead on return.  Hardware
     /// tasks move their frames into the fabric request (no memcpy, and
-    /// nothing left to recycle).
-    fn exec(task: &BoundTaskSpec, owned: Vec<Mat>, pool: Option<&BufferPool>) -> Result<Mat> {
+    /// nothing left to recycle), bounded by the frame deadline when one
+    /// is configured.
+    fn exec(
+        &self,
+        task: &BoundTaskSpec,
+        owned: Vec<Mat>,
+        pool: Option<&BufferPool>,
+    ) -> Result<Mat> {
         match &task.bound {
             BoundTask::Sw(entry) => {
+                if let Some(inj) = &self.injector {
+                    let plan = inj.plan_sw(&task.symbol);
+                    if !plan.jitter.is_zero() {
+                        std::thread::sleep(plan.jitter);
+                    }
+                    if plan.fault == Some(FaultKind::SwPanic) {
+                        // the containment layer (tbb catch_unwind) turns
+                        // this into a typed FrameFault, never a dead worker
+                        panic!("injected: software task {} panicked", task.symbol);
+                    }
+                }
                 let out = {
                     let refs: Vec<&Mat> = owned.iter().collect();
                     match (&entry.pooled, pool) {
@@ -275,7 +304,7 @@ impl BuiltStage {
                 }
                 Ok(out)
             }
-            BoundTask::Hw(exe) => exe.run_owned(owned),
+            BoundTask::Hw(exe) => exe.run_owned_deadline(owned, self.deadline),
         }
     }
 
@@ -325,7 +354,7 @@ impl BuiltStage {
                 };
                 owned.push(m);
             }
-            let out = Self::exec(task, owned, pool)?;
+            let out = self.exec(task, owned, pool)?;
             local.insert(task.out_step, out);
         }
         Ok(local.into_iter().collect())
@@ -412,7 +441,7 @@ impl BuiltStage {
             };
             owned.push(m);
         }
-        let out = Self::exec(task, owned, env.pool_ref())?;
+        let out = self.exec(task, owned, env.pool_ref())?;
         env.bufs.insert(task.out_step, out);
         Ok(())
     }
@@ -523,11 +552,17 @@ impl StageFilter<FrameEnv> for BuiltStage {
                     .map(|bi| scope.spawn(move || self.run_branch(env_ref, bi)))
                     .collect();
                 let mut out = vec![self.run_branch(env_ref, first)];
-                out.extend(
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("fork-join branch panicked")),
-                );
+                // a panicking branch is contained as a typed error (the
+                // token layer turns it into a FrameFault) — never a
+                // coordinating-thread abort that kills the whole worker
+                out.extend(handles.into_iter().map(|h| {
+                    h.join().unwrap_or_else(|p| {
+                        Err(CourierError::Pipeline(format!(
+                            "fork-join branch panicked: {}",
+                            panic_message(p.as_ref())
+                        )))
+                    })
+                }));
                 out
             });
             for r in results {
@@ -580,7 +615,9 @@ pub fn build_calibrated(
     cal: Option<&CostCalibration>,
 ) -> Result<BuiltPipeline> {
     let plan = plan_pipeline(ir, db, registry, cfg, cal)?;
-    let mut built = instantiate(&plan, db.dir(), rt, registry)?;
+    let deadline = (cfg.serve.frame_deadline_ms > 0)
+        .then(|| Duration::from_millis(cfg.serve.frame_deadline_ms));
+    let mut built = instantiate_with(&plan, db.dir(), rt, registry, deadline)?;
     // Join keys for sim-vs-measured drift: the flat task order across
     // stages is the IR function order the planner partitioned, so keys
     // zip 1:1 with the primary input shapes (guarded — a mismatch means
@@ -819,8 +856,26 @@ pub fn instantiate(
     rt: &Runtime,
     registry: &Registry,
 ) -> Result<BuiltPipeline> {
+    instantiate_with(plan, artifact_dir, rt, registry, None)
+}
+
+/// [`instantiate`] with a per-frame deadline (`[serve]
+/// frame_deadline_ms`): the token runtime checks it at every stage
+/// boundary, and each hardware invocation is individually bounded by it
+/// so a hung fabric module surfaces as a typed error instead of wedging
+/// its worker.  Software-side fault injection is inherited from the
+/// runtime ([`Runtime::with_fault_injector`]); `None` everywhere keeps
+/// the frame path identical to the un-instrumented build.
+pub fn instantiate_with(
+    plan: &StagePlan,
+    artifact_dir: &Path,
+    rt: &Runtime,
+    registry: &Registry,
+    deadline: Option<Duration>,
+) -> Result<BuiltPipeline> {
     plan.validate_dag()?;
     let edges = plan.effective_edges();
+    let injector = rt.fault_injector().cloned();
 
     // load each artifact once ("place the module on the fabric")
     let mut loaded: HashMap<&str, Arc<Executable>> = HashMap::new();
@@ -1167,6 +1222,8 @@ pub fn instantiate(
             sibling_pair,
             drop_after,
             drop_input,
+            injector: injector.clone(),
+            deadline,
         }));
     }
 
@@ -1175,7 +1232,8 @@ pub fn instantiate(
     // config must come up exactly as written
     let sink = Arc::new(TraceSink::new());
     let pipeline = TokenPipeline::new(filters, plan.threads.max(1), plan.tokens.max(1))?
-        .with_sink(sink.clone());
+        .with_sink(sink.clone())
+        .with_deadline(deadline);
     let pool = Arc::new(BufferPool::new());
     pool.attach_sink(sink.clone());
     let control_program = super::codegen::render_control_program(plan);

@@ -28,7 +28,7 @@ mod tbb;
 
 pub use builder::{
     build, build_calibrated, declared_output_step, func_input_shapes, instantiate,
-    plan_pipeline, primary_input_shapes, BuiltPipeline, FrameEnv,
+    instantiate_with, plan_pipeline, primary_input_shapes, BuiltPipeline, FrameEnv,
 };
 pub use codegen::render_control_program;
 pub use partition::{
@@ -40,4 +40,6 @@ pub use plan::{
 };
 pub use pool::{BufferPool, PoolStats};
 pub use sim::{paper_table1_plan, simulate, simulate_with_model, SimModel, SimResult};
-pub use tbb::{FilterMode, FnFilter, PipelineStats, StageFilter, StageSpan, TokenPipeline};
+pub use tbb::{
+    FaultedFrame, FilterMode, FnFilter, PipelineStats, StageFilter, StageSpan, TokenPipeline,
+};

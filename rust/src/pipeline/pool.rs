@@ -125,7 +125,11 @@ impl BufferPool {
     /// allocates.
     pub fn acquire(&self, shape: &[usize]) -> Mat {
         let n: usize = shape.iter().product();
-        let mut shelves = self.shelves.lock().expect("pool lock");
+        // poison recovery: a worker that panicked mid-acquire leaves the
+        // shelves intact (the BTreeMap is only mutated through pop/push,
+        // never left half-updated), so contained frame faults must not
+        // turn every later acquire into a second panic
+        let mut shelves = self.shelves.lock().unwrap_or_else(|p| p.into_inner());
         // smallest sufficient class with a spare
         let class = shelves
             .range(n..)
@@ -197,7 +201,7 @@ impl BufferPool {
         self.released.fetch_add(1, Ordering::Relaxed);
         let storage = m.into_vec();
         let class = storage.capacity();
-        let mut shelves = self.shelves.lock().expect("pool lock");
+        let mut shelves = self.shelves.lock().unwrap_or_else(|p| p.into_inner());
         let stack = shelves.entry(class).or_default();
         if stack.len() < MAX_IDLE_PER_CLASS {
             stack.push(storage);
@@ -218,7 +222,7 @@ impl BufferPool {
     pub fn idle(&self) -> usize {
         self.shelves
             .lock()
-            .expect("pool lock")
+            .unwrap_or_else(|p| p.into_inner())
             .values()
             .map(Vec::len)
             .sum()

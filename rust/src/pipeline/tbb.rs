@@ -20,15 +20,38 @@
 //! then **park on a condvar** instead of burning CPU, woken by the next
 //! state change; and stage spans are recorded into per-worker local
 //! buffers merged once at join, not a global mutex on the hot path.
+//!
+//! **Fault containment** (see `docs/robustness.md`): a frame whose stage
+//! body returns an error *or panics* does not kill the worker or poison
+//! the run.  The frame becomes a tombstone that drains through the
+//! remaining stages — serial stages still see every sequence number, so
+//! in-order delivery and token accounting survive — and is reported in
+//! [`PipelineStats::faults`] (batch) or as a typed
+//! [`CourierError::FrameFault`] (the serve single-frame path).  An
+//! optional per-frame deadline is checked at every stage boundary, so a
+//! wedged hardware stage turns into a bounded fault instead of a stuck
+//! pipeline.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::image::Mat;
-use crate::obs::{obs_now_ns, TraceSink};
+use crate::obs::{obs_now_ns, EventKind, TraceSink};
 use crate::{CourierError, Result};
+
+/// Render a `catch_unwind` payload for error messages.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
 
 /// Filter scheduling mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,11 +118,28 @@ pub struct StageSpan {
     pub end_ns: u64,
 }
 
+/// One contained frame fault: the frame was dropped from the output
+/// set, everything else kept flowing (batch-run analogue of
+/// [`CourierError::FrameFault`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultedFrame {
+    /// Input sequence number of the faulted frame.
+    pub seq: u64,
+    /// Stage index the fault struck.
+    pub stage: usize,
+    /// Human-readable cause (error string, panic payload, deadline).
+    pub cause: String,
+}
+
 /// Post-run statistics.
 #[derive(Debug, Clone, Default)]
 pub struct PipelineStats {
     /// Per-(stage, token) busy intervals, unordered.
     pub spans: Vec<StageSpan>,
+    /// Contained faults: frames that errored, panicked or missed the
+    /// deadline mid-run.  Their seqs are absent from the output set; the
+    /// run itself still completes.
+    pub faults: Vec<FaultedFrame>,
     /// Tokens fully processed.
     pub frames: u64,
     /// Wall-clock of the whole run, ns.
@@ -185,8 +225,8 @@ const PARK_TIMEOUT: Duration = Duration::from_millis(1);
 
 /// Fixed-capacity FIFO ring for `parallel` stage queues.  The token pool
 /// bounds the entries a stage can hold to `tokens`, so the ring never
-/// grows in a healthy run; the growth path is a safety net for
-/// error-poisoned runs, whose early-exit races can break that window.
+/// grows in a healthy run (faulted frames flow through as tombstones and
+/// keep the same bound); the growth path is a defensive safety net.
 struct FifoRing<P> {
     buf: Vec<Option<(u64, P)>>,
     head: usize,
@@ -233,8 +273,9 @@ impl<P> FifoRing<P> {
 /// waiting at a serial stage is live (it has not passed the stage, so it
 /// was never emitted) and the token pool bounds live tokens to the
 /// capacity, which keeps waiting seqs within one capacity window of
-/// `next_seq` — the home slot is always free.  The displacement path is
-/// a safety net for error-poisoned runs only.
+/// `next_seq` — the home slot is always free.  Faulted frames keep the
+/// bound too (their tombstones occupy a pool slot until the tail drains
+/// them); the displacement path is a defensive safety net only.
 struct SlotRing<P> {
     slots: Vec<Option<(u64, P)>>,
     /// Sticky flag: an entry was ever placed off its home slot, so
@@ -257,7 +298,7 @@ impl<P> SlotRing<P> {
             self.slots[i] = Some((seq, p));
             return;
         }
-        // degenerate (poisoned-run) fallback: linear-probe a free slot
+        // degenerate (out-of-window) fallback: linear-probe a free slot
         let n = self.slots.len();
         for d in 1..n {
             let j = (i + d) % n;
@@ -311,13 +352,23 @@ impl<P> StageQueue<P> {
     }
 }
 
+/// The token a stage queue actually carries: the live payload or the
+/// tombstone of a contained fault, plus the frame's injection timestamp
+/// on the run clock (what the per-frame deadline is measured against).
+struct Tok<P> {
+    /// Injection time, ns on the run clock.
+    birth_ns: u64,
+    /// Live payload, or `(stage, cause)` of the fault that killed it.
+    body: std::result::Result<P, (usize, String)>,
+}
+
 struct Shared<P> {
     /// Per-stage input queues: seq-addressed slots for serial stages,
     /// FIFO rings for parallel ones — O(1) push/pop under a short lock
     /// with no per-token allocation (the `Mutex<BTreeMap>` queues these
     /// replace allocated and rebalanced a node per insert, under the
     /// lock).
-    queues: Vec<Mutex<StageQueue<P>>>,
+    queues: Vec<Mutex<StageQueue<Tok<P>>>>,
     /// Next token a serial stage must take.
     next_seq: Vec<AtomicU64>,
     /// Serial stage currently busy?
@@ -332,8 +383,8 @@ struct Shared<P> {
     peak_in_flight: AtomicUsize,
     /// Completed outputs keyed by seq.
     outputs: Mutex<BTreeMap<u64, P>>,
-    /// First error (poisons the run).
-    error: Mutex<Option<CourierError>>,
+    /// Contained faults, drained at the tail stage.
+    faults: Mutex<Vec<FaultedFrame>>,
     /// Per-worker span buffers are merged here once at worker exit; the
     /// hot path records into worker-local Vecs.
     spans: Mutex<Vec<StageSpan>>,
@@ -349,10 +400,6 @@ struct Shared<P> {
 }
 
 impl<P> Shared<P> {
-    fn poisoned(&self) -> bool {
-        self.error.lock().expect("error lock").is_some()
-    }
-
     /// Publish a state change: bump the generation and wake parked
     /// workers (skipping the lock entirely while nobody is parked).
     ///
@@ -365,7 +412,9 @@ impl<P> Shared<P> {
     fn notify(&self) {
         self.work_gen.fetch_add(1, Ordering::SeqCst);
         if self.parked.load(Ordering::SeqCst) > 0 {
-            let _guard = self.park_lock.lock().expect("park lock");
+            // recover rather than propagate a poisoned park lock: the
+            // guard protects no data, only the condvar handshake
+            let _guard = self.park_lock.lock().unwrap_or_else(|p| p.into_inner());
             self.park_cv.notify_all();
         }
     }
@@ -389,6 +438,9 @@ pub struct TokenPipeline<P = Mat> {
     /// Trace sink stage spans are mirrored into (in addition to the
     /// run's own [`PipelineStats`] spans).  `None` = stats only.
     sink: Option<Arc<TraceSink>>,
+    /// Per-frame deadline checked at every stage boundary
+    /// (`[serve].frame_deadline_ms`); `None` = unbounded.
+    deadline: Option<Duration>,
 }
 
 impl<P: Send> TokenPipeline<P> {
@@ -406,6 +458,7 @@ impl<P: Send> TokenPipeline<P> {
             threads: threads.max(1),
             tokens: tokens.max(1),
             sink: None,
+            deadline: None,
         })
     }
 
@@ -413,6 +466,20 @@ impl<P: Send> TokenPipeline<P> {
     pub fn with_sink(mut self, sink: Arc<TraceSink>) -> Self {
         self.sink = Some(sink);
         self
+    }
+
+    /// Arm a per-frame deadline: a frame that is older than `deadline`
+    /// at any stage boundary faults (it is *not* preempted mid-stage;
+    /// the hardware bindings bound their own in-stage stalls via
+    /// [`crate::runtime::Executable::run_owned_deadline`]).
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// The armed per-frame deadline, if any.
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline
     }
 
     /// The attached trace sink, if any.
@@ -432,12 +499,13 @@ impl<P: Send> TokenPipeline<P> {
 
     /// Process one frame synchronously through all stages on the calling
     /// thread (the blocking single-call path of the off-load wrapper).
+    ///
+    /// A stage panic or a missed deadline comes back as a typed
+    /// [`CourierError::FrameFault`] instead of unwinding the caller;
+    /// ordinary stage errors propagate unchanged (their provenance — an
+    /// injected DMA timeout, a shape mismatch — matters upstream).
     pub fn process_one(&self, input: P) -> Result<P> {
-        let mut cur = input;
-        for f in &self.filters {
-            cur = f.apply(cur)?;
-        }
-        Ok(cur)
+        self.process_contained(input, 0, None)
     }
 
     /// [`TokenPipeline::process_one`] recording a per-stage span chain
@@ -446,21 +514,62 @@ impl<P: Send> TokenPipeline<P> {
     /// by construction here — stages run back to back on one thread; the
     /// frame's queueing shows up as the session ingress→first-span gap.
     pub fn process_one_traced(&self, input: P, frame: u64) -> Result<P> {
-        let Some(sink) = self.sink.as_ref().filter(|s| s.is_enabled()) else {
-            return self.process_one(input);
-        };
+        let sink = self.sink.as_ref().filter(|s| s.is_enabled()).cloned();
+        self.process_contained(input, frame, sink)
+    }
+
+    fn process_contained(
+        &self,
+        input: P,
+        frame: u64,
+        sink: Option<Arc<TraceSink>>,
+    ) -> Result<P> {
+        let t0 = Instant::now();
         let mut cur = input;
         for (stage, f) in self.filters.iter().enumerate() {
-            let _band_ctx = crate::obs::set_band_ctx(sink.clone(), frame, stage as u32);
+            if let Some(d) = self.deadline {
+                if t0.elapsed() > d {
+                    if let Some(s) = &sink {
+                        s.instant(EventKind::FrameFault, frame, stage as u64);
+                    }
+                    return Err(CourierError::FrameFault {
+                        frame_id: frame,
+                        stage,
+                        cause: format!("frame deadline ({} ms) exceeded", d.as_millis()),
+                    });
+                }
+            }
+            let _band_ctx =
+                sink.as_ref().map(|s| crate::obs::set_band_ctx(s.clone(), frame, stage as u32));
             let start_ns = obs_now_ns();
-            cur = f.apply(cur)?;
-            sink.span(frame, stage as u32, start_ns, obs_now_ns() - start_ns, 0);
+            let attempt = catch_unwind(AssertUnwindSafe(|| f.apply(cur)));
+            if let Some(s) = &sink {
+                s.span(frame, stage as u32, start_ns, obs_now_ns() - start_ns, 0);
+            }
+            cur = match attempt {
+                Ok(Ok(out)) => out,
+                Ok(Err(e)) => return Err(e),
+                Err(payload) => {
+                    if let Some(s) = &sink {
+                        s.instant(EventKind::FrameFault, frame, stage as u64);
+                    }
+                    return Err(CourierError::FrameFault {
+                        frame_id: frame,
+                        stage,
+                        cause: panic_message(payload.as_ref()),
+                    });
+                }
+            };
         }
         Ok(cur)
     }
 
     /// Run a batch of frames through the pipeline, returning outputs in
     /// input order plus run statistics.
+    ///
+    /// Contained faults (stage errors, panics, missed deadlines) do not
+    /// abort the run: the faulted frames' seqs are simply absent from
+    /// the output vector and listed in [`PipelineStats::faults`].
     pub fn run(&self, inputs: Vec<P>) -> Result<(Vec<P>, PipelineStats)> {
         let n_stages = self.filters.len();
         let shared = Shared {
@@ -482,7 +591,7 @@ impl<P: Send> TokenPipeline<P> {
             frames_in_flight: AtomicUsize::new(0),
             peak_in_flight: AtomicUsize::new(0),
             outputs: Mutex::new(BTreeMap::new()),
-            error: Mutex::new(None),
+            faults: Mutex::new(Vec::new()),
             spans: Mutex::new(Vec::new()),
             input_done: AtomicBool::new(false),
             work_gen: AtomicU64::new(0),
@@ -501,14 +610,18 @@ impl<P: Send> TokenPipeline<P> {
             }
         });
 
-        if let Some(err) = shared.error.lock().expect("error lock").take() {
-            return Err(err);
-        }
-        let outputs: Vec<P> = std::mem::take(&mut *shared.outputs.lock().expect("outputs lock"))
-            .into_values()
-            .collect();
+        let outputs: Vec<P> =
+            std::mem::take(&mut *shared.outputs.lock().unwrap_or_else(|p| p.into_inner()))
+                .into_values()
+                .collect();
+        let mut faults =
+            std::mem::take(&mut *shared.faults.lock().unwrap_or_else(|p| p.into_inner()));
+        faults.sort_by_key(|f| f.seq);
         let stats = PipelineStats {
-            spans: std::mem::take(&mut *shared.spans.lock().expect("spans lock")),
+            spans: std::mem::take(
+                &mut *shared.spans.lock().unwrap_or_else(|p| p.into_inner()),
+            ),
+            faults,
             frames: outputs.len() as u64,
             wall_ns: clock.epoch.elapsed().as_nanos() as u64,
             peak_in_flight: shared.peak_in_flight.load(Ordering::Acquire),
@@ -543,9 +656,6 @@ impl<P: Send> TokenPipeline<P> {
         let mut idle_spins = 0u32;
         let mut local_spans: Vec<StageSpan> = Vec::new();
         loop {
-            if shared.poisoned() {
-                break;
-            }
             // Finished? all inputs injected and nothing in flight.
             if shared.input_done.load(Ordering::Acquire)
                 && shared.in_flight.load(Ordering::Acquire) == 0
@@ -584,7 +694,7 @@ impl<P: Send> TokenPipeline<P> {
                     })
                     .is_ok()
                 {
-                    let mut it = feed.lock().expect("feed lock");
+                    let mut it = feed.lock().unwrap_or_else(|p| p.into_inner());
                     if let Some(mat) = it.next() {
                         // count into the high-water mark only once a
                         // frame is actually claimed from the feed: the
@@ -599,7 +709,10 @@ impl<P: Send> TokenPipeline<P> {
                         // the injection path already holds the feed lock,
                         // so a clock read here is off the contended path
                         let enq_ns = clock.epoch.elapsed().as_nanos() as u64;
-                        shared.queues[0].lock().expect("queue lock").insert(seq, enq_ns, mat);
+                        shared.queues[0]
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner())
+                            .insert(seq, enq_ns, Tok { birth_ns: enq_ns, body: Ok(mat) });
                         if seq + 1 == total {
                             shared.input_done.store(true, Ordering::Release);
                         }
@@ -623,7 +736,7 @@ impl<P: Send> TokenPipeline<P> {
                 std::thread::yield_now();
                 continue;
             }
-            let guard = shared.park_lock.lock().expect("park lock");
+            let guard = shared.park_lock.lock().unwrap_or_else(|p| p.into_inner());
             // SeqCst pair with `Shared::notify` (see its doc): announce
             // the park *before* re-checking the generation
             shared.parked.fetch_add(1, Ordering::SeqCst);
@@ -631,7 +744,7 @@ impl<P: Send> TokenPipeline<P> {
                 let _ = shared
                     .park_cv
                     .wait_timeout(guard, PARK_TIMEOUT)
-                    .expect("park lock");
+                    .unwrap_or_else(|p| p.into_inner());
             } else {
                 drop(guard);
             }
@@ -639,15 +752,19 @@ impl<P: Send> TokenPipeline<P> {
             idle_spins = 0;
         }
         if !local_spans.is_empty() {
-            shared.spans.lock().expect("spans lock").append(&mut local_spans);
+            shared
+                .spans
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .append(&mut local_spans);
         }
     }
 
     /// Try to claim one runnable token for `stage`: `(seq, enq_ns,
-    /// payload)`, where `enq_ns` is when the token entered this stage's
+    /// token)`, where `enq_ns` is when the token entered this stage's
     /// queue (run clock).
-    fn try_take(&self, shared: &Shared<P>, stage: usize) -> Option<(u64, u64, P)> {
-        let mut q = shared.queues[stage].lock().expect("queue lock");
+    fn try_take(&self, shared: &Shared<P>, stage: usize) -> Option<(u64, u64, Tok<P>)> {
+        let mut q = shared.queues[stage].lock().unwrap_or_else(|p| p.into_inner());
         match &mut *q {
             StageQueue::Parallel(ring) => ring.pop().map(|(seq, (enq_ns, p))| (seq, enq_ns, p)),
             StageQueue::Serial(ring) => {
@@ -673,64 +790,106 @@ impl<P: Send> TokenPipeline<P> {
         &self,
         shared: &Shared<P>,
         stage: usize,
-        token: (u64, u64, P),
+        token: (u64, u64, Tok<P>),
         clock: Clock,
         spans: &mut Vec<StageSpan>,
     ) {
-        let (seq, enq_ns, mat) = token;
-        // band workers inside the filter body record their BandSpans
-        // under this frame/stage (the ctx is captured by the banded pass
-        // before it spawns — fresh scoped threads inherit no TLS)
-        let _band_ctx = self
-            .sink
-            .as_ref()
-            .filter(|s| s.is_enabled())
-            .map(|s| crate::obs::set_band_ctx(s.clone(), seq, stage as u32));
-        let start_ns = clock.epoch.elapsed().as_nanos() as u64;
-        let result = self.filters[stage].apply(mat);
-        let end_ns = clock.epoch.elapsed().as_nanos() as u64;
-        drop(_band_ctx);
-        spans.push(StageSpan { stage, token: seq, start_ns, end_ns });
-        if let Some(sink) = &self.sink {
-            // same two clock reads re-based onto the sink timeline; the
-            // entry's enqueue stamp yields the queue-wait for free
-            sink.span(
-                seq,
-                stage as u32,
-                clock.obs_base + start_ns,
-                end_ns - start_ns,
-                start_ns.saturating_sub(enq_ns),
-            );
-        }
+        let (seq, enq_ns, Tok { birth_ns, body }) = token;
+        // `stamp_ns` is the downstream enqueue stamp: the producer's
+        // span end for a live frame, a single fresh clock read otherwise
+        let (stamp_ns, body) = match body {
+            // a tombstone drains through the remaining stages untouched:
+            // serial stages still account its seq (below), so in-order
+            // delivery of the surviving frames is preserved
+            Err(fault) => (clock.epoch.elapsed().as_nanos() as u64, Err(fault)),
+            Ok(mat) => {
+                let deadline_ns =
+                    self.deadline.map(|d| d.as_nanos() as u64).unwrap_or(u64::MAX);
+                let now_ns = clock.epoch.elapsed().as_nanos() as u64;
+                if now_ns.saturating_sub(birth_ns) > deadline_ns {
+                    // checked at the stage *boundary*: a frame is never
+                    // preempted mid-stage, so a wedged stage body is
+                    // bounded by the hardware bindings' own deadline
+                    (
+                        now_ns,
+                        Err((
+                            stage,
+                            format!(
+                                "frame deadline ({} ms) exceeded",
+                                deadline_ns / 1_000_000
+                            ),
+                        )),
+                    )
+                } else {
+                    // band workers inside the filter body record their
+                    // BandSpans under this frame/stage (the ctx is
+                    // captured by the banded pass before it spawns —
+                    // fresh scoped threads inherit no TLS)
+                    let _band_ctx = self
+                        .sink
+                        .as_ref()
+                        .filter(|s| s.is_enabled())
+                        .map(|s| crate::obs::set_band_ctx(s.clone(), seq, stage as u32));
+                    let start_ns = clock.epoch.elapsed().as_nanos() as u64;
+                    let attempt =
+                        catch_unwind(AssertUnwindSafe(|| self.filters[stage].apply(mat)));
+                    let end_ns = clock.epoch.elapsed().as_nanos() as u64;
+                    drop(_band_ctx);
+                    spans.push(StageSpan { stage, token: seq, start_ns, end_ns });
+                    if let Some(sink) = &self.sink {
+                        // same two clock reads re-based onto the sink
+                        // timeline; the entry's enqueue stamp yields the
+                        // queue-wait for free
+                        sink.span(
+                            seq,
+                            stage as u32,
+                            clock.obs_base + start_ns,
+                            end_ns - start_ns,
+                            start_ns.saturating_sub(enq_ns),
+                        );
+                    }
+                    let outcome = match attempt {
+                        Ok(Ok(out)) => Ok(out),
+                        Ok(Err(e)) => Err((stage, e.to_string())),
+                        Err(payload) => Err((stage, panic_message(payload.as_ref()))),
+                    };
+                    (end_ns, outcome)
+                }
+            }
+        };
 
         if self.filters[stage].mode() == FilterMode::SerialInOrder {
             shared.next_seq[stage].fetch_add(1, Ordering::AcqRel);
             shared.busy[stage].store(false, Ordering::Release);
         }
 
-        match result {
-            Ok(out) => {
-                if stage + 1 < self.filters.len() {
-                    // the producer's span end doubles as the downstream
-                    // enqueue stamp — no extra clock read
-                    shared.queues[stage + 1]
+        if stage + 1 < self.filters.len() {
+            shared.queues[stage + 1]
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .insert(seq, stamp_ns, Tok { birth_ns, body });
+        } else {
+            match body {
+                Ok(out) => {
+                    shared
+                        .outputs
                         .lock()
-                        .expect("queue lock")
-                        .insert(seq, end_ns, out);
-                } else {
-                    shared.outputs.lock().expect("outputs lock").insert(seq, out);
-                    shared.frames_in_flight.fetch_sub(1, Ordering::AcqRel);
-                    shared.in_flight.fetch_sub(1, Ordering::AcqRel);
+                        .unwrap_or_else(|p| p.into_inner())
+                        .insert(seq, out);
+                }
+                Err((fstage, cause)) => {
+                    if let Some(sink) = &self.sink {
+                        sink.instant(EventKind::FrameFault, seq, fstage as u64);
+                    }
+                    shared
+                        .faults
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .push(FaultedFrame { seq, stage: fstage, cause });
                 }
             }
-            Err(e) => {
-                let mut slot = shared.error.lock().expect("error lock");
-                if slot.is_none() {
-                    *slot = Some(e);
-                }
-                shared.frames_in_flight.fetch_sub(1, Ordering::AcqRel);
-                shared.in_flight.fetch_sub(1, Ordering::AcqRel);
-            }
+            shared.frames_in_flight.fetch_sub(1, Ordering::AcqRel);
+            shared.in_flight.fetch_sub(1, Ordering::AcqRel);
         }
         shared.notify();
     }
@@ -739,8 +898,6 @@ impl<P: Send> TokenPipeline<P> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::obs::EventKind;
-    use std::sync::atomic::AtomicUsize;
 
     fn add_filter(mode: FilterMode, delta: f32) -> Box<dyn StageFilter> {
         Box::new(FnFilter {
@@ -811,6 +968,7 @@ mod tests {
             spans: (0..4)
                 .map(|i| StageSpan { stage: 0, token: i, start_ns: 0, end_ns: 1_000 })
                 .collect(),
+            faults: Vec::new(),
             frames: 4,
             wall_ns: 1_000,
             peak_in_flight: 2,
@@ -1055,23 +1213,212 @@ mod tests {
     }
 
     #[test]
-    fn error_poisons_the_run() {
-        let counter = std::sync::Arc::new(AtomicUsize::new(0));
-        let c2 = counter.clone();
+    fn stage_error_is_contained_not_fatal() {
+        // one frame errors mid-run: the run completes, every other frame
+        // is delivered in order, and the fault is reported in the stats
         let failing = Box::new(FnFilter {
             mode: FilterMode::Parallel,
             label: "boom".into(),
             f: move |m: Mat| {
-                if c2.fetch_add(1, Ordering::SeqCst) == 3 {
+                if m.at2(0, 0) == 3.0 {
                     Err(CourierError::Pipeline("boom".into()))
                 } else {
                     Ok(m)
                 }
             },
         });
-        let pipe = TokenPipeline::new(vec![failing], 2, 4).unwrap();
-        let err = pipe.run(inputs(16)).unwrap_err();
-        assert!(err.to_string().contains("boom"));
+        let pipe = TokenPipeline::new(
+            vec![add_filter(FilterMode::SerialInOrder, 0.0), failing, add_filter(FilterMode::SerialInOrder, 0.5)],
+            2,
+            4,
+        )
+        .unwrap();
+        let (out, stats) = pipe.run(inputs(16)).unwrap();
+        assert_eq!(out.len(), 15);
+        let want: Vec<f32> =
+            (0..16).filter(|&i| i != 3).map(|i| i as f32 + 0.5).collect();
+        let got: Vec<f32> = out.iter().map(|m| m.at2(0, 0)).collect();
+        assert_eq!(got, want, "survivors delivered in input order");
+        assert_eq!(stats.frames, 15);
+        assert_eq!(stats.faults.len(), 1);
+        assert_eq!(stats.faults[0].seq, 3);
+        assert_eq!(stats.faults[0].stage, 1);
+        assert!(stats.faults[0].cause.contains("boom"), "{}", stats.faults[0].cause);
+    }
+
+    #[test]
+    fn panic_is_contained_and_ordering_survives() {
+        // panicking frames become tombstones, not dead workers: the run
+        // still completes with every surviving frame in order even when
+        // several frames panic in a parallel middle stage
+        let panicking = Box::new(FnFilter {
+            mode: FilterMode::Parallel,
+            label: "poison".into(),
+            f: |m: Mat| {
+                if m.at2(0, 0) as usize % 5 == 2 {
+                    panic!("poison frame {}", m.at2(0, 0));
+                }
+                Ok(m)
+            },
+        });
+        let pipe = TokenPipeline::new(
+            vec![
+                add_filter(FilterMode::SerialInOrder, 0.0),
+                panicking,
+                add_filter(FilterMode::SerialInOrder, 0.25),
+            ],
+            4,
+            6,
+        )
+        .unwrap();
+        let (out, stats) = pipe.run(inputs(20)).unwrap();
+        let survivors: Vec<usize> = (0..20).filter(|i| i % 5 != 2).collect();
+        assert_eq!(out.len(), survivors.len());
+        for (m, &i) in out.iter().zip(&survivors) {
+            assert_eq!(m.at2(0, 0), i as f32 + 0.25, "frame {i} out of order");
+        }
+        assert_eq!(stats.faults.len(), 4);
+        assert_eq!(
+            stats.faults.iter().map(|f| f.seq).collect::<Vec<_>>(),
+            vec![2, 7, 12, 17]
+        );
+        for f in &stats.faults {
+            assert_eq!(f.stage, 1);
+            assert!(f.cause.contains("poison frame"), "{}", f.cause);
+        }
+    }
+
+    #[test]
+    fn deadline_faults_the_slow_frame_only() {
+        // frame 2 sleeps past the deadline inside the middle stage; the
+        // *next* boundary check faults it, everything else is delivered
+        let slow_one = Box::new(FnFilter {
+            mode: FilterMode::Parallel,
+            label: "stall".into(),
+            f: |m: Mat| {
+                if m.at2(0, 0) == 2.0 {
+                    std::thread::sleep(Duration::from_millis(300));
+                }
+                Ok(m)
+            },
+        });
+        let pipe = TokenPipeline::new(
+            vec![
+                add_filter(FilterMode::SerialInOrder, 0.0),
+                slow_one,
+                add_filter(FilterMode::SerialInOrder, 0.5),
+            ],
+            2,
+            2,
+        )
+        .unwrap()
+        .with_deadline(Some(Duration::from_millis(100)));
+        let (out, stats) = pipe.run(inputs(8)).unwrap();
+        assert_eq!(out.len(), 7);
+        assert!(out.iter().all(|m| m.at2(0, 0) != 2.5), "the stalled frame was dropped");
+        assert_eq!(stats.faults.len(), 1);
+        assert_eq!(stats.faults[0].seq, 2);
+        assert_eq!(stats.faults[0].stage, 2, "caught at the boundary after the stall");
+        assert!(stats.faults[0].cause.contains("deadline"), "{}", stats.faults[0].cause);
+    }
+
+    #[test]
+    fn faults_are_mirrored_into_the_sink() {
+        let sink = Arc::new(TraceSink::with_capacity(64));
+        let failing = Box::new(FnFilter {
+            mode: FilterMode::Parallel,
+            label: "boom".into(),
+            f: |m: Mat| {
+                if m.at2(0, 0) == 1.0 {
+                    Err(CourierError::Pipeline("boom".into()))
+                } else {
+                    Ok(m)
+                }
+            },
+        });
+        let pipe = TokenPipeline::new(vec![failing], 2, 2)
+            .unwrap()
+            .with_sink(sink.clone());
+        let (out, stats) = pipe.run(inputs(4)).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(stats.faults.len(), 1);
+        let faults: Vec<_> = sink
+            .snapshot_events()
+            .into_iter()
+            .filter(|e| e.kind == EventKind::FrameFault)
+            .collect();
+        assert_eq!(faults.len(), 1);
+        assert_eq!(faults[0].frame, 1);
+        assert_eq!(faults[0].arg, 0, "arg carries the faulting stage index");
+    }
+
+    #[test]
+    fn process_one_contains_panics_as_typed_frame_faults() {
+        let panicking = Box::new(FnFilter {
+            mode: FilterMode::Parallel,
+            label: "poison".into(),
+            f: |m: Mat| {
+                if m.at2(0, 0) == 7.0 {
+                    panic!("poison input");
+                }
+                Ok(m)
+            },
+        });
+        let pipe = TokenPipeline::new(
+            vec![add_filter(FilterMode::SerialInOrder, 1.0), panicking],
+            1,
+            1,
+        )
+        .unwrap();
+        // healthy input flows through
+        let ok = pipe.process_one(Mat::full(&[2, 2], 0.0)).unwrap();
+        assert_eq!(ok.at2(0, 0), 1.0);
+        // poison input (6 + 1 == 7 at the panicking stage) is contained
+        let err = pipe.process_one_traced(Mat::full(&[2, 2], 6.0), 0xF00D).unwrap_err();
+        match err {
+            CourierError::FrameFault { frame_id, stage, cause } => {
+                assert_eq!(frame_id, 0xF00D);
+                assert_eq!(stage, 1);
+                assert!(cause.contains("poison input"), "{cause}");
+            }
+            other => panic!("expected FrameFault, got {other}"),
+        }
+        // ordinary errors keep their provenance (no FrameFault wrapping)
+        let failing = Box::new(FnFilter {
+            mode: FilterMode::Parallel,
+            label: "boom".into(),
+            f: |_: Mat| Err(CourierError::Xla("injected: DMA".into())),
+        });
+        let pipe = TokenPipeline::new(vec![failing], 1, 1).unwrap();
+        let err = pipe.process_one(Mat::full(&[2, 2], 0.0)).unwrap_err();
+        assert!(matches!(err, CourierError::Xla(_)), "{err}");
+    }
+
+    #[test]
+    fn process_one_deadline_faults_before_the_next_stage() {
+        let slow = Box::new(FnFilter {
+            mode: FilterMode::SerialInOrder,
+            label: "stall".into(),
+            f: |m: Mat| {
+                std::thread::sleep(Duration::from_millis(50));
+                Ok(m)
+            },
+        });
+        let pipe = TokenPipeline::new(
+            vec![slow, add_filter(FilterMode::Parallel, 1.0)],
+            1,
+            1,
+        )
+        .unwrap()
+        .with_deadline(Some(Duration::from_millis(10)));
+        let err = pipe.process_one(Mat::full(&[2, 2], 0.0)).unwrap_err();
+        match err {
+            CourierError::FrameFault { stage, cause, .. } => {
+                assert_eq!(stage, 1, "the boundary after the stall catches it");
+                assert!(cause.contains("deadline"), "{cause}");
+            }
+            other => panic!("expected FrameFault, got {other}"),
+        }
     }
 
     #[test]

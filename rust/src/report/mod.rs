@@ -120,6 +120,22 @@ pub struct ServeRow {
     pub open_ms: f64,
 }
 
+/// Robustness counters for the serving report's summary
+/// ([`crate::serve::ServerStats`] + the health tracker's quarantine set).
+#[derive(Debug, Clone, Default)]
+pub struct ServeFaults {
+    /// Frames that faulted at least once (deadline, panic, hw error).
+    pub frame_faults: u64,
+    /// hw→sw failover retries attempted.
+    pub retries: u64,
+    /// Quarantine episodes entered.
+    pub quarantines: u64,
+    /// Modules re-admitted after clean probation probes.
+    pub probation_readmissions: u64,
+    /// Modules quarantined right now, sorted by name.
+    pub quarantined: Vec<String>,
+}
+
 /// Render the multi-tenant serving report (`courier serve` output).
 pub fn render_serve(
     rows: &[ServeRow],
@@ -127,6 +143,7 @@ pub fn render_serve(
     cached_plans: usize,
     fps: f64,
     recent_fps: f64,
+    faults: &ServeFaults,
 ) -> String {
     let mut s = String::new();
     s.push_str("SERVE: per-session report\n");
@@ -158,6 +175,14 @@ pub fn render_serve(
         fps,
         recent_fps
     ));
+    s.push_str(&format!(
+        "faults: {} frames faulted, {} sw retries, {} quarantines, {} re-admissions",
+        faults.frame_faults, faults.retries, faults.quarantines, faults.probation_readmissions
+    ));
+    if !faults.quarantined.is_empty() {
+        s.push_str(&format!("; quarantined now: {}", faults.quarantined.join(", ")));
+    }
+    s.push('\n');
     s
 }
 
@@ -405,7 +430,14 @@ mod tests {
                 open_ms: 0.3,
             },
         ];
-        let t = render_serve(&rows, 0.5, 2, 42.0, 37.5);
+        let faults = ServeFaults {
+            frame_faults: 4,
+            retries: 3,
+            quarantines: 1,
+            probation_readmissions: 1,
+            quarantined: vec!["hls_corner_harris".into()],
+        };
+        let t = render_serve(&rows, 0.5, 2, 42.0, 37.5, &faults);
         assert!(t.contains("SERVE"));
         assert!(t.contains("cornerHarris_Demo/paper"));
         assert!(t.contains("cold"));
@@ -413,6 +445,13 @@ mod tests {
         assert!(t.contains("50% hit rate"), "{t}");
         assert!(t.contains("42.0 frames/s served lifetime"), "{t}");
         assert!(t.contains("37.5 frames/s recent"), "{t}");
+        assert!(t.contains("4 frames faulted, 3 sw retries, 1 quarantines"), "{t}");
+        assert!(t.contains("quarantined now: hls_corner_harris"), "{t}");
+
+        // a clean server renders zeroed counters and no quarantine tail
+        let clean = render_serve(&rows, 0.5, 2, 42.0, 37.5, &ServeFaults::default());
+        assert!(clean.contains("0 frames faulted"), "{clean}");
+        assert!(!clean.contains("quarantined now"), "{clean}");
     }
 
     #[test]

@@ -10,9 +10,10 @@
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
+use crate::fault::{FaultInjector, FaultKind};
 use crate::image::Mat;
 use crate::{CourierError, Result};
 
@@ -20,6 +21,7 @@ use crate::{CourierError, Result};
 pub struct Runtime {
     platform: String,
     compile_ns: AtomicU64,
+    injector: Option<Arc<FaultInjector>>,
 }
 
 impl Runtime {
@@ -30,7 +32,7 @@ impl Runtime {
         let probe = xla::PjRtClient::cpu()?;
         let platform = probe.platform_name();
         drop(probe);
-        Ok(Self { platform, compile_ns: AtomicU64::new(0) })
+        Ok(Self { platform, compile_ns: AtomicU64::new(0), injector: None })
     }
 
     /// Backend platform name (e.g. `cpu`).
@@ -38,9 +40,24 @@ impl Runtime {
         self.platform.clone()
     }
 
+    /// Arm fault injection: every module loaded *after* this call gets the
+    /// injector on its fabric thread.  `None` (the default) keeps the
+    /// request path injection-free — not even an `Option` check inside the
+    /// fabric loop, since the loop is monomorphized on load.
+    pub fn with_fault_injector(mut self, injector: Option<Arc<FaultInjector>>) -> Self {
+        self.injector = injector;
+        self
+    }
+
+    /// The armed injector, if any (the pipeline builder forwards it to
+    /// software task bindings so sw and hw share one schedule).
+    pub fn fault_injector(&self) -> Option<&Arc<FaultInjector>> {
+        self.injector.as_ref()
+    }
+
     /// Load an HLO-text artifact and place it as a live module.
     pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let exe = Executable::load(path)?;
+        let exe = Executable::load_with(path, self.injector.clone())?;
         self.compile_ns.fetch_add(exe.compile_ns, Ordering::Relaxed);
         Ok(exe)
     }
@@ -82,6 +99,14 @@ pub struct Executable {
 impl Executable {
     /// Load + compile an artifact on a fresh fabric thread.
     pub fn load(path: &Path) -> Result<Self> {
+        Self::load_with(path, None)
+    }
+
+    /// [`Self::load`] with an optional fault injector armed on the fabric
+    /// thread (the injector sees every invocation of this module, keyed by
+    /// the artifact stem, in per-module serial order — so a seeded
+    /// schedule replays exactly).
+    pub fn load_with(path: &Path, injector: Option<Arc<FaultInjector>>) -> Result<Self> {
         if !path.exists() {
             return Err(CourierError::Io(std::io::Error::new(
                 std::io::ErrorKind::NotFound,
@@ -99,7 +124,7 @@ impl Executable {
         let thread_name = format!("fabric-{name}");
         std::thread::Builder::new()
             .name(thread_name)
-            .spawn(move || fabric_thread(thread_path, rx, ready_tx))
+            .spawn(move || fabric_thread(thread_path, rx, ready_tx, injector))
             .map_err(CourierError::Io)?;
         let compile_ns = ready_rx
             .recv()
@@ -125,13 +150,40 @@ impl Executable {
     /// Like [`Self::run`] but takes ownership — the pipeline hot path uses
     /// this to avoid a frame-sized memcpy per hardware task (§Perf L3#3).
     pub fn run_owned(&self, inputs: Vec<Mat>) -> Result<Mat> {
+        self.run_owned_deadline(inputs, None)
+    }
+
+    /// [`Self::run_owned`] bounded by a caller-side deadline: when the
+    /// module does not reply within `deadline` (a wedged fabric, an
+    /// injected [`FaultKind::FabricHang`]) the caller gets a
+    /// timeout-shaped error instead of blocking forever.  The late reply,
+    /// if it ever lands, is dropped on the floor with the channel.
+    pub fn run_owned_deadline(
+        &self,
+        inputs: Vec<Mat>,
+        deadline: Option<Duration>,
+    ) -> Result<Mat> {
         self.check_arity(inputs.len())?;
         let (rtx, rrx) = mpsc::channel();
         self.tx
             .send((inputs, rtx))
             .map_err(|_| CourierError::Xla(format!("fabric thread for {} is gone", self.name)))?;
-        rrx.recv()
-            .map_err(|_| CourierError::Xla(format!("fabric thread for {} dropped reply", self.name)))?
+        match deadline {
+            Some(d) => match rrx.recv_timeout(d) {
+                Ok(result) => result,
+                Err(mpsc::RecvTimeoutError::Timeout) => Err(CourierError::Xla(format!(
+                    "fabric module {} exceeded the {}ms frame deadline",
+                    self.name,
+                    d.as_millis()
+                ))),
+                Err(mpsc::RecvTimeoutError::Disconnected) => Err(CourierError::Xla(
+                    format!("fabric thread for {} dropped reply", self.name),
+                )),
+            },
+            None => rrx.recv().map_err(|_| {
+                CourierError::Xla(format!("fabric thread for {} dropped reply", self.name))
+            })?,
+        }
     }
 
     /// `XTask_Start()`: asynchronous invocation with owned inputs; poll or
@@ -163,6 +215,7 @@ fn fabric_thread(
     path: std::path::PathBuf,
     rx: mpsc::Receiver<Request>,
     ready: mpsc::Sender<std::result::Result<u64, String>>,
+    injector: Option<Arc<FaultInjector>>,
 ) {
     let t0 = Instant::now();
     let compiled: std::result::Result<_, String> = (|| {
@@ -183,9 +236,59 @@ fn fabric_thread(
         }
     };
     let _keep_alive = client;
-    while let Ok((inputs, reply)) = rx.recv() {
-        let result = execute(&exe, &inputs);
-        let _ = reply.send(result);
+    let site = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    match injector {
+        None => {
+            while let Ok((inputs, reply)) = rx.recv() {
+                let result = execute(&exe, &inputs);
+                let _ = reply.send(result);
+            }
+        }
+        Some(inj) => {
+            while let Ok((inputs, reply)) = rx.recv() {
+                let result = serve_injected(&exe, &inputs, &inj, &site);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+/// One fabric invocation with the injector consulted first.  Requests are
+/// served in per-module serial order, so the injector's per-site counter
+/// advances deterministically — the same seed replays the same schedule.
+fn serve_injected(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[Mat],
+    inj: &FaultInjector,
+    site: &str,
+) -> Result<Mat> {
+    let decision = inj.plan_hw(site);
+    if !decision.jitter.is_zero() {
+        std::thread::sleep(decision.jitter);
+    }
+    match decision.fault {
+        Some(FaultKind::DmaTimeout) => Err(CourierError::Xla(format!(
+            "injected: DMA transfer to {site} timed out"
+        ))),
+        Some(FaultKind::FabricHang) => {
+            // the module wedges: hold the reply past any caller deadline,
+            // then answer normally (the late reply hits a dropped channel
+            // when the caller timed out)
+            std::thread::sleep(inj.hang());
+            execute(exe, inputs)
+        }
+        Some(FaultKind::CorruptOutput) => {
+            // the module computed, but the readback failed its integrity
+            // check: corrupted data is detected, never delivered
+            let _ = execute(exe, inputs);
+            Err(CourierError::Xla(format!(
+                "injected: DMA readback from {site} failed integrity check"
+            )))
+        }
+        Some(FaultKind::SwPanic) | None => execute(exe, inputs),
     }
 }
 

@@ -1,0 +1,272 @@
+//! Module health: sliding-window fault tracking, quarantine and
+//! probation for placed hardware modules.
+//!
+//! The scheduler reports every hardware frame outcome here.  A module
+//! whose fault count over the last `[serve].quarantine_window` frames
+//! reaches `[serve].quarantine_threshold` is **quarantined**: its
+//! sessions are steered onto their software twin, the tuner excludes it
+//! from placement, and the fabric occupancy snapshot marks the slot
+//! unhealthy.  While quarantined, every `[serve].probe_every`-th frame
+//! runs the hardware path anyway as a **probation probe**;
+//! `[serve].probation_frames` consecutive clean probes re-admit the
+//! module (a failed probe resets the streak).
+//!
+//! The tracker is deliberately dumb about *why* a frame faulted — a DMA
+//! timeout, a hung fabric module and a corrupted output all count the
+//! same, because the serving layer's only lever is the same for all of
+//! them: stop routing traffic at the module.  See `docs/robustness.md`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::config::ServeConfig;
+
+/// Per-module sliding window and quarantine state.
+#[derive(Default)]
+struct ModuleHealth {
+    /// Outcome ring: `true` = faulted, newest at the back.
+    window: VecDeque<bool>,
+    quarantined: bool,
+    /// Consecutive clean probation probes while quarantined.
+    clean_probes: usize,
+    /// Frames steered to software since the last probation probe.
+    skipped: usize,
+}
+
+impl ModuleHealth {
+    fn faults_in_window(&self) -> usize {
+        self.window.iter().filter(|&&f| f).count()
+    }
+
+    fn push(&mut self, faulted: bool, window: usize) {
+        self.window.push_back(faulted);
+        while self.window.len() > window.max(1) {
+            self.window.pop_front();
+        }
+    }
+}
+
+/// Shared fault-rate tracker for every placed hardware module.
+///
+/// One instance per [`super::Server`], shared with the scheduler's
+/// workers; all methods take `&self` and are safe to call concurrently.
+pub struct HealthTracker {
+    threshold: usize,
+    window: usize,
+    probation_frames: usize,
+    probe_every: usize,
+    modules: Mutex<HashMap<String, ModuleHealth>>,
+}
+
+impl HealthTracker {
+    /// Tracker configured from the `[serve]` quarantine knobs.
+    pub fn new(cfg: &ServeConfig) -> Self {
+        Self {
+            threshold: cfg.quarantine_threshold.max(1),
+            window: cfg.quarantine_window.max(1),
+            probation_frames: cfg.probation_frames.max(1),
+            probe_every: cfg.probe_every.max(1),
+            modules: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut HashMap<String, ModuleHealth>) -> R) -> R {
+        // poison recovery: the tracker's state is a plain counter map —
+        // a panicking reporter cannot leave it half-updated
+        f(&mut self.modules.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    /// Record a clean hardware frame on `module`.
+    pub fn record_ok(&self, module: &str) {
+        let window = self.window;
+        self.with(|m| m.entry(module.to_string()).or_default().push(false, window));
+    }
+
+    /// Record a faulted hardware frame on `module`.  Returns `true` when
+    /// this fault **newly** quarantines the module (the caller flips the
+    /// fabric slot unhealthy and bumps the quarantine counter exactly
+    /// once per episode).
+    pub fn record_fault(&self, module: &str) -> bool {
+        let (threshold, window) = (self.threshold, self.window);
+        self.with(|m| {
+            let h = m.entry(module.to_string()).or_default();
+            h.push(true, window);
+            if !h.quarantined && h.faults_in_window() >= threshold {
+                h.quarantined = true;
+                h.clean_probes = 0;
+                h.skipped = 0;
+                true
+            } else {
+                false
+            }
+        })
+    }
+
+    /// Whether `module` is currently quarantined.
+    pub fn is_quarantined(&self, module: &str) -> bool {
+        self.with(|m| m.get(module).is_some_and(|h| h.quarantined))
+    }
+
+    /// Whether any of `modules` is quarantined (the steering check: one
+    /// quarantined module reroutes the whole session, because the
+    /// pipeline runs all of its placements or none).
+    pub fn any_quarantined(&self, modules: &[String]) -> bool {
+        self.with(|m| modules.iter().any(|name| m.get(name).is_some_and(|h| h.quarantined)))
+    }
+
+    /// Probation pacing: called once per steered-to-software frame;
+    /// returns `true` when this frame should probe the hardware path
+    /// instead (every `probe_every`-th frame per quarantined module).
+    pub fn should_probe(&self, modules: &[String]) -> bool {
+        let probe_every = self.probe_every;
+        self.with(|m| {
+            let mut due = false;
+            for name in modules {
+                let Some(h) = m.get_mut(name) else { continue };
+                if !h.quarantined {
+                    continue;
+                }
+                h.skipped += 1;
+                if h.skipped >= probe_every {
+                    h.skipped = 0;
+                    due = true;
+                }
+            }
+            due
+        })
+    }
+
+    /// Record a probation probe's outcome on `module`.  Returns `true`
+    /// when the probe **re-admits** the module (its
+    /// `probation_frames`-th consecutive clean probe); a failed probe
+    /// resets the streak.
+    pub fn record_probe(&self, module: &str, ok: bool) -> bool {
+        let (probation, window) = (self.probation_frames, self.window);
+        self.with(|m| {
+            let h = m.entry(module.to_string()).or_default();
+            if !h.quarantined {
+                return false;
+            }
+            if !ok {
+                h.clean_probes = 0;
+                h.push(true, window);
+                return false;
+            }
+            h.clean_probes += 1;
+            if h.clean_probes >= probation {
+                h.quarantined = false;
+                h.clean_probes = 0;
+                h.skipped = 0;
+                h.window.clear();
+                true
+            } else {
+                false
+            }
+        })
+    }
+
+    /// Currently quarantined modules, sorted by name (the tuner excludes
+    /// these from hardware placement).
+    pub fn quarantined(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.with(|m| {
+            m.iter().filter(|(_, h)| h.quarantined).map(|(name, _)| name.clone()).collect()
+        });
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker(
+        threshold: usize,
+        window: usize,
+        probation: usize,
+        probe_every: usize,
+    ) -> HealthTracker {
+        HealthTracker::new(&ServeConfig {
+            quarantine_threshold: threshold,
+            quarantine_window: window,
+            probation_frames: probation,
+            probe_every,
+            ..ServeConfig::default()
+        })
+    }
+
+    #[test]
+    fn threshold_in_window_quarantines_exactly_once() {
+        let t = tracker(3, 10, 2, 4);
+        assert!(!t.record_fault("m"));
+        assert!(!t.record_fault("m"));
+        assert!(t.record_fault("m"), "third fault crosses the threshold");
+        assert!(t.is_quarantined("m"));
+        assert!(!t.record_fault("m"), "already quarantined: no second episode");
+        assert_eq!(t.quarantined(), vec!["m".to_string()]);
+    }
+
+    #[test]
+    fn clean_frames_age_faults_out_of_the_window() {
+        let t = tracker(3, 4, 2, 4);
+        t.record_fault("m");
+        t.record_fault("m");
+        // four clean frames push both faults out of the 4-frame window
+        for _ in 0..4 {
+            t.record_ok("m");
+        }
+        assert!(!t.record_fault("m"), "aged-out faults must not count");
+        assert!(!t.is_quarantined("m"));
+    }
+
+    #[test]
+    fn unknown_module_is_healthy() {
+        let t = tracker(3, 10, 2, 4);
+        assert!(!t.is_quarantined("ghost"));
+        assert!(!t.any_quarantined(&["ghost".into()]));
+        assert!(!t.should_probe(&["ghost".into()]));
+        assert!(!t.record_probe("ghost", true));
+        assert!(t.quarantined().is_empty());
+    }
+
+    #[test]
+    fn probe_pacing_fires_every_nth_steered_frame() {
+        let t = tracker(1, 10, 2, 3);
+        assert!(t.record_fault("m"));
+        assert!(!t.should_probe(&["m".into()]));
+        assert!(!t.should_probe(&["m".into()]));
+        assert!(t.should_probe(&["m".into()]), "third steered frame probes");
+        assert!(!t.should_probe(&["m".into()]), "counter resets after a probe");
+    }
+
+    #[test]
+    fn probation_readmits_after_consecutive_clean_probes() {
+        let t = tracker(1, 10, 3, 1);
+        assert!(t.record_fault("m"));
+        assert!(!t.record_probe("m", true));
+        assert!(!t.record_probe("m", true));
+        assert!(t.record_probe("m", true), "third clean probe re-admits");
+        assert!(!t.is_quarantined("m"));
+        // re-admission cleared the window: old faults cannot re-trip it
+        assert!(t.record_fault("m"), "fresh episode quarantines again");
+    }
+
+    #[test]
+    fn failed_probe_resets_the_clean_streak() {
+        let t = tracker(1, 10, 2, 1);
+        assert!(t.record_fault("m"));
+        assert!(!t.record_probe("m", true));
+        assert!(!t.record_probe("m", false), "failure resets");
+        assert!(!t.record_probe("m", true));
+        assert!(t.record_probe("m", true), "streak restarts from the failure");
+    }
+
+    #[test]
+    fn any_quarantined_covers_mixed_module_lists() {
+        let t = tracker(1, 10, 2, 4);
+        t.record_ok("healthy");
+        assert!(t.record_fault("sick"));
+        assert!(t.any_quarantined(&["healthy".into(), "sick".into()]));
+        assert!(!t.any_quarantined(&["healthy".into()]));
+    }
+}

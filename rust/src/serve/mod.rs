@@ -44,12 +44,14 @@
 //! See `docs/serving.md` for the architecture walk-through and the
 //! `courier serve` CLI entry point.
 
+mod health;
 mod plan_cache;
 pub mod queue;
 mod scheduler;
 mod session;
 mod stats;
 
+pub use health::HealthTracker;
 pub use plan_cache::{PlanCache, PlanKey};
 pub use scheduler::Scheduler;
 pub use session::{Session, SessionSpec, Ticket};
@@ -79,6 +81,9 @@ pub struct Server {
     cache: PlanCache,
     scheduler: Scheduler,
     stats: Arc<ServerStats>,
+    /// Per-module fault windows shared with the scheduler's workers
+    /// (quarantine + probation — see `docs/robustness.md`).
+    health: Arc<HealthTracker>,
     /// Live metric sources by subsystem ([`MetricsRegistry`] holds them
     /// weakly — a closed session's entry prunes itself at snapshot).
     obs: MetricsRegistry,
@@ -106,9 +111,13 @@ impl Server {
     /// yet — builds happen lazily at first session-open per key.
     pub fn new(cfg: Config) -> Result<Self> {
         let db = HwDatabase::load(&cfg.artifacts_dir)?;
-        let rt = Runtime::cpu()?;
+        // the injector is None unless `[fault]` enables injection — the
+        // served hot path carries no fault-harness cost by default
+        let rt = Runtime::cpu()?
+            .with_fault_injector(crate::fault::FaultInjector::from_config(&cfg.fault));
         let stats = Arc::new(ServerStats::default());
-        let scheduler = Scheduler::start(cfg.serve.workers, stats.clone());
+        let health = Arc::new(HealthTracker::new(&cfg.serve));
+        let scheduler = Scheduler::start(cfg.serve.workers, stats.clone(), health.clone());
         let obs = MetricsRegistry::new();
         obs.register("serve", "server", &stats);
         Ok(Self {
@@ -119,6 +128,7 @@ impl Server {
             cache: PlanCache::new(),
             scheduler,
             stats,
+            health,
             obs,
             sessions: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(0),
@@ -169,6 +179,22 @@ impl Server {
                 other => other,
             }
         })?;
+        // failover twin: an all-software build of the same program,
+        // cached under its own (cpu_only) key so N tenants share one.
+        // Best-effort — a program only a fabric module can serve has no
+        // software alternative, and an open must not fail for the sake
+        // of a backup path (the session simply serves without failover).
+        let sw_twin = if self.cfg.serve.hw_failover && !pipeline.plan.hw_modules().is_empty() {
+            let mut sw_cfg = eff_cfg.clone();
+            sw_cfg.cpu_only = true;
+            let sw_key = PlanKey::new(&spec.program, &sw_cfg);
+            self.cache
+                .get_or_build(&sw_key, || self.build_for(&spec.program, &sw_cfg))
+                .ok()
+                .map(|(twin, _)| twin)
+        } else {
+            None
+        };
         let open_ns = t0.elapsed().as_nanos() as u64;
 
         let id = self.next_id.fetch_add(1, Ordering::AcqRel);
@@ -178,6 +204,7 @@ impl Server {
             key,
             spec.program,
             pipeline,
+            sw_twin,
             self.cfg.serve.queue_depth,
             hit,
             open_ns,
@@ -307,7 +334,11 @@ impl Server {
         // Cross-*process* writers (a parallel `courier tune`) are not
         // covered — point them at separate manifests.
         let mut tuned = self.tuned_ms.lock().expect("server tune lock");
-        let tuner = crate::tune::Tuner::new(&self.db, &self.rt, &self.registry, &eff_cfg);
+        // quarantined modules are excluded from placement: a retune that
+        // landed traffic on a module the scheduler is steering around
+        // would be promoted only to be failed over frame by frame
+        let tuner = crate::tune::Tuner::new(&self.db, &self.rt, &self.registry, &eff_cfg)
+            .without_modules(self.health.quarantined());
         let cost_db = match &eff_cfg.tune.cost_db {
             Some(p) => crate::tune::CalibratedCostDb::load_or_default(p)?,
             None => crate::tune::CalibratedCostDb::new(),
@@ -363,6 +394,11 @@ impl Server {
     /// Server-wide metrics.
     pub fn stats(&self) -> &Arc<ServerStats> {
         &self.stats
+    }
+
+    /// The module health tracker (quarantine + probation state).
+    pub fn health(&self) -> &Arc<HealthTracker> {
+        &self.health
     }
 
     /// The plan cache (hit/miss counters, build-time histogram).
@@ -480,6 +516,13 @@ impl Server {
             self.cache.len(),
             self.stats.frames.per_sec(),
             self.stats.frames.recent_per_sec(),
+            &report::ServeFaults {
+                frame_faults: self.stats.frame_faults.get(),
+                retries: self.stats.retries.get(),
+                quarantines: self.stats.quarantines.get(),
+                probation_readmissions: self.stats.probation_readmissions.get(),
+                quarantined: self.health.quarantined(),
+            },
         )
     }
 

@@ -15,11 +15,14 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::image::Mat;
 use crate::obs::{frame_id, obs_now_ns, EventKind};
+use crate::pipeline::BuiltPipeline;
 use crate::CourierError;
 
+use super::health::HealthTracker;
 use super::session::{Job, Session};
 use super::stats::ServerStats;
 
@@ -37,6 +40,9 @@ struct SlotEntry {
     /// Slice-LUT footprint of the placed module (0 until registered —
     /// `slots_for` may create a slot before the server registers areas).
     area_luts: u64,
+    /// Quarantined by the health tracker (default `false` = healthy; the
+    /// scheduler flips this on quarantine and probation re-admission).
+    quarantined: bool,
 }
 
 /// One module's occupancy row.
@@ -46,6 +52,9 @@ pub(crate) struct FabricModuleOcc {
     pub(crate) area_luts: u64,
     /// True while a worker holds the module's slot for a frame.
     pub(crate) busy: bool,
+    /// False while the health tracker has the module quarantined (its
+    /// traffic is steered to software twins).
+    pub(crate) healthy: bool,
 }
 
 /// Snapshot of the fabric allocator: what is placed and what is running.
@@ -83,6 +92,7 @@ impl FabricOccupancy {
                                 ("name", Json::Str(m.name.clone())),
                                 ("area_luts", Json::Num(m.area_luts as f64)),
                                 ("busy", Json::Bool(m.busy)),
+                                ("healthy", Json::Bool(m.healthy)),
                             ])
                         })
                         .collect(),
@@ -123,6 +133,14 @@ impl FabricSlots {
         self.slots.lock().expect("fabric slots lock").retain(|name, _| live.contains(name));
     }
 
+    /// Mark a module's slot healthy (`true`) or quarantined (`false`)
+    /// in the occupancy snapshot — the scheduler flips this when the
+    /// health tracker quarantines or re-admits the module.
+    pub(crate) fn set_healthy(&self, module: &str, healthy: bool) {
+        let mut map = self.slots.lock().expect("fabric slots lock");
+        map.entry(module.to_string()).or_default().quarantined = !healthy;
+    }
+
     /// Occupancy snapshot: every registered module with its footprint and
     /// whether a worker currently holds it (`try_lock` probe — a busy
     /// mutex is a frame in flight on that module).
@@ -134,6 +152,7 @@ impl FabricSlots {
                 name: name.clone(),
                 area_luts: e.area_luts,
                 busy: e.lock.try_lock().is_err(),
+                healthy: !e.quarantined,
             })
             .collect();
         modules.sort_by(|a, b| a.name.cmp(&b.name));
@@ -147,6 +166,8 @@ struct SchedShared {
     shutdown: AtomicBool,
     fabric: FabricSlots,
     stats: Arc<ServerStats>,
+    /// Per-module fault windows driving quarantine and probation.
+    health: Arc<HealthTracker>,
 }
 
 /// The worker pool.
@@ -157,13 +178,14 @@ pub struct Scheduler {
 
 impl Scheduler {
     /// Spawn `workers` threads (min 1) draining registered sessions.
-    pub fn start(workers: usize, stats: Arc<ServerStats>) -> Self {
+    pub fn start(workers: usize, stats: Arc<ServerStats>, health: Arc<HealthTracker>) -> Self {
         let shared = Arc::new(SchedShared {
             sessions: Mutex::new(Vec::new()),
             cursor: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
             fabric: FabricSlots::default(),
             stats,
+            health,
         });
         let handles = (0..workers.max(1))
             .map(|i| {
@@ -267,32 +289,123 @@ fn worker_loop(shared: &SchedShared) {
 fn run_job(shared: &SchedShared, session: &Session, job: Job) {
     let Job { seq, frame, submitted } = job;
     let fid = frame_id(session.id(), seq);
+    let hw = session.hw_modules();
+    let twin = session.sw_twin();
+    let t0 = Instant::now();
+
+    // quarantine steering: while any placed module is quarantined the
+    // session serves on its software twin, except every
+    // `[serve].probe_every`-th frame, which runs the hardware path
+    // anyway as a probation probe.  Without a twin there is nothing to
+    // steer to, so the hardware path keeps serving (still tracked).
+    let quarantined = !hw.is_empty() && shared.health.any_quarantined(hw);
+    let probing = quarantined && shared.health.should_probe(hw);
+    if quarantined && !probing {
+        if let Some(twin) = twin {
+            let result = run_contained(twin, frame, fid, seq);
+            finish(shared, session, seq, submitted, t0, result);
+            return;
+        }
+    }
+
+    // retry insurance: the attempt consumes the frame, so a session
+    // with a failover twin keeps a copy for the software retry
+    let backup = twin.map(|_| frame.clone());
+
     // exclusive fabric: hold every placed module's slot for the frame;
     // the acquisition interval is cross-tenant contention, recorded so
-    // attribution can split it out of the frame's queue time
-    let slots = shared.fabric.slots_for(session.hw_modules());
-    let acquire_start = if slots.is_empty() { 0 } else { obs_now_ns() };
-    let _guards: Vec<_> = slots.iter().map(|s| s.lock().expect("fabric slot")).collect();
-    if !slots.is_empty() {
-        session.pipeline().sink.interval(
-            EventKind::FabricAcquire,
-            fid,
-            acquire_start,
-            obs_now_ns(),
-        );
+    // attribution can split it out of the frame's queue time.  The
+    // guards drop before any software retry — a faulting module must
+    // not stall other tenants while this frame recovers on the CPU.
+    let mut result = {
+        let slots = shared.fabric.slots_for(hw);
+        let acquire_start = if slots.is_empty() { 0 } else { obs_now_ns() };
+        let _guards: Vec<_> =
+            slots.iter().map(|s| s.lock().unwrap_or_else(|p| p.into_inner())).collect();
+        if !slots.is_empty() {
+            session.pipeline().sink.interval(
+                EventKind::FabricAcquire,
+                fid,
+                acquire_start,
+                obs_now_ns(),
+            );
+        }
+        run_contained(session.pipeline(), frame, fid, seq)
+    };
+
+    match &result {
+        Ok(_) => {
+            if probing {
+                // a clean probe advances probation; the re-admitting
+                // probe restores the hardware placement for good
+                for module in hw {
+                    if shared.health.record_probe(module, true) {
+                        shared.stats.probation_readmissions.inc();
+                        shared.fabric.set_healthy(module, true);
+                        session.pipeline().sink.instant(EventKind::Probation, fid, 1);
+                    }
+                }
+            } else {
+                for module in hw {
+                    shared.health.record_ok(module);
+                }
+            }
+        }
+        Err(_) => {
+            shared.stats.frame_faults.inc();
+            session.pipeline().sink.instant(EventKind::FrameFault, fid, 0);
+            for module in hw {
+                if probing {
+                    shared.health.record_probe(module, false);
+                }
+                if shared.health.record_fault(module) {
+                    shared.stats.quarantines.inc();
+                    shared.fabric.set_healthy(module, false);
+                    session.pipeline().sink.instant(EventKind::Quarantine, fid, 0);
+                }
+            }
+        }
     }
-    let t0 = Instant::now();
-    // contain stage panics: the ticket must always complete (or the
-    // client waits forever), the worker must survive, and the slot
-    // guards above must be dropped cleanly instead of being poisoned
-    let result =
-        catch_unwind(AssertUnwindSafe(|| session.pipeline().process_one_traced(frame, fid)))
-            .unwrap_or_else(|panic| {
-                Err(CourierError::Serve(format!(
-                    "worker panicked while serving frame {seq}: {}",
-                    panic_message(panic.as_ref())
-                )))
-            });
+
+    // hw→sw failover: one retry on the software twin, after a brief
+    // backoff that gives a transiently wedged DMA engine a beat before
+    // the retry lands on the same cores
+    if result.is_err() {
+        if let (Some(twin), Some(backup)) = (twin, backup) {
+            shared.stats.retries.inc();
+            session.pipeline().sink.instant(EventKind::FailoverRetry, fid, 0);
+            std::thread::sleep(Duration::from_millis(2));
+            result = run_contained(twin, backup, fid, seq);
+        }
+    }
+
+    finish(shared, session, seq, submitted, t0, result);
+}
+
+/// Run one frame through `pipeline` with worker-level panic containment:
+/// the ticket must always complete (or the client waits forever), the
+/// worker must survive, and any held fabric-slot guards must drop
+/// cleanly instead of being poisoned.
+fn run_contained(pipeline: &BuiltPipeline, frame: Mat, fid: u64, seq: u64) -> crate::Result<Mat> {
+    catch_unwind(AssertUnwindSafe(|| pipeline.process_one_traced(frame, fid)))
+        .unwrap_or_else(|panic| {
+            Err(CourierError::Serve(format!(
+                "worker panicked while serving frame {seq}: {}",
+                panic_message(panic.as_ref())
+            )))
+        })
+}
+
+/// Deliver one finished job: record service time, count the frame,
+/// complete the ticket.
+fn finish(
+    shared: &SchedShared,
+    session: &Session,
+    seq: u64,
+    submitted: Instant,
+    t0: Instant,
+    result: crate::Result<Mat>,
+) {
     session.stats.service.record(t0.elapsed());
     if result.is_ok() {
         shared.stats.frames.add(1);
@@ -376,10 +489,27 @@ mod tests {
 
     #[test]
     fn shutdown_joins_idle_workers() {
-        let sched = Scheduler::start(3, Arc::new(ServerStats::default()));
+        let health = Arc::new(HealthTracker::new(&crate::config::ServeConfig::default()));
+        let sched = Scheduler::start(3, Arc::new(ServerStats::default()), health);
         assert_eq!(sched.session_count(), 0);
         sched.shutdown();
         // second shutdown is a no-op
         sched.shutdown();
+    }
+
+    #[test]
+    fn quarantined_slots_report_unhealthy_until_readmitted() {
+        let fabric = FabricSlots::default();
+        fabric.register(&[("m1".into(), 10_000)]);
+        assert!(fabric.occupancy().modules[0].healthy, "slots start healthy");
+
+        fabric.set_healthy("m1", false);
+        let occ = fabric.occupancy();
+        assert!(!occ.modules[0].healthy);
+        let json = occ.to_json(53_200).to_string_pretty();
+        assert!(json.contains("\"healthy\""), "{json}");
+
+        fabric.set_healthy("m1", true);
+        assert!(fabric.occupancy().modules[0].healthy);
     }
 }

@@ -71,6 +71,10 @@ pub struct Session {
     key: PlanKey,
     program: Program,
     pipeline: Arc<BuiltPipeline>,
+    /// All-software build of the same program: the hw→sw failover and
+    /// quarantine-steering target.  `None` when the plan places no
+    /// hardware, failover is disabled, or no software alternative builds.
+    sw_twin: Option<Arc<BuiltPipeline>>,
     /// Fabric-slot keys (sorted module names) this session's frames lock.
     hw_modules: Vec<String>,
     queue: BoundedQueue<Job>,
@@ -92,6 +96,7 @@ impl Session {
         key: PlanKey,
         program: Program,
         pipeline: Arc<BuiltPipeline>,
+        sw_twin: Option<Arc<BuiltPipeline>>,
         queue_depth: usize,
         cache_hit: bool,
         open_ns: u64,
@@ -103,6 +108,7 @@ impl Session {
             key,
             program,
             pipeline,
+            sw_twin,
             hw_modules,
             queue: BoundedQueue::new(queue_depth),
             done: Mutex::new(HashMap::new()),
@@ -236,6 +242,11 @@ impl Session {
     /// Fabric-slot keys this session's frames must hold.
     pub(crate) fn hw_modules(&self) -> &[String] {
         &self.hw_modules
+    }
+
+    /// The all-software failover twin, when one was built at open.
+    pub(crate) fn sw_twin(&self) -> Option<&Arc<BuiltPipeline>> {
+        self.sw_twin.as_ref()
     }
 
     /// Claim the next queued job, if any.

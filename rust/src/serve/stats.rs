@@ -90,6 +90,17 @@ pub struct ServerStats {
     /// Cold builds whose hardware placement blew `[serve].fabric_area_luts`
     /// and were retried all-software (the plan served is the CPU fallback).
     pub fabric_fallbacks: Counter,
+    /// Frames whose first execution attempt faulted (panic, injected
+    /// fault, missed deadline) — counted whether or not a retry saved them.
+    pub frame_faults: Counter,
+    /// Faulted frames re-executed on the session's software twin.
+    pub retries: Counter,
+    /// Modules quarantined after crossing the failure-rate threshold
+    /// (`[serve].quarantine_threshold` faults within `quarantine_window`).
+    pub quarantines: Counter,
+    /// Quarantined modules re-admitted to hardware after
+    /// `[serve].probation_frames` consecutive clean probe frames.
+    pub probation_readmissions: Counter,
 }
 
 impl ServerStats {

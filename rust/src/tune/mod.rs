@@ -27,7 +27,7 @@ mod search;
 
 pub use calibrate::{calibrate, CalibrationRun, StageCalibration};
 pub use cost_db::{CalibratedCostDb, CostRecord, COST_DB_VERSION};
-pub use search::{search, Candidate, ParetoPoint, SearchOutcome};
+pub use search::{demote_modules, search, Candidate, ParetoPoint, SearchOutcome};
 
 use std::sync::Arc;
 
@@ -50,6 +50,9 @@ pub struct Tuner<'a> {
     rt: &'a Runtime,
     registry: &'a Registry,
     cfg: &'a Config,
+    /// Modules excluded from hardware placement this run (the serving
+    /// layer passes its quarantined set — see [`crate::serve::HealthTracker`]).
+    quarantined: Vec<String>,
     /// Counters and timings for this tuner's lifetime.
     pub metrics: TunerMetrics,
 }
@@ -81,7 +84,16 @@ impl<'a> Tuner<'a> {
         registry: &'a Registry,
         cfg: &'a Config,
     ) -> Self {
-        Self { db, rt, registry, cfg, metrics: TunerMetrics::default() }
+        Self { db, rt, registry, cfg, quarantined: Vec::new(), metrics: TunerMetrics::default() }
+    }
+
+    /// Exclude `modules` from hardware placement for this tuner's runs:
+    /// their tasks are demoted to the software alternative before the
+    /// search sees them, so a plan promoted mid-quarantine cannot place
+    /// traffic the scheduler would immediately steer back to software.
+    pub fn without_modules(mut self, modules: Vec<String>) -> Self {
+        self.quarantined = modules;
+        self
     }
 
     /// Calibrate → search → validate for `program`, starting from a fresh
@@ -158,11 +170,20 @@ impl<'a> Tuner<'a> {
                 .into_iter()
                 .flat_map(|s| s.tasks)
                 .collect();
+        // quarantined modules never reach the search as placement
+        // options: their tasks demote to the software alternative here,
+        // so every candidate (the seed structure included) prices and
+        // places them on the CPU
+        let tasks = demote_modules(&tasks, &self.quarantined);
         let mut seed_plan = built_seed.plan.clone();
         let mut task_idx = 0usize;
         for stage in &mut seed_plan.stages {
             for task in &mut stage.tasks {
+                // kind + hw_cost ride along so a quarantine demotion
+                // reaches the seed structure, not just its estimates
                 task.est_ns = tasks[task_idx].est_ns;
+                task.kind = tasks[task_idx].kind.clone();
+                task.hw_cost = tasks[task_idx].hw_cost.clone();
                 task_idx += 1;
             }
         }

@@ -241,6 +241,34 @@ impl Evaluator<'_> {
     }
 }
 
+/// Flip every hardware task placed on one of `modules` to its software
+/// alternative (tasks without one stay placed — a module only the
+/// fabric can serve has nowhere to demote to).  The serving layer's
+/// health tracker feeds this: quarantined modules must not be offered
+/// to the search as placement options, because a plan promoted
+/// mid-quarantine would have its fabric traffic steered straight back
+/// to software.
+pub fn demote_modules(tasks: &[TaskSpec], modules: &[String]) -> Vec<TaskSpec> {
+    tasks
+        .iter()
+        .map(|t| {
+            let on_quarantined = match &t.kind {
+                TaskKind::Hw { module, .. } => modules.contains(module),
+                TaskKind::Sw => false,
+            };
+            match (&t.hw_cost, on_quarantined) {
+                (Some(hc), true) if hc.sw_alt_ns > 0 => TaskSpec {
+                    kind: TaskKind::Sw,
+                    est_ns: hc.sw_alt_ns,
+                    hw_cost: None,
+                    ..t.clone()
+                },
+                _ => t.clone(),
+            }
+        })
+        .collect()
+}
+
 /// Search the configuration space around `seed_plan` over calibrated task
 /// times.  `tasks` must be the flattened task list of the seed plan (the
 /// estimates inside are the calibrated ones the caller prepared).
@@ -831,6 +859,29 @@ mod tests {
         assert_eq!(out.frontier.len(), 1);
         assert_eq!(out.frontier[0].candidate, out.winner);
         assert_eq!(out.best_within_area(0).unwrap().candidate, out.winner);
+    }
+
+    #[test]
+    fn demote_modules_flips_only_quarantined_placements() {
+        let tasks = hw_middle_tasks();
+        let out = demote_modules(&tasks, &["hls_mid".to_string()]);
+        assert!(matches!(out[1].kind, TaskKind::Sw), "quarantined module demotes");
+        assert_eq!(out[1].est_ns, 40_000_000, "demotion prices the sw alternative");
+        assert!(out[1].hw_cost.is_none());
+        assert_eq!(out[0], tasks[0]);
+        assert_eq!(out[2], tasks[2]);
+
+        // an unrelated quarantine leaves the placement alone
+        let kept = demote_modules(&tasks, &["other".to_string()]);
+        assert_eq!(kept, tasks);
+
+        // no software alternative: the task has nowhere to demote to
+        let mut stuck = hw_middle_tasks();
+        if let Some(hc) = &mut stuck[1].hw_cost {
+            hc.sw_alt_ns = 0;
+        }
+        let out = demote_modules(&stuck, &["hls_mid".to_string()]);
+        assert!(matches!(out[1].kind, TaskKind::Hw { .. }), "hw-only task stays placed");
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Integration: fault injection, containment, and hw→sw failover.
+//!
+//! The software-fault tests run hermetically (an empty hardware manifest
+//! places everything on the CPU, so the injected `sw_panic` schedule is
+//! the only failure source).  The hardware-fault tests — transient DMA
+//! timeouts driving quarantine/probation, and a wedged fabric module
+//! bounded by the frame deadline — need real artifacts and skip without
+//! `make artifacts`, like the runtime unit tests.
+//!
+//! `COURIER_FAULT_SEED` overrides the injection seed (the CI fault
+//! matrix sweeps it); every assertion here is seed-independent — period
+//! schedules don't consult the seed, and the probabilistic storm test
+//! asserts properties (delivery, ordering, accounting), not positions.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use courier::app::{corner_harris_demo, harris_dag_demo, Interpreter, Program, RegistryDispatch};
+use courier::config::Config;
+use courier::image::{synth, Mat};
+use courier::serve::{Server, SessionSpec};
+use courier::util::testing::empty_hwdb_dir;
+
+fn seed_from_env() -> u64 {
+    std::env::var("COURIER_FAULT_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// Serve config with `sw_panic` injection armed (rate left to the test).
+fn fault_config(artifacts_dir: PathBuf) -> Config {
+    let mut cfg = Config { artifacts_dir, ..Default::default() };
+    cfg.serve.workers = 1;
+    cfg.serve.queue_depth = 32;
+    cfg.fault.enabled = true;
+    cfg.fault.seed = seed_from_env();
+    cfg.fault.kinds = "sw_panic".to_string();
+    cfg
+}
+
+/// The hardware modules the planner places for `program` — computed via
+/// the same trace → IR → plan chain serve's cold build runs, so a test
+/// can aim its `[fault] only` filter at a module that is really placed.
+fn placed_hw_modules(dir: &Path, program: &Program) -> Vec<String> {
+    let db = courier::hwdb::HwDatabase::load(dir).unwrap();
+    let inputs = courier::app::synth_frames(program, 1);
+    let trace = courier::trace::trace_program(program, &inputs).unwrap();
+    let ir = courier::ir::Ir::from_graph(&courier::trace::CallGraph::from_trace(&trace)).unwrap();
+    let registry = courier::swlib::Registry::standard();
+    let cfg = Config { artifacts_dir: dir.to_path_buf(), ..Default::default() };
+    let plan = courier::pipeline::plan_pipeline(&ir, &db, &registry, &cfg, None).unwrap();
+    plan.hw_modules()
+}
+
+#[test]
+fn period_schedule_faults_exact_frames_and_spares_the_rest() {
+    // one worker serves frames in submit order, and `cv::harrisResponse`
+    // runs exactly once per frame, so a period-4 schedule on that site
+    // strikes exactly frames 3, 7, 11, … — a fully deterministic replay
+    let tmp = empty_hwdb_dir("fault-period").unwrap();
+    let mut cfg = fault_config(tmp.path().to_path_buf());
+    cfg.fault.period = 4;
+    cfg.fault.only = "harrisResponse".to_string();
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(harris_dag_demo(24, 32))).unwrap();
+
+    let frames: Vec<Mat> = (0..24).map(|s| synth::noise_rgb(24, 32, s)).collect();
+    let tickets: Vec<_> = frames.iter().map(|f| session.submit(f.clone()).unwrap()).collect();
+    let results: Vec<_> = tickets.into_iter().map(|t| session.wait(t)).collect();
+
+    let original =
+        Interpreter::new(harris_dag_demo(24, 32), Arc::new(RegistryDispatch::standard()));
+    for (i, (frame, result)) in frames.into_iter().zip(results).enumerate() {
+        if (i + 1) % 4 == 0 {
+            let err = result.expect_err("scheduled frame must fault");
+            assert!(err.to_string().contains("injected"), "frame {i}: {err}");
+        } else {
+            let want = original.run(&[frame]).unwrap().remove(0);
+            assert_eq!(result.unwrap(), want, "frame {i}: non-faulted output diverges");
+        }
+    }
+    assert_eq!(session.stats.completed.get(), 18);
+    assert_eq!(session.stats.failed.get(), 6);
+    assert_eq!(session.stats.in_flight(), 0);
+    assert_eq!(server.stats().frame_faults.get(), 6);
+    assert_eq!(server.stats().retries.get(), 0, "no hardware, no sw twin, no retries");
+    assert_eq!(server.stats().quarantines.get(), 0, "software faults never quarantine");
+    server.shutdown();
+}
+
+#[test]
+fn seeded_fault_storm_delivers_every_nonfaulted_frame_in_order() {
+    // the acceptance drill: a 5 % per-invocation fault rate over 500
+    // served frames with two workers racing.  No hangs (every wait
+    // returns), no corruption (each delivered frame matches the
+    // interpreter on its *own* input — a cross-frame mixup would fail
+    // loudly), and the books balance exactly
+    let tmp = empty_hwdb_dir("fault-storm").unwrap();
+    let mut cfg = fault_config(tmp.path().to_path_buf());
+    cfg.serve.workers = 2;
+    cfg.fault.probability = 0.05;
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(harris_dag_demo(24, 32))).unwrap();
+
+    const FRAMES: u64 = 500;
+    let frames: Vec<Mat> = (0..FRAMES).map(|s| synth::noise_rgb(24, 32, s)).collect();
+    let tickets: Vec<_> = frames.iter().map(|f| session.submit(f.clone()).unwrap()).collect();
+    let results: Vec<_> = tickets.into_iter().map(|t| session.wait(t)).collect();
+
+    let original =
+        Interpreter::new(harris_dag_demo(24, 32), Arc::new(RegistryDispatch::standard()));
+    let mut failed = 0u64;
+    for (i, (frame, result)) in frames.into_iter().zip(results).enumerate() {
+        match result {
+            Ok(out) => {
+                let want = original.run(&[frame]).unwrap().remove(0);
+                assert_eq!(out, want, "frame {i}: delivered output is not its own input's");
+            }
+            Err(err) => {
+                assert!(err.to_string().contains("injected"), "frame {i}: {err}");
+                failed += 1;
+            }
+        }
+    }
+    assert!(failed > 0, "a 5 % rate over {FRAMES} frames must strike at least once");
+    assert!(failed < FRAMES, "a 5 % rate must not strike every frame");
+    assert_eq!(session.stats.failed.get(), failed);
+    assert_eq!(session.stats.completed.get(), FRAMES - failed);
+    assert_eq!(session.stats.in_flight(), 0);
+    assert_eq!(server.stats().frame_faults.get(), failed);
+    server.shutdown();
+}
+
+#[test]
+fn transient_hw_faults_retry_on_the_twin_then_quarantine_and_readmit() {
+    // needs real artifacts: DMA timeouts are injected on one placed
+    // module's fabric thread (skips without `make artifacts`)
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let program = corner_harris_demo(48, 64);
+    let placed = placed_hw_modules(&dir, &program);
+    if placed.is_empty() {
+        return; // nothing on the fabric: the failover path cannot engage
+    }
+
+    // period-2 timeouts on the first placed module, capped at 4 total:
+    // with one worker the hw site sees one invocation per hardware
+    // frame, so the walk is exact —
+    //   f0 ok, f1 fault #1 (retry), f2 ok, f3 fault #2 → QUARANTINE;
+    //   f4/f6/… steered to the twin, every 2nd steered frame probes:
+    //   f5 probe ok, f7 probe fault #3, f9 probe ok, f11 probe fault #4
+    //   (cap reached — the schedule runs clean from here),
+    //   f13 probe ok, f15 probe ok → RE-ADMITTED; f16–f19 back on hw
+    let mut cfg = Config { artifacts_dir: dir, ..Default::default() };
+    cfg.serve.workers = 1;
+    cfg.serve.queue_depth = 32;
+    cfg.serve.quarantine_threshold = 2;
+    cfg.serve.quarantine_window = 10;
+    cfg.serve.probation_frames = 2;
+    cfg.serve.probe_every = 2;
+    cfg.fault.enabled = true;
+    cfg.fault.seed = seed_from_env();
+    cfg.fault.kinds = "dma_timeout".to_string();
+    cfg.fault.period = 2;
+    cfg.fault.only = placed[0].clone();
+    cfg.fault.max_faults = 4;
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(corner_harris_demo(48, 64))).unwrap();
+    assert!(!session.pipeline().plan.hw_modules().is_empty());
+
+    let frames: Vec<Mat> = (0..20).map(|s| synth::noise_rgb(48, 64, s)).collect();
+    let outs = session.run_window(frames.clone()).unwrap();
+
+    // every frame was delivered — the faulted ones via the sw twin, the
+    // steered ones on the twin outright, the rest on hardware — and all
+    // of them agree with the original binary
+    let original =
+        Interpreter::new(corner_harris_demo(48, 64), Arc::new(RegistryDispatch::standard()));
+    for (i, f) in frames.into_iter().enumerate() {
+        let want = original.run(&[f]).unwrap().remove(0);
+        assert!(outs[i].quantized_close(&want, 1.0, 1e-3), "frame {i} diverges");
+    }
+    assert_eq!(session.stats.completed.get(), 20);
+    assert_eq!(session.stats.failed.get(), 0, "every faulted frame must be saved by a retry");
+
+    let stats = server.stats();
+    assert_eq!(stats.frame_faults.get(), 4, "the injected schedule strikes exactly 4 frames");
+    assert_eq!(stats.retries.get(), 4, "each faulted frame retries once on the twin");
+    assert!(stats.quarantines.get() >= 1, "the fault burst must quarantine");
+    assert_eq!(
+        stats.probation_readmissions.get(),
+        stats.quarantines.get(),
+        "every quarantined module must be re-admitted after the schedule drains"
+    );
+    assert!(
+        server.health().quarantined().is_empty(),
+        "probation re-admitted everything: {:?}",
+        server.health().quarantined()
+    );
+    server.shutdown();
+}
+
+#[test]
+fn frame_deadline_bounds_a_wedged_fabric_module() {
+    // needs real artifacts: a fabric_hang wedges one module's fabric
+    // thread past the frame deadline (skips without `make artifacts`)
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let program = corner_harris_demo(48, 64);
+    let placed = placed_hw_modules(&dir, &program);
+    if placed.is_empty() {
+        return;
+    }
+
+    // every 3rd invocation wedges for 150 ms; the 100 ms deadline cuts
+    // the wait, the twin redelivers, and the worker survives to serve
+    // the next frame.  hang < 2 × deadline keeps the wedge from bleeding
+    // into the following frame's invocation.  The threshold is parked
+    // high so the transient wedges never quarantine
+    let mut cfg = Config { artifacts_dir: dir, ..Default::default() };
+    cfg.serve.workers = 1;
+    cfg.serve.queue_depth = 32;
+    cfg.serve.frame_deadline_ms = 100;
+    cfg.serve.quarantine_threshold = 10;
+    cfg.fault.enabled = true;
+    cfg.fault.seed = seed_from_env();
+    cfg.fault.kinds = "fabric_hang".to_string();
+    cfg.fault.period = 3;
+    cfg.fault.only = placed[0].clone();
+    cfg.fault.hang_ms = 150;
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(corner_harris_demo(48, 64))).unwrap();
+
+    let frames: Vec<Mat> = (0..6).map(|s| synth::noise_rgb(48, 64, 100 + s)).collect();
+    let outs = session.run_window(frames.clone()).unwrap();
+
+    let original =
+        Interpreter::new(corner_harris_demo(48, 64), Arc::new(RegistryDispatch::standard()));
+    for (i, f) in frames.into_iter().enumerate() {
+        let want = original.run(&[f]).unwrap().remove(0);
+        assert!(outs[i].quantized_close(&want, 1.0, 1e-3), "frame {i} diverges");
+    }
+    assert_eq!(session.stats.completed.get(), 6);
+    assert_eq!(session.stats.failed.get(), 0);
+
+    let stats = server.stats();
+    assert_eq!(stats.frame_faults.get(), 2, "invocations 2 and 5 wedge past the deadline");
+    assert_eq!(stats.retries.get(), 2);
+    assert_eq!(stats.quarantines.get(), 0, "two wedges stay under the parked threshold");
+    server.shutdown();
+}

@@ -308,6 +308,58 @@ fn close_cancels_queued_frames_but_not_finished_ones() {
 }
 
 #[test]
+fn close_interleaves_with_faulted_frames_without_losing_any() {
+    // injected sw panics and a mid-stream close race against one worker:
+    // every submitted frame must still be retired exactly once — as a
+    // delivered output, a surfaced fault, or a cancellation — and every
+    // `wait` must return (a frame whose fault never reached the
+    // completion table would hang its caller forever)
+    let tmp = empty_hwdb_dir("serve-close-faults").unwrap();
+    let mut cfg = serve_config(empty_db(&tmp));
+    cfg.serve.workers = 1;
+    cfg.serve.queue_depth = 16;
+    cfg.fault.enabled = true;
+    cfg.fault.kinds = "sw_panic".to_string();
+    cfg.fault.period = 2;
+    cfg.fault.only = "cornerHarris".to_string();
+    let server = Server::new(cfg).unwrap();
+    let session = server.open(SessionSpec::new(corner_harris_demo(120, 160))).unwrap();
+
+    // the harris site strikes every 2nd invocation: frame 0 is clean,
+    // frame 1 is the poison frame — both retire before the close
+    let first = session.submit(synth::noise_rgb(120, 160, 0)).unwrap();
+    let poison = session.submit(synth::noise_rgb(120, 160, 1)).unwrap();
+    assert!(session.wait(first).is_ok(), "clean frame must deliver");
+    let err = session.wait(poison).unwrap_err();
+    assert!(err.to_string().contains("injected"), "{err}");
+
+    // now close mid-stream with frames queued behind the worker
+    let pending: Vec<_> = (2..12)
+        .map(|i| session.submit(synth::noise_rgb(120, 160, i)).unwrap())
+        .collect();
+    server.close(&session);
+    for t in pending {
+        let _ = session.wait(t); // Ok, faulted or cancelled — but it returns
+    }
+
+    let s = &session.stats;
+    assert_eq!(s.submitted.get(), 12);
+    assert_eq!(
+        s.completed.get() + s.failed.get() + s.cancelled.get(),
+        12,
+        "every submitted frame retired exactly once (completed {}, failed {}, cancelled {})",
+        s.completed.get(),
+        s.failed.get(),
+        s.cancelled.get()
+    );
+    assert_eq!(s.in_flight(), 0, "the session owes the client nothing");
+    assert!(s.failed.get() >= 1, "the poison frame surfaced as a wait error");
+    assert_eq!(server.stats().frame_faults.get(), s.failed.get());
+
+    server.shutdown();
+}
+
+#[test]
 fn hardware_sessions_share_cached_pjrt_executables() {
     // the real-artifact variant of the cache test (skips without
     // `make artifacts`, like the runtime unit tests)
