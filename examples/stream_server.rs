@@ -6,18 +6,20 @@
 //! make artifacts && cargo run --release --example stream_server [-- seconds]
 //! ```
 //!
-//! Four tenants share one server: corner-Harris at two shapes and the
-//! edge pipeline, plus a *fourth* session that repeats the first spec to
-//! demonstrate the plan cache (its open is warm: no trace, no partition,
-//! no PJRT compile).  Each tenant's client thread streams frames with
-//! backpressure; the scheduler round-robins all sessions over a bounded
-//! worker pool with exclusive per-module fabric slots.  The run ends with
-//! the per-session serving report (throughput, p50/p99, queue, cache).
+//! Five tenants share one server: corner-Harris at two shapes, the edge
+//! pipeline, the multi-output Gaussian pyramid (three `output`
+//! declarations — its client drains ordered bundles via `wait_all`), plus
+//! a session that repeats the first spec to demonstrate the plan cache
+//! (its open is warm: no trace, no partition, no PJRT compile).  Each
+//! tenant's client thread streams frames with backpressure; the scheduler
+//! round-robins all sessions over a bounded worker pool with exclusive
+//! per-module fabric slots.  The run ends with the per-session serving
+//! report (throughput, p50/p99, queue, cache).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use courier::app::{corner_harris_demo, edge_demo};
+use courier::app::{corner_harris_demo, edge_demo, gaussian_pyramid_demo};
 use courier::config::Config;
 use courier::image::synth;
 use courier::serve::{Server, SessionSpec};
@@ -39,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         ("harris-240p", corner_harris_demo(240, 320)),
         ("harris-small", corner_harris_demo(48, 64)),
         ("edge-240p", edge_demo(240, 320)),
+        ("pyramid-240p", gaussian_pyramid_demo(240, 320)),
         ("harris-240p-b", corner_harris_demo(240, 320)),
     ];
 
@@ -71,7 +74,9 @@ fn main() -> anyhow::Result<()> {
                         .map(|i| session.submit(synth::noise_rgb(h, w, seq + i)))
                         .collect::<courier::Result<_>>()?;
                     for t in tickets {
-                        session.wait(t)?;
+                        // ordered output bundle: one Mat per declared
+                        // `output` (single-output tenants get a 1-vec)
+                        session.wait_all(t)?;
                     }
                     seq += 4;
                 }

@@ -106,6 +106,7 @@ fn main() {
                             },
                             est_ns: courier_times[i],
                             hw_cost: None,
+                            scalars: Vec::new(),
                         })
                         .collect(),
                 })
@@ -116,6 +117,7 @@ fn main() {
                 tokens: (threads * 2).max(2),
                 bands: 1,
                 edges: Vec::new(),
+                outputs: Vec::new(),
                 stages,
             };
             let r = simulate(&plan, 64, threads, (threads * 2).max(2));

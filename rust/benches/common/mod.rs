@@ -39,7 +39,12 @@ pub fn ir_for(program: &Program, trace_frames: usize) -> Ir {
         })
         .collect();
     let trace = trace_program(program, &inputs).expect("trace");
-    Ir::from_graph(&CallGraph::from_trace(&trace)).expect("ir")
+    let mut ir = Ir::from_graph(&CallGraph::from_trace(&trace)).expect("ir");
+    // bind declared `output`s (multi-output programs egress ordered
+    // bundles; single-output programs normalize back to the inferred
+    // terminal, so this is a no-op for the legacy benches)
+    ir.set_outputs_from(program).expect("outputs");
+    ir
 }
 
 /// Build the pipeline for a program under a config.

@@ -54,6 +54,7 @@ fn harris_tasks() -> Vec<TaskSpec> {
                         xfer_out_ns: 500_000,
                         sw_alt_ns: SW_NS[i],
                     }),
+                    scalars: Vec::new(),
                 }
             } else {
                 TaskSpec {
@@ -62,6 +63,7 @@ fn harris_tasks() -> Vec<TaskSpec> {
                     kind: TaskKind::Sw,
                     est_ns: SW_NS[i],
                     hw_cost: None,
+                    scalars: Vec::new(),
                 }
             }
         })
@@ -87,6 +89,7 @@ fn seed_plan(tasks: &[TaskSpec], threads: usize, tokens: usize) -> StagePlan {
         tokens,
         bands: 1,
         edges: Vec::new(),
+        outputs: Vec::new(),
         stages,
     }
 }

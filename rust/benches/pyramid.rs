@@ -1,0 +1,98 @@
+//! **Pyramid**: the multi-output Gaussian-pyramid tenant end to end.
+//!
+//! The three-`output` Courier-Script flow (full-res Sobel edges, half-res
+//! Laplacian detail, quarter-res thresholded peaks) is built CPU-only and
+//! streamed as ordered bundles, against the sequential interpreter as the
+//! baseline.  The artifact pins the multi-terminal contract: 3 outputs per
+//! frame, bundles bit-identical to the interpreter, and zero steady-state
+//! pool misses (the shape-halving pyrDown levels must recycle through the
+//! pool's smaller capacity classes instead of allocating).
+//!
+//! Hermetic: empty hardware database — no `make artifacts` needed.  Run:
+//! `cargo bench --bench pyramid [-- HxW]`
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use courier::app::{gaussian_pyramid_demo, Interpreter, RegistryDispatch};
+use courier::config::Config;
+use courier::image::{synth, Mat};
+use courier::util::bench::{section, smoke, write_bench_json, Bench, Measurement};
+use courier::util::testing::empty_hwdb_dir;
+
+fn main() {
+    let default_size = if smoke() { "120x160" } else { "480x640" };
+    let size = std::env::args().nth(1).unwrap_or_else(|| default_size.into());
+    let (h, w) = size
+        .split_once('x')
+        .map(|(a, b)| (a.parse().unwrap(), b.parse().unwrap()))
+        .unwrap_or((480, 640));
+    let frames = if smoke() { 4usize } else { 8usize };
+    section(&format!(
+        "gaussian pyramid — {h}x{w}, 3 outputs/frame, {frames}-frame stream, CPU-only"
+    ));
+
+    let program = gaussian_pyramid_demo(h, w);
+    let tmp = empty_hwdb_dir("pyramid-bench").unwrap();
+    let cfg = Config {
+        artifacts_dir: tmp.path().to_path_buf(),
+        cpu_only: true,
+        threads: 2,
+        tokens: 2,
+        ..Default::default()
+    };
+    let (_, built) = common::build(&program, &cfg);
+    built.check_output_matches(&program).expect("declared outputs reach egress");
+    let outputs = built.terminal_steps.len();
+    assert_eq!(outputs, 3, "the pyramid tenant declares exactly 3 outputs");
+
+    let stream: Vec<Mat> = (0..frames).map(|s| synth::noise_rgb(h, w, s as u64)).collect();
+    let interp = Interpreter::new(program, Arc::new(RegistryDispatch::standard()));
+
+    // pin the contract before timing: every bundle bit-identical to the
+    // sequential interpreter, in output-declaration order
+    let (bundles, _) = built.run_all(stream.clone()).unwrap();
+    let bit_exact = stream
+        .iter()
+        .zip(&bundles)
+        .all(|(f, got)| &interp.run(std::slice::from_ref(f)).unwrap() == got);
+    assert!(bit_exact, "served bundles diverge from the interpreter");
+
+    let bench = Bench::from_env(Duration::from_secs(4));
+    // warm the pool to its structural ceiling (tokens x per-frame peak)
+    // before snapshotting: steady state must then be allocation-free
+    for _ in 0..2 {
+        built.run_all(stream.clone()).unwrap();
+    }
+    let warm_misses = built.pool.stats().misses;
+    let m_pipe: Measurement = bench.run("pipelined bundle stream (3 outputs/frame)", || {
+        built.run_all(stream.clone()).unwrap();
+    });
+    let steady_misses = built.pool.stats().misses - warm_misses;
+    let m_interp: Measurement = bench.run("sequential interpreter baseline", || {
+        for f in &stream {
+            interp.run(std::slice::from_ref(f)).unwrap();
+        }
+    });
+
+    let ms = m_pipe.mean_ms() / frames as f64;
+    let interp_ms = m_interp.mean_ms() / frames as f64;
+    println!(
+        "  {ms:.3} ms/frame pipelined vs {interp_ms:.3} ms/frame interpreted \
+         ({steady_misses} steady-state pool misses)"
+    );
+
+    let extras: Vec<(&str, f64)> = vec![
+        ("height", h as f64),
+        ("width", w as f64),
+        ("frames", frames as f64),
+        ("outputs", outputs as f64),
+        ("bundle_bit_exact", f64::from(u8::from(bit_exact))),
+        ("ms_per_frame", ms),
+        ("interp_ms_per_frame", interp_ms),
+        ("steady_state_pool_misses", steady_misses as f64),
+    ];
+    write_bench_json("pyramid", &[m_pipe, m_interp], &extras).expect("write BENCH_pyramid.json");
+}

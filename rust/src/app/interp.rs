@@ -22,12 +22,15 @@ use super::program::Program;
 /// dispatch directly, which is the same observable information (the
 /// paper's Off-loader Switcher keeps the original flow around the spliced
 /// region by exactly this bookkeeping).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CallSite<'a> {
     /// Index of the step in the program.
     pub step: usize,
     /// The library symbol being called.
     pub symbol: &'a str,
+    /// Resolved per-frame scalar constants for this call (empty for
+    /// plain buffer-only calls — the pre-Courier-Script shape).
+    pub scalars: &'a [f64],
 }
 
 /// Symbol dispatch: the dynamic-linker boundary.
@@ -55,7 +58,11 @@ impl RegistryDispatch {
 
 impl Dispatch for RegistryDispatch {
     fn call(&self, site: CallSite<'_>, args: &[&Mat]) -> Result<Mat> {
-        self.registry.call(site.symbol, args)
+        if site.scalars.is_empty() {
+            self.registry.call(site.symbol, args)
+        } else {
+            self.registry.call_scalar(site.symbol, args, site.scalars)
+        }
     }
 }
 
@@ -109,7 +116,10 @@ impl Interpreter {
                 .collect::<Result<_>>()?;
             let out = self
                 .dispatch
-                .call(CallSite { step: idx, symbol: &step.symbol }, &args)?;
+                .call(
+                    CallSite { step: idx, symbol: &step.symbol, scalars: &step.scalars },
+                    &args,
+                )?;
             buffers.insert(step.dst.as_str(), out);
         }
         self.program

@@ -119,6 +119,50 @@ pub fn fanout_demo(h: usize, w: usize) -> Program {
     .expect("builtin program is valid")
 }
 
+/// Multi-output Gaussian-pyramid flow (Courier-Script): the smoothed base
+/// fans out into a full-res Sobel edge map and two `cv::pyrDown` levels,
+/// with the coarsest level thresholded by per-frame `const`s.  Three
+/// `output` declarations egress an ordered bundle per frame; the
+/// shape-halving pyramid steps exercise the pool's capacity-class
+/// downcycling, and the three branches are deliberately imbalanced.
+pub fn gaussian_pyramid_demo(h: usize, w: usize) -> Program {
+    parse_program(&format!(
+        "program gaussianPyramid_Demo\n\
+         input frame {h}x{w}x3\n\
+         const lo = 32\n\
+         const hi = 255\n\
+         let gray = cv::cvtColor(frame)\n\
+         let base = cv::GaussianBlur(gray)\n\
+         call edges = cv::Sobel(base)\n\
+         let half = cv::pyrDown(base)\n\
+         call detail = cv::Laplacian(half)\n\
+         let quarter = cv::pyrDown(half)\n\
+         call peaks = cv::threshold(quarter, lo, hi)\n\
+         output edges\n\
+         output detail\n\
+         output peaks\n"
+    ))
+    .expect("builtin program is valid")
+}
+
+/// Morphological-gradient fork: one smoothed image branching into erosion
+/// and dilation, both declared outputs — the smallest honest multi-output
+/// program, and the flow whose fork-join stage the builder collapses into
+/// the one-walk `cv::erode+cv::dilate` sibling-pair kernel.
+pub fn morphology_demo(h: usize, w: usize) -> Program {
+    parse_program(&format!(
+        "program morphology_demo\n\
+         input frame {h}x{w}x3\n\
+         call gray = cv::cvtColor(frame)\n\
+         let smooth = cv::GaussianBlur(gray)\n\
+         call er = cv::erode(smooth)\n\
+         call di = cv::dilate(smooth)\n\
+         output er\n\
+         output di\n"
+    ))
+    .expect("builtin program is valid")
+}
+
 /// A BLAS chain (matmul -> matmul) for the library-breadth tests.
 pub fn gemm_chain_demo(n: usize) -> Program {
     parse_program(&format!(

@@ -1,4 +1,19 @@
-//! `.courier` text parser.
+//! `.courier` text parser — the **Courier-Script** frontend.
+//!
+//! The original flat grammar (`program` / `input` / `call` / `output`)
+//! is a strict subset.  Courier-Script adds:
+//!
+//! * `const k = 0.04` — per-frame scalar constants that flow into calls
+//!   as scalar arguments (`call resp = cv::cornerHarris(gray, k)`);
+//!   inline numeric literals are anonymous constants;
+//! * `let half = cv::pyrDown(gray)` — a binding form of `call` for
+//!   explicitly multi-use values, so fan-out is *authored* rather than
+//!   reverse-engineered from traces;
+//! * multiple `output` declarations — the program egresses an ordered
+//!   bundle per frame.
+//!
+//! Errors carry line *and* column with a rendered caret snippet, and
+//! duplicate `let`/`call`/`const`/`output` names are typed parse errors.
 
 use crate::{CourierError, Result};
 
@@ -7,9 +22,10 @@ use super::program::{CallStep, Program};
 /// Parse a `.courier` program (see module docs for the grammar).
 pub fn parse_program(text: &str) -> Result<Program> {
     let mut name = None;
-    let mut inputs = Vec::new();
-    let mut steps = Vec::new();
-    let mut outputs = Vec::new();
+    let mut inputs: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut consts: Vec<(String, f64)> = Vec::new();
+    let mut steps: Vec<CallStep> = Vec::new();
+    let mut outputs: Vec<String> = Vec::new();
 
     for (idx, raw) in text.lines().enumerate() {
         let lineno = idx + 1;
@@ -22,74 +38,155 @@ pub fn parse_program(text: &str) -> Result<Program> {
         match kw {
             "program" => {
                 if rest.is_empty() {
-                    return err(lineno, "program needs a name");
+                    return err(lineno, raw, col_after(raw, kw), "program needs a name");
                 }
                 name = Some(rest.to_string());
             }
             "input" => {
                 let mut parts = rest.split_whitespace();
                 let (Some(bname), Some(dims)) = (parts.next(), parts.next()) else {
-                    return err(lineno, "input needs: <name> <HxW[xC]>");
+                    return err(lineno, raw, col_after(raw, kw), "input needs: <name> <HxW[xC]>");
                 };
                 let shape: std::result::Result<Vec<usize>, _> =
                     dims.split('x').map(str::parse).collect();
                 match shape {
                     Ok(s) if !s.is_empty() && s.len() <= 3 => {
+                        if inputs.iter().any(|(n, _)| n == bname) {
+                            return err(
+                                lineno,
+                                raw,
+                                col_of(raw, bname),
+                                &format!("input '{bname}' declared twice"),
+                            );
+                        }
                         inputs.push((bname.to_string(), s))
                     }
-                    _ => return err(lineno, &format!("bad shape {dims:?}")),
+                    _ => return err(lineno, raw, col_of(raw, dims), &format!("bad shape {dims:?}")),
                 }
             }
-            "call" => {
+            "const" => {
+                let Some((cname, value)) = rest.split_once('=') else {
+                    return err(lineno, raw, col_after(raw, kw), "const needs: <name> = <value>");
+                };
+                let cname = cname.trim();
+                let value = value.trim();
+                if cname.is_empty() {
+                    return err(lineno, raw, col_after(raw, kw), "const needs a name");
+                }
+                let Ok(v) = value.parse::<f64>() else {
+                    return err(
+                        lineno,
+                        raw,
+                        col_of(raw, value),
+                        &format!("const {cname}: bad numeric literal {value:?}"),
+                    );
+                };
+                if consts.iter().any(|(n, _)| n == cname) {
+                    return err(
+                        lineno,
+                        raw,
+                        col_of(raw, cname),
+                        &format!("const '{cname}' declared twice"),
+                    );
+                }
+                consts.push((cname.to_string(), v));
+            }
+            // `let` is the binding form of `call`: identical semantics,
+            // spelled for values the author intends to fan out.
+            "call" | "let" => {
                 let Some((dst, call)) = rest.split_once('=') else {
-                    return err(lineno, "call needs: <dst> = <symbol>(<args>)");
+                    return err(
+                        lineno,
+                        raw,
+                        col_after(raw, kw),
+                        &format!("{kw} needs: <dst> = <symbol>(<args>)"),
+                    );
                 };
                 let dst = dst.trim();
                 let call = call.trim();
                 let Some(open) = call.find('(') else {
-                    return err(lineno, "missing '(' in call");
+                    return err(lineno, raw, col_of(raw, call), "missing '(' in call");
                 };
                 if !call.ends_with(')') {
-                    return err(lineno, "missing ')' in call");
+                    return err(lineno, raw, raw.trim_end().len(), "missing ')' in call");
                 }
                 let symbol = call[..open].trim();
                 let arglist = &call[open + 1..call.len() - 1];
-                let args: Vec<String> = arglist
-                    .split(',')
-                    .map(|a| a.trim().to_string())
-                    .filter(|a| !a.is_empty())
-                    .collect();
+                let mut args: Vec<String> = Vec::new();
+                let mut scalar_args: Vec<String> = Vec::new();
+                let mut scalars: Vec<f64> = Vec::new();
+                for a in arglist.split(',').map(str::trim).filter(|a| !a.is_empty()) {
+                    if let Some(v) = consts.iter().find(|(n, _)| n == a).map(|(_, v)| *v) {
+                        scalar_args.push(a.to_string());
+                        scalars.push(v);
+                    } else if let Ok(v) = a.parse::<f64>() {
+                        // inline numeric literal: an anonymous constant
+                        scalar_args.push(a.to_string());
+                        scalars.push(v);
+                    } else {
+                        args.push(a.to_string());
+                    }
+                }
                 if dst.is_empty() || symbol.is_empty() || args.is_empty() {
-                    return err(lineno, "call needs a destination, symbol and >=1 arg");
+                    return err(
+                        lineno,
+                        raw,
+                        col_after(raw, kw),
+                        &format!("{kw} needs a destination, symbol and >=1 buffer arg"),
+                    );
+                }
+                if steps.iter().any(|s| s.dst == dst) || inputs.iter().any(|(n, _)| n == dst) {
+                    return err(
+                        lineno,
+                        raw,
+                        col_of(raw, dst),
+                        &format!("buffer '{dst}' assigned twice"),
+                    );
                 }
                 steps.push(CallStep {
                     dst: dst.to_string(),
                     symbol: symbol.to_string(),
                     args,
+                    scalar_args,
+                    scalars,
                 });
             }
             "output" => {
                 if rest.is_empty() {
-                    return err(lineno, "output needs a buffer name");
+                    return err(lineno, raw, col_after(raw, kw), "output needs a buffer name");
+                }
+                if outputs.iter().any(|o| o == rest) {
+                    return err(
+                        lineno,
+                        raw,
+                        col_of(raw, rest),
+                        &format!("output '{rest}' declared twice"),
+                    );
                 }
                 outputs.push(rest.to_string());
             }
-            other => return err(lineno, &format!("unknown keyword {other:?}")),
+            other => return err(lineno, raw, col_of(raw, other), &format!("unknown keyword {other:?}")),
         }
     }
 
     let program = Program {
         name: name.ok_or_else(|| CourierError::Parse {
             line: 0,
+            col: 0,
             msg: "missing 'program' line".into(),
+            snippet: String::new(),
         })?,
         inputs,
+        consts,
         steps,
         outputs,
     };
-    program
-        .validate()
-        .map_err(|msg| CourierError::Parse { line: 0, msg })?;
+    program.validate().map_err(|msg| CourierError::Parse {
+        line: 0,
+        col: 0,
+        msg,
+        snippet: String::new(),
+    })?;
     Ok(program)
 }
 
@@ -98,8 +195,28 @@ pub fn load_program(path: &std::path::Path) -> Result<Program> {
     parse_program(&std::fs::read_to_string(path)?)
 }
 
-fn err<T>(line: usize, msg: &str) -> Result<T> {
-    Err(CourierError::Parse { line, msg: msg.to_string() })
+/// 1-based column of `token`'s first occurrence in `raw` (1 when absent).
+fn col_of(raw: &str, token: &str) -> usize {
+    if token.is_empty() {
+        return 1;
+    }
+    raw.find(token).map_or(1, |i| i + 1)
+}
+
+/// 1-based column just past `token` (where the missing operand belongs).
+fn col_after(raw: &str, token: &str) -> usize {
+    raw.find(token).map_or(1, |i| i + token.len() + 1)
+}
+
+fn err<T>(line: usize, raw: &str, col: usize, msg: &str) -> Result<T> {
+    let col = col.max(1);
+    let src = raw.trim_end();
+    let snippet = format!(
+        "\n  {line:>3} | {src}\n      | {caret:>width$}",
+        caret = "^",
+        width = col.min(src.len() + 1)
+    );
+    Err(CourierError::Parse { line, col, msg: msg.to_string(), snippet })
 }
 
 #[cfg(test)]
@@ -150,9 +267,92 @@ mod tests {
     }
 
     #[test]
+    fn error_carries_column_and_caret() {
+        let e = parse_program("program p\ninput a 2x2\ncall b = f(a\noutput b\n").unwrap_err();
+        match &e {
+            CourierError::Parse { line, col, snippet, .. } => {
+                assert_eq!(*line, 3);
+                assert_eq!(*col, "call b = f(a".len());
+                assert!(snippet.contains("call b = f(a"), "snippet shows the source line");
+                assert!(snippet.contains('^'), "snippet carries a caret");
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+        // the rendered message includes line:col and the caret block
+        let text = e.to_string();
+        assert!(text.contains("line 3:"), "{text}");
+        assert!(text.contains('^'), "{text}");
+    }
+
+    #[test]
     fn rejects_semantic_errors() {
         assert!(parse_program("program p\ncall b = f(ghost)\noutput b\n").is_err());
         assert!(parse_program("input a 2x2\noutput a\n").is_err()); // no program line
         assert!(parse_program("program p\ninput a 2x2x2x2\noutput a\n").is_err());
+    }
+
+    #[test]
+    fn let_is_a_call_synonym() {
+        let p = parse_program(
+            "program p\ninput a 4x4\nlet b = cv::GaussianBlur(a)\ncall c = cv::erode(b)\ncall d = cv::dilate(b)\noutput c\noutput d\n",
+        )
+        .unwrap();
+        assert_eq!(p.steps.len(), 3);
+        assert_eq!(p.steps[0].dst, "b");
+        assert_eq!(p.outputs, vec!["c", "d"]);
+    }
+
+    #[test]
+    fn consts_flow_into_scalar_args() {
+        let p = parse_program(
+            "program p\ninput f 4x6x3\nconst k = 0.04\ncall g = cv::cvtColor(f)\ncall r = cv::cornerHarris(g, k)\noutput r\n",
+        )
+        .unwrap();
+        assert_eq!(p.consts, vec![("k".to_string(), 0.04)]);
+        assert_eq!(p.steps[1].args, vec!["g"]);
+        assert_eq!(p.steps[1].scalar_args, vec!["k"]);
+        assert_eq!(p.steps[1].scalars, vec![0.04]);
+    }
+
+    #[test]
+    fn inline_literals_are_anonymous_consts() {
+        let p = parse_program(
+            "program p\ninput a 4x4\ncall b = cv::threshold(a, 100, 255)\noutput b\n",
+        )
+        .unwrap();
+        assert_eq!(p.steps[0].scalars, vec![100.0, 255.0]);
+        // and they survive a text round trip
+        let again = parse_program(&p.to_text()).unwrap();
+        assert_eq!(p, again);
+    }
+
+    #[test]
+    fn duplicate_names_are_typed_errors() {
+        for (src, col_token) in [
+            ("program p\ninput a 2x2\nlet b = f(a)\nlet b = g(a)\noutput b\n", "b"),
+            ("program p\ninput a 2x2\nconst k = 1\nconst k = 2\ncall b = f(a)\noutput b\n", "k"),
+            ("program p\ninput a 2x2\ncall b = f(a)\noutput b\noutput b\n", "b"),
+            ("program p\ninput a 2x2\ninput a 2x2\ncall b = f(a)\noutput b\n", "a"),
+        ] {
+            let e = parse_program(src).unwrap_err();
+            match e {
+                CourierError::Parse { col, ref msg, .. } => {
+                    assert!(msg.contains("twice"), "{msg}");
+                    assert!(col >= 1, "column for {col_token}: {col}");
+                }
+                other => panic!("wrong error {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn old_flat_grammar_is_a_strict_subset() {
+        // byte-for-byte compatible: the flat grammar round-trips with no
+        // const/let/scalar traces in the parsed form
+        let src = "program demo\ninput frame 8x8x3\ncall gray = cv::cvtColor(frame)\noutput gray\n";
+        let p = parse_program(src).unwrap();
+        assert!(p.consts.is_empty());
+        assert!(p.steps.iter().all(|s| s.scalar_args.is_empty()));
+        assert_eq!(p.to_text(), src);
     }
 }

@@ -1,7 +1,14 @@
-//! Program representation: declared inputs, a call sequence, outputs.
+//! Program representation: declared inputs, per-frame constants, a call
+//! sequence (with explicit `let` fan-out bindings), outputs.
 
 /// One library call: `dst = symbol(arg0, arg1, ...)`.
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// Arguments split into two classes: `args` name buffers (inputs or
+/// earlier destinations) and `scalar_args` name per-frame scalar
+/// constants (`const` declarations) or inline numeric literals.  The
+/// resolved values ride in `scalars` (parallel to `scalar_args`) so the
+/// interpreter and pipeline never re-resolve names per frame.
+#[derive(Debug, Clone, PartialEq)]
 pub struct CallStep {
     /// Destination buffer name.
     pub dst: String,
@@ -9,21 +16,48 @@ pub struct CallStep {
     pub symbol: String,
     /// Argument buffer names.
     pub args: Vec<String>,
+    /// Scalar argument spellings (const names or numeric literals), in
+    /// source order among themselves.
+    pub scalar_args: Vec<String>,
+    /// Resolved scalar values, parallel to `scalar_args`.
+    pub scalars: Vec<f64>,
+}
+
+// Scalar values come from parsed literals (never NaN in practice), so
+// the reflexivity caveat of f64 equality does not bite here.
+impl Eq for CallStep {}
+
+impl CallStep {
+    /// A plain buffer-only call (the pre-Courier-Script shape).
+    pub fn call(dst: &str, symbol: &str, args: &[&str]) -> Self {
+        Self {
+            dst: dst.to_string(),
+            symbol: symbol.to_string(),
+            args: args.iter().map(|a| a.to_string()).collect(),
+            scalar_args: Vec::new(),
+            scalars: Vec::new(),
+        }
+    }
 }
 
 /// A parsed `.courier` program — the stand-in for the traced ELF binary.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Program {
     /// Program name (`program` line).
     pub name: String,
     /// Input buffers: (name, shape).
     pub inputs: Vec<(String, Vec<usize>)>,
+    /// Per-frame scalar constants: (name, value), declaration order.
+    pub consts: Vec<(String, f64)>,
     /// Sequential call list (the binary runs these one by one — the
     /// pipeline the Backend builds is *not* in the source).
     pub steps: Vec<CallStep>,
-    /// Output buffer names.
+    /// Output buffer names, declaration order.  More than one output is
+    /// legal: the pipeline egresses an ordered bundle per frame.
     pub outputs: Vec<String>,
 }
+
+impl Eq for Program {}
 
 impl Program {
     /// Render back to `.courier` text (inverse of `parse_program`).
@@ -33,13 +67,17 @@ impl Program {
             let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
             s.push_str(&format!("input {} {}\n", name, dims.join("x")));
         }
+        for (name, value) in &self.consts {
+            s.push_str(&format!("const {name} = {value}\n"));
+        }
         for step in &self.steps {
-            s.push_str(&format!(
-                "call {} = {}({})\n",
-                step.dst,
-                step.symbol,
-                step.args.join(", ")
-            ));
+            let all: Vec<&str> = step
+                .args
+                .iter()
+                .chain(step.scalar_args.iter())
+                .map(String::as_str)
+                .collect();
+            s.push_str(&format!("call {} = {}({})\n", step.dst, step.symbol, all.join(", ")));
         }
         for out in &self.outputs {
             s.push_str(&format!("output {out}\n"));
@@ -52,27 +90,63 @@ impl Program {
         self.steps.iter().map(|s| s.symbol.as_str()).collect()
     }
 
+    /// The value of a declared constant.
+    pub fn const_value(&self, name: &str) -> Option<f64> {
+        self.consts.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
     /// Static validation: every referenced buffer is defined before use,
-    /// destinations are unique, outputs exist.
+    /// destinations are unique, scalar args resolve, outputs exist and
+    /// are distinct.
     pub fn validate(&self) -> Result<(), String> {
         let mut defined: std::collections::HashSet<&str> =
             self.inputs.iter().map(|(n, _)| n.as_str()).collect();
         if defined.len() != self.inputs.len() {
             return Err("duplicate input names".into());
         }
+        let mut consts: std::collections::HashSet<&str> = std::collections::HashSet::new();
+        for (name, _) in &self.consts {
+            if defined.contains(name.as_str()) {
+                return Err(format!("const '{name}' shadows a buffer"));
+            }
+            if !consts.insert(name.as_str()) {
+                return Err(format!("const '{name}' declared twice"));
+            }
+        }
         for step in &self.steps {
             for arg in &step.args {
+                if consts.contains(arg.as_str()) {
+                    return Err(format!(
+                        "step '{}': const '{arg}' used where a buffer is required",
+                        step.dst
+                    ));
+                }
                 if !defined.contains(arg.as_str()) {
                     return Err(format!("step '{}': undefined buffer '{arg}'", step.dst));
                 }
+            }
+            if step.scalar_args.len() != step.scalars.len() {
+                return Err(format!("step '{}': scalar args/values length mismatch", step.dst));
+            }
+            for sa in &step.scalar_args {
+                if !consts.contains(sa.as_str()) && sa.parse::<f64>().is_err() {
+                    return Err(format!("step '{}': undefined constant '{sa}'", step.dst));
+                }
+            }
+            if consts.contains(step.dst.as_str()) {
+                return Err(format!("buffer '{}' shadows a const", step.dst));
             }
             if !defined.insert(&step.dst) {
                 return Err(format!("buffer '{}' assigned twice", step.dst));
             }
         }
+        let mut seen_out: std::collections::HashSet<&str> = std::collections::HashSet::new();
         for out in &self.outputs {
             if !defined.contains(out.as_str()) {
                 return Err(format!("output '{out}' never produced"));
+            }
+            if !seen_out.insert(out.as_str()) {
+                return Err(format!("output '{out}' declared twice"));
             }
         }
         if self.outputs.is_empty() {
@@ -90,11 +164,8 @@ mod tests {
         Program {
             name: "t".into(),
             inputs: vec![("a".into(), vec![2, 2])],
-            steps: vec![CallStep {
-                dst: "b".into(),
-                symbol: "cv::normalize".into(),
-                args: vec!["a".into()],
-            }],
+            consts: Vec::new(),
+            steps: vec![CallStep::call("b", "cv::normalize", &["a"])],
             outputs: vec!["b".into()],
         }
     }
@@ -114,11 +185,7 @@ mod tests {
     #[test]
     fn validate_catches_double_assign() {
         let mut p = tiny();
-        p.steps.push(CallStep {
-            dst: "b".into(),
-            symbol: "cv::normalize".into(),
-            args: vec!["a".into()],
-        });
+        p.steps.push(CallStep::call("b", "cv::normalize", &["a"]));
         assert!(p.validate().unwrap_err().contains("assigned twice"));
     }
 
@@ -130,8 +197,53 @@ mod tests {
     }
 
     #[test]
+    fn validate_catches_duplicate_output() {
+        let mut p = tiny();
+        p.outputs.push("b".into());
+        assert!(p.validate().unwrap_err().contains("declared twice"));
+    }
+
+    #[test]
+    fn validate_catches_undefined_const() {
+        let mut p = tiny();
+        p.steps[0].scalar_args.push("k".into());
+        p.steps[0].scalars.push(0.04);
+        assert!(p.validate().unwrap_err().contains("undefined constant"));
+        p.consts.push(("k".into(), 0.04));
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_const_buffer_clash() {
+        let mut p = tiny();
+        p.consts.push(("a".into(), 1.0));
+        assert!(p.validate().unwrap_err().contains("shadows a buffer"));
+        let mut p = tiny();
+        p.consts.push(("b".into(), 1.0));
+        assert!(p.validate().unwrap_err().contains("shadows a const"));
+    }
+
+    #[test]
+    fn multiple_outputs_validate() {
+        let mut p = tiny();
+        p.steps.push(CallStep::call("c", "cv::threshold", &["b"]));
+        p.outputs = vec!["b".into(), "c".into()];
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
     fn text_roundtrip() {
         let p = tiny();
+        let parsed = super::super::parse_program(&p.to_text()).unwrap();
+        assert_eq!(p, parsed);
+    }
+
+    #[test]
+    fn text_roundtrip_with_consts_and_scalars() {
+        let mut p = tiny();
+        p.consts.push(("k".into(), 0.04));
+        p.steps[0].scalar_args.push("k".into());
+        p.steps[0].scalars.push(0.04);
         let parsed = super::super::parse_program(&p.to_text()).unwrap();
         assert_eq!(p, parsed);
     }

@@ -19,13 +19,20 @@ pub enum CourierError {
     #[error("xla error: {0}")]
     Xla(String),
 
-    /// `.courier` program parse failure.
-    #[error("program parse error at line {line}: {msg}")]
+    /// `.courier` program parse failure.  `snippet`, when non-empty, is a
+    /// pre-rendered caret diagnostic (source line plus a `^` marker at
+    /// `col`) and carries its own leading newline.
+    #[error("program parse error at line {line}:{col}: {msg}{snippet}")]
     Parse {
         /// 1-based source line.
         line: usize,
+        /// 1-based source column (0 when unlocatable, e.g. whole-program
+        /// validation errors).
+        col: usize,
         /// Human-readable description.
         msg: String,
+        /// Rendered caret snippet ("" when no source context exists).
+        snippet: String,
     },
 
     /// Unknown library symbol encountered by the interpreter or tracer.

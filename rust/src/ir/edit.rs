@@ -15,6 +15,11 @@ pub enum EditError {
     /// Cannot drop every function.
     #[error("cannot drop the last remaining function")]
     WouldEmpty,
+    /// Dropping this call would orphan a declared program output: the
+    /// buffer it produces is egressed, so there is nothing legal to
+    /// rewire its consumers (the egress) to.
+    #[error("step {0} produces declared output #{1}; dropping it would orphan the output")]
+    WouldOrphanOutput(usize, usize),
 }
 
 impl Ir {
@@ -62,6 +67,7 @@ impl Ir {
                 .map(|m| m.placement)
                 .find(|p| *p != Placement::Auto)
                 .unwrap_or(Placement::Auto),
+            scalars: members.iter().flat_map(|m| m.scalars.clone()).collect(),
         };
         self.funcs.insert(lo, fused);
         Ok(())
@@ -93,6 +99,10 @@ impl Ir {
                     covers: vec![*st],
                     mean_ns: share,
                     placement: node.placement,
+                    // per-member scalar attribution is lost in fusion;
+                    // scalars stay with the first member (conservative:
+                    // scalar-bearing nodes are sw-only either way)
+                    scalars: if i == 0 { node.scalars.clone() } else { Vec::new() },
                 },
             );
         }
@@ -116,6 +126,17 @@ impl Ir {
             .iter()
             .position(|f| f.covers.contains(&step))
             .ok_or(EditError::NoSuchStep(step))?;
+        // a call whose buffer is a *declared* output cannot be dropped:
+        // the rewire below would silently egress its source's buffer
+        // instead of the declared value (the pre-multi-output rewire
+        // predates declared terminal sets and must fail typed here)
+        if let Some(out_idx) = self
+            .outputs
+            .iter()
+            .position(|o| self.funcs[pos].covers.contains(o))
+        {
+            return Err(EditError::WouldOrphanOutput(step, out_idx));
+        }
         let node = self.funcs.remove(pos);
         let covers = node.covers;
         // the (primary) source that fed the dropped call; None == the
@@ -224,6 +245,23 @@ mod tests {
         let mut ir = demo_ir();
         ir.drop_func(0).unwrap();
         assert!(ir.step_edges().contains(&(None, 1)), "{:?}", ir.step_edges());
+    }
+
+    #[test]
+    fn drop_refuses_to_orphan_declared_outputs() {
+        // bind declared outputs: normalize (step 2) is egressed alongside
+        // the tail — dropping it must fail typed, not silently rewire
+        let mut ir = demo_ir();
+        ir.outputs = vec![2, 3];
+        assert_eq!(ir.drop_func(2), Err(EditError::WouldOrphanOutput(2, 0)));
+        assert_eq!(ir.drop_func(3), Err(EditError::WouldOrphanOutput(3, 1)));
+        // non-output interior steps still drop and rewire legally
+        ir.drop_func(1).unwrap();
+        assert!(ir.step_edges().contains(&(Some(0), 2)), "{:?}", ir.step_edges());
+        // inferred-terminal IRs (no declared set) keep the old behaviour
+        let mut ir = demo_ir();
+        assert!(ir.outputs.is_empty());
+        ir.drop_func(3).unwrap();
     }
 
     #[test]

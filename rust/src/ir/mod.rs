@@ -60,6 +60,10 @@ pub struct IrFunc {
     pub mean_ns: u64,
     /// Placement directive.
     pub placement: Placement,
+    /// Per-frame scalar constants bound at the call site (empty for
+    /// plain calls).  Scalar-bearing functions are software-only: the
+    /// AOT hardware modules bake their constants in at synthesis.
+    pub scalars: Vec<f64>,
 }
 
 /// The editable IR: function chain + data descriptors.
@@ -74,6 +78,11 @@ pub struct Ir {
     /// Data nodes carried over from the call graph (for Fig. 4 export and
     /// communication-cost estimates).
     pub data: Vec<DataNode>,
+    /// Declared terminal steps in output-declaration order (the steps
+    /// whose buffers the program egresses).  Empty means "infer the
+    /// single terminal" — the pre-multi-output behaviour, which keeps
+    /// legacy IR JSON byte-identical.
+    pub outputs: Vec<usize>,
 }
 
 impl Ir {
@@ -133,10 +142,63 @@ impl Ir {
                     covers: vec![f.step],
                     mean_ns: f.mean_ns,
                     placement: Placement::Auto,
+                    scalars: f.scalars.clone(),
                 })
                 .collect(),
             data,
+            outputs: Vec::new(),
         })
+    }
+
+    /// Bind the IR's declared terminal set from the program's `output`
+    /// declarations, in declaration order (Courier-Script multi-output
+    /// lowering).  Every output name must be produced by a call step —
+    /// an input-only output has no pipeline stage to egress from and is
+    /// a typed [`CourierError::Dag`].
+    ///
+    /// [`CourierError::Dag`]: crate::CourierError::Dag
+    pub fn set_outputs_from(&mut self, program: &crate::app::Program) -> Result<()> {
+        let mut outs = Vec::with_capacity(program.outputs.len());
+        for name in &program.outputs {
+            let step = program
+                .steps
+                .iter()
+                .position(|s| &s.dst == name)
+                .ok_or_else(|| {
+                    crate::CourierError::Dag(format!(
+                        "program {}: output '{name}' is not produced by any call step \
+                         (inputs cannot be declared outputs)",
+                        program.name
+                    ))
+                })?;
+            outs.push(step);
+        }
+        // a single declared output that IS the flow's inferred terminal
+        // keeps the legacy empty set (and a byte-identical serialized
+        // IR); only a genuinely multi-terminal or redirected egress
+        // records the declared set
+        self.outputs.clear();
+        if outs.len() != 1 || self.terminal_steps() != outs {
+            self.outputs = outs;
+        }
+        Ok(())
+    }
+
+    /// The terminal steps this IR egresses, in output order: the declared
+    /// set when one was bound ([`Ir::set_outputs_from`]), else the single
+    /// inferred terminal (largest step whose buffer no one consumes) —
+    /// the pre-multi-output behaviour.
+    pub fn terminal_steps(&self) -> Vec<usize> {
+        if !self.outputs.is_empty() {
+            return self.outputs.clone();
+        }
+        self.data
+            .iter()
+            .filter(|d| d.consumers.is_empty())
+            .filter_map(|d| d.producer)
+            .max()
+            .into_iter()
+            .collect()
     }
 
     /// Ordered step-level dependency edges: `(producer step or None for
@@ -218,13 +280,21 @@ impl Ir {
             .funcs
             .iter()
             .map(|f| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("step", Json::Num(f.step as f64)),
                     ("symbol", Json::Str(f.symbol.clone())),
                     ("covers", Json::from_usizes(&f.covers)),
                     ("mean_ns", Json::Num(f.mean_ns as f64)),
                     ("placement", Json::Str(f.placement.as_str().into())),
-                ])
+                ];
+                // omit-when-empty keeps pre-Courier-Script IR byte-identical
+                if !f.scalars.is_empty() {
+                    fields.push((
+                        "scalars",
+                        Json::Arr(f.scalars.iter().map(|s| Json::Num(*s)).collect()),
+                    ));
+                }
+                Json::obj(fields)
             })
             .collect();
         let data = self
@@ -246,13 +316,16 @@ impl Ir {
                 ])
             })
             .collect();
-        Ok(Json::obj(vec![
+        let mut fields = vec![
             ("program", Json::Str(self.program.clone())),
             ("frames", Json::Num(self.frames as f64)),
             ("funcs", Json::Arr(funcs)),
             ("data", Json::Arr(data)),
-        ])
-        .to_string_pretty())
+        ];
+        if !self.outputs.is_empty() {
+            fields.push(("outputs", Json::from_usizes(&self.outputs)));
+        }
+        Ok(Json::obj(fields).to_string_pretty())
     }
 
     /// Deserialize an IR a user edited offline (Step 7).
@@ -269,6 +342,12 @@ impl Ir {
                     covers: f.req("covers")?.as_usize_vec()?,
                     mean_ns: f.req("mean_ns")?.as_u64()?,
                     placement: Placement::from_str(f.req("placement")?.as_str()?)?,
+                    scalars: match f.get("scalars") {
+                        Some(arr) => {
+                            arr.as_arr()?.iter().map(Json::as_f64).collect::<Result<_>>()?
+                        }
+                        None => Vec::new(),
+                    },
                 })
             })
             .collect::<Result<_>>()?;
@@ -294,6 +373,10 @@ impl Ir {
             frames: v.req("frames")?.as_usize()?,
             funcs,
             data,
+            outputs: match v.get("outputs") {
+                Some(o) => o.as_usize_vec()?,
+                None => Vec::new(),
+            },
         })
     }
 }

@@ -361,7 +361,8 @@ fn cmd_deploy(args: &Args, cfg: &Config) -> anyhow::Result<()> {
     let inputs = synth_frames(&prog, cfg.trace_frames.max(1));
     let trace = trace_program(&prog, &inputs)?;
     let graph = CallGraph::from_trace(&trace);
-    let ir = Ir::from_graph(&graph)?;
+    let mut ir = Ir::from_graph(&graph)?;
+    ir.set_outputs_from(&prog)?;
 
     // Step 8: build
     let db = HwDatabase::load(&cfg.artifacts_dir)?;

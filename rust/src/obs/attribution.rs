@@ -446,6 +446,7 @@ mod tests {
             tokens: 2,
             bands: 1,
             edges: Vec::new(),
+            outputs: Vec::new(),
             stages: vec![
                 StageSpec {
                     index: 0,
@@ -456,6 +457,7 @@ mod tests {
                         kind: TaskKind::Sw,
                         est_ns: 2_000_000,
                         hw_cost: None,
+                        scalars: Vec::new(),
                     }],
                 },
                 StageSpec {
@@ -476,6 +478,7 @@ mod tests {
                             xfer_out_ns: 300_000,
                             sw_alt_ns: 0,
                         }),
+                        scalars: Vec::new(),
                     }],
                 },
             ],

@@ -76,6 +76,23 @@ impl FrameEnv {
         })
     }
 
+    /// Extract the declared output buffers, in declaration order — the
+    /// multi-terminal egress of a Courier-Script program with several
+    /// `output` lines.  Every step must have survived liveness (terminals
+    /// are never moved out or dropped mid-flow).
+    pub fn into_outputs(mut self, steps: &[usize]) -> Result<Vec<Mat>> {
+        steps
+            .iter()
+            .map(|step| {
+                self.bufs.remove(step).ok_or_else(|| {
+                    CourierError::Pipeline(format!(
+                        "pipeline emitted no output for terminal step {step}"
+                    ))
+                })
+            })
+            .collect()
+    }
+
     fn pool_ref(&self) -> Option<&BufferPool> {
         self.pool.as_deref()
     }
@@ -105,8 +122,12 @@ pub struct BuiltPipeline {
     pub pipeline: TokenPipeline<FrameEnv>,
     /// The generated control-program listing (paper's Jinja2 output).
     pub control_program: String,
-    /// The step whose output is the pipeline's deliverable.
-    pub terminal_step: usize,
+    /// The steps whose outputs are the pipeline's deliverables, in
+    /// output-declaration order.  One entry for classic single-output
+    /// flows; several when the program declares multiple `output` lines.
+    /// Index 0 is the primary output (what the single-`Mat` surfaces
+    /// stream).
+    pub terminal_steps: Vec<usize>,
     /// Capacity-class-keyed buffer recycling pool shared by every stage (and every
     /// frame environment this pipeline creates); after warm-up the
     /// steady-state frame path allocates nothing — `pool.stats().misses`
@@ -125,7 +146,21 @@ pub struct BuiltPipeline {
 }
 
 impl BuiltPipeline {
-    /// Run a frame stream with cross-frame overlap (deployed streaming).
+    /// The primary output out of a finished frame environment; secondary
+    /// outputs go straight back to the pool (callers on the single-`Mat`
+    /// surfaces asked for exactly one buffer).
+    fn primary_of(&self, env: FrameEnv) -> Result<Mat> {
+        let mut outs = env.into_outputs(&self.terminal_steps)?;
+        let first = outs.remove(0);
+        for m in outs {
+            self.pool.release(m);
+        }
+        Ok(first)
+    }
+
+    /// Run a frame stream with cross-frame overlap (deployed streaming),
+    /// delivering the primary output per frame.  Multi-output tenants
+    /// stream full bundles via [`Self::run_all`].
     pub fn run(&self, frames: Vec<Mat>) -> Result<(Vec<Mat>, PipelineStats)> {
         let envs: Vec<FrameEnv> = frames
             .into_iter()
@@ -134,61 +169,96 @@ impl BuiltPipeline {
         let (outs, stats) = self.pipeline.run(envs)?;
         let mats = outs
             .into_iter()
-            .map(|e| e.into_output(self.terminal_step))
+            .map(|e| self.primary_of(e))
             .collect::<Result<Vec<Mat>>>()?;
         Ok((mats, stats))
     }
 
+    /// [`Self::run`] returning every declared output per frame, in
+    /// output-declaration order — the multi-terminal streaming surface.
+    pub fn run_all(&self, frames: Vec<Mat>) -> Result<(Vec<Vec<Mat>>, PipelineStats)> {
+        let envs: Vec<FrameEnv> = frames
+            .into_iter()
+            .map(|f| FrameEnv::pooled(f, self.pool.clone()))
+            .collect();
+        let (outs, stats) = self.pipeline.run(envs)?;
+        let bundles = outs
+            .into_iter()
+            .map(|e| e.into_outputs(&self.terminal_steps))
+            .collect::<Result<Vec<Vec<Mat>>>>()?;
+        Ok((bundles, stats))
+    }
+
     /// Blocking single-frame path (the off-load wrapper's synchronous
-    /// contract).
+    /// contract): the primary output.
     pub fn process_one(&self, frame: Mat) -> Result<Mat> {
+        let env = self.pipeline.process_one(FrameEnv::pooled(frame, self.pool.clone()))?;
+        self.primary_of(env)
+    }
+
+    /// [`Self::process_one`] returning the full ordered output bundle.
+    pub fn process_one_all(&self, frame: Mat) -> Result<Vec<Mat>> {
         self.pipeline
             .process_one(FrameEnv::pooled(frame, self.pool.clone()))?
-            .into_output(self.terminal_step)
+            .into_outputs(&self.terminal_steps)
     }
 
-    /// [`Self::process_one`] with span tracing under an explicit frame
-    /// id ([`crate::obs::frame_id`]) — the serving scheduler's frame
-    /// path, so every stage span lands in the sink tagged with the
-    /// session/sequence pair it served.
-    pub fn process_one_traced(&self, frame: Mat, frame_id: u64) -> Result<Mat> {
+    /// [`Self::process_one_all`] with span tracing under an explicit
+    /// frame id ([`crate::obs::frame_id`]) — the serving scheduler's
+    /// frame path, so every stage span lands in the sink tagged with the
+    /// session/sequence pair it served.  Returns the ordered output
+    /// bundle; single-output sessions see a one-element vec.
+    pub fn process_one_traced(&self, frame: Mat, frame_id: u64) -> Result<Vec<Mat>> {
         self.pipeline
             .process_one_traced(FrameEnv::pooled(frame, self.pool.clone()), frame_id)?
-            .into_output(self.terminal_step)
+            .into_outputs(&self.terminal_steps)
     }
 
-    /// Verify this pipeline's terminal buffer really is `program`'s
-    /// declared output.  The trace alone cannot distinguish a trailing
-    /// dead branch from the real output (the builder picks the final
-    /// call's buffer), so entry points that hold the source program
-    /// confirm the pick — a mismatch is a typed error instead of a
-    /// silently wrong stream.
+    /// Verify this pipeline's terminal buffers really are `program`'s
+    /// declared outputs, in order.  The trace alone cannot distinguish a
+    /// trailing dead branch from the real output (the builder falls back
+    /// to the final call's buffer), so entry points that hold the source
+    /// program confirm the pick — a mismatch is a typed error instead of
+    /// a silently wrong stream.
     pub fn check_output_matches(&self, program: &crate::app::Program) -> Result<()> {
-        if program.outputs.len() > 1 {
+        let declared = declared_output_steps(program);
+        if declared.len() != program.outputs.len() {
             return Err(CourierError::Dag(format!(
-                "program {}: declares {} outputs; the pipeline streams exactly one \
-                 buffer per frame",
-                program.name,
-                program.outputs.len()
+                "program {}: an output is not produced by any call step \
+                 (inputs cannot be declared outputs)",
+                program.name
             )));
         }
-        match declared_output_step(program) {
-            Some(step) if step != self.terminal_step => Err(CourierError::Dag(format!(
-                "program {}: declared output is produced by step {step} but the \
-                 pipeline terminates at step {}; drop the trailing call(s) from \
-                 the IR or make the output the final call",
-                program.name, self.terminal_step
-            ))),
-            _ => Ok(()),
+        if declared.is_empty() || declared == self.terminal_steps {
+            return Ok(());
         }
+        Err(CourierError::Dag(format!(
+            "program {}: declared outputs are produced by steps {declared:?} but \
+             the pipeline terminates at steps {:?}; drop the trailing call(s) \
+             from the IR or declare the final call as an output",
+            program.name, self.terminal_steps
+        )))
     }
 }
 
-/// The call-site step producing `program`'s declared output, if the
-/// output is a call result.
+/// The call-site step producing `program`'s (last) declared output, if
+/// the output is a call result — the pre-multi-output accessor, kept for
+/// single-output tooling.
 pub fn declared_output_step(program: &crate::app::Program) -> Option<usize> {
     let out = program.outputs.last()?;
     program.steps.iter().position(|s| &s.dst == out)
+}
+
+/// Every declared output's producing call step, in declaration order.
+/// Output names with no producing call (e.g. an input) are skipped — the
+/// callers that must reject that compare lengths against
+/// `program.outputs`.
+pub fn declared_output_steps(program: &crate::app::Program) -> Vec<usize> {
+    program
+        .outputs
+        .iter()
+        .filter_map(|out| program.steps.iter().position(|s| &s.dst == out))
+        .collect()
 }
 
 /// Where one task argument comes from.
@@ -213,6 +283,12 @@ struct ArgRef {
 /// One placed task inside a stage filter.
 enum BoundTask {
     Sw(crate::swlib::FuncEntry),
+    /// A scalar-parameterized software kernel with its per-frame
+    /// constants resolved at bind time (Courier-Script `const` values at
+    /// the call site).  Always software: the fabric bakes constants at
+    /// synthesis, so a scalar-bearing call never places on hardware and
+    /// never joins a fused run.
+    SwScalar(crate::swlib::ScalarEntry, Vec<f64>),
     Hw(Arc<Executable>),
 }
 
@@ -295,6 +371,30 @@ impl BuiltStage {
                     match (&entry.pooled, pool) {
                         (Some(pf), Some(p)) => pf(&refs, p)?,
                         _ => (entry.f)(&refs)?,
+                    }
+                };
+                if let Some(p) = pool {
+                    for m in owned {
+                        p.release(m);
+                    }
+                }
+                Ok(out)
+            }
+            BoundTask::SwScalar(entry, scalars) => {
+                if let Some(inj) = &self.injector {
+                    let plan = inj.plan_sw(&task.symbol);
+                    if !plan.jitter.is_zero() {
+                        std::thread::sleep(plan.jitter);
+                    }
+                    if plan.fault == Some(FaultKind::SwPanic) {
+                        panic!("injected: software task {} panicked", task.symbol);
+                    }
+                }
+                let out = {
+                    let refs: Vec<&Mat> = owned.iter().collect();
+                    match (&entry.pooled, pool) {
+                        (Some(pf), Some(p)) => pf(&refs, scalars, p)?,
+                        _ => (entry.f)(&refs, scalars)?,
                     }
                 };
                 if let Some(p) = pool {
@@ -691,7 +791,10 @@ pub fn plan_pipeline(
     for (i, f) in ir.funcs.iter().enumerate() {
         let shapes = &input_shapes[i];
         let shape_refs: Vec<&[usize]> = shapes.iter().map(|s| s.as_slice()).collect();
-        let hit = if cfg.cpu_only || f.placement == Placement::Cpu {
+        // scalar-bearing calls are software-only: the fabric bakes its
+        // constants at synthesis time, so a per-frame scalar can never
+        // reach a placed module — the lookup is skipped entirely
+        let hit = if cfg.cpu_only || f.placement == Placement::Cpu || !f.scalars.is_empty() {
             None
         } else if cfg.include_disabled_modules {
             db.lookup_any(&f.symbol, &shape_refs)
@@ -741,6 +844,7 @@ pub fn plan_pipeline(
                         // the freed area and power
                         sw_alt_ns: f.mean_ns,
                     }),
+                    scalars: Vec::new(),
                 });
             }
             (None, Placement::Hw) => {
@@ -751,7 +855,12 @@ pub fn plan_pipeline(
                 )));
             }
             (None, _) => {
-                if !registry.contains(&f.symbol) {
+                let known = if f.scalars.is_empty() {
+                    registry.contains(&f.symbol)
+                } else {
+                    registry.contains_scalar(&f.symbol)
+                };
+                if !known {
                     return Err(CourierError::UnknownSymbol(format!(
                         "{} has neither a hardware module nor a CPU implementation",
                         f.symbol
@@ -763,6 +872,7 @@ pub fn plan_pipeline(
                     kind: TaskKind::Sw,
                     est_ns: f.mean_ns,
                     hw_cost: None,
+                    scalars: f.scalars.clone(),
                 });
             }
         }
@@ -802,7 +912,7 @@ pub fn plan_pipeline(
             serial: idx == 0 || idx == n_stages - 1,
         })
         .collect();
-    let plan = StagePlan {
+    let mut plan = StagePlan {
         program: ir.program.clone(),
         threads: cfg.threads,
         tokens: cfg.tokens,
@@ -810,8 +920,19 @@ pub fn plan_pipeline(
         // linear chains store no explicit edges: their serialized plans
         // stay byte-identical to the pre-DAG format
         edges: if ir.is_chain() { Vec::new() } else { step_edges },
+        outputs: ir.outputs.clone(),
         stages,
     };
+    // a single declared output that IS the flow's natural terminal keeps
+    // the legacy plan shape (and byte-identical serialized form); only a
+    // genuinely multi-terminal or redirected egress records the set
+    if plan.outputs.len() == 1 {
+        let declared = plan.outputs[0];
+        plan.outputs.clear();
+        if plan.terminal_steps() != [declared] {
+            plan.outputs = vec![declared];
+        }
+    }
     plan.validate_dag()?;
 
     // -- fabric area budget -------------------------------------------------
@@ -912,17 +1033,21 @@ pub fn instantiate_with(
         }
     }
 
-    // the terminal output: the highest produced step nobody consumes
+    // the terminal outputs: the plan's declared set in output order, or
+    // (legacy single-output inference) the highest produced step nobody
+    // consumes.  Terminal buffers are exempt from every move/GC rule
+    // below — each one must survive in the frame environment to egress.
     let consumed: std::collections::HashSet<usize> =
         edges.iter().filter_map(|(p, _)| *p).collect();
-    let terminal_step = flat
-        .iter()
-        .map(|t| t.out_step)
-        .filter(|s| !consumed.contains(s))
-        .max()
-        .ok_or_else(|| {
-            CourierError::Dag(format!("plan {}: no terminal output step", plan.program))
-        })?;
+    let terminal_steps = plan.terminal_steps();
+    if terminal_steps.is_empty() {
+        return Err(CourierError::Dag(format!(
+            "plan {}: no terminal output step",
+            plan.program
+        )));
+    }
+    let terminal_set: std::collections::HashSet<usize> =
+        terminal_steps.iter().copied().collect();
 
     // per-task incoming args, in edge (== argument) order.  Fused tasks
     // may only be fed through their first cover — interior covers are
@@ -966,6 +1091,11 @@ pub fn instantiate_with(
         Ok(args)
     };
     let all_args: Vec<Vec<Source>> = flat.iter().map(incoming_of).collect::<Result<_>>()?;
+
+    // whether a source may ever be moved out of the environment: a
+    // declared output that is ALSO consumed downstream must be cloned at
+    // its last consumer, never taken — egress still needs the buffer
+    let movable = |src: &Source| !matches!(src, Source::Step(s) if terminal_set.contains(s));
 
     // last use of every source in flat execution order — at *argument
     // occurrence* granularity, because one buffer may legally be wired
@@ -1017,8 +1147,13 @@ pub fn instantiate_with(
         // `Registry::compose_chain` substitutes a registered mega-kernel
         // (e.g. the gray→response Harris kernel) when one covers the
         // exact run.
+        // scalar-bearing tasks never join a run: the composed callables
+        // (and the fused mega-kernels they may substitute) take no
+        // scalar channel, so collapsing one would drop its constants
         let fusable = |t: &TaskSpec| -> bool {
-            matches!(t.kind, TaskKind::Sw) && registry.link_intact(&t.symbol)
+            matches!(t.kind, TaskKind::Sw)
+                && t.scalars.is_empty()
+                && registry.link_intact(&t.symbol)
         };
         let mut runs: Vec<Vec<usize>> = Vec::new();
         for branch in &stage_branches[si] {
@@ -1038,7 +1173,7 @@ pub fn instantiate_with(
                             && next_unary
                             && all_args[fi_base + tn] == [Source::Step(link)]
                             && consumer_uses(link) == 1
-                            && link != terminal_step
+                            && !terminal_set.contains(&link)
                         {
                             run.push(tn);
                         } else {
@@ -1067,7 +1202,7 @@ pub fn instantiate_with(
                     .enumerate()
                     .map(|(ai, src)| ArgRef {
                         source: *src,
-                        take: last_occurrence.get(src) == Some(&(fi0, ai)),
+                        take: movable(src) && last_occurrence.get(src) == Some(&(fi0, ai)),
                     })
                     .collect();
                 if entry.arity == args.len() {
@@ -1089,6 +1224,20 @@ pub fn instantiate_with(
                 let task = &stage.tasks[ti];
                 let fit = fi_base + ti;
                 let bound = match &task.kind {
+                    TaskKind::Sw if !task.scalars.is_empty() => {
+                        let entry = registry.resolve_scalar(&task.symbol)?.clone();
+                        if entry.nscalars != task.scalars.len() {
+                            return Err(CourierError::Dag(format!(
+                                "plan {}: {} takes {} scalar constants but the plan \
+                                 carries {}",
+                                plan.program,
+                                task.symbol,
+                                entry.nscalars,
+                                task.scalars.len()
+                            )));
+                        }
+                        BoundTask::SwScalar(entry, task.scalars.clone())
+                    }
                     TaskKind::Sw => BoundTask::Sw(registry.resolve(&task.symbol)?.clone()),
                     TaskKind::Hw { artifact, .. } => {
                         BoundTask::Hw(loaded[artifact.as_str()].clone())
@@ -1102,22 +1251,28 @@ pub fn instantiate_with(
                         // the final occurrence moves the buffer out of the
                         // environment — on the sequential path directly, on
                         // the fork-join path via the coordinating thread's
-                        // move-aware prefetch
-                        take: last_occurrence.get(src) == Some(&(fit, ai)),
+                        // move-aware prefetch; terminal buffers are never
+                        // moved (egress reads them after the last stage)
+                        take: movable(src) && last_occurrence.get(src) == Some(&(fit, ai)),
                     })
                     .collect();
                 // arity must match the wiring exactly — a collapsed or
                 // missing edge (e.g. two external inputs deduplicated by
                 // the tracer) would otherwise call the function with the
                 // wrong argument count at runtime
-                if let BoundTask::Sw(entry) = &bound {
-                    if entry.arity != args.len() {
+                let bound_arity = match &bound {
+                    BoundTask::Sw(entry) => Some(entry.arity),
+                    BoundTask::SwScalar(entry, _) => Some(entry.arity),
+                    BoundTask::Hw(_) => None,
+                };
+                if let Some(arity) = bound_arity {
+                    if arity != args.len() {
                         return Err(CourierError::Dag(format!(
                             "plan {}: {} takes {} arguments but the dataflow wires {} \
                              (multi-external-input flows are unsupported)",
                             plan.program,
                             task.symbol,
-                            entry.arity,
+                            arity,
                             args.len()
                         )));
                     }
@@ -1149,19 +1304,19 @@ pub fn instantiate_with(
             .collect();
 
         // buffers that die here: last consumed in this stage, or produced
-        // here and never consumed at all (dead branches) — never the
-        // terminal output
+        // here and never consumed at all (dead branches) — never a
+        // terminal output (every declared output survives to egress)
         let mut drop_after: Vec<usize> = Vec::new();
         for (src, &ls) in &last_use_stage {
             if let Source::Step(s) = src {
-                if ls == si && *s != terminal_step {
+                if ls == si && !terminal_set.contains(s) {
                     drop_after.push(*s);
                 }
             }
         }
         for t in &bound_tasks {
             let s = t.out_step;
-            if s != terminal_step && !consumed.contains(&s) && !drop_after.contains(&s) {
+            if !terminal_set.contains(&s) && !consumed.contains(&s) && !drop_after.contains(&s) {
                 drop_after.push(s);
             }
         }
@@ -1241,7 +1396,7 @@ pub fn instantiate_with(
         plan: plan.clone(),
         pipeline,
         control_program,
-        terminal_step,
+        terminal_steps,
         pool,
         sink,
         task_keys: Vec::new(),
@@ -1292,9 +1447,11 @@ pub fn primary_input_shapes(ir: &Ir) -> Result<Vec<Vec<usize>>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::app::{corner_harris_demo, fanout_demo, harris_dag_demo};
+    use crate::app::{
+        corner_harris_demo, fanout_demo, gaussian_pyramid_demo, harris_dag_demo, morphology_demo,
+    };
     use crate::image::synth;
-    use crate::swlib::{FUSED_CVT_HARRIS, FUSED_SOBEL_PAIR};
+    use crate::swlib::{FUSED_CVT_HARRIS, FUSED_MORPH_PAIR, FUSED_SOBEL_PAIR};
     use crate::trace::{trace_program, CallGraph};
 
     fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -1304,7 +1461,9 @@ mod tests {
 
     fn ir_of(prog: &crate::app::Program, h: usize, w: usize) -> Ir {
         let t = trace_program(prog, &[vec![synth::noise_rgb(h, w, 0)]]).unwrap();
-        Ir::from_graph(&CallGraph::from_trace(&t)).unwrap()
+        let mut ir = Ir::from_graph(&CallGraph::from_trace(&t)).unwrap();
+        ir.set_outputs_from(prog).unwrap();
+        ir
     }
 
     fn demo_ir(h: usize, w: usize) -> Ir {
@@ -1555,6 +1714,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
                 StageSpec { index: 1, serial: false, tasks: tasks[1..3].to_vec() },
@@ -1601,6 +1761,115 @@ mod tests {
     }
 
     #[test]
+    fn gaussian_pyramid_demo_streams_ordered_output_bundles() {
+        // the tentpole proof: three declared outputs across three pyramid
+        // levels (imbalanced branches, shape-halving pyrDown steps), every
+        // bundle bit-identical to the interpreter in declaration order
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config {
+            artifacts_dir: db.dir().to_path_buf(),
+            threads: 2,
+            tokens: 2,
+            ..Default::default()
+        };
+        let prog = gaussian_pyramid_demo(24, 32);
+        let ir = ir_of(&prog, 24, 32);
+        let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+        built.check_output_matches(&prog).unwrap();
+        built.plan.validate_dag().unwrap();
+        assert_eq!(built.terminal_steps, vec![2, 4, 6]);
+        assert_eq!(built.plan.outputs, vec![2, 4, 6]);
+        assert!(built.control_program.contains("egress bundle(step_2, step_4, step_6)"));
+
+        let interp = crate::app::Interpreter::new(
+            prog,
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        let frame = synth::noise_rgb(24, 32, 5);
+        let want = interp.run(&[frame.clone()]).unwrap();
+        let got = built.process_one_all(frame.clone()).unwrap();
+        assert_eq!(got.len(), 3);
+        // pyramid shapes: full-res edges, half-res detail, quarter-res peaks
+        assert_eq!(got[0].shape(), &[24, 32]);
+        assert_eq!(got[1].shape(), &[12, 16]);
+        assert_eq!(got[2].shape(), &[6, 8]);
+        assert_eq!(got, want, "bundle must be bit-identical to the interpreter");
+        // single-Mat surfaces stream the primary (first declared) output
+        assert_eq!(built.process_one(frame).unwrap(), want[0]);
+
+        // streamed: one ordered bundle per frame
+        let frames: Vec<Mat> = (0..6).map(|s| synth::noise_rgb(24, 32, 40 + s)).collect();
+        let (bundles, stats) = built.run_all(frames.clone()).unwrap();
+        assert_eq!(stats.frames, 6);
+        for (i, f) in frames.into_iter().enumerate() {
+            assert_eq!(bundles[i], interp.run(&[f]).unwrap(), "frame {i}");
+        }
+
+        // the shape-halving levels recycle through smaller capacity
+        // classes: once warm, another identical stream allocates nothing
+        let warm_misses = built.pool.stats().misses;
+        let more: Vec<Mat> = (0..6).map(|s| synth::noise_rgb(24, 32, 80 + s)).collect();
+        built.run_all(more).unwrap();
+        assert_eq!(
+            built.pool.stats().misses,
+            warm_misses,
+            "steady-state pyramid stream must not allocate"
+        );
+    }
+
+    #[test]
+    fn morphology_demo_fuses_the_sibling_pair_and_outputs_both() {
+        // two declared outputs that are exactly a sibling fork: regrouped
+        // so erode/dilate share a stage, the builder must bind the
+        // one-walk pair kernel and still egress both terminals bit-exactly
+        let (_tmp, db, rt, registry) = hermetic();
+        let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
+        let prog = morphology_demo(16, 20);
+        let built = build(&ir_of(&prog, 16, 20), &db, &rt, &registry, &cfg).unwrap();
+        built.check_output_matches(&prog).unwrap();
+        assert_eq!(built.terminal_steps, vec![2, 3]);
+
+        let tasks: Vec<TaskSpec> = built
+            .plan
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter().cloned())
+            .collect();
+        assert_eq!(tasks.len(), 4);
+        let regrouped = StagePlan {
+            program: built.plan.program.clone(),
+            threads: 2,
+            tokens: 2,
+            bands: 1,
+            edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
+            stages: vec![
+                StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
+                StageSpec { index: 1, serial: true, tasks: tasks[2..4].to_vec() },
+            ],
+        };
+        regrouped.validate_dag().unwrap();
+        let fj = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
+        assert_eq!(
+            fj.pipeline.stage_labels()[1],
+            FUSED_MORPH_PAIR,
+            "{:?}",
+            fj.pipeline.stage_labels()
+        );
+
+        let interp = crate::app::Interpreter::new(
+            prog,
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        for seed in 0..3u64 {
+            let frame = synth::noise_rgb(16, 20, seed);
+            let want = interp.run(&[frame.clone()]).unwrap();
+            assert_eq!(want.len(), 2);
+            assert_eq!(fj.process_one_all(frame).unwrap(), want, "seed {seed}");
+        }
+    }
+
+    #[test]
     fn sw_chain_inside_fork_join_branch_fuses() {
         // one fork-join stage whose second branch is a two-task chain:
         // the in-branch run must bind as a composed callable (the old
@@ -1635,6 +1904,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
                 StageSpec { index: 1, serial: false, tasks: tasks[1..4].to_vec() },
@@ -1703,6 +1973,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
                 StageSpec { index: 1, serial: false, tasks: tasks[1..4].to_vec() },
@@ -1758,6 +2029,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
                 StageSpec { index: 1, serial: true, tasks: tasks[2..4].to_vec() },
@@ -1818,6 +2090,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![StageSpec { index: 0, serial: true, tasks }],
         };
         let fused = instantiate(&regrouped, db.dir(), &rt, &registry).unwrap();
@@ -1874,6 +2147,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![StageSpec { index: 0, serial: true, tasks }],
         };
         registry.register(
@@ -1924,6 +2198,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
                 StageSpec { index: 1, serial: true, tasks: tasks[2..4].to_vec() },
@@ -1985,6 +2260,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..2].to_vec() },
                 StageSpec { index: 1, serial: true, tasks: tasks[2..4].to_vec() },
@@ -2027,6 +2303,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
                 StageSpec { index: 1, serial: false, tasks: tasks[1..3].to_vec() },
@@ -2123,12 +2400,13 @@ mod tests {
     }
 
     #[test]
-    fn output_not_last_call_is_caught_by_the_program_check() {
+    fn output_not_last_call_streams_the_declared_buffer() {
         // mirror of fanout_demo: the *declared* output is the blur, and a
-        // dead Sobel branch runs after it.  The trace alone cannot tell
-        // which unconsumed buffer is the output — the builder picks the
-        // final call — so the program-aware check must reject the build
-        // instead of letting the pipeline stream the wrong buffer.
+        // dead Sobel branch runs after it.  With the declared terminal
+        // set bound onto the IR the builder redirects egress to the blur
+        // — the dead branch still runs (it is in the trace) but its
+        // buffer is dropped, and the stream is bit-exact with the
+        // interpreter's declared output.
         let (_tmp, db, rt, registry) = hermetic();
         let cfg = Config { artifacts_dir: db.dir().to_path_buf(), ..Default::default() };
         let prog = crate::app::parse_program(
@@ -2140,13 +2418,29 @@ mod tests {
              output out\n",
         )
         .unwrap();
-        let built = build(&ir_of(&prog, 16, 16), &db, &rt, &registry, &cfg).unwrap();
         assert_eq!(
             crate::pipeline::declared_output_step(&prog),
             Some(1),
             "output is the blur at step 1"
         );
-        let err = built.check_output_matches(&prog).unwrap_err();
+        let built = build(&ir_of(&prog, 16, 16), &db, &rt, &registry, &cfg).unwrap();
+        assert_eq!(built.terminal_steps, vec![1]);
+        built.check_output_matches(&prog).unwrap();
+        let frame = synth::noise_rgb(16, 16, 11);
+        let interp = crate::app::Interpreter::new(
+            prog.clone(),
+            std::sync::Arc::new(crate::app::RegistryDispatch::standard()),
+        );
+        let want = interp.run(&[frame.clone()]).unwrap().remove(0);
+        assert_eq!(built.process_one(frame).unwrap(), want);
+
+        // a trace-only IR (no declared set bound — the legacy path) still
+        // infers the final call and the program-aware check rejects it
+        let t = trace_program(&prog, &[vec![synth::noise_rgb(16, 16, 0)]]).unwrap();
+        let bare = Ir::from_graph(&CallGraph::from_trace(&t)).unwrap();
+        let built_bare = build(&bare, &db, &rt, &registry, &cfg).unwrap();
+        assert_eq!(built_bare.terminal_steps, vec![2]);
+        let err = built_bare.check_output_matches(&prog).unwrap_err();
         assert!(matches!(err, CourierError::Dag(_)), "{err}");
         // whereas the well-formed fan-out (output == final call) passes
         let prog2 = fanout_demo(16, 16);

@@ -27,8 +27,8 @@ mod sim;
 mod tbb;
 
 pub use builder::{
-    build, build_calibrated, declared_output_step, func_input_shapes, instantiate,
-    instantiate_with, plan_pipeline, primary_input_shapes, BuiltPipeline, FrameEnv,
+    build, build_calibrated, declared_output_step, declared_output_steps, func_input_shapes,
+    instantiate, instantiate_with, plan_pipeline, primary_input_shapes, BuiltPipeline, FrameEnv,
 };
 pub use codegen::render_control_program;
 pub use partition::{

@@ -48,7 +48,7 @@ pub struct HwCost {
 }
 
 /// One task: a library function placed on CPU or fabric.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TaskSpec {
     /// Original call-site step(s) this task covers.
     pub covers: Vec<usize>,
@@ -61,7 +61,16 @@ pub struct TaskSpec {
     pub est_ns: u64,
     /// PPA + DMA footprint (hardware tasks only; see [`HwCost`]).
     pub hw_cost: Option<HwCost>,
+    /// Per-frame scalar constants bound at the call site (Courier-Script
+    /// `const` values; empty for plain calls).  Scalar-bearing tasks are
+    /// software-only and never fuse — the AOT hardware modules bake
+    /// their constants at synthesis.
+    pub scalars: Vec<f64>,
 }
+
+// Scalars are parsed literals, never NaN in practice, so plans stay
+// usable as `Eq` fixtures.
+impl Eq for TaskSpec {}
 
 impl TaskSpec {
     /// Calibration key for this task over its input shape (placement is
@@ -277,6 +286,12 @@ pub struct StagePlan {
     /// pre-DAG wiring), which keeps linear plans' JSON byte-identical;
     /// use [`Self::effective_edges`] to read the wiring either way.
     pub edges: Vec<PlanEdge>,
+    /// Declared terminal steps in output order (multi-output programs).
+    /// **Empty means "infer the single terminal"** — the largest produced
+    /// step no task consumes, the pre-multi-output behaviour — which
+    /// keeps legacy plans' JSON byte-identical; use
+    /// [`Self::terminal_steps`] to read the terminal set either way.
+    pub outputs: Vec<usize>,
     /// Stages in order.
     pub stages: Vec<StageSpec>,
 }
@@ -316,6 +331,24 @@ impl StagePlan {
     /// Is this plan wired as a simple linear chain?
     pub fn is_chain(&self) -> bool {
         self.edges.is_empty() || self.edges == self.chain_edges()
+    }
+
+    /// The terminal steps the built pipeline must egress, in output
+    /// order: the declared set when the program named its outputs, else
+    /// the single inferred terminal — the largest covered step no edge
+    /// consumes (the pre-multi-output rule).
+    pub fn terminal_steps(&self) -> Vec<usize> {
+        if !self.outputs.is_empty() {
+            return self.outputs.clone();
+        }
+        let consumed_as_input: std::collections::HashSet<usize> =
+            self.effective_edges().iter().filter_map(|(p, _)| *p).collect();
+        self.flat_covers()
+            .into_iter()
+            .filter(|s| !consumed_as_input.contains(s))
+            .max()
+            .into_iter()
+            .collect()
     }
 
     /// Check DAG legality of the plan's wiring: every referenced step is
@@ -376,6 +409,26 @@ impl StagePlan {
                      the fused task's final output is exposed",
                     self.program
                 )));
+            }
+        }
+        // every declared output must be covered, and must be a task's
+        // final cover (a fused task only exposes its final output)
+        for (i, o) in self.outputs.iter().enumerate() {
+            match pos.get(o) {
+                None => {
+                    return Err(crate::CourierError::Dag(format!(
+                        "plan {}: declared output #{i} (step {o}) is not covered by any task",
+                        self.program
+                    )))
+                }
+                Some(&(_, is_last)) if !is_last => {
+                    return Err(crate::CourierError::Dag(format!(
+                        "plan {}: declared output #{i} (step {o}) is an interior cover of a \
+                         fused task; only the fused task's final output is exposed",
+                        self.program
+                    )))
+                }
+                Some(_) => {}
             }
         }
         Ok(())
@@ -565,6 +618,15 @@ impl StagePlan {
                             ("kind", kind),
                             ("est_ns", Json::Num(t.est_ns as f64)),
                         ];
+                        // scalar-less tasks omit the field: their
+                        // serialization must stay byte-identical to the
+                        // pre-Courier-Script format
+                        if !t.scalars.is_empty() {
+                            members.push((
+                                "scalars",
+                                Json::Arr(t.scalars.iter().map(|s| Json::Num(*s)).collect()),
+                            ));
+                        }
                         // sw tasks / legacy plans omit the field: their
                         // serialization must stay byte-identical to the
                         // pre-PPA format
@@ -624,6 +686,12 @@ impl StagePlan {
                 ),
             ));
         }
+        // single-inferred-terminal plans omit the field: their
+        // serialization must stay byte-identical to the pre-multi-output
+        // format
+        if !self.outputs.is_empty() {
+            members.push(("outputs", Json::from_usizes(&self.outputs)));
+        }
         members.push(("stages", Json::Arr(stages)));
         Json::obj(members).to_string_pretty()
     }
@@ -664,12 +732,19 @@ impl StagePlan {
                             }),
                             None => None,
                         };
+                        let scalars = match tv.get("scalars") {
+                            Some(arr) => {
+                                arr.as_arr()?.iter().map(Json::as_f64).collect::<Result<_>>()?
+                            }
+                            None => Vec::new(),
+                        };
                         Ok(TaskSpec {
                             covers: tv.req("covers")?.as_usize_vec()?,
                             symbol: tv.req("symbol")?.as_str()?.to_string(),
                             kind,
                             est_ns: tv.req("est_ns")?.as_u64()?,
                             hw_cost,
+                            scalars,
                         })
                     })
                     .collect::<Result<_>>()?;
@@ -703,6 +778,10 @@ impl StagePlan {
                 None => 1,
             },
             edges,
+            outputs: match v.get("outputs") {
+                Some(o) => o.as_usize_vec()?,
+                None => Vec::new(),
+            },
             stages,
         })
     }
@@ -719,6 +798,7 @@ pub(crate) mod tests {
             tokens: 4,
             bands: 1,
             edges: Vec::new(),
+            outputs: Vec::new(),
             stages: vec![
                 StageSpec {
                     index: 0,
@@ -732,6 +812,7 @@ pub(crate) mod tests {
                         },
                         est_ns: 39_800_000,
                         hw_cost: None,
+                        scalars: Vec::new(),
                     }],
                 },
                 StageSpec {
@@ -746,6 +827,7 @@ pub(crate) mod tests {
                         },
                         est_ns: 13_600_000,
                         hw_cost: None,
+                        scalars: Vec::new(),
                     }],
                 },
                 StageSpec {
@@ -758,6 +840,7 @@ pub(crate) mod tests {
                             kind: TaskKind::Sw,
                             est_ns: 80_200_000,
                             hw_cost: None,
+                            scalars: Vec::new(),
                         },
                         TaskSpec {
                             covers: vec![3],
@@ -768,6 +851,7 @@ pub(crate) mod tests {
                             },
                             est_ns: 13_200_000,
                             hw_cost: None,
+                            scalars: Vec::new(),
                         },
                     ],
                 },
@@ -919,6 +1003,7 @@ pub(crate) mod tests {
             kind: TaskKind::Sw,
             est_ns: ms * 1_000_000,
             hw_cost: None,
+            scalars: Vec::new(),
         };
         StagePlan {
             program: "harrisDag_Demo".into(),
@@ -933,6 +1018,7 @@ pub(crate) mod tests {
                 (Some(2), 3),
                 (Some(3), 4),
             ],
+            outputs: Vec::new(),
             stages: vec![
                 StageSpec {
                     index: 0,
@@ -965,6 +1051,7 @@ pub(crate) mod tests {
             kind: TaskKind::Sw,
             est_ns: ms * 1_000_000,
             hw_cost: None,
+            scalars: Vec::new(),
         };
         let p = StagePlan {
             program: "t".into(),
@@ -972,6 +1059,7 @@ pub(crate) mod tests {
             tokens: 4,
             bands: 1,
             edges: Vec::new(),
+            outputs: Vec::new(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: vec![sw(vec![0], 10), sw(vec![1], 30)] },
                 StageSpec { index: 1, serial: true, tasks: vec![sw(vec![2], 20)] },
@@ -1011,6 +1099,7 @@ pub(crate) mod tests {
             tokens: 4,
             bands: 1,
             edges: vec![(None, 0), (Some(0), 1), (Some(1), 2), (Some(0), 3)],
+            outputs: Vec::new(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: vec![sw(vec![0], 5)] },
                 StageSpec {
@@ -1093,6 +1182,7 @@ pub(crate) mod tests {
                 kind: TaskKind::Sw,
                 est_ns: 1,
                 hw_cost: None,
+                scalars: Vec::new(),
             }],
         });
         let err = p.validate_dag().unwrap_err();

@@ -317,6 +317,7 @@ pub fn paper_table1_plan() -> StagePlan {
         kind: TaskKind::Hw { module: module.into(), artifact: format!("{module}.hlo.txt") },
         est_ns: (ms * 1e6) as u64,
         hw_cost: None,
+        scalars: Vec::new(),
     };
     let sw = |covers: Vec<usize>, sym: &str, ms: f64| TaskSpec {
         covers,
@@ -324,6 +325,7 @@ pub fn paper_table1_plan() -> StagePlan {
         kind: TaskKind::Sw,
         est_ns: (ms * 1e6) as u64,
         hw_cost: None,
+        scalars: Vec::new(),
     };
     // paper policy over the Courier-column times [39.8, 13.6, 80.2, 13.2]
     // with threads=2 yields {cvt}, {harris}, {normalize, csa}
@@ -333,6 +335,7 @@ pub fn paper_table1_plan() -> StagePlan {
         tokens: 4,
         bands: 1,
         edges: Vec::new(),
+        outputs: Vec::new(),
         stages: vec![
             StageSpec {
                 index: 0,
@@ -368,6 +371,7 @@ mod tests {
             kind: TaskKind::Sw,
             est_ns: ms * 1_000_000,
             hw_cost: None,
+            scalars: Vec::new(),
         }
     }
 
@@ -378,6 +382,7 @@ mod tests {
             tokens: 4,
             bands: 1,
             edges: Vec::new(),
+            outputs: Vec::new(),
             stages: stage_ms
                 .iter()
                 .enumerate()
@@ -484,6 +489,7 @@ mod tests {
             kind: TaskKind::Sw,
             est_ns: ms * 1_000_000,
             hw_cost: None,
+            scalars: Vec::new(),
         };
         // two chained SW tasks colocated in one stage: the run binds as a
         // composed kernel at deploy time, so the link credit applies
@@ -493,6 +499,7 @@ mod tests {
             tokens: 1,
             bands: 1,
             edges: Vec::new(),
+            outputs: Vec::new(),
             stages: vec![StageSpec {
                 index: 0,
                 serial: true,
@@ -510,6 +517,7 @@ mod tests {
             tokens: 1,
             bands: 1,
             edges: Vec::new(),
+            outputs: Vec::new(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: vec![sw(0, 10)] },
                 StageSpec { index: 1, serial: true, tasks: vec![sw(1, 10)] },
@@ -576,6 +584,7 @@ mod tests {
             kind: TaskKind::Sw,
             est_ns: ms * 1_000_000,
             hw_cost: None,
+            scalars: Vec::new(),
         };
         let colocated = StagePlan {
             program: "t".into(),
@@ -583,6 +592,7 @@ mod tests {
             tokens: 1,
             bands: 1,
             edges: Vec::new(),
+            outputs: Vec::new(),
             stages: vec![StageSpec { index: 0, serial: true, tasks: vec![sw(0, 10), sw(1, 10)] }],
         };
         let off = SimModel { fusion_link_saving: 0.0, band_halo_overhead: BAND_HALO_OVERHEAD };
@@ -634,6 +644,7 @@ mod tests {
             kind: TaskKind::Hw { module: module.into(), artifact: "x".into() },
             est_ns: 10_000_000,
             hw_cost: None,
+            scalars: Vec::new(),
         };
         // two parallel-ish stages using the SAME module: fabric serializes
         let p = StagePlan {
@@ -642,6 +653,7 @@ mod tests {
             tokens: 8,
             bands: 1,
             edges: Vec::new(),
+            outputs: Vec::new(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: vec![hw("m0")] },
                 StageSpec { index: 1, serial: false, tasks: vec![hw("m0")] },

@@ -261,7 +261,10 @@ impl Server {
     ) -> Result<Arc<crate::pipeline::BuiltPipeline>> {
         let inputs = crate::app::synth_frames(program, cfg.trace_frames.max(1));
         let trace = trace_program(program, &inputs)?;
-        let ir = Ir::from_graph(&CallGraph::from_trace(&trace))?;
+        let mut ir = Ir::from_graph(&CallGraph::from_trace(&trace))?;
+        // bind the program's declared output set (multi-output tenants
+        // egress an ordered bundle per frame)
+        ir.set_outputs_from(program)?;
         // cold builds consume the persisted calibrated cost database
         // (when configured): measured corrections from earlier tune
         // runs move the partition cuts of every plan built here

@@ -224,6 +224,7 @@ mod tests {
             tokens: 1,
             bands: 1,
             edges: Vec::new(),
+            outputs: Vec::new(),
             stages: vec![],
         };
         let id: Box<dyn StageFilter<FrameEnv>> = Box::new(FnFilter {
@@ -236,7 +237,7 @@ mod tests {
             plan,
             pipeline,
             control_program: String::new(),
-            terminal_step: 0,
+            terminal_steps: vec![0],
             pool: Arc::new(crate::pipeline::BufferPool::new()),
             sink: Arc::new(crate::obs::TraceSink::new()),
             task_keys: Vec::new(),

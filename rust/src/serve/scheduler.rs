@@ -385,8 +385,14 @@ fn run_job(shared: &SchedShared, session: &Session, job: Job) {
 /// Run one frame through `pipeline` with worker-level panic containment:
 /// the ticket must always complete (or the client waits forever), the
 /// worker must survive, and any held fabric-slot guards must drop
-/// cleanly instead of being poisoned.
-fn run_contained(pipeline: &BuiltPipeline, frame: Mat, fid: u64, seq: u64) -> crate::Result<Mat> {
+/// cleanly instead of being poisoned.  The result is the ordered output
+/// bundle — one buffer per declared program output.
+fn run_contained(
+    pipeline: &BuiltPipeline,
+    frame: Mat,
+    fid: u64,
+    seq: u64,
+) -> crate::Result<Vec<Mat>> {
     catch_unwind(AssertUnwindSafe(|| pipeline.process_one_traced(frame, fid)))
         .unwrap_or_else(|panic| {
             Err(CourierError::Serve(format!(
@@ -404,7 +410,7 @@ fn finish(
     seq: u64,
     submitted: Instant,
     t0: Instant,
-    result: crate::Result<Mat>,
+    result: crate::Result<Vec<Mat>>,
 ) {
     session.stats.service.record(t0.elapsed());
     if result.is_ok() {

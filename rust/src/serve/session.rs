@@ -78,7 +78,9 @@ pub struct Session {
     /// Fabric-slot keys (sorted module names) this session's frames lock.
     hw_modules: Vec<String>,
     queue: BoundedQueue<Job>,
-    done: Mutex<HashMap<u64, Result<Mat>>>,
+    /// Finished frames: the ordered output bundle per ticket (one buffer
+    /// per declared program output; single-output programs see length 1).
+    done: Mutex<HashMap<u64, Result<Vec<Mat>>>>,
     done_cv: Condvar,
     next_seq: AtomicU64,
     closed: AtomicBool,
@@ -214,8 +216,17 @@ impl Session {
         }
     }
 
-    /// Block until the ticket's frame is done and take its output.
+    /// Block until the ticket's frame is done and take its primary
+    /// output (the first declared `output`; the only one for classic
+    /// single-output programs).  Multi-output tenants take the full
+    /// bundle with [`Self::wait_all`].
     pub fn wait(&self, ticket: Ticket) -> Result<Mat> {
+        self.wait_all(ticket).map(|mut outs| outs.remove(0))
+    }
+
+    /// Block until the ticket's frame is done and take its full output
+    /// bundle, in output-declaration order.
+    pub fn wait_all(&self, ticket: Ticket) -> Result<Vec<Mat>> {
         let mut done = self.done.lock().expect("session done lock");
         loop {
             if let Some(result) = done.remove(&ticket.seq) {
@@ -230,11 +241,19 @@ impl Session {
     }
 
     /// Convenience round trip: submit a whole window with backpressure,
-    /// wait for every output, return them in submit order.
+    /// wait for every primary output, return them in submit order.
     pub fn run_window(&self, frames: Vec<Mat>) -> Result<Vec<Mat>> {
         let tickets: Vec<Ticket> =
             frames.into_iter().map(|f| self.submit(f)).collect::<Result<_>>()?;
         tickets.into_iter().map(|t| self.wait(t)).collect()
+    }
+
+    /// [`Self::run_window`] delivering the full ordered output bundle per
+    /// frame — the multi-output tenant's round trip.
+    pub fn run_window_all(&self, frames: Vec<Mat>) -> Result<Vec<Vec<Mat>>> {
+        let tickets: Vec<Ticket> =
+            frames.into_iter().map(|f| self.submit(f)).collect::<Result<_>>()?;
+        tickets.into_iter().map(|t| self.wait_all(t)).collect()
     }
 
     // ---- scheduler side -------------------------------------------------
@@ -256,8 +275,8 @@ impl Session {
         job
     }
 
-    /// Deliver one finished job.
-    pub(crate) fn complete(&self, seq: u64, submitted: Instant, result: Result<Mat>) {
+    /// Deliver one finished job (the ordered output bundle).
+    pub(crate) fn complete(&self, seq: u64, submitted: Instant, result: Result<Vec<Mat>>) {
         self.stats.latency.record(submitted.elapsed());
         self.pipeline.sink.instant(EventKind::Egress, frame_id(self.id, seq), 0);
         match &result {

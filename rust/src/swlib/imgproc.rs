@@ -453,6 +453,45 @@ pub fn gaussian_blur_pooled(img: &Mat, pool: &BufferPool) -> Result<Mat> {
     Ok(out)
 }
 
+/// Gaussian pyramid downsample — `cv::pyrDown`: 3x3 Gaussian smooth
+/// then even-row/column decimation to `((h+1)/2, (w+1)/2)`.
+pub fn pyr_down(img: &Mat) -> Result<Mat> {
+    expect_gray(img, "pyr_down")?;
+    let blurred = gaussian_blur(img)?;
+    let mut out = Mat::zeros(&[(img.height() + 1) / 2, (img.width() + 1) / 2]);
+    decimate2_into(&blurred, &mut out);
+    Ok(out)
+}
+
+/// [`pyr_down`] with the blur intermediate and the half-size output drawn
+/// from the pool.  The shape-halving step is what exercises the pool's
+/// capacity-class downcycling: a retired full-size buffer recycles into
+/// the smaller class the next level acquires from.  Bitwise identical to
+/// the plain path ([`gaussian_blur_pooled`] is bitwise-stable, and
+/// decimation only copies).
+pub fn pyr_down_pooled(img: &Mat, pool: &BufferPool) -> Result<Mat> {
+    expect_gray(img, "pyr_down")?;
+    let blurred = gaussian_blur_pooled(img, pool)?;
+    let mut out = pool.acquire(&[(img.height() + 1) / 2, (img.width() + 1) / 2]);
+    decimate2_into(&blurred, &mut out);
+    pool.release(blurred);
+    Ok(out)
+}
+
+/// Keep every even row/column of `src` (`out` already has the pyramid
+/// shape, so the loop bounds are the decimated extents).
+fn decimate2_into(src: &Mat, out: &mut Mat) {
+    let (oh, ow) = (out.height(), out.width());
+    let w = src.width();
+    let s = src.as_slice();
+    let d = out.as_mut_slice();
+    for y in 0..oh {
+        for x in 0..ow {
+            d[y * ow + x] = s[2 * y * w + 2 * x];
+        }
+    }
+}
+
 /// 3x3 box filter — `cv::boxFilter` (mean when `normalize`).
 pub fn box_filter(img: &Mat, normalize: bool) -> Result<Mat> {
     let mut out = Mat::zeros(img.shape());
@@ -712,6 +751,111 @@ fn morph_row(op: MorphOp, r0: &[f32], r1: &[f32], r2: &[f32], drow: &mut [f32], 
         acc = op.fold(acc, r2[x]);
         acc = op.fold(acc, r2[x + 1]);
         drow[x] = acc;
+    }
+}
+
+/// Fused one-walk morphology pair — `cv::erode` + `cv::dilate` over one
+/// shared input: every 3x3 window is loaded once and folded into both the
+/// min and the max reduction.  The morphological-gradient fork (a flow
+/// branching the same smoothed image into erosion and dilation) pays one
+/// image walk instead of two; each accumulator folds its cells in
+/// [`morph_row`]'s reference order, so both outputs match their split
+/// kernels bit for bit.
+pub fn erode_dilate_into(img: &Mat, er: &mut Mat, di: &mut Mat) -> Result<()> {
+    expect_gray(img, "erode_dilate")?;
+    expect_out_shape(er, img.shape(), "erode_dilate er")?;
+    expect_out_shape(di, img.shape(), "erode_dilate di")?;
+    let (h, w) = (img.height(), img.width());
+    if h == 0 || w == 0 {
+        return Ok(());
+    }
+    let src = img.as_slice();
+    if h > 2 && w > 2 {
+        let simd = simd_enabled();
+        let ers = er.as_mut_slice();
+        let dis = di.as_mut_slice();
+        band_exec2(ers, dis, w, 1, h - 1, band_hint(), |y0, y1, ce, cd| {
+            for y in y0..y1 {
+                let r0 = &src[(y - 1) * w..y * w];
+                let r1 = &src[y * w..(y + 1) * w];
+                let r2 = &src[(y + 1) * w..(y + 2) * w];
+                let o = (y - y0) * w;
+                erode_dilate_row(r0, r1, r2, &mut ce[o..o + w], &mut cd[o..o + w], simd);
+            }
+        });
+    }
+    for (op, out) in [(MorphOp::Min, &mut *er), (MorphOp::Max, &mut *di)] {
+        let dst = out.as_mut_slice();
+        for x in 0..w {
+            dst[x] = morph_cell_clamped(img, op, 0, x);
+            dst[(h - 1) * w + x] = morph_cell_clamped(img, op, h - 1, x);
+        }
+        for y in 0..h {
+            dst[y * w] = morph_cell_clamped(img, op, y, 0);
+            dst[y * w + w - 1] = morph_cell_clamped(img, op, y, w - 1);
+        }
+    }
+    Ok(())
+}
+
+/// One interior row of the fused morphology pair: the nine window cells
+/// load once and fold into both reductions in [`morph_row`]'s order
+/// (seed `r0[x-1]`, which therefore folds twice into each accumulator).
+#[inline]
+fn erode_dilate_row(
+    r0: &[f32],
+    r1: &[f32],
+    r2: &[f32],
+    erow: &mut [f32],
+    drow: &mut [f32],
+    simd: bool,
+) {
+    let w = erow.len();
+    let mut x = 1usize;
+    if simd {
+        while x + LANES <= w - 1 {
+            let cells = [
+                F32x8::load(&r0[x - 1..]),
+                F32x8::load(&r0[x..]),
+                F32x8::load(&r0[x + 1..]),
+                F32x8::load(&r1[x - 1..]),
+                F32x8::load(&r1[x..]),
+                F32x8::load(&r1[x + 1..]),
+                F32x8::load(&r2[x - 1..]),
+                F32x8::load(&r2[x..]),
+                F32x8::load(&r2[x + 1..]),
+            ];
+            let mut mn = cells[0];
+            let mut mx = cells[0];
+            for c in cells {
+                mn = MorphOp::Min.fold_v(mn, c);
+                mx = MorphOp::Max.fold_v(mx, c);
+            }
+            mn.store(&mut erow[x..]);
+            mx.store(&mut drow[x..]);
+            x += LANES;
+        }
+    }
+    for x in x..w - 1 {
+        let cells = [
+            r0[x - 1],
+            r0[x],
+            r0[x + 1],
+            r1[x - 1],
+            r1[x],
+            r1[x + 1],
+            r2[x - 1],
+            r2[x],
+            r2[x + 1],
+        ];
+        let mut mn = cells[0];
+        let mut mx = cells[0];
+        for c in cells {
+            mn = MorphOp::Min.fold(mn, c);
+            mx = MorphOp::Max.fold(mx, c);
+        }
+        erow[x] = mn;
+        drow[x] = mx;
     }
 }
 
@@ -1503,6 +1647,46 @@ mod tests {
                 assert!(er.at2(y, x) <= img.at2(y, x));
                 assert!(di.at2(y, x) >= img.at2(y, x));
             }
+        }
+    }
+
+    #[test]
+    fn pyr_down_halves_shape_and_preserves_constant() {
+        let img = Mat::full(&[9, 12], 10.0);
+        let half = pyr_down(&img).unwrap();
+        assert_eq!(half.shape(), &[5, 6]);
+        assert!(half.max_abs_diff(&Mat::full(&[5, 6], 10.0)) < 1e-4);
+        // even-index decimation of the blurred image, exactly
+        let blurred = gaussian_blur(&synth::noise_gray(9, 12, 11)).unwrap();
+        let half = pyr_down(&synth::noise_gray(9, 12, 11)).unwrap();
+        for y in 0..5 {
+            for x in 0..6 {
+                assert_eq!(half.at2(y, x), blurred.at2(2 * y, 2 * x));
+            }
+        }
+    }
+
+    #[test]
+    fn pyr_down_pooled_matches_plain_bitwise() {
+        let pool = BufferPool::new();
+        for (h, w) in [(1usize, 1usize), (1, 7), (8, 8), (9, 11)] {
+            let img = synth::noise_gray(h, w, 13);
+            let plain = pyr_down(&img).unwrap();
+            let pooled = pyr_down_pooled(&img, &pool).unwrap();
+            assert_eq!(plain, pooled, "({h}, {w})");
+            pool.release(pooled);
+        }
+    }
+
+    #[test]
+    fn erode_dilate_pair_matches_split_kernels() {
+        for (h, w) in [(1usize, 1usize), (2, 9), (3, 3), (12, 17)] {
+            let img = synth::noise_gray(h, w, 7);
+            let mut er = Mat::zeros(img.shape());
+            let mut di = Mat::zeros(img.shape());
+            erode_dilate_into(&img, &mut er, &mut di).unwrap();
+            assert_eq!(er, erode(&img).unwrap(), "({h}, {w}) erode leg");
+            assert_eq!(di, dilate(&img).unwrap(), "({h}, {w}) dilate leg");
         }
     }
 

@@ -19,6 +19,6 @@ mod registry;
 pub mod simd;
 
 pub use registry::{
-    FuncEntry, PairEntry, Registry, SwFn, SwFnInPlace, SwFnPair, SwFnPooled, FUSED_CVT_HARRIS,
-    FUSED_SOBEL_PAIR,
+    FuncEntry, PairEntry, Registry, ScalarEntry, SwFn, SwFnInPlace, SwFnPair, SwFnPooled,
+    SwFnScalar, SwFnScalarPooled, FUSED_CVT_HARRIS, FUSED_MORPH_PAIR, FUSED_SOBEL_PAIR,
 };

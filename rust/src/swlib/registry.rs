@@ -60,6 +60,14 @@ pub type SwFnInPlace = Arc<dyn Fn(Mat) -> Result<Mat> + Send + Sync>;
 /// both siblings' outputs (same shape as the input) in a single pass.
 pub type SwFnPair = Arc<dyn Fn(&Mat, &mut Mat, &mut Mat) -> Result<()> + Send + Sync>;
 
+/// Scalar-parameterized library function: `Mat` buffers plus per-frame
+/// scalar constants (Courier-Script `const` values at the call site).
+pub type SwFnScalar = Arc<dyn Fn(&[&Mat], &[f64]) -> Result<Mat> + Send + Sync>;
+
+/// Pool-aware scalar form: output and scratch come from the pool.
+pub type SwFnScalarPooled =
+    Arc<dyn Fn(&[&Mat], &[f64], &BufferPool) -> Result<Mat> + Send + Sync>;
+
 /// The fused gray→response mega-kernel the builder selects when
 /// consecutive software tasks cover the whole `cvtColor → cornerHarris`
 /// chain inside one stage (same naming convention as the AOT module
@@ -70,6 +78,11 @@ pub const FUSED_CVT_HARRIS: &str = "cv::cvtColor+cv::cornerHarris";
 /// a fork-join stage holds exactly the two sibling gradients over one
 /// shared input ([`imgproc::sobel_xy_into`]).
 pub const FUSED_SOBEL_PAIR: &str = "cv::Sobel+cv::SobelY";
+
+/// Label of the fused one-walk erode+dilate pair the builder selects when
+/// a fork-join stage holds exactly the two morphology siblings over one
+/// shared input ([`imgproc::erode_dilate_into`]).
+pub const FUSED_MORPH_PAIR: &str = "cv::erode+cv::dilate";
 
 /// One resolvable library symbol.
 #[derive(Clone)]
@@ -118,6 +131,35 @@ impl std::fmt::Debug for FuncEntry {
     }
 }
 
+/// A scalar-parameterized resolvable symbol: the same library function
+/// with its baked-in constants lifted into call-site scalars.  Scalar
+/// entries live beside the plain table — a call with no scalars always
+/// resolves to the plain [`FuncEntry`], so existing traces and plans are
+/// untouched.
+#[derive(Clone)]
+pub struct ScalarEntry {
+    /// Fully qualified symbol, e.g. `cv::cornerHarris`.
+    pub symbol: String,
+    /// Number of `Mat` arguments.
+    pub arity: usize,
+    /// Number of scalar arguments.
+    pub nscalars: usize,
+    /// The callable.
+    pub f: SwFnScalar,
+    /// Optional pool-aware form (same numerics, pooled buffers).
+    pub pooled: Option<SwFnScalarPooled>,
+}
+
+impl std::fmt::Debug for ScalarEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScalarEntry")
+            .field("symbol", &self.symbol)
+            .field("arity", &self.arity)
+            .field("nscalars", &self.nscalars)
+            .finish()
+    }
+}
+
 /// A registered one-walk sibling-pair kernel: `f` computes what the two
 /// constituent unary kernels `(a, b)` would over one shared input, in a
 /// single image walk writing both outputs.
@@ -155,6 +197,8 @@ pub struct Registry {
     fusable: BTreeMap<String, SwFn>,
     /// Registered one-walk sibling-pair kernels.
     pairs: Vec<PairEntry>,
+    /// Scalar-parameterized forms, keyed by symbol.
+    scalar_map: BTreeMap<String, ScalarEntry>,
 }
 
 impl std::fmt::Debug for Registry {
@@ -194,6 +238,7 @@ impl Registry {
         r.register("cv::Laplacian", 1, Arc::new(|a: &[&Mat]| imgproc::laplacian(a[0])));
         r.register("cv::Scharr", 1, Arc::new(|a: &[&Mat]| imgproc::scharr(a[0])));
         r.register("cv::medianBlur", 1, Arc::new(|a: &[&Mat]| imgproc::median_blur(a[0])));
+        r.register("cv::pyrDown", 1, Arc::new(|a: &[&Mat]| imgproc::pyr_down(a[0])));
         r.register("cv::cornerHarris", 1, harris_f.clone());
         r.register(
             "cv::harrisResponse",
@@ -246,6 +291,10 @@ impl Registry {
         r.set_pooled("cv::Laplacian", pooled_unary(imgproc::laplacian_into));
         r.set_pooled("cv::Scharr", pooled_unary(imgproc::scharr_into));
         r.set_pooled("cv::medianBlur", pooled_unary(imgproc::median_blur_into));
+        r.set_pooled(
+            "cv::pyrDown",
+            Arc::new(|a: &[&Mat], p: &BufferPool| imgproc::pyr_down_pooled(a[0], p)),
+        );
         r.set_pooled(
             "cv::cornerHarris",
             Arc::new(|a: &[&Mat], p: &BufferPool| imgproc::corner_harris_pooled(a[0], HARRIS_K, p)),
@@ -310,6 +359,85 @@ impl Registry {
             }),
         );
 
+        // ---- scalar-parameterized forms (Courier-Script `const`) ------
+        // each is the same kernel as the plain entry with its baked-in
+        // constant lifted to a call-site scalar; the parity suite pins
+        // scalar(defaults) == plain
+        r.register_scalar(
+            "cv::cornerHarris",
+            1,
+            1,
+            Arc::new(|a: &[&Mat], s: &[f64]| imgproc::corner_harris(a[0], s[0] as f32)),
+        );
+        r.set_scalar_pooled(
+            "cv::cornerHarris",
+            Arc::new(|a: &[&Mat], s: &[f64], p: &BufferPool| {
+                imgproc::corner_harris_pooled(a[0], s[0] as f32, p)
+            }),
+        );
+        r.register_scalar(
+            "cv::harrisResponse",
+            2,
+            1,
+            Arc::new(|a: &[&Mat], s: &[f64]| imgproc::harris_response(a[0], a[1], s[0] as f32)),
+        );
+        r.set_scalar_pooled(
+            "cv::harrisResponse",
+            Arc::new(|a: &[&Mat], s: &[f64], p: &BufferPool| {
+                imgproc::harris_response_pooled(a[0], a[1], s[0] as f32, p)
+            }),
+        );
+        r.register_scalar(
+            "cv::threshold",
+            1,
+            2,
+            Arc::new(|a: &[&Mat], s: &[f64]| imgproc::threshold(a[0], s[0] as f32, s[1] as f32)),
+        );
+        r.set_scalar_pooled(
+            "cv::threshold",
+            Arc::new(|a: &[&Mat], s: &[f64], p: &BufferPool| {
+                let mut out = p.acquire_cloned(a[0]);
+                imgproc::threshold_mut(&mut out, s[0] as f32, s[1] as f32)?;
+                Ok(out)
+            }),
+        );
+        r.register_scalar(
+            "cv::normalize",
+            1,
+            2,
+            Arc::new(|a: &[&Mat], s: &[f64]| imgproc::normalize(a[0], s[0] as f32, s[1] as f32)),
+        );
+        r.set_scalar_pooled(
+            "cv::normalize",
+            Arc::new(|a: &[&Mat], s: &[f64], p: &BufferPool| {
+                let mut out = p.acquire_cloned(a[0]);
+                imgproc::normalize_mut(&mut out, s[0] as f32, s[1] as f32)?;
+                Ok(out)
+            }),
+        );
+        r.register_scalar(
+            "cv::convertScaleAbs",
+            1,
+            2,
+            Arc::new(|a: &[&Mat], s: &[f64]| {
+                imgproc::convert_scale_abs(a[0], s[0] as f32, s[1] as f32)
+            }),
+        );
+        r.set_scalar_pooled(
+            "cv::convertScaleAbs",
+            Arc::new(|a: &[&Mat], s: &[f64], p: &BufferPool| {
+                let mut out = p.acquire_cloned(a[0]);
+                imgproc::convert_scale_abs_mut(&mut out, s[0] as f32, s[1] as f32)?;
+                Ok(out)
+            }),
+        );
+        r.register_scalar(
+            "blas::saxpy",
+            2,
+            1,
+            Arc::new(|a: &[&Mat], s: &[f64]| blas::saxpy(s[0] as f32, a[0], a[1])),
+        );
+
         // ---- fusion substrate -----------------------------------------
         // the one-walk Sobel dx+dy pair for fork-join sibling stages
         r.register_sibling_pair(
@@ -318,6 +446,15 @@ impl Registry {
             Arc::new(|src: &Mat, dx: &mut Mat, dy: &mut Mat| imgproc::sobel_xy_into(src, dx, dy)),
         )
         .expect("standard Sobel kernels are registered above");
+        // the one-walk erode+dilate pair (morphological-gradient forks)
+        r.register_sibling_pair(
+            "cv::erode",
+            "cv::dilate",
+            Arc::new(|src: &Mat, er: &mut Mat, di: &mut Mat| {
+                imgproc::erode_dilate_into(src, er, di)
+            }),
+        )
+        .expect("standard morphology kernels are registered above");
         // every standard kernel is chain-fusable while it still resolves
         // to the implementation recorded here (per-link provenance)
         for sym in [
@@ -331,6 +468,7 @@ impl Registry {
             "cv::Laplacian",
             "cv::Scharr",
             "cv::medianBlur",
+            "cv::pyrDown",
             "cv::cornerHarris",
             "cv::harrisResponse",
             "cv::normalize",
@@ -543,6 +681,46 @@ impl Registry {
         }
     }
 
+    /// Register (or replace) a scalar-parameterized form of a symbol.
+    pub fn register_scalar(&mut self, symbol: &str, arity: usize, nscalars: usize, f: SwFnScalar) {
+        self.scalar_map.insert(
+            symbol.to_string(),
+            ScalarEntry { symbol: symbol.to_string(), arity, nscalars, f, pooled: None },
+        );
+    }
+
+    /// Attach a pooled form to an already-registered scalar symbol.
+    pub fn set_scalar_pooled(&mut self, symbol: &str, f: SwFnScalarPooled) {
+        if let Some(e) = self.scalar_map.get_mut(symbol) {
+            e.pooled = Some(f);
+        }
+    }
+
+    /// Resolve the scalar-parameterized form of a symbol.
+    pub fn resolve_scalar(&self, symbol: &str) -> Result<&ScalarEntry> {
+        self.scalar_map.get(symbol).ok_or_else(|| {
+            CourierError::UnknownSymbol(format!("{symbol} (scalar-parameterized form)"))
+        })
+    }
+
+    /// True iff the symbol has a scalar-parameterized form.
+    pub fn contains_scalar(&self, symbol: &str) -> bool {
+        self.scalar_map.contains_key(symbol)
+    }
+
+    /// Invoke a scalar-parameterized symbol (resolve + arity checks + call).
+    pub fn call_scalar(&self, symbol: &str, args: &[&Mat], scalars: &[f64]) -> Result<Mat> {
+        let entry = self.resolve_scalar(symbol)?;
+        if args.len() != entry.arity || scalars.len() != entry.nscalars {
+            return Err(CourierError::ShapeMismatch {
+                context: format!("{symbol} (scalar form)"),
+                expected: format!("{} args + {} scalars", entry.arity, entry.nscalars),
+                got: format!("{} args + {} scalars", args.len(), scalars.len()),
+            });
+        }
+        (entry.f)(args, scalars)
+    }
+
     /// Resolve a symbol (the `dlsym` analogue).
     pub fn resolve(&self, symbol: &str) -> Result<&FuncEntry> {
         self.map
@@ -668,6 +846,8 @@ mod tests {
         let mut r = Registry::standard();
         assert!(r.sibling_pair("cv::Sobel", "cv::SobelY").is_some());
         assert!(r.sibling_pair("cv::SobelY", "cv::Sobel").is_none(), "order matters");
+        let morph = r.sibling_pair("cv::erode", "cv::dilate").expect("standard morph pair");
+        assert_eq!(morph.label, FUSED_MORPH_PAIR);
         assert!(r.sobel_pair_intact());
         // an unregistered constituent is a typed error, not a silent no-op
         let err = r.register_sibling_pair(
@@ -733,6 +913,42 @@ mod tests {
     }
 
     #[test]
+    fn scalar_forms_match_plain_at_defaults() {
+        // scalar(default constants) must be bit-identical to the plain
+        // entry with those constants baked in
+        let r = Registry::standard();
+        let pool = BufferPool::new();
+        let rgb = synth::noise_rgb(9, 11, 3);
+        let gray = r.call("cv::cvtColor", &[&rgb]).unwrap();
+        for (sym, scalars) in [
+            ("cv::cornerHarris", vec![0.04]),
+            ("cv::threshold", vec![127.0, 255.0]),
+            ("cv::normalize", vec![0.0, 255.0]),
+            ("cv::convertScaleAbs", vec![1.0, 0.0]),
+        ] {
+            let plain = r.call(sym, &[&gray]).unwrap();
+            let scalar = r.call_scalar(sym, &[&gray], &scalars).unwrap();
+            assert_eq!(plain, scalar, "{sym} scalar form diverges at defaults");
+            let entry = r.resolve_scalar(sym).unwrap();
+            if let Some(pf) = &entry.pooled {
+                let pooled = pf(&[&gray], &scalars, &pool).unwrap();
+                assert_eq!(plain, pooled, "{sym} pooled scalar form diverges");
+                pool.release(pooled);
+            }
+        }
+        // non-default constants actually change the result
+        let hot = r.call_scalar("cv::threshold", &[&gray], &[10.0, 1.0]).unwrap();
+        let cold = r.call("cv::threshold", &[&gray]).unwrap();
+        assert_ne!(hot, cold);
+        // arity mismatches are typed
+        assert!(r.call_scalar("cv::threshold", &[&gray], &[1.0]).is_err());
+        assert!(matches!(
+            r.call_scalar("cv::erode", &[&gray], &[1.0]),
+            Err(CourierError::UnknownSymbol(_))
+        ));
+    }
+
+    #[test]
     fn pooled_and_inplace_forms_match_plain_calls() {
         let r = Registry::standard();
         let pool = BufferPool::new();
@@ -748,6 +964,7 @@ mod tests {
             "cv::Laplacian",
             "cv::Scharr",
             "cv::medianBlur",
+            "cv::pyrDown",
             "cv::cornerHarris",
             "cv::normalize",
             "cv::convertScaleAbs",

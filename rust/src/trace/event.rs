@@ -45,7 +45,7 @@ impl DataDesc {
 }
 
 /// One observed library call.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CallEvent {
     /// Global sequence number (chronological).
     pub seq: usize,
@@ -53,6 +53,9 @@ pub struct CallEvent {
     pub step: usize,
     /// Library symbol.
     pub symbol: String,
+    /// Per-frame scalar constants observed at the call site (empty for
+    /// plain buffer-only calls).
+    pub scalars: Vec<f64>,
     /// Start timestamp, ns since tracer epoch.
     pub start_ns: u64,
     /// End timestamp, ns since tracer epoch.
@@ -63,6 +66,9 @@ pub struct CallEvent {
     pub output: DataDesc,
 }
 
+// Scalars are parsed literals, never NaN in practice.
+impl Eq for CallEvent {}
+
 impl CallEvent {
     /// Wall-clock duration of the call in ns.
     pub fn duration_ns(&self) -> u64 {
@@ -70,22 +76,37 @@ impl CallEvent {
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("seq", Json::Num(self.seq as f64)),
             ("step", Json::Num(self.step as f64)),
             ("symbol", Json::Str(self.symbol.clone())),
+        ];
+        // omit-when-empty keeps pre-Courier-Script traces byte-identical
+        if !self.scalars.is_empty() {
+            fields.push((
+                "scalars",
+                Json::Arr(self.scalars.iter().map(|s| Json::Num(*s)).collect()),
+            ));
+        }
+        fields.extend([
             ("start_ns", Json::Num(self.start_ns as f64)),
             ("end_ns", Json::Num(self.end_ns as f64)),
             ("inputs", Json::Arr(self.inputs.iter().map(DataDesc::to_json).collect())),
             ("output", self.output.to_json()),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     fn from_json(v: &Json) -> Result<Self> {
+        let scalars = match v.get("scalars") {
+            Some(arr) => arr.as_arr()?.iter().map(Json::as_f64).collect::<Result<_>>()?,
+            None => Vec::new(),
+        };
         Ok(Self {
             seq: v.req("seq")?.as_usize()?,
             step: v.req("step")?.as_usize()?,
             symbol: v.req("symbol")?.as_str()?.to_string(),
+            scalars,
             start_ns: v.req("start_ns")?.as_u64()?,
             end_ns: v.req("end_ns")?.as_u64()?,
             inputs: v
@@ -161,6 +182,7 @@ mod tests {
             seq,
             step,
             symbol: sym.into(),
+            scalars: Vec::new(),
             start_ns: seq as u64 * 10,
             end_ns: seq as u64 * 10 + 5,
             inputs: vec![DataDesc { shape: vec![2, 2], bytes: 16, hash: 0xdead_beef_dead_beef }],

@@ -18,6 +18,9 @@ pub struct FuncNode {
     pub step: usize,
     /// Library symbol.
     pub symbol: String,
+    /// Per-frame scalar constants observed at the call site (empty for
+    /// plain buffer-only calls; stable across frames).
+    pub scalars: Vec<f64>,
     /// Observations (== frames traced).
     pub calls: usize,
     /// Mean duration over observations, ns.
@@ -65,6 +68,7 @@ impl CallGraph {
                 id: 0,
                 step: e.step,
                 symbol: e.symbol.clone(),
+                scalars: e.scalars.clone(),
                 calls: 0,
                 mean_ns: 0,
                 total_ns: 0,
@@ -306,6 +310,7 @@ mod tests {
             seq,
             step,
             symbol: sym.into(),
+            scalars: Vec::new(),
             start_ns: seq as u64 * 100,
             end_ns: seq as u64 * 100 + 10,
             inputs: in_hashes.iter().map(|&h| d(h)).collect(),

@@ -70,6 +70,7 @@ impl Dispatch for Tracer {
             seq: 0, // fixed up under the lock below
             step: site.step,
             symbol: site.symbol.to_string(),
+            scalars: site.scalars.to_vec(),
             start_ns: start,
             end_ns: end,
             inputs,

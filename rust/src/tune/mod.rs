@@ -118,7 +118,8 @@ impl<'a> Tuner<'a> {
         //    baseline the tuner must beat is the *calibrated* build) -----
         let inputs = synth_frames(program, self.cfg.trace_frames.max(1));
         let trace = trace_program(program, &inputs)?;
-        let ir = Ir::from_graph(&CallGraph::from_trace(&trace))?;
+        let mut ir = Ir::from_graph(&CallGraph::from_trace(&trace))?;
+        ir.set_outputs_from(program)?;
         let pre_cal = (!cost_db.is_empty()).then(|| cost_db.calibration());
         let built_seed = Arc::new(crate::pipeline::build_calibrated(
             &ir,

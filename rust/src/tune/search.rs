@@ -155,11 +155,14 @@ impl SearchOutcome {
 /// Assemble a plan from contiguous task groups (head/tail serial, middle
 /// parallel — the paper's filter modes).  `edges` is the seed plan's
 /// dataflow edge set: it is cut-independent (step granularity) and rides
-/// along unchanged so every candidate stays DAG-wired.
+/// along unchanged so every candidate stays DAG-wired.  `outputs` is the
+/// seed's declared terminal set and rides along the same way — a tuner
+/// move can regroup or demote tasks but never orphan a declared output.
 fn plan_from_groups(
     program: &str,
     tasks: &[TaskSpec],
     edges: &[crate::pipeline::PlanEdge],
+    outputs: &[usize],
     groups: &[std::ops::Range<usize>],
     threads: usize,
     tokens: usize,
@@ -172,6 +175,7 @@ fn plan_from_groups(
         tokens,
         bands: bands.max(1),
         edges: edges.to_vec(),
+        outputs: outputs.to_vec(),
         stages: groups
             .iter()
             .enumerate()
@@ -261,6 +265,7 @@ pub fn demote_modules(tasks: &[TaskSpec], modules: &[String]) -> Vec<TaskSpec> {
                     kind: TaskKind::Sw,
                     est_ns: hc.sw_alt_ns,
                     hw_cost: None,
+                    scalars: Vec::new(),
                     ..t.clone()
                 },
                 _ => t.clone(),
@@ -297,6 +302,7 @@ pub fn search(
     // topological task order makes legality automatic, but the guard
     // turns "automatic" into "verified").
     let edges = seed_plan.edges.clone();
+    let outputs = seed_plan.outputs.clone();
     let task_of_step = |step: usize| tasks.iter().position(|t| t.covers.contains(&step));
     let task_edges: Vec<(usize, usize)> = seed_plan
         .effective_edges()
@@ -383,6 +389,7 @@ pub fn search(
                 &seed_plan.program,
                 tasks,
                 &edges,
+                &outputs,
                 &groups,
                 threads,
                 tokens,
@@ -428,6 +435,7 @@ pub fn search(
                     &incumbent.plan.program,
                     tasks,
                     &edges,
+                    &outputs,
                     &shifted,
                     threads,
                     incumbent.plan.tokens,
@@ -480,6 +488,7 @@ pub fn search(
                 &incumbent.plan.program,
                 tasks,
                 &edges,
+                &outputs,
                 &fused,
                 threads,
                 incumbent.plan.tokens,
@@ -560,12 +569,14 @@ pub fn search(
                 kind: TaskKind::Sw,
                 est_ns: hc.sw_alt_ns,
                 hw_cost: None,
+                scalars: Vec::new(),
                 ..flipped[ti].clone()
             };
             let plan = plan_from_groups(
                 &incumbent.plan.program,
                 &flipped,
                 &edges,
+                &outputs,
                 &groups,
                 threads,
                 incumbent.plan.tokens,
@@ -633,6 +644,7 @@ mod tests {
                 kind: TaskKind::Sw,
                 est_ns: ms * 1_000_000,
                 hw_cost: None,
+                scalars: Vec::new(),
             })
             .collect()
     }
@@ -663,7 +675,7 @@ mod tests {
     fn seed_of(tasks: &[TaskSpec], threads: usize, tokens: usize, policy: PartitionPolicy) -> StagePlan {
         let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
         let groups = partition(&times, threads, policy);
-        plan_from_groups("t", tasks, &[], &groups, threads, tokens, 1)
+        plan_from_groups("t", tasks, &[], &[], &groups, threads, tokens, 1)
     }
 
     fn cfg_with(budget: usize) -> Config {
@@ -743,7 +755,7 @@ mod tests {
         ];
         let times: Vec<u64> = tasks.iter().map(|t| t.est_ns).collect();
         let groups = partition(&times, 2, PartitionPolicy::Paper);
-        let seed = plan_from_groups("dag", &tasks, &edges, &groups, 2, 4, 1);
+        let seed = plan_from_groups("dag", &tasks, &edges, &[], &groups, 2, 4, 1);
         seed.validate_dag().unwrap();
 
         let cfg = cfg_with(64);

@@ -96,6 +96,7 @@ fn random_unary_chains_fuse_bit_for_bit() {
                 tokens: 2,
                 bands: 1,
                 edges: built.plan.edges.clone(),
+                outputs: built.plan.outputs.clone(),
                 stages: vec![StageSpec { index: 0, serial: true, tasks: flat_tasks(&built) }],
             },
             db.dir(),
@@ -206,6 +207,7 @@ fn random_chains_inside_fork_join_branches_fuse_bit_for_bit() {
             tokens: 2,
             bands: 1,
             edges: built.plan.edges.clone(),
+            outputs: built.plan.outputs.clone(),
             stages: vec![
                 StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
                 StageSpec { index: 1, serial: false, tasks: tasks[1..len + 2].to_vec() },
@@ -307,6 +309,7 @@ fn fork_join_last_sibling_moves_instead_of_cloning() {
         tokens: 4,
         bands: 1,
         edges: built.plan.edges.clone(),
+        outputs: built.plan.outputs.clone(),
         stages: vec![
             StageSpec { index: 0, serial: true, tasks: tasks[0..1].to_vec() },
             StageSpec { index: 1, serial: false, tasks: tasks[1..3].to_vec() },
@@ -356,4 +359,104 @@ fn fork_join_last_sibling_moves_instead_of_cloning() {
         "move-aware fork-join must clone exactly once per fork per frame \
          (one shared dying buffer, two siblings): got {clones} over {FRAMES} frames"
     );
+}
+
+/// Random Courier-Script source: a `const` declaration, `let`/`call`
+/// synonyms, fan-out from arbitrary earlier buffers, scalar-bearing and
+/// shape-halving calls, and 1–3 `output` declarations (one per branch
+/// tail — a later branch may fork *from* an earlier tail, so a declared
+/// output can also be consumed downstream).  Each (parent, call) pair is
+/// sampled at most once: the tracer links calls by content hash, and two
+/// identical applications would alias.
+fn random_script(rng: &mut Rng, h: usize, w: usize) -> String {
+    let mut text = format!(
+        "program scriptProp\n\
+         input frame {h}x{w}x3\n\
+         const k = 0.05\n\
+         let gray = cv::cvtColor(frame)\n"
+    );
+    let mut names: Vec<String> = vec!["gray".into()];
+    let mut seen: Vec<String> = Vec::new();
+    let mut outputs: Vec<String> = Vec::new();
+    let branches = 1 + rng.below(3);
+    for b in 0..branches {
+        let mut cur = names[rng.below(names.len())].clone();
+        for i in 0..1 + rng.below(3) {
+            let name = format!("b{b}_{i}");
+            let call = loop {
+                let call = match rng.below(UNARY.len() + 3) {
+                    c if c < UNARY.len() => format!("{}({cur})", UNARY[c]),
+                    c if c == UNARY.len() => format!("cv::pyrDown({cur})"),
+                    c if c == UNARY.len() + 1 => format!("cv::threshold({cur}, 64, 255)"),
+                    _ => format!("cv::cornerHarris({cur}, k)"),
+                };
+                if !seen.contains(&call) {
+                    break call;
+                }
+            };
+            seen.push(call.clone());
+            let kw = if rng.below(2) == 0 { "let" } else { "call" };
+            text.push_str(&format!("{kw} {name} = {call}\n"));
+            names.push(name.clone());
+            cur = name;
+        }
+        outputs.push(cur);
+    }
+    for out in &outputs {
+        text.push_str(&format!("output {out}\n"));
+    }
+    text
+}
+
+#[test]
+fn random_courier_scripts_round_trip_bit_for_bit() {
+    // Property 4: the whole front end round-trips.  Random Courier-Script
+    // sources (fan-out, consts, multi-output) parse, trace, lower with
+    // declared outputs, build under random thread/token counts, and
+    // stream ordered bundles bit-identical to the interpreter.
+    let mut rng = Rng::new(0xC0DE5C21);
+    let tmp = empty_hwdb_dir("script-prop").unwrap();
+    let db = HwDatabase::load(tmp.path()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let registry = Registry::standard();
+    let dispatch = std::sync::Arc::new(RegistryDispatch::standard());
+
+    for case in 0..8u64 {
+        let (h, w) = (8 + rng.below(9), 8 + rng.below(9));
+        let text = random_script(&mut rng, h, w);
+        let prog = parse_program(&text).unwrap_or_else(|e| panic!("case {case}:\n{text}\n{e}"));
+        let n_out = prog.outputs.len();
+        assert!((1..=3).contains(&n_out), "case {case}: {n_out} outputs");
+
+        let trace = trace_program(&prog, &[vec![synth::noise_rgb(h, w, case)]]).unwrap();
+        let mut ir = Ir::from_graph(&CallGraph::from_trace(&trace)).unwrap();
+        ir.set_outputs_from(&prog).unwrap();
+
+        let cfg = Config {
+            artifacts_dir: tmp.path().to_path_buf(),
+            cpu_only: true,
+            threads: 1 + rng.below(3),
+            tokens: 1 + rng.below(3),
+            ..Default::default()
+        };
+        let built = build(&ir, &db, &rt, &registry, &cfg).unwrap();
+        built.plan.validate_dag().unwrap();
+        built
+            .check_output_matches(&prog)
+            .unwrap_or_else(|e| panic!("case {case}:\n{text}\n{e}"));
+        assert_eq!(built.terminal_steps.len(), n_out, "case {case}:\n{text}");
+
+        let interp = Interpreter::new(prog, dispatch.clone());
+        for fseed in 0..2 {
+            let frame = synth::noise_rgb(h, w, 500 + case * 10 + fseed);
+            let want = interp.run(&[frame.clone()]).unwrap();
+            let got = built.process_one_all(frame).unwrap();
+            assert_eq!(got, want, "case {case} seed {fseed}:\n{text}");
+        }
+        let frames: Vec<Mat> = (0..3).map(|s| synth::noise_rgb(h, w, 900 + s)).collect();
+        let (bundles, _) = built.run_all(frames.clone()).unwrap();
+        for (i, f) in frames.into_iter().enumerate() {
+            assert_eq!(bundles[i], interp.run(&[f]).unwrap(), "case {case} frame {i}:\n{text}");
+        }
+    }
 }

@@ -1,0 +1,111 @@
+//! Golden corpus gate: every `.courier` program under `examples/courier/`
+//! must parse and lower (or fail with its annotated typed error).
+//!
+//! Each corpus file's first line is an annotation comment:
+//!
+//! ```text
+//! # expect: ok           — parses, traces, lowers and plans hermetically
+//! # expect: parse-error  — parse_program returns CourierError::Parse
+//! ```
+//!
+//! This is the grammar's compatibility contract in file form: the flat
+//! subset (`corner_harris`, `edge`, `harris_dag`) must stay parseable
+//! forever, the Courier-Script fixtures pin `const`/`let`/multi-`output`
+//! lowering, and the error fixtures pin the typed diagnostics.
+
+use std::path::PathBuf;
+
+use courier::app::{parse_program, synth_frames};
+use courier::config::Config;
+use courier::hwdb::HwDatabase;
+use courier::ir::Ir;
+use courier::pipeline::plan_pipeline;
+use courier::swlib::Registry;
+use courier::trace::{trace_program, CallGraph};
+use courier::util::testing::empty_hwdb_dir;
+use courier::CourierError;
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("examples")
+        .join("courier")
+}
+
+/// (file name, source text, annotated expectation) for every corpus file.
+fn corpus() -> Vec<(String, String, String)> {
+    let mut files: Vec<(String, String, String)> = std::fs::read_dir(corpus_dir())
+        .expect("examples/courier/ exists")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "courier"))
+        .map(|p| {
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            let text = std::fs::read_to_string(&p).unwrap();
+            let expect = text
+                .lines()
+                .next()
+                .and_then(|l| l.strip_prefix("# expect:"))
+                .unwrap_or_else(|| panic!("{name}: first line must be '# expect: <verdict>'"))
+                .trim()
+                .to_string();
+            (name, text, expect)
+        })
+        .collect();
+    files.sort();
+    assert!(files.len() >= 9, "corpus lost files: {} found", files.len());
+    files
+}
+
+#[test]
+fn every_corpus_program_parses_and_lowers_or_fails_as_annotated() {
+    let tmp = empty_hwdb_dir("golden-corpus").unwrap();
+    let db = HwDatabase::load(tmp.path()).unwrap();
+    let registry = Registry::standard();
+    let cfg = Config { artifacts_dir: tmp.path().to_path_buf(), ..Default::default() };
+
+    for (name, text, expect) in corpus() {
+        match expect.as_str() {
+            "ok" => {
+                let prog = parse_program(&text)
+                    .unwrap_or_else(|e| panic!("{name}: annotated ok but failed to parse: {e}"));
+                let trace = trace_program(&prog, &synth_frames(&prog, 1))
+                    .unwrap_or_else(|e| panic!("{name}: trace failed: {e}"));
+                let mut ir = Ir::from_graph(&CallGraph::from_trace(&trace))
+                    .unwrap_or_else(|e| panic!("{name}: lowering failed: {e}"));
+                ir.set_outputs_from(&prog)
+                    .unwrap_or_else(|e| panic!("{name}: output binding failed: {e}"));
+                let plan = plan_pipeline(&ir, &db, &registry, &cfg, None)
+                    .unwrap_or_else(|e| panic!("{name}: planning failed: {e}"));
+                plan.validate_dag()
+                    .unwrap_or_else(|e| panic!("{name}: illegal plan: {e}"));
+                assert_eq!(
+                    plan.terminal_steps().len(),
+                    prog.outputs.len(),
+                    "{name}: plan egresses every declared output"
+                );
+            }
+            "parse-error" => match parse_program(&text) {
+                Err(CourierError::Parse { .. }) => {}
+                Err(other) => panic!("{name}: wrong error type: {other}"),
+                Ok(_) => panic!("{name}: annotated parse-error but parsed cleanly"),
+            },
+            other => panic!("{name}: unknown expectation {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn builtin_demos_are_mirrored_in_the_corpus() {
+    // the in-crate demo constructors and the on-disk corpus must not
+    // drift: the corpus copies parse to the same program structure
+    let pairs: [(&str, courier::app::Program); 3] = [
+        ("morphology.courier", courier::app::morphology_demo(24, 32)),
+        ("corner_harris.courier", courier::app::corner_harris_demo(48, 64)),
+        ("pyramid.courier", courier::app::gaussian_pyramid_demo(24, 32)),
+    ];
+    for (file, want) in pairs {
+        let text = std::fs::read_to_string(corpus_dir().join(file)).unwrap();
+        let got = parse_program(&text).unwrap();
+        assert_eq!(got, want, "{file} drifted from its builtin constructor");
+    }
+}

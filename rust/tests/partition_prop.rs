@@ -15,12 +15,14 @@
 
 use std::path::PathBuf;
 
+use courier::app::parse_program;
 use courier::config::{Config, PartitionPolicy};
 use courier::hwdb::HwDatabase;
+use courier::image::synth;
 use courier::ir::{Ir, IrFunc, Placement};
 use courier::pipeline::{partition, plan_pipeline, respects_dag, TaskKind};
 use courier::swlib::Registry;
-use courier::trace::DataNode;
+use courier::trace::{trace_program, CallGraph, DataNode};
 use courier::util::rng::Rng;
 use courier::util::testing::{forall, TempDir};
 
@@ -461,6 +463,89 @@ fn calibration_moves_boundaries_but_preserves_invariants() {
             let covered: usize =
                 plan.stages.iter().map(|s| s.tasks.len()).sum();
             covered == ir.funcs.len() && plan.stages.iter().all(|s| !s.tasks.is_empty())
+        },
+    );
+}
+
+/// Random multi-branch Courier-Script source over the grayscale-safe
+/// symbol pool (plus the shape-halving `cv::pyrDown` and a
+/// scalar-bearing `cv::threshold`).  Branch tails become 1–3 `output`
+/// declarations; each (parent, call) pair is sampled at most once so no
+/// two steps alias under the content-hash tracer.
+fn random_script(rng: &mut Rng, h: usize, w: usize) -> String {
+    const GRAY_POOL: &[&str] = &[
+        "cv::Sobel",
+        "cv::GaussianBlur",
+        "cv::dilate",
+        "cv::erode",
+        "cv::normalize",
+        "cv::medianBlur",
+    ];
+    let mut text = format!(
+        "program scriptPlanProp\n\
+         input frame {h}x{w}x3\n\
+         let gray = cv::cvtColor(frame)\n"
+    );
+    let mut names: Vec<String> = vec!["gray".into()];
+    let mut seen: Vec<String> = Vec::new();
+    let mut outputs: Vec<String> = Vec::new();
+    for b in 0..1 + rng.below(3) {
+        let mut cur = names[rng.below(names.len())].clone();
+        for i in 0..1 + rng.below(3) {
+            let name = format!("b{b}_{i}");
+            let call = loop {
+                let call = match rng.below(GRAY_POOL.len() + 2) {
+                    c if c < GRAY_POOL.len() => format!("{}({cur})", GRAY_POOL[c]),
+                    c if c == GRAY_POOL.len() => format!("cv::pyrDown({cur})"),
+                    _ => format!("cv::threshold({cur}, 16, 240)"),
+                };
+                if !seen.contains(&call) {
+                    break call;
+                }
+            };
+            seen.push(call.clone());
+            let kw = if rng.below(2) == 0 { "let" } else { "call" };
+            text.push_str(&format!("{kw} {name} = {call}\n"));
+            names.push(name.clone());
+            cur = name;
+        }
+        outputs.push(cur);
+    }
+    for out in &outputs {
+        text.push_str(&format!("output {out}\n"));
+    }
+    text
+}
+
+#[test]
+fn random_courier_scripts_plan_legally_with_declared_outputs() {
+    // Property 8: script-sourced IRs (fan-out, scalars, multi-output)
+    // plan legally under every policy — contiguous cover, DAG-legal
+    // cuts — and the plan egresses exactly the declared `output` steps
+    // in declaration order.
+    let (_tmp, dir) = manifest_dir();
+    let db = HwDatabase::load(&dir).unwrap();
+    let registry = Registry::standard();
+    forall(
+        60,
+        |rng| {
+            let shapes = [(16usize, 16usize), (24, 16), (32, 32)];
+            let (h, w) = shapes[rng.below(shapes.len())];
+            (random_script(rng, h, w), random_cfg(rng, dir.clone()))
+        },
+        |(text, cfg)| {
+            let prog = parse_program(text).expect("generated script parses");
+            let (_, shape) = &prog.inputs[0];
+            let frame = synth::noise_rgb(shape[0], shape[1], 7);
+            let trace = trace_program(&prog, &[vec![frame]]).expect("trace");
+            let mut ir = Ir::from_graph(&CallGraph::from_trace(&trace)).expect("lower");
+            ir.set_outputs_from(&prog).expect("bind outputs");
+            let plan = plan_pipeline(&ir, &db, &registry, cfg, None).expect("plan");
+            plan.validate_dag().expect("DAG-legal plan");
+            let covered: usize = plan.stages.iter().map(|s| s.tasks.len()).sum();
+            covered == ir.funcs.len()
+                && plan.terminal_steps() == ir.terminal_steps()
+                && ir.terminal_steps().len() == prog.outputs.len()
         },
     );
 }

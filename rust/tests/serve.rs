@@ -431,3 +431,34 @@ fn dag_program_cold_build_serves_and_matches_the_binary() {
 
     server.shutdown();
 }
+
+#[test]
+fn multi_output_session_delivers_ordered_bundles() {
+    // a Courier-Script tenant with three `output` declarations: every
+    // submitted frame resolves to an ordered bundle (`wait_all`), the
+    // single-Mat surface streams the primary output, and both are
+    // bit-identical to the interpreter
+    use courier::app::gaussian_pyramid_demo;
+
+    let tmp = empty_hwdb_dir("serve-multi-out").unwrap();
+    let server = Server::new(serve_config(empty_db(&tmp))).unwrap();
+    let session = server.open(SessionSpec::new(gaussian_pyramid_demo(24, 32))).unwrap();
+    session.pipeline().check_output_matches(&gaussian_pyramid_demo(24, 32)).unwrap();
+
+    let original =
+        Interpreter::new(gaussian_pyramid_demo(24, 32), Arc::new(RegistryDispatch::standard()));
+    let frames: Vec<Mat> = (0..4).map(|s| synth::noise_rgb(24, 32, s)).collect();
+    let bundles = session.run_window_all(frames.clone()).unwrap();
+    for (i, f) in frames.iter().enumerate() {
+        let want = original.run(std::slice::from_ref(f)).unwrap();
+        assert_eq!(want.len(), 3);
+        assert_eq!(bundles[i], want, "frame {i}: served bundle diverges");
+    }
+
+    // the legacy single-output surface is the bundle's primary entry
+    let t = session.submit(frames[0].clone()).unwrap();
+    let primary = session.wait(t).unwrap();
+    assert_eq!(primary, bundles[0][0]);
+
+    server.shutdown();
+}
